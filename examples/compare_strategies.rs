@@ -1,0 +1,120 @@
+//! Regenerate paper Figures 1, 2 and 3.
+//!
+//! ```text
+//! cargo run --release --example compare_strategies -- --figure fig1 --out results/fig1.csv
+//! cargo run --release --example compare_strategies -- --figure fig2 --out results/fig2.csv
+//! cargo run --release --example compare_strategies -- --figure fig3 --out results/fig3.csv
+//! ```
+//!
+//! * fig1 — training loss vs iterations, PerSyn vs GoSGD across `p`.
+//! * fig2 — training loss vs simulated wall clock, GoSGD vs EASGD (+PerSyn).
+//! * fig3 — validation accuracy vs iterations, PerSyn vs GoSGD.
+
+use gosgd::harness::{fig1, fig2, fig3};
+use gosgd::util::cli::Args;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let a = Args::new("compare_strategies", "regenerate paper figures 1-3")
+        .opt("figure", "fig1", "fig1 | fig2 | fig3")
+        .opt("artifacts", "artifacts", "artifact directory root")
+        .opt("model", "tiny", "model variant")
+        .opt("workers", "8", "number of workers M")
+        .opt("iterations", "150", "worker iterations (fig1/fig3)")
+        .opt("ps", "0.01,0.4", "exchange probabilities (fig1/fig3)")
+        .opt("p", "0.02", "exchange probability (fig2)")
+        .opt("horizon", "120", "simulated seconds (fig2)")
+        .opt("backend", "quadratic", "fig2 gradient backend: quadratic | pjrt")
+        .opt("seed", "0", "RNG seed")
+        .opt("out", "", "CSV output path")
+        .parse()?;
+
+    let out = match a.get("out")? {
+        "" => None,
+        p => Some(std::path::PathBuf::from(p)),
+    };
+    let ps: Vec<f64> = a
+        .get("ps")?
+        .split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<Result<Vec<_>, _>>()?;
+
+    match a.get("figure")? {
+        "fig1" => {
+            let cfg = fig1::Fig1Config {
+                artifacts_dir: a.get("artifacts")?.into(),
+                model: a.get("model")?.to_string(),
+                workers: a.get_usize("workers")?,
+                iterations: a.get_u64("iterations")?,
+                ps,
+                seed: a.get_u64("seed")?,
+                ema_beta: 0.9,
+            };
+            println!("figure 1: training loss vs iterations (model {})\n", cfg.model);
+            let series = fig1::run(&cfg, out.as_deref())?;
+            println!("{}", fig1::format_table(&series));
+            // paper claim: GoSGD uses half the messages of PerSyn at equal p
+            for pair in series.chunks(2) {
+                if let [g, p] = pair {
+                    println!(
+                        "messages at equal rate: {} = {}, {} = {} (persyn/gosgd = {:.2}x)",
+                        g.label,
+                        g.messages,
+                        p.label,
+                        p.messages,
+                        p.messages as f64 / g.messages.max(1) as f64
+                    );
+                }
+            }
+        }
+        "fig2" => {
+            let backend = match a.get("backend")? {
+                "pjrt" => fig2::Fig2Backend::Pjrt {
+                    artifacts_dir: a.get("artifacts")?.into(),
+                    model: a.get("model")?.to_string(),
+                },
+                _ => fig2::Fig2Backend::Quadratic { dim: 1024, sigma: 0.2 },
+            };
+            let cfg = fig2::Fig2Config {
+                backend,
+                workers: a.get_usize("workers")?,
+                p: a.get_f64("p")?,
+                horizon_secs: a.get_f64("horizon")?,
+                seed: a.get_u64("seed")?,
+                ..Default::default()
+            };
+            println!(
+                "figure 2: loss vs simulated wall clock (p={}, horizon {}s)\n",
+                cfg.p, cfg.horizon_secs
+            );
+            let series = fig2::run(&cfg, out.as_deref())?;
+            let threshold = series
+                .iter()
+                .flat_map(|s| s.points.last().map(|(_, l)| *l))
+                .fold(f64::INFINITY, f64::min)
+                * 1.5;
+            println!("{}", fig2::format_table(&series, threshold));
+        }
+        "fig3" => {
+            let cfg = fig3::Fig3Config {
+                artifacts_dir: a.get("artifacts")?.into(),
+                model: a.get("model")?.to_string(),
+                workers: a.get_usize("workers")?,
+                iterations: a.get_u64("iterations")?,
+                ps,
+                seed: a.get_u64("seed")?,
+                ..Default::default()
+            };
+            println!("figure 3: validation accuracy vs iterations (model {})\n", cfg.model);
+            let series = fig3::run(&cfg, out.as_deref())?;
+            println!("{}", fig3::format_table(&series));
+        }
+        other => {
+            eprintln!("unknown figure {other}; use fig1 | fig2 | fig3");
+            std::process::exit(2);
+        }
+    }
+    if let Some(p) = &out {
+        println!("series written to {}", p.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,171 @@
+"""AOT compiler: lower the Layer-2 programs to HLO text for the Rust runtime.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled XLA
+(xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``).  The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+For each model variant this writes into ``<out-dir>/<model>/``:
+
+* ``train_step.hlo.txt``  -- (params, images, labels) -> (loss, grads)
+* ``eval_step.hlo.txt``   -- (params, images, labels) -> (loss, correct)
+* ``sgd_update.hlo.txt``  -- (params, grads, lr[1], wd[1]) -> (params',)
+* ``mix.hlo.txt``         -- (x_r, x_s, w_r[1], w_s[1]) -> (mixed,)  [Pallas]
+* ``params_init.bin``     -- little-endian f32 He-normal init (seed 0)
+* ``manifest.json``       -- shapes, argument order, parameter table
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+
+Usage::
+
+    cd python && python -m compile.aot --model cnn --batch 16 --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text (via stablehlo -> XlaComputation)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def compile_model(model: str, batch: int, out_dir: str, seed: int = 0, eval_batch: int = None) -> dict:
+    """Lower every program for one model variant and write the artifact dir.
+
+    Returns the manifest dict (also written to ``manifest.json``).
+    """
+    eval_batch = eval_batch or batch
+    n = M.param_count(model)
+    d = os.path.join(out_dir, model)
+    os.makedirs(d, exist_ok=True)
+
+    img = _f32(batch, *M.IMAGE_SHAPE)
+    lbl = _i32(batch)
+    eimg = _f32(eval_batch, *M.IMAGE_SHAPE)
+    elbl = _i32(eval_batch)
+    p = _f32(n)
+    s1 = _f32(1)
+
+    programs = {
+        "train_step": _lower(M.train_step(model), p, img, lbl),
+        "eval_step": _lower(M.eval_step(model), p, eimg, elbl),
+        "sgd_update": _lower(M.sgd_update(), p, p, s1, s1),
+        "mix": _lower(M.gossip_mix(n), p, p, s1, s1),
+    }
+    for name, text in programs.items():
+        with open(os.path.join(d, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+
+    init = np.asarray(M.init_params(model, seed), dtype="<f4")
+    init.tofile(os.path.join(d, "params_init.bin"))
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "model": model,
+        "batch": batch,
+        "eval_batch": eval_batch,
+        "image_shape": list(M.IMAGE_SHAPE),
+        "num_classes": M.NUM_CLASSES,
+        "param_count": n,
+        "init_seed": seed,
+        "tensors": [t.to_json() for t in M.param_table(model)],
+        "programs": {
+            "train_step": {
+                "file": "train_step.hlo.txt",
+                "inputs": [
+                    {"name": "params", "shape": [n], "dtype": "f32"},
+                    {"name": "images", "shape": [batch, *M.IMAGE_SHAPE], "dtype": "f32"},
+                    {"name": "labels", "shape": [batch], "dtype": "i32"},
+                ],
+                "outputs": [
+                    {"name": "loss", "shape": [], "dtype": "f32"},
+                    {"name": "grads", "shape": [n], "dtype": "f32"},
+                ],
+            },
+            "eval_step": {
+                "file": "eval_step.hlo.txt",
+                "inputs": [
+                    {"name": "params", "shape": [n], "dtype": "f32"},
+                    {"name": "images", "shape": [eval_batch, *M.IMAGE_SHAPE], "dtype": "f32"},
+                    {"name": "labels", "shape": [eval_batch], "dtype": "i32"},
+                ],
+                "outputs": [
+                    {"name": "loss", "shape": [], "dtype": "f32"},
+                    {"name": "correct", "shape": [], "dtype": "f32"},
+                ],
+            },
+            "sgd_update": {
+                "file": "sgd_update.hlo.txt",
+                "inputs": [
+                    {"name": "params", "shape": [n], "dtype": "f32"},
+                    {"name": "grads", "shape": [n], "dtype": "f32"},
+                    {"name": "lr", "shape": [1], "dtype": "f32"},
+                    {"name": "wd", "shape": [1], "dtype": "f32"},
+                ],
+                "outputs": [{"name": "params", "shape": [n], "dtype": "f32"}],
+            },
+            "mix": {
+                "file": "mix.hlo.txt",
+                "inputs": [
+                    {"name": "x_r", "shape": [n], "dtype": "f32"},
+                    {"name": "x_s", "shape": [n], "dtype": "f32"},
+                    {"name": "w_r", "shape": [1], "dtype": "f32"},
+                    {"name": "w_s", "shape": [1], "dtype": "f32"},
+                ],
+                "outputs": [{"name": "mixed", "shape": [n], "dtype": "f32"}],
+            },
+        },
+    }
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="all", choices=["tiny", "cnn", "mlp_wide", "all"])
+    ap.add_argument("--batch", type=int, default=16, help="per-worker train batch size")
+    ap.add_argument("--eval-batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+
+    models = ["tiny", "cnn", "mlp_wide"] if args.model == "all" else [args.model]
+    for m in models:
+        man = compile_model(m, args.batch, args.out_dir, args.seed, args.eval_batch)
+        sizes = {k: os.path.getsize(os.path.join(args.out_dir, m, v["file"]))
+                 for k, v in man["programs"].items()}
+        print(f"[aot] {m}: {man['param_count']} params, batch {args.batch} -> "
+              + ", ".join(f"{k}={v//1024}KiB" for k, v in sizes.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for the GoSGD stack.
+
+Two kernels cover the paper's compute hot spots:
+
+* :mod:`.mix` -- the sum-weight gossip blend (section 4, Algorithm 4 of the
+  paper), a pure-bandwidth op over the flat parameter vector.
+* :mod:`.matmul` -- fused ``act(x @ w + b)`` used by the dense layers of the
+  Layer-2 CNN.
+
+Both are lowered with ``interpret=True`` so the resulting HLO runs on the
+CPU PJRT client (real-TPU lowering emits Mosaic custom-calls the CPU plugin
+cannot execute).  :mod:`.ref` holds the pure-jnp oracles used by pytest.
+"""
+
+from . import matmul, mix, ref  # noqa: F401
+
+__all__ = ["matmul", "mix", "ref"]

@@ -1,0 +1,166 @@
+"""Pallas fused dense-layer kernel: ``act(x @ w + b)``.
+
+Used by every fully-connected layer of the Layer-2 CNN (the paper's
+experimental network ends in two dense layers, which dominate its parameter
+count and its per-step FLOPs after the convolutions).
+
+TPU mapping: the output is tiled ``(block_m, block_n)`` on a 2-D grid; each
+grid step walks the shared dimension in ``block_k`` slabs, accumulating in
+an f32 VMEM scratch tile that feeds the MXU-shaped ``jnp.dot``.  Block
+sizes default to 128 — the MXU systolic array edge — and the kernel insists
+on divisibility rather than masking (the Layer-2 model pads its dense
+dimensions to legal sizes, which is cheaper than per-tile predication).
+
+Lowered with ``interpret=True`` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU systolic array edge: the natural tile for f32/bf16 matmul.
+MXU = 128
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int, activation: str):
+    """One ``(block_m, block_n)`` output tile, accumulated over k-slabs.
+
+    Grid is ``(m_blocks, n_blocks, k_blocks)`` with k innermost; the f32
+    scratch accumulator persists across the k iterations of one (i, j)
+    tile (standard Pallas revisiting pattern).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        y = acc_ref[...] + b_ref[...]
+        if activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k", "interpret"),
+)
+def matmul(
+    x,
+    w,
+    b,
+    *,
+    activation: str = "none",
+    block_m: int = MXU,
+    block_n: int = MXU,
+    block_k: int = MXU,
+    interpret: bool = True,
+):
+    """Fused ``act(x @ w + b)``.
+
+    Args:
+        x: ``(m, k)`` f32, ``m % block_m == 0``, ``k % block_k == 0``.
+        w: ``(k, n)`` f32, ``n % block_n == 0``.
+        b: ``(n,)`` f32 bias.
+        activation: ``"none"`` or ``"relu"`` (fused in the epilogue).
+        block_m / block_n / block_k: tile sizes (MXU-edge by default).
+        interpret: run the Pallas interpreter (required on CPU).
+
+    Returns:
+        ``(m, n)`` f32.
+    """
+    if activation not in ("none", "relu"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"dims ({m},{k},{n}) not divisible by blocks ({block_m},{block_k},{block_n})"
+        )
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+
+    kernel = functools.partial(_matmul_kernel, n_k=n_k, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b.reshape(1, n))
+
+
+# VMEM working-set budget for the auto block policy (bytes); see mix.py.
+VMEM_BUDGET = 14 * 1024 * 1024
+
+
+def _auto_blocks(m: int, k: int, n: int, budget: int = VMEM_BUDGET):
+    """Largest legal blocks whose working set fits the VMEM budget.
+
+    §Perf (EXPERIMENTS.md): each grid step pays a large dispatch cost under
+    interpret-mode lowering (a single-step 16x4096x256 dense runs ~100x
+    faster than 128³ tiling), and on hardware fewer, larger tiles amortize
+    the HBM→VMEM pipeline — so prefer one grid step when the whole layer
+    fits, else shrink `block_k` (the accumulation axis) first, then
+    `block_n`, keeping every block a divisor of its dimension.
+    """
+
+    def divisors_desc(dim, cap):
+        return [d for d in range(min(dim, cap), 0, -1) if dim % d == 0]
+
+    def working_set(bm, bk, bn):
+        return 4 * (bm * bk + bk * bn + bn + 2 * bm * bn)
+
+    bm = m  # batch axis is small in training; keep whole
+    for bn in divisors_desc(n, n):
+        for bk in divisors_desc(k, k):
+            if working_set(bm, bk, bn) <= budget:
+                return bm, bk, bn
+    # Pathological fallback (layer far beyond budget): legal MXU tiles.
+    def legal(dim):
+        return MXU if dim % MXU == 0 else dim
+
+    return bm, legal(k), legal(n)
+
+
+def dense(x, w, b, *, activation="none", interpret=True):
+    """Dense layer entry point used by the Layer-2 model.
+
+    Uses the VMEM-budget auto block policy (legal divisors of each dim;
+    whole-layer single grid step whenever it fits).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    block_m, block_k, block_n = _auto_blocks(m, k, n)
+    return matmul(
+        x, w, b, activation=activation, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def flops(m: int, k: int, n: int) -> int:
+    """FLOPs of one fused dense call (madd = 2 flops)."""
+    return 2 * m * k * n + 2 * m * n
+
+
+def vmem_bytes(block_m: int = MXU, block_n: int = MXU, block_k: int = MXU) -> int:
+    """Per-grid-step VMEM working set (x, w slabs + bias + acc + out)."""
+    return 4 * (block_m * block_k + block_k * block_n + block_n + 2 * block_m * block_n)

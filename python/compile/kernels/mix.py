@@ -1,0 +1,137 @@
+"""Pallas kernel for the sum-weight gossip blend (paper Alg. 4, line 9).
+
+This is the signature operation of GoSGD: when worker ``r`` pops a message
+``(x_s, w_s)`` from its queue it replaces its local parameter vector with
+the convex combination
+
+    x_r <- w_r/(w_r+w_s) * x_r + w_s/(w_r+w_s) * x_s
+
+over the *entire* flat parameter vector (1.3M floats for the paper's CNN,
+10s-100s of MB for modern models).  The op is pure bandwidth: 3 flops per
+element against 12 bytes moved, so the roofline is HBM bandwidth, not the
+MXU.
+
+TPU mapping (see DESIGN.md section "Hardware adaptation"): the flat vector
+is viewed as ``(n_blocks, BLOCK_ROWS, LANES)`` with ``LANES = 128`` (the
+VPU lane width) and ``BLOCK_ROWS`` a multiple of 8 (the f32 sublane tile).
+Each grid step streams one block HBM->VMEM, blends on the VPU, and streams
+it back; with ``BLOCK_ROWS = 512`` a block is 256 KiB/input, comfortably
+double-bufferable in ~16 MiB of VMEM.  The scalar weights live in a
+``(1, 1)`` block re-read by every grid step (they stay VMEM-resident).
+
+Lowered with ``interpret=True`` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU lane width; the last dim of every block must be a multiple of this on
+# real TPU hardware.
+LANES = 128
+# f32 sublane tile height.
+SUBLANES = 8
+# Default rows per block: 512*128*4B = 256 KiB per operand block.
+DEFAULT_BLOCK_ROWS = 512
+# VMEM working-set budget for the auto block policy (bytes).  A TPU core
+# has ~16 MiB of VMEM; we leave headroom for double buffering.
+VMEM_BUDGET = 14 * 1024 * 1024
+
+
+def auto_block_rows(n: int, budget: int = VMEM_BUDGET) -> int:
+    """Largest block that keeps the 3-operand working set under `budget`.
+
+    §Perf (EXPERIMENTS.md): grid-step dispatch dominates under
+    interpret-mode lowering (a single-block 1.1M-element mix runs 55x
+    faster than 512-row tiling), and on real hardware fewer, larger blocks
+    amortize the HBM->VMEM pipeline equally well — so the policy is
+    "one grid step if it fits VMEM, else the largest tile that does".
+    """
+    rows_needed = (n + LANES - 1) // LANES
+    # 3 operand blocks (x_r, x_s, out) of block_rows*LANES f32 each.
+    max_rows = budget // (3 * LANES * 4)
+    rows = min(rows_needed, max_rows)
+    # Round to a sublane multiple (TPU f32 tile height).
+    return max(SUBLANES, (rows // SUBLANES) * SUBLANES)
+
+
+def _mix_kernel(w_ref, x_r_ref, x_s_ref, o_ref):
+    """Blend one ``(block_rows, LANES)`` tile.
+
+    ``w_ref`` is a ``(1, 2)`` SMEM-style block holding ``[w_r, w_s]``; the
+    ratio is computed once per grid step (scalar) and broadcast by the VPU.
+    """
+    w_r = w_ref[0, 0]
+    w_s = w_ref[0, 1]
+    t = w_s / (w_r + w_s)
+    x_r = x_r_ref[...]
+    x_s = x_s_ref[...]
+    # One fused multiply-add per element: x_r + t*(x_s - x_r) is the
+    # 2-flop/elt form of the convex combination (vs 3 flops naive).
+    o_ref[...] = x_r + t * (x_s - x_r)
+
+
+def padded_len(n: int, block_rows: int = DEFAULT_BLOCK_ROWS) -> int:
+    """Length ``n`` rounded up to a whole number of blocks."""
+    tile = block_rows * LANES
+    return ((n + tile - 1) // tile) * tile
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def mix(x_r, x_s, w_r, w_s, *, block_rows: int = None, interpret: bool = True):
+    """Sum-weight blend of two flat parameter vectors.
+
+    Args:
+        x_r: receiver parameters, shape ``(n,)`` f32 (any ``n >= 1``).
+        x_s: sender parameters, shape ``(n,)`` f32.
+        w_r: receiver gossip weight, shape ``(1,)`` or scalar f32.
+        w_s: sender gossip weight, shape ``(1,)`` or scalar f32.
+        block_rows: rows per ``(block_rows, 128)`` VMEM tile.
+        interpret: run the Pallas interpreter (required on CPU).
+
+    Returns:
+        Blended vector, shape ``(n,)`` f32.
+    """
+    if x_r.shape != x_s.shape or x_r.ndim != 1:
+        raise ValueError(f"mix expects equal 1-D shapes, got {x_r.shape} vs {x_s.shape}")
+    n = x_r.shape[0]
+    if block_rows is None:
+        block_rows = auto_block_rows(n)
+    tile = block_rows * LANES
+    padded = padded_len(n, block_rows)
+    if padded != n:
+        pad = padded - n
+        x_r = jnp.pad(x_r, (0, pad))
+        x_s = jnp.pad(x_s, (0, pad))
+    n_blocks = padded // tile
+    x_r2 = x_r.reshape(n_blocks * block_rows, LANES)
+    x_s2 = x_s.reshape(n_blocks * block_rows, LANES)
+    w = jnp.stack(
+        [jnp.asarray(w_r, jnp.float32).reshape(()), jnp.asarray(w_s, jnp.float32).reshape(())]
+    ).reshape(1, 2)
+
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),  # weights: same block every step
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block_rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(w, x_r2, x_s2)
+    return out.reshape(padded)[:n]
+
+
+def vmem_bytes(block_rows: int = DEFAULT_BLOCK_ROWS) -> int:
+    """VMEM footprint of one grid step (2 inputs + 1 output + weights).
+
+    Used by DESIGN.md / EXPERIMENTS.md to document the TPU residency
+    estimate; with double buffering the working set is twice this.
+    """
+    block = block_rows * LANES * 4
+    return 3 * block + 2 * 4

@@ -1,0 +1,283 @@
+"""Layer-2 JAX model: the paper's experimental CNN, built on the L1 kernels.
+
+The paper trains the CIFAR-10 CNN of [9]/[26] (conv-pool blocks followed by
+fully-connected layers) with plain SGD (lr 0.1, weight decay 1e-4).  We
+reproduce that topology class:
+
+* ``tiny``     -- MLP 3072 -> 64 -> 10        (~197k params; fast tests)
+* ``cnn``      -- conv5x5x32/pool2, conv5x5x64/pool2, fc 4096 -> 256 -> 10
+                  (~1.1M params; the paper-scale network)
+* ``mlp_wide`` -- MLP 3072 -> 1024 -> 1024 -> 10 (~4.2M params; perf study)
+
+All dense layers run through the Pallas fused matmul (:mod:`.kernels.matmul`)
+in BOTH the forward and the backward pass: ``pallas_call`` has no automatic
+transpose rule, so :func:`dense` installs a ``custom_vjp`` whose backward
+pass is itself three Pallas matmuls (dx = g w^T, dw = x^T g, db = sum g).
+Convolutions use ``lax.conv_general_dilated`` (XLA-native, NHWC).
+
+Parameters travel as ONE flat f32 vector.  This is what makes the paper's
+gossip exchange trivial on the Rust side: a message is (flat vector, weight)
+and the mix artifact blends whole vectors.  :func:`param_table` records the
+(name, shape, offset) layout for introspection and for the Rust
+re-initializer.
+"""
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import matmul as pmm
+
+IMAGE_SHAPE = (32, 32, 3)  # NHWC CIFAR geometry
+NUM_CLASSES = 10
+
+
+# --------------------------------------------------------------------------
+# Pallas dense layer with a Pallas backward pass
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation="none"):
+    """Fused ``act(x @ w + b)`` with a custom (Pallas) VJP."""
+    return pmm.dense(x, w, b, activation=activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    y = pmm.dense(x, w, b, activation=activation)
+    # For relu the output itself encodes the mask (y > 0); keeping y instead
+    # of the pre-activation halves the residual footprint.
+    return y, (x, w, y)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, y = res
+    if activation == "relu":
+        g = g * (y > 0).astype(g.dtype)
+    zero_k = jnp.zeros((x.shape[1],), jnp.float32)
+    zero_n = jnp.zeros((w.shape[1],), jnp.float32)
+    dx = pmm.dense(g, w.T, zero_k)          # (m, n) @ (n, k)
+    dw = pmm.dense(x.T, g, zero_n)          # (k, m) @ (m, n)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+# --------------------------------------------------------------------------
+# Model specs and the flat-parameter registry
+# --------------------------------------------------------------------------
+
+class TensorSpec:
+    """One named parameter tensor inside the flat vector."""
+
+    def __init__(self, name: str, shape: Tuple[int, ...], init_std: float):
+        self.name = name
+        self.shape = tuple(int(s) for s in shape)
+        self.size = int(np.prod(self.shape))
+        self.init_std = float(init_std)
+        self.offset = 0  # assigned by _layout
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "offset": self.offset,
+            "size": self.size,
+            "init_std": self.init_std,
+        }
+
+
+def _he(fan_in: int) -> float:
+    return float(np.sqrt(2.0 / fan_in))
+
+
+def _conv_spec(name: str, kh, kw, cin, cout) -> List[TensorSpec]:
+    return [
+        TensorSpec(f"{name}.w", (kh, kw, cin, cout), _he(kh * kw * cin)),
+        TensorSpec(f"{name}.b", (cout,), 0.0),
+    ]
+
+
+def _fc_spec(name: str, din, dout, *, scale: float = 0.5) -> List[TensorSpec]:
+    """Dense layer spec.
+
+    ``scale`` shrinks the He std: the conv/relu stack feeding the hidden FC
+    grows activation variance past the He assumption, and the classifier
+    layer is further shrunk (x0.1) so initial logits are near zero (initial
+    loss = ln 10) — without it the paper's lr = 0.1 diverges on this
+    BN-free network.
+    """
+    return [
+        TensorSpec(f"{name}.w", (din, dout), scale * _he(din)),
+        TensorSpec(f"{name}.b", (dout,), 0.0),
+    ]
+
+
+def _layout(specs: List[TensorSpec]) -> List[TensorSpec]:
+    off = 0
+    for s in specs:
+        s.offset = off
+        off += s.size
+    return specs
+
+
+_MODEL_SPECS: Dict[str, List[TensorSpec]] = {}
+
+
+def param_table(model: str) -> List[TensorSpec]:
+    """The (name, shape, offset) table of ``model``'s flat parameter vector."""
+    if model not in _MODEL_SPECS:
+        flat_in = int(np.prod(IMAGE_SHAPE))
+        if model == "tiny":
+            specs = _fc_spec("fc1", flat_in, 64) + _fc_spec("fc2", 64, NUM_CLASSES, scale=0.1)
+        elif model == "cnn":
+            specs = (
+                _conv_spec("conv1", 5, 5, 3, 32)
+                + _conv_spec("conv2", 5, 5, 32, 64)
+                + _fc_spec("fc1", 8 * 8 * 64, 256)
+                + _fc_spec("fc2", 256, NUM_CLASSES, scale=0.1)
+            )
+        elif model == "mlp_wide":
+            specs = (
+                _fc_spec("fc1", flat_in, 1024)
+                + _fc_spec("fc2", 1024, 1024)
+                + _fc_spec("fc3", 1024, NUM_CLASSES, scale=0.1)
+            )
+        else:
+            raise ValueError(f"unknown model {model!r}")
+        _MODEL_SPECS[model] = _layout(specs)
+    return _MODEL_SPECS[model]
+
+
+def param_count(model: str) -> int:
+    """Total length of the flat parameter vector."""
+    table = param_table(model)
+    return table[-1].offset + table[-1].size
+
+
+def init_params(model: str, seed: int = 0) -> jnp.ndarray:
+    """He-normal initialization of the flat vector (biases zero)."""
+    table = param_table(model)
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for spec in table:
+        key, sub = jax.random.split(key)
+        if spec.init_std == 0.0:
+            parts.append(jnp.zeros((spec.size,), jnp.float32))
+        else:
+            parts.append(spec.init_std * jax.random.normal(sub, (spec.size,), jnp.float32))
+    return jnp.concatenate(parts)
+
+
+def unflatten(model: str, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Split the flat vector back into named, shaped tensors."""
+    out = {}
+    for spec in param_table(model):
+        out[spec.name] = lax.dynamic_slice(flat, (spec.offset,), (spec.size,)).reshape(spec.shape)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def _conv_relu_pool(x, w, b):
+    """5x5 SAME conv + relu + 2x2 max pool (NHWC)."""
+    y = lax.conv_general_dilated(
+        x, w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = jnp.maximum(y + b[None, None, None, :], 0.0)
+    return lax.reduce_window(
+        y, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(model: str, flat: jnp.ndarray, images: jnp.ndarray) -> jnp.ndarray:
+    """Logits for a batch of NHWC images."""
+    p = unflatten(model, flat)
+    batch = images.shape[0]
+    if model == "tiny":
+        h = images.reshape(batch, -1)
+        h = dense(h, p["fc1.w"], p["fc1.b"], "relu")
+        return dense(h, p["fc2.w"], p["fc2.b"], "none")
+    if model == "cnn":
+        h = _conv_relu_pool(images, p["conv1.w"], p["conv1.b"])   # 16x16x32
+        h = _conv_relu_pool(h, p["conv2.w"], p["conv2.b"])        # 8x8x64
+        h = h.reshape(batch, -1)                                  # 4096
+        h = dense(h, p["fc1.w"], p["fc1.b"], "relu")
+        return dense(h, p["fc2.w"], p["fc2.b"], "none")
+    if model == "mlp_wide":
+        h = images.reshape(batch, -1)
+        h = dense(h, p["fc1.w"], p["fc1.b"], "relu")
+        h = dense(h, p["fc2.w"], p["fc2.b"], "relu")
+        return dense(h, p["fc3.w"], p["fc3.b"], "none")
+    raise ValueError(f"unknown model {model!r}")
+
+
+def loss_fn(model: str, flat: jnp.ndarray, images: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy (weight decay lives in the update step)."""
+    logits = forward(model, flat, images)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# The exported programs (lowered to HLO by aot.py)
+# --------------------------------------------------------------------------
+
+def train_step(model: str):
+    """``(flat_params, images, labels) -> (loss, flat_grads)``."""
+
+    def step(flat, images, labels):
+        loss, grads = jax.value_and_grad(lambda q: loss_fn(model, q, images, labels))(flat)
+        return loss, grads
+
+    return step
+
+
+def eval_step(model: str):
+    """``(flat_params, images, labels) -> (loss, correct_count)``."""
+
+    def step(flat, images, labels):
+        logits = forward(model, flat, images)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+        return jnp.mean(nll), correct
+
+    return step
+
+
+def sgd_update():
+    """``(flat_params, flat_grads, lr[1], wd[1]) -> (new_params,)``.
+
+    ``p <- p - lr * (g + wd * p)`` -- the paper's optimizer (section 5.1).
+    """
+
+    def step(flat, grads, lr, wd):
+        return (flat - lr[0] * (grads + wd[0] * flat),)
+
+    return step
+
+
+def gossip_mix(n: int):
+    """``(x_r, x_s, w_r[1], w_s[1]) -> (mixed,)`` over n-length vectors.
+
+    The Pallas mix kernel (paper Algorithm 4 line 9), exported standalone so
+    the Rust coordinator can blend via PJRT.
+    """
+    from .kernels import mix as pmix
+
+    def step(x_r, x_s, w_r, w_s):
+        return (pmix.mix(x_r, x_s, w_r[0], w_s[0]),)
+
+    return step

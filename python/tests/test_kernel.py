@@ -1,0 +1,187 @@
+"""Kernel-vs-reference correctness: the CORE signal for Layer 1.
+
+Hypothesis sweeps shapes, dtypes-compatible ranges and weights; every case
+asserts allclose against the pure-jnp oracles in ``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as pmm
+from compile.kernels import mix as pmix
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _vec(rng, n, scale=1.0):
+    return jnp.asarray(rng.normal(scale=scale, size=n), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# mix kernel
+# --------------------------------------------------------------------------
+
+class TestMix:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=200_000),
+        w_r=st.floats(min_value=1e-4, max_value=10.0),
+        w_s=st.floats(min_value=1e-4, max_value=10.0),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref(self, n, w_r, w_s, seed):
+        rng = np.random.default_rng(seed)
+        x_r, x_s = _vec(rng, n), _vec(rng, n)
+        got = pmix.mix(x_r, x_s, w_r, w_s)
+        want = ref.mix_ref(x_r, x_s, w_r, w_s)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=50_000),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_convex_combination_bounds(self, n, seed):
+        """mix output is elementwise within [min(x_r,x_s), max(x_r,x_s)]."""
+        rng = np.random.default_rng(seed)
+        x_r, x_s = _vec(rng, n), _vec(rng, n)
+        got = np.asarray(pmix.mix(x_r, x_s, 0.3, 0.7))
+        lo = np.minimum(x_r, x_s) - 1e-6
+        hi = np.maximum(x_r, x_s) + 1e-6
+        assert np.all(got >= lo) and np.all(got <= hi)
+
+    def test_equal_weights_is_average(self):
+        rng = np.random.default_rng(0)
+        x_r, x_s = _vec(rng, 9999), _vec(rng, 9999)
+        got = pmix.mix(x_r, x_s, 0.5, 0.5)
+        np.testing.assert_allclose(got, (x_r + x_s) / 2, rtol=1e-5, atol=1e-6)
+
+    def test_zero_sender_weight_is_identity(self):
+        rng = np.random.default_rng(1)
+        x_r, x_s = _vec(rng, 4096), _vec(rng, 4096)
+        got = pmix.mix(x_r, x_s, 1.0, 0.0)
+        np.testing.assert_allclose(got, x_r, rtol=1e-6, atol=1e-7)
+
+    def test_exact_block_multiple_no_padding(self):
+        n = pmix.DEFAULT_BLOCK_ROWS * pmix.LANES  # exactly one block
+        rng = np.random.default_rng(2)
+        x_r, x_s = _vec(rng, n), _vec(rng, n)
+        got = pmix.mix(x_r, x_s, 0.125, 0.875)
+        want = ref.mix_ref(x_r, x_s, 0.125, 0.875)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("block_rows", [8, 64, 512])
+    def test_block_size_invariance(self, block_rows):
+        rng = np.random.default_rng(3)
+        x_r, x_s = _vec(rng, 123_457), _vec(rng, 123_457)
+        got = pmix.mix(x_r, x_s, 0.4, 0.6, block_rows=block_rows)
+        want = ref.mix_ref(x_r, x_s, 0.4, 0.6)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            pmix.mix(jnp.zeros(4), jnp.zeros(5), 0.5, 0.5)
+
+    def test_padded_len(self):
+        tile = pmix.DEFAULT_BLOCK_ROWS * pmix.LANES
+        assert pmix.padded_len(1) == tile
+        assert pmix.padded_len(tile) == tile
+        assert pmix.padded_len(tile + 1) == 2 * tile
+
+    def test_vmem_budget(self):
+        """Default block working set (x2 for double buffering) fits VMEM."""
+        assert 2 * pmix.vmem_bytes() < 16 * 1024 * 1024
+
+
+# --------------------------------------------------------------------------
+# matmul kernel
+# --------------------------------------------------------------------------
+
+def _mkn():
+    blocks = st.sampled_from([1, 2, 3])
+    return st.tuples(blocks, blocks, blocks)
+
+
+class TestMatmul:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        mkn=_mkn(),
+        activation=st.sampled_from(["none", "relu"]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_mxu_tiles(self, mkn, activation, seed):
+        m, k, n = (128 * v for v in mkn)
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, n)) / np.sqrt(k), jnp.float32)
+        b = jnp.asarray(rng.normal(size=n), jnp.float32)
+        got = pmm.matmul(x, w, b, activation=activation)
+        want = ref.matmul_ref(x, w, b, activation=activation)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([1, 4, 8, 16, 32]),
+        k=st.sampled_from([16, 64, 128, 3072]),
+        n=st.sampled_from([10, 64, 128, 256]),
+        activation=st.sampled_from(["none", "relu"]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_dense_irregular_shapes(self, m, k, n, activation, seed):
+        """dense() picks legal blocks for the model's actual layer shapes."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, n)) / np.sqrt(k), jnp.float32)
+        b = jnp.asarray(rng.normal(size=n), jnp.float32)
+        got = pmm.dense(x, w, b, activation=activation)
+        want = ref.matmul_ref(x, w, b, activation=activation)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_relu_clamps(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+        b = jnp.asarray(-100.0 * np.ones(128), jnp.float32)
+        got = np.asarray(pmm.dense(x, w, b, activation="relu"))
+        assert np.all(got == 0.0)
+
+    def test_indivisible_raises(self):
+        x = jnp.zeros((7, 128))
+        w = jnp.zeros((128, 128))
+        b = jnp.zeros(128)
+        with pytest.raises(ValueError):
+            pmm.matmul(x, w, b, block_m=4)
+
+    def test_bad_activation_raises(self):
+        x = jnp.zeros((8, 8))
+        with pytest.raises(ValueError):
+            pmm.matmul(x, jnp.zeros((8, 8)), jnp.zeros(8), activation="gelu")
+
+    def test_flops_model(self):
+        assert pmm.flops(128, 256, 64) == 2 * 128 * 256 * 64 + 2 * 128 * 64
+
+    def test_vmem_budget(self):
+        assert 2 * pmm.vmem_bytes() < 16 * 1024 * 1024
+
+
+# --------------------------------------------------------------------------
+# sgd_update reference (host-side mirror contract)
+# --------------------------------------------------------------------------
+
+class TestSgdRef:
+    def test_zero_wd_is_plain_sgd(self):
+        rng = np.random.default_rng(0)
+        p = _vec(rng, 1000)
+        g = _vec(rng, 1000)
+        got = ref.sgd_update_ref(p, g, 0.1, 0.0)
+        np.testing.assert_allclose(got, p - 0.1 * g, rtol=1e-6)
+
+    def test_wd_shrinks_params(self):
+        p = jnp.ones(100)
+        g = jnp.zeros(100)
+        got = ref.sgd_update_ref(p, g, 0.1, 1e-4)
+        np.testing.assert_allclose(got, (1 - 0.1 * 1e-4) * np.ones(100), rtol=1e-6)

@@ -1,0 +1,163 @@
+"""Layer-2 model tests: parameter layout, gradients, training behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _batch(rng, n=8):
+    imgs = jnp.asarray(rng.normal(size=(n, *M.IMAGE_SHAPE)), jnp.float32)
+    lbls = jnp.asarray(rng.integers(0, M.NUM_CLASSES, size=(n,)), jnp.int32)
+    return imgs, lbls
+
+
+class TestParamTable:
+    @pytest.mark.parametrize("model", ["tiny", "cnn", "mlp_wide"])
+    def test_layout_is_contiguous(self, model):
+        table = M.param_table(model)
+        off = 0
+        for spec in table:
+            assert spec.offset == off
+            assert spec.size == int(np.prod(spec.shape))
+            off += spec.size
+        assert off == M.param_count(model)
+
+    def test_known_counts(self):
+        # fc1: 3072*64 + 64; fc2: 64*10 + 10
+        assert M.param_count("tiny") == 3072 * 64 + 64 + 64 * 10 + 10
+        # conv1 5*5*3*32+32, conv2 5*5*32*64+64, fc1 4096*256+256, fc2 256*10+10
+        assert M.param_count("cnn") == (5 * 5 * 3 * 32 + 32 + 5 * 5 * 32 * 64 + 64
+                                        + 4096 * 256 + 256 + 256 * 10 + 10)
+
+    @pytest.mark.parametrize("model", ["tiny", "cnn"])
+    def test_unflatten_round_trip(self, model):
+        flat = M.init_params(model, seed=3)
+        parts = M.unflatten(model, flat)
+        rebuilt = jnp.concatenate([parts[s.name].reshape(-1) for s in M.param_table(model)])
+        np.testing.assert_array_equal(np.asarray(flat), np.asarray(rebuilt))
+
+    def test_init_deterministic_and_seed_sensitive(self):
+        a = M.init_params("tiny", seed=0)
+        b = M.init_params("tiny", seed=0)
+        c = M.init_params("tiny", seed=1)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+    def test_biases_init_zero(self):
+        flat = M.init_params("tiny", seed=0)
+        parts = M.unflatten("tiny", flat)
+        np.testing.assert_array_equal(np.asarray(parts["fc1.b"]), 0.0)
+        np.testing.assert_array_equal(np.asarray(parts["fc2.b"]), 0.0)
+
+
+class TestForward:
+    @pytest.mark.parametrize("model", ["tiny", "cnn", "mlp_wide"])
+    def test_logit_shape(self, model):
+        rng = np.random.default_rng(0)
+        imgs, _ = _batch(rng, 4)
+        flat = M.init_params(model, 0)
+        logits = M.forward(model, flat, imgs)
+        assert logits.shape == (4, M.NUM_CLASSES)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_initial_loss_near_log10(self):
+        """Random init => loss ~= ln(10) on balanced random labels."""
+        rng = np.random.default_rng(0)
+        imgs, lbls = _batch(rng, 64)
+        flat = M.init_params("tiny", 0)
+        loss = float(M.loss_fn("tiny", flat, imgs, lbls))
+        assert abs(loss - np.log(10)) < 2.0
+
+    def test_unknown_model_raises(self):
+        with pytest.raises(ValueError):
+            M.forward("nope", jnp.zeros(10), jnp.zeros((1, 32, 32, 3)))
+
+
+class TestGradients:
+    def test_finite_difference_check_tiny(self):
+        """Spot-check d(loss)/d(param) against central differences."""
+        rng = np.random.default_rng(0)
+        imgs, lbls = _batch(rng, 4)
+        flat = M.init_params("tiny", 0)
+        step = jax.jit(M.train_step("tiny"))
+        loss0, g = step(flat, imgs, lbls)
+        g = np.asarray(g)
+        eps = 1e-3
+        idx = rng.integers(0, flat.shape[0], size=6)
+        for i in idx:
+            e = np.zeros(flat.shape[0], np.float32)
+            e[i] = eps
+            lp, _ = step(flat + e, imgs, lbls)
+            lm, _ = step(flat - e, imgs, lbls)
+            fd = (float(lp) - float(lm)) / (2 * eps)
+            assert abs(fd - g[i]) < 5e-2 * max(1.0, abs(g[i])) + 1e-3, (i, fd, g[i])
+
+    @pytest.mark.parametrize("model", ["tiny", "cnn"])
+    def test_grad_shape_and_finite(self, model):
+        rng = np.random.default_rng(1)
+        imgs, lbls = _batch(rng, 4)
+        flat = M.init_params(model, 0)
+        loss, g = jax.jit(M.train_step(model))(flat, imgs, lbls)
+        assert g.shape == flat.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert float(jnp.linalg.norm(g)) > 0.0
+
+    def test_loss_decreases_under_sgd(self):
+        rng = np.random.default_rng(2)
+        imgs, lbls = _batch(rng, 16)
+        flat = M.init_params("tiny", 0)
+        step = jax.jit(M.train_step("tiny"))
+        first, _ = step(flat, imgs, lbls)
+        for _ in range(20):
+            _, g = step(flat, imgs, lbls)
+            flat = flat - 0.1 * g
+        last, _ = step(flat, imgs, lbls)
+        assert float(last) < float(first) * 0.5
+
+
+class TestEvalStep:
+    def test_correct_count_bounds(self):
+        rng = np.random.default_rng(3)
+        imgs, lbls = _batch(rng, 32)
+        flat = M.init_params("tiny", 0)
+        loss, correct = jax.jit(M.eval_step("tiny"))(flat, imgs, lbls)
+        assert 0.0 <= float(correct) <= 32.0
+        assert np.isfinite(float(loss))
+
+    def test_perfect_model_counts_all(self):
+        """A model trained to memorize a tiny batch gets them all right."""
+        rng = np.random.default_rng(4)
+        imgs, lbls = _batch(rng, 8)
+        flat = M.init_params("tiny", 0)
+        step = jax.jit(M.train_step("tiny"))
+        for _ in range(60):
+            _, g = step(flat, imgs, lbls)
+            flat = flat - 0.1 * g
+        _, correct = jax.jit(M.eval_step("tiny"))(flat, imgs, lbls)
+        assert float(correct) == 8.0
+
+
+class TestExportedPrograms:
+    def test_sgd_update_matches_ref(self):
+        from compile.kernels import ref
+        rng = np.random.default_rng(5)
+        p = jnp.asarray(rng.normal(size=1000), jnp.float32)
+        g = jnp.asarray(rng.normal(size=1000), jnp.float32)
+        (got,) = M.sgd_update()(p, g, jnp.asarray([0.1]), jnp.asarray([1e-4]))
+        want = ref.sgd_update_ref(p, g, 0.1, 1e-4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_gossip_mix_matches_ref(self):
+        from compile.kernels import ref
+        rng = np.random.default_rng(6)
+        n = M.param_count("tiny")
+        xr = jnp.asarray(rng.normal(size=n), jnp.float32)
+        xs = jnp.asarray(rng.normal(size=n), jnp.float32)
+        (got,) = M.gossip_mix(n)(xr, xs, jnp.asarray([0.125]), jnp.asarray([0.0625]))
+        want = ref.mix_ref(xr, xs, 0.125, 0.0625)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,67 @@
+//! Bench: section-3 communication-matrix application.
+//!
+//! The framework is an analysis tool, but its cost still matters for the
+//! cross-check suites: sparse-row application must scale with touched
+//! rows (1 for a gossip exchange) rather than with M.
+
+use gosgd::bench::Bencher;
+use gosgd::framework::{generators, Stacked};
+use gosgd::tensor::FlatVec;
+use gosgd::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("comm_matrix");
+    let mut rng = Rng::new(0);
+    let m = 8;
+    let dim = 100_000;
+    let vecs: Vec<FlatVec> = (0..=m).map(|_| FlatVec::randn(dim, 1.0, &mut rng)).collect();
+    let state = Stacked::from_vecs(vecs).unwrap();
+
+    // Gossip exchange: touches exactly 1 row regardless of M.
+    {
+        let k = generators::gossip_exchange(m, 2, 5, 0.0625, 0.125).unwrap();
+        b.bench_bytes("gossip_exchange_apply", (3 * dim * 4) as u64, || {
+            std::hint::black_box(k.apply(&state).unwrap());
+        });
+    }
+
+    // Full averaging (PerSyn sync): touches all M+1 rows.
+    {
+        let k = generators::allreduce(m).unwrap();
+        b.bench_bytes(
+            "allreduce_apply",
+            ((m + 1) * (m + 1) * dim * 4) as u64,
+            || {
+                std::hint::black_box(k.apply(&state).unwrap());
+            },
+        );
+    }
+
+    // EASGD elastic sync.
+    {
+        let k = generators::easgd(0, 1, 0.9 / m as f64, m).unwrap();
+        b.bench("easgd_apply", || {
+            std::hint::black_box(k.apply(&state).unwrap());
+        });
+    }
+
+    // Scalar-path application (analysis workloads sweep thousands of these).
+    {
+        let k = generators::allreduce(m).unwrap();
+        let x: Vec<f64> = (0..=m).map(|i| i as f64).collect();
+        b.bench_elems("allreduce_apply_scalars", (m + 1) as u64, || {
+            std::hint::black_box(k.apply_scalars(&x).unwrap());
+        });
+    }
+
+    // Composition (building P_t^T products for spectral analysis).
+    {
+        let k1 = generators::allreduce(m).unwrap();
+        let k2 = generators::easgd(0, 1, 0.1, m).unwrap();
+        b.bench("compose_9x9", || {
+            std::hint::black_box(k1.compose(&k2).unwrap());
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,72 @@
+//! Bench: the gossip mix hot path (paper Algorithm 4 line 9).
+//!
+//! Perf target (DESIGN.md §Perf): the host blend is a pure-bandwidth op —
+//! it reads 2 vectors and writes 1, so its roofline is ≈ memcpy-bandwidth/3.
+//! Also measures the Pallas `mix` artifact through PJRT when artifacts are
+//! present (the same op at L1), and the end-to-end message cost
+//! (clone + push + drain + blend).
+
+use gosgd::bench::Bencher;
+use gosgd::gossip::{Message, MessageQueue, SumWeight};
+use gosgd::tensor::FlatVec;
+use gosgd::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bencher::new("mix_throughput");
+    let mut rng = Rng::new(0);
+
+    for &n in &[100_000usize, 1_105_098, 4_206_602] {
+        // 1.1M = the paper-scale CNN parameter count; 4.2M = mlp_wide.
+        let x_s = FlatVec::randn(n, 1.0, &mut rng);
+        let mut x_r = FlatVec::randn(n, 1.0, &mut rng);
+        let bytes = (3 * n * 4) as u64; // read 2 + write 1
+        let label = format!("host_mix_n{n}");
+        b.bench_bytes(&label, bytes, || {
+            x_r.mix_from(&x_s, 0.125, 0.0625).unwrap();
+        });
+    }
+
+    // Memcpy reference for the roofline ratio.
+    {
+        let n = 1_105_098usize;
+        let src = vec![1.0f32; n];
+        let mut dst = vec![0.0f32; n];
+        b.bench_bytes("memcpy_reference_n1105098", (2 * n * 4) as u64, || {
+            dst.copy_from_slice(&src);
+            std::hint::black_box(&dst);
+        });
+    }
+
+    // Full message path: snapshot + queue + drain + blend.
+    {
+        let n = 1_105_098usize;
+        let q = MessageQueue::unbounded();
+        let x_s = FlatVec::randn(n, 1.0, &mut rng);
+        let mut x_r = FlatVec::randn(n, 1.0, &mut rng);
+        let mut w_r = SumWeight::init(8);
+        b.bench_bytes("full_message_path_n1105098", (4 * n * 4) as u64, || {
+            let snapshot = Arc::new(x_s.clone());
+            q.push(Message::new(snapshot, SumWeight::from_value(0.0625), 0, 0));
+            for msg in q.drain() {
+                let t = w_r.absorb(msg.weight);
+                x_r.mix_from(&msg.params, 1.0 - t, t).unwrap();
+            }
+        });
+    }
+
+    // The L1 Pallas mix artifact through PJRT (same op, compiled path).
+    if std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        let rt = gosgd::runtime::ModelRuntime::load("artifacts/tiny").unwrap();
+        let n = rt.param_count();
+        let x_r = FlatVec::randn(n, 1.0, &mut rng);
+        let x_s = FlatVec::randn(n, 1.0, &mut rng);
+        b.bench_bytes(&format!("pjrt_pallas_mix_n{n}"), (3 * n * 4) as u64, || {
+            std::hint::black_box(rt.mix(&x_r, &x_s, 0.125, 0.0625).unwrap());
+        });
+    } else {
+        println!("(skipping pjrt_pallas_mix: run `make artifacts`)");
+    }
+
+    b.finish();
+}

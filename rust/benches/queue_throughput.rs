@@ -1,0 +1,79 @@
+//! Bench: message-queue operations (the gossip substrate's control path).
+//!
+//! Perf target (DESIGN.md §Perf): queue ops are O(1) with `Arc`'d payloads
+//! — push/drain must be orders of magnitude cheaper than a gradient step
+//! so the protocol's overhead stays negligible at p = 0.01…1.
+
+use gosgd::bench::Bencher;
+use gosgd::gossip::{Message, MessageQueue, SumWeight};
+use gosgd::tensor::FlatVec;
+use std::sync::Arc;
+
+fn msg(payload: &Arc<FlatVec>) -> Message {
+    Message::new(payload.clone(), SumWeight::from_value(0.01), 0, 0)
+}
+
+fn main() {
+    let mut b = Bencher::new("queue_throughput");
+    let payload = Arc::new(FlatVec::zeros(1_105_098)); // paper-scale CNN
+
+    // Single-threaded push+drain round trip (payload shared, not copied).
+    {
+        let q = MessageQueue::unbounded();
+        b.bench_elems("push_drain_roundtrip", 1, || {
+            q.push(msg(&payload));
+            std::hint::black_box(q.drain());
+        });
+    }
+
+    // Batched: 8 producers' worth of messages drained at once.
+    {
+        let q = MessageQueue::unbounded();
+        b.bench_elems("push8_drain", 8, || {
+            for _ in 0..8 {
+                q.push(msg(&payload));
+            }
+            std::hint::black_box(q.drain());
+        });
+    }
+
+    // Bounded queue with coalescing under overflow (worst case: every push
+    // beyond capacity folds two 1.1M-float payloads).
+    {
+        let q = MessageQueue::bounded(4);
+        let small = Arc::new(FlatVec::zeros(10_000));
+        b.bench_elems("bounded_coalesce_10k", 8, || {
+            for _ in 0..8 {
+                q.push(Message::new(small.clone(), SumWeight::from_value(0.01), 0, 0));
+            }
+            std::hint::black_box(q.drain());
+        });
+    }
+
+    // Cross-thread contention: 4 pusher threads against one drainer.
+    {
+        let q = Arc::new(MessageQueue::unbounded());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let q = q.clone();
+            let stop = stop.clone();
+            let p = payload.clone();
+            handles.push(std::thread::spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    q.push(Message::new(p.clone(), SumWeight::from_value(0.01), 0, 0));
+                    std::thread::yield_now();
+                }
+            }));
+        }
+        b.bench_elems("drain_under_contention", 1, || {
+            std::hint::black_box(q.drain());
+        });
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    b.finish();
+}

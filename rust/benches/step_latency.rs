@@ -1,0 +1,79 @@
+//! Bench: per-step latency of each layer of the training path.
+//!
+//! Breaks the end-to-end step into its parts: batch generation (L3 data),
+//! PJRT train_step (L2+L1 compute), host optimizer, and the two update
+//! paths (host vs `sgd_update` artifact).  Requires artifacts for the
+//! PJRT entries; the host entries always run.
+
+use gosgd::bench::Bencher;
+use gosgd::data::{BatchSampler, SyntheticCifar};
+use gosgd::runtime::ModelRuntime;
+use gosgd::tensor::FlatVec;
+use gosgd::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("step_latency");
+    let mut rng = Rng::new(0);
+
+    // L3 data pipeline: one 16-image synthetic batch.
+    {
+        let sampler = BatchSampler::new(SyntheticCifar::new(0, 0.5, true), 16, 8);
+        let mut step = 0u64;
+        b.bench_elems("batch_generation_16", 16, || {
+            std::hint::black_box(sampler.train_batch(1, step));
+            step += 1;
+        });
+    }
+
+    // Host optimizer at paper-scale parameter count.
+    {
+        let n = 1_105_098;
+        let mut params = FlatVec::randn(n, 0.1, &mut rng);
+        let grads = FlatVec::randn(n, 0.1, &mut rng);
+        b.bench_bytes("host_sgd_step_n1105098", (3 * n * 4) as u64, || {
+            params.sgd_step(&grads, 0.1, 1e-4).unwrap();
+        });
+    }
+
+    for model in ["tiny", "cnn"] {
+        let dir = format!("artifacts/{model}");
+        if !std::path::Path::new(&dir).join("manifest.json").exists() {
+            println!("(skipping {model}: run `make artifacts`)");
+            continue;
+        }
+        let rt = ModelRuntime::load(&dir).unwrap();
+        let params = rt.manifest().load_init_params().unwrap();
+        let sampler = BatchSampler::new(
+            SyntheticCifar::new(0, 0.5, true),
+            rt.manifest().batch,
+            8,
+        );
+        let batch = sampler.train_batch(1, 0);
+
+        b.bench(&format!("pjrt_train_step_{model}"), || {
+            std::hint::black_box(
+                rt.train_step(&params, &batch.images, &batch.labels).unwrap(),
+            );
+        });
+
+        let grads = {
+            let (_, g) = rt.train_step(&params, &batch.images, &batch.labels).unwrap();
+            g
+        };
+        b.bench(&format!("pjrt_sgd_update_{model}"), || {
+            std::hint::black_box(rt.sgd_update(&params, &grads, 0.1, 1e-4).unwrap());
+        });
+
+        let eval_sampler = BatchSampler::new(
+            SyntheticCifar::new(0, 0.5, false),
+            rt.manifest().batch,
+            8,
+        );
+        let vb = eval_sampler.val_batch(0, rt.manifest().eval_batch);
+        b.bench(&format!("pjrt_eval_step_{model}"), || {
+            std::hint::black_box(rt.eval_step(&params, &vb.images, &vb.labels).unwrap());
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,83 @@
+//! Bench: end-to-end engine throughput per strategy + ablations.
+//!
+//! The paper's efficiency argument is that GoSGD's communication cost is
+//! negligible (p as low as 0.01 message/update).  This bench quantifies
+//! it: engine steps/second per strategy at paper-scale parameter counts,
+//! the overhead of p, and the peer-topology ablation from DESIGN.md.
+
+use gosgd::bench::Bencher;
+use gosgd::gossip::PeerSelector;
+use gosgd::strategies::allreduce::AllReduce;
+use gosgd::strategies::easgd::Easgd;
+use gosgd::strategies::engine::Engine;
+use gosgd::strategies::gosgd::GoSgd;
+use gosgd::strategies::grad::QuadraticSource;
+use gosgd::strategies::local::Local;
+use gosgd::strategies::persyn::PerSyn;
+use gosgd::strategies::Strategy;
+use gosgd::tensor::FlatVec;
+
+/// `steps_per_iter` is in ENGINE steps: one round (= M worker-steps) for
+/// synchronous strategies, one tick (= 1 worker-step) for asynchronous
+/// ones — callers pick values so every entry does 8 worker-steps/iter.
+fn bench_strategy(
+    b: &mut Bencher,
+    label: &str,
+    mk: impl Fn() -> Box<dyn Strategy>,
+    dim: usize,
+    steps_per_iter: u64,
+) {
+    let init = FlatVec::zeros(dim);
+    let src = QuadraticSource::new(dim, 0.2, 1);
+    let mut eng = Engine::new(mk(), src, 8, &init, 0.5, 1e-4, 2);
+    b.bench_elems(label, 8, || { // 8 worker-steps per iteration
+        eng.run(steps_per_iter).unwrap();
+    });
+}
+
+fn main() {
+    let mut b = Bencher::new("strategy_e2e");
+    // Paper-scale CNN parameter count; the gradient itself is synthetic so
+    // the numbers isolate *coordination* cost, not model compute.
+    let dim = 1_105_098;
+
+    bench_strategy(&mut b, "local_8w", || Box::new(Local), dim, 1);
+    bench_strategy(&mut b, "allreduce_8w", || Box::new(AllReduce), dim, 1);
+    bench_strategy(&mut b, "persyn_tau50_8w", || Box::new(PerSyn::new(50)), dim, 1);
+    bench_strategy(
+        &mut b,
+        "easgd_tau50_8w",
+        || Box::new(Easgd::new(0.9 / 8.0, 50)),
+        dim,
+        1,
+    );
+
+    // GoSGD across p: the paper's key operating points.
+    for p in [0.01, 0.1, 0.5] {
+        bench_strategy(
+            &mut b,
+            &format!("gosgd_p{p}_8w"),
+            move || Box::new(GoSgd::new(p)),
+            dim,
+            8,
+        );
+    }
+
+    // Topology ablation (DESIGN.md): uniform vs ring vs small-world.
+    for (tag, sel) in [
+        ("uniform", PeerSelector::Uniform),
+        ("ring", PeerSelector::Ring),
+        ("smallworld", PeerSelector::SmallWorld { q: 0.2 }),
+    ] {
+        let sel2 = sel.clone();
+        bench_strategy(
+            &mut b,
+            &format!("gosgd_p0.1_{tag}"),
+            move || Box::new(GoSgd::new(0.1).with_selector(sel2.clone())),
+            100_000,
+            8,
+        );
+    }
+
+    b.finish();
+}

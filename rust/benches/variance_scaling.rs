@@ -1,0 +1,42 @@
+//! Bench/table: Appendix A — gradient-estimator error ∝ 1/N.
+//!
+//! Regenerates the paper's motivating quantity: `E‖∇L − ∇̂L‖² =
+//! tr(Cov)/N`.  Prints the sweep table and the fitted power-law exponent
+//! (theory: −1), plus timing for the measurement itself.
+
+use gosgd::bench::Bencher;
+use gosgd::harness::variance::{fit_power_law, run, VarianceConfig};
+
+fn main() {
+    let cfg = VarianceConfig {
+        dim: 256,
+        batch_sizes: vec![1, 2, 4, 8, 16, 32, 64, 128],
+        trials: 200,
+        sigma: 0.5,
+        seed: 0,
+    };
+    println!("== Appendix A: gradient-estimator variance scaling ==");
+    let rows = run(&cfg, None).unwrap();
+    println!("{:>10}  {:>14}  {:>14}", "batch N", "E||err||^2", "N * E||err||^2");
+    for &(n, e) in &rows {
+        println!("{n:>10}  {e:>14.6}  {:>14.6}", e * n as f64);
+    }
+    let alpha = fit_power_law(&rows);
+    println!("\nfitted power law: error ∝ N^{alpha:.4}   (theory: N^-1)");
+    let theory = cfg.dim as f64 * (cfg.sigma as f64).powi(2);
+    println!("tr(Cov) = d·σ² = {theory:.2}; measured N·err ≈ {:.2}", rows[0].1);
+
+    // Timing of the estimator itself (for the harness budget).
+    let mut b = Bencher::new("variance_scaling");
+    let small = VarianceConfig {
+        dim: 256,
+        batch_sizes: vec![16],
+        trials: 20,
+        sigma: 0.5,
+        seed: 1,
+    };
+    b.bench("measure_batch16_20trials", || {
+        std::hint::black_box(run(&small, None).unwrap());
+    });
+    b.finish();
+}

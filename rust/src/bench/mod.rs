@@ -1,0 +1,198 @@
+//! Micro-benchmark harness (no `criterion` in the offline dep set).
+//!
+//! Criterion-style flow built from scratch: warm-up, calibrated batch
+//! sizing, many timed samples, and a report with mean / stddev / p50 / p95
+//! plus optional throughput.  Every `rust/benches/*.rs` target is a
+//! `harness = false` binary built on this module, so `cargo bench` works
+//! end-to-end offline.
+//!
+//! ```no_run
+//! use gosgd::bench::Bencher;
+//! let mut b = Bencher::new("demo");
+//! b.bench("noop", || {});
+//! b.finish();
+//! ```
+
+use std::time::{Duration, Instant};
+
+use crate::util::{mean, percentile, stddev};
+
+/// Target time per measurement phase.
+const TARGET_SAMPLE_TIME: Duration = Duration::from_millis(300);
+const WARMUP_TIME: Duration = Duration::from_millis(100);
+const SAMPLES: usize = 20;
+
+/// One benchmark's statistics, in nanoseconds per iteration.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub iters: u64,
+    /// Optional bytes processed per iteration (enables GB/s reporting).
+    pub bytes_per_iter: Option<u64>,
+    /// Optional items processed per iteration (enables Melem/s reporting).
+    pub elems_per_iter: Option<u64>,
+}
+
+impl Stats {
+    pub fn throughput_gbs(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / self.mean_ns)
+    }
+
+    pub fn melems_per_s(&self) -> Option<f64> {
+        self.elems_per_iter
+            .map(|e| e as f64 * 1000.0 / self.mean_ns)
+    }
+}
+
+/// Format a nanosecond quantity with a sensible unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark group runner: times closures and prints a criterion-like table.
+pub struct Bencher {
+    group: &'static str,
+    results: Vec<Stats>,
+    /// Optional CSV output path (`BENCH_CSV` env var).
+    csv: Option<std::path::PathBuf>,
+}
+
+impl Bencher {
+    pub fn new(group: &'static str) -> Self {
+        println!("\n== bench group: {group} ==");
+        let csv = std::env::var_os("BENCH_CSV").map(Into::into);
+        Bencher { group, results: Vec::new(), csv }
+    }
+
+    /// Time `f`, auto-calibrating iterations per sample.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &Stats {
+        self.bench_with(name, None, None, f)
+    }
+
+    /// Time `f` and report GB/s for `bytes` moved per call.
+    pub fn bench_bytes<F: FnMut()>(&mut self, name: &str, bytes: u64, f: F) -> &Stats {
+        self.bench_with(name, Some(bytes), None, f)
+    }
+
+    /// Time `f` and report Melem/s for `elems` processed per call.
+    pub fn bench_elems<F: FnMut()>(&mut self, name: &str, elems: u64, f: F) -> &Stats {
+        self.bench_with(name, None, Some(elems), f)
+    }
+
+    fn bench_with<F: FnMut()>(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        elems: Option<u64>,
+        mut f: F,
+    ) -> &Stats {
+        // Warm-up + calibration: how many iters fit in the target window?
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < WARMUP_TIME {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = WARMUP_TIME.as_nanos() as f64 / warm_iters.max(1) as f64;
+        let iters_per_sample =
+            ((TARGET_SAMPLE_TIME.as_nanos() as f64 / SAMPLES as f64 / per_iter).ceil() as u64)
+                .max(1);
+
+        let mut samples_ns = Vec::with_capacity(SAMPLES);
+        for _ in 0..SAMPLES {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+
+        let stats = Stats {
+            name: name.to_string(),
+            mean_ns: mean(&samples_ns),
+            stddev_ns: stddev(&samples_ns),
+            p50_ns: percentile(&samples_ns, 50.0),
+            p95_ns: percentile(&samples_ns, 95.0),
+            iters: iters_per_sample * SAMPLES as u64,
+            bytes_per_iter: bytes,
+            elems_per_iter: elems,
+        };
+        self.report(&stats);
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    fn report(&self, s: &Stats) {
+        let mut extra = String::new();
+        if let Some(gbs) = s.throughput_gbs() {
+            extra.push_str(&format!("  {gbs:.2} GB/s"));
+        }
+        if let Some(me) = s.melems_per_s() {
+            extra.push_str(&format!("  {me:.2} Melem/s"));
+        }
+        println!(
+            "{:<44} {:>12}/iter  ±{:>10}  p95 {:>12}{extra}",
+            format!("{}/{}", self.group, s.name),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.stddev_ns),
+            fmt_ns(s.p95_ns),
+        );
+    }
+
+    /// Write CSV (if requested) and return the collected stats.
+    pub fn finish(self) -> Vec<Stats> {
+        if let Some(path) = &self.csv {
+            let mut out = String::from("group,name,mean_ns,stddev_ns,p50_ns,p95_ns,iters\n");
+            for s in &self.results {
+                out.push_str(&format!(
+                    "{},{},{},{},{},{},{}\n",
+                    self.group, s.name, s.mean_ns, s.stddev_ns, s.p50_ns, s.p95_ns, s.iters
+                ));
+            }
+            let _ = std::fs::write(path, out);
+        }
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.3), "12.3 ns");
+        assert_eq!(fmt_ns(12_300.0), "12.30 µs");
+        assert_eq!(fmt_ns(12_300_000.0), "12.30 ms");
+        assert_eq!(fmt_ns(2_000_000_000.0), "2.000 s");
+    }
+
+    #[test]
+    fn stats_throughput() {
+        let s = Stats {
+            name: "x".into(),
+            mean_ns: 1000.0,
+            stddev_ns: 0.0,
+            p50_ns: 1000.0,
+            p95_ns: 1000.0,
+            iters: 1,
+            bytes_per_iter: Some(4000),
+            elems_per_iter: Some(1000),
+        };
+        assert!((s.throughput_gbs().unwrap() - 4.0).abs() < 1e-12);
+        assert!((s.melems_per_s().unwrap() - 1000.0).abs() < 1e-9);
+    }
+}

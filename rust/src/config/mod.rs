@@ -1,0 +1,271 @@
+//! Run configuration: strategy selection, model/artifact wiring,
+//! optimizer and data settings, plus presets for every paper figure.
+
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+use crate::gossip::PeerSelector;
+use crate::optim::LrSchedule;
+use crate::strategies::{
+    allreduce::AllReduce, downpour::Downpour, easgd::Easgd, gosgd::GoSgd, local::Local,
+    persyn::PerSyn, Strategy,
+};
+
+/// Which distributed-SGD algorithm to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StrategyKind {
+    /// The paper's contribution (section 4); `p` = exchange probability.
+    GoSgd { p: f64 },
+    /// Periodic synchronization every `tau` rounds (section 3.1).
+    PerSyn { tau: u64 },
+    /// Elastic averaging every `tau` rounds (section 3.2).
+    Easgd { alpha: f64, tau: u64 },
+    /// Parameter server with push/fetch cadences (section 3.3).
+    Downpour { n_push: u64, n_fetch: u64 },
+    /// Fully synchronous Algorithm 1.
+    AllReduce,
+    /// No communication baseline.
+    Local,
+}
+
+impl StrategyKind {
+    /// Parse a CLI strategy spec:
+    /// `gosgd:0.02`, `persyn:50`, `easgd:0.1:50`, `downpour:4:4`,
+    /// `allreduce`, `local`.
+    pub fn parse(text: &str) -> Result<StrategyKind> {
+        let parts: Vec<&str> = text.split(':').collect();
+        let bad = || Error::config(format!("cannot parse strategy {text:?}"));
+        match parts.as_slice() {
+            ["gosgd", p] => {
+                let p: f64 = p.parse().map_err(|_| bad())?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(Error::config(format!("gosgd p out of [0,1]: {p}")));
+                }
+                Ok(StrategyKind::GoSgd { p })
+            }
+            ["persyn", tau] => Ok(StrategyKind::PerSyn { tau: tau.parse().map_err(|_| bad())? }),
+            ["easgd", alpha, tau] => Ok(StrategyKind::Easgd {
+                alpha: alpha.parse().map_err(|_| bad())?,
+                tau: tau.parse().map_err(|_| bad())?,
+            }),
+            ["downpour", np, nf] => Ok(StrategyKind::Downpour {
+                n_push: np.parse().map_err(|_| bad())?,
+                n_fetch: nf.parse().map_err(|_| bad())?,
+            }),
+            ["allreduce"] => Ok(StrategyKind::AllReduce),
+            ["local"] => Ok(StrategyKind::Local),
+            _ => Err(bad()),
+        }
+    }
+
+    /// Short machine tag (CSV columns).
+    pub fn tag(&self) -> String {
+        match self {
+            StrategyKind::GoSgd { p } => format!("gosgd_p{p}"),
+            StrategyKind::PerSyn { tau } => format!("persyn_tau{tau}"),
+            StrategyKind::Easgd { alpha, tau } => format!("easgd_a{alpha}_tau{tau}"),
+            StrategyKind::Downpour { n_push, n_fetch } => {
+                format!("downpour_{n_push}_{n_fetch}")
+            }
+            StrategyKind::AllReduce => "allreduce".into(),
+            StrategyKind::Local => "local".into(),
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Artifact directory root (contains `<model>/manifest.json`).
+    pub artifacts_dir: PathBuf,
+    /// Model variant: `tiny`, `cnn`, `mlp_wide`.
+    pub model: String,
+    /// Number of workers M (paper uses 8).
+    pub workers: usize,
+    /// Engine steps (sync: rounds; async: single-worker ticks).
+    pub steps: u64,
+    /// Learning-rate schedule (paper: constant 0.1).
+    pub lr: LrSchedule,
+    /// Weight decay (paper: 1e-4).
+    pub weight_decay: f32,
+    /// Communication strategy.
+    pub strategy: StrategyKind,
+    /// Peer selection for GoSGD.
+    pub peer: PeerSelector,
+    /// Master RNG seed.
+    pub seed: u64,
+    /// Evaluate on the validation stream every this many steps (0 = never).
+    pub eval_every: u64,
+    /// Validation batches per evaluation.
+    pub eval_batches: u64,
+    /// Synthetic-data noise std (class overlap).
+    pub data_noise: f32,
+    /// Fraction of corrupted training labels (irreducible error; the
+    /// train/val generalization-gap knob for the Fig. 3 experiment).
+    pub label_noise: f32,
+    /// Enable crop/flip augmentation (paper's setting).
+    pub augment: bool,
+    /// Log a loss point every this many steps.
+    pub log_every: u64,
+    /// Alternative init seed (None = use the artifact's bit-exact init).
+    pub init_seed: Option<u64>,
+    /// Write a checkpoint here when the run finishes.
+    pub save_checkpoint: Option<PathBuf>,
+    /// Resume from this checkpoint instead of a fresh init (worker count
+    /// must match).
+    pub resume_from: Option<PathBuf>,
+}
+
+impl Default for RunConfig {
+    /// The paper's experimental setting (section 5.1) on the paper-scale
+    /// CNN: M = 8, lr = 0.1, weight decay 1e-4, GoSGD p = 0.02.
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: "cnn".into(),
+            workers: 8,
+            steps: 800,
+            lr: LrSchedule::Constant(0.1),
+            weight_decay: 1e-4,
+            strategy: StrategyKind::GoSgd { p: 0.02 },
+            peer: PeerSelector::Uniform,
+            seed: 0,
+            eval_every: 0,
+            eval_batches: 4,
+            data_noise: 4.0,
+            label_noise: 0.1,
+            augment: true,
+            log_every: 1,
+            init_seed: None,
+            save_checkpoint: None,
+            resume_from: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Validate invariants that would otherwise fail deep inside a run.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::config("workers must be >= 1"));
+        }
+        if matches!(self.strategy, StrategyKind::GoSgd { .. }) && self.workers < 2 {
+            return Err(Error::config("gosgd needs at least 2 workers"));
+        }
+        if let StrategyKind::Easgd { alpha, .. } = self.strategy {
+            if 1.0 - self.workers as f64 * alpha < 0.0 {
+                return Err(Error::config(format!(
+                    "easgd unstable: alpha {alpha} too large for {} workers",
+                    self.workers
+                )));
+            }
+        }
+        if let StrategyKind::GoSgd { p } = self.strategy {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::config(format!("gosgd p out of range: {p}")));
+            }
+        }
+        if self.steps == 0 {
+            return Err(Error::config("steps must be >= 1"));
+        }
+        Ok(())
+    }
+
+    /// Instantiate the strategy object.
+    pub fn build_strategy(&self) -> Box<dyn Strategy> {
+        match &self.strategy {
+            StrategyKind::GoSgd { p } => {
+                Box::new(GoSgd::new(*p).with_selector(self.peer.clone()))
+            }
+            StrategyKind::PerSyn { tau } => Box::new(PerSyn::new(*tau)),
+            StrategyKind::Easgd { alpha, tau } => Box::new(Easgd::new(*alpha, *tau)),
+            StrategyKind::Downpour { n_push, n_fetch } => {
+                Box::new(Downpour::new(*n_push, *n_fetch, self.lr.at(0)))
+            }
+            StrategyKind::AllReduce => Box::new(AllReduce),
+            StrategyKind::Local => Box::new(Local),
+        }
+    }
+
+    /// Artifact directory for the configured model.
+    pub fn model_dir(&self) -> PathBuf {
+        self.artifacts_dir.join(&self.model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_strategy_forms() {
+        assert_eq!(
+            StrategyKind::parse("gosgd:0.02").unwrap(),
+            StrategyKind::GoSgd { p: 0.02 }
+        );
+        assert_eq!(
+            StrategyKind::parse("persyn:50").unwrap(),
+            StrategyKind::PerSyn { tau: 50 }
+        );
+        assert_eq!(
+            StrategyKind::parse("easgd:0.1:50").unwrap(),
+            StrategyKind::Easgd { alpha: 0.1, tau: 50 }
+        );
+        assert_eq!(
+            StrategyKind::parse("downpour:4:8").unwrap(),
+            StrategyKind::Downpour { n_push: 4, n_fetch: 8 }
+        );
+        assert_eq!(StrategyKind::parse("allreduce").unwrap(), StrategyKind::AllReduce);
+        assert_eq!(StrategyKind::parse("local").unwrap(), StrategyKind::Local);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(StrategyKind::parse("gosgd").is_err());
+        assert!(StrategyKind::parse("gosgd:2.0").is_err());
+        assert!(StrategyKind::parse("persyn:abc").is_err());
+        assert!(StrategyKind::parse("").is_err());
+        assert!(StrategyKind::parse("easgd:0.1").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.validate().is_ok());
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        cfg.workers = 1;
+        assert!(cfg.validate().is_err()); // gosgd needs >= 2
+        cfg.workers = 8;
+        cfg.strategy = StrategyKind::Easgd { alpha: 0.5, tau: 10 };
+        assert!(cfg.validate().is_err()); // 1 - 8*0.5 < 0
+        cfg.strategy = StrategyKind::AllReduce;
+        cfg.steps = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn build_strategy_names() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.build_strategy().name().starts_with("gosgd"));
+        cfg.strategy = StrategyKind::PerSyn { tau: 7 };
+        assert!(cfg.build_strategy().name().contains("tau=7"));
+        cfg.strategy = StrategyKind::Local;
+        assert_eq!(cfg.build_strategy().name(), "local");
+    }
+
+    #[test]
+    fn tags_are_filename_safe() {
+        for s in [
+            StrategyKind::GoSgd { p: 0.02 },
+            StrategyKind::PerSyn { tau: 50 },
+            StrategyKind::Easgd { alpha: 0.1, tau: 50 },
+            StrategyKind::Downpour { n_push: 1, n_fetch: 2 },
+            StrategyKind::AllReduce,
+            StrategyKind::Local,
+        ] {
+            let tag = s.tag();
+            assert!(!tag.contains(' ') && !tag.contains('/'), "{tag}");
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Checkpointing: save/restore the full distributed training state.
+//!
+//! A deployable trainer must survive preemption.  The checkpoint captures
+//! everything the paper's protocol needs to resume *exactly*: every
+//! worker's parameter vector, its sum-weight (conservation must hold
+//! across restarts), its local step count, and the master slot.
+//!
+//! Format (little-endian, versioned):
+//!
+//! ```text
+//! magic "GOSGDCKP" | u32 version | u32 workers M | u64 param_count n
+//! master: n × f32
+//! per worker m = 1..=M: f64 weight | u64 steps | n × f32 params
+//! u64 fletcher-style checksum over all payload bytes
+//! ```
+//!
+//! In-flight queue messages are deliberately *not* checkpointed: the save
+//! path drains every queue into its receiver first (the blend is
+//! associative, so folding early is exact — same argument as queue
+//! coalescing), which keeps the on-disk format simple and the weight mass
+//! conserved.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::gossip::SumWeight;
+use crate::strategies::ClusterState;
+use crate::tensor::FlatVec;
+
+const MAGIC: &[u8; 8] = b"GOSGDCKP";
+const VERSION: u32 = 1;
+
+/// Serializable snapshot of a cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub master: FlatVec,
+    pub workers: Vec<WorkerSnapshot>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSnapshot {
+    pub params: FlatVec,
+    pub weight: f64,
+    pub steps: u64,
+}
+
+impl Checkpoint {
+    /// Capture a cluster state, folding queued messages into receivers
+    /// first so no weight mass is lost.
+    pub fn capture(state: &mut ClusterState) -> Result<Checkpoint> {
+        let m = state.workers();
+        // Drain all mailboxes into their owners (exact: blend associativity).
+        for w in 1..=m {
+            for msg in state.queues[w].drain() {
+                let t = state.weights[w].absorb(msg.weight);
+                state
+                    .stacked
+                    .worker_mut(w)
+                    .mix_from(&msg.params, 1.0 - t, t)?;
+            }
+        }
+        let workers = (1..=m)
+            .map(|w| WorkerSnapshot {
+                params: state.stacked.worker(w).clone(),
+                weight: state.weights[w].value(),
+                steps: state.steps[w],
+            })
+            .collect();
+        Ok(Checkpoint { master: state.stacked.master().clone(), workers })
+    }
+
+    /// Restore into a fresh cluster state.
+    pub fn restore(&self) -> Result<ClusterState> {
+        let m = self.workers.len();
+        if m == 0 {
+            return Err(Error::config("checkpoint has no workers"));
+        }
+        let n = self.master.len();
+        let mut state = ClusterState::new(m, &FlatVec::zeros(n));
+        *state.stacked.get_mut(0) = self.master.clone();
+        for (i, snap) in self.workers.iter().enumerate() {
+            let w = i + 1;
+            if snap.params.len() != n {
+                return Err(Error::shape("ragged checkpoint"));
+            }
+            *state.stacked.worker_mut(w) = snap.params.clone();
+            state.weights[w] = SumWeight::from_value(snap.weight);
+            state.steps[w] = snap.steps;
+        }
+        Ok(state)
+    }
+
+    /// Total gossip weight (should be ≈ 1 for a healthy checkpoint).
+    pub fn total_weight(&self) -> f64 {
+        self.workers.iter().map(|w| w.weight).sum()
+    }
+
+    // ---- binary serialization ------------------------------------------
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut payload = Vec::new();
+        let n = self.master.len();
+        payload.extend_from_slice(&(self.workers.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&(n as u64).to_le_bytes());
+        for v in self.master.as_slice() {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for w in &self.workers {
+            payload.extend_from_slice(&w.weight.to_le_bytes());
+            payload.extend_from_slice(&w.steps.to_le_bytes());
+            for v in w.params.as_slice() {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let checksum = fletcher64(&payload);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&payload)?;
+        f.write_all(&checksum.to_le_bytes())?;
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(&path)?);
+        let mut all = Vec::new();
+        f.read_to_end(&mut all)?;
+        if all.len() < 8 + 4 + 8 || &all[..8] != MAGIC {
+            return Err(Error::artifact("not a gosgd checkpoint"));
+        }
+        let version = u32::from_le_bytes(all[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(Error::artifact(format!("checkpoint version {version} != {VERSION}")));
+        }
+        let payload = &all[12..all.len() - 8];
+        let stored = u64::from_le_bytes(all[all.len() - 8..].try_into().unwrap());
+        if fletcher64(payload) != stored {
+            return Err(Error::artifact("checkpoint checksum mismatch (corrupt file)"));
+        }
+        let mut cur = Cursor { buf: payload, pos: 0 };
+        let m = cur.u32()? as usize;
+        let n = cur.u64()? as usize;
+        let master = FlatVec::from_vec(cur.f32s(n)?);
+        let mut workers = Vec::with_capacity(m);
+        for _ in 0..m {
+            let weight = cur.f64()?;
+            let steps = cur.u64()?;
+            let params = FlatVec::from_vec(cur.f32s(n)?);
+            if weight <= 0.0 || !weight.is_finite() {
+                return Err(Error::artifact(format!("bad checkpoint weight {weight}")));
+            }
+            workers.push(WorkerSnapshot { params, weight, steps });
+        }
+        if cur.pos != payload.len() {
+            return Err(Error::artifact("trailing bytes in checkpoint"));
+        }
+        Ok(Checkpoint { master, workers })
+    }
+}
+
+/// Simple 64-bit Fletcher-style checksum (corruption detection, not crypto).
+fn fletcher64(data: &[u8]) -> u64 {
+    let mut a: u64 = 0xF1E7C8;
+    let mut b: u64 = 0;
+    for chunk in data.chunks(4) {
+        let mut word = [0u8; 4];
+        word[..chunk.len()].copy_from_slice(chunk);
+        a = (a.wrapping_add(u32::from_le_bytes(word) as u64)) % 0xFFFF_FFFB;
+        b = (b.wrapping_add(a)) % 0xFFFF_FFFB;
+    }
+    (b << 32) | a
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::artifact("truncated checkpoint"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gossip::Message;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gosgd_ckpt_{name}.bin"))
+    }
+
+    fn populated_state(m: usize, n: usize, seed: u64) -> ClusterState {
+        let mut rng = Rng::new(seed);
+        let mut state = ClusterState::new(m, &FlatVec::randn(n, 1.0, &mut rng));
+        for w in 1..=m {
+            *state.stacked.worker_mut(w) = FlatVec::randn(n, 1.0, &mut rng);
+            state.steps[w] = rng.below(1000);
+        }
+        state
+    }
+
+    #[test]
+    fn capture_restore_round_trip() {
+        let mut state = populated_state(4, 100, 1);
+        let ckpt = Checkpoint::capture(&mut state).unwrap();
+        let restored = ckpt.restore().unwrap();
+        for w in 1..=4 {
+            assert_eq!(
+                restored.stacked.worker(w).as_slice(),
+                state.stacked.worker(w).as_slice()
+            );
+            assert_eq!(restored.weights[w].value(), state.weights[w].value());
+            assert_eq!(restored.steps[w], state.steps[w]);
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut state = populated_state(3, 57, 2);
+        let ckpt = Checkpoint::capture(&mut state).unwrap();
+        let path = tmp("roundtrip");
+        ckpt.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, ckpt);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn capture_folds_queued_messages_preserving_weight() {
+        let mut state = populated_state(2, 16, 3);
+        // Put a message in flight: sender 1 ships half its weight to 2.
+        let shipped = state.weights[1].halve_for_send();
+        let snapshot = Arc::new(state.stacked.worker(1).clone());
+        state.queues[2].push(Message::new(snapshot, shipped, 1, 0));
+        let ckpt = Checkpoint::capture(&mut state).unwrap();
+        assert!((ckpt.total_weight() - 1.0).abs() < 1e-9, "{}", ckpt.total_weight());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut state = populated_state(2, 20, 4);
+        let ckpt = Checkpoint::capture(&mut state).unwrap();
+        let path = tmp("corrupt");
+        ckpt.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let mut state = populated_state(2, 20, 5);
+        let ckpt = Checkpoint::capture(&mut state).unwrap();
+        let path = tmp("trunc");
+        ckpt.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 30]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_file_rejected() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn training_resumes_identically_after_restore() {
+        use crate::strategies::engine::Engine;
+        use crate::strategies::gosgd::GoSgd;
+        use crate::strategies::grad::QuadraticSource;
+        // Run 100 ticks; checkpoint; run 100 more. Separately: restore the
+        // checkpoint into a fresh engine with the same RNG state... RNG
+        // state is not checkpointed (by design: a resumed run is a new
+        // stochastic realization), so we assert state equality at capture
+        // and weight-mass health after resume.
+        let dim = 32;
+        let init = FlatVec::zeros(dim);
+        let src = QuadraticSource::new(dim, 0.2, 6);
+        let mut eng = Engine::new(Box::new(GoSgd::new(0.4)), src, 4, &init, 0.5, 0.0, 7);
+        eng.run(100).unwrap();
+        let ckpt = Checkpoint::capture(eng.state_mut()).unwrap();
+        assert!((ckpt.total_weight() - 1.0).abs() < 1e-9);
+        let restored = ckpt.restore().unwrap();
+        // Steps and parameters carried over exactly.
+        let total: u64 = restored.steps[1..].iter().sum();
+        assert_eq!(total, 100);
+        for w in 1..=4 {
+            assert_eq!(
+                restored.stacked.worker(w).as_slice(),
+                eng.state().stacked.worker(w).as_slice()
+            );
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! The leader: wires config → artifacts → engine → metrics.
+//!
+//! [`Coordinator`] is the high-level entry point the CLI and the examples
+//! use: it loads the model artifacts, builds the data pipeline and the
+//! configured strategy, runs the training engine, periodically evaluates
+//! on the validation stream, and produces a [`RunReport`].
+
+pub mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use crate::config::RunConfig;
+use crate::data::{BatchSampler, SyntheticCifar};
+use crate::error::Result;
+use crate::metrics::{LossCurve, Stopwatch};
+use crate::runtime::{ModelRuntime, PjrtSource};
+use crate::strategies::Engine;
+
+/// Result of one coordinated training run.
+#[derive(Debug, Default)]
+pub struct RunReport {
+    pub strategy: String,
+    pub model: String,
+    pub workers: usize,
+    pub steps: u64,
+    /// Per-engine-step training loss.
+    pub train_loss: LossCurve,
+    /// `(engine_step, val_loss, val_accuracy)` samples.
+    pub evals: Vec<(u64, f64, f64)>,
+    /// Final mean-worker validation metrics.
+    pub final_loss: f64,
+    pub final_accuracy: f64,
+    /// Consensus error at the end.
+    pub consensus_error: f64,
+    /// Communication accounting.
+    pub messages: u64,
+    pub bytes: u64,
+    pub barriers: u64,
+    /// Wall-clock seconds.
+    pub elapsed_secs: f64,
+}
+
+impl RunReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} model={} M={} steps={} loss={:.4} acc={:.3} eps={:.3e} msgs={} barriers={} {:.1}s",
+            self.strategy,
+            self.model,
+            self.workers,
+            self.steps,
+            self.final_loss,
+            self.final_accuracy,
+            self.consensus_error,
+            self.messages,
+            self.barriers,
+            self.elapsed_secs
+        )
+    }
+}
+
+/// Training leader.
+pub struct Coordinator {
+    config: RunConfig,
+    runtime: ModelRuntime,
+}
+
+impl Coordinator {
+    /// Load artifacts and validate the configuration.
+    pub fn new(config: RunConfig) -> Result<Self> {
+        config.validate()?;
+        let runtime = ModelRuntime::load(config.model_dir())?;
+        Ok(Coordinator { config, runtime })
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.config
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.runtime
+    }
+
+    fn sampler(&self) -> BatchSampler {
+        BatchSampler::new(
+            SyntheticCifar::new(self.config.seed, self.config.data_noise, self.config.augment)
+                .with_label_noise(self.config.label_noise),
+            self.runtime.manifest().batch,
+            self.config.workers,
+        )
+    }
+
+    /// Run the configured strategy on the real model through PJRT.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let cfg = &self.config;
+        let watch = Stopwatch::start();
+
+        let init = match cfg.init_seed {
+            None => self.runtime.manifest().load_init_params()?,
+            Some(seed) => self.runtime.manifest().sample_init_params(seed),
+        };
+        let sampler = self.sampler();
+        let source = PjrtSource::new(&self.runtime, sampler, cfg.workers);
+        let strategy = cfg.build_strategy();
+        let mut engine = Engine::new(
+            strategy,
+            source,
+            cfg.workers,
+            &init,
+            cfg.lr.at(0),
+            cfg.weight_decay,
+            cfg.seed,
+        );
+        if let Some(path) = &cfg.resume_from {
+            let ckpt = Checkpoint::load(path)?;
+            if ckpt.workers.len() != cfg.workers {
+                return Err(crate::error::Error::config(format!(
+                    "checkpoint has {} workers, config wants {}",
+                    ckpt.workers.len(),
+                    cfg.workers
+                )));
+            }
+            if ckpt.master.len() != init.len() {
+                return Err(crate::error::Error::shape(format!(
+                    "checkpoint param count {} vs model {}",
+                    ckpt.master.len(),
+                    init.len()
+                )));
+            }
+            *engine.state_mut() = ckpt.restore()?;
+        }
+
+        let mut evals = Vec::new();
+        let eval_sampler = self.sampler();
+        let chunk = if cfg.eval_every == 0 { cfg.steps } else { cfg.eval_every };
+        let mut done = 0u64;
+        while done < cfg.steps {
+            let n = chunk.min(cfg.steps - done);
+            engine.run(n)?;
+            done += n;
+            if cfg.eval_every != 0 {
+                let mean = engine.consensus_model()?;
+                let (vl, va) =
+                    self.runtime
+                        .evaluate(&mean, &eval_sampler, cfg.eval_batches)?;
+                evals.push((done, vl, va));
+            }
+        }
+
+        if let Some(path) = &cfg.save_checkpoint {
+            Checkpoint::capture(engine.state_mut())?.save(path)?;
+        }
+        let mean = engine.consensus_model()?;
+        let (final_loss, final_accuracy) =
+            self.runtime
+                .evaluate(&mean, &eval_sampler, cfg.eval_batches)?;
+        let state = engine.state();
+        Ok(RunReport {
+            strategy: engine.strategy_name(),
+            model: cfg.model.clone(),
+            workers: cfg.workers,
+            steps: cfg.steps,
+            train_loss: engine.losses.clone(),
+            evals,
+            final_loss,
+            final_accuracy,
+            consensus_error: state.stacked.consensus_error()?,
+            messages: state.comm.messages,
+            bytes: state.comm.bytes,
+            barriers: state.comm.barriers,
+            elapsed_secs: watch.elapsed_secs(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StrategyKind;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/tiny/manifest.json").exists()
+    }
+
+    #[test]
+    fn report_summary_formats() {
+        let rep = RunReport {
+            strategy: "gosgd(p=0.02)".into(),
+            model: "tiny".into(),
+            workers: 8,
+            steps: 100,
+            final_loss: 1.5,
+            final_accuracy: 0.42,
+            consensus_error: 1e-3,
+            messages: 16,
+            ..Default::default()
+        };
+        let s = rep.summary();
+        assert!(s.contains("gosgd"));
+        assert!(s.contains("acc=0.420"));
+    }
+
+    #[test]
+    fn invalid_config_rejected_before_artifact_load() {
+        let mut cfg = RunConfig::default();
+        cfg.workers = 0;
+        assert!(Coordinator::new(cfg).is_err());
+    }
+
+    // Full runs through PJRT live in rust/tests/integration_runtime.rs;
+    // this smoke test only runs when artifacts exist (cargo test after
+    // `make artifacts`).
+    #[test]
+    fn smoke_tiny_run_if_artifacts_present() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/tiny missing (run `make artifacts`)");
+            return;
+        }
+        let mut cfg = RunConfig::default();
+        cfg.model = "tiny".into();
+        cfg.workers = 2;
+        cfg.steps = 4;
+        cfg.strategy = StrategyKind::GoSgd { p: 0.5 };
+        cfg.eval_batches = 1;
+        let rep = Coordinator::new(cfg).unwrap().run().unwrap();
+        assert_eq!(rep.steps, 4);
+        assert!(rep.train_loss.len() >= 4);
+        assert!(rep.final_loss.is_finite());
+    }
+}

@@ -1,0 +1,280 @@
+//! Synthetic CIFAR-like dataset (the paper trains on CIFAR-10).
+//!
+//! CIFAR-10 itself is not available offline, so we substitute a
+//! deterministic class-conditional generator at the same geometry
+//! (32×32×3, 10 classes) — see DESIGN.md §Substitutions.  What the
+//! distributed-SGD experiments need from the data is (a) a non-convex
+//! classification loss, (b) per-worker stochastic gradients with real
+//! variance, and (c) a train/validation generalization gap.  The
+//! generator provides all three:
+//!
+//! * each class has a fixed random *prototype* image (low-frequency
+//!   pattern, seeded once from the dataset seed);
+//! * a sample is `prototype[c] + texture noise`, optionally augmented with
+//!   the paper's crop/flip augmentation;
+//! * the noise magnitude sets the Bayes error: classes overlap, so
+//!   memorizing train noise hurts validation — the regularization effect
+//!   in the paper's Fig. 3 (gossip noise helps generalization) is
+//!   observable.
+//!
+//! Everything is deterministic from `(seed, split, index)`: two workers
+//! never see the same batch (they shard by index), and re-runs are exact.
+
+pub mod sampler;
+
+pub use sampler::BatchSampler;
+
+use crate::util::rng::Rng;
+
+/// Image geometry (NHWC, matching the Layer-2 model).
+pub const HEIGHT: usize = 32;
+pub const WIDTH: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const CLASSES: usize = 10;
+pub const IMAGE_ELEMS: usize = HEIGHT * WIDTH * CHANNELS;
+
+/// Which split a sample is drawn from (disjoint noise streams).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Validation,
+}
+
+/// Deterministic synthetic CIFAR-like dataset.
+pub struct SyntheticCifar {
+    prototypes: Vec<Vec<f32>>, // CLASSES × IMAGE_ELEMS
+    noise_std: f32,
+    augment: bool,
+    /// Probability a *training* label is resampled uniformly — the
+    /// irreducible-error knob.  Pixel noise alone cannot make a 3072-dim
+    /// class-conditional Gaussian problem hard (any linear model separates
+    /// it), so the train/validation generalization gap the paper's Fig. 3
+    /// exercises comes from label noise: memorizing corrupted training
+    /// labels strictly hurts validation accuracy.
+    label_noise: f32,
+    seed: u64,
+}
+
+impl SyntheticCifar {
+    /// `noise_std` controls pixel-level class overlap.
+    pub fn new(seed: u64, noise_std: f32, augment: bool) -> Self {
+        let mut proto_rng = Rng::new(seed ^ 0xDA7A);
+        let mut prototypes = Vec::with_capacity(CLASSES);
+        for _ in 0..CLASSES {
+            prototypes.push(Self::prototype(&mut proto_rng));
+        }
+        SyntheticCifar { prototypes, noise_std, augment, label_noise: 0.0, seed }
+    }
+
+    /// Corrupt a fraction of *training* labels (validation keeps truth).
+    pub fn with_label_noise(mut self, q: f32) -> Self {
+        assert!((0.0..=1.0).contains(&q));
+        self.label_noise = q;
+        self
+    }
+
+    /// Low-frequency class prototype: a sum of a few random 2-D cosine
+    /// waves per channel.  Low-frequency structure matters: it gives the
+    /// conv layers something spatially coherent to learn, unlike white
+    /// noise.
+    fn prototype(rng: &mut Rng) -> Vec<f32> {
+        let mut img = vec![0.0f32; IMAGE_ELEMS];
+        for c in 0..CHANNELS {
+            for _wave in 0..4 {
+                let fx = rng.f64() * 3.0 + 0.5;
+                let fy = rng.f64() * 3.0 + 0.5;
+                let phase = rng.f64() * std::f64::consts::TAU;
+                let amp = (rng.f64() * 0.5 + 0.25) as f32;
+                for y in 0..HEIGHT {
+                    for x in 0..WIDTH {
+                        let v = amp
+                            * ((fx * x as f64 / WIDTH as f64 * std::f64::consts::TAU
+                                + fy * y as f64 / HEIGHT as f64 * std::f64::consts::TAU
+                                + phase)
+                                .cos() as f32);
+                        img[(y * WIDTH + x) * CHANNELS + c] += v;
+                    }
+                }
+            }
+        }
+        img
+    }
+
+    /// Generate sample `index` of `split` into `out` (length IMAGE_ELEMS);
+    /// returns its label.
+    pub fn sample_into(&self, split: Split, index: u64, out: &mut [f32]) -> i32 {
+        assert_eq!(out.len(), IMAGE_ELEMS);
+        let split_tag = match split {
+            Split::Train => TRAIN_TAG,
+            Split::Validation => VAL_TAG,
+        };
+        let mut rng = Rng::new(self.seed ^ split_tag).split(index);
+        let true_label = rng.below(CLASSES as u64) as i32;
+        let proto = &self.prototypes[true_label as usize];
+        // Normalize to ~unit pixel variance regardless of the noise level:
+        // raising `noise_std` lowers the per-pixel SNR (harder problem)
+        // without blowing up the optimizer's input scale.
+        let scale = 1.0 / (1.0 + self.noise_std * self.noise_std).sqrt();
+        for (o, &p) in out.iter_mut().zip(proto) {
+            *o = scale * (p + rng.normal_f32(self.noise_std));
+        }
+        if self.augment && split == Split::Train {
+            self.augment_in_place(out, &mut rng);
+        }
+        // Label corruption on the training stream only.
+        if split == Split::Train
+            && self.label_noise > 0.0
+            && rng.bernoulli(self.label_noise as f64)
+        {
+            return rng.below(CLASSES as u64) as i32;
+        }
+        true_label
+    }
+
+    /// The paper uses the EASGD data augmentation (crop + flip).  We apply
+    /// a random ±3px cyclic translation and a 50% horizontal flip.
+    fn augment_in_place(&self, img: &mut [f32], rng: &mut Rng) {
+        let dx = rng.below(7) as isize - 3;
+        let dy = rng.below(7) as isize - 3;
+        let flip = rng.bernoulli(0.5);
+        let src = img.to_vec();
+        for y in 0..HEIGHT as isize {
+            for x in 0..WIDTH as isize {
+                let sy = (y + dy).rem_euclid(HEIGHT as isize) as usize;
+                let mut sx = (x + dx).rem_euclid(WIDTH as isize) as usize;
+                if flip {
+                    sx = WIDTH - 1 - sx;
+                }
+                for c in 0..CHANNELS {
+                    img[(y as usize * WIDTH + x as usize) * CHANNELS + c] =
+                        src[(sy * WIDTH + sx) * CHANNELS + c];
+                }
+            }
+        }
+    }
+
+    pub fn noise_std(&self) -> f32 {
+        self.noise_std
+    }
+}
+
+/// Seed tags guaranteeing the train and validation noise streams are
+/// disjoint.
+const TRAIN_TAG: u64 = 0x7EA10;
+const VAL_TAG: u64 = 0x5A11D;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_are_deterministic() {
+        let ds = SyntheticCifar::new(7, 0.5, true);
+        let mut a = vec![0.0; IMAGE_ELEMS];
+        let mut b = vec![0.0; IMAGE_ELEMS];
+        let la = ds.sample_into(Split::Train, 42, &mut a);
+        let lb = ds.sample_into(Split::Train, 42, &mut b);
+        assert_eq!(la, lb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let ds = SyntheticCifar::new(7, 0.5, false);
+        let mut a = vec![0.0; IMAGE_ELEMS];
+        let mut b = vec![0.0; IMAGE_ELEMS];
+        ds.sample_into(Split::Train, 1, &mut a);
+        ds.sample_into(Split::Train, 2, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let ds = SyntheticCifar::new(7, 0.5, false);
+        let mut a = vec![0.0; IMAGE_ELEMS];
+        let mut b = vec![0.0; IMAGE_ELEMS];
+        ds.sample_into(Split::Train, 5, &mut a);
+        ds.sample_into(Split::Validation, 5, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn labels_cover_all_classes() {
+        let ds = SyntheticCifar::new(3, 0.5, false);
+        let mut img = vec![0.0; IMAGE_ELEMS];
+        let mut seen = [false; CLASSES];
+        for i in 0..200 {
+            let l = ds.sample_into(Split::Train, i, &mut img);
+            assert!((0..CLASSES as i32).contains(&l));
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn class_signal_exceeds_noise_correlation() {
+        // Same class, different samples must be more similar than
+        // different classes, else nothing is learnable.
+        let ds = SyntheticCifar::new(11, 0.5, false);
+        let mut buf = vec![0.0; IMAGE_ELEMS];
+        let mut by_class: Vec<Vec<Vec<f32>>> = vec![Vec::new(); CLASSES];
+        for i in 0..400 {
+            let l = ds.sample_into(Split::Train, i, &mut buf);
+            if by_class[l as usize].len() < 3 {
+                by_class[l as usize].push(buf.clone());
+            }
+        }
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum()
+        };
+        let c0 = &by_class[0];
+        let c1 = &by_class[1];
+        assert!(c0.len() >= 2 && c1.len() >= 1);
+        let intra = dist(&c0[0], &c0[1]);
+        let inter = dist(&c0[0], &c1[0]);
+        assert!(inter > intra, "inter {inter} <= intra {intra}");
+    }
+
+    #[test]
+    fn label_noise_corrupts_train_only_at_rate() {
+        let clean = SyntheticCifar::new(5, 0.5, false);
+        let noisy = SyntheticCifar::new(5, 0.5, false).with_label_noise(0.2);
+        let mut img = vec![0.0; IMAGE_ELEMS];
+        let mut flipped = 0;
+        let n = 2000;
+        for i in 0..n {
+            let lt = clean.sample_into(Split::Train, i, &mut img);
+            let ln = noisy.sample_into(Split::Train, i, &mut img);
+            if lt != ln {
+                flipped += 1;
+            }
+            // Validation labels are never corrupted.
+            let vt = clean.sample_into(Split::Validation, i, &mut img);
+            let vn = noisy.sample_into(Split::Validation, i, &mut img);
+            assert_eq!(vt, vn);
+        }
+        // Effective flip rate = q * (1 - 1/CLASSES) = 0.18.
+        let rate = flipped as f64 / n as f64;
+        assert!((rate - 0.18).abs() < 0.03, "flip rate {rate}");
+    }
+
+    #[test]
+    fn augmentation_changes_pixels_not_determinism() {
+        let ds_aug = SyntheticCifar::new(7, 0.5, true);
+        let ds_plain = SyntheticCifar::new(7, 0.5, false);
+        let mut a = vec![0.0; IMAGE_ELEMS];
+        let mut b = vec![0.0; IMAGE_ELEMS];
+        ds_aug.sample_into(Split::Train, 9, &mut a);
+        ds_plain.sample_into(Split::Train, 9, &mut b);
+        // augmentation is a permutation of pixels: multiset is preserved
+        let mut sa = a.clone();
+        let mut sb = b.clone();
+        sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        sb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(sa, sb);
+        // validation is never augmented
+        ds_aug.sample_into(Split::Validation, 9, &mut a);
+        ds_plain.sample_into(Split::Validation, 9, &mut b);
+        assert_eq!(a, b);
+    }
+}

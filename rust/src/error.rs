@@ -1,0 +1,111 @@
+//! Crate-wide error type.
+//!
+//! Hand-rolled (no `thiserror` in the offline dep set) but with the same
+//! ergonomics: every subsystem has a variant, everything implements
+//! `std::error::Error`, and `?` works across `io`, `xla` and parse errors.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All the ways the GoSGD stack can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// Filesystem / OS error (artifact loading, CSV output, ...).
+    Io(std::io::Error),
+    /// PJRT / XLA error from the `xla` crate.
+    Xla(xla::Error),
+    /// Malformed artifact directory (missing file, bad manifest).
+    Artifact(String),
+    /// JSON syntax or schema error in `manifest.json`.
+    Json(String),
+    /// Invalid run configuration (bad strategy params, zero workers, ...).
+    Config(String),
+    /// Shape/length mismatch between tensors or literals.
+    Shape(String),
+    /// Worker thread panicked or poisoned a shared lock.
+    Worker(String),
+    /// CLI usage error.
+    Cli(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Worker(m) => write!(f, "worker error: {m}"),
+            Error::Cli(m) => write!(f, "cli error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Xla(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+/// Shorthand constructors used across the crate.
+impl Error {
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+    pub fn json(msg: impl Into<String>) -> Self {
+        Error::Json(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    pub fn worker(msg: impl Into<String>) -> Self {
+        Error::Worker(msg.into())
+    }
+    pub fn cli(msg: impl Into<String>) -> Self {
+        Error::Cli(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::config("bad p");
+        assert_eq!(e.to_string(), "config error: bad p");
+        let e = Error::shape("1 vs 2");
+        assert!(e.to_string().contains("shape"));
+    }
+
+    #[test]
+    fn io_conversion_preserves_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -1,0 +1,316 @@
+//! Row-sparse communication matrices `K^(t)`.
+//!
+//! Sizes are small (`(M+1) × (M+1)` with M = number of workers) but the
+//! matrices multiply *parameter vectors* of 10⁶+ elements, so application
+//! cost is dominated by the number of non-identity rows — the sparse-row
+//! representation applies only those.
+
+use crate::error::{Error, Result};
+use crate::framework::stacked::Stacked;
+use crate::tensor::FlatVec;
+
+/// One row as `(column, coefficient)` pairs.
+pub type Row = Vec<(usize, f64)>;
+
+/// A communication matrix over the stacked state `[x̃, x_1 … x_M]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommMatrix {
+    n: usize,
+    /// Only rows that differ from identity are stored.
+    rows: Vec<(usize, Row)>,
+}
+
+impl CommMatrix {
+    /// The identity (no communication — paper's "else" branches).
+    pub fn identity(n: usize) -> Self {
+        CommMatrix { n, rows: Vec::new() }
+    }
+
+    /// Dimension (M + 1: master slot plus workers).
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Number of non-identity rows (≈ application cost in vector ops).
+    pub fn touched_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Replace row `r`. Entries must be in-range; duplicates are summed.
+    pub fn set_row(&mut self, r: usize, entries: Row) -> Result<()> {
+        if r >= self.n {
+            return Err(Error::shape(format!("row {r} out of range {}", self.n)));
+        }
+        for &(c, _) in &entries {
+            if c >= self.n {
+                return Err(Error::shape(format!("col {c} out of range {}", self.n)));
+            }
+        }
+        self.rows.retain(|(rr, _)| *rr != r);
+        self.rows.push((r, entries));
+        Ok(())
+    }
+
+    /// Build from a dense matrix (tests / composition results).
+    pub fn from_dense(dense: &[Vec<f64>]) -> Result<Self> {
+        let n = dense.len();
+        let mut m = CommMatrix::identity(n);
+        for (r, row) in dense.iter().enumerate() {
+            if row.len() != n {
+                return Err(Error::shape("ragged dense matrix"));
+            }
+            let mut entries: Row = row
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(c, &v)| (c, v))
+                .collect();
+            let is_identity_row = entries == vec![(r, 1.0)];
+            if !is_identity_row {
+                entries.shrink_to_fit();
+                m.set_row(r, entries)?;
+            }
+        }
+        Ok(m)
+    }
+
+    /// Dense rendering (analysis / composition).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.n]; self.n];
+        for (i, row) in d.iter_mut().enumerate() {
+            row[i] = 1.0;
+        }
+        for (r, entries) in &self.rows {
+            let row = &mut d[*r];
+            row.iter_mut().for_each(|v| *v = 0.0);
+            for &(c, v) in entries {
+                row[c] += v;
+            }
+        }
+        d
+    }
+
+    /// Row coefficient lookup.
+    pub fn coeff(&self, r: usize, c: usize) -> f64 {
+        for (rr, entries) in &self.rows {
+            if *rr == r {
+                return entries.iter().filter(|(cc, _)| *cc == c).map(|(_, v)| v).sum();
+            }
+        }
+        if r == c {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Every row sums to 1 (the paper's no-exploding-gradients condition).
+    pub fn is_row_stochastic(&self, tol: f64) -> bool {
+        self.rows.iter().all(|(_, entries)| {
+            let s: f64 = entries.iter().map(|(_, v)| v).sum();
+            (s - 1.0).abs() <= tol && entries.iter().all(|(_, v)| *v >= -tol)
+        })
+    }
+
+    /// Apply to a stacked state of scalars (cheap analysis path).
+    pub fn apply_scalars(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.n {
+            return Err(Error::shape(format!("state dim {} vs matrix {}", x.len(), self.n)));
+        }
+        let mut out = x.to_vec();
+        for (r, entries) in &self.rows {
+            out[*r] = entries.iter().map(|&(c, v)| v * x[c]).sum();
+        }
+        Ok(out)
+    }
+
+    /// Apply to a stacked state of parameter vectors: `x'_r = Σ_c K_rc x_c`.
+    ///
+    /// Only non-identity rows are recomputed; untouched rows are moved, not
+    /// copied.
+    pub fn apply(&self, x: &Stacked) -> Result<Stacked> {
+        if x.dim() != self.n {
+            return Err(Error::shape(format!("state dim {} vs matrix {}", x.dim(), self.n)));
+        }
+        let mut out = x.clone();
+        for (r, entries) in &self.rows {
+            let mut acc = FlatVec::zeros(x.vec_len());
+            for &(c, v) in entries {
+                acc.axpy(v as f32, x.get(c))?;
+            }
+            *out.get_mut(*r) = acc;
+        }
+        Ok(out)
+    }
+
+    /// Matrix product `self * other` (apply `other` first).
+    pub fn compose(&self, other: &CommMatrix) -> Result<CommMatrix> {
+        if self.n != other.n {
+            return Err(Error::shape("compose: dim mismatch"));
+        }
+        let a = self.to_dense();
+        let b = other.to_dense();
+        let mut prod = vec![vec![0.0; self.n]; self.n];
+        for r in 0..self.n {
+            for k in 0..self.n {
+                let arv = a[r][k];
+                if arv == 0.0 {
+                    continue;
+                }
+                for c in 0..self.n {
+                    prod[r][c] += arv * b[k][c];
+                }
+            }
+        }
+        CommMatrix::from_dense(&prod)
+    }
+
+    /// Spectral-gap proxy: the second-largest row sum of `|K − (1/n)𝟙𝟙ᵀ|`
+    /// is expensive; instead report the maximum total-variation distance of
+    /// any row from uniform — a cheap upper-bound diagnostic used by the
+    /// consensus analysis in `harness::fig4`.
+    pub fn max_row_tv_from_uniform(&self) -> f64 {
+        let d = self.to_dense();
+        let u = 1.0 / self.n as f64;
+        d.iter()
+            .map(|row| 0.5 * row.iter().map(|v| (v - u).abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn random_stochastic(rng: &mut Rng, n: usize) -> CommMatrix {
+        let mut dense = vec![vec![0.0; n]; n];
+        for row in dense.iter_mut() {
+            let mut total = 0.0;
+            for v in row.iter_mut() {
+                *v = rng.f64();
+                total += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= total;
+            }
+        }
+        CommMatrix::from_dense(&dense).unwrap()
+    }
+
+    #[test]
+    fn identity_applies_as_noop() {
+        let k = CommMatrix::identity(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(k.apply_scalars(&x).unwrap(), x);
+        assert!(k.is_row_stochastic(0.0));
+        assert_eq!(k.touched_rows(), 0);
+    }
+
+    #[test]
+    fn set_row_and_coeff() {
+        let mut k = CommMatrix::identity(3);
+        k.set_row(1, vec![(0, 0.25), (2, 0.75)]).unwrap();
+        assert_eq!(k.coeff(1, 0), 0.25);
+        assert_eq!(k.coeff(1, 1), 0.0);
+        assert_eq!(k.coeff(0, 0), 1.0);
+        assert!(k.is_row_stochastic(1e-12));
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut k = CommMatrix::identity(3);
+        assert!(k.set_row(3, vec![]).is_err());
+        assert!(k.set_row(0, vec![(5, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        check("dense round trip", 25, |rng| {
+            let n = 2 + rng.below(6) as usize;
+            let k = random_stochastic(rng, n);
+            let k2 = CommMatrix::from_dense(&k.to_dense()).unwrap();
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let a = k.apply_scalars(&x).unwrap();
+            let b = k2.apply_scalars(&x).unwrap();
+            for (u, v) in a.iter().zip(&b) {
+                assert!((u - v).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn apply_matches_dense_multiply() {
+        check("sparse apply == dense multiply", 25, |rng| {
+            let n = 2 + rng.below(6) as usize;
+            let k = random_stochastic(rng, n);
+            let d = k.to_dense();
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let got = k.apply_scalars(&x).unwrap();
+            for r in 0..n {
+                let want: f64 = (0..n).map(|c| d[r][c] * x[c]).sum();
+                assert!((got[r] - want).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn row_stochasticity_preserved_under_composition() {
+        check("stochastic closed under product", 20, |rng| {
+            let n = 2 + rng.below(5) as usize;
+            let a = random_stochastic(rng, n);
+            let b = random_stochastic(rng, n);
+            let c = a.compose(&b).unwrap();
+            assert!(c.is_row_stochastic(1e-9));
+        });
+    }
+
+    #[test]
+    fn compose_order_is_self_times_other() {
+        // K2 ∘ K1 applied to x must equal K2(K1 x).
+        check("compose application order", 20, |rng| {
+            let n = 2 + rng.below(5) as usize;
+            let k1 = random_stochastic(rng, n);
+            let k2 = random_stochastic(rng, n);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let via_seq = k2.apply_scalars(&k1.apply_scalars(&x).unwrap()).unwrap();
+            let via_prod = k2.compose(&k1).unwrap().apply_scalars(&x).unwrap();
+            for (u, v) in via_seq.iter().zip(&via_prod) {
+                assert!((u - v).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn vector_apply_matches_scalar_apply_per_component() {
+        let mut rng = Rng::new(3);
+        let n = 4;
+        let k = random_stochastic(&mut rng, n);
+        let dim = 17;
+        let vecs: Vec<FlatVec> = (0..n).map(|_| FlatVec::randn(dim, 1.0, &mut rng)).collect();
+        let stacked = Stacked::from_vecs(vecs.clone()).unwrap();
+        let out = k.apply(&stacked).unwrap();
+        for j in 0..dim {
+            let x: Vec<f64> = vecs.iter().map(|v| v.as_slice()[j] as f64).collect();
+            let want = k.apply_scalars(&x).unwrap();
+            for r in 0..n {
+                assert!(
+                    (out.get(r).as_slice()[j] as f64 - want[r]).abs() < 1e-5,
+                    "component {j} row {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tv_from_uniform_diagnostics() {
+        let n = 4;
+        // identity rows are maximally far from uniform: TV = 1 - 1/n
+        let k = CommMatrix::identity(n);
+        assert!((k.max_row_tv_from_uniform() - 0.75).abs() < 1e-12);
+        // fully mixing matrix: TV = 0
+        let avg = CommMatrix::from_dense(&vec![vec![0.25; 4]; 4]).unwrap();
+        assert!(avg.max_row_tv_from_uniform() < 1e-12);
+    }
+}

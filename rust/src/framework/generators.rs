@@ -1,0 +1,229 @@
+//! `K^(t)` generators for every strategy the paper discusses (section 3-4).
+//!
+//! Conventions: stacked dimension `n = M + 1`, slot 0 is the master `x̃`,
+//! slots `1..=M` are workers.  All generated matrices are row-stochastic
+//! except the Downpour *send* matrix, which (as in the paper, section 3.3)
+//! models a gradient push and deliberately is not.
+
+use crate::error::Result;
+use crate::framework::comm_matrix::CommMatrix;
+
+/// Fully-synchronous averaging (Algorithm 1's communication step): every
+/// slot — master and workers — becomes the mean of the workers.
+pub fn allreduce(m: usize) -> Result<CommMatrix> {
+    let mut k = CommMatrix::identity(m + 1);
+    let row: Vec<(usize, f64)> = (1..=m).map(|c| (c, 1.0 / m as f64)).collect();
+    for r in 0..=m {
+        k.set_row(r, row.clone())?;
+    }
+    Ok(k)
+}
+
+/// PerSyn (paper section 3.1, Algorithm 2): identity except every `tau`-th
+/// step, when master and all workers are replaced by the worker mean.
+pub fn persyn(t: u64, tau: u64, m: usize) -> Result<CommMatrix> {
+    assert!(tau >= 1);
+    if t % tau == 0 {
+        allreduce(m)
+    } else {
+        Ok(CommMatrix::identity(m + 1))
+    }
+}
+
+/// EASGD (paper section 3.2): every `tau`-th step an elastic averaging;
+/// otherwise identity.
+///
+/// ```text
+/// x̃  ← (1 − Mα) x̃ + α Σ_m x_m
+/// x_m ← α x̃ + (1 − α) x_m
+/// ```
+pub fn easgd(t: u64, tau: u64, alpha: f64, m: usize) -> Result<CommMatrix> {
+    assert!(tau >= 1);
+    if t % tau != 0 {
+        return Ok(CommMatrix::identity(m + 1));
+    }
+    let mut k = CommMatrix::identity(m + 1);
+    let mut master_row: Vec<(usize, f64)> = vec![(0, 1.0 - m as f64 * alpha)];
+    master_row.extend((1..=m).map(|c| (c, alpha)));
+    k.set_row(0, master_row)?;
+    for r in 1..=m {
+        k.set_row(r, vec![(0, alpha), (r, 1.0 - alpha)])?;
+    }
+    Ok(k)
+}
+
+/// GoSGD exchange (paper eq. 8, corrected to match Algorithm 4 — see the
+/// module docs of [`crate::framework`]): receiver `r` blends convexly with
+/// sender `s`; the sender's row stays identity.  Master slot untouched
+/// (first row/column of the paper's matrix are zero — decentralized).
+///
+/// `w_s` is the weight *shipped with the message* (already halved),
+/// `w_r` the receiver's current weight.
+pub fn gossip_exchange(m: usize, s: usize, r: usize, w_s: f64, w_r: f64) -> Result<CommMatrix> {
+    assert!(s >= 1 && s <= m && r >= 1 && r <= m && s != r, "worker slots are 1-based");
+    let t = w_s / (w_s + w_r);
+    let mut k = CommMatrix::identity(m + 1);
+    k.set_row(r, vec![(r, 1.0 - t), (s, t)])?;
+    Ok(k)
+}
+
+/// Downpour *send* (paper section 3.3): master absorbs worker `m`'s
+/// variable contribution — `x̃ ← x̃ + x_m`, workers unchanged.  As in the
+/// paper this is NOT row-stochastic (it transfers an accumulated gradient,
+/// not an average); provided for framework completeness.
+pub fn downpour_send(m_total: usize, m: usize) -> Result<CommMatrix> {
+    assert!(m >= 1 && m <= m_total);
+    let mut k = CommMatrix::identity(m_total + 1);
+    k.set_row(0, vec![(0, 1.0), (m, 1.0)])?;
+    Ok(k)
+}
+
+/// Downpour *receive*: worker `m` fetches the master model — `x_m ← x̃`.
+pub fn downpour_receive(m_total: usize, m: usize) -> Result<CommMatrix> {
+    assert!(m >= 1 && m <= m_total);
+    let mut k = CommMatrix::identity(m_total + 1);
+    k.set_row(m, vec![(0, 1.0)])?;
+    Ok(k)
+}
+
+/// Messages exchanged when this matrix is applied — the paper's
+/// communication-cost accounting (section 2.1/5: PerSyn costs 2M messages
+/// per sync — M up, M down; EASGD 2M; GoSGD 1 per exchange).
+pub fn message_cost(kind: MatrixKind, m: usize) -> u64 {
+    match kind {
+        MatrixKind::Identity => 0,
+        MatrixKind::AllReduce | MatrixKind::PerSynSync => 2 * m as u64,
+        MatrixKind::EasgdSync => 2 * m as u64,
+        MatrixKind::GossipExchange => 1,
+        MatrixKind::DownpourSend | MatrixKind::DownpourReceive => 1,
+    }
+}
+
+/// Tag for [`message_cost`] accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatrixKind {
+    Identity,
+    AllReduce,
+    PerSynSync,
+    EasgdSync,
+    GossipExchange,
+    DownpourSend,
+    DownpourReceive,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::stacked::Stacked;
+    use crate::tensor::FlatVec;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn allreduce_averages_everything() {
+        let k = allreduce(4).unwrap();
+        assert!(k.is_row_stochastic(1e-12));
+        let x = vec![99.0, 1.0, 2.0, 3.0, 4.0];
+        let out = k.apply_scalars(&x).unwrap();
+        for v in out {
+            assert!((v - 2.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn persyn_fires_only_on_tau_boundary() {
+        let m = 3;
+        for t in 0..10u64 {
+            let k = persyn(t, 4, m).unwrap();
+            if t % 4 == 0 {
+                assert_eq!(k.touched_rows(), m + 1, "t={t}");
+            } else {
+                assert_eq!(k.touched_rows(), 0, "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn easgd_elastic_moves_toward_each_other() {
+        let alpha = 0.25;
+        let k = easgd(0, 1, alpha, 2).unwrap();
+        assert!(k.is_row_stochastic(1e-12));
+        // x̃=0, x_1=4, x_2=8
+        let out = k.apply_scalars(&[0.0, 4.0, 8.0]).unwrap();
+        // x̃' = (1-2α)·0 + α(4+8) = 3 ; x_1' = α·0 + (1-α)·4 = 3 ; x_2' = 6
+        assert!((out[0] - 3.0).abs() < 1e-12);
+        assert!((out[1] - 3.0).abs() < 1e-12);
+        assert!((out[2] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn easgd_identity_off_boundary() {
+        let k = easgd(3, 4, 0.25, 2).unwrap();
+        assert_eq!(k.touched_rows(), 0);
+    }
+
+    #[test]
+    fn gossip_exchange_is_algorithm4_blend() {
+        // w_r = 0.25, shipped w_s = 0.25 -> coefficients 1/2.
+        let k = gossip_exchange(4, 2, 3, 0.25, 0.25).unwrap();
+        assert!(k.is_row_stochastic(1e-12));
+        let out = k.apply_scalars(&[9.0, 0.0, 4.0, 8.0, 0.0]).unwrap();
+        assert_eq!(out[0], 9.0, "master untouched");
+        assert_eq!(out[2], 4.0, "sender unchanged (Algorithm 4)");
+        assert!((out[3] - 6.0).abs() < 1e-12, "receiver blends to midpoint");
+    }
+
+    #[test]
+    fn gossip_exchange_weighting() {
+        check("gossip blend coefficients", 40, |rng| {
+            let w_r = rng.f64() + 1e-3;
+            let w_s = rng.f64() + 1e-3;
+            let k = gossip_exchange(2, 1, 2, w_s, w_r).unwrap();
+            let t = w_s / (w_s + w_r);
+            assert!((k.coeff(2, 1) - t).abs() < 1e-12);
+            assert!((k.coeff(2, 2) - (1.0 - t)).abs() < 1e-12);
+            assert!(k.is_row_stochastic(1e-12));
+        });
+    }
+
+    #[test]
+    fn gossip_preserves_worker_mass_in_expectation_shape() {
+        // applying an equal-weight exchange twice (r<-s then s<-r) contracts
+        // the pair toward their mean — consensus direction.
+        let m = 2;
+        let x0 = Stacked::from_vecs(vec![
+            FlatVec::zeros(1),
+            FlatVec::from_vec(vec![0.0]),
+            FlatVec::from_vec(vec![8.0]),
+        ])
+        .unwrap();
+        let k1 = gossip_exchange(m, 2, 1, 0.5, 0.5).unwrap();
+        let x1 = k1.apply(&x0).unwrap();
+        assert_eq!(x1.worker(1).as_slice(), &[4.0]);
+        let e0 = x0.consensus_error().unwrap();
+        let e1 = x1.consensus_error().unwrap();
+        assert!(e1 < e0);
+    }
+
+    #[test]
+    fn downpour_matrices() {
+        let send = downpour_send(3, 2).unwrap();
+        assert!(!send.is_row_stochastic(1e-12));
+        let out = send.apply_scalars(&[1.0, 10.0, 20.0, 30.0]).unwrap();
+        assert_eq!(out[0], 21.0);
+        assert_eq!(out[2], 20.0);
+
+        let recv = downpour_receive(3, 2).unwrap();
+        assert!(recv.is_row_stochastic(1e-12));
+        let out = recv.apply_scalars(&[1.0, 10.0, 20.0, 30.0]).unwrap();
+        assert_eq!(out[2], 1.0);
+        assert_eq!(out[0], 1.0);
+    }
+
+    #[test]
+    fn message_costs_match_paper_accounting() {
+        assert_eq!(message_cost(MatrixKind::GossipExchange, 8), 1);
+        assert_eq!(message_cost(MatrixKind::PerSynSync, 8), 16);
+        assert_eq!(message_cost(MatrixKind::EasgdSync, 8), 16);
+        assert_eq!(message_cost(MatrixKind::Identity, 8), 0);
+    }
+}

@@ -1,0 +1,44 @@
+//! The paper's section-3 framework: distributed SGD as a sequence of
+//! communication matrices.
+//!
+//! Section 3 shows that every distributed-SGD variant is the recursion
+//!
+//! ```text
+//! x^(t+1/2) = x^(t) - η v^(t)          (local computation)
+//! x^(t+1)   = K^(t) x^(t+1/2)          (communication)
+//! ```
+//!
+//! over the stacked variable `x = [x̃, x_1 … x_M]` (master slot 0, then the
+//! M workers), where each `K^(t)` is row-stochastic.  This module makes
+//! that formalism executable:
+//!
+//! * [`comm_matrix::CommMatrix`] — sparse row representation, application
+//!   to stacked states, composition, stochasticity checks.
+//! * [`generators`] — the `K^(t)` sequences for PerSyn, EASGD, Downpour,
+//!   AllReduce, and the GoSGD exchange (paper eq. 8).
+//! * [`stacked::Stacked`] — the `[x̃, x_1 … x_M]` state vector.
+//!
+//! The matrix framework is used two ways: as an analysis tool (consensus
+//! spectra, communication-cost accounting) and as a *cross-check* — the
+//! integration tests replay a strategy's event log through its matrix
+//! sequence and assert the algorithmic implementation produced the same
+//! states (see `rust/tests/framework_crosscheck.rs`).
+//!
+//! ### A note on paper eq. (8)
+//!
+//! Equation 8 writes the GoSGD exchange as
+//! `I + t·e_r e_sᵀ + (t − 1)·e_s e_sᵀ` with `t = w_s/(w_s+w_r)`, whose row
+//! `r` sums to `1 + t` and row `s` scales the *sender's* variable — which
+//! contradicts Algorithm 4 (the sender's `x_s` is unchanged; the receiver
+//! blends convexly).  We implement the Algorithm-4-consistent matrix
+//! `I + t·e_r e_sᵀ − t·e_r e_rᵀ` (row `r` = convex blend, row `s` =
+//! identity), which is row-stochastic and matches the code the paper
+//! actually runs; DESIGN.md records the discrepancy.
+
+pub mod analysis;
+pub mod comm_matrix;
+pub mod generators;
+pub mod stacked;
+
+pub use comm_matrix::CommMatrix;
+pub use stacked::Stacked;

@@ -1,0 +1,162 @@
+//! The stacked state `x = [x̃, x_1 … x_M]` of the section-3 framework.
+//!
+//! Slot 0 is the master/test variable `x̃`; slots `1..=M` are the workers'
+//! local variables.  Decentralized strategies (GoSGD) never touch slot 0 —
+//! their matrices keep it at identity and the "master" value is defined
+//! post-hoc as the worker mean.
+
+use crate::error::{Error, Result};
+use crate::tensor::FlatVec;
+
+/// Stacked parameter state for matrix-framework replay and analysis.
+#[derive(Clone, Debug)]
+pub struct Stacked {
+    vecs: Vec<FlatVec>,
+}
+
+impl Stacked {
+    /// All slots zero: `M + 1` slots of `vec_len` components.
+    pub fn zeros(workers: usize, vec_len: usize) -> Self {
+        Stacked { vecs: vec![FlatVec::zeros(vec_len); workers + 1] }
+    }
+
+    /// Replicate one initial vector into the master and all worker slots
+    /// (the paper's common initialization `x_m = x`).
+    pub fn replicate(workers: usize, init: &FlatVec) -> Self {
+        Stacked { vecs: vec![init.clone(); workers + 1] }
+    }
+
+    /// Build from explicit slot vectors (slot 0 = master).
+    pub fn from_vecs(vecs: Vec<FlatVec>) -> Result<Self> {
+        let first_len = vecs
+            .first()
+            .map(|v| v.len())
+            .ok_or_else(|| Error::shape("stacked state needs at least one slot"))?;
+        if vecs.iter().any(|v| v.len() != first_len) {
+            return Err(Error::shape("ragged stacked state"));
+        }
+        Ok(Stacked { vecs })
+    }
+
+    /// Number of slots (M + 1).
+    pub fn dim(&self) -> usize {
+        self.vecs.len()
+    }
+
+    /// Number of workers (slots minus the master).
+    pub fn workers(&self) -> usize {
+        self.vecs.len() - 1
+    }
+
+    /// Component count of each slot vector.
+    pub fn vec_len(&self) -> usize {
+        self.vecs[0].len()
+    }
+
+    pub fn get(&self, slot: usize) -> &FlatVec {
+        &self.vecs[slot]
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> &mut FlatVec {
+        &mut self.vecs[slot]
+    }
+
+    /// Master slot `x̃`.
+    pub fn master(&self) -> &FlatVec {
+        &self.vecs[0]
+    }
+
+    /// Worker slot `x_m` (1-based worker index `m ∈ 1..=M`).
+    pub fn worker(&self, m: usize) -> &FlatVec {
+        debug_assert!(m >= 1 && m < self.vecs.len());
+        &self.vecs[m]
+    }
+
+    pub fn worker_mut(&mut self, m: usize) -> &mut FlatVec {
+        debug_assert!(m >= 1 && m < self.vecs.len());
+        &mut self.vecs[m]
+    }
+
+    /// Mean of the worker slots (the consensus target x̄ and the model the
+    /// paper returns at line 8 of Algorithm 1).
+    pub fn worker_mean(&self) -> Result<FlatVec> {
+        let refs: Vec<&FlatVec> = self.vecs[1..].iter().collect();
+        FlatVec::mean_of(&refs)
+    }
+
+    /// Consensus error `ε = Σ_m ‖x_m − x̄‖²` (paper section 5.2).
+    pub fn consensus_error(&self) -> Result<f64> {
+        let mean = self.worker_mean()?;
+        let mut eps = 0.0;
+        for v in &self.vecs[1..] {
+            eps += v.dist_sq(&mean)?;
+        }
+        Ok(eps)
+    }
+
+    /// Apply the local-computation half-step `x_m ← x_m − η v_m` for one
+    /// worker (`v` indexed by worker slot; slot 0 never receives gradients).
+    pub fn local_step(&mut self, m: usize, grad: &FlatVec, eta: f32) -> Result<()> {
+        if m == 0 || m >= self.vecs.len() {
+            return Err(Error::shape(format!("local_step on slot {m}")));
+        }
+        self.vecs[m].axpy(-eta, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn replicate_makes_all_equal() {
+        let mut rng = Rng::new(0);
+        let init = FlatVec::randn(32, 1.0, &mut rng);
+        let s = Stacked::replicate(4, &init);
+        assert_eq!(s.dim(), 5);
+        assert_eq!(s.workers(), 4);
+        for i in 0..5 {
+            assert_eq!(s.get(i).as_slice(), init.as_slice());
+        }
+        assert!(s.consensus_error().unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn worker_mean_excludes_master() {
+        let mut s = Stacked::zeros(2, 2);
+        *s.get_mut(0) = FlatVec::from_vec(vec![100.0, 100.0]); // master ignored
+        *s.get_mut(1) = FlatVec::from_vec(vec![1.0, 3.0]);
+        *s.get_mut(2) = FlatVec::from_vec(vec![3.0, 5.0]);
+        let mean = s.worker_mean().unwrap();
+        assert_eq!(mean.as_slice(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn consensus_error_formula() {
+        let mut s = Stacked::zeros(2, 1);
+        *s.worker_mut(1) = FlatVec::from_vec(vec![0.0]);
+        *s.worker_mut(2) = FlatVec::from_vec(vec![2.0]);
+        // mean = 1.0; eps = 1 + 1 = 2
+        assert!((s.consensus_error().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn local_step_only_touches_one_worker() {
+        let mut s = Stacked::replicate(3, &FlatVec::from_vec(vec![1.0, 1.0]));
+        let g = FlatVec::from_vec(vec![1.0, 2.0]);
+        s.local_step(2, &g, 0.5).unwrap();
+        assert_eq!(s.worker(2).as_slice(), &[0.5, 0.0]);
+        assert_eq!(s.worker(1).as_slice(), &[1.0, 1.0]);
+        assert_eq!(s.master().as_slice(), &[1.0, 1.0]);
+        assert!(s.local_step(0, &g, 0.5).is_err());
+        assert!(s.local_step(4, &g, 0.5).is_err());
+    }
+
+    #[test]
+    fn ragged_input_rejected() {
+        let vecs = vec![FlatVec::zeros(2), FlatVec::zeros(3)];
+        assert!(Stacked::from_vecs(vecs).is_err());
+        assert!(Stacked::from_vecs(vec![]).is_err());
+    }
+}

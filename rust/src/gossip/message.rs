@@ -1,0 +1,78 @@
+//! The gossip message: `(x_s, w_s)` plus accounting metadata.
+//!
+//! The paper (section 4.1) encapsulates the sender's parameter vector and
+//! its halved weight in a single message.  The parameter payload is shared
+//! via `Arc` so pushing one snapshot to several queues (or keeping it in a
+//! queue while the sender keeps training) never copies the vector — a real
+//! concern at 10⁶-10⁸ floats.
+
+use std::sync::Arc;
+
+use crate::gossip::weights::SumWeight;
+use crate::tensor::FlatVec;
+
+/// One gossip message from `sender` (paper Algorithm 4, `PushMessage`).
+#[derive(Clone, Debug)]
+pub struct Message {
+    /// Snapshot of the sender's parameters at send time.
+    pub params: Arc<FlatVec>,
+    /// The sender's halved weight shipped with the snapshot.
+    pub weight: SumWeight,
+    /// Worker id of the sender (diagnostics / staleness accounting).
+    pub sender: usize,
+    /// Sender's local step count at send time (staleness accounting).
+    pub sent_at_step: u64,
+}
+
+impl Message {
+    pub fn new(params: Arc<FlatVec>, weight: SumWeight, sender: usize, sent_at_step: u64) -> Self {
+        Message { params, weight, sender, sent_at_step }
+    }
+
+    /// Payload size in bytes (throughput accounting; a message is the
+    /// parameter vector + one f64 weight + headers).
+    pub fn wire_bytes(&self) -> usize {
+        self.params.len() * std::mem::size_of::<f32>() + 8 + 16
+    }
+
+    /// Staleness in local steps relative to the receiver's step counter.
+    pub fn staleness(&self, receiver_step: u64) -> u64 {
+        receiver_step.saturating_sub(self.sent_at_step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(n: usize, sent: u64) -> Message {
+        Message::new(
+            Arc::new(FlatVec::zeros(n)),
+            SumWeight::from_value(0.5),
+            3,
+            sent,
+        )
+    }
+
+    #[test]
+    fn wire_bytes_counts_payload() {
+        let m = msg(1000, 0);
+        assert_eq!(m.wire_bytes(), 4000 + 24);
+    }
+
+    #[test]
+    fn staleness_saturates() {
+        let m = msg(4, 10);
+        assert_eq!(m.staleness(15), 5);
+        assert_eq!(m.staleness(5), 0);
+    }
+
+    #[test]
+    fn arc_payload_is_shared_not_copied() {
+        let params = Arc::new(FlatVec::zeros(1 << 20));
+        let a = Message::new(params.clone(), SumWeight::from_value(0.1), 0, 0);
+        let b = a.clone();
+        assert!(Arc::ptr_eq(&a.params, &b.params));
+        assert_eq!(Arc::strong_count(&params), 3);
+    }
+}

@@ -1,0 +1,24 @@
+//! Sum-weight randomized gossip substrate (paper section 4).
+//!
+//! GoSGD removes the parameter server by exchanging `(x, w)` pairs peer to
+//! peer.  This module provides the protocol pieces, independent of any
+//! training loop:
+//!
+//! * [`weights`] — the sum-weight bookkeeping (halve on send, add on
+//!   receive) whose global conservation drives consensus correctness
+//!   (paper Lemma 1 / Appendix B).
+//! * [`message`] — the `(x_s, w_s)` message and its accounting metadata.
+//! * [`queue`] — the per-worker concurrent mailbox of Algorithm 3/4.
+//! * [`peer`] — peer-selection policies (the paper draws uniformly from
+//!   `{1..M} \ {s}`; ring and small-world variants are provided for the
+//!   topology ablation).
+
+pub mod message;
+pub mod peer;
+pub mod queue;
+pub mod weights;
+
+pub use message::Message;
+pub use peer::PeerSelector;
+pub use queue::MessageQueue;
+pub use weights::SumWeight;

@@ -1,0 +1,116 @@
+//! Peer-selection policies.
+//!
+//! The paper draws the receiver `r` uniformly from `{1..M} \ {s}` (section
+//! 4).  Uniform selection gives the complete-graph gossip whose spectral
+//! gap yields exponential consensus; restricted topologies trade mixing
+//! speed for locality.  [`PeerSelector::Ring`] and
+//! [`PeerSelector::SmallWorld`] are provided for the topology ablation
+//! bench (`cargo bench --bench strategy_e2e`).
+
+use crate::util::rng::Rng;
+
+/// How a sender picks the receiver of a gossip message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PeerSelector {
+    /// Uniform over all other workers (the paper's choice).
+    Uniform,
+    /// Next worker on a ring: `(s + 1) mod M` — deterministic, minimal
+    /// connectivity, slowest mixing.
+    Ring,
+    /// Ring neighbour with probability `1 - q`, uniform long-range shortcut
+    /// with probability `q` (Watts–Strogatz flavoured).
+    SmallWorld { q: f64 },
+}
+
+impl PeerSelector {
+    /// Pick a receiver for sender `s` among `m` workers.
+    pub fn pick(&self, m: usize, s: usize, rng: &mut Rng) -> usize {
+        assert!(m >= 2, "need at least two workers");
+        assert!(s < m);
+        match self {
+            PeerSelector::Uniform => rng.peer(m, s),
+            PeerSelector::Ring => (s + 1) % m,
+            PeerSelector::SmallWorld { q } => {
+                if rng.bernoulli(*q) {
+                    rng.peer(m, s)
+                } else {
+                    (s + 1) % m
+                }
+            }
+        }
+    }
+
+    /// Parse from a CLI string: `uniform`, `ring`, `smallworld:0.2`.
+    pub fn parse(text: &str) -> Option<PeerSelector> {
+        match text {
+            "uniform" => Some(PeerSelector::Uniform),
+            "ring" => Some(PeerSelector::Ring),
+            _ => text
+                .strip_prefix("smallworld:")
+                .and_then(|q| q.parse().ok())
+                .filter(|q| (0.0..=1.0).contains(q))
+                .map(|q| PeerSelector::SmallWorld { q }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn uniform_never_self_and_covers() {
+        check("uniform peer validity", 30, |rng| {
+            let m = 2 + rng.below(10) as usize;
+            let s = rng.below(m as u64) as usize;
+            let sel = PeerSelector::Uniform;
+            for _ in 0..50 {
+                let r = sel.pick(m, s, rng);
+                assert!(r < m && r != s);
+            }
+        });
+    }
+
+    #[test]
+    fn ring_is_deterministic_successor() {
+        let mut rng = Rng::new(0);
+        let sel = PeerSelector::Ring;
+        assert_eq!(sel.pick(8, 3, &mut rng), 4);
+        assert_eq!(sel.pick(8, 7, &mut rng), 0);
+    }
+
+    #[test]
+    fn smallworld_mixes_ring_and_uniform() {
+        let mut rng = Rng::new(1);
+        let sel = PeerSelector::SmallWorld { q: 0.5 };
+        let m = 8;
+        let s = 2;
+        let mut ring_hits = 0;
+        let mut other = 0;
+        for _ in 0..2000 {
+            let r = sel.pick(m, s, &mut rng);
+            assert!(r != s && r < m);
+            if r == 3 {
+                ring_hits += 1;
+            } else {
+                other += 1;
+            }
+        }
+        // ring neighbour gets ~0.5 + 0.5/7 of the mass, others only 0.5/7
+        assert!(ring_hits > 900, "{ring_hits}");
+        assert!(other > 600, "{other}");
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(PeerSelector::parse("uniform"), Some(PeerSelector::Uniform));
+        assert_eq!(PeerSelector::parse("ring"), Some(PeerSelector::Ring));
+        assert_eq!(
+            PeerSelector::parse("smallworld:0.25"),
+            Some(PeerSelector::SmallWorld { q: 0.25 })
+        );
+        assert_eq!(PeerSelector::parse("smallworld:2.0"), None);
+        assert_eq!(PeerSelector::parse("mesh"), None);
+    }
+}

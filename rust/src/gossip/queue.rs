@@ -1,0 +1,236 @@
+//! Per-worker concurrent mailbox (paper Algorithm 3: "each worker is
+//! endowed with a queue q_m which can be concurrently accessed by all
+//! workers").
+//!
+//! Requirements straight from the paper's protocol:
+//!
+//! * **Non-blocking push** — a sender must never wait for the receiver
+//!   (asymmetric gossip; the whole point of section 4).
+//! * **Batch drain** — the receiver processes *all* pending messages before
+//!   its next gradient step (`ProcessMessages` loops until empty).
+//! * **FIFO** per queue — messages blend in arrival order.
+//!
+//! Implementation: `Mutex<VecDeque>`; the lock is held for O(1) pointer
+//! moves only (payloads are `Arc`ed), so contention is negligible compared
+//! to a gradient step.  An optional bound sheds the *oldest* message on
+//! overflow — under sum-weight semantics dropping a message would destroy
+//! weight mass, so instead of dropping, `push` coalesces: overflow folds
+//! the oldest two messages into one blended message, preserving total
+//! weight exactly.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::gossip::message::Message;
+use crate::gossip::weights::SumWeight;
+use crate::tensor::FlatVec;
+
+/// Statistics counters for one queue (all monotonic).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct QueueStats {
+    pub pushed: u64,
+    pub drained: u64,
+    pub coalesced: u64,
+    pub max_depth: usize,
+}
+
+/// A worker's mailbox.
+#[derive(Debug)]
+pub struct MessageQueue {
+    inner: Mutex<Inner>,
+    capacity: Option<usize>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    deque: VecDeque<Message>,
+    stats: QueueStats,
+}
+
+impl MessageQueue {
+    /// Unbounded queue (the paper's model).
+    pub fn unbounded() -> Self {
+        MessageQueue { inner: Mutex::new(Inner { deque: VecDeque::new(), stats: QueueStats::default() }), capacity: None }
+    }
+
+    /// Bounded queue that *coalesces* (never drops) on overflow.
+    pub fn bounded(capacity: usize) -> Self {
+        assert!(capacity >= 2, "coalescing bound needs capacity >= 2");
+        MessageQueue { inner: Mutex::new(Inner { deque: VecDeque::new(), stats: QueueStats::default() }), capacity: Some(capacity) }
+    }
+
+    /// Non-blocking push (paper `PushMessage`). Never fails, never waits.
+    pub fn push(&self, msg: Message) {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        g.deque.push_back(msg);
+        g.stats.pushed += 1;
+        if let Some(cap) = self.capacity {
+            if g.deque.len() > cap {
+                // Fold the two oldest messages into one: weights add, the
+                // parameter payload blends by the sum-weight rule, so the
+                // receiver observes exactly the same final state as if it
+                // had processed both (associativity of the blend).
+                let a = g.deque.pop_front().expect("len > cap >= 2");
+                let b = g.deque.pop_front().expect("len > cap >= 2");
+                g.deque.push_front(coalesce(a, b));
+                g.stats.coalesced += 1;
+            }
+        }
+        let depth = g.deque.len();
+        if depth > g.stats.max_depth {
+            g.stats.max_depth = depth;
+        }
+    }
+
+    /// Drain everything currently queued (paper `ProcessMessages`).
+    pub fn drain(&self) -> Vec<Message> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        let out: Vec<Message> = g.deque.drain(..).collect();
+        g.stats.drained += out.len() as u64;
+        out
+    }
+
+    /// Current depth (diagnostics only; racy by nature).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").deque.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.inner.lock().expect("queue poisoned").stats
+    }
+}
+
+/// Fold message `a` into message `b` preserving total weight:
+/// the combined payload is the sum-weight blend of the two payloads.
+fn coalesce(a: Message, b: Message) -> Message {
+    let w_a = a.weight.value();
+    let w_b = b.weight.value();
+    let mut blended: FlatVec = (*a.params).clone();
+    // blended <- (w_a * a + w_b * b) / (w_a + w_b)
+    blended
+        .mix_from(&b.params, w_a, w_b)
+        .expect("coalesce: length mismatch inside one queue");
+    Message::new(
+        std::sync::Arc::new(blended),
+        SumWeight::from_value(w_a + w_b),
+        b.sender,
+        b.sent_at_step,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn msg(val: f32, w: f64, sender: usize) -> Message {
+        Message::new(
+            Arc::new(FlatVec::from_vec(vec![val; 8])),
+            SumWeight::from_value(w),
+            sender,
+            0,
+        )
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = MessageQueue::unbounded();
+        q.push(msg(1.0, 0.1, 0));
+        q.push(msg(2.0, 0.1, 1));
+        q.push(msg(3.0, 0.1, 2));
+        let out = q.drain();
+        let vals: Vec<f32> = out.iter().map(|m| m.params.as_slice()[0]).collect();
+        assert_eq!(vals, vec![1.0, 2.0, 3.0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_empties_queue() {
+        let q = MessageQueue::unbounded();
+        q.push(msg(1.0, 0.5, 0));
+        assert_eq!(q.drain().len(), 1);
+        assert_eq!(q.drain().len(), 0);
+    }
+
+    #[test]
+    fn stats_track_push_drain() {
+        let q = MessageQueue::unbounded();
+        for i in 0..5 {
+            q.push(msg(i as f32, 0.1, 0));
+        }
+        q.drain();
+        let s = q.stats();
+        assert_eq!(s.pushed, 5);
+        assert_eq!(s.drained, 5);
+        assert_eq!(s.max_depth, 5);
+        assert_eq!(s.coalesced, 0);
+    }
+
+    #[test]
+    fn bounded_coalesces_preserving_weight() {
+        let q = MessageQueue::bounded(2);
+        q.push(msg(0.0, 0.25, 0));
+        q.push(msg(1.0, 0.25, 1));
+        q.push(msg(2.0, 0.5, 2)); // overflow: folds the two oldest
+        let out = q.drain();
+        assert_eq!(out.len(), 2);
+        let total_w: f64 = out.iter().map(|m| m.weight.value()).sum();
+        assert!((total_w - 1.0).abs() < 1e-12, "weight mass lost: {total_w}");
+        // Folded payload is the weight-blend of 0.0 and 1.0 at equal weight.
+        assert!((out[0].params.as_slice()[0] - 0.5).abs() < 1e-6);
+        assert_eq!(q.stats().coalesced, 1);
+    }
+
+    #[test]
+    fn coalesced_blend_equals_sequential_processing() {
+        // Receiver state after absorbing (m1 then m2) must equal absorbing
+        // the coalesced fold — associativity of the sum-weight blend.
+        let mut direct = FlatVec::from_vec(vec![10.0; 8]);
+        let mut w_direct = SumWeight::from_value(0.5);
+        let m1 = msg(2.0, 0.25, 0);
+        let m2 = msg(6.0, 0.25, 1);
+        let t1 = w_direct.absorb(m1.weight);
+        direct.mix_from(&m1.params, 1.0 - t1, t1).unwrap();
+        let t2 = w_direct.absorb(m2.weight);
+        direct.mix_from(&m2.params, 1.0 - t2, t2).unwrap();
+
+        let mut folded = FlatVec::from_vec(vec![10.0; 8]);
+        let mut w_folded = SumWeight::from_value(0.5);
+        let c = coalesce(msg(2.0, 0.25, 0), msg(6.0, 0.25, 1));
+        let t = w_folded.absorb(c.weight);
+        folded.mix_from(&c.params, 1.0 - t, t).unwrap();
+
+        assert!((w_direct.value() - w_folded.value()).abs() < 1e-12);
+        for i in 0..8 {
+            assert!(
+                (direct.as_slice()[i] - folded.as_slice()[i]).abs() < 1e-5,
+                "{:?} vs {:?}",
+                direct.as_slice(),
+                folded.as_slice()
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_pushers_lose_nothing() {
+        let q = Arc::new(MessageQueue::unbounded());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..250 {
+                    q.push(msg(i as f32, 0.001, t));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(q.drain().len(), 1000);
+        assert_eq!(q.stats().pushed, 1000);
+    }
+}

@@ -1,0 +1,130 @@
+//! Figure 1: training loss vs iterations — PerSyn vs GoSGD across `p`.
+//!
+//! Paper section 5.1: both methods train the CIFAR CNN with M = 8,
+//! lr = 0.1, wd = 1e-4, at exchange frequencies p ∈ {0.01, …, 0.4}.
+//! Expected shape: PerSyn slightly faster *per iteration*; both nearly
+//! insensitive to `p` down to 0.01; all far better than no communication.
+//!
+//! "Iteration" on the x-axis is a *worker-local* step: for the synchronous
+//! PerSyn one engine round = one iteration; for asynchronous GoSGD, M
+//! engine ticks = one iteration (each worker advanced once on average).
+
+use std::path::Path;
+
+use crate::config::{RunConfig, StrategyKind};
+use crate::coordinator::Coordinator;
+use crate::error::Result;
+use crate::metrics::CsvWriter;
+
+/// Configuration for the Fig. 1 sweep.
+#[derive(Clone, Debug)]
+pub struct Fig1Config {
+    pub artifacts_dir: std::path::PathBuf,
+    pub model: String,
+    pub workers: usize,
+    /// Worker-local iterations per series.
+    pub iterations: u64,
+    /// Exchange probabilities to sweep.
+    pub ps: Vec<f64>,
+    pub seed: u64,
+    /// EMA smoothing for the reported curve.
+    pub ema_beta: f64,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Fig1Config {
+            artifacts_dir: "artifacts".into(),
+            model: "tiny".into(),
+            workers: 8,
+            iterations: 150,
+            ps: vec![0.01, 0.4],
+            seed: 0,
+            ema_beta: 0.9,
+        }
+    }
+}
+
+/// One strategy's loss-vs-iteration series.
+#[derive(Clone, Debug)]
+pub struct LossSeries {
+    pub label: String,
+    /// `(worker_iteration, ema_loss)`.
+    pub points: Vec<(u64, f64)>,
+    pub messages: u64,
+    pub final_loss: f64,
+}
+
+impl LossSeries {
+    /// Iterations to reach `threshold` (paper's convergence-speed metric).
+    pub fn iters_to(&self, threshold: f64) -> Option<u64> {
+        self.points.iter().find(|(_, l)| *l < threshold).map(|(i, _)| *i)
+    }
+}
+
+fn run_one(base: &Fig1Config, strategy: StrategyKind) -> Result<LossSeries> {
+    let is_async = matches!(strategy, StrategyKind::GoSgd { .. });
+    let mut cfg = RunConfig::default();
+    cfg.artifacts_dir = base.artifacts_dir.clone();
+    cfg.model = base.model.clone();
+    cfg.workers = base.workers;
+    cfg.strategy = strategy.clone();
+    cfg.seed = base.seed;
+    cfg.eval_every = 0;
+    // Async engines need M ticks per worker-iteration.
+    cfg.steps = if is_async {
+        base.iterations * base.workers as u64
+    } else {
+        base.iterations
+    };
+    let rep = Coordinator::new(cfg)?.run()?;
+
+    let ema = rep.train_loss.ema(base.ema_beta);
+    let scale = if is_async { base.workers as u64 } else { 1 };
+    let points: Vec<(u64, f64)> = ema
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| (*i as u64) % scale == 0)
+        .map(|(i, &l)| (i as u64 / scale, l))
+        .collect();
+    Ok(LossSeries {
+        label: strategy.tag(),
+        final_loss: *ema.last().unwrap_or(&f64::NAN),
+        points,
+        messages: rep.messages,
+    })
+}
+
+/// Run the PerSyn-vs-GoSGD sweep; CSV columns `series,iteration,loss`.
+pub fn run(cfg: &Fig1Config, out: Option<&Path>) -> Result<Vec<LossSeries>> {
+    let mut series = Vec::new();
+    for &p in &cfg.ps {
+        series.push(run_one(cfg, StrategyKind::GoSgd { p })?);
+        series.push(run_one(
+            cfg,
+            StrategyKind::PerSyn { tau: (1.0 / p).round().max(1.0) as u64 },
+        )?);
+    }
+    if let Some(path) = out {
+        let mut csv = CsvWriter::create(path, &["series", "iteration", "loss"])?;
+        for s in &series {
+            for &(i, l) in &s.points {
+                csv.write_tagged_row(&s.label, &[i as f64, l])?;
+            }
+        }
+        csv.flush()?;
+    }
+    Ok(series)
+}
+
+/// Console table: final loss + messages per series.
+pub fn format_table(series: &[LossSeries]) -> String {
+    let mut out = String::from("series                  final_loss    messages\n");
+    for s in series {
+        out.push_str(&format!(
+            "{:<22} {:>11.4}  {:>10}\n",
+            s.label, s.final_loss, s.messages
+        ));
+    }
+    out
+}

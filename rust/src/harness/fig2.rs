@@ -1,0 +1,222 @@
+//! Figure 2: training loss vs wall clock — GoSGD vs EASGD at p = 0.02.
+//!
+//! Paper section 5.1: "GoSGD is significantly faster than EASGD", because
+//! (a) its updates never block and (b) it needs half the messages at the
+//! same exchange rate.  The testbed is a single CPU core, so wall time is
+//! *simulated* by the discrete-event engine ([`crate::sim::des`]) with
+//! GPU-era compute/latency ratios, while the gradients are real (PJRT
+//! model or the quadratic proxy) — see DESIGN.md §Substitutions.
+
+use std::path::Path;
+
+use crate::data::{BatchSampler, SyntheticCifar};
+use crate::error::Result;
+use crate::metrics::CsvWriter;
+use crate::runtime::{ModelRuntime, PjrtSource};
+use crate::sim::{DesEngine, DesStrategy, TimeModel};
+use crate::strategies::grad::{GradSource, QuadraticSource};
+use crate::tensor::FlatVec;
+
+/// Gradient backend for the wall-clock experiment.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fig2Backend {
+    /// Real Layer-2 model via PJRT (artifact dir + model name).
+    Pjrt { artifacts_dir: std::path::PathBuf, model: String },
+    /// Noisy quadratic (no artifacts needed; shape-faithful).
+    Quadratic { dim: usize, sigma: f32 },
+}
+
+/// Configuration for the Fig. 2 comparison.
+#[derive(Clone, Debug)]
+pub struct Fig2Config {
+    pub backend: Fig2Backend,
+    pub workers: usize,
+    /// Exchange probability (paper: 0.02).
+    pub p: f64,
+    /// Simulated horizon in seconds.
+    pub horizon_secs: f64,
+    pub time_model: TimeModel,
+    pub seed: u64,
+    pub eta: f32,
+    pub weight_decay: f32,
+    /// EMA smoothing for the loss trace.
+    pub ema_beta: f64,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Fig2Config {
+            backend: Fig2Backend::Quadratic { dim: 1024, sigma: 0.2 },
+            workers: 8,
+            p: 0.02,
+            horizon_secs: 120.0,
+            time_model: TimeModel::paper_like(),
+            seed: 0,
+            eta: 1.0,
+            weight_decay: 0.0,
+            ema_beta: 0.95,
+        }
+    }
+}
+
+/// One wall-clock series.
+#[derive(Clone, Debug)]
+pub struct WallClockSeries {
+    pub label: String,
+    /// `(sim_seconds, ema_loss)`.
+    pub points: Vec<(f64, f64)>,
+    pub steps: u64,
+    pub messages: u64,
+    pub blocked_secs: f64,
+}
+
+impl WallClockSeries {
+    /// Simulated seconds to reach `threshold` loss.
+    pub fn secs_to(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|(_, l)| *l < threshold).map(|(t, _)| *t)
+    }
+}
+
+fn ema(points: &[(f64, f64)], beta: f64) -> Vec<(f64, f64)> {
+    let mut out = Vec::with_capacity(points.len());
+    let mut acc = None;
+    for &(t, v) in points {
+        let next = match acc {
+            None => v,
+            Some(prev) => beta * prev + (1.0 - beta) * v,
+        };
+        out.push((t, next));
+        acc = Some(next);
+    }
+    out
+}
+
+fn run_strategy(cfg: &Fig2Config, strategy: DesStrategy, label: &str) -> Result<WallClockSeries> {
+    let run_with = |grad: &mut dyn GradSource, init: &FlatVec| -> Result<WallClockSeries> {
+        let mut eng = DesEngine::new(
+            strategy.clone(),
+            cfg.time_model.clone(),
+            cfg.workers,
+            init,
+            cfg.eta,
+            cfg.weight_decay,
+            cfg.seed,
+        );
+        eng.run(grad, cfg.horizon_secs)?;
+        let rep = eng.report();
+        Ok(WallClockSeries {
+            label: label.to_string(),
+            points: ema(&rep.trace, cfg.ema_beta),
+            steps: rep.steps,
+            messages: rep.messages,
+            blocked_secs: rep.blocked_secs,
+        })
+    };
+
+    match &cfg.backend {
+        Fig2Backend::Quadratic { dim, sigma } => {
+            let mut grad = QuadraticSource::new(*dim, *sigma, cfg.seed ^ 0xF162);
+            let init = FlatVec::zeros(*dim);
+            run_with(&mut grad, &init)
+        }
+        Fig2Backend::Pjrt { artifacts_dir, model } => {
+            let runtime = ModelRuntime::load(artifacts_dir.join(model))?;
+            let sampler = BatchSampler::new(
+                SyntheticCifar::new(cfg.seed, 4.0, true),
+                runtime.manifest().batch,
+                cfg.workers,
+            );
+            let mut grad = PjrtSource::new(&runtime, sampler, cfg.workers);
+            let init = runtime.manifest().load_init_params()?;
+            run_with(&mut grad, &init)
+        }
+    }
+}
+
+/// Run GoSGD vs EASGD (and the PerSyn reference) under simulated time.
+pub fn run(cfg: &Fig2Config, out: Option<&Path>) -> Result<Vec<WallClockSeries>> {
+    let tau = (1.0 / cfg.p).round().max(1.0) as u64;
+    let series = vec![
+        run_strategy(cfg, DesStrategy::GoSgd { p: cfg.p }, &format!("gosgd_p{}", cfg.p))?,
+        run_strategy(
+            cfg,
+            DesStrategy::Easgd { alpha: 0.9 / cfg.workers as f64, tau },
+            &format!("easgd_tau{tau}"),
+        )?,
+        run_strategy(cfg, DesStrategy::PerSyn { tau }, &format!("persyn_tau{tau}"))?,
+    ];
+    if let Some(path) = out {
+        let mut csv = CsvWriter::create(path, &["series", "sim_seconds", "loss"])?;
+        for s in &series {
+            for &(t, l) in &s.points {
+                csv.write_tagged_row(&s.label, &[t, l])?;
+            }
+        }
+        csv.flush()?;
+    }
+    Ok(series)
+}
+
+/// Console table with the headline comparison.
+pub fn format_table(series: &[WallClockSeries], threshold: f64) -> String {
+    let mut out = String::from(
+        "series              steps   messages  blocked_s   secs_to_threshold\n",
+    );
+    for s in series {
+        let secs = s
+            .secs_to(threshold)
+            .map(|t| format!("{t:.1}"))
+            .unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "{:<18} {:>6}  {:>9}  {:>9.1}  {:>14}\n",
+            s.label, s.steps, s.messages, s.blocked_secs, secs
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gosgd_beats_easgd_in_sim_time() {
+        let cfg = Fig2Config {
+            backend: Fig2Backend::Quadratic { dim: 256, sigma: 0.2 },
+            horizon_secs: 60.0,
+            p: 0.05,
+            seed: 2,
+            ..Default::default()
+        };
+        let series = run(&cfg, None).unwrap();
+        let gossip = &series[0];
+        let easgd = &series[1];
+        // More steps in the same simulated time (no blocking).
+        assert!(gossip.steps > easgd.steps);
+        assert_eq!(gossip.blocked_secs, 0.0);
+        assert!(easgd.blocked_secs > 0.0);
+        // Reaches a mid-range loss earlier.
+        let mid = 0.5 * (gossip.points[0].1 + gossip.points.last().unwrap().1);
+        let (g, e) = (gossip.secs_to(mid), easgd.secs_to(mid));
+        if let (Some(g), Some(e)) = (g, e) {
+            assert!(g <= e * 1.1, "gossip {g}s vs easgd {e}s");
+        }
+    }
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join("gosgd_fig2_test");
+        let path = dir.join("fig2.csv");
+        let cfg = Fig2Config {
+            backend: Fig2Backend::Quadratic { dim: 64, sigma: 0.2 },
+            horizon_secs: 5.0,
+            seed: 3,
+            ..Default::default()
+        };
+        run(&cfg, Some(&path)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,sim_seconds,loss\n"));
+        assert!(text.lines().count() > 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,237 @@
+//! Figure 4: consensus error ε(t) under worst-case (pure noise) updates.
+//!
+//! Paper section 5.2: replace every gradient by an i.i.d. `N(0,1)` draw —
+//! local models drift apart as fast as possible and only communication
+//! holds them together.  The figure plots `ε(t) = Σ_m ‖x_m − x̄‖²` for
+//! GoSGD and PerSyn at several exchange frequencies `p`.
+//!
+//! Expected shapes (what the paper shows and our assertions check):
+//! * PerSyn: periodic sawtooth — ε collapses to 0 at each sync, grows in
+//!   between; the amplitude scales with `tau = 1/p`.
+//! * GoSGD: same *magnitude* as PerSyn's envelope but far less variation.
+//! * Both are bounded; the no-communication baseline grows linearly.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::metrics::CsvWriter;
+use crate::strategies::engine::Engine;
+use crate::strategies::gosgd::GoSgd;
+use crate::strategies::grad::NoiseSource;
+use crate::strategies::local::Local;
+use crate::strategies::persyn::PerSyn;
+use crate::strategies::Strategy;
+use crate::tensor::FlatVec;
+
+/// Configuration for the consensus experiment.
+#[derive(Clone, Debug)]
+pub struct Fig4Config {
+    /// Workers (paper: 8).
+    pub workers: usize,
+    /// Parameter dimension (paper's CNN has ~1.7M; 1000 reproduces the
+    /// dynamics at a fraction of the cost — ε concentrates fast in d).
+    pub dim: usize,
+    /// Rounds to simulate (one round = M single-worker ticks for GoSGD).
+    pub rounds: u64,
+    /// Exchange frequencies/probabilities to sweep (paper: 0.01 … 1).
+    pub ps: Vec<f64>,
+    pub seed: u64,
+    /// Include the no-communication baseline series.
+    pub include_local: bool,
+}
+
+impl Default for Fig4Config {
+    fn default() -> Self {
+        Fig4Config {
+            workers: 8,
+            dim: 1000,
+            rounds: 1000,
+            ps: vec![0.01, 0.1, 0.5, 1.0],
+            seed: 0,
+            include_local: true,
+        }
+    }
+}
+
+/// One output series.
+#[derive(Clone, Debug)]
+pub struct ConsensusSeries {
+    pub label: String,
+    /// `(round, epsilon)` samples.
+    pub points: Vec<(u64, f64)>,
+}
+
+impl ConsensusSeries {
+    pub fn mean_eps(&self) -> f64 {
+        // skip warmup third
+        let skip = self.points.len() / 3;
+        let tail = &self.points[skip..];
+        tail.iter().map(|(_, e)| e).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn max_eps(&self) -> f64 {
+        self.points.iter().map(|(_, e)| *e).fold(0.0, f64::max)
+    }
+
+    /// Coefficient of variation of the tail — the paper's "PerSyn has big
+    /// variation, GoSGD much less" claim, quantified.
+    pub fn cv(&self) -> f64 {
+        let skip = self.points.len() / 3;
+        let tail: Vec<f64> = self.points[skip..].iter().map(|(_, e)| *e).collect();
+        let mean = crate::util::mean(&tail);
+        if mean == 0.0 {
+            return 0.0;
+        }
+        crate::util::stddev(&tail) / mean
+    }
+}
+
+fn run_one(
+    strategy: Box<dyn Strategy>,
+    label: String,
+    cfg: &Fig4Config,
+    async_clock: bool,
+) -> Result<ConsensusSeries> {
+    let src = NoiseSource::new(cfg.dim, cfg.seed ^ 0xF16_4);
+    let init = FlatVec::zeros(cfg.dim);
+    // Paper: the "gradient" IS the noise, so lr = 1, no decay.
+    let mut eng = Engine::new(strategy, src, cfg.workers, &init, 1.0, 0.0, cfg.seed);
+    let ticks_per_round = if async_clock { cfg.workers as u64 } else { 1 };
+    let mut points = Vec::with_capacity(cfg.rounds as usize);
+    for round in 0..cfg.rounds {
+        eng.run(ticks_per_round)?;
+        points.push((round + 1, eng.state().stacked.consensus_error()?));
+    }
+    Ok(ConsensusSeries { label, points })
+}
+
+/// Run the full sweep; write CSV if `out` is given.
+pub fn run(cfg: &Fig4Config, out: Option<&Path>) -> Result<Vec<ConsensusSeries>> {
+    let mut series = Vec::new();
+    for &p in &cfg.ps {
+        series.push(run_one(
+            Box::new(GoSgd::new(p)),
+            format!("gosgd_p{p}"),
+            cfg,
+            true,
+        )?);
+        series.push(run_one(
+            Box::new(PerSyn::from_probability(p)),
+            format!("persyn_p{p}"),
+            cfg,
+            false,
+        )?);
+    }
+    if cfg.include_local {
+        series.push(run_one(Box::new(Local), "local".into(), cfg, false)?);
+    }
+    if let Some(path) = out {
+        let mut csv = CsvWriter::create(path, &["series", "round", "epsilon"])?;
+        for s in &series {
+            for &(r, e) in &s.points {
+                csv.write_tagged_row(&s.label, &[r as f64, e])?;
+            }
+        }
+        csv.flush()?;
+    }
+    Ok(series)
+}
+
+/// Pretty-printed comparison table (the console rendering of Fig. 4).
+pub fn format_table(series: &[ConsensusSeries]) -> String {
+    let mut out = String::from(
+        "series                 mean_eps      max_eps        cv\n",
+    );
+    for s in series {
+        out.push_str(&format!(
+            "{:<22} {:>10.3}  {:>10.3}  {:>8.3}\n",
+            s.label,
+            s.mean_eps(),
+            s.max_eps(),
+            s.cv()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> Fig4Config {
+        Fig4Config {
+            workers: 8,
+            dim: 200,
+            rounds: 300,
+            ps: vec![0.1],
+            seed: 1,
+            include_local: true,
+        }
+    }
+
+    #[test]
+    fn gossip_and_persyn_same_magnitude_gossip_less_variation() {
+        let series = run(&small_cfg(), None).unwrap();
+        let gossip = &series[0];
+        let persyn = &series[1];
+        let local = &series[2];
+        // same order of magnitude (paper: "as both share the same magnitude")
+        let ratio = gossip.mean_eps() / persyn.mean_eps();
+        assert!(
+            (0.2..5.0).contains(&ratio),
+            "magnitude ratio {ratio}: gossip {} persyn {}",
+            gossip.mean_eps(),
+            persyn.mean_eps()
+        );
+        // PerSyn's sawtooth has much higher relative variation.
+        assert!(
+            gossip.cv() < persyn.cv(),
+            "gossip cv {} vs persyn cv {}",
+            gossip.cv(),
+            persyn.cv()
+        );
+        // Both are far below the no-communication baseline.
+        assert!(gossip.max_eps() < local.points.last().unwrap().1);
+    }
+
+    #[test]
+    fn higher_p_means_lower_consensus_error() {
+        let mut cfg = small_cfg();
+        cfg.ps = vec![0.05, 0.5];
+        cfg.include_local = false;
+        let series = run(&cfg, None).unwrap();
+        let gossip_low = &series[0]; // p = 0.05
+        let gossip_high = &series[2]; // p = 0.5
+        assert!(
+            gossip_high.mean_eps() < gossip_low.mean_eps(),
+            "p=0.5 {} vs p=0.05 {}",
+            gossip_high.mean_eps(),
+            gossip_low.mean_eps()
+        );
+    }
+
+    #[test]
+    fn csv_output_is_written() {
+        let dir = std::env::temp_dir().join("gosgd_fig4_test");
+        let path = dir.join("fig4.csv");
+        let mut cfg = small_cfg();
+        cfg.rounds = 20;
+        cfg.include_local = false;
+        run(&cfg, Some(&path)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,round,epsilon\n"));
+        assert_eq!(text.lines().count(), 1 + 2 * 20);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut cfg = small_cfg();
+        cfg.rounds = 30;
+        cfg.include_local = false;
+        let series = run(&cfg, None).unwrap();
+        let table = format_table(&series);
+        assert!(table.contains("gosgd_p0.1"));
+        assert!(table.contains("persyn_p0.1"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Experiment harnesses: one module per paper figure.
+//!
+//! Each harness regenerates the data series behind a figure of the
+//! paper's evaluation (section 5) and writes a CSV under `results/`:
+//!
+//! * [`fig1`] — training loss vs iterations, PerSyn vs GoSGD across `p`.
+//! * [`fig2`] — training loss vs (simulated) wall clock, GoSGD vs EASGD.
+//! * [`fig3`] — validation accuracy vs iterations, PerSyn vs GoSGD.
+//! * [`fig4`] — consensus error ε(t) under pure-noise updates.
+//! * [`variance`] — Appendix A: gradient-estimator error ∝ 1/N.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod variance;

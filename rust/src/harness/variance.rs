@@ -1,0 +1,142 @@
+//! Appendix A: gradient-estimator error scales as 1/N.
+//!
+//! The paper motivates distribution by the Monte-Carlo argument
+//! `E‖∇L − ∇̂L‖² = tr(Cov)/N`: doubling the (effective) batch halves the
+//! gradient error — which is exactly what Algorithm 1 buys with M workers.
+//! This harness measures the error empirically on the noisy quadratic for
+//! a sweep of batch sizes and fits the power law.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::metrics::CsvWriter;
+use crate::strategies::grad::{GradSource, QuadraticSource};
+use crate::tensor::FlatVec;
+
+/// Configuration for the variance-scaling experiment.
+#[derive(Clone, Debug)]
+pub struct VarianceConfig {
+    pub dim: usize,
+    /// Batch sizes to sweep.
+    pub batch_sizes: Vec<usize>,
+    /// Monte-Carlo trials per batch size.
+    pub trials: usize,
+    /// Per-sample gradient noise std.
+    pub sigma: f32,
+    pub seed: u64,
+}
+
+impl Default for VarianceConfig {
+    fn default() -> Self {
+        VarianceConfig {
+            dim: 256,
+            batch_sizes: vec![1, 2, 4, 8, 16, 32, 64],
+            trials: 200,
+            sigma: 0.5,
+            seed: 0,
+        }
+    }
+}
+
+/// `(N, measured E‖error‖²)` rows.
+pub fn run(cfg: &VarianceConfig, out: Option<&Path>) -> Result<Vec<(usize, f64)>> {
+    let mut src = QuadraticSource::new(cfg.dim, cfg.sigma, cfg.seed);
+    let params = FlatVec::zeros(cfg.dim);
+
+    // True gradient: (x - x*)/d with zero noise.
+    let mut true_grad = FlatVec::zeros(cfg.dim);
+    {
+        let mut clean = QuadraticSource::new(cfg.dim, 0.0, cfg.seed);
+        clean.grad(1, &params, 0, &mut true_grad)?;
+    }
+
+    let mut rows = Vec::new();
+    let mut buf = FlatVec::zeros(cfg.dim);
+    let mut step = 0u64;
+    for &n in &cfg.batch_sizes {
+        let mut total_err = 0.0;
+        for _ in 0..cfg.trials {
+            // Average N independent single-sample gradients.
+            let mut avg = FlatVec::zeros(cfg.dim);
+            for _ in 0..n {
+                src.grad(1, &params, step, &mut buf)?;
+                step += 1;
+                avg.axpy(1.0 / n as f32, &buf)?;
+            }
+            total_err += avg.dist_sq(&true_grad)?;
+        }
+        rows.push((n, total_err / cfg.trials as f64));
+    }
+
+    if let Some(path) = out {
+        let mut csv = CsvWriter::create(path, &["batch_size", "grad_error_sq"])?;
+        for &(n, e) in &rows {
+            csv.write_row(&[n as f64, e])?;
+        }
+        csv.flush()?;
+    }
+    Ok(rows)
+}
+
+/// Fit `error = c · N^alpha` by least squares in log-log space; Appendix A
+/// predicts `alpha = −1`.
+pub fn fit_power_law(rows: &[(usize, f64)]) -> f64 {
+    let pts: Vec<(f64, f64)> = rows
+        .iter()
+        .map(|&(n, e)| ((n as f64).ln(), e.ln()))
+        .collect();
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|(x, _)| x).sum();
+    let sy: f64 = pts.iter().map(|(_, y)| y).sum();
+    let sxx: f64 = pts.iter().map(|(x, _)| x * x).sum();
+    let sxy: f64 = pts.iter().map(|(x, y)| x * y).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_scales_inverse_with_batch() {
+        let cfg = VarianceConfig {
+            dim: 128,
+            batch_sizes: vec![1, 4, 16, 64],
+            trials: 150,
+            sigma: 0.5,
+            seed: 3,
+        };
+        let rows = run(&cfg, None).unwrap();
+        let alpha = fit_power_law(&rows);
+        assert!(
+            (alpha + 1.0).abs() < 0.15,
+            "expected ~N^-1 scaling, got N^{alpha:.3}: {rows:?}"
+        );
+    }
+
+    #[test]
+    fn error_magnitude_matches_theory() {
+        // E‖err‖² = d σ² / N for σ² I covariance.
+        let cfg = VarianceConfig {
+            dim: 64,
+            batch_sizes: vec![8],
+            trials: 300,
+            sigma: 0.5,
+            seed: 7,
+        };
+        let rows = run(&cfg, None).unwrap();
+        let want = 64.0 * 0.25 / 8.0;
+        let got = rows[0].1;
+        assert!(
+            (got - want).abs() / want < 0.2,
+            "theory {want}, measured {got}"
+        );
+    }
+
+    #[test]
+    fn power_law_fit_on_exact_data() {
+        let rows: Vec<(usize, f64)> = vec![(1, 8.0), (2, 4.0), (4, 2.0), (8, 1.0)];
+        let alpha = fit_power_law(&rows);
+        assert!((alpha + 1.0).abs() < 1e-9, "{alpha}");
+    }
+}

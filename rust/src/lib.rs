@@ -1,0 +1,53 @@
+//! # GoSGD — Distributed SGD with Gossip Exchange
+//!
+//! Full-system reproduction of *"GoSGD: Distributed Optimization for Deep
+//! Learning with Gossip Exchange"* (Blot, Picard, Cord, 2018).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1 — Pallas kernels** (`python/compile/kernels/`): the sum-weight
+//!   gossip blend and the fused dense matmul, authored in Pallas and lowered
+//!   (interpret mode) into the L2 programs.
+//! * **L2 — JAX model** (`python/compile/model.py`): the paper's CIFAR CNN
+//!   forward/backward, AOT-lowered to HLO text at build time.
+//! * **L3 — this crate**: the distributed-training runtime. Worker threads,
+//!   message queues, the randomized-gossip protocol, the communication-matrix
+//!   framework of the paper's section 3, and every strategy the paper
+//!   discusses (GoSGD, PerSyn, EASGD, Downpour, fully-synchronous AllReduce).
+//!
+//! Python never runs on the training path: `make artifacts` lowers the JAX
+//! programs once, and the `gosgd` binary loads them through PJRT
+//! ([`runtime`]).
+//!
+//! ## Quick tour
+//!
+//! * [`strategies`] — the paper's algorithms behind one [`strategies::Strategy`]
+//!   trait; GoSGD itself is the contribution (Algorithm 3 + 4).
+//! * [`framework`] — section 3's communication-matrix formalism; every
+//!   strategy can be *compiled* to its `K^(t)` sequence and cross-checked.
+//! * [`gossip`] — sum-weight protocol substrate: weights, messages, queues.
+//! * [`worker`] / [`coordinator`] — the threaded runtime.
+//! * [`runtime`] — PJRT executor for the AOT artifacts.
+//! * [`sim`] — discrete-event simulator used for the wall-clock experiment
+//!   (paper Fig. 2) and the consensus experiment (Fig. 4).
+//! * [`harness`] — one module per paper figure/table; regenerates the series.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod framework;
+pub mod gossip;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod strategies;
+pub mod tensor;
+pub mod util;
+pub mod worker;
+
+pub use error::{Error, Result};

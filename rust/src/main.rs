@@ -1,0 +1,275 @@
+//! `gosgd` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `train`     — run one distributed-training job on the real model.
+//! * `consensus` — regenerate the paper's Fig. 4 (consensus under noise).
+//! * `figure`    — regenerate Fig. 1 / 2 / 3 series.
+//! * `variance`  — Appendix A variance-scaling measurement.
+//! * `inspect`   — print an artifact manifest.
+//!
+//! Examples:
+//!
+//! ```text
+//! gosgd train --model tiny --strategy gosgd:0.02 --workers 8 --steps 400
+//! gosgd consensus --out results/fig4.csv
+//! gosgd figure --figure fig1 --model tiny --iterations 150
+//! gosgd inspect --model cnn
+//! ```
+
+use gosgd::config::{RunConfig, StrategyKind};
+use gosgd::coordinator::Coordinator;
+use gosgd::error::Result;
+use gosgd::gossip::PeerSelector;
+use gosgd::harness::{fig1, fig2, fig3, fig4, variance};
+use gosgd::model::Manifest;
+use gosgd::optim::LrSchedule;
+use gosgd::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    match cmd {
+        "train" => cmd_train(rest),
+        "consensus" => cmd_consensus(rest),
+        "figure" => cmd_figure(rest),
+        "variance" => cmd_variance(rest),
+        "inspect" => cmd_inspect(rest),
+        _ => {
+            println!(
+                "gosgd — GoSGD distributed training (paper reproduction)\n\n\
+                 subcommands: train | consensus | figure | variance | inspect\n\
+                 use `gosgd <subcommand> --help` for options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn train_args() -> Args {
+    Args::new("gosgd train", "run one distributed training job")
+        .opt("artifacts", "artifacts", "artifact directory root")
+        .opt("model", "tiny", "model variant: tiny | cnn | mlp_wide")
+        .opt("workers", "8", "number of workers M")
+        .opt("steps", "200", "engine steps (rounds or ticks)")
+        .opt("strategy", "gosgd:0.02", "gosgd:P | persyn:TAU | easgd:A:TAU | downpour:NP:NF | allreduce | local")
+        .opt("lr", "0.1", "learning rate (or step:BASE:GAMMA:EVERY)")
+        .opt("weight-decay", "0.0001", "weight decay")
+        .opt("seed", "0", "RNG seed")
+        .opt("peer", "uniform", "peer selector: uniform | ring | smallworld:Q")
+        .opt("eval-every", "0", "evaluate every N steps (0 = only at end)")
+        .opt("eval-batches", "4", "validation batches per evaluation")
+        .opt("data-noise", "4.0", "synthetic data class-overlap noise")
+        .opt("loss-csv", "", "write the training-loss curve to this CSV")
+        .opt("save-checkpoint", "", "write a checkpoint here at the end")
+        .opt("resume-from", "", "resume from a checkpoint file")
+}
+
+fn parse_run_config(a: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    cfg.artifacts_dir = a.get("artifacts")?.into();
+    cfg.model = a.get("model")?.to_string();
+    cfg.workers = a.get_usize("workers")?;
+    cfg.steps = a.get_u64("steps")?;
+    cfg.strategy = StrategyKind::parse(a.get("strategy")?)?;
+    cfg.lr = LrSchedule::parse(a.get("lr")?)
+        .ok_or_else(|| gosgd::Error::cli("bad --lr"))?;
+    cfg.weight_decay = a.get_f64("weight-decay")? as f32;
+    cfg.seed = a.get_u64("seed")?;
+    cfg.peer = PeerSelector::parse(a.get("peer")?)
+        .ok_or_else(|| gosgd::Error::cli("bad --peer"))?;
+    cfg.eval_every = a.get_u64("eval-every")?;
+    cfg.eval_batches = a.get_u64("eval-batches")?;
+    cfg.data_noise = a.get_f64("data-noise")? as f32;
+    cfg.save_checkpoint = non_empty(a.get("save-checkpoint")?);
+    cfg.resume_from = non_empty(a.get("resume-from")?);
+    Ok(cfg)
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let a = train_args().parse_from(argv)?;
+    let cfg = parse_run_config(&a)?;
+    println!("training: {} on {} with M={} for {} steps", cfg.strategy.tag(), cfg.model, cfg.workers, cfg.steps);
+    let report = Coordinator::new(cfg)?.run()?;
+    println!("{}", report.summary());
+    for (step, vl, va) in &report.evals {
+        println!("  eval @ {step}: loss {vl:.4} acc {va:.3}");
+    }
+    let csv_path = a.get("loss-csv")?;
+    if !csv_path.is_empty() {
+        let mut csv = gosgd::metrics::CsvWriter::create(csv_path, &["step", "loss"])?;
+        for (s, l) in report.train_loss.steps().iter().zip(report.train_loss.values()) {
+            csv.write_row(&[*s as f64, *l])?;
+        }
+        csv.flush()?;
+        println!("loss curve -> {csv_path}");
+    }
+    Ok(())
+}
+
+fn cmd_consensus(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("gosgd consensus", "paper Fig. 4: consensus under noise")
+        .opt("workers", "8", "number of workers")
+        .opt("dim", "1000", "parameter dimension")
+        .opt("rounds", "1000", "rounds to simulate")
+        .opt("ps", "0.01,0.1,0.5,1.0", "comma-separated exchange probabilities")
+        .opt("seed", "0", "RNG seed")
+        .opt("out", "", "CSV output path")
+        .parse_from(argv)?;
+    let cfg = fig4::Fig4Config {
+        workers: a.get_usize("workers")?,
+        dim: a.get_usize("dim")?,
+        rounds: a.get_u64("rounds")?,
+        ps: parse_list(a.get("ps")?)?,
+        seed: a.get_u64("seed")?,
+        include_local: true,
+    };
+    let out = non_empty(a.get("out")?);
+    let series = fig4::run(&cfg, out.as_deref())?;
+    println!("{}", fig4::format_table(&series));
+    Ok(())
+}
+
+fn cmd_figure(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("gosgd figure", "regenerate a paper figure's series")
+        .opt("figure", "fig1", "fig1 | fig2 | fig3")
+        .opt("artifacts", "artifacts", "artifact directory root")
+        .opt("model", "tiny", "model variant")
+        .opt("workers", "8", "number of workers")
+        .opt("iterations", "150", "worker iterations (fig1/fig3)")
+        .opt("ps", "0.01,0.4", "exchange probabilities (fig1/fig3)")
+        .opt("p", "0.02", "exchange probability (fig2)")
+        .opt("horizon", "120", "simulated seconds (fig2)")
+        .opt("backend", "quadratic", "fig2 gradients: quadratic | pjrt")
+        .opt("seed", "0", "RNG seed")
+        .opt("out", "", "CSV output path")
+        .parse_from(argv)?;
+    let out = non_empty(a.get("out")?);
+    match a.get("figure")? {
+        "fig1" => {
+            let cfg = fig1::Fig1Config {
+                artifacts_dir: a.get("artifacts")?.into(),
+                model: a.get("model")?.to_string(),
+                workers: a.get_usize("workers")?,
+                iterations: a.get_u64("iterations")?,
+                ps: parse_list(a.get("ps")?)?,
+                seed: a.get_u64("seed")?,
+                ema_beta: 0.9,
+            };
+            let series = fig1::run(&cfg, out.as_deref())?;
+            println!("{}", fig1::format_table(&series));
+        }
+        "fig2" => {
+            let backend = match a.get("backend")? {
+                "pjrt" => fig2::Fig2Backend::Pjrt {
+                    artifacts_dir: a.get("artifacts")?.into(),
+                    model: a.get("model")?.to_string(),
+                },
+                _ => fig2::Fig2Backend::Quadratic { dim: 1024, sigma: 0.2 },
+            };
+            let cfg = fig2::Fig2Config {
+                backend,
+                workers: a.get_usize("workers")?,
+                p: a.get_f64("p")?,
+                horizon_secs: a.get_f64("horizon")?,
+                seed: a.get_u64("seed")?,
+                ..Default::default()
+            };
+            let series = fig2::run(&cfg, out.as_deref())?;
+            let threshold = series
+                .iter()
+                .flat_map(|s| s.points.last().map(|(_, l)| *l))
+                .fold(f64::INFINITY, f64::min)
+                * 1.5;
+            println!("{}", fig2::format_table(&series, threshold));
+        }
+        "fig3" => {
+            let cfg = fig3::Fig3Config {
+                artifacts_dir: a.get("artifacts")?.into(),
+                model: a.get("model")?.to_string(),
+                workers: a.get_usize("workers")?,
+                iterations: a.get_u64("iterations")?,
+                ps: parse_list(a.get("ps")?)?,
+                seed: a.get_u64("seed")?,
+                ..Default::default()
+            };
+            let series = fig3::run(&cfg, out.as_deref())?;
+            println!("{}", fig3::format_table(&series));
+        }
+        other => return Err(gosgd::Error::cli(format!("unknown figure {other}"))),
+    }
+    Ok(())
+}
+
+fn cmd_variance(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("gosgd variance", "Appendix A: grad error ∝ 1/N")
+        .opt("dim", "256", "parameter dimension")
+        .opt("trials", "200", "Monte-Carlo trials per batch size")
+        .opt("out", "", "CSV output path")
+        .parse_from(argv)?;
+    let cfg = variance::VarianceConfig {
+        dim: a.get_usize("dim")?,
+        trials: a.get_usize("trials")?,
+        ..Default::default()
+    };
+    let out = non_empty(a.get("out")?);
+    let rows = variance::run(&cfg, out.as_deref())?;
+    println!("batch_size  grad_error_sq");
+    for (n, e) in &rows {
+        println!("{n:>10}  {e:>12.6}");
+    }
+    println!("power-law exponent: {:.3} (theory: -1)", variance::fit_power_law(&rows));
+    Ok(())
+}
+
+fn cmd_inspect(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("gosgd inspect", "print an artifact manifest")
+        .opt("artifacts", "artifacts", "artifact directory root")
+        .opt("model", "tiny", "model variant")
+        .parse_from(argv)?;
+    let dir = std::path::Path::new(a.get("artifacts")?).join(a.get("model")?);
+    let m = Manifest::load(&dir)?;
+    println!("model {} @ {}", m.model, dir.display());
+    println!("  params: {}  batch: {}  eval_batch: {}", m.param_count, m.batch, m.eval_batch);
+    println!("  tensors:");
+    for t in &m.tensors {
+        println!("    {:<12} {:?} @ {}", t.name, t.shape, t.offset);
+    }
+    println!("  programs:");
+    for p in &m.programs {
+        println!(
+            "    {:<12} {} ({} inputs, {} outputs)",
+            p.name,
+            p.file,
+            p.inputs.len(),
+            p.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn parse_list(text: &str) -> Result<Vec<f64>> {
+    text.split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| gosgd::Error::cli(format!("bad number {s:?}")))
+        })
+        .collect()
+}
+
+fn non_empty(s: &str) -> Option<std::path::PathBuf> {
+    if s.is_empty() {
+        None
+    } else {
+        Some(s.into())
+    }
+}

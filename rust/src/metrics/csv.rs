@@ -1,0 +1,106 @@
+//! Minimal CSV writer for experiment outputs.
+//!
+//! Every harness run writes its series under `results/` so the paper
+//! figures can be re-plotted from machine-readable data.  Only writing is
+//! needed; fields are escaped per RFC 4180 when they contain separators.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Buffered CSV file writer.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncate) `path` and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut w = CsvWriter {
+            out: BufWriter::new(File::create(path)?),
+            columns: header.len(),
+        };
+        w.write_row_strs(header)?;
+        Ok(w)
+    }
+
+    fn escape(field: &str) -> String {
+        if field.contains(',') || field.contains('"') || field.contains('\n') {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    /// Write one row of string fields (must match header width).
+    pub fn write_row_strs(&mut self, fields: &[&str]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.columns, "csv row width mismatch");
+        let line: Vec<String> = fields.iter().map(|f| Self::escape(f)).collect();
+        writeln!(self.out, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    /// Write one row of numeric fields.
+    pub fn write_row(&mut self, fields: &[f64]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|v| format!("{v}")).collect();
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        self.write_row_strs(&refs)
+    }
+
+    /// Mixed row: a string tag followed by numbers (the common shape
+    /// `strategy,p,step,value`).
+    pub fn write_tagged_row(&mut self, tag: &str, fields: &[f64]) -> Result<()> {
+        let mut strs = vec![tag.to_string()];
+        strs.extend(fields.iter().map(|v| format!("{v}")));
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        self.write_row_strs(&refs)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("gosgd_csv_test");
+        let path = dir.join("out.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.write_row(&[1.0, 2.5]).unwrap();
+            w.write_tagged_row("gosgd", &[3.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\ngosgd,3\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn escapes_commas_and_quotes() {
+        let dir = std::env::temp_dir().join("gosgd_csv_test2");
+        let path = dir.join("esc.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["x"]).unwrap();
+            w.write_row_strs(&["a,b"]).unwrap();
+            w.write_row_strs(&["say \"hi\""]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "x\n\"a,b\"\n\"say \"\"hi\"\"\"\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,173 @@
+//! Run metrics: loss curves, consensus error, timing, CSV output.
+//!
+//! Everything the figure harnesses need to regenerate the paper's series:
+//! per-step loss ([`LossCurve`]), the consensus error ε(t) of section 5.2
+//! ([`consensus_error`]), and a small CSV writer so every experiment
+//! leaves a machine-readable trace in `results/`.
+
+pub mod csv;
+
+pub use csv::CsvWriter;
+
+use crate::error::Result;
+use crate::framework::Stacked;
+
+/// Per-step scalar series with exponential-moving-average smoothing —
+/// the paper's training-loss curves are EMA-smoothed by necessity (batch
+/// losses are noisy).
+#[derive(Clone, Debug, Default)]
+pub struct LossCurve {
+    steps: Vec<u64>,
+    values: Vec<f64>,
+}
+
+impl LossCurve {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.steps.push(step);
+        self.values.push(value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn steps(&self) -> &[u64] {
+        &self.steps
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.values.last().copied()
+    }
+
+    /// Mean of the values whose *index* lies in `[lo, hi)`.
+    pub fn window_mean(&self, lo: usize, hi: usize) -> f64 {
+        let hi = hi.min(self.values.len());
+        if lo >= hi {
+            return f64::NAN;
+        }
+        self.values[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+    }
+
+    /// EMA smoothing with decay `beta` (new = beta*old + (1-beta)*x).
+    pub fn ema(&self, beta: f64) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.values.len());
+        let mut acc = None;
+        for &v in &self.values {
+            let next = match acc {
+                None => v,
+                Some(prev) => beta * prev + (1.0 - beta) * v,
+            };
+            out.push(next);
+            acc = Some(next);
+        }
+        out
+    }
+
+    /// First step index at which the EMA-smoothed loss drops below
+    /// `threshold` (the "iterations to reach loss L" metric of Fig. 1/2).
+    pub fn first_step_below(&self, threshold: f64, beta: f64) -> Option<u64> {
+        let ema = self.ema(beta);
+        ema.iter()
+            .position(|&v| v < threshold)
+            .map(|i| self.steps[i])
+    }
+
+    /// Downsample to at most `n` evenly spaced points (plot-friendly).
+    pub fn downsample(&self, n: usize) -> Vec<(u64, f64)> {
+        if self.values.is_empty() || n == 0 {
+            return Vec::new();
+        }
+        let stride = (self.values.len() + n - 1) / n;
+        self.steps
+            .iter()
+            .zip(&self.values)
+            .step_by(stride.max(1))
+            .map(|(&s, &v)| (s, v))
+            .collect()
+    }
+}
+
+/// Consensus error `ε(t) = Σ_m ‖x_m − x̄‖²` (paper section 5.2).
+pub fn consensus_error(stacked: &Stacked) -> Result<f64> {
+    stacked.consensus_error()
+}
+
+/// Simple wall-clock stopwatch for run phases.
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(vals: &[f64]) -> LossCurve {
+        let mut c = LossCurve::new();
+        for (i, &v) in vals.iter().enumerate() {
+            c.push(i as u64, v);
+        }
+        c
+    }
+
+    #[test]
+    fn window_mean_bounds() {
+        let c = curve(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.window_mean(0, 2), 1.5);
+        assert_eq!(c.window_mean(2, 100), 3.5);
+        assert!(c.window_mean(3, 3).is_nan());
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let c = curve(&[0.0, 10.0]);
+        let e = c.ema(0.5);
+        assert_eq!(e, vec![0.0, 5.0]);
+        // beta=0 -> raw values
+        assert_eq!(c.ema(0.0), vec![0.0, 10.0]);
+    }
+
+    #[test]
+    fn first_step_below_finds_crossing() {
+        let c = curve(&[5.0, 4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(c.first_step_below(2.5, 0.0), Some(3));
+        assert_eq!(c.first_step_below(0.5, 0.0), None);
+    }
+
+    #[test]
+    fn downsample_keeps_order() {
+        let c = curve(&(0..100).map(|i| i as f64).collect::<Vec<_>>());
+        let d = c.downsample(10);
+        assert!(d.len() <= 10 + 1);
+        assert_eq!(d[0], (0, 0.0));
+        for w in d.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        assert!(curve(&[]).downsample(5).is_empty());
+    }
+}

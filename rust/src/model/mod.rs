@@ -1,0 +1,334 @@
+//! Model metadata: the artifact manifest and the flat-parameter registry.
+//!
+//! The Layer-2 compiler (`python/compile/aot.py`) writes a `manifest.json`
+//! next to every HLO artifact describing the model's parameter table
+//! (name/shape/offset into the flat vector), program signatures, and batch
+//! geometry.  This module parses it and provides parameter initialization:
+//! either bit-exact from `params_init.bin` (the jax He-normal init, seed
+//! recorded in the manifest) or re-sampled in Rust from the recorded
+//! per-tensor `init_std` for alternative seeds.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::tensor::FlatVec;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init_std: f64,
+}
+
+/// One program argument/result in an HLO artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One exported program (train_step / eval_step / sgd_update / mix).
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub image_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub param_count: usize,
+    pub init_seed: u64,
+    pub tensors: Vec<TensorSpec>,
+    pub programs: Vec<ProgramSpec>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::artifact(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        let json = Json::parse(&text)?;
+        Self::from_json(dir, &json)
+    }
+
+    fn from_json(dir: PathBuf, json: &Json) -> Result<Manifest> {
+        let tensors = json
+            .get("tensors")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(TensorSpec {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    shape: t.get("shape")?.as_usize_vec()?,
+                    offset: t.get("offset")?.as_usize()?,
+                    size: t.get("size")?.as_usize()?,
+                    init_std: t.get("init_std")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let parse_args = |arr: &Json| -> Result<Vec<ArgSpec>> {
+            arr.as_arr()?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a.get("name")?.as_str()?.to_string(),
+                        shape: a.get("shape")?.as_usize_vec()?,
+                        dtype: a.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect()
+        };
+
+        let programs_obj = json.get("programs")?;
+        let mut programs = Vec::new();
+        if let Json::Obj(map) = programs_obj {
+            for (name, p) in map {
+                programs.push(ProgramSpec {
+                    name: name.clone(),
+                    file: p.get("file")?.as_str()?.to_string(),
+                    inputs: parse_args(p.get("inputs")?)?,
+                    outputs: parse_args(p.get("outputs")?)?,
+                });
+            }
+        } else {
+            return Err(Error::json("programs must be an object"));
+        }
+
+        let manifest = Manifest {
+            dir,
+            model: json.get("model")?.as_str()?.to_string(),
+            batch: json.get("batch")?.as_usize()?,
+            eval_batch: json.get("eval_batch")?.as_usize()?,
+            image_shape: json.get("image_shape")?.as_usize_vec()?,
+            num_classes: json.get("num_classes")?.as_usize()?,
+            param_count: json.get("param_count")?.as_usize()?,
+            init_seed: json.get("init_seed")?.as_usize()? as u64,
+            tensors,
+            programs,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Internal consistency: offsets contiguous, sizes match shapes, total
+    /// equals `param_count`, required programs present.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for t in &self.tensors {
+            if t.offset != off {
+                return Err(Error::artifact(format!(
+                    "tensor {} offset {} != expected {off}",
+                    t.name, t.offset
+                )));
+            }
+            let prod: usize = t.shape.iter().product();
+            if prod != t.size {
+                return Err(Error::artifact(format!(
+                    "tensor {} size {} != shape product {prod}",
+                    t.name, t.size
+                )));
+            }
+            off += t.size;
+        }
+        if off != self.param_count {
+            return Err(Error::artifact(format!(
+                "tensor sizes sum to {off}, manifest says {}",
+                self.param_count
+            )));
+        }
+        for required in ["train_step", "eval_step", "sgd_update", "mix"] {
+            if self.program(required).is_none() {
+                return Err(Error::artifact(format!("missing program {required}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Look up a program by name.
+    pub fn program(&self, name: &str) -> Option<&ProgramSpec> {
+        self.programs.iter().find(|p| p.name == name)
+    }
+
+    /// Path of a program's HLO text file.
+    pub fn program_path(&self, name: &str) -> Result<PathBuf> {
+        let p = self
+            .program(name)
+            .ok_or_else(|| Error::artifact(format!("no program {name}")))?;
+        Ok(self.dir.join(&p.file))
+    }
+
+    /// Load the bit-exact jax initialization from `params_init.bin`.
+    pub fn load_init_params(&self) -> Result<FlatVec> {
+        let path = self.dir.join("params_init.bin");
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::artifact(format!("cannot read {}: {e}", path.display())))?;
+        if bytes.len() != self.param_count * 4 {
+            return Err(Error::artifact(format!(
+                "params_init.bin has {} bytes, expected {}",
+                bytes.len(),
+                self.param_count * 4
+            )));
+        }
+        let mut out = vec![0.0f32; self.param_count];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(FlatVec::from_vec(out))
+    }
+
+    /// Re-sample an initialization in Rust from the recorded per-tensor
+    /// std (He-normal; biases have std 0 and stay zero).  Statistically
+    /// equivalent to the jax init, not bit-identical.
+    pub fn sample_init_params(&self, seed: u64) -> FlatVec {
+        let mut flat = vec![0.0f32; self.param_count];
+        let base = Rng::new(seed);
+        for (i, t) in self.tensors.iter().enumerate() {
+            if t.init_std > 0.0 {
+                let mut rng = base.split(i as u64);
+                rng.fill_normal(
+                    &mut flat[t.offset..t.offset + t.size],
+                    t.init_std as f32,
+                );
+            }
+        }
+        FlatVec::from_vec(flat)
+    }
+
+    /// Elements in one image (NHWC product).
+    pub fn image_elems(&self) -> usize {
+        self.image_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path, param_count: usize) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = format!(
+            r#"{{
+              "version": 2, "model": "tiny", "batch": 4, "eval_batch": 8,
+              "image_shape": [32, 32, 3], "num_classes": 10,
+              "param_count": {param_count}, "init_seed": 0,
+              "tensors": [
+                {{"name": "w", "shape": [2, 3], "offset": 0, "size": 6, "init_std": 0.5}},
+                {{"name": "b", "shape": [2], "offset": 6, "size": 2, "init_std": 0.0}}
+              ],
+              "programs": {{
+                "train_step": {{"file": "train_step.hlo.txt", "inputs": [], "outputs": []}},
+                "eval_step": {{"file": "eval_step.hlo.txt", "inputs": [], "outputs": []}},
+                "sgd_update": {{"file": "sgd_update.hlo.txt", "inputs": [], "outputs": []}},
+                "mix": {{"file": "mix.hlo.txt",
+                  "inputs": [{{"name": "x_r", "shape": [{param_count}], "dtype": "f32"}}],
+                  "outputs": [{{"name": "mixed", "shape": [{param_count}], "dtype": "f32"}}]}}
+              }}
+            }}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let data: Vec<u8> = (0..param_count)
+            .flat_map(|i| (i as f32).to_le_bytes())
+            .collect();
+        std::fs::write(dir.join("params_init.bin"), data).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gosgd_model_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = tmpdir("ok");
+        write_fixture(&dir, 8);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model, "tiny");
+        assert_eq!(m.param_count, 8);
+        assert_eq!(m.tensors.len(), 2);
+        assert_eq!(m.tensors[1].offset, 6);
+        assert!(m.program("mix").is_some());
+        assert!(m.program("nope").is_none());
+        assert_eq!(m.image_elems(), 3072);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn init_params_round_trip() {
+        let dir = tmpdir("init");
+        write_fixture(&dir, 8);
+        let m = Manifest::load(&dir).unwrap();
+        let p = m.load_init_params().unwrap();
+        assert_eq!(p.len(), 8);
+        assert_eq!(p.as_slice()[3], 3.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sampled_init_respects_stds() {
+        let dir = tmpdir("sample");
+        write_fixture(&dir, 8);
+        let m = Manifest::load(&dir).unwrap();
+        let p = m.sample_init_params(1);
+        // bias (last 2) must be exactly zero; weights non-zero
+        assert_eq!(&p.as_slice()[6..], &[0.0, 0.0]);
+        assert!(p.as_slice()[..6].iter().any(|&v| v != 0.0));
+        // deterministic
+        let q = m.sample_init_params(1);
+        assert_eq!(p.as_slice(), q.as_slice());
+        assert_ne!(p.as_slice(), m.sample_init_params(2).as_slice());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_param_count_rejected() {
+        let dir = tmpdir("bad");
+        write_fixture(&dir, 9); // tensors sum to 8, manifest says 9
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_gives_artifact_hint() {
+        let err = Manifest::load("/nonexistent/gosgd").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn truncated_init_bin_rejected() {
+        let dir = tmpdir("trunc");
+        write_fixture(&dir, 8);
+        std::fs::write(dir.join("params_init.bin"), [0u8; 7]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.load_init_params().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

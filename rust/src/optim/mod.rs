@@ -1,0 +1,163 @@
+//! Host-side optimizers and learning-rate schedules.
+//!
+//! The paper's experiments use plain SGD with lr 0.1 and weight decay 1e-4
+//! (section 5.1).  [`Sgd`] mirrors the `sgd_update` HLO artifact exactly —
+//! the integration tests assert both paths produce identical parameters —
+//! and adds optional Polyak momentum for the extension benches.
+//!
+//! Schedules: the paper trains at constant lr; step decay is provided for
+//! longer end-to-end runs.
+
+use crate::error::Result;
+use crate::tensor::FlatVec;
+
+/// Learning-rate schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// Constant rate (the paper's setting).
+    Constant(f32),
+    /// Multiply by `gamma` every `every` steps.
+    StepDecay { base: f32, gamma: f32, every: u64 },
+}
+
+impl LrSchedule {
+    /// Learning rate at (local) step `t`.
+    pub fn at(&self, t: u64) -> f32 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::StepDecay { base, gamma, every } => {
+                base * gamma.powi((t / every) as i32)
+            }
+        }
+    }
+
+    /// Parse `0.1` or `step:0.1:0.5:1000`.
+    pub fn parse(text: &str) -> Option<LrSchedule> {
+        if let Ok(lr) = text.parse::<f32>() {
+            return Some(LrSchedule::Constant(lr));
+        }
+        let parts: Vec<&str> = text.split(':').collect();
+        if parts.len() == 4 && parts[0] == "step" {
+            return Some(LrSchedule::StepDecay {
+                base: parts[1].parse().ok()?,
+                gamma: parts[2].parse().ok()?,
+                every: parts[3].parse().ok()?,
+            });
+        }
+        None
+    }
+}
+
+/// SGD with weight decay and optional momentum.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub schedule: LrSchedule,
+    pub weight_decay: f32,
+    pub momentum: f32,
+    velocity: Option<FlatVec>,
+}
+
+impl Sgd {
+    /// The paper's optimizer: `p ← p − lr·(g + wd·p)`.
+    pub fn new(schedule: LrSchedule, weight_decay: f32) -> Self {
+        Sgd { schedule, weight_decay, momentum: 0.0, velocity: None }
+    }
+
+    pub fn with_momentum(mut self, mu: f32) -> Self {
+        assert!((0.0..1.0).contains(&mu));
+        self.momentum = mu;
+        self
+    }
+
+    /// Apply one update at local step `t`.
+    pub fn step(&mut self, params: &mut FlatVec, grad: &FlatVec, t: u64) -> Result<()> {
+        let lr = self.schedule.at(t);
+        if self.momentum == 0.0 {
+            return params.sgd_step(grad, lr, self.weight_decay);
+        }
+        // v ← mu·v + (g + wd·p); p ← p − lr·v
+        let v = self
+            .velocity
+            .get_or_insert_with(|| FlatVec::zeros(params.len()));
+        if v.len() != params.len() {
+            return Err(crate::error::Error::shape("momentum buffer size mismatch"));
+        }
+        v.scale(self.momentum);
+        v.axpy(1.0, grad)?;
+        if self.weight_decay != 0.0 {
+            let p_snapshot = params.clone();
+            v.axpy(self.weight_decay, &p_snapshot)?;
+        }
+        let v_ref = self.velocity.as_ref().unwrap();
+        params.axpy(-lr, v_ref)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_schedule() {
+        let s = LrSchedule::Constant(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn step_decay_halves() {
+        let s = LrSchedule::StepDecay { base: 0.4, gamma: 0.5, every: 100 };
+        assert_eq!(s.at(0), 0.4);
+        assert_eq!(s.at(99), 0.4);
+        assert_eq!(s.at(100), 0.2);
+        assert_eq!(s.at(250), 0.1);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(LrSchedule::parse("0.1"), Some(LrSchedule::Constant(0.1)));
+        assert_eq!(
+            LrSchedule::parse("step:0.1:0.5:1000"),
+            Some(LrSchedule::StepDecay { base: 0.1, gamma: 0.5, every: 1000 })
+        );
+        assert_eq!(LrSchedule::parse("cosine:1"), None);
+    }
+
+    #[test]
+    fn plain_sgd_matches_flatvec_step() {
+        let mut a = FlatVec::from_vec(vec![1.0, -2.0, 3.0]);
+        let mut b = a.clone();
+        let g = FlatVec::from_vec(vec![0.5, 0.5, -0.5]);
+        let mut opt = Sgd::new(LrSchedule::Constant(0.1), 1e-4);
+        opt.step(&mut a, &g, 0).unwrap();
+        b.sgd_step(&g, 0.1, 1e-4).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn momentum_accelerates_constant_gradient() {
+        // With a constant gradient, momentum accumulates: displacement
+        // after k steps exceeds plain SGD's.
+        let g = FlatVec::from_vec(vec![1.0; 4]);
+        let mut plain = FlatVec::zeros(4);
+        let mut heavy = FlatVec::zeros(4);
+        let mut opt_p = Sgd::new(LrSchedule::Constant(0.1), 0.0);
+        let mut opt_m = Sgd::new(LrSchedule::Constant(0.1), 0.0).with_momentum(0.9);
+        for t in 0..20 {
+            opt_p.step(&mut plain, &g, t).unwrap();
+            opt_m.step(&mut heavy, &g, t).unwrap();
+        }
+        assert!(heavy.as_slice()[0] < plain.as_slice()[0] - 1.0);
+    }
+
+    #[test]
+    fn momentum_buffer_tracks_dim() {
+        let mut opt = Sgd::new(LrSchedule::Constant(0.1), 0.0).with_momentum(0.5);
+        let mut p = FlatVec::zeros(4);
+        let g = FlatVec::from_vec(vec![1.0; 4]);
+        opt.step(&mut p, &g, 0).unwrap();
+        let mut p2 = FlatVec::zeros(8);
+        let g2 = FlatVec::zeros(8);
+        assert!(opt.step(&mut p2, &g2, 0).is_err());
+    }
+}

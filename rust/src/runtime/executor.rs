@@ -1,0 +1,223 @@
+//! The PJRT executor: typed entry points over the four AOT programs.
+//!
+//! `ModelRuntime::load` parses the manifest, reads each program's HLO
+//! *text* (the interchange format — see `python/compile/aot.py`), compiles
+//! it once on the CPU PJRT client, and exposes:
+//!
+//! * [`ModelRuntime::train_step`] — `(params, batch) → (loss, grads)`
+//! * [`ModelRuntime::eval_step`]  — `(params, batch) → (loss, #correct)`
+//! * [`ModelRuntime::sgd_update`] — the fused optimizer artifact
+//! * [`ModelRuntime::mix`]        — the Pallas gossip blend
+//!
+//! [`PjrtSource`] adapts the runtime + a [`BatchSampler`] into the
+//! engine's [`GradSource`], putting the real Layer-2 CNN behind the same
+//! interface as the synthetic sources.
+
+use std::path::Path;
+
+use crate::data::BatchSampler;
+use crate::error::{Error, Result};
+use crate::model::Manifest;
+use crate::runtime::literal::{f32_literal, f32_scalar1, i32_literal, to_f32_scalar, to_flatvec};
+use crate::strategies::grad::GradSource;
+use crate::tensor::FlatVec;
+
+/// A compiled model: PJRT client + the four loaded executables.
+pub struct ModelRuntime {
+    manifest: Manifest,
+    // Field order matters: executables must drop before the client.
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    sgd: xla::PjRtLoadedExecutable,
+    mix: xla::PjRtLoadedExecutable,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+}
+
+impl ModelRuntime {
+    /// Load and compile every program under `dir` (an artifact model dir,
+    /// e.g. `artifacts/cnn`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.program_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::artifact("non-utf8 artifact path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        Ok(ModelRuntime {
+            train: compile("train_step")?,
+            eval: compile("eval_step")?,
+            sgd: compile("sgd_update")?,
+            mix: compile("mix")?,
+            manifest,
+            client,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.manifest.param_count
+    }
+
+    fn check_params(&self, params: &FlatVec) -> Result<()> {
+        if params.len() != self.manifest.param_count {
+            return Err(Error::shape(format!(
+                "params len {} vs model {}",
+                params.len(),
+                self.manifest.param_count
+            )));
+        }
+        Ok(())
+    }
+
+    fn batch_shape(&self, n: usize) -> Vec<usize> {
+        let mut s = vec![n];
+        s.extend(&self.manifest.image_shape);
+        s
+    }
+
+    /// One forward/backward pass: returns `(loss, flat_grads)`.
+    pub fn train_step(
+        &self,
+        params: &FlatVec,
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<(f64, FlatVec)> {
+        self.check_params(params)?;
+        let b = self.manifest.batch;
+        if labels.len() != b {
+            return Err(Error::shape(format!("labels len {} vs batch {b}", labels.len())));
+        }
+        let args = [
+            f32_literal(params.as_slice(), &[params.len()])?,
+            f32_literal(images, &self.batch_shape(b))?,
+            i32_literal(labels, &[b])?,
+        ];
+        let result = self.train.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (loss_lit, grads_lit) = result.to_tuple2()?;
+        let loss = to_f32_scalar(&loss_lit)? as f64;
+        let grads = to_flatvec(&grads_lit, params.len())?;
+        Ok((loss, grads))
+    }
+
+    /// Validation pass: returns `(mean_loss, correct_count)`.
+    pub fn eval_step(
+        &self,
+        params: &FlatVec,
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<(f64, f64)> {
+        self.check_params(params)?;
+        let b = self.manifest.eval_batch;
+        if labels.len() != b {
+            return Err(Error::shape(format!(
+                "eval labels len {} vs eval_batch {b}",
+                labels.len()
+            )));
+        }
+        let args = [
+            f32_literal(params.as_slice(), &[params.len()])?,
+            f32_literal(images, &self.batch_shape(b))?,
+            i32_literal(labels, &[b])?,
+        ];
+        let result = self.eval.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (loss_lit, correct_lit) = result.to_tuple2()?;
+        Ok((to_f32_scalar(&loss_lit)? as f64, to_f32_scalar(&correct_lit)? as f64))
+    }
+
+    /// Fused optimizer artifact: `p − lr·(g + wd·p)`.
+    pub fn sgd_update(
+        &self,
+        params: &FlatVec,
+        grads: &FlatVec,
+        lr: f32,
+        wd: f32,
+    ) -> Result<FlatVec> {
+        self.check_params(params)?;
+        self.check_params(grads)?;
+        let args = [
+            f32_literal(params.as_slice(), &[params.len()])?,
+            f32_literal(grads.as_slice(), &[grads.len()])?,
+            f32_scalar1(lr),
+            f32_scalar1(wd),
+        ];
+        let result = self.sgd.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        to_flatvec(&result.to_tuple1()?, params.len())
+    }
+
+    /// The Pallas gossip blend artifact (paper Algorithm 4 line 9):
+    /// `(w_r·x_r + w_s·x_s)/(w_r+w_s)`.
+    pub fn mix(&self, x_r: &FlatVec, x_s: &FlatVec, w_r: f32, w_s: f32) -> Result<FlatVec> {
+        self.check_params(x_r)?;
+        self.check_params(x_s)?;
+        let args = [
+            f32_literal(x_r.as_slice(), &[x_r.len()])?,
+            f32_literal(x_s.as_slice(), &[x_s.len()])?,
+            f32_scalar1(w_r),
+            f32_scalar1(w_s),
+        ];
+        let result = self.mix.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        to_flatvec(&result.to_tuple1()?, x_r.len())
+    }
+
+    /// Evaluate over `n_batches` validation batches: `(mean_loss, accuracy)`.
+    pub fn evaluate(&self, params: &FlatVec, sampler: &BatchSampler, n_batches: u64) -> Result<(f64, f64)> {
+        let b = self.manifest.eval_batch;
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        for i in 0..n_batches {
+            let batch = sampler.val_batch(i, b);
+            let (loss, c) = self.eval_step(params, &batch.images, &batch.labels)?;
+            loss_sum += loss;
+            correct += c;
+        }
+        Ok((
+            loss_sum / n_batches as f64,
+            correct / (n_batches as f64 * b as f64),
+        ))
+    }
+}
+
+/// [`GradSource`] over the real model: worker `m`'s gradient at engine
+/// step `t` comes from its sharded synthetic-CIFAR batch through the
+/// `train_step` artifact.
+pub struct PjrtSource<'rt> {
+    runtime: &'rt ModelRuntime,
+    sampler: BatchSampler,
+    /// Per-worker local step counters (engine ticks are global).
+    local_steps: Vec<u64>,
+}
+
+impl<'rt> PjrtSource<'rt> {
+    pub fn new(runtime: &'rt ModelRuntime, sampler: BatchSampler, workers: usize) -> Self {
+        assert_eq!(sampler.batch_size(), runtime.manifest().batch);
+        PjrtSource { runtime, sampler, local_steps: vec![0; workers + 1] }
+    }
+
+    pub fn sampler(&self) -> &BatchSampler {
+        &self.sampler
+    }
+}
+
+impl<'rt> GradSource for PjrtSource<'rt> {
+    fn grad(&mut self, m: usize, params: &FlatVec, _step: u64, out: &mut FlatVec) -> Result<f64> {
+        let local = self.local_steps[m];
+        self.local_steps[m] += 1;
+        let batch = self.sampler.train_batch(m, local);
+        let (loss, grads) = self.runtime.train_step(params, &batch.images, &batch.labels)?;
+        out.as_mut_slice().copy_from_slice(grads.as_slice());
+        Ok(loss)
+    }
+
+    fn dim(&self) -> usize {
+        self.runtime.param_count()
+    }
+}

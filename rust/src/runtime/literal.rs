@@ -1,0 +1,113 @@
+//! `FlatVec`/host-buffer ⇄ `xla::Literal` conversion helpers.
+//!
+//! The xla crate moves data as `Literal`s.  These helpers keep all shape
+//! bookkeeping in one place and, for the hot path, avoid intermediate
+//! copies where the API allows.
+
+use crate::error::{Error, Result};
+use crate::tensor::FlatVec;
+
+/// f32 literal of arbitrary shape from a host slice.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let elems: usize = shape.iter().product();
+    if elems != data.len() {
+        return Err(Error::shape(format!(
+            "literal shape {shape:?} ({elems}) vs data len {}",
+            data.len()
+        )));
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// i32 literal (labels).
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let elems: usize = shape.iter().product();
+    if elems != data.len() {
+        return Err(Error::shape(format!(
+            "literal shape {shape:?} ({elems}) vs data len {}",
+            data.len()
+        )));
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Scalar-or-[1] f32 literal (lr / weight arguments).
+pub fn f32_scalar1(v: f32) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+/// Extract an f32 vector from a literal into a `FlatVec`.
+pub fn to_flatvec(lit: &xla::Literal, expect_len: usize) -> Result<FlatVec> {
+    let v: Vec<f32> = lit.to_vec()?;
+    if v.len() != expect_len {
+        return Err(Error::shape(format!(
+            "literal has {} elems, expected {expect_len}",
+            v.len()
+        )));
+    }
+    Ok(FlatVec::from_vec(v))
+}
+
+/// Extract a scalar f32 (shape `[]` or `[1]`).
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v: Vec<f32> = lit.to_vec()?;
+    v.first()
+        .copied()
+        .ok_or_else(|| Error::shape("empty literal where scalar expected"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip_1d() {
+        let data = vec![1.0f32, 2.0, 3.0];
+        let lit = f32_literal(&data, &[3]).unwrap();
+        let back = to_flatvec(&lit, 3).unwrap();
+        assert_eq!(back.as_slice(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn f32_round_trip_4d() {
+        let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let lit = f32_literal(&data, &[2, 2, 2, 3]).unwrap();
+        let back: Vec<f32> = lit.to_vec().unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(i32_literal(&[1, 2], &[1]).is_err());
+    }
+
+    #[test]
+    fn i32_labels() {
+        let lit = i32_literal(&[3, 1, 4], &[3]).unwrap();
+        let back: Vec<i32> = lit.to_vec().unwrap();
+        assert_eq!(back, vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let lit = f32_scalar1(2.5);
+        assert_eq!(to_f32_scalar(&lit).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn to_flatvec_length_guard() {
+        let lit = f32_literal(&[1.0, 2.0], &[2]).unwrap();
+        assert!(to_flatvec(&lit, 3).is_err());
+    }
+}

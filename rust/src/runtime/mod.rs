@@ -1,0 +1,11 @@
+//! PJRT runtime: load and execute the AOT artifacts.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute`) behind typed entry points for
+//! the four exported programs.  Python never runs here — the HLO text was
+//! produced once by `make artifacts`.
+
+pub mod executor;
+pub mod literal;
+
+pub use executor::{ModelRuntime, PjrtSource};

@@ -1,0 +1,544 @@
+//! Discrete-event engine for wall-clock experiments (paper Fig. 2).
+//!
+//! Time is simulated; gradients are real.  Every worker alternates
+//! compute and (strategy-dependent) communication; the event queue orders
+//! everything by simulated seconds.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::error::Result;
+use crate::gossip::SumWeight;
+use crate::strategies::grad::GradSource;
+use crate::tensor::FlatVec;
+use crate::util::rng::Rng;
+
+/// Cluster timing parameters (seconds).
+#[derive(Clone, Debug)]
+pub struct TimeModel {
+    /// Mean gradient-step compute time per worker.
+    pub compute: f64,
+    /// Uniform jitter fraction on compute time (`±compute_jitter`).
+    pub compute_jitter: f64,
+    /// Probability a step hits a straggler event (OS jitter, allocator,
+    /// ECC scrub, …) and takes `straggler_factor × compute` extra.
+    pub straggler_prob: f64,
+    pub straggler_factor: f64,
+    /// One-way network latency for a parameter message.
+    pub latency: f64,
+    /// Uniform jitter fraction on latency.
+    pub latency_jitter: f64,
+    /// Master service time per sync request (serialization point).
+    pub master_service: f64,
+}
+
+impl TimeModel {
+    /// Calibration used by the Fig. 2 harness, set to GPU-era ratios for
+    /// the paper's CNN (~1.7M params ≈ 7 MB messages): a gradient step ≈
+    /// 100 ms; shipping a model one-way ≈ 50 ms; master combine ≈ 20 ms
+    /// per worker; a 5% heavy-tail straggler on compute (the cost global
+    /// barriers actually pay in practice).
+    pub fn paper_like() -> Self {
+        TimeModel {
+            compute: 0.100,
+            compute_jitter: 0.15,
+            straggler_prob: 0.05,
+            straggler_factor: 3.0,
+            latency: 0.050,
+            latency_jitter: 0.25,
+            master_service: 0.020,
+        }
+    }
+
+    fn draw_compute(&self, rng: &mut Rng) -> f64 {
+        let base = self.compute * (1.0 + self.compute_jitter * (2.0 * rng.f64() - 1.0));
+        if rng.bernoulli(self.straggler_prob) {
+            base + self.straggler_factor * self.compute
+        } else {
+            base
+        }
+    }
+
+    fn draw_latency(&self, rng: &mut Rng) -> f64 {
+        self.latency * (1.0 + self.latency_jitter * (2.0 * rng.f64() - 1.0))
+    }
+}
+
+/// Strategy semantics under simulated time.
+#[derive(Clone, Debug)]
+pub enum DesStrategy {
+    GoSgd { p: f64 },
+    /// Ablation (paper section 4, third paragraph): *symmetric* gossip —
+    /// sender and receiver rendezvous and swap, so the sender blocks until
+    /// the receiver is free.  The paper rejects this design because "local
+    /// blocking waits can cause global synchronization issues"; this
+    /// variant quantifies the cost it avoids.
+    SymmetricGossip { p: f64 },
+    Easgd { alpha: f64, tau: u64 },
+    PerSyn { tau: u64 },
+    Local,
+}
+
+impl DesStrategy {
+    pub fn name(&self) -> String {
+        match self {
+            DesStrategy::GoSgd { p } => format!("gosgd(p={p})"),
+            DesStrategy::SymmetricGossip { p } => format!("symgossip(p={p})"),
+            DesStrategy::Easgd { alpha, tau } => format!("easgd(alpha={alpha:.3},tau={tau})"),
+            DesStrategy::PerSyn { tau } => format!("persyn(tau={tau})"),
+            DesStrategy::Local => "local".into(),
+        }
+    }
+}
+
+/// Priority-queue event.
+#[derive(Debug)]
+enum EventKind {
+    /// Worker finished a compute step (or resumed from a block).
+    Wake(usize),
+    /// A gossip message lands in worker `to`'s mailbox.
+    Deliver { to: usize, params: FlatVec, weight: f64 },
+}
+
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap: earlier time first; seq breaks ties deterministically
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// A `(sim_time_seconds, loss)` training trace plus accounting.
+#[derive(Debug, Default)]
+pub struct DesReport {
+    pub trace: Vec<(f64, f64)>,
+    pub messages: u64,
+    /// Total seconds workers spent blocked on synchronization.
+    pub blocked_secs: f64,
+    /// Total local gradient steps executed.
+    pub steps: u64,
+    /// Final simulated time.
+    pub end_time: f64,
+}
+
+struct WorkerState {
+    x: FlatVec,
+    weight: SumWeight,
+    mailbox: Vec<(FlatVec, f64)>,
+    local_step: u64,
+    /// PerSyn: parked at the barrier.
+    at_barrier: bool,
+}
+
+/// The discrete-event engine.
+pub struct DesEngine {
+    strategy: DesStrategy,
+    time_model: TimeModel,
+    workers: Vec<WorkerState>,
+    master: FlatVec,
+
+    /// PerSyn/EASGD barrier bookkeeping.
+    barrier_arrivals: Vec<f64>,
+    /// Symmetric gossip: when each worker's current compute finishes
+    /// (earliest rendezvous point) and handshake delays owed at next wake.
+    busy_until: Vec<f64>,
+    pending_delay: Vec<f64>,
+    events: BinaryHeap<Event>,
+    seq: u64,
+    eta: f32,
+    weight_decay: f32,
+    rng: Rng,
+    grad_buf: FlatVec,
+    report: DesReport,
+}
+
+impl DesEngine {
+    pub fn new(
+        strategy: DesStrategy,
+        time_model: TimeModel,
+        workers: usize,
+        init: &FlatVec,
+        eta: f32,
+        weight_decay: f32,
+        seed: u64,
+    ) -> Self {
+        assert!(workers >= 2);
+        let ws = (0..workers)
+            .map(|_| WorkerState {
+                x: init.clone(),
+                weight: SumWeight::init(workers),
+                mailbox: Vec::new(),
+                local_step: 0,
+                at_barrier: false,
+            })
+            .collect();
+        let mut eng = DesEngine {
+            strategy,
+            time_model,
+            workers: ws,
+            master: init.clone(),
+            barrier_arrivals: Vec::new(),
+            busy_until: vec![0.0; workers],
+            pending_delay: vec![0.0; workers],
+            events: BinaryHeap::new(),
+            seq: 0,
+            eta,
+            weight_decay,
+            rng: Rng::new(seed),
+            grad_buf: FlatVec::zeros(init.len()),
+            report: DesReport::default(),
+        };
+        // Stagger initial wakes slightly so workers don't tick in lockstep.
+        for w in 0..workers {
+            let dt = eng.time_model.draw_compute(&mut eng.rng);
+            eng.schedule(dt, EventKind::Wake(w));
+        }
+        eng
+    }
+
+    fn schedule(&mut self, at: f64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Event { time: at, seq: self.seq, kind });
+    }
+
+    /// Run until simulated `horizon` seconds (or the event queue drains).
+    pub fn run(&mut self, grad: &mut dyn GradSource, horizon: f64) -> Result<&DesReport> {
+        while let Some(ev) = self.events.pop() {
+            if ev.time > horizon {
+                self.report.end_time = horizon;
+                break;
+            }
+            self.report.end_time = ev.time;
+            match ev.kind {
+                EventKind::Deliver { to, params, weight } => {
+                    self.workers[to].mailbox.push((params, weight));
+                }
+                EventKind::Wake(w) => self.wake(w, ev.time, grad)?,
+            }
+        }
+        Ok(&self.report)
+    }
+
+    fn wake(&mut self, w: usize, now: f64, grad: &mut dyn GradSource) -> Result<()> {
+        // 0. Pay any handshake delay owed from a symmetric rendezvous the
+        //    worker was dragged into while computing.
+        if self.pending_delay[w] > 0.0 {
+            let d = std::mem::take(&mut self.pending_delay[w]);
+            self.report.blocked_secs += d;
+            self.busy_until[w] = now + d;
+            self.schedule(now + d, EventKind::Wake(w));
+            return Ok(());
+        }
+        // 1. Process pending messages (GoSGD ProcessMessages).
+        let pending = std::mem::take(&mut self.workers[w].mailbox);
+        for (params, weight) in pending {
+            let t = self.workers[w].weight.absorb(SumWeight::from_value(weight));
+            self.workers[w].x.mix_from(&params, 1.0 - t, t)?;
+        }
+
+        // 2. Local gradient step.
+        let step = self.workers[w].local_step;
+        let loss = grad.grad(w + 1, &self.workers[w].x, step, &mut self.grad_buf)?;
+        self.workers[w]
+            .x
+            .sgd_step(&self.grad_buf, self.eta, self.weight_decay)?;
+        self.workers[w].local_step += 1;
+        self.report.steps += 1;
+        self.report.trace.push((now, loss));
+
+        // 3. Strategy-specific communication + next wake.
+        match self.strategy.clone() {
+            DesStrategy::Local => {
+                let dt = self.time_model.draw_compute(&mut self.rng);
+                self.schedule(now + dt, EventKind::Wake(w));
+            }
+            DesStrategy::GoSgd { p } => {
+                if self.rng.bernoulli(p) {
+                    let m = self.workers.len();
+                    let r = self.rng.peer(m, w);
+                    let shipped = self.workers[w].weight.halve_for_send();
+                    let latency = self.time_model.draw_latency(&mut self.rng);
+                    let params = self.workers[w].x.clone();
+                    self.report.messages += 1;
+                    self.schedule(
+                        now + latency,
+                        EventKind::Deliver { to: r, params, weight: shipped.value() },
+                    );
+                }
+                // Fire-and-forget: compute continues immediately.
+                let dt = self.time_model.draw_compute(&mut self.rng);
+                self.busy_until[w] = now + dt;
+                self.schedule(now + dt, EventKind::Wake(w));
+            }
+            DesStrategy::SymmetricGossip { p } => {
+                let mut resume = now;
+                if self.rng.bernoulli(p) {
+                    let m = self.workers.len();
+                    let r = self.rng.peer(m, w);
+                    // Rendezvous: wait for r to finish its current step,
+                    // then a two-way swap (2 messages, 2 latencies).
+                    let wait = (self.busy_until[r] - now).max(0.0);
+                    let lat = self.time_model.draw_latency(&mut self.rng)
+                        + self.time_model.draw_latency(&mut self.rng);
+                    // Pairwise average both models (symmetric exchange).
+                    let xr = self.workers[r].x.clone();
+                    self.workers[w].x.mix_from(&xr, 0.5, 0.5)?;
+                    self.workers[r].x = self.workers[w].x.clone();
+                    self.report.messages += 2;
+                    // Sender blocks for the wait + handshake; receiver owes
+                    // the handshake at its next wake.
+                    self.report.blocked_secs += wait + lat;
+                    self.pending_delay[r] += lat;
+                    resume = now + wait + lat;
+                }
+                let dt = self.time_model.draw_compute(&mut self.rng);
+                self.busy_until[w] = resume + dt;
+                self.schedule(resume + dt, EventKind::Wake(w));
+            }
+            DesStrategy::Easgd { alpha, tau } => {
+                if self.workers[w].local_step % tau == 0 {
+                    // Paper section 3.2: "a global synchronization is still
+                    // required as the master has to [combine] local models
+                    // that have been updated the same number of times."
+                    // Workers park at the barrier; when the last arrives,
+                    // each ships its model (latency), the master services
+                    // the elastic updates serially, then broadcasts back.
+                    self.workers[w].at_barrier = true;
+                    self.barrier_arrivals.push(now);
+                    let m = self.workers.len();
+                    if self.barrier_arrivals.len() == m {
+                        let last = self
+                            .barrier_arrivals
+                            .iter()
+                            .cloned()
+                            .fold(0.0f64, f64::max);
+                        let up = self.time_model.draw_latency(&mut self.rng);
+                        let service = self.time_model.master_service * m as f64;
+                        let down = self.time_model.draw_latency(&mut self.rng);
+                        let resume = last + up + service + down;
+                        // Elastic move (x̃ uses pre-sync worker states).
+                        let a = alpha as f32;
+                        let old_master = self.master.clone();
+                        let mut sum_delta = FlatVec::zeros(old_master.len());
+                        for ws in &self.workers {
+                            let mut d = ws.x.clone();
+                            d.axpy(-1.0, &old_master)?;
+                            sum_delta.add_assign(&d)?;
+                        }
+                        self.master.axpy(a, &sum_delta)?;
+                        for i in 0..m {
+                            let xw = &mut self.workers[i].x;
+                            xw.scale(1.0 - a);
+                            xw.axpy(a, &old_master)?;
+                            self.workers[i].at_barrier = false;
+                        }
+                        self.report.messages += 2 * m as u64;
+                        for arrival in self.barrier_arrivals.clone() {
+                            self.report.blocked_secs += resume - arrival;
+                        }
+                        for i in 0..m {
+                            let dt = self.time_model.draw_compute(&mut self.rng);
+                            self.schedule(resume + dt, EventKind::Wake(i));
+                        }
+                        self.barrier_arrivals.clear();
+                    }
+                    // else: parked until the barrier releases
+                } else {
+                    let dt = self.time_model.draw_compute(&mut self.rng);
+                    self.schedule(now + dt, EventKind::Wake(w));
+                }
+            }
+            DesStrategy::PerSyn { tau } => {
+                if self.workers[w].local_step % tau == 0 {
+                    // Park at the barrier.
+                    self.workers[w].at_barrier = true;
+                    self.barrier_arrivals.push(now);
+                    let m = self.workers.len();
+                    if self.barrier_arrivals.len() == m {
+                        // Everyone arrived: average, pay gather+broadcast.
+                        let refs: Vec<&FlatVec> = self.workers.iter().map(|s| &s.x).collect();
+                        let mean = FlatVec::mean_of(&refs)?;
+                        let last = self
+                            .barrier_arrivals
+                            .iter()
+                            .cloned()
+                            .fold(0.0f64, f64::max);
+                        let gather = self.time_model.draw_latency(&mut self.rng);
+                        let service = self.time_model.master_service * m as f64;
+                        let bcast = self.time_model.draw_latency(&mut self.rng);
+                        let resume = last + gather + service + bcast;
+                        self.report.messages += 2 * m as u64;
+                        for (i, arrival) in self.barrier_arrivals.clone().iter().enumerate() {
+                            self.report.blocked_secs += resume - arrival;
+                            self.workers[i].x = mean.clone();
+                            self.workers[i].at_barrier = false;
+                            let dt = self.time_model.draw_compute(&mut self.rng);
+                            self.schedule(resume + dt, EventKind::Wake(i));
+                        }
+                        self.master = mean;
+                        self.barrier_arrivals.clear();
+                    }
+                    // else: stay parked (no wake scheduled until release)
+                } else {
+                    let dt = self.time_model.draw_compute(&mut self.rng);
+                    self.schedule(now + dt, EventKind::Wake(w));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean worker model at the end of the run.
+    pub fn consensus_model(&self) -> Result<FlatVec> {
+        let refs: Vec<&FlatVec> = self.workers.iter().map(|s| &s.x).collect();
+        FlatVec::mean_of(&refs)
+    }
+
+    pub fn report(&self) -> &DesReport {
+        &self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::grad::QuadraticSource;
+
+    fn run(strategy: DesStrategy, horizon: f64, seed: u64) -> (DesReport, FlatVec) {
+        let dim = 32;
+        let mut grad = QuadraticSource::new(dim, 0.1, seed);
+        let init = FlatVec::zeros(dim);
+        let mut eng = DesEngine::new(
+            strategy,
+            TimeModel::paper_like(),
+            8,
+            &init,
+            1.0,
+            0.0,
+            seed ^ 0xD5,
+        );
+        eng.run(&mut grad, horizon).unwrap();
+        let model = eng.consensus_model().unwrap();
+        (std::mem::take(&mut eng.report), model)
+    }
+
+    #[test]
+    fn gosgd_never_blocks() {
+        let (rep, _) = run(DesStrategy::GoSgd { p: 0.1 }, 30.0, 1);
+        assert_eq!(rep.blocked_secs, 0.0);
+        assert!(rep.messages > 0);
+        // 8 workers, ~0.1 s/step, 30 s -> ~2400 steps
+        assert!(rep.steps > 2000, "{}", rep.steps);
+    }
+
+    #[test]
+    fn easgd_blocks_and_loses_throughput() {
+        let (gossip, _) = run(DesStrategy::GoSgd { p: 0.1 }, 30.0, 2);
+        let (easgd, _) = run(
+            DesStrategy::Easgd { alpha: 0.9 / 8.0, tau: 10 },
+            30.0,
+            2,
+        );
+        assert!(easgd.blocked_secs > 0.0);
+        assert!(
+            easgd.steps < gossip.steps,
+            "easgd {} vs gossip {}",
+            easgd.steps,
+            gossip.steps
+        );
+    }
+
+    #[test]
+    fn sync_strategies_block_gossip_does_not() {
+        let (easgd, _) = run(DesStrategy::Easgd { alpha: 0.9 / 8.0, tau: 10 }, 30.0, 3);
+        let (persyn, _) = run(DesStrategy::PerSyn { tau: 10 }, 30.0, 3);
+        let (gossip, _) = run(DesStrategy::GoSgd { p: 0.1 }, 30.0, 3);
+        assert!(easgd.blocked_secs > 1.0, "easgd blocked {}", easgd.blocked_secs);
+        assert!(persyn.blocked_secs > 1.0, "persyn blocked {}", persyn.blocked_secs);
+        assert_eq!(gossip.blocked_secs, 0.0);
+    }
+
+    #[test]
+    fn all_strategies_descend_in_sim_time() {
+        for s in [
+            DesStrategy::GoSgd { p: 0.05 },
+            DesStrategy::Easgd { alpha: 0.9 / 8.0, tau: 20 },
+            DesStrategy::PerSyn { tau: 20 },
+            DesStrategy::Local,
+        ] {
+            let name = s.name();
+            let (rep, _) = run(s, 60.0, 4);
+            let early: f64 =
+                rep.trace.iter().take(50).map(|(_, l)| l).sum::<f64>() / 50.0;
+            let n = rep.trace.len();
+            let late: f64 = rep.trace[n - 50..].iter().map(|(_, l)| l).sum::<f64>() / 50.0;
+            assert!(late < early * 0.7, "{name}: {early} -> {late}");
+        }
+    }
+
+    #[test]
+    fn trace_times_are_monotone() {
+        let (rep, _) = run(DesStrategy::GoSgd { p: 0.2 }, 10.0, 5);
+        for pair in rep.trace.windows(2) {
+            assert!(pair[0].0 <= pair[1].0);
+        }
+        assert!(rep.end_time <= 10.0 + 1e-9);
+    }
+
+    #[test]
+    fn symmetric_gossip_pays_blocking_asymmetric_does_not() {
+        // The paper's section-4 design argument, quantified: at the same
+        // exchange rate the symmetric variant blocks (rendezvous + two-way
+        // handshake) while GoSGD never does, so GoSGD sustains more steps.
+        let (asym, _) = run(DesStrategy::GoSgd { p: 0.3 }, 40.0, 21);
+        let (sym, _) = run(DesStrategy::SymmetricGossip { p: 0.3 }, 40.0, 21);
+        assert_eq!(asym.blocked_secs, 0.0);
+        assert!(sym.blocked_secs > 1.0, "sym blocked {}", sym.blocked_secs);
+        assert!(
+            asym.steps as f64 > sym.steps as f64 * 1.05,
+            "asym {} vs sym {}",
+            asym.steps,
+            sym.steps
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a, ma) = run(DesStrategy::GoSgd { p: 0.1 }, 15.0, 9);
+        let (b, mb) = run(DesStrategy::GoSgd { p: 0.1 }, 15.0, 9);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(ma.as_slice(), mb.as_slice());
+    }
+
+    #[test]
+    fn persyn_workers_all_park_and_release() {
+        // With tau=5 over a long horizon, steps must be shared evenly:
+        // the barrier forces lockstep progress.
+        let (rep, _) = run(DesStrategy::PerSyn { tau: 5 }, 40.0, 11);
+        assert!(rep.steps > 0);
+        // Every completed barrier costs exactly 2M = 16 messages, so the
+        // total must be a multiple of 16.
+        assert_eq!(rep.messages % 16, 0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Discrete-event simulation of the cluster's *time* behaviour.
+//!
+//! The paper's Fig. 2 compares GoSGD and EASGD against the **real-world
+//! clock**: GoSGD wins because its exchanges never block, while EASGD
+//! serializes through a master every `tau` steps.  This testbed has a
+//! single CPU core, so native threads cannot honestly show that effect —
+//! instead [`des::DesEngine`] simulates it exactly: per-step compute time,
+//! per-message network latency, a serially-serviced master, and blocking
+//! semantics per strategy, while the *gradients remain real* (any
+//! [`GradSource`](crate::strategies::grad::GradSource), including the PJRT
+//! model).  DESIGN.md §Substitutions documents the mapping.
+//!
+//! The simulated quantities per strategy:
+//!
+//! * **GoSGD** — send is fire-and-forget (`latency` to deliver); a worker
+//!   never waits.  Wall time per worker = Σ compute.
+//! * **EASGD** — every `tau` local steps the worker sends its model to the
+//!   master and *blocks* until the elastic reply returns.  The master is a
+//!   serial resource: concurrent syncs queue (the "critical resource"
+//!   contention of paper section 2.1).
+//! * **PerSyn** — a global barrier every `tau` rounds: everyone waits for
+//!   the straggler, then for the master's gather+broadcast.
+
+pub mod des;
+
+pub use des::{DesEngine, DesReport, DesStrategy, TimeModel};

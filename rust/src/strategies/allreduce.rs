@@ -1,0 +1,105 @@
+//! Fully synchronous SGD (paper Algorithm 1).
+//!
+//! Every round, all workers' post-update variables are replaced by their
+//! mean.  Because all workers start each round from the same point, this
+//! is *exactly* equivalent to single-node SGD with an M× bigger batch
+//! (paper section 2.1, footnote 1) — the equivalence test below checks it
+//! to floating-point tolerance.
+//!
+//! Communication cost per round: 2M messages (M gradients up, M models
+//! down) and one global barrier — the inefficiency the paper sets out to
+//! remove.
+
+use crate::error::Result;
+use crate::framework::generators;
+use crate::strategies::{Clock, ClusterState, Strategy};
+use crate::util::rng::Rng;
+
+/// Algorithm 1: average everything every round.
+#[derive(Default)]
+pub struct AllReduce;
+
+impl Strategy for AllReduce {
+    fn name(&self) -> String {
+        "allreduce".into()
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::Synchronous
+    }
+
+    fn after_round(&mut self, _t: u64, state: &mut ClusterState, _rng: &mut Rng) -> Result<()> {
+        let m = state.workers();
+        let mean = state.stacked.worker_mean()?;
+        let bytes = mean.len() * 4;
+        for slot in 0..=m {
+            *state.stacked.get_mut(slot) = mean.clone();
+        }
+        // 2M messages: every worker ships its model/gradient to the master
+        // and receives the average back (section 2.1 phases 1 & 3).
+        for _ in 0..(2 * m) {
+            state.count_message(bytes);
+        }
+        state.count_barrier();
+        state.record_matrix(generators::allreduce(m)?);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::engine::Engine;
+    use crate::strategies::grad::{GradSource, QuadraticSource};
+    use crate::tensor::FlatVec;
+
+    #[test]
+    fn all_workers_stay_identical() {
+        let dim = 16;
+        let src = QuadraticSource::new(dim, 0.2, 3);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(Box::new(AllReduce), src, 4, &init, 0.5, 0.0, 1);
+        eng.run(50).unwrap();
+        let eps = eng.state().stacked.consensus_error().unwrap();
+        assert!(eps < 1e-10, "allreduce must keep exact consensus, eps={eps}");
+        assert_eq!(eng.state().comm.barriers, 50);
+        assert_eq!(eng.state().comm.messages, 50 * 8);
+    }
+
+    #[test]
+    fn equivalent_to_m_times_bigger_batch() {
+        // Distributed run: M workers, each one noisy gradient per round,
+        // averaged. Single run: one worker whose gradient is the average of
+        // the same M draws. Resulting trajectories must match exactly.
+        let dim = 8;
+        let m = 4;
+        let eta = 0.3f32;
+        let steps = 25u64;
+        let init = FlatVec::zeros(dim);
+
+        // --- distributed ---
+        let src = QuadraticSource::new(dim, 0.25, 9);
+        let mut eng = Engine::new(Box::new(AllReduce), src, m, &init, eta, 0.0, 5);
+        eng.run(steps).unwrap();
+        let distributed = eng.state().stacked.worker(1).clone();
+
+        // --- single big batch, replaying the identical noise draws ---
+        let mut src2 = QuadraticSource::new(dim, 0.25, 9);
+        let mut x = init.clone();
+        let mut g = FlatVec::zeros(dim);
+        for t in 0..steps {
+            let mut avg = FlatVec::zeros(dim);
+            for w in 1..=m {
+                src2.grad(w, &x, t, &mut g).unwrap();
+                avg.axpy(1.0 / m as f32, &g).unwrap();
+            }
+            x.sgd_step(&avg, eta, 0.0).unwrap();
+        }
+
+        for i in 0..dim {
+            let a = distributed.as_slice()[i];
+            let b = x.as_slice()[i];
+            assert!((a - b).abs() < 1e-4, "component {i}: {a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Downpour SGD (paper section 3.3, reference [10]).
+//!
+//! Asynchronous master-based training: each worker keeps a local replica,
+//! accumulates its gradients, and at its own pace (a) pushes the
+//! accumulated gradient to the master and (b) fetches the master's current
+//! model.  The paper's framework expresses these as the `K^(send)` /
+//! `K^(receive)` matrices; operationally:
+//!
+//! * every `n_push` local steps: `x̃ ← x̃ − η · acc_m`, `acc_m ← 0`
+//! * every `n_fetch` local steps: `x_m ← x̃`
+//!
+//! The master is a communication bottleneck and single point of failure —
+//! the weakness GoSGD removes (paper section 3.3, last paragraph).
+
+use crate::error::Result;
+use crate::strategies::{Clock, ClusterState, Strategy};
+use crate::tensor::FlatVec;
+use crate::util::rng::Rng;
+
+/// Asynchronous parameter-server strategy.
+pub struct Downpour {
+    n_push: u64,
+    n_fetch: u64,
+    eta: f32,
+    /// Per-worker gradient accumulators (index 0 unused).
+    acc: Vec<FlatVec>,
+}
+
+impl Downpour {
+    /// `n_push` / `n_fetch`: local steps between pushes / fetches.
+    /// `eta` must match the engine's learning rate (the master applies the
+    /// accumulated gradient with the same step size).
+    pub fn new(n_push: u64, n_fetch: u64, eta: f32) -> Self {
+        assert!(n_push >= 1 && n_fetch >= 1);
+        Downpour { n_push, n_fetch, eta, acc: Vec::new() }
+    }
+
+    fn ensure_acc(&mut self, workers: usize, dim: usize) {
+        if self.acc.len() != workers + 1 {
+            self.acc = vec![FlatVec::zeros(dim); workers + 1];
+        }
+    }
+}
+
+impl Strategy for Downpour {
+    fn name(&self) -> String {
+        format!("downpour(push={},fetch={})", self.n_push, self.n_fetch)
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::Asynchronous
+    }
+
+    fn after_local_step(
+        &mut self,
+        _t: u64,
+        m: usize,
+        grad: &FlatVec,
+        state: &mut ClusterState,
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        let workers = state.workers();
+        self.ensure_acc(workers, grad.len());
+        self.acc[m].add_assign(grad)?;
+        let local_steps = state.steps[m];
+        let bytes = grad.len() * 4;
+
+        if local_steps % self.n_push == 0 {
+            // Master applies the accumulated gradient (send phase).
+            let acc = std::mem::replace(&mut self.acc[m], FlatVec::zeros(grad.len()));
+            state.stacked.get_mut(0).axpy(-self.eta, &acc)?;
+            state.count_message(bytes);
+        }
+        if local_steps % self.n_fetch == 0 {
+            // Worker fetches the master model (receive phase).
+            *state.stacked.worker_mut(m) = state.stacked.master().clone();
+            state.count_message(bytes);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::engine::Engine;
+    use crate::strategies::grad::{GradSource, QuadraticSource};
+
+    #[test]
+    fn master_tracks_descent() {
+        let dim = 32;
+        let eta = 1.5f32;
+        let src = QuadraticSource::new(dim, 0.05, 31);
+        let init = FlatVec::zeros(dim);
+        let l0 = {
+            let s = QuadraticSource::new(dim, 0.05, 31);
+            s.true_loss(&init).unwrap()
+        };
+        let mut eng = Engine::new(
+            Box::new(Downpour::new(4, 4, eta)),
+            src,
+            4,
+            &init,
+            eta,
+            0.0,
+            37,
+        );
+        eng.run(4 * 600).unwrap();
+        let master = eng.state().stacked.master().clone();
+        let l1 = eng.grad_source().true_loss(&master).unwrap();
+        assert!(l1 < l0 * 0.3, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn push_fetch_cadence_counts_messages() {
+        let dim = 8;
+        let src = QuadraticSource::new(dim, 0.1, 5);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(
+            Box::new(Downpour::new(5, 10, 0.1)),
+            src,
+            2,
+            &init,
+            0.1,
+            0.0,
+            7,
+        );
+        eng.run(1000).unwrap();
+        // Each worker pushes every 5 local steps and fetches every 10:
+        // total messages = total_local_steps/5 + total_local_steps/10.
+        let total_local: u64 = eng.state().steps[1..].iter().sum();
+        assert_eq!(total_local, 1000);
+        let expect = eng.state().steps[1..]
+            .iter()
+            .map(|s| s / 5 + s / 10)
+            .sum::<u64>();
+        assert_eq!(eng.state().comm.messages, expect);
+    }
+
+    #[test]
+    fn fetch_resets_worker_to_master() {
+        let dim = 4;
+        let src = QuadraticSource::new(dim, 0.0, 2);
+        let init = FlatVec::zeros(dim);
+        // fetch every step: worker equals master after each tick.
+        let mut eng = Engine::new(
+            Box::new(Downpour::new(1, 1, 0.2)),
+            src,
+            2,
+            &init,
+            0.2,
+            0.0,
+            3,
+        );
+        eng.run(50).unwrap();
+        // the most recently awake worker must equal the master exactly
+        let state = eng.state();
+        let any_equal = (1..=2).any(|w| {
+            state.stacked.worker(w).as_slice() == state.stacked.master().as_slice()
+        });
+        assert!(any_equal);
+    }
+}

@@ -1,0 +1,262 @@
+//! Sequential training engine: the paper's universal-clock execution model.
+//!
+//! The engine owns the section-3 recursion — local half-step then
+//! communication — and drives a [`Strategy`] under its declared clock:
+//!
+//! * **Synchronous** (`Algorithm 1/2`, EASGD): each round every worker
+//!   computes a gradient *at its current variable* and applies it; then
+//!   the strategy's [`Strategy::after_round`] communicates.
+//! * **Asynchronous** (Downpour, GoSGD): each tick one uniformly-random
+//!   worker is awake (the paper's finest-resolution clock); the strategy
+//!   sees [`Strategy::before_local_step`] / [`Strategy::after_local_step`].
+//!
+//! The engine is deterministic given its seed — worker wake order,
+//! Bernoulli sends and peer choices all flow from one split RNG — which is
+//! what makes the figure-level experiments and the matrix cross-checks
+//! reproducible.
+
+use crate::error::Result;
+use crate::metrics::LossCurve;
+use crate::strategies::grad::GradSource;
+use crate::strategies::{Clock, ClusterState, Strategy};
+use crate::tensor::FlatVec;
+use crate::util::rng::Rng;
+
+/// Sequential driver for one strategy over one gradient source.
+pub struct Engine<'a> {
+    state: ClusterState,
+    strategy: Box<dyn Strategy>,
+    grad_source: Box<dyn GradSource + 'a>,
+    eta: f32,
+    weight_decay: f32,
+    rng: Rng,
+    /// Universal-clock tick counter (async) / round counter (sync).
+    t: u64,
+    /// Loss per engine step (mean across workers for sync rounds).
+    pub losses: LossCurve,
+    grad_buf: FlatVec,
+}
+
+impl<'a> Engine<'a> {
+    /// Build an engine with `workers` replicas initialized to `init`.
+    pub fn new(
+        strategy: Box<dyn Strategy>,
+        grad_source: impl GradSource + 'a,
+        workers: usize,
+        init: &FlatVec,
+        eta: f32,
+        weight_decay: f32,
+        seed: u64,
+    ) -> Self {
+        let dim = init.len();
+        assert_eq!(grad_source.dim(), dim, "grad source dim mismatch");
+        Engine {
+            state: ClusterState::new(workers, init),
+            strategy,
+            grad_source: Box::new(grad_source),
+            eta,
+            weight_decay,
+            rng: Rng::new(seed),
+            t: 0,
+            losses: LossCurve::new(),
+            grad_buf: FlatVec::zeros(dim),
+        }
+    }
+
+    pub fn state(&self) -> &ClusterState {
+        &self.state
+    }
+
+    pub fn state_mut(&mut self) -> &mut ClusterState {
+        &mut self.state
+    }
+
+    pub fn strategy_name(&self) -> String {
+        self.strategy.name()
+    }
+
+    pub fn grad_source(&self) -> &dyn GradSource {
+        self.grad_source.as_ref()
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.t
+    }
+
+    /// Run `steps` engine steps (rounds for sync strategies, single-worker
+    /// ticks for async ones).
+    pub fn run(&mut self, steps: u64) -> Result<()> {
+        match self.strategy.clock() {
+            Clock::Synchronous => self.run_sync(steps),
+            Clock::Asynchronous => self.run_async(steps),
+        }
+    }
+
+    fn run_sync(&mut self, rounds: u64) -> Result<()> {
+        let m = self.state.workers();
+        for _ in 0..rounds {
+            let mut round_loss = 0.0;
+            for w in 1..=m {
+                let loss = {
+                    let params = self.state.stacked.worker(w);
+                    self.grad_source.grad(w, params, self.t, &mut self.grad_buf)?
+                };
+                round_loss += loss;
+                self.apply_local_update(w)?;
+                self.state.steps[w] += 1;
+            }
+            self.strategy.after_round(self.t, &mut self.state, &mut self.rng)?;
+            self.losses.push(self.t, round_loss / m as f64);
+            self.t += 1;
+        }
+        Ok(())
+    }
+
+    fn run_async(&mut self, ticks: u64) -> Result<()> {
+        let m = self.state.workers();
+        for _ in 0..ticks {
+            // Paper's clock model: a single uniformly-random worker awakes.
+            let w = 1 + self.rng.below(m as u64) as usize;
+            self.strategy
+                .before_local_step(self.t, w, &mut self.state, &mut self.rng)?;
+            let loss = {
+                let params = self.state.stacked.worker(w);
+                self.grad_source.grad(w, params, self.t, &mut self.grad_buf)?
+            };
+            self.apply_local_update(w)?;
+            self.state.steps[w] += 1;
+            self.strategy.after_local_step(
+                self.t,
+                w,
+                &self.grad_buf,
+                &mut self.state,
+                &mut self.rng,
+            )?;
+            self.losses.push(self.t, loss);
+            self.t += 1;
+        }
+        Ok(())
+    }
+
+    /// The local half-step `x^(t+1/2)` (records the event if enabled).
+    fn apply_local_update(&mut self, w: usize) -> Result<()> {
+        // Weight decay folds into the recorded gradient so the matrix
+        // replay (which only models plain steps) stays exact.
+        if self.weight_decay != 0.0 {
+            let params = self.state.stacked.worker(w).clone();
+            self.grad_buf.axpy(self.weight_decay, &params)?;
+        }
+        if self.state.recorder.is_some() {
+            let grad = self.grad_buf.clone();
+            self.state.record_step(w, &grad, self.eta);
+        }
+        self.state
+            .stacked
+            .worker_mut(w)
+            .axpy(-self.eta, &self.grad_buf)
+    }
+
+    /// Mean worker variable — the model the paper reports/returns.
+    pub fn consensus_model(&self) -> Result<FlatVec> {
+        self.state.stacked.worker_mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::allreduce::AllReduce;
+    use crate::strategies::gosgd::GoSgd;
+    use crate::strategies::grad::QuadraticSource;
+    use crate::strategies::replay_events;
+
+    #[test]
+    fn sync_engine_counts_rounds_and_steps() {
+        let src = QuadraticSource::new(8, 0.1, 1);
+        let init = FlatVec::zeros(8);
+        let mut eng = Engine::new(Box::new(AllReduce), src, 3, &init, 0.1, 0.0, 2);
+        eng.run(10).unwrap();
+        assert_eq!(eng.ticks(), 10);
+        for w in 1..=3 {
+            assert_eq!(eng.state().steps[w], 10);
+        }
+        assert_eq!(eng.losses.len(), 10);
+    }
+
+    #[test]
+    fn async_engine_wakes_one_worker_per_tick() {
+        let src = QuadraticSource::new(8, 0.1, 1);
+        let init = FlatVec::zeros(8);
+        let mut eng = Engine::new(Box::new(GoSgd::new(0.0)), src, 4, &init, 0.1, 0.0, 3);
+        eng.run(1000).unwrap();
+        let total: u64 = eng.state().steps[1..].iter().sum();
+        assert_eq!(total, 1000);
+        // roughly uniform wake distribution
+        for w in 1..=4 {
+            let s = eng.state().steps[w];
+            assert!((s as f64 - 250.0).abs() < 70.0, "worker {w}: {s}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let init = FlatVec::zeros(16);
+        let mk = || {
+            let src = QuadraticSource::new(16, 0.2, 7);
+            let mut eng =
+                Engine::new(Box::new(GoSgd::new(0.3)), src, 4, &init, 0.2, 1e-4, 11);
+            eng.run(500).unwrap();
+            eng.consensus_model().unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn losses_decrease_on_quadratic() {
+        let src = QuadraticSource::new(32, 0.05, 5);
+        let init = FlatVec::zeros(32);
+        let mut eng = Engine::new(Box::new(AllReduce), src, 4, &init, 2.0, 0.0, 6);
+        eng.run(200).unwrap();
+        let first = eng.losses.window_mean(0, 10);
+        let last = eng.losses.window_mean(190, 200);
+        assert!(last < first * 0.5, "{first} -> {last}");
+    }
+
+    #[test]
+    fn recorded_events_replay_to_identical_state_sync() {
+        // The matrix-framework cross-check in miniature: AllReduce engine
+        // run == replay of its event log through K^(t) products.
+        let dim = 8;
+        let src = QuadraticSource::new(dim, 0.3, 9);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(Box::new(AllReduce), src, 3, &init, 0.4, 0.0, 10);
+        eng.state_mut().enable_recording();
+        eng.run(20).unwrap();
+        let events = &eng.state().recorder.as_ref().unwrap().events;
+        let replayed = replay_events(3, &init, events).unwrap();
+        for slot in 0..=3 {
+            for i in 0..dim {
+                let a = eng.state().stacked.get(slot).as_slice()[i];
+                let b = replayed.get(slot).as_slice()[i];
+                assert!((a - b).abs() < 1e-4, "slot {slot} comp {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_solution_norm() {
+        let dim = 16;
+        let init = FlatVec::zeros(dim);
+        let mk = |wd: f32| {
+            let src = QuadraticSource::new(dim, 0.05, 21);
+            let mut eng = Engine::new(Box::new(AllReduce), src, 2, &init, 1.0, wd, 22);
+            eng.run(500).unwrap();
+            eng.consensus_model().unwrap().norm()
+        };
+        let plain = mk(0.0);
+        let decayed = mk(0.05);
+        assert!(decayed < plain, "decayed {decayed} vs plain {plain}");
+    }
+}

@@ -1,0 +1,271 @@
+//! GoSGD — the paper's contribution (section 4, Algorithms 3 & 4).
+//!
+//! Fully asynchronous, fully decentralized distributed SGD:
+//!
+//! * **Universal clock** (shared with Downpour's analysis): at each tick a
+//!   single random worker `s` is awake.
+//! * **Process messages first** (Algorithm 3, line 4): drain the own
+//!   mailbox, folding each `(x, w)` in with the sum-weight blend
+//!   `x_r ← w_r/(w_r+w_s)·x_r + w_s/(w_r+w_s)·x_s, w_r ← w_r + w_s`.
+//! * **Local gradient step** (engine's job).
+//! * **Bernoulli send** (Algorithm 3, lines 6-9): with probability `p`,
+//!   pick a uniform peer `r ≠ s`, halve the own weight and push
+//!   `(x_s, w_s/2)` to `q_r` — non-blocking, exactly one message.
+//!
+//! The blend itself is exactly the `mix` Pallas kernel of Layer 1; the
+//! sequential engine uses the host [`FlatVec::mix_from`] path and the PJRT
+//! integration test asserts both produce the same numbers.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::framework::generators;
+use crate::gossip::{Message, PeerSelector};
+use crate::strategies::{Clock, ClusterState, Strategy};
+use crate::tensor::FlatVec;
+use crate::util::rng::Rng;
+
+/// GoSGD configuration + per-run protocol state.
+pub struct GoSgd {
+    /// Exchange probability per awake step (the paper's `p`).
+    p: f64,
+    /// Receiver selection policy (paper: uniform).
+    selector: PeerSelector,
+    /// Deliver exchanges instantly instead of queueing — used only by the
+    /// matrix-framework cross-check, where `K^(t)` acts on current state.
+    immediate: bool,
+}
+
+impl GoSgd {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "p must be a probability, got {p}");
+        GoSgd { p, selector: PeerSelector::Uniform, immediate: false }
+    }
+
+    pub fn with_selector(mut self, selector: PeerSelector) -> Self {
+        self.selector = selector;
+        self
+    }
+
+    /// Immediate-delivery mode (cross-check only; the real protocol queues).
+    pub fn immediate_delivery(mut self) -> Self {
+        self.immediate = true;
+        self
+    }
+
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    /// Drain and fold all pending messages for worker `m`
+    /// (Algorithm 4, `ProcessMessages`).
+    fn process_messages(&self, m: usize, state: &mut ClusterState) -> Result<()> {
+        let pending = state.queues[m].drain();
+        for msg in pending {
+            let t = state.weights[m].absorb(msg.weight);
+            // x_r <- (1-t) x_r + t x_s with t = w_s/(w_r+w_s)
+            let w_r_equiv = 1.0 - t;
+            state
+                .stacked
+                .worker_mut(m)
+                .mix_from(&msg.params, w_r_equiv, t)?;
+        }
+        Ok(())
+    }
+}
+
+impl Strategy for GoSgd {
+    fn name(&self) -> String {
+        format!("gosgd(p={})", self.p)
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::Asynchronous
+    }
+
+    fn before_local_step(
+        &mut self,
+        _t: u64,
+        m: usize,
+        state: &mut ClusterState,
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        self.process_messages(m, state)
+    }
+
+    fn after_local_step(
+        &mut self,
+        _t: u64,
+        s: usize,
+        _grad: &FlatVec,
+        state: &mut ClusterState,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        let m = state.workers();
+        if m < 2 || !rng.bernoulli(self.p) {
+            return Ok(());
+        }
+        // Uniform receiver among the other workers (slots are 1-based).
+        let r = self.selector.pick(m, s - 1, rng) + 1;
+        debug_assert_ne!(r, s);
+
+        // PushMessage: halve own weight, ship (x_s, w_s/2).
+        let shipped = state.weights[s].halve_for_send();
+        if self.immediate {
+            // Cross-check path: apply the exchange matrix right now.
+            let w_r = state.weights[r].value();
+            state.record_matrix(generators::gossip_exchange(
+                m,
+                s,
+                r,
+                shipped.value(),
+                w_r,
+            )?);
+            let t = state.weights[r].absorb(shipped);
+            let sender_snapshot = state.stacked.worker(s).clone();
+            state
+                .stacked
+                .worker_mut(r)
+                .mix_from(&sender_snapshot, 1.0 - t, t)?;
+            state.count_message(sender_snapshot.len() * 4);
+        } else {
+            let snapshot = Arc::new(state.stacked.worker(s).clone());
+            let msg = Message::new(snapshot, shipped, s, state.steps[s]);
+            state.count_message(msg.wire_bytes());
+            state.queues[r].push(msg);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::engine::Engine;
+    use crate::strategies::grad::{GradSource, NoiseSource, QuadraticSource};
+    use crate::util::proptest::check;
+
+    fn run_gosgd(p: f64, steps: u64, seed: u64) -> Engine<'static> {
+        let dim = 32;
+        let src = NoiseSource::new(dim, seed);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(Box::new(GoSgd::new(p)), src, 8, &init, 1.0, 0.0, seed);
+        eng.run(steps).unwrap();
+        eng
+    }
+
+    #[test]
+    fn message_rate_matches_p() {
+        let steps = 40_000;
+        let eng = run_gosgd(0.1, steps, 3);
+        let rate = eng.state().comm.messages as f64 / steps as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate = {rate}");
+        // Decentralized: never a barrier.
+        assert_eq!(eng.state().comm.barriers, 0);
+    }
+
+    #[test]
+    fn p_zero_sends_nothing() {
+        let eng = run_gosgd(0.0, 1000, 4);
+        assert_eq!(eng.state().comm.messages, 0);
+    }
+
+    #[test]
+    fn weight_mass_is_conserved_including_in_flight() {
+        let eng = run_gosgd(0.5, 5000, 5);
+        let state = eng.state();
+        let m = state.workers();
+        let mut total: f64 = (1..=m).map(|w| state.weights[w].value()).sum();
+        for q in &state.queues {
+            for msg in q.drain() {
+                total += msg.weight.value();
+            }
+        }
+        assert!((total - 1.0).abs() < 1e-9, "total weight {total}");
+    }
+
+    #[test]
+    fn gossip_bounds_consensus_error_vs_local() {
+        let dim = 64;
+        let steps = 4000;
+        let init = FlatVec::zeros(dim);
+        let mk = |strategy: Box<dyn crate::strategies::Strategy>| {
+            let src = NoiseSource::new(dim, 11);
+            let mut eng = Engine::new(strategy, src, 8, &init, 1.0, 0.0, 13);
+            eng.run(steps).unwrap();
+            eng.state().stacked.consensus_error().unwrap()
+        };
+        let eps_gossip = mk(Box::new(GoSgd::new(0.1)));
+        let eps_local = mk(Box::new(crate::strategies::local::Local));
+        assert!(
+            eps_gossip < eps_local * 0.2,
+            "gossip {eps_gossip} vs local {eps_local}"
+        );
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let dim = 32;
+        let init = FlatVec::zeros(dim);
+        let src = QuadraticSource::new(dim, 0.1, 17);
+        let target_loss = {
+            let s = QuadraticSource::new(dim, 0.1, 17);
+            s.true_loss(&init).unwrap()
+        };
+        let mut eng = Engine::new(Box::new(GoSgd::new(0.05)), src, 8, &init, 2.0, 0.0, 19);
+        eng.run(8 * 500).unwrap();
+        let mean = eng.state().stacked.worker_mean().unwrap();
+        let final_loss = eng.grad_source().true_loss(&mean).unwrap();
+        assert!(
+            final_loss < target_loss * 0.2,
+            "{target_loss} -> {final_loss}"
+        );
+    }
+
+    #[test]
+    fn immediate_mode_equals_queued_mode_when_messages_processed_next_tick() {
+        // Not an exact equality in general (queued delivery is delayed),
+        // but with p=1 and M=2 every message is processed at the receiver's
+        // next awake tick; statistically both modes must keep workers close.
+        check("immediate vs queued stay consistent", 5, |rng| {
+            let dim = 8;
+            let seed = rng.next_u64();
+            let init = FlatVec::zeros(dim);
+            let mk = |imm: bool| {
+                let strategy = if imm {
+                    GoSgd::new(1.0).immediate_delivery()
+                } else {
+                    GoSgd::new(1.0)
+                };
+                let src = NoiseSource::new(dim, seed);
+                let mut eng =
+                    Engine::new(Box::new(strategy), src, 2, &init, 0.1, 0.0, seed ^ 1);
+                eng.run(500).unwrap();
+                eng.state().stacked.consensus_error().unwrap()
+            };
+            let eps_imm = mk(true);
+            let eps_queue = mk(false);
+            assert!(eps_imm < 1.0, "immediate eps {eps_imm}");
+            assert!(eps_queue < 2.0, "queued eps {eps_queue}");
+        });
+    }
+
+    #[test]
+    fn queues_are_fully_drained_at_wake() {
+        // After a long run, total pushed == total drained + still queued:
+        // no message is ever lost (asymmetric protocol, no drops).
+        let eng = run_gosgd(0.5, 10_000, 23);
+        let state = eng.state();
+        let mut pushed = 0;
+        let mut drained = 0;
+        let mut depth = 0;
+        for q in &state.queues {
+            let s = q.stats();
+            pushed += s.pushed;
+            drained += s.drained;
+            depth += q.len() as u64;
+        }
+        assert_eq!(pushed, state.comm.messages);
+        assert_eq!(pushed, drained + depth);
+    }
+}

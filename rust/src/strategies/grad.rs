@@ -1,0 +1,195 @@
+//! Gradient sources for the sequential engine.
+//!
+//! The engine is generic over where gradients come from:
+//!
+//! * [`QuadraticSource`] — a noisy quadratic bowl.  Convex, with a known
+//!   optimum and controllable gradient noise: ideal for convergence and
+//!   equivalence tests (Algorithm 1 ≡ bigger batches, Appendix A variance
+//!   scaling).
+//! * [`NoiseSource`] — pure i.i.d. `N(0, 1)` "gradients", the worst-case
+//!   protocol of the paper's consensus experiment (section 5.2, Fig. 4).
+//! * `PjrtSource` (in [`crate::runtime`]) — the real Layer-2 CNN through
+//!   the AOT artifacts.
+
+use crate::error::Result;
+use crate::tensor::FlatVec;
+use crate::util::rng::Rng;
+
+/// Produces per-worker stochastic gradients.
+///
+/// Deliberately NOT `Send`: the PJRT-backed implementation wraps raw
+/// client pointers.  The sequential/DES engines are single-threaded; the
+/// threaded runtime gives each worker thread its own source instance.
+pub trait GradSource {
+    /// Write the gradient of worker `m`'s loss at `params` into `out`;
+    /// return the (stochastic) loss value.
+    fn grad(&mut self, m: usize, params: &FlatVec, step: u64, out: &mut FlatVec) -> Result<f64>;
+
+    /// Dimension of the parameter space.
+    fn dim(&self) -> usize;
+
+    /// Deterministic full-batch loss (for reporting), if the source has one.
+    fn true_loss(&self, _params: &FlatVec) -> Option<f64> {
+        None
+    }
+}
+
+/// Noisy quadratic: `L(x) = 0.5‖x − x*‖²/d`, gradient `(x − x*)/d + σ z`,
+/// `z ~ N(0, I)`.  The `1/d` scaling keeps losses O(1) across dimensions.
+///
+/// Mimics the mini-batch setting of Appendix A: the gradient estimator is
+/// unbiased with covariance `σ² I`, and averaging `N` draws divides the
+/// error variance by `N` — which the `variance_scaling` bench reproduces.
+pub struct QuadraticSource {
+    target: FlatVec,
+    sigma: f32,
+    rng: Rng,
+    scratch: Vec<f32>,
+}
+
+impl QuadraticSource {
+    pub fn new(dim: usize, sigma: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let target = FlatVec::randn(dim, 1.0, &mut rng);
+        QuadraticSource { target, sigma, rng: rng.split(0xC0FFEE), scratch: vec![0.0; dim] }
+    }
+
+    /// The optimum `x*`.
+    pub fn target(&self) -> &FlatVec {
+        &self.target
+    }
+}
+
+impl GradSource for QuadraticSource {
+    fn grad(&mut self, m: usize, params: &FlatVec, step: u64, out: &mut FlatVec) -> Result<f64> {
+        let d = self.target.len() as f32;
+        // Per-(worker, step) noise stream: deterministic and independent.
+        let mut noise_rng = self.rng.split((m as u64) << 32 | step);
+        noise_rng.fill_normal(&mut self.scratch, self.sigma);
+        let mut loss = 0.0f64;
+        let inv_d = 1.0 / d;
+        for i in 0..params.len() {
+            let diff = params.as_slice()[i] - self.target.as_slice()[i];
+            loss += 0.5 * (diff * diff) as f64;
+            out.as_mut_slice()[i] = diff * inv_d + self.scratch[i];
+        }
+        Ok(loss / d as f64)
+    }
+
+    fn dim(&self) -> usize {
+        self.target.len()
+    }
+
+    fn true_loss(&self, params: &FlatVec) -> Option<f64> {
+        let d = self.target.len() as f64;
+        Some(params.dist_sq(&self.target).ok()? * 0.5 / d)
+    }
+}
+
+/// Worst-case consensus workload (paper section 5.2): the "gradient" is
+/// i.i.d. `N(0, 1)` on every worker, fully uncorrelated across workers —
+/// local models drift apart as fast as possible and only communication
+/// holds them together.
+pub struct NoiseSource {
+    dim: usize,
+    rng: Rng,
+}
+
+impl NoiseSource {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        NoiseSource { dim, rng: Rng::new(seed) }
+    }
+}
+
+impl GradSource for NoiseSource {
+    fn grad(&mut self, m: usize, _params: &FlatVec, step: u64, out: &mut FlatVec) -> Result<f64> {
+        let mut r = self.rng.split((m as u64) << 32 | step);
+        r.fill_normal(out.as_mut_slice(), 1.0);
+        Ok(0.0)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_gradient_points_at_target() {
+        let mut src = QuadraticSource::new(64, 0.0, 7);
+        let params = FlatVec::zeros(64);
+        let mut g = FlatVec::zeros(64);
+        let loss = src.grad(1, &params, 0, &mut g).unwrap();
+        assert!(loss > 0.0);
+        // With zero noise: g = (0 - x*)/d, so x - η·d·g == x* after one step.
+        let d = 64.0f32;
+        let mut x = params.clone();
+        x.axpy(-d, &g).unwrap();
+        for i in 0..64 {
+            assert!((x.as_slice()[i] - src.target().as_slice()[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn quadratic_noise_is_unbiased() {
+        let mut src = QuadraticSource::new(16, 0.5, 3);
+        let params = FlatVec::zeros(16);
+        let mut g = FlatVec::zeros(16);
+        let mut mean = vec![0.0f64; 16];
+        let trials = 4000;
+        for s in 0..trials {
+            src.grad(1, &params, s, &mut g).unwrap();
+            for (mu, &v) in mean.iter_mut().zip(g.as_slice()) {
+                *mu += v as f64;
+            }
+        }
+        let d = 16.0f64;
+        for (i, mu) in mean.iter().enumerate() {
+            let want = -(src.target().as_slice()[i] as f64) / d;
+            let got = mu / trials as f64;
+            // stderr = sigma/sqrt(trials) ≈ 0.008
+            assert!((got - want).abs() < 0.05, "i={i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn quadratic_descends_under_sgd() {
+        let mut src = QuadraticSource::new(32, 0.05, 11);
+        let mut x = FlatVec::zeros(32);
+        let mut g = FlatVec::zeros(32);
+        let l0 = src.true_loss(&x).unwrap();
+        for s in 0..300 {
+            src.grad(1, &x, s, &mut g).unwrap();
+            x.sgd_step(&g, 1.0, 0.0).unwrap();
+        }
+        let l1 = src.true_loss(&x).unwrap();
+        assert!(l1 < l0 * 0.5, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn noise_source_is_deterministic_per_worker_step() {
+        let mut a = NoiseSource::new(8, 5);
+        let mut b = NoiseSource::new(8, 5);
+        let p = FlatVec::zeros(8);
+        let mut ga = FlatVec::zeros(8);
+        let mut gb = FlatVec::zeros(8);
+        a.grad(2, &p, 7, &mut ga).unwrap();
+        b.grad(2, &p, 7, &mut gb).unwrap();
+        assert_eq!(ga.as_slice(), gb.as_slice());
+        b.grad(3, &p, 7, &mut gb).unwrap();
+        assert_ne!(ga.as_slice(), gb.as_slice());
+    }
+
+    #[test]
+    fn noise_source_unit_variance() {
+        let mut src = NoiseSource::new(1000, 9);
+        let p = FlatVec::zeros(1000);
+        let mut g = FlatVec::zeros(1000);
+        src.grad(1, &p, 0, &mut g).unwrap();
+        let var = g.as_slice().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / 1000.0;
+        assert!((var - 1.0).abs() < 0.15, "{var}");
+    }
+}

@@ -1,0 +1,54 @@
+//! No-communication baseline: M independent SGD runs.
+//!
+//! The paper (section 2.1) uses this as the degenerate end of the
+//! communication/consensus trade-off: with `K = I` forever, the M models
+//! "are likely to be very different and almost impossible to combine".
+//! The consensus experiment shows its ε(t) growing without bound.
+
+use crate::error::Result;
+use crate::strategies::{Clock, ClusterState, Strategy};
+use crate::util::rng::Rng;
+
+/// `K^(t) = I` for all t.
+#[derive(Default)]
+pub struct Local;
+
+impl Strategy for Local {
+    fn name(&self) -> String {
+        "local".into()
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::Synchronous
+    }
+
+    fn after_round(&mut self, _t: u64, state: &mut ClusterState, _rng: &mut Rng) -> Result<()> {
+        // Record the identity so matrix replays stay aligned per round.
+        if state.recorder.is_some() {
+            let m = state.workers();
+            state.record_matrix(crate::framework::CommMatrix::identity(m + 1));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::engine::Engine;
+    use crate::strategies::grad::QuadraticSource;
+    use crate::tensor::FlatVec;
+
+    #[test]
+    fn workers_drift_apart_without_communication() {
+        let dim = 32;
+        let src = QuadraticSource::new(dim, 0.3, 1);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(Box::new(Local), src, 4, &init, 0.5, 0.0, 42);
+        eng.run(200).unwrap();
+        // Different noise streams => nonzero consensus error.
+        let eps = eng.state().stacked.consensus_error().unwrap();
+        assert!(eps > 1e-4, "eps = {eps}");
+        assert_eq!(eng.state().comm.messages, 0);
+    }
+}

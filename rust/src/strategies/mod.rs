@@ -1,0 +1,251 @@
+//! The paper's distributed-SGD algorithms behind one trait.
+//!
+//! Section 3 frames every method as "local computation + communication".
+//! [`Strategy`] captures exactly that split: the engine
+//! ([`engine::Engine`]) owns the local gradient steps; a strategy only
+//! implements the communication hooks.  Implementations:
+//!
+//! | module | paper | clock |
+//! |---|---|---|
+//! | [`local`]     | no-communication baseline (section 2.1)   | sync  |
+//! | [`allreduce`] | Algorithm 1, fully synchronous            | sync  |
+//! | [`persyn`]    | Algorithm 2, PerSyn (section 3.1)         | sync  |
+//! | [`easgd`]     | EASGD (section 3.2, [9])                  | sync  |
+//! | [`downpour`]  | Downpour SGD (section 3.3, [10])          | async |
+//! | [`gosgd`]     | **GoSGD** (section 4, Algorithms 3-4)     | async |
+//!
+//! Synchronous strategies communicate through [`Strategy::after_round`]
+//! once all workers finished a step; asynchronous ones use the paper's
+//! universal-clock model (one worker awake per tick) through
+//! [`Strategy::before_local_step`] / [`Strategy::after_local_step`].
+
+pub mod allreduce;
+pub mod downpour;
+pub mod easgd;
+pub mod engine;
+pub mod gosgd;
+pub mod grad;
+pub mod local;
+pub mod persyn;
+
+pub use engine::Engine;
+pub use grad::GradSource;
+
+use crate::error::Result;
+use crate::framework::{CommMatrix, Stacked};
+use crate::gossip::{MessageQueue, SumWeight};
+use crate::tensor::FlatVec;
+use crate::util::rng::Rng;
+
+/// Which clock model a strategy runs under (paper sections 3.3/4: Downpour
+/// and GoSGD use the finest-resolution universal clock where a single
+/// worker is awake per tick; the synchronous methods step all workers in
+/// lockstep).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Clock {
+    Synchronous,
+    Asynchronous,
+}
+
+/// Communication-cost accounting (paper's key efficiency metric).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Parameter-vector messages actually sent.
+    pub messages: u64,
+    /// Bytes those messages carried.
+    pub bytes: u64,
+    /// Synchronization barriers (events where workers must wait).
+    pub barriers: u64,
+}
+
+/// Shared mutable state the strategies operate on.
+///
+/// Slot layout mirrors [`Stacked`]: index 0 is the master `x̃` (unused by
+/// decentralized strategies), `1..=M` are workers.
+pub struct ClusterState {
+    /// Parameter state `[x̃, x_1 … x_M]`.
+    pub stacked: Stacked,
+    /// Sum-weight per slot (slot 0 unused; init 1/M per paper Alg. 3).
+    pub weights: Vec<SumWeight>,
+    /// Per-slot mailboxes (slot 0 unused by gossip).
+    pub queues: Vec<MessageQueue>,
+    /// Per-worker local step counters.
+    pub steps: Vec<u64>,
+    /// Communication accounting.
+    pub comm: CommStats,
+    /// Optional event recorder for the matrix-framework cross-check.
+    pub recorder: Option<Recorder>,
+}
+
+impl ClusterState {
+    /// Fresh state: all slots replicate `init` (paper: `x_m = x`).
+    pub fn new(workers: usize, init: &FlatVec) -> Self {
+        assert!(workers >= 1);
+        ClusterState {
+            stacked: Stacked::replicate(workers, init),
+            weights: (0..=workers).map(|_| SumWeight::init(workers)).collect(),
+            queues: (0..=workers).map(|_| MessageQueue::unbounded()).collect(),
+            steps: vec![0; workers + 1],
+            comm: CommStats::default(),
+            recorder: None,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.stacked.workers()
+    }
+
+    /// Enable event recording (matrix cross-check tests).
+    pub fn enable_recording(&mut self) {
+        self.recorder = Some(Recorder::default());
+    }
+
+    /// Record an applied communication matrix (no-op if disabled).
+    pub fn record_matrix(&mut self, k: CommMatrix) {
+        if let Some(rec) = &mut self.recorder {
+            rec.events.push(Event::Communicate(k));
+        }
+    }
+
+    /// Record a local gradient step (no-op if disabled).
+    pub fn record_step(&mut self, m: usize, grad: &FlatVec, eta: f32) {
+        if let Some(rec) = &mut self.recorder {
+            rec.events.push(Event::LocalStep { m, grad: grad.clone(), eta });
+        }
+    }
+
+    /// Count one sent parameter message of `bytes` bytes.
+    pub fn count_message(&mut self, bytes: usize) {
+        self.comm.messages += 1;
+        self.comm.bytes += bytes as u64;
+    }
+
+    /// Count one synchronization barrier.
+    pub fn count_barrier(&mut self) {
+        self.comm.barriers += 1;
+    }
+}
+
+/// Recorded event stream for replay through the matrix framework.
+#[derive(Default)]
+pub struct Recorder {
+    pub events: Vec<Event>,
+}
+
+/// One engine event in framework terms.
+pub enum Event {
+    /// `x_m ← x_m − η·grad` (the half-step `x^(t+1/2)`).
+    LocalStep { m: usize, grad: FlatVec, eta: f32 },
+    /// `x ← K x`.
+    Communicate(CommMatrix),
+}
+
+/// Replay an event log from `init` through the section-3 recursion.
+/// Returns the final stacked state — must match the engine's state
+/// exactly (cross-check tests).
+pub fn replay_events(workers: usize, init: &FlatVec, events: &[Event]) -> Result<Stacked> {
+    let mut x = Stacked::replicate(workers, init);
+    for ev in events {
+        match ev {
+            Event::LocalStep { m, grad, eta } => x.local_step(*m, grad, *eta)?,
+            Event::Communicate(k) => x = k.apply(&x)?,
+        }
+    }
+    Ok(x)
+}
+
+/// A distributed-SGD communication strategy (the paper's `K^(t)` policy).
+pub trait Strategy: Send {
+    /// Human-readable name for reports.
+    fn name(&self) -> String;
+
+    /// Which clock model the engine should run.
+    fn clock(&self) -> Clock;
+
+    /// Async hook: worker `m` is awake and about to compute its gradient —
+    /// process incoming messages (GoSGD `ProcessMessages`).
+    fn before_local_step(
+        &mut self,
+        _t: u64,
+        _m: usize,
+        _state: &mut ClusterState,
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Async hook: worker `m` finished its local update (`grad` was already
+    /// applied by the engine) — maybe send.
+    fn after_local_step(
+        &mut self,
+        _t: u64,
+        _m: usize,
+        _grad: &FlatVec,
+        _state: &mut ClusterState,
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Sync hook: all workers finished local step `t` — communicate.
+    fn after_round(
+        &mut self,
+        _t: u64,
+        _state: &mut ClusterState,
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::generators;
+
+    #[test]
+    fn cluster_state_layout() {
+        let init = FlatVec::from_vec(vec![1.0, 2.0]);
+        let s = ClusterState::new(4, &init);
+        assert_eq!(s.workers(), 4);
+        assert_eq!(s.weights.len(), 5);
+        assert_eq!(s.weights[1].value(), 0.25);
+        assert_eq!(s.stacked.worker(3).as_slice(), &[1.0, 2.0]);
+        assert!(s.queues[2].is_empty());
+    }
+
+    #[test]
+    fn comm_accounting() {
+        let mut s = ClusterState::new(2, &FlatVec::zeros(4));
+        s.count_message(16);
+        s.count_message(16);
+        s.count_barrier();
+        assert_eq!(s.comm.messages, 2);
+        assert_eq!(s.comm.bytes, 32);
+        assert_eq!(s.comm.barriers, 1);
+    }
+
+    #[test]
+    fn replay_applies_steps_and_matrices() {
+        let init = FlatVec::from_vec(vec![4.0]);
+        let events = vec![
+            Event::LocalStep { m: 1, grad: FlatVec::from_vec(vec![2.0]), eta: 1.0 },
+            Event::Communicate(generators::allreduce(2).unwrap()),
+        ];
+        let out = replay_events(2, &init, &events).unwrap();
+        // x_1 = 2, x_2 = 4 -> all become 3
+        assert_eq!(out.worker(1).as_slice(), &[3.0]);
+        assert_eq!(out.worker(2).as_slice(), &[3.0]);
+        assert_eq!(out.master().as_slice(), &[3.0]);
+    }
+
+    #[test]
+    fn recorder_only_when_enabled() {
+        let mut s = ClusterState::new(2, &FlatVec::zeros(2));
+        s.record_step(1, &FlatVec::zeros(2), 0.1);
+        assert!(s.recorder.is_none());
+        s.enable_recording();
+        s.record_step(1, &FlatVec::zeros(2), 0.1);
+        assert_eq!(s.recorder.as_ref().unwrap().events.len(), 1);
+    }
+}

@@ -1,0 +1,145 @@
+//! PerSyn — Periodically Synchronous SGD (paper section 3.1, Algorithm 2).
+//!
+//! The paper's first contribution: relax Algorithm 1 so the global
+//! averaging happens only once every `tau` rounds.  Between syncs the
+//! communication matrix is the identity (zero cost); on the boundary every
+//! model — master and workers — is replaced by the worker mean.
+//!
+//! The trade-off (paper): `(tau-1)/tau` of the time costs nothing, but
+//! models drift between syncs, producing the characteristic sawtooth in
+//! the consensus error (Fig. 4).  At equal exchange frequency
+//! (`tau = 1/p`), PerSyn needs **twice** the messages of GoSGD because
+//! workers must both send to and receive from the master.
+
+use crate::error::Result;
+use crate::framework::generators;
+use crate::strategies::{Clock, ClusterState, Strategy};
+use crate::util::rng::Rng;
+
+/// Algorithm 2: average every `tau` rounds.
+pub struct PerSyn {
+    tau: u64,
+}
+
+impl PerSyn {
+    /// `tau` ≥ 1: rounds between global averages.
+    pub fn new(tau: u64) -> Self {
+        assert!(tau >= 1, "tau must be >= 1");
+        PerSyn { tau }
+    }
+
+    /// Equal-frequency construction used throughout the paper's
+    /// experiments: exchange probability `p` per worker per step
+    /// corresponds to a sync every `1/p` rounds.
+    pub fn from_probability(p: f64) -> Self {
+        assert!(p > 0.0 && p <= 1.0);
+        PerSyn::new((1.0 / p).round().max(1.0) as u64)
+    }
+
+    pub fn tau(&self) -> u64 {
+        self.tau
+    }
+}
+
+impl Strategy for PerSyn {
+    fn name(&self) -> String {
+        format!("persyn(tau={})", self.tau)
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::Synchronous
+    }
+
+    fn after_round(&mut self, t: u64, state: &mut ClusterState, _rng: &mut Rng) -> Result<()> {
+        let m = state.workers();
+        // Algorithm 2 increments t after the local step and syncs when
+        // t mod tau == 0; the engine passes the incremented round index.
+        if (t + 1) % self.tau != 0 {
+            if state.recorder.is_some() {
+                state.record_matrix(crate::framework::CommMatrix::identity(m + 1));
+            }
+            return Ok(());
+        }
+        let mean = state.stacked.worker_mean()?;
+        let bytes = mean.len() * 4;
+        for slot in 0..=m {
+            *state.stacked.get_mut(slot) = mean.clone();
+        }
+        // M sends to master + M broadcasts back (section 3.1 discussion).
+        for _ in 0..(2 * m) {
+            state.count_message(bytes);
+        }
+        state.count_barrier();
+        state.record_matrix(generators::allreduce(m)?);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::engine::Engine;
+    use crate::strategies::grad::{NoiseSource, QuadraticSource};
+    use crate::tensor::FlatVec;
+
+    #[test]
+    fn syncs_exactly_every_tau_rounds() {
+        let dim = 8;
+        let src = QuadraticSource::new(dim, 0.3, 2);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(Box::new(PerSyn::new(5)), src, 4, &init, 0.3, 0.0, 7);
+        eng.run(20).unwrap();
+        // 20 rounds, tau=5 -> syncs at t+1 = 5, 10, 15, 20.
+        assert_eq!(eng.state().comm.barriers, 4);
+        assert_eq!(eng.state().comm.messages, 4 * 8);
+        // Just after a sync all workers are equal.
+        let eps = eng.state().stacked.consensus_error().unwrap();
+        assert!(eps < 1e-10, "post-sync consensus, eps={eps}");
+    }
+
+    #[test]
+    fn tau_one_equals_allreduce() {
+        let dim = 8;
+        let init = FlatVec::zeros(dim);
+        let mk = |strategy: Box<dyn crate::strategies::Strategy>| {
+            let src = QuadraticSource::new(dim, 0.2, 13);
+            let mut eng = Engine::new(strategy, src, 3, &init, 0.4, 0.0, 21);
+            eng.run(30).unwrap();
+            eng.state().stacked.worker(1).clone()
+        };
+        let a = mk(Box::new(PerSyn::new(1)));
+        let b = mk(Box::new(crate::strategies::allreduce::AllReduce));
+        for i in 0..dim {
+            assert!((a.as_slice()[i] - b.as_slice()[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn consensus_error_sawtooths() {
+        // Under pure-noise updates the error grows between syncs and
+        // collapses to 0 at each sync (the Fig. 4 sawtooth).
+        let dim = 64;
+        let src = NoiseSource::new(dim, 3);
+        let init = FlatVec::zeros(dim);
+        let tau = 10;
+        let mut eng = Engine::new(Box::new(PerSyn::new(tau)), src, 8, &init, 1.0, 0.0, 9);
+        let mut history = Vec::new();
+        for _ in 0..30 {
+            eng.run(1).unwrap();
+            history.push(eng.state().stacked.consensus_error().unwrap());
+        }
+        // Rounds 10, 20, 30 (1-based) are sync points -> eps ~ 0.
+        assert!(history[9] < 1e-9);
+        assert!(history[19] < 1e-9);
+        // Mid-period error is strictly positive and grows.
+        assert!(history[4] > 1.0);
+        assert!(history[8] > history[4]);
+    }
+
+    #[test]
+    fn from_probability_rounds_to_nearest_period() {
+        assert_eq!(PerSyn::from_probability(0.01).tau(), 100);
+        assert_eq!(PerSyn::from_probability(0.4).tau(), 3);
+        assert_eq!(PerSyn::from_probability(1.0).tau(), 1);
+    }
+}

@@ -1,0 +1,298 @@
+//! Flat parameter vectors and the host-side numeric hot path.
+//!
+//! Every model's parameters travel through the system as one contiguous
+//! `f32` vector (see `python/compile/model.py` — the artifact programs take
+//! and return the same layout).  [`FlatVec`] owns such a vector and provides
+//! the handful of dense ops the coordinator needs:
+//!
+//! * [`FlatVec::mix_from`] — the sum-weight gossip blend (paper Alg. 4,
+//!   line 9), *the* hot operation of GoSGD: it runs once per received
+//!   message over the whole parameter vector.
+//! * [`FlatVec::axpy`] / [`FlatVec::scale`] / [`FlatVec::sgd_step`] —
+//!   optimizer arithmetic (mirrors the `sgd_update` artifact; both paths
+//!   are tested to agree).
+//! * norms / distances used by the consensus metric ε(t) (paper Fig. 4).
+//!
+//! The loops are written as straight slice iterations chunked to 8 lanes so
+//! LLVM auto-vectorizes them; there is no explicit SIMD dependency.
+
+pub mod ops;
+
+pub use ops::*;
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// A contiguous f32 parameter (or gradient) vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlatVec {
+    data: Vec<f32>,
+}
+
+impl FlatVec {
+    /// Zero-filled vector of length `n`.
+    pub fn zeros(n: usize) -> Self {
+        FlatVec { data: vec![0.0; n] }
+    }
+
+    /// Take ownership of an existing buffer.
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        FlatVec { data }
+    }
+
+    /// I.i.d. N(0, std²) samples (used by the consensus experiment and by
+    /// Rust-side re-initialization).
+    pub fn randn(n: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, std);
+        FlatVec { data: v }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    fn check_len(&self, other: &FlatVec) -> Result<()> {
+        if self.len() != other.len() {
+            return Err(Error::shape(format!(
+                "length mismatch: {} vs {}",
+                self.len(),
+                other.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// `self <- w_r/(w_r+w_s) * self + w_s/(w_r+w_s) * other`.
+    ///
+    /// The sum-weight gossip blend. Computed as a single fused pass
+    /// `x += t * (y - x)` with `t = w_s/(w_r+w_s)` (2 flops/element).
+    pub fn mix_from(&mut self, other: &FlatVec, w_r: f64, w_s: f64) -> Result<()> {
+        self.check_len(other)?;
+        debug_assert!(w_r >= 0.0 && w_s > 0.0, "weights must be positive");
+        let t = (w_s / (w_r + w_s)) as f32;
+        ops::mix_into(&mut self.data, &other.data, t);
+        Ok(())
+    }
+
+    /// `self <- self + alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &FlatVec) -> Result<()> {
+        self.check_len(other)?;
+        ops::axpy(&mut self.data, alpha, &other.data);
+        Ok(())
+    }
+
+    /// `self <- alpha * self`.
+    pub fn scale(&mut self, alpha: f32) {
+        ops::scale(&mut self.data, alpha);
+    }
+
+    /// Plain-SGD-with-weight-decay step: `p <- p - lr*(g + wd*p)`.
+    ///
+    /// Mirrors the `sgd_update` HLO artifact; integration tests assert the
+    /// two paths agree to f32 round-off.
+    pub fn sgd_step(&mut self, grad: &FlatVec, lr: f32, wd: f32) -> Result<()> {
+        self.check_len(grad)?;
+        ops::sgd_step(&mut self.data, &grad.data, lr, wd);
+        Ok(())
+    }
+
+    /// Euclidean norm.
+    pub fn norm(&self) -> f64 {
+        ops::dot(&self.data, &self.data).sqrt()
+    }
+
+    /// Squared Euclidean distance to `other` — the consensus error kernel.
+    pub fn dist_sq(&self, other: &FlatVec) -> Result<f64> {
+        self.check_len(other)?;
+        Ok(ops::dist_sq(&self.data, &other.data))
+    }
+
+    /// Dot product.
+    pub fn dot(&self, other: &FlatVec) -> Result<f64> {
+        self.check_len(other)?;
+        Ok(ops::dot(&self.data, &other.data))
+    }
+
+    /// Elementwise mean of many vectors (the consensus target x̄).
+    pub fn mean_of(vs: &[&FlatVec]) -> Result<FlatVec> {
+        let first = vs
+            .first()
+            .ok_or_else(|| Error::shape("mean_of: empty input"))?;
+        let n = first.len();
+        let mut acc = vec![0.0f64; n];
+        for v in vs {
+            if v.len() != n {
+                return Err(Error::shape("mean_of: ragged input"));
+            }
+            for (a, &x) in acc.iter_mut().zip(v.as_slice()) {
+                *a += x as f64;
+            }
+        }
+        let inv = 1.0 / vs.len() as f64;
+        Ok(FlatVec::from_vec(acc.into_iter().map(|a| (a * inv) as f32).collect()))
+    }
+
+    /// Weighted in-place accumulate used by PerSyn/AllReduce averaging:
+    /// `self += other` (caller divides at the end).
+    pub fn add_assign(&mut self, other: &FlatVec) -> Result<()> {
+        self.axpy(1.0, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn rv(rng: &mut Rng, n: usize) -> FlatVec {
+        FlatVec::randn(n, 1.0, rng)
+    }
+
+    #[test]
+    fn zeros_and_len() {
+        let v = FlatVec::zeros(10);
+        assert_eq!(v.len(), 10);
+        assert_eq!(v.norm(), 0.0);
+        assert!(!v.is_empty());
+        assert!(FlatVec::zeros(0).is_empty());
+    }
+
+    #[test]
+    fn mix_equal_weights_is_midpoint() {
+        let mut a = FlatVec::from_vec(vec![0.0, 2.0, 4.0]);
+        let b = FlatVec::from_vec(vec![2.0, 0.0, 0.0]);
+        a.mix_from(&b, 0.5, 0.5).unwrap();
+        assert_eq!(a.as_slice(), &[1.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn mix_zero_receiver_weight_copies_sender() {
+        let mut a = FlatVec::from_vec(vec![5.0; 4]);
+        let b = FlatVec::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        a.mix_from(&b, 0.0, 1.0).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn mix_length_mismatch_errors() {
+        let mut a = FlatVec::zeros(3);
+        let b = FlatVec::zeros(4);
+        assert!(a.mix_from(&b, 0.5, 0.5).is_err());
+    }
+
+    #[test]
+    fn mix_is_convex_combination_property() {
+        check("mix stays in elementwise envelope", 50, |rng| {
+            let n = 1 + rng.below(300) as usize;
+            let mut a = rv(rng, n);
+            let b = rv(rng, n);
+            let a0 = a.clone();
+            let w_r = rng.f64() + 1e-3;
+            let w_s = rng.f64() + 1e-3;
+            a.mix_from(&b, w_r, w_s).unwrap();
+            for i in 0..n {
+                let lo = a0.as_slice()[i].min(b.as_slice()[i]) - 1e-5;
+                let hi = a0.as_slice()[i].max(b.as_slice()[i]) + 1e-5;
+                assert!(a.as_slice()[i] >= lo && a.as_slice()[i] <= hi);
+            }
+        });
+    }
+
+    #[test]
+    fn mix_matches_naive_formula_property() {
+        check("mix == w_r/(w_r+w_s) x + w_s/(w_r+w_s) y", 50, |rng| {
+            let n = 1 + rng.below(500) as usize;
+            let mut a = rv(rng, n);
+            let b = rv(rng, n);
+            let a0 = a.clone();
+            let w_r = 10.0 * rng.f64() + 1e-3;
+            let w_s = 10.0 * rng.f64() + 1e-3;
+            a.mix_from(&b, w_r, w_s).unwrap();
+            let cr = (w_r / (w_r + w_s)) as f32;
+            let cs = (w_s / (w_r + w_s)) as f32;
+            for i in 0..n {
+                let want = cr * a0.as_slice()[i] + cs * b.as_slice()[i];
+                assert!((a.as_slice()[i] - want).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn sgd_step_plain() {
+        let mut p = FlatVec::from_vec(vec![1.0, -1.0]);
+        let g = FlatVec::from_vec(vec![0.5, 0.5]);
+        p.sgd_step(&g, 0.1, 0.0).unwrap();
+        assert_eq!(p.as_slice(), &[0.95, -1.05]);
+    }
+
+    #[test]
+    fn sgd_step_weight_decay_shrinks() {
+        let mut p = FlatVec::from_vec(vec![1.0; 8]);
+        let g = FlatVec::zeros(8);
+        p.sgd_step(&g, 0.1, 1e-4).unwrap();
+        for &x in p.as_slice() {
+            assert!((x - (1.0 - 0.1 * 1e-4)).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn norms_and_distances() {
+        let a = FlatVec::from_vec(vec![3.0, 4.0]);
+        let b = FlatVec::from_vec(vec![0.0, 0.0]);
+        assert!((a.norm() - 5.0).abs() < 1e-9);
+        assert!((a.dist_sq(&b).unwrap() - 25.0).abs() < 1e-9);
+        assert!((a.dot(&a).unwrap() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let a = FlatVec::from_vec(vec![1.0, 3.0]);
+        let b = FlatVec::from_vec(vec![3.0, 5.0]);
+        let m = FlatVec::mean_of(&[&a, &b]).unwrap();
+        assert_eq!(m.as_slice(), &[2.0, 4.0]);
+        assert!(FlatVec::mean_of(&[]).is_err());
+    }
+
+    #[test]
+    fn mean_of_ragged_errors() {
+        let a = FlatVec::zeros(2);
+        let b = FlatVec::zeros(3);
+        assert!(FlatVec::mean_of(&[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut a = FlatVec::from_vec(vec![1.0, 2.0]);
+        let b = FlatVec::from_vec(vec![10.0, 20.0]);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.as_slice(), &[6.0, 12.0]);
+        a.scale(2.0);
+        assert_eq!(a.as_slice(), &[12.0, 24.0]);
+    }
+
+    #[test]
+    fn randn_is_seeded() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = FlatVec::randn(64, 1.0, &mut r1);
+        let b = FlatVec::randn(64, 1.0, &mut r2);
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+}

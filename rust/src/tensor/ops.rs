@@ -1,0 +1,164 @@
+//! Raw slice kernels behind [`FlatVec`](super::FlatVec).
+//!
+//! Written so LLVM auto-vectorizes: fixed-width chunk loops with scalar
+//! tails, no bounds checks in the hot loop (`chunks_exact`), f64
+//! accumulation for reductions (precision matters for ε(t) over 10⁶+
+//! element vectors).
+
+/// `x[i] += t * (y[i] - x[i])` — the fused sum-weight blend.
+pub fn mix_into(x: &mut [f32], y: &[f32], t: f32) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut xc = x.chunks_exact_mut(8);
+    let mut yc = y.chunks_exact(8);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for i in 0..8 {
+            xs[i] += t * (ys[i] - xs[i]);
+        }
+    }
+    for (xi, yi) in xc.into_remainder().iter_mut().zip(yc.remainder()) {
+        *xi += t * (yi - *xi);
+    }
+}
+
+/// `x[i] += alpha * y[i]`.
+pub fn axpy(x: &mut [f32], alpha: f32, y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut xc = x.chunks_exact_mut(8);
+    let mut yc = y.chunks_exact(8);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for i in 0..8 {
+            xs[i] += alpha * ys[i];
+        }
+    }
+    for (xi, yi) in xc.into_remainder().iter_mut().zip(yc.remainder()) {
+        *xi += alpha * yi;
+    }
+}
+
+/// `x[i] *= alpha`.
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// `p[i] -= lr * (g[i] + wd * p[i])` — fused SGD + weight decay.
+pub fn sgd_step(p: &mut [f32], g: &[f32], lr: f32, wd: f32) {
+    debug_assert_eq!(p.len(), g.len());
+    // p <- (1 - lr*wd) * p - lr * g : one multiply + one fma per element.
+    let decay = 1.0 - lr * wd;
+    let mut pc = p.chunks_exact_mut(8);
+    let mut gc = g.chunks_exact(8);
+    for (ps, gs) in (&mut pc).zip(&mut gc) {
+        for i in 0..8 {
+            ps[i] = decay * ps[i] - lr * gs[i];
+        }
+    }
+    for (pi, gi) in pc.into_remainder().iter_mut().zip(gc.remainder()) {
+        *pi = decay * *pi - lr * gi;
+    }
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 4];
+    let mut xc = x.chunks_exact(4);
+    let mut yc = y.chunks_exact(4);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for i in 0..4 {
+            acc[i] += xs[i] as f64 * ys[i] as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for (xi, yi) in xc.remainder().iter().zip(yc.remainder()) {
+        tail += *xi as f64 * *yi as f64;
+    }
+    acc.iter().sum::<f64>() + tail
+}
+
+/// Squared Euclidean distance with f64 accumulation.
+pub fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 4];
+    let mut xc = x.chunks_exact(4);
+    let mut yc = y.chunks_exact(4);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for i in 0..4 {
+            let d = (xs[i] - ys[i]) as f64;
+            acc[i] += d * d;
+        }
+    }
+    let mut tail = 0.0f64;
+    for (xi, yi) in xc.remainder().iter().zip(yc.remainder()) {
+        let d = (*xi - *yi) as f64;
+        tail += d * d;
+    }
+    acc.iter().sum::<f64>() + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_into_handles_tails() {
+        // length 11 exercises both the chunked loop and the remainder.
+        let mut x = vec![1.0f32; 11];
+        let y = vec![3.0f32; 11];
+        mix_into(&mut x, &y, 0.5);
+        for &v in &x {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mix_t_zero_and_one() {
+        let mut x = vec![1.0f32, 2.0];
+        let y = vec![9.0f32, 9.0];
+        mix_into(&mut x, &y, 0.0);
+        assert_eq!(x, vec![1.0, 2.0]);
+        mix_into(&mut x, &y, 1.0);
+        assert_eq!(x, vec![9.0, 9.0]);
+    }
+
+    #[test]
+    fn axpy_tail() {
+        let mut x: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let y = vec![1.0f32; 13];
+        axpy(&mut x, 2.0, &y);
+        for (i, &v) in x.iter().enumerate() {
+            assert_eq!(v, i as f32 + 2.0);
+        }
+    }
+
+    #[test]
+    fn sgd_matches_two_step_formula() {
+        let mut p = vec![0.5f32; 9];
+        let g = vec![0.25f32; 9];
+        let (lr, wd) = (0.1f32, 0.01f32);
+        sgd_step(&mut p, &g, lr, wd);
+        let want = 0.5 - lr * (0.25 + wd * 0.5);
+        for &v in &p {
+            assert!((v - want).abs() < 1e-6, "{v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dot_and_dist_accumulate_in_f64() {
+        // 1M elements of 1e-4: f32 accumulation would lose precision badly.
+        let n = 1_000_000;
+        let x = vec![1e-4f32; n];
+        let d = dot(&x, &x);
+        assert!((d - n as f64 * 1e-8).abs() / (n as f64 * 1e-8) < 1e-6);
+        let y = vec![0.0f32; n];
+        assert!((dist_sq(&x, &y) - d).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dist_sq_odd_length() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let y = vec![0.0f32; 5];
+        assert!((dist_sq(&x, &y) - 55.0).abs() < 1e-9);
+    }
+}

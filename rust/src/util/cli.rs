@@ -1,0 +1,252 @@
+//! Tiny declarative CLI argument parser (no `clap` in the offline dep set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional subcommands
+//! and auto-generated `--help`.  Used by the `gosgd` binary and all
+//! examples.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+///
+/// ```
+/// use gosgd::util::cli::Args;
+/// let a = Args::new("demo", "a demo tool")
+///     .opt("workers", "8", "number of workers")
+///     .flag("verbose", "print more")
+///     .parse_from(vec!["--workers".into(), "4".into(), "--verbose".into()])
+///     .unwrap();
+/// assert_eq!(a.get_usize("workers").unwrap(), 4);
+/// assert!(a.get_flag("verbose"));
+/// ```
+pub struct Args {
+    prog: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(prog: &'static str, about: &'static str) -> Self {
+        Args {
+            prog,
+            about,
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    /// Declare `--name <value>` with no default (required unless absent-ok).
+    pub fn opt_required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]); exits on `--help`.
+    pub fn parse(self) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(argv) {
+            Ok(a) => Ok(a),
+            Err(Error::Cli(msg)) if msg == "help" => {
+                std::process::exit(0);
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Parse an explicit argv (testable).
+    pub fn parse_from(mut self, argv: Vec<String>) -> Result<Args> {
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                self.values.insert(o.name.to_string(), d.clone());
+            }
+            if o.is_flag {
+                self.flags.insert(o.name.to_string(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                println!("{}", self.help_text());
+                return Err(Error::cli("help"));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| Error::cli(format!("unknown option --{key}")))?
+                    .clone();
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(Error::cli(format!("--{key} takes no value")));
+                    }
+                    self.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::cli(format!("--{key} needs a value")))?
+                        }
+                    };
+                    self.values.insert(key, val);
+                }
+            } else {
+                self.positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.prog, self.about);
+        for o in &self.opts {
+            let default = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let kind = if o.is_flag { "" } else { " <value>" };
+            s.push_str(&format!("  --{}{kind}\t{}{default}\n", o.name, o.help));
+        }
+        s
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn get(&self, name: &str) -> Result<&str> {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::cli(format!("missing --{name}")))
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)?
+            .parse()
+            .map_err(|_| Error::cli(format!("--{name} expects an integer")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)?
+            .parse()
+            .map_err(|_| Error::cli(format!("--{name} expects an integer")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)?
+            .parse()
+            .map_err(|_| Error::cli(format!("--{name} expects a number")))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t", "")
+            .opt("p", "0.02", "prob")
+            .parse_from(vec![])
+            .unwrap();
+        assert_eq!(a.get_f64("p").unwrap(), 0.02);
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = Args::new("t", "")
+            .opt("p", "0", "")
+            .opt("q", "0", "")
+            .parse_from(argv(&["--p", "1.5", "--q=2.5"]))
+            .unwrap();
+        assert_eq!(a.get_f64("p").unwrap(), 1.5);
+        assert_eq!(a.get_f64("q").unwrap(), 2.5);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::new("t", "")
+            .flag("verbose", "")
+            .parse_from(argv(&["train", "--verbose", "extra"]))
+            .unwrap();
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positionals(), &["train".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        let r = Args::new("t", "").parse_from(argv(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::new("t", "").opt("p", "0", "").parse_from(argv(&["--p"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        let r = Args::new("t", "").flag("v", "").parse_from(argv(&["--v=1"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = Args::new("t", "").opt("n", "abc", "").parse_from(vec![]).unwrap();
+        assert!(a.get_usize("n").is_err());
+    }
+}

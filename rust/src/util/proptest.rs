@@ -1,0 +1,84 @@
+//! Miniature property-based testing harness (no `proptest` crate offline).
+//!
+//! [`check`] runs a property over many seeded random cases and, on failure,
+//! re-reports the failing seed so the case can be replayed deterministically:
+//!
+//! ```
+//! use gosgd::util::proptest::check;
+//! check("sum is commutative", 200, |rng| {
+//!     let a = rng.f64();
+//!     let b = rng.f64();
+//!     assert!((a + b - (b + a)).abs() < 1e-15);
+//! });
+//! ```
+//!
+//! There is no shrinking — cases are kept small by construction instead —
+//! but the failing seed plus the deterministic [`Rng`](crate::util::rng::Rng)
+//! gives exact reproducibility, which is what matters for CI.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::util::rng::Rng;
+
+/// Base seed; change to re-roll the whole suite.
+pub const BASE_SEED: u64 = 0x90_5_6D_2024;
+
+/// Run `prop` on `cases` independently-seeded RNGs; panic with the failing
+/// case index + seed on the first failure.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u32, mut prop: F) {
+    for case in 0..cases {
+        let seed = BASE_SEED ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = catch_unwind(AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed on case {case}/{cases} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed (debugging helper).
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("counts", 50, |_| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails sometimes", 100, |rng| {
+                assert!(rng.f64() < 0.5, "rolled high");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("rolled high"), "{msg}");
+    }
+
+    #[test]
+    fn seeds_are_deterministic_across_runs() {
+        let mut first = Vec::new();
+        check("collect", 5, |rng| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        check("collect", 5, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,262 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The paper's experiments hinge on *randomized* communication (Bernoulli
+//! exchange decisions, uniform peer choice) and on noise injection for the
+//! consensus study (Fig. 4).  Every stochastic choice in this crate flows
+//! through [`Rng`] so runs are exactly reproducible from a single seed and
+//! each worker can own an independent, splittable stream.
+//!
+//! Implementation: xoshiro256++ seeded through SplitMix64 — the standard
+//! construction recommended by the xoshiro authors; no external crates.
+
+/// SplitMix64 step: used for seeding and stream splitting.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ generator with deterministic seeding and stream splitting.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal deviate from the Box–Muller pair.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed deterministically from a single `u64`.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream (worker `id` from a base seed).
+    ///
+    /// Streams from distinct `id`s are statistically independent for all
+    /// practical purposes (re-keyed through SplitMix64).
+    pub fn split(&self, id: u64) -> Rng {
+        let mut sm = self.s[0] ^ self.s[3] ^ id.wrapping_mul(0xA24BAED4963EE407);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` (53-bit resolution).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's rejection method (unbiased).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Uniform choice from `{0..m} \ {exclude}` — the paper's peer sampler
+    /// (`r` drawn uniformly from the other `M - 1` workers).
+    #[inline]
+    pub fn peer(&mut self, m: usize, exclude: usize) -> usize {
+        assert!(m >= 2, "need at least 2 workers to pick a peer");
+        assert!(exclude < m);
+        let k = self.below(m as u64 - 1) as usize;
+        if k >= exclude {
+            k + 1
+        } else {
+            k
+        }
+    }
+
+    /// Standard normal deviate (Box–Muller, pair-cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u = self.f64();
+            if u <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let v = self.f64();
+            let r = (-2.0 * u.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * v;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Normal deviate as `f32` with the given std.
+    #[inline]
+    pub fn normal_f32(&mut self, std: f32) -> f32 {
+        (self.normal() as f32) * std
+    }
+
+    /// Fill a slice with i.i.d. N(0, std²) f32 samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for x in out.iter_mut() {
+            *x = self.normal_f32(std);
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_differ_and_are_deterministic() {
+        let base = Rng::new(7);
+        let mut w0 = base.split(0);
+        let mut w1 = base.split(1);
+        let mut w0b = base.split(0);
+        assert_ne!(w0.next_u64(), w1.next_u64());
+        w0 = base.split(0);
+        assert_eq!(w0.next_u64(), w0b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(11);
+        let n = 7u64;
+        let mut counts = [0u32; 7];
+        let trials = 70_000;
+        for _ in 0..trials {
+            counts[r.below(n) as usize] += 1;
+        }
+        let expect = trials as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt(), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn peer_never_returns_self_and_covers_all() {
+        let mut r = Rng::new(5);
+        let m = 8;
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            let p = r.peer(m, 3);
+            assert_ne!(p, 3);
+            assert!(p < m);
+            seen[p] = true;
+        }
+        assert_eq!(seen.iter().filter(|&&s| s).count(), m - 1);
+    }
+
+    #[test]
+    fn bernoulli_matches_p() {
+        let mut r = Rng::new(9);
+        let trials = 100_000;
+        let hits = (0..trials).filter(|_| r.bernoulli(0.25)).count();
+        let p_hat = hits as f64 / trials as f64;
+        assert!((p_hat - 0.25).abs() < 0.01, "{p_hat}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 200_000;
+        let samples: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(17);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

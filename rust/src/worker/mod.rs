@@ -1,0 +1,10 @@
+//! Threaded worker runtime (native-thread GoSGD, paper Algorithm 3).
+//!
+//! The sequential [`Engine`](crate::strategies::Engine) realizes the
+//! paper's *analysis* clock; this module realizes the *deployment* shape:
+//! one OS thread per worker, real concurrent queues, no global
+//! coordination.  See [`threaded::ThreadedGossip`].
+
+pub mod threaded;
+
+pub use threaded::{ThreadedGossip, ThreadedReport};

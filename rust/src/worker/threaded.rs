@@ -1,0 +1,304 @@
+//! Native-thread GoSGD: the deployment-shaped runtime.
+//!
+//! One OS thread per worker, exactly Algorithm 3: each thread loops
+//! {drain mailbox → gradient step → Bernoulli(p) send}.  Queues are the
+//! concurrent [`MessageQueue`]s; sends are non-blocking; there is no
+//! master and no barrier after launch.  Gradient sources are created *per
+//! thread* (PJRT clients are not `Send`), via the factory the caller
+//! provides.
+//!
+//! The sequential [`Engine`](crate::strategies::Engine) and this runtime
+//! implement the same protocol under different clocks; the integration
+//! tests check they agree statistically (consensus error, message rate).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+use crate::error::{Error, Result};
+use crate::gossip::{Message, MessageQueue, PeerSelector, SumWeight};
+use crate::strategies::grad::GradSource;
+use crate::tensor::FlatVec;
+use crate::util::rng::Rng;
+
+/// Configuration for a threaded gossip run.
+#[derive(Clone, Debug)]
+pub struct ThreadedGossip {
+    pub workers: usize,
+    /// Exchange probability per local step.
+    pub p: f64,
+    /// Local steps per worker.
+    pub steps_per_worker: u64,
+    pub eta: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    pub peer: PeerSelector,
+}
+
+impl Default for ThreadedGossip {
+    fn default() -> Self {
+        ThreadedGossip {
+            workers: 8,
+            p: 0.02,
+            steps_per_worker: 100,
+            eta: 0.1,
+            weight_decay: 1e-4,
+            seed: 0,
+            peer: PeerSelector::Uniform,
+        }
+    }
+}
+
+/// Outcome of a threaded run.
+pub struct ThreadedReport {
+    /// Final per-worker parameters (index 0..M-1).
+    pub params: Vec<FlatVec>,
+    /// Final per-worker weights.
+    pub weights: Vec<f64>,
+    /// Per-worker loss traces (local step, loss).
+    pub losses: Vec<Vec<(u64, f64)>>,
+    /// Total messages sent.
+    pub messages: u64,
+    /// Wall-clock seconds for the training section.
+    pub elapsed_secs: f64,
+    /// Consensus error across final worker models.
+    pub consensus_error: f64,
+}
+
+impl ThreadedReport {
+    /// Mean final model (the paper's returned x̄).
+    pub fn consensus_model(&self) -> Result<FlatVec> {
+        let refs: Vec<&FlatVec> = self.params.iter().collect();
+        FlatVec::mean_of(&refs)
+    }
+}
+
+impl ThreadedGossip {
+    /// Run the protocol.  `make_source(worker_id)` is called on each worker
+    /// thread to build its gradient source (0-based worker ids here).
+    pub fn run<F>(&self, init: &FlatVec, make_source: F) -> Result<ThreadedReport>
+    where
+        F: Fn(usize) -> Result<Box<dyn GradSource>> + Send + Sync,
+    {
+        let m = self.workers;
+        if m < 2 {
+            return Err(Error::config("threaded gossip needs >= 2 workers"));
+        }
+        let queues: Arc<Vec<MessageQueue>> =
+            Arc::new((0..m).map(|_| MessageQueue::unbounded()).collect());
+        let start_barrier = Arc::new(Barrier::new(m));
+        let total_messages = Arc::new(AtomicU64::new(0));
+        let results: Arc<Vec<Mutex<Option<(FlatVec, f64, Vec<(u64, f64)>)>>>> =
+            Arc::new((0..m).map(|_| Mutex::new(None)).collect());
+        let base_rng = Rng::new(self.seed);
+
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for w in 0..m {
+                let queues = queues.clone();
+                let start_barrier = start_barrier.clone();
+                let total_messages = total_messages.clone();
+                let results = results.clone();
+                let mut rng = base_rng.split(w as u64 + 1);
+                let make_source = &make_source;
+                let cfg = self.clone();
+                let init = init.clone();
+                handles.push(scope.spawn(move || -> Result<()> {
+                    let mut source = make_source(w)?;
+                    if source.dim() != init.len() {
+                        return Err(Error::shape("grad source dim mismatch"));
+                    }
+                    let mut x = init;
+                    let mut weight = SumWeight::init(m);
+                    let mut grad = FlatVec::zeros(x.len());
+                    let mut losses = Vec::with_capacity(cfg.steps_per_worker as usize);
+                    start_barrier.wait();
+
+                    for step in 0..cfg.steps_per_worker {
+                        // 1. ProcessMessages(q_s)
+                        for msg in queues[w].drain() {
+                            let t = weight.absorb(msg.weight);
+                            x.mix_from(&msg.params, 1.0 - t, t)?;
+                        }
+                        // 2. local gradient step
+                        let loss = source.grad(w + 1, &x, step, &mut grad)?;
+                        x.sgd_step(&grad, cfg.eta, cfg.weight_decay)?;
+                        losses.push((step, loss));
+                        // 3. Bernoulli(p) send
+                        if rng.bernoulli(cfg.p) {
+                            let r = cfg.peer.pick(m, w, &mut rng);
+                            let shipped = weight.halve_for_send();
+                            let msg =
+                                Message::new(Arc::new(x.clone()), shipped, w, step);
+                            total_messages.fetch_add(1, Ordering::Relaxed);
+                            queues[r].push(msg);
+                        }
+                    }
+                    // Final drain so no weight mass is stranded in queues.
+                    for msg in queues[w].drain() {
+                        let t = weight.absorb(msg.weight);
+                        x.mix_from(&msg.params, 1.0 - t, t)?;
+                    }
+                    *results[w].lock().map_err(|_| Error::worker("poisoned result slot"))? =
+                        Some((x, weight.value(), losses));
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join()
+                    .map_err(|_| Error::worker("worker thread panicked"))??;
+            }
+            Ok(())
+        })?;
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let mut params = Vec::with_capacity(m);
+        let mut weights = Vec::with_capacity(m);
+        let mut losses = Vec::with_capacity(m);
+        for slot in results.iter() {
+            let (x, wgt, l) = slot
+                .lock()
+                .map_err(|_| Error::worker("poisoned result slot"))?
+                .take()
+                .ok_or_else(|| Error::worker("worker produced no result"))?;
+            params.push(x);
+            weights.push(wgt);
+            losses.push(l);
+        }
+
+        // Note: mass may still be in flight at the cutoff only if a send
+        // happened after the receiver's final drain; those messages are in
+        // queues we own — fold them into their receivers for exactness.
+        for (w, q) in queues.iter().enumerate() {
+            for msg in q.drain() {
+                let mut wgt = SumWeight::from_value(weights[w]);
+                let t = wgt.absorb(msg.weight);
+                params[w].mix_from(&msg.params, 1.0 - t, t)?;
+                weights[w] = wgt.value();
+            }
+        }
+
+        let mean = FlatVec::mean_of(&params.iter().collect::<Vec<_>>())?;
+        let mut consensus_error = 0.0;
+        for p in &params {
+            consensus_error += p.dist_sq(&mean)?;
+        }
+
+        Ok(ThreadedReport {
+            params,
+            weights,
+            losses,
+            messages: total_messages.load(Ordering::Relaxed),
+            elapsed_secs: elapsed,
+            consensus_error,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::grad::QuadraticSource;
+
+    fn quad_factory(
+        dim: usize,
+        sigma: f32,
+        seed: u64,
+    ) -> impl Fn(usize) -> Result<Box<dyn GradSource>> + Send + Sync {
+        move |_w| Ok(Box::new(QuadraticSource::new(dim, sigma, seed)) as Box<dyn GradSource>)
+    }
+
+    #[test]
+    fn runs_and_conserves_weight() {
+        let dim = 64;
+        let cfg = ThreadedGossip {
+            workers: 4,
+            p: 0.3,
+            steps_per_worker: 200,
+            eta: 1.0,
+            weight_decay: 0.0,
+            seed: 1,
+            peer: PeerSelector::Uniform,
+        };
+        let init = FlatVec::zeros(dim);
+        let rep = cfg.run(&init, quad_factory(dim, 0.1, 7)).unwrap();
+        assert_eq!(rep.params.len(), 4);
+        let total_w: f64 = rep.weights.iter().sum();
+        assert!((total_w - 1.0).abs() < 1e-9, "weight mass {total_w}");
+        assert!(rep.messages > 0);
+        assert!(rep.elapsed_secs > 0.0);
+    }
+
+    #[test]
+    fn training_descends() {
+        let dim = 32;
+        let cfg = ThreadedGossip {
+            workers: 4,
+            p: 0.1,
+            steps_per_worker: 400,
+            eta: 2.0,
+            weight_decay: 0.0,
+            seed: 3,
+            peer: PeerSelector::Uniform,
+        };
+        let init = FlatVec::zeros(dim);
+        let rep = cfg.run(&init, quad_factory(dim, 0.05, 11)).unwrap();
+        for l in &rep.losses {
+            let early: f64 = l[..20].iter().map(|(_, v)| v).sum::<f64>() / 20.0;
+            let n = l.len();
+            let late: f64 = l[n - 20..].iter().map(|(_, v)| v).sum::<f64>() / 20.0;
+            assert!(late < early * 0.5, "{early} -> {late}");
+        }
+    }
+
+    #[test]
+    fn gossip_keeps_workers_close() {
+        let dim = 32;
+        let mk = |p: f64| {
+            let cfg = ThreadedGossip {
+                workers: 4,
+                p,
+                steps_per_worker: 300,
+                eta: 1.0,
+                weight_decay: 0.0,
+                seed: 5,
+                peer: PeerSelector::Uniform,
+            };
+            cfg.run(&FlatVec::zeros(dim), quad_factory(dim, 0.3, 13))
+                .unwrap()
+                .consensus_error
+        };
+        let eps_gossip = mk(0.5);
+        let eps_silent = mk(0.0);
+        assert!(
+            eps_gossip < eps_silent,
+            "gossip {eps_gossip} vs silent {eps_silent}"
+        );
+    }
+
+    #[test]
+    fn p_zero_sends_nothing() {
+        let dim = 8;
+        let cfg = ThreadedGossip {
+            workers: 2,
+            p: 0.0,
+            steps_per_worker: 50,
+            eta: 0.1,
+            weight_decay: 0.0,
+            seed: 9,
+            peer: PeerSelector::Uniform,
+        };
+        let rep = cfg
+            .run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 17))
+            .unwrap();
+        assert_eq!(rep.messages, 0);
+    }
+
+    #[test]
+    fn single_worker_rejected() {
+        let cfg = ThreadedGossip { workers: 1, ..Default::default() };
+        assert!(cfg
+            .run(&FlatVec::zeros(4), quad_factory(4, 0.1, 1))
+            .is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Integration tests over the PJRT runtime: the Rust coordinator loading
+//! and executing the AOT artifacts.  Requires `make artifacts` (skips with
+//! a notice otherwise — CI runs them through `make test`).
+
+use gosgd::config::{RunConfig, StrategyKind};
+use gosgd::coordinator::Coordinator;
+use gosgd::data::{BatchSampler, SyntheticCifar};
+use gosgd::runtime::{ModelRuntime, PjrtSource};
+use gosgd::strategies::gosgd::GoSgd;
+use gosgd::strategies::Engine;
+use gosgd::tensor::FlatVec;
+use gosgd::util::rng::Rng;
+
+fn tiny_dir() -> Option<&'static str> {
+    let dir = "artifacts/tiny";
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: {dir} missing — run `make artifacts`");
+        None
+    }
+}
+
+fn sampler(rt: &ModelRuntime, workers: usize) -> BatchSampler {
+    BatchSampler::new(SyntheticCifar::new(0, 0.5, true), rt.manifest().batch, workers)
+}
+
+#[test]
+fn artifact_loads_and_shapes_match() {
+    let Some(dir) = tiny_dir() else { return };
+    let rt = ModelRuntime::load(dir).unwrap();
+    assert_eq!(rt.manifest().model, "tiny");
+    assert_eq!(rt.param_count(), 197_322);
+    assert_eq!(rt.manifest().image_shape, vec![32, 32, 3]);
+}
+
+#[test]
+fn train_step_produces_finite_loss_and_grads() {
+    let Some(dir) = tiny_dir() else { return };
+    let rt = ModelRuntime::load(dir).unwrap();
+    let params = rt.manifest().load_init_params().unwrap();
+    let s = sampler(&rt, 1);
+    let batch = s.train_batch(1, 0);
+    let (loss, grads) = rt.train_step(&params, &batch.images, &batch.labels).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    // Random init on 10 classes: loss near ln(10).
+    assert!((loss - (10.0f64).ln()).abs() < 1.5, "init loss {loss}");
+    assert_eq!(grads.len(), rt.param_count());
+    assert!(grads.norm() > 0.0);
+}
+
+#[test]
+fn sgd_on_artifact_decreases_loss() {
+    let Some(dir) = tiny_dir() else { return };
+    let rt = ModelRuntime::load(dir).unwrap();
+    let mut params = rt.manifest().load_init_params().unwrap();
+    let s = sampler(&rt, 1);
+    // Fixed batch: loss must drop fast when memorizing it.
+    let batch = s.train_batch(1, 0);
+    let (first, _) = rt.train_step(&params, &batch.images, &batch.labels).unwrap();
+    for _ in 0..15 {
+        let (_, grads) = rt.train_step(&params, &batch.images, &batch.labels).unwrap();
+        params.sgd_step(&grads, 0.1, 1e-4).unwrap();
+    }
+    let (last, _) = rt.train_step(&params, &batch.images, &batch.labels).unwrap();
+    assert!(last < first * 0.6, "loss {first} -> {last}");
+}
+
+#[test]
+fn sgd_update_artifact_matches_host_optimizer() {
+    let Some(dir) = tiny_dir() else { return };
+    let rt = ModelRuntime::load(dir).unwrap();
+    let mut rng = Rng::new(3);
+    let params = FlatVec::randn(rt.param_count(), 0.1, &mut rng);
+    let grads = FlatVec::randn(rt.param_count(), 0.1, &mut rng);
+    let via_artifact = rt.sgd_update(&params, &grads, 0.1, 1e-4).unwrap();
+    let mut via_host = params.clone();
+    via_host.sgd_step(&grads, 0.1, 1e-4).unwrap();
+    let mut max_err = 0.0f32;
+    for (a, b) in via_artifact.as_slice().iter().zip(via_host.as_slice()) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-6, "sgd artifact vs host: max err {max_err}");
+}
+
+#[test]
+fn mix_artifact_matches_host_blend() {
+    // The L1 Pallas kernel (via PJRT) against the L3 host path: same op,
+    // two implementations, must agree to f32 round-off.
+    let Some(dir) = tiny_dir() else { return };
+    let rt = ModelRuntime::load(dir).unwrap();
+    let mut rng = Rng::new(7);
+    let x_r = FlatVec::randn(rt.param_count(), 1.0, &mut rng);
+    let x_s = FlatVec::randn(rt.param_count(), 1.0, &mut rng);
+    for (w_r, w_s) in [(0.125f32, 0.0625f32), (0.5, 0.5), (0.9, 0.1)] {
+        let via_pallas = rt.mix(&x_r, &x_s, w_r, w_s).unwrap();
+        let mut via_host = x_r.clone();
+        via_host.mix_from(&x_s, w_r as f64, w_s as f64).unwrap();
+        let mut max_err = 0.0f32;
+        for (a, b) in via_pallas.as_slice().iter().zip(via_host.as_slice()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-5, "mix pallas vs host (w_r={w_r}): {max_err}");
+    }
+}
+
+#[test]
+fn eval_step_counts_are_sane() {
+    let Some(dir) = tiny_dir() else { return };
+    let rt = ModelRuntime::load(dir).unwrap();
+    let params = rt.manifest().load_init_params().unwrap();
+    let s = sampler(&rt, 1);
+    let (loss, acc) = rt.evaluate(&params, &s, 2).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn engine_with_pjrt_source_runs_gosgd() {
+    let Some(dir) = tiny_dir() else { return };
+    let rt = ModelRuntime::load(dir).unwrap();
+    let init = rt.manifest().load_init_params().unwrap();
+    let workers = 4;
+    let source = PjrtSource::new(&rt, sampler(&rt, workers), workers);
+    let mut engine = Engine::new(
+        Box::new(GoSgd::new(0.5)),
+        source,
+        workers,
+        &init,
+        0.1,
+        1e-4,
+        11,
+    );
+    engine.run(24).unwrap();
+    assert_eq!(engine.losses.len(), 24);
+    assert!(engine.losses.values().iter().all(|l| l.is_finite()));
+    let total_steps: u64 = engine.state().steps[1..].iter().sum();
+    assert_eq!(total_steps, 24);
+}
+
+#[test]
+fn coordinator_full_run_with_eval() {
+    let Some(_) = tiny_dir() else { return };
+    let mut cfg = RunConfig::default();
+    cfg.model = "tiny".into();
+    cfg.workers = 4;
+    cfg.steps = 40;
+    cfg.strategy = StrategyKind::PerSyn { tau: 5 };
+    cfg.eval_every = 20;
+    cfg.eval_batches = 1;
+    let rep = Coordinator::new(cfg).unwrap().run().unwrap();
+    assert_eq!(rep.evals.len(), 2);
+    assert!(rep.final_loss.is_finite());
+    // PerSyn synced at the end: consensus is exact.
+    assert!(rep.consensus_error < 1e-6, "eps {}", rep.consensus_error);
+    assert_eq!(rep.barriers, 8);
+}
+
+#[test]
+fn deterministic_coordinator_runs() {
+    let Some(_) = tiny_dir() else { return };
+    let run = || {
+        let mut cfg = RunConfig::default();
+        cfg.model = "tiny".into();
+        cfg.workers = 2;
+        cfg.steps = 10;
+        cfg.strategy = StrategyKind::GoSgd { p: 0.5 };
+        cfg.eval_batches = 1;
+        Coordinator::new(cfg).unwrap().run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.train_loss.values(), b.train_loss.values());
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(a.messages, b.messages);
+}

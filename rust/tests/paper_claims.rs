@@ -1,0 +1,213 @@
+//! The paper's qualitative claims, asserted end-to-end on synthetic
+//! workloads (fast, artifact-free).  Each test names the section/figure
+//! whose "shape" it pins.
+
+use gosgd::harness::{fig2, fig4, variance};
+use gosgd::sim::TimeModel;
+use gosgd::strategies::allreduce::AllReduce;
+use gosgd::strategies::engine::Engine;
+use gosgd::strategies::gosgd::GoSgd;
+use gosgd::strategies::grad::QuadraticSource;
+use gosgd::strategies::local::Local;
+use gosgd::strategies::persyn::PerSyn;
+use gosgd::tensor::FlatVec;
+
+/// Section 2.1 / Algorithm 1: distributing the batch ≡ bigger batches;
+/// with M workers the final loss beats a single small-batch run on a
+/// noisy objective (variance reduction).
+#[test]
+fn distribution_buys_variance_reduction() {
+    let dim = 64;
+    let noise = 1.0f32;
+    let steps = 400;
+    let mk = |workers: usize| {
+        let src = QuadraticSource::new(dim, noise, 31);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(Box::new(AllReduce), src, workers, &init, 1.5, 0.0, 17);
+        eng.run(steps).unwrap();
+        let mean = eng.consensus_model().unwrap();
+        eng.grad_source().true_loss(&mean).unwrap()
+    };
+    let single = mk(1);
+    let eight = mk(8);
+    assert!(
+        eight < single * 0.5,
+        "M=8 loss {eight} should clearly beat M=1 loss {single}"
+    );
+}
+
+/// Figure 1 shape: at equal exchange rate, PerSyn and GoSGD converge to a
+/// similar loss, both far better than no communication when workers must
+/// agree (evaluated at the mean model under high gradient noise).
+#[test]
+fn fig1_shape_persyn_and_gosgd_comparable() {
+    let dim = 64;
+    let p = 0.1;
+    let iterations = 600u64;
+    let workers = 8;
+    let init = FlatVec::zeros(dim);
+
+    // Per-worker loss (mean over workers of L(x_m)): on a *convex*
+    // quadratic the mean of uncoupled models is artificially good, so the
+    // honest comparison — and the one that matches the paper's argument —
+    // is each worker's own model quality.
+    let per_worker = |strategy: Box<dyn gosgd::strategies::Strategy>, steps: u64| {
+        let src = QuadraticSource::new(dim, 0.8, 41);
+        let mut eng = Engine::new(strategy, src, workers, &init, 1.0, 0.0, 43);
+        eng.run(steps).unwrap();
+        let mut total = 0.0;
+        for w in 1..=workers {
+            total += eng
+                .grad_source()
+                .true_loss(eng.state().stacked.worker(w))
+                .unwrap();
+        }
+        total / workers as f64
+    };
+
+    let gosgd = per_worker(Box::new(GoSgd::new(p)), iterations * workers as u64);
+    let persyn = per_worker(Box::new(PerSyn::from_probability(p)), iterations);
+    let local = per_worker(Box::new(Local), iterations);
+
+    // PerSyn is ahead per-iteration (the paper: "slightly faster"); on a
+    // noise-floor-dominated quadratic the gap is amplified because full
+    // averaging reduces per-worker variance faster than pairwise gossip —
+    // gossip must stay within 5x and strictly better than silence.
+    let ratio = gosgd / persyn;
+    assert!((0.2..5.0).contains(&ratio), "gosgd {gosgd} vs persyn {persyn}");
+    // Communication buys variance reduction per worker.
+    assert!(gosgd < local, "gosgd {gosgd} vs local {local}");
+    assert!(persyn < local, "persyn {persyn} vs local {local}");
+}
+
+/// Figure 2 headline: GoSGD reaches a given loss significantly faster than
+/// EASGD in wall-clock (simulated; EASGD pays blocking master syncs).
+#[test]
+fn fig2_gosgd_faster_than_easgd_wallclock() {
+    let cfg = fig2::Fig2Config {
+        // Low gradient noise: the descent-dominated regime of a real
+        // training run (at the noise floor, loss reflects variance rather
+        // than progress and the wall-clock effect is masked).
+        backend: fig2::Fig2Backend::Quadratic { dim: 512, sigma: 0.05 },
+        workers: 8,
+        p: 0.1, // tau = 10: the regime where sync costs are visible
+        horizon_secs: 90.0,
+        time_model: TimeModel::paper_like(),
+        seed: 7,
+        eta: 1.0,
+        weight_decay: 0.0,
+        ema_beta: 0.95,
+    };
+    let series = fig2::run(&cfg, None).unwrap();
+    let gossip = &series[0];
+    let easgd = &series[1];
+    // Strictly more gradient steps in the same simulated time.
+    assert!(
+        gossip.steps as f64 > easgd.steps as f64 * 1.10,
+        "gossip {} steps vs easgd {}",
+        gossip.steps,
+        easgd.steps
+    );
+    // Loss at the horizon: more steps in the same simulated time => lower
+    // final training loss (EMA smooths sampling noise).
+    let g_final = gossip.points.last().unwrap().1;
+    let e_final = easgd.points.last().unwrap().1;
+    assert!(
+        g_final < e_final * 1.02,
+        "final loss: gossip {g_final} vs easgd {e_final}"
+    );
+}
+
+/// Figure 2 message accounting: at equal exchange rate GoSGD sends about
+/// half the messages of the master-based methods per unit time.
+#[test]
+fn fig2_gossip_message_economy() {
+    let cfg = fig2::Fig2Config {
+        backend: fig2::Fig2Backend::Quadratic { dim: 128, sigma: 0.3 },
+        workers: 8,
+        p: 0.05,
+        horizon_secs: 60.0,
+        seed: 9,
+        ..Default::default()
+    };
+    let series = fig2::run(&cfg, None).unwrap();
+    let gossip = &series[0];
+    let easgd = &series[1];
+    let g_rate = gossip.messages as f64 / gossip.steps as f64;
+    let e_rate = easgd.messages as f64 / easgd.steps as f64;
+    assert!(
+        g_rate < e_rate * 0.7,
+        "messages/step: gossip {g_rate:.4} vs easgd {e_rate:.4}"
+    );
+}
+
+/// Figure 4: see harness::fig4 tests for the sawtooth/variance claims;
+/// here the end-to-end sweep at the paper's frequencies.
+#[test]
+fn fig4_full_sweep_orderings() {
+    let cfg = fig4::Fig4Config {
+        workers: 8,
+        dim: 500,
+        rounds: 400,
+        ps: vec![0.01, 0.1],
+        seed: 3,
+        include_local: true,
+    };
+    let series = fig4::run(&cfg, None).unwrap();
+    let g001 = &series[0];
+    let p001 = &series[1];
+    let g01 = &series[2];
+    let local = &series[4];
+    // Magnitudes: same order on the paper's log scale.  Measured, gossip's
+    // steady state sits ~2.5× above PerSyn's sawtooth peak (pairwise
+    // averaging mixes slower than a full reset) — see EXPERIMENTS.md.
+    assert!(g001.mean_eps() < p001.max_eps() * 4.0);
+    // More communication => tighter consensus.
+    assert!(g01.mean_eps() < g001.mean_eps());
+    // Everything beats silence.
+    assert!(g001.max_eps() < local.points.last().unwrap().1);
+    // PerSyn sawtooth vs GoSGD steadiness.
+    assert!(g001.cv() < p001.cv());
+}
+
+/// Appendix A: measured gradient-error scaling exponent ≈ −1.
+#[test]
+fn appendix_a_variance_scaling() {
+    let cfg = variance::VarianceConfig {
+        dim: 128,
+        batch_sizes: vec![1, 2, 4, 8, 16, 32],
+        trials: 120,
+        sigma: 0.4,
+        seed: 5,
+    };
+    let rows = variance::run(&cfg, None).unwrap();
+    let alpha = variance::fit_power_law(&rows);
+    assert!((alpha + 1.0).abs() < 0.2, "exponent {alpha}");
+}
+
+/// Consensus convergence of pure gossip (no gradients): exponential-rate
+/// contraction to the initial average — the Randomized Gossip guarantee
+/// the paper builds on (section 4, [11]).
+#[test]
+fn pure_gossip_converges_to_consensus() {
+    use gosgd::strategies::grad::NoiseSource;
+    let dim = 100;
+    let workers = 8;
+    // Zero learning rate: communication only.
+    let src = NoiseSource::new(dim, 1);
+    let mut init_rng = gosgd::util::rng::Rng::new(2);
+    let init = FlatVec::randn(dim, 1.0, &mut init_rng);
+    let mut eng = Engine::new(Box::new(GoSgd::new(1.0)), src, workers, &init, 0.0, 0.0, 3);
+    // Perturb workers to distinct starting points.
+    for w in 1..=workers {
+        let mut r = init_rng.split(w as u64);
+        *eng.state_mut().stacked.worker_mut(w) = FlatVec::randn(dim, 1.0, &mut r);
+    }
+    let eps0 = eng.state().stacked.consensus_error().unwrap();
+    eng.run(60 * workers as u64).unwrap();
+    let eps1 = eng.state().stacked.consensus_error().unwrap();
+    assert!(
+        eps1 < eps0 * 1e-3,
+        "gossip should contract consensus error: {eps0} -> {eps1}"
+    );
+}
