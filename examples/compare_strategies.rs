@@ -22,6 +22,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .opt("iterations", "150", "worker iterations (fig1/fig3)")
         .opt("ps", "0.01,0.4", "exchange probabilities (fig1/fig3)")
         .opt("p", "0.02", "exchange probability (fig2)")
+        .opt("shards", "1", "gossip shards per exchange; > 1 adds a sharded-GoSGD series (fig2)")
         .opt("horizon", "120", "simulated seconds (fig2)")
         .opt("backend", "quadratic", "fig2 gradient backend: quadratic | pjrt")
         .opt("seed", "0", "RNG seed")
@@ -78,13 +79,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 backend,
                 workers: a.get_usize("workers")?,
                 p: a.get_f64("p")?,
+                shards: a.get_usize("shards")?,
                 horizon_secs: a.get_f64("horizon")?,
                 seed: a.get_u64("seed")?,
                 ..Default::default()
             };
             println!(
-                "figure 2: loss vs simulated wall clock (p={}, horizon {}s)\n",
-                cfg.p, cfg.horizon_secs
+                "figure 2: loss vs simulated wall clock (p={}, shards={}, horizon {}s)\n",
+                cfg.p, cfg.shards, cfg.horizon_secs
             );
             let series = fig2::run(&cfg, out.as_deref())?;
             let threshold = series

@@ -32,7 +32,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .parse()?;
 
     let strategy = StrategyKind::parse(a.get("strategy")?)?;
-    let is_async = matches!(strategy, StrategyKind::GoSgd { .. } | StrategyKind::Downpour { .. });
+    let is_async = matches!(
+        strategy,
+        StrategyKind::GoSgd { .. }
+            | StrategyKind::GoSgdSharded { .. }
+            | StrategyKind::Downpour { .. }
+    );
     let workers = a.get_usize("workers")?;
     let iterations = a.get_u64("iterations")?;
     let scale = if is_async { workers as u64 } else { 1 };

@@ -1,0 +1,89 @@
+//! Bench: sharded gossip exchange — shard counts × worker counts.
+//!
+//! The acceptance experiment for the sharded-exchange path: at a fixed
+//! per-coordinate exchange budget, sweeping `shards` must (a) cut the
+//! bytes shipped per gossip event by `~1/shards`, (b) keep the consensus
+//! residual in the same band as the unsharded protocol, and (c) not slow
+//! the engine's tick rate (smaller snapshots mean *less* copying per
+//! send).  Run with `cargo bench --bench shard_scaling`; set `BENCH_CSV`
+//! for machine-readable output.
+
+use gosgd::bench::Bencher;
+use gosgd::strategies::engine::Engine;
+use gosgd::strategies::gosgd::GoSgd;
+use gosgd::strategies::grad::NoiseSource;
+use gosgd::tensor::FlatVec;
+
+/// One configuration's summary after a fixed run.
+struct Summary {
+    label: String,
+    bytes_per_msg: f64,
+    consensus_error: f64,
+    messages: u64,
+}
+
+fn run_summary(workers: usize, shards: usize, p: f64, dim: usize, ticks: u64) -> Summary {
+    let src = NoiseSource::new(dim, 0xBEEF);
+    let init = FlatVec::zeros(dim);
+    let mut eng = Engine::new(
+        Box::new(GoSgd::new(p).with_shards(shards)),
+        src,
+        workers,
+        &init,
+        1.0,
+        0.0,
+        0x5EED ^ shards as u64,
+    );
+    eng.run(ticks).unwrap();
+    let state = eng.state();
+    Summary {
+        label: format!("m{workers}_s{shards}"),
+        bytes_per_msg: state.comm.bytes as f64 / state.comm.messages.max(1) as f64,
+        consensus_error: state.stacked.consensus_error().unwrap(),
+        messages: state.comm.messages,
+    }
+}
+
+fn main() {
+    let dim = 4096;
+    let mut b = Bencher::new("shard_scaling");
+
+    // Throughput: engine ticks/second across the sweep.  The closure runs
+    // 64 ticks per call; elems/s therefore reports ticks/s directly.
+    for &workers in &[4usize, 8] {
+        for &shards in &[1usize, 2, 4, 8, 16] {
+            let src = NoiseSource::new(dim, 1);
+            let init = FlatVec::zeros(dim);
+            let mut eng = Engine::new(
+                Box::new(GoSgd::new(0.2).with_shards(shards)),
+                src,
+                workers,
+                &init,
+                1.0,
+                0.0,
+                2,
+            );
+            b.bench_elems(&format!("ticks_m{workers}_s{shards}"), 64, || {
+                eng.run(64).unwrap();
+            });
+        }
+    }
+
+    // Accounting sweep: equal per-coordinate budget (p scales with shards,
+    // capped at 1), long enough for the consensus residual to reach its
+    // steady state.
+    println!("\nconfig      bytes/msg   messages   consensus_eps");
+    let base_p = 0.05;
+    for &workers in &[4usize, 8] {
+        for &shards in &[1usize, 2, 4, 8, 16] {
+            let p = (base_p * shards as f64).min(1.0);
+            let s = run_summary(workers, shards, p, dim, 20_000);
+            println!(
+                "{:<10} {:>10.0}  {:>9}  {:>14.4}",
+                s.label, s.bytes_per_msg, s.messages, s.consensus_error
+            );
+        }
+    }
+
+    b.finish();
+}

@@ -16,6 +16,10 @@ use crate::strategies::{
 pub enum StrategyKind {
     /// The paper's contribution (section 4); `p` = exchange probability.
     GoSgd { p: f64 },
+    /// GoSGD with sharded exchange: each gossip event ships one of
+    /// `shards` contiguous slices of the vector (see
+    /// [`crate::gossip::shard`]), cutting per-event bandwidth `~1/shards`.
+    GoSgdSharded { p: f64, shards: usize },
     /// Periodic synchronization every `tau` rounds (section 3.1).
     PerSyn { tau: u64 },
     /// Elastic averaging every `tau` rounds (section 3.2).
@@ -30,18 +34,27 @@ pub enum StrategyKind {
 
 impl StrategyKind {
     /// Parse a CLI strategy spec:
-    /// `gosgd:0.02`, `persyn:50`, `easgd:0.1:50`, `downpour:4:4`,
-    /// `allreduce`, `local`.
+    /// `gosgd:0.02`, `gosgd:0.02:8` (sharded), `persyn:50`,
+    /// `easgd:0.1:50`, `downpour:4:4`, `allreduce`, `local`.
     pub fn parse(text: &str) -> Result<StrategyKind> {
         let parts: Vec<&str> = text.split(':').collect();
         let bad = || Error::config(format!("cannot parse strategy {text:?}"));
+        let parse_p = |p: &str| -> Result<f64> {
+            let p: f64 = p.parse().map_err(|_| bad())?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::config(format!("gosgd p out of [0,1]: {p}")));
+            }
+            Ok(p)
+        };
         match parts.as_slice() {
-            ["gosgd", p] => {
-                let p: f64 = p.parse().map_err(|_| bad())?;
-                if !(0.0..=1.0).contains(&p) {
-                    return Err(Error::config(format!("gosgd p out of [0,1]: {p}")));
+            ["gosgd", p] => Ok(StrategyKind::GoSgd { p: parse_p(p)? }),
+            ["gosgd", p, shards] => {
+                let p = parse_p(p)?;
+                let shards: usize = shards.parse().map_err(|_| bad())?;
+                if shards == 0 {
+                    return Err(Error::config("gosgd shards must be >= 1"));
                 }
-                Ok(StrategyKind::GoSgd { p })
+                Ok(StrategyKind::GoSgdSharded { p, shards })
             }
             ["persyn", tau] => Ok(StrategyKind::PerSyn { tau: tau.parse().map_err(|_| bad())? }),
             ["easgd", alpha, tau] => Ok(StrategyKind::Easgd {
@@ -62,6 +75,7 @@ impl StrategyKind {
     pub fn tag(&self) -> String {
         match self {
             StrategyKind::GoSgd { p } => format!("gosgd_p{p}"),
+            StrategyKind::GoSgdSharded { p, shards } => format!("gosgd_p{p}_s{shards}"),
             StrategyKind::PerSyn { tau } => format!("persyn_tau{tau}"),
             StrategyKind::Easgd { alpha, tau } => format!("easgd_a{alpha}_tau{tau}"),
             StrategyKind::Downpour { n_push, n_fetch } => {
@@ -149,7 +163,11 @@ impl RunConfig {
         if self.workers == 0 {
             return Err(Error::config("workers must be >= 1"));
         }
-        if matches!(self.strategy, StrategyKind::GoSgd { .. }) && self.workers < 2 {
+        if matches!(
+            self.strategy,
+            StrategyKind::GoSgd { .. } | StrategyKind::GoSgdSharded { .. }
+        ) && self.workers < 2
+        {
             return Err(Error::config("gosgd needs at least 2 workers"));
         }
         if let StrategyKind::Easgd { alpha, .. } = self.strategy {
@@ -160,9 +178,17 @@ impl RunConfig {
                 )));
             }
         }
-        if let StrategyKind::GoSgd { p } = self.strategy {
-            if !(0.0..=1.0).contains(&p) {
-                return Err(Error::config(format!("gosgd p out of range: {p}")));
+        match self.strategy {
+            StrategyKind::GoSgd { p } | StrategyKind::GoSgdSharded { p, .. } => {
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(Error::config(format!("gosgd p out of range: {p}")));
+                }
+            }
+            _ => {}
+        }
+        if let StrategyKind::GoSgdSharded { shards, .. } = self.strategy {
+            if shards == 0 {
+                return Err(Error::config("gosgd shards must be >= 1"));
             }
         }
         if self.steps == 0 {
@@ -177,6 +203,11 @@ impl RunConfig {
             StrategyKind::GoSgd { p } => {
                 Box::new(GoSgd::new(*p).with_selector(self.peer.clone()))
             }
+            StrategyKind::GoSgdSharded { p, shards } => Box::new(
+                GoSgd::new(*p)
+                    .with_selector(self.peer.clone())
+                    .with_shards(*shards),
+            ),
             StrategyKind::PerSyn { tau } => Box::new(PerSyn::new(*tau)),
             StrategyKind::Easgd { alpha, tau } => Box::new(Easgd::new(*alpha, *tau)),
             StrategyKind::Downpour { n_push, n_fetch } => {
@@ -204,6 +235,10 @@ mod tests {
             StrategyKind::GoSgd { p: 0.02 }
         );
         assert_eq!(
+            StrategyKind::parse("gosgd:0.02:8").unwrap(),
+            StrategyKind::GoSgdSharded { p: 0.02, shards: 8 }
+        );
+        assert_eq!(
             StrategyKind::parse("persyn:50").unwrap(),
             StrategyKind::PerSyn { tau: 50 }
         );
@@ -223,6 +258,8 @@ mod tests {
     fn parse_rejects_garbage() {
         assert!(StrategyKind::parse("gosgd").is_err());
         assert!(StrategyKind::parse("gosgd:2.0").is_err());
+        assert!(StrategyKind::parse("gosgd:0.1:0").is_err());
+        assert!(StrategyKind::parse("gosgd:0.1:abc").is_err());
         assert!(StrategyKind::parse("persyn:abc").is_err());
         assert!(StrategyKind::parse("").is_err());
         assert!(StrategyKind::parse("easgd:0.1").is_err());
@@ -248,6 +285,8 @@ mod tests {
     fn build_strategy_names() {
         let mut cfg = RunConfig::default();
         assert!(cfg.build_strategy().name().starts_with("gosgd"));
+        cfg.strategy = StrategyKind::GoSgdSharded { p: 0.02, shards: 4 };
+        assert!(cfg.build_strategy().name().contains("shards=4"));
         cfg.strategy = StrategyKind::PerSyn { tau: 7 };
         assert!(cfg.build_strategy().name().contains("tau=7"));
         cfg.strategy = StrategyKind::Local;
@@ -258,6 +297,7 @@ mod tests {
     fn tags_are_filename_safe() {
         for s in [
             StrategyKind::GoSgd { p: 0.02 },
+            StrategyKind::GoSgdSharded { p: 0.02, shards: 8 },
             StrategyKind::PerSyn { tau: 50 },
             StrategyKind::Easgd { alpha: 0.1, tau: 50 },
             StrategyKind::Downpour { n_push: 1, n_fetch: 2 },

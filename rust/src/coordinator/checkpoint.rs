@@ -50,6 +50,15 @@ impl Checkpoint {
     /// first so no weight mass is lost.
     pub fn capture(state: &mut ClusterState) -> Result<Checkpoint> {
         let m = state.workers();
+        if state.shard_plan.is_some() {
+            // Format v1 stores one sum weight per worker; a sharded run
+            // carries one per (worker, shard).  Refuse rather than silently
+            // collapse the per-shard masses.
+            return Err(Error::config(
+                "checkpointing sharded gossip runs is not supported (format v1 \
+                 stores a single weight per worker)",
+            ));
+        }
         // Drain all mailboxes into their owners (exact: blend associativity).
         for w in 1..=m {
             for msg in state.queues[w].drain() {

@@ -14,7 +14,8 @@ pub type Result<T> = std::result::Result<T, Error>;
 pub enum Error {
     /// Filesystem / OS error (artifact loading, CSV output, ...).
     Io(std::io::Error),
-    /// PJRT / XLA error from the `xla` crate.
+    /// PJRT / XLA error from the `xla` crate (only with the `pjrt` feature).
+    #[cfg(feature = "pjrt")]
     Xla(xla::Error),
     /// Malformed artifact directory (missing file, bad manifest).
     Artifact(String),
@@ -34,6 +35,7 @@ impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Error::Io(e) => write!(f, "io error: {e}"),
+            #[cfg(feature = "pjrt")]
             Error::Xla(e) => write!(f, "xla error: {e}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Json(m) => write!(f, "json error: {m}"),
@@ -49,6 +51,7 @@ impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             Error::Io(e) => Some(e),
+            #[cfg(feature = "pjrt")]
             Error::Xla(e) => Some(e),
             _ => None,
         }
@@ -61,6 +64,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e)

@@ -7,7 +7,6 @@
 
 use crate::error::{Error, Result};
 use crate::framework::stacked::Stacked;
-use crate::tensor::FlatVec;
 
 /// One row as `(column, coefficient)` pairs.
 pub type Row = Vec<(usize, f64)>;
@@ -129,16 +128,37 @@ impl CommMatrix {
     /// Only non-identity rows are recomputed; untouched rows are moved, not
     /// copied.
     pub fn apply(&self, x: &Stacked) -> Result<Stacked> {
+        self.apply_block(x, 0, x.vec_len())
+    }
+
+    /// Apply as one block of a **block-diagonal** operator: the matrix acts
+    /// on coordinates `[offset, offset + len)` of every slot and is the
+    /// identity on all other coordinates.  This is how a *sharded* gossip
+    /// exchange looks in the section-3 formalism: the full operator is
+    /// `diag(I, …, K, …, I)` over the shard decomposition, and the
+    /// framework replay applies exactly the block that the engine's shard
+    /// event touched.  `apply` is the `offset = 0, len = vec_len` special
+    /// case, so both paths share float-for-float identical arithmetic.
+    pub fn apply_block(&self, x: &Stacked, offset: usize, len: usize) -> Result<Stacked> {
         if x.dim() != self.n {
             return Err(Error::shape(format!("state dim {} vs matrix {}", x.dim(), self.n)));
         }
+        let end = offset
+            .checked_add(len)
+            .ok_or_else(|| Error::shape("block range overflows usize"))?;
+        if end > x.vec_len() {
+            return Err(Error::shape(format!(
+                "block {offset}..{end} out of vector length {}",
+                x.vec_len()
+            )));
+        }
         let mut out = x.clone();
         for (r, entries) in &self.rows {
-            let mut acc = FlatVec::zeros(x.vec_len());
+            let mut acc = vec![0.0f32; len];
             for &(c, v) in entries {
-                acc.axpy(v as f32, x.get(c))?;
+                crate::tensor::ops::axpy(&mut acc, v as f32, &x.get(c).as_slice()[offset..end]);
             }
-            *out.get_mut(*r) = acc;
+            out.get_mut(*r).as_mut_slice()[offset..end].copy_from_slice(&acc);
         }
         Ok(out)
     }
@@ -181,6 +201,7 @@ impl CommMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::FlatVec;
     use crate::util::proptest::check;
     use crate::util::rng::Rng;
 
@@ -301,6 +322,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn apply_block_is_identity_outside_the_block() {
+        let mut rng = Rng::new(11);
+        let n = 3;
+        let k = random_stochastic(&mut rng, n);
+        let dim = 20;
+        let vecs: Vec<FlatVec> = (0..n).map(|_| FlatVec::randn(dim, 1.0, &mut rng)).collect();
+        let stacked = Stacked::from_vecs(vecs.clone()).unwrap();
+        let (offset, len) = (5, 7);
+        let out = k.apply_block(&stacked, offset, len).unwrap();
+        let full = k.apply(&stacked).unwrap();
+        for slot in 0..n {
+            for j in 0..dim {
+                let got = out.get(slot).as_slice()[j];
+                if (offset..offset + len).contains(&j) {
+                    // inside the block: exactly the full application
+                    assert_eq!(got, full.get(slot).as_slice()[j], "slot {slot} comp {j}");
+                } else {
+                    // outside: untouched
+                    assert_eq!(got, vecs[slot].as_slice()[j], "slot {slot} comp {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_block_rejects_out_of_range() {
+        let k = CommMatrix::identity(2);
+        let stacked = Stacked::zeros(1, 8);
+        assert!(k.apply_block(&stacked, 6, 4).is_err());
+        assert!(k.apply_block(&stacked, 0, 8).is_ok());
     }
 
     #[test]

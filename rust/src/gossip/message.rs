@@ -5,34 +5,64 @@
 //! via `Arc` so pushing one snapshot to several queues (or keeping it in a
 //! queue while the sender keeps training) never copies the vector — a real
 //! concern at 10⁶-10⁸ floats.
+//!
+//! With sharded exchange ([`crate::gossip::shard`]) a message may carry
+//! only one contiguous slice of the vector; the `shard` field records
+//! which slice, and the shipped weight is that shard's *shard-local* sum
+//! weight.  The classic whole-vector message is the `num_shards == 1`
+//! special case, so nothing downstream needs to branch on "sharded or
+//! not" except the blend itself.
 
 use std::sync::Arc;
 
+use crate::gossip::shard::Shard;
 use crate::gossip::weights::SumWeight;
 use crate::tensor::FlatVec;
 
 /// One gossip message from `sender` (paper Algorithm 4, `PushMessage`).
 #[derive(Clone, Debug)]
 pub struct Message {
-    /// Snapshot of the sender's parameters at send time.
+    /// Snapshot of the sender's parameters at send time — the whole vector
+    /// for a full message, or just `shard.len` elements for a shard.
     pub params: Arc<FlatVec>,
-    /// The sender's halved weight shipped with the snapshot.
+    /// The sender's halved (shard-local) weight shipped with the snapshot.
     pub weight: SumWeight,
     /// Worker id of the sender (diagnostics / staleness accounting).
     pub sender: usize,
     /// Sender's local step count at send time (staleness accounting).
     pub sent_at_step: u64,
+    /// Which slice of the parameter vector the payload covers.
+    pub shard: Shard,
 }
 
 impl Message {
+    /// Whole-vector message (the paper's protocol).
     pub fn new(params: Arc<FlatVec>, weight: SumWeight, sender: usize, sent_at_step: u64) -> Self {
-        Message { params, weight, sender, sent_at_step }
+        let shard = Shard::full(params.len());
+        Message { params, weight, sender, sent_at_step, shard }
     }
 
-    /// Payload size in bytes (throughput accounting; a message is the
-    /// parameter vector + one f64 weight + headers).
+    /// Shard message: `params` holds only the shard's `shard.len` elements.
+    pub fn for_shard(
+        params: Arc<FlatVec>,
+        weight: SumWeight,
+        sender: usize,
+        sent_at_step: u64,
+        shard: Shard,
+    ) -> Self {
+        assert_eq!(
+            params.len(),
+            shard.len,
+            "shard payload length {} vs descriptor len {}",
+            params.len(),
+            shard.len
+        );
+        Message { params, weight, sender, sent_at_step, shard }
+    }
+
+    /// Payload size in bytes (throughput accounting).
     pub fn wire_bytes(&self) -> usize {
-        self.params.len() * std::mem::size_of::<f32>() + 8 + 16
+        wire_bytes_for(self.params.len(), !self.shard.is_full())
     }
 
     /// Staleness in local steps relative to the receiver's step counter.
@@ -41,9 +71,20 @@ impl Message {
     }
 }
 
+/// The single wire-size model every accounting path shares: a message is
+/// the f32 payload + one f64 weight + 16 bytes of headers, plus an 8-byte
+/// shard descriptor when the exchange is sharded.  Used by
+/// [`Message::wire_bytes`] and by paths that count bytes without
+/// materializing a `Message` (DES simulator, immediate-delivery mode).
+pub fn wire_bytes_for(payload_len: usize, sharded: bool) -> usize {
+    let shard_header = if sharded { 8 } else { 0 };
+    payload_len * std::mem::size_of::<f32>() + 8 + 16 + shard_header
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gossip::shard::ShardPlan;
 
     fn msg(n: usize, sent: u64) -> Message {
         Message::new(
@@ -58,6 +99,42 @@ mod tests {
     fn wire_bytes_counts_payload() {
         let m = msg(1000, 0);
         assert_eq!(m.wire_bytes(), 4000 + 24);
+    }
+
+    #[test]
+    fn full_message_has_full_shard() {
+        let m = msg(64, 0);
+        assert!(m.shard.is_full());
+        assert_eq!(m.shard.len, 64);
+    }
+
+    #[test]
+    fn shard_message_is_smaller_on_the_wire() {
+        let plan = ShardPlan::new(1000, 4);
+        let shard = plan.shard(1);
+        let m = Message::for_shard(
+            Arc::new(FlatVec::zeros(shard.len)),
+            SumWeight::from_value(0.25),
+            0,
+            0,
+            shard,
+        );
+        assert_eq!(m.wire_bytes(), 250 * 4 + 24 + 8);
+        let full = msg(1000, 0);
+        assert!(m.wire_bytes() * 3 < full.wire_bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "shard payload length")]
+    fn shard_payload_length_must_match_descriptor() {
+        let plan = ShardPlan::new(100, 4);
+        Message::for_shard(
+            Arc::new(FlatVec::zeros(7)),
+            SumWeight::from_value(0.25),
+            0,
+            0,
+            plan.shard(0),
+        );
     }
 
     #[test]

@@ -12,13 +12,19 @@
 //! * [`peer`] — peer-selection policies (the paper draws uniformly from
 //!   `{1..M} \ {s}`; ring and small-world variants are provided for the
 //!   topology ablation).
+//! * [`shard`] — the chunked-exchange extension: cut the vector into
+//!   contiguous shards, each with its own sum weight, and gossip one shard
+//!   per event.  Exact (the blend is per-coordinate associative), and the
+//!   per-event bandwidth drops by `~1/num_shards`.
 
 pub mod message;
 pub mod peer;
 pub mod queue;
+pub mod shard;
 pub mod weights;
 
-pub use message::Message;
+pub use message::{wire_bytes_for, Message};
 pub use peer::PeerSelector;
 pub use queue::MessageQueue;
+pub use shard::{Shard, ShardPlan};
 pub use weights::SumWeight;

@@ -15,8 +15,15 @@
 //! to a gradient step.  An optional bound sheds the *oldest* message on
 //! overflow — under sum-weight semantics dropping a message would destroy
 //! weight mass, so instead of dropping, `push` coalesces: overflow folds
-//! the oldest two messages into one blended message, preserving total
-//! weight exactly.
+//! the oldest two *compatible* messages into one blended message,
+//! preserving total weight exactly.  With sharded exchange, "compatible"
+//! means covering the same coordinate range (same
+//! [`Shard::key`](crate::gossip::Shard::key)): the shard-wise blend is
+//! associative, so folding same-shard messages leaves the receiver's final
+//! state unchanged, while folding across shards would mix unrelated
+//! coordinates.  If no two queued messages share a shard the queue is
+//! allowed to exceed its bound (tracked in the `over_capacity` stat)
+//! rather than lose mass.
 
 use std::collections::VecDeque;
 use std::sync::Mutex;
@@ -31,6 +38,9 @@ pub struct QueueStats {
     pub pushed: u64,
     pub drained: u64,
     pub coalesced: u64,
+    /// Pushes that left a bounded queue over its bound because no two
+    /// queued messages covered the same shard (nothing could be folded).
+    pub over_capacity: u64,
     pub max_depth: usize,
 }
 
@@ -66,14 +76,22 @@ impl MessageQueue {
         g.stats.pushed += 1;
         if let Some(cap) = self.capacity {
             if g.deque.len() > cap {
-                // Fold the two oldest messages into one: weights add, the
-                // parameter payload blends by the sum-weight rule, so the
+                // Fold the two oldest same-shard messages into one: weights
+                // add, the payload blends by the sum-weight rule, so the
                 // receiver observes exactly the same final state as if it
                 // had processed both (associativity of the blend).
-                let a = g.deque.pop_front().expect("len > cap >= 2");
-                let b = g.deque.pop_front().expect("len > cap >= 2");
-                g.deque.push_front(coalesce(a, b));
-                g.stats.coalesced += 1;
+                if let Some((i, j)) = oldest_compatible_pair(&g.deque) {
+                    let b = g.deque.remove(j).expect("index in range");
+                    let a = g.deque.remove(i).expect("index in range");
+                    g.deque.insert(i, coalesce(a, b));
+                    g.stats.coalesced += 1;
+                } else {
+                    // No two messages share a shard: folding would corrupt
+                    // coordinates and dropping would destroy weight mass.
+                    // Stretch the bound instead (worst case num_shards
+                    // distinct shards queued).
+                    g.stats.over_capacity += 1;
+                }
             }
         }
         let depth = g.deque.len();
@@ -104,9 +122,25 @@ impl MessageQueue {
     }
 }
 
+/// Oldest pair of indices `(i, j)`, `i < j`, whose messages cover the same
+/// coordinate range and may therefore be folded.  O(n²) over the queue
+/// depth, which the capacity bound keeps tiny.
+fn oldest_compatible_pair(deque: &VecDeque<Message>) -> Option<(usize, usize)> {
+    for i in 0..deque.len() {
+        for j in (i + 1)..deque.len() {
+            if deque[i].shard.key() == deque[j].shard.key() {
+                return Some((i, j));
+            }
+        }
+    }
+    None
+}
+
 /// Fold message `a` into message `b` preserving total weight:
 /// the combined payload is the sum-weight blend of the two payloads.
+/// Both messages must cover the same shard.
 fn coalesce(a: Message, b: Message) -> Message {
+    debug_assert_eq!(a.shard.key(), b.shard.key(), "coalescing across shards");
     let w_a = a.weight.value();
     let w_b = b.weight.value();
     let mut blended: FlatVec = (*a.params).clone();
@@ -114,17 +148,19 @@ fn coalesce(a: Message, b: Message) -> Message {
     blended
         .mix_from(&b.params, w_a, w_b)
         .expect("coalesce: length mismatch inside one queue");
-    Message::new(
+    Message::for_shard(
         std::sync::Arc::new(blended),
         SumWeight::from_value(w_a + w_b),
         b.sender,
         b.sent_at_step,
+        b.shard,
     )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::check;
     use std::sync::Arc;
 
     fn msg(val: f32, w: f64, sender: usize) -> Message {
@@ -213,6 +249,99 @@ mod tests {
                 folded.as_slice()
             );
         }
+    }
+
+    #[test]
+    fn sharded_overflow_only_folds_same_shard() {
+        use crate::gossip::shard::ShardPlan;
+        let plan = ShardPlan::new(8, 2);
+        let mk = |k: usize, val: f32, w: f64| {
+            let shard = plan.shard(k);
+            Message::for_shard(
+                Arc::new(FlatVec::from_vec(vec![val; shard.len])),
+                SumWeight::from_value(w),
+                0,
+                0,
+                shard,
+            )
+        };
+        let q = MessageQueue::bounded(2);
+        // Two distinct shards: nothing can fold, the bound stretches.
+        q.push(mk(0, 1.0, 0.25));
+        q.push(mk(1, 2.0, 0.25));
+        q.push(mk(0, 3.0, 0.25));
+        // Overflow fired once and folded the two shard-0 messages.
+        let out = q.drain();
+        assert_eq!(out.len(), 2);
+        assert_eq!(q.stats().coalesced, 1);
+        let s0: Vec<&Message> = out.iter().filter(|m| m.shard.index == 0).collect();
+        assert_eq!(s0.len(), 1);
+        assert!((s0[0].weight.value() - 0.5).abs() < 1e-12);
+        assert!((s0[0].params.as_slice()[0] - 2.0).abs() < 1e-6, "blend of 1 and 3");
+        // Now three mutually incompatible shards: bound must stretch.
+        let plan3 = ShardPlan::new(9, 3);
+        let q = MessageQueue::bounded(2);
+        for k in 0..3 {
+            let shard = plan3.shard(k);
+            q.push(Message::for_shard(
+                Arc::new(FlatVec::zeros(shard.len)),
+                SumWeight::from_value(0.1),
+                0,
+                0,
+                shard,
+            ));
+        }
+        assert_eq!(q.len(), 3, "no compatible pair: queue stretches");
+        assert_eq!(q.stats().over_capacity, 1);
+    }
+
+    #[test]
+    fn property_bounded_pushes_conserve_weight_per_shard_and_globally() {
+        // Satellite invariant: ANY sequence of pushes into a bounded
+        // (coalescing) queue conserves the total sum weight exactly — per
+        // shard and globally — no matter how often overflow folds.
+        use crate::gossip::shard::ShardPlan;
+        use std::collections::HashMap;
+        check("queue coalescing conserves weight", 50, |rng| {
+            let dim = 16 + rng.below(200) as usize;
+            let num_shards = 1 + rng.below(6) as usize;
+            let plan = ShardPlan::new(dim, num_shards);
+            let cap = 2 + rng.below(4) as usize;
+            let q = MessageQueue::bounded(cap);
+            let n_pushes = 1 + rng.below(60) as usize;
+            let mut pushed: HashMap<(usize, usize), f64> = HashMap::new();
+            for i in 0..n_pushes {
+                let k = rng.below(num_shards as u64) as usize;
+                let shard = plan.shard(k);
+                let w = rng.f64() + 1e-6;
+                *pushed.entry(shard.key()).or_insert(0.0) += w;
+                q.push(Message::for_shard(
+                    Arc::new(FlatVec::from_vec(vec![i as f32; shard.len])),
+                    SumWeight::from_value(w),
+                    i % 4,
+                    i as u64,
+                    shard,
+                ));
+            }
+            let mut drained: HashMap<(usize, usize), f64> = HashMap::new();
+            let mut total_out = 0.0;
+            for m in q.drain() {
+                *drained.entry(m.shard.key()).or_insert(0.0) += m.weight.value();
+                total_out += m.weight.value();
+            }
+            let total_in: f64 = pushed.values().sum();
+            assert!(
+                (total_in - total_out).abs() < 1e-9,
+                "global mass {total_in} -> {total_out}"
+            );
+            for (key, w_in) in &pushed {
+                let w_out = drained.get(key).copied().unwrap_or(0.0);
+                assert!(
+                    (w_in - w_out).abs() < 1e-9,
+                    "shard {key:?} mass {w_in} -> {w_out}"
+                );
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! Sharded gossip: partition the parameter vector across gossip events.
+//!
+//! The paper's protocol ships the *entire* `x_s` per exchange — fine for
+//! the CIFAR CNN (~4 MB), fatal at 10⁸+ parameters.  Because the
+//! sum-weight blend is associative *per coordinate*, the vector can be cut
+//! into contiguous shards, each carrying its **own** sum weight, and each
+//! gossip event can ship a single shard: per-shard the protocol is exactly
+//! the paper's (halve on send, add on receive, convex blend), so per-shard
+//! weight conservation and the consensus argument hold unchanged — chunked
+//! blending is exact, not approximate (cf. GossipGraD's gradient
+//! partitioning, Daily et al. 2018).
+//!
+//! [`Shard`] describes one slice on the wire; [`ShardPlan`] is the static,
+//! deterministic partition every worker derives from `(dim, num_shards)` —
+//! no negotiation, no metadata exchange.
+
+/// One contiguous slice of the parameter vector, as carried by a message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Shard index in `0..num_shards`.
+    pub index: usize,
+    /// Total shards in the sender's plan (1 = unsharded full vector).
+    pub num_shards: usize,
+    /// First coordinate covered.
+    pub offset: usize,
+    /// Number of coordinates covered.
+    pub len: usize,
+}
+
+impl Shard {
+    /// The whole-vector "shard" of the classic protocol.
+    pub fn full(dim: usize) -> Self {
+        Shard { index: 0, num_shards: 1, offset: 0, len: dim }
+    }
+
+    /// Whether this message covers the entire parameter vector.
+    pub fn is_full(&self) -> bool {
+        self.num_shards == 1
+    }
+
+    /// Coalescing key: two messages may be folded together only when they
+    /// cover the same coordinate range.
+    pub fn key(&self) -> (usize, usize) {
+        (self.offset, self.len)
+    }
+}
+
+/// Deterministic even partition of `dim` coordinates into `num_shards`
+/// contiguous ranges (the first `dim % num_shards` ranges get one extra
+/// coordinate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    dim: usize,
+    num_shards: usize,
+}
+
+impl ShardPlan {
+    pub fn new(dim: usize, num_shards: usize) -> Self {
+        assert!(num_shards >= 1, "need at least one shard");
+        assert!(
+            dim >= num_shards,
+            "cannot cut {dim} coordinates into {num_shards} shards"
+        );
+        ShardPlan { dim, num_shards }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    /// Descriptor of shard `k`.
+    pub fn shard(&self, k: usize) -> Shard {
+        assert!(k < self.num_shards, "shard {k} out of {}", self.num_shards);
+        let base = self.dim / self.num_shards;
+        let rem = self.dim % self.num_shards;
+        let (offset, len) = if k < rem {
+            (k * (base + 1), base + 1)
+        } else {
+            (rem * (base + 1) + (k - rem) * base, base)
+        };
+        Shard { index: k, num_shards: self.num_shards, offset, len }
+    }
+
+    /// All shard descriptors in index order.
+    pub fn shards(&self) -> Vec<Shard> {
+        (0..self.num_shards).map(|k| self.shard(k)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn full_shard_covers_everything() {
+        let s = Shard::full(100);
+        assert!(s.is_full());
+        assert_eq!(s.offset, 0);
+        assert_eq!(s.len, 100);
+        assert_eq!(s.key(), (0, 100));
+    }
+
+    #[test]
+    fn plan_of_one_shard_is_full_vector() {
+        let p = ShardPlan::new(17, 1);
+        assert_eq!(p.shard(0), Shard::full(17));
+    }
+
+    #[test]
+    fn shards_tile_the_vector_exactly() {
+        check("shards tile [0, dim)", 50, |rng| {
+            let dim = 1 + rng.below(2000) as usize;
+            let s = 1 + rng.below(dim.min(16) as u64) as usize;
+            let plan = ShardPlan::new(dim, s);
+            let mut cursor = 0;
+            for (k, sh) in plan.shards().iter().enumerate() {
+                assert_eq!(sh.index, k);
+                assert_eq!(sh.num_shards, s);
+                assert_eq!(sh.offset, cursor, "gap or overlap before shard {k}");
+                assert!(sh.len >= 1);
+                cursor += sh.len;
+            }
+            assert_eq!(cursor, dim, "shards must cover the whole vector");
+        });
+    }
+
+    #[test]
+    fn shards_are_balanced() {
+        let plan = ShardPlan::new(10, 3);
+        let lens: Vec<usize> = plan.shards().iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+        let plan = ShardPlan::new(12, 4);
+        let lens: Vec<usize> = plan.shards().iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot cut")]
+    fn more_shards_than_coordinates_rejected() {
+        ShardPlan::new(3, 4);
+    }
+}

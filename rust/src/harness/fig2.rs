@@ -41,6 +41,10 @@ pub struct Fig2Config {
     pub weight_decay: f32,
     /// EMA smoothing for the loss trace.
     pub ema_beta: f64,
+    /// When > 1, adds a sharded-GoSGD series (one shard per exchange) to
+    /// the comparison — the per-event latency and bytes drop by
+    /// `~1/shards` while the blend stays exact per shard.
+    pub shards: usize,
 }
 
 impl Default for Fig2Config {
@@ -55,6 +59,7 @@ impl Default for Fig2Config {
             eta: 1.0,
             weight_decay: 0.0,
             ema_beta: 0.95,
+            shards: 1,
         }
     }
 }
@@ -67,6 +72,8 @@ pub struct WallClockSeries {
     pub points: Vec<(f64, f64)>,
     pub steps: u64,
     pub messages: u64,
+    /// Wire bytes those messages carried (sharding shrinks this).
+    pub bytes: u64,
     pub blocked_secs: f64,
 }
 
@@ -101,7 +108,7 @@ fn run_strategy(cfg: &Fig2Config, strategy: DesStrategy, label: &str) -> Result<
             cfg.eta,
             cfg.weight_decay,
             cfg.seed,
-        );
+        )?;
         eng.run(grad, cfg.horizon_secs)?;
         let rep = eng.report();
         Ok(WallClockSeries {
@@ -109,6 +116,7 @@ fn run_strategy(cfg: &Fig2Config, strategy: DesStrategy, label: &str) -> Result<
             points: ema(&rep.trace, cfg.ema_beta),
             steps: rep.steps,
             messages: rep.messages,
+            bytes: rep.bytes,
             blocked_secs: rep.blocked_secs,
         })
     };
@@ -134,9 +142,10 @@ fn run_strategy(cfg: &Fig2Config, strategy: DesStrategy, label: &str) -> Result<
 }
 
 /// Run GoSGD vs EASGD (and the PerSyn reference) under simulated time.
+/// With `cfg.shards > 1` a sharded-GoSGD series is appended.
 pub fn run(cfg: &Fig2Config, out: Option<&Path>) -> Result<Vec<WallClockSeries>> {
     let tau = (1.0 / cfg.p).round().max(1.0) as u64;
-    let series = vec![
+    let mut series = vec![
         run_strategy(cfg, DesStrategy::GoSgd { p: cfg.p }, &format!("gosgd_p{}", cfg.p))?,
         run_strategy(
             cfg,
@@ -145,6 +154,13 @@ pub fn run(cfg: &Fig2Config, out: Option<&Path>) -> Result<Vec<WallClockSeries>>
         )?,
         run_strategy(cfg, DesStrategy::PerSyn { tau }, &format!("persyn_tau{tau}"))?,
     ];
+    if cfg.shards > 1 {
+        series.push(run_strategy(
+            cfg,
+            DesStrategy::ShardedGoSgd { p: cfg.p, shards: cfg.shards },
+            &format!("gosgd_p{}_s{}", cfg.p, cfg.shards),
+        )?);
+    }
     if let Some(path) = out {
         let mut csv = CsvWriter::create(path, &["series", "sim_seconds", "loss"])?;
         for s in &series {
@@ -160,16 +176,21 @@ pub fn run(cfg: &Fig2Config, out: Option<&Path>) -> Result<Vec<WallClockSeries>>
 /// Console table with the headline comparison.
 pub fn format_table(series: &[WallClockSeries], threshold: f64) -> String {
     let mut out = String::from(
-        "series              steps   messages  blocked_s   secs_to_threshold\n",
+        "series              steps   messages  kB/msg  blocked_s   secs_to_threshold\n",
     );
     for s in series {
         let secs = s
             .secs_to(threshold)
             .map(|t| format!("{t:.1}"))
             .unwrap_or_else(|| "-".into());
+        let kb_per_msg = if s.messages > 0 {
+            s.bytes as f64 / s.messages as f64 / 1024.0
+        } else {
+            0.0
+        };
         out.push_str(&format!(
-            "{:<18} {:>6}  {:>9}  {:>9.1}  {:>14}\n",
-            s.label, s.steps, s.messages, s.blocked_secs, secs
+            "{:<18} {:>6}  {:>9}  {:>6.2}  {:>9.1}  {:>14}\n",
+            s.label, s.steps, s.messages, kb_per_msg, s.blocked_secs, secs
         ));
     }
     out
@@ -201,6 +222,27 @@ mod tests {
         if let (Some(g), Some(e)) = (g, e) {
             assert!(g <= e * 1.1, "gossip {g}s vs easgd {e}s");
         }
+    }
+
+    #[test]
+    fn sharded_series_appended_with_smaller_messages() {
+        let cfg = Fig2Config {
+            backend: Fig2Backend::Quadratic { dim: 512, sigma: 0.2 },
+            horizon_secs: 30.0,
+            p: 0.1,
+            seed: 5,
+            shards: 4,
+            ..Default::default()
+        };
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 4);
+        let full = &series[0];
+        let sharded = &series[3];
+        assert!(sharded.label.contains("s4"));
+        assert_eq!(sharded.blocked_secs, 0.0);
+        let ratio = (sharded.bytes as f64 / sharded.messages as f64)
+            / (full.bytes as f64 / full.messages as f64);
+        assert!(ratio < 0.35, "bytes/msg ratio {ratio}");
     }
 
     #[test]

@@ -25,7 +25,9 @@
 //!   trait; GoSGD itself is the contribution (Algorithm 3 + 4).
 //! * [`framework`] — section 3's communication-matrix formalism; every
 //!   strategy can be *compiled* to its `K^(t)` sequence and cross-checked.
-//! * [`gossip`] — sum-weight protocol substrate: weights, messages, queues.
+//! * [`gossip`] — sum-weight protocol substrate: weights, messages, queues,
+//!   and the sharded-exchange extension (`gossip::shard`) that ships one
+//!   chunk of the vector per gossip event for large models.
 //! * [`worker`] / [`coordinator`] — the threaded runtime.
 //! * [`runtime`] — PJRT executor for the AOT artifacts.
 //! * [`sim`] — discrete-event simulator used for the wall-clock experiment

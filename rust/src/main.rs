@@ -60,7 +60,7 @@ fn train_args() -> Args {
         .opt("model", "tiny", "model variant: tiny | cnn | mlp_wide")
         .opt("workers", "8", "number of workers M")
         .opt("steps", "200", "engine steps (rounds or ticks)")
-        .opt("strategy", "gosgd:0.02", "gosgd:P | persyn:TAU | easgd:A:TAU | downpour:NP:NF | allreduce | local")
+        .opt("strategy", "gosgd:0.02", "gosgd:P[:SHARDS] | persyn:TAU | easgd:A:TAU | downpour:NP:NF | allreduce | local")
         .opt("lr", "0.1", "learning rate (or step:BASE:GAMMA:EVERY)")
         .opt("weight-decay", "0.0001", "weight decay")
         .opt("seed", "0", "RNG seed")
@@ -147,6 +147,7 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
         .opt("iterations", "150", "worker iterations (fig1/fig3)")
         .opt("ps", "0.01,0.4", "exchange probabilities (fig1/fig3)")
         .opt("p", "0.02", "exchange probability (fig2)")
+        .opt("shards", "1", "gossip shards per exchange (fig2; > 1 adds a sharded series)")
         .opt("horizon", "120", "simulated seconds (fig2)")
         .opt("backend", "quadratic", "fig2 gradients: quadratic | pjrt")
         .opt("seed", "0", "RNG seed")
@@ -179,6 +180,7 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
                 backend,
                 workers: a.get_usize("workers")?,
                 p: a.get_f64("p")?,
+                shards: a.get_usize("shards")?,
                 horizon_secs: a.get_f64("horizon")?,
                 seed: a.get_u64("seed")?,
                 ..Default::default()

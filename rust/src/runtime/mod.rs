@@ -1,11 +1,26 @@
 //! PJRT runtime: load and execute the AOT artifacts.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
-//! from_text_file` → `compile` → `execute`) behind typed entry points for
-//! the four exported programs.  Python never runs here — the HLO text was
-//! produced once by `make artifacts`.
+//! With the `pjrt` cargo feature, wraps the `xla` crate
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`) behind typed entry points for the four exported programs.
+//! Python never runs here — the HLO text was produced once by
+//! `make artifacts`.
+//!
+//! Without the feature (the default, since the `xla` crate is not part of
+//! the offline dependency set), an API-compatible stub is compiled whose
+//! `ModelRuntime::load` returns a descriptive error.  Everything that does
+//! not need the real Layer-2 model — the synthetic gradient sources, the
+//! discrete-event simulator, the threaded runtime, all strategy logic —
+//! works identically either way.
 
+#[cfg(feature = "pjrt")]
 pub mod executor;
+#[cfg(feature = "pjrt")]
 pub mod literal;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use executor::{ModelRuntime, PjrtSource};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{ModelRuntime, PjrtSource};

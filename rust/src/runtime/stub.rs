@@ -1,0 +1,123 @@
+//! API-compatible stand-in for the PJRT executor when the `pjrt` feature
+//! is disabled (the `xla` crate is absent from the offline dependency
+//! set).
+//!
+//! [`ModelRuntime::load`] always fails with an explanatory error, so no
+//! instance of either type can ever be constructed — the remaining
+//! methods exist purely so that callers (coordinator, figure harnesses,
+//! benches) compile unchanged.  Artifact-gated tests and benches already
+//! skip when `artifacts/<model>/manifest.json` is missing, which is
+//! always the case in a stub build.
+
+use std::path::Path;
+
+use crate::data::BatchSampler;
+use crate::error::{Error, Result};
+use crate::model::Manifest;
+use crate::strategies::grad::GradSource;
+use crate::tensor::FlatVec;
+
+fn unavailable() -> Error {
+    Error::artifact(
+        "PJRT runtime unavailable: this binary was built without the `pjrt` cargo feature \
+         (the `xla` crate is not in the offline dependency set); use the synthetic backends \
+         (quadratic/noise gradient sources, DES simulator, threaded runtime) or rebuild with \
+         `--features pjrt` after vendoring the xla crate",
+    )
+}
+
+/// Stub for the compiled model (see [`module docs`](self)).
+pub struct ModelRuntime {
+    manifest: Manifest,
+}
+
+impl ModelRuntime {
+    /// Always fails in a stub build; see the crate's README for how to
+    /// enable the real PJRT path.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = dir.as_ref();
+        Err(unavailable())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.manifest.param_count
+    }
+
+    /// One forward/backward pass: returns `(loss, flat_grads)`.
+    pub fn train_step(
+        &self,
+        _params: &FlatVec,
+        _images: &[f32],
+        _labels: &[i32],
+    ) -> Result<(f64, FlatVec)> {
+        Err(unavailable())
+    }
+
+    /// Validation pass: returns `(mean_loss, correct_count)`.
+    pub fn eval_step(
+        &self,
+        _params: &FlatVec,
+        _images: &[f32],
+        _labels: &[i32],
+    ) -> Result<(f64, f64)> {
+        Err(unavailable())
+    }
+
+    /// Fused optimizer artifact: `p − lr·(g + wd·p)`.
+    pub fn sgd_update(
+        &self,
+        _params: &FlatVec,
+        _grads: &FlatVec,
+        _lr: f32,
+        _wd: f32,
+    ) -> Result<FlatVec> {
+        Err(unavailable())
+    }
+
+    /// The Pallas gossip blend artifact (paper Algorithm 4 line 9).
+    pub fn mix(&self, _x_r: &FlatVec, _x_s: &FlatVec, _w_r: f32, _w_s: f32) -> Result<FlatVec> {
+        Err(unavailable())
+    }
+
+    /// Evaluate over `n_batches` validation batches: `(mean_loss, accuracy)`.
+    pub fn evaluate(
+        &self,
+        _params: &FlatVec,
+        _sampler: &BatchSampler,
+        _n_batches: u64,
+    ) -> Result<(f64, f64)> {
+        Err(unavailable())
+    }
+}
+
+/// Stub for the PJRT-backed [`GradSource`]; never constructible because
+/// [`ModelRuntime::load`] always fails.
+pub struct PjrtSource<'rt> {
+    runtime: &'rt ModelRuntime,
+    sampler: BatchSampler,
+}
+
+impl<'rt> PjrtSource<'rt> {
+    pub fn new(runtime: &'rt ModelRuntime, sampler: BatchSampler, workers: usize) -> Self {
+        let _ = workers;
+        PjrtSource { runtime, sampler }
+    }
+
+    pub fn sampler(&self) -> &BatchSampler {
+        &self.sampler
+    }
+}
+
+impl<'rt> GradSource for PjrtSource<'rt> {
+    fn grad(&mut self, _m: usize, _params: &FlatVec, _step: u64, _out: &mut FlatVec) -> Result<f64> {
+        Err(unavailable())
+    }
+
+    fn dim(&self) -> usize {
+        self.runtime.param_count()
+    }
+}

@@ -8,7 +8,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use crate::error::Result;
-use crate::gossip::SumWeight;
+use crate::gossip::{wire_bytes_for, Shard, ShardPlan, SumWeight};
 use crate::strategies::grad::GradSource;
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -68,6 +68,13 @@ impl TimeModel {
 #[derive(Clone, Debug)]
 pub enum DesStrategy {
     GoSgd { p: f64 },
+    /// Sharded GoSGD: each exchange ships one round-robin shard of the
+    /// vector with its shard-local sum weight (see
+    /// [`crate::gossip::shard`]).  Message latency scales with the payload
+    /// fraction (the [`TimeModel::latency`] is bandwidth-dominated at
+    /// paper-scale messages), so sharding directly cuts per-event latency
+    /// and bytes.
+    ShardedGoSgd { p: f64, shards: usize },
     /// Ablation (paper section 4, third paragraph): *symmetric* gossip —
     /// sender and receiver rendezvous and swap, so the sender blocks until
     /// the receiver is free.  The paper rejects this design because "local
@@ -83,6 +90,9 @@ impl DesStrategy {
     pub fn name(&self) -> String {
         match self {
             DesStrategy::GoSgd { p } => format!("gosgd(p={p})"),
+            DesStrategy::ShardedGoSgd { p, shards } => {
+                format!("gosgd(p={p},shards={shards})")
+            }
             DesStrategy::SymmetricGossip { p } => format!("symgossip(p={p})"),
             DesStrategy::Easgd { alpha, tau } => format!("easgd(alpha={alpha:.3},tau={tau})"),
             DesStrategy::PerSyn { tau } => format!("persyn(tau={tau})"),
@@ -96,8 +106,9 @@ impl DesStrategy {
 enum EventKind {
     /// Worker finished a compute step (or resumed from a block).
     Wake(usize),
-    /// A gossip message lands in worker `to`'s mailbox.
-    Deliver { to: usize, params: FlatVec, weight: f64 },
+    /// A gossip message lands in worker `to`'s mailbox; `shard` records
+    /// which slice of the vector `params` covers.
+    Deliver { to: usize, params: FlatVec, weight: f64, shard: Shard },
 }
 
 struct Event {
@@ -133,6 +144,9 @@ impl Ord for Event {
 pub struct DesReport {
     pub trace: Vec<(f64, f64)>,
     pub messages: u64,
+    /// Wire bytes carried by gossip messages (sharded messages are
+    /// proportionally smaller; barrier strategies count full models).
+    pub bytes: u64,
     /// Total seconds workers spent blocked on synchronization.
     pub blocked_secs: f64,
     /// Total local gradient steps executed.
@@ -143,8 +157,9 @@ pub struct DesReport {
 
 struct WorkerState {
     x: FlatVec,
-    weight: SumWeight,
-    mailbox: Vec<(FlatVec, f64)>,
+    /// One sum weight per shard (a single entry when unsharded).
+    weights: Vec<SumWeight>,
+    mailbox: Vec<(Shard, FlatVec, f64)>,
     local_step: u64,
     /// PerSyn: parked at the barrier.
     at_barrier: bool,
@@ -163,6 +178,10 @@ pub struct DesEngine {
     /// (earliest rendezvous point) and handshake delays owed at next wake.
     busy_until: Vec<f64>,
     pending_delay: Vec<f64>,
+    /// Sharded gossip: the vector partition and per-worker round-robin
+    /// cursors (plan has one shard when unsharded).
+    plan: ShardPlan,
+    next_shard: Vec<usize>,
     events: BinaryHeap<Event>,
     seq: u64,
     eta: f32,
@@ -173,6 +192,10 @@ pub struct DesEngine {
 }
 
 impl DesEngine {
+    /// Build the engine.  Fails with a config error (rather than
+    /// panicking) when a sharded strategy's shard count is 0 or exceeds
+    /// the model dimension — the two places where user input meets the
+    /// dimension for the first time.
     pub fn new(
         strategy: DesStrategy,
         time_model: TimeModel,
@@ -181,12 +204,28 @@ impl DesEngine {
         eta: f32,
         weight_decay: f32,
         seed: u64,
-    ) -> Self {
+    ) -> Result<Self> {
         assert!(workers >= 2);
+        let shards = match &strategy {
+            DesStrategy::ShardedGoSgd { shards, .. } => {
+                if *shards == 0 {
+                    return Err(crate::error::Error::config("shards must be >= 1"));
+                }
+                if *shards > init.len() {
+                    return Err(crate::error::Error::config(format!(
+                        "cannot cut {} parameters into {shards} shards",
+                        init.len()
+                    )));
+                }
+                *shards
+            }
+            _ => 1,
+        };
+        let plan = ShardPlan::new(init.len(), shards);
         let ws = (0..workers)
             .map(|_| WorkerState {
                 x: init.clone(),
-                weight: SumWeight::init(workers),
+                weights: (0..shards).map(|_| SumWeight::init(workers)).collect(),
                 mailbox: Vec::new(),
                 local_step: 0,
                 at_barrier: false,
@@ -200,6 +239,8 @@ impl DesEngine {
             barrier_arrivals: Vec::new(),
             busy_until: vec![0.0; workers],
             pending_delay: vec![0.0; workers],
+            plan,
+            next_shard: (0..workers).map(|w| w % shards).collect(),
             events: BinaryHeap::new(),
             seq: 0,
             eta,
@@ -213,7 +254,7 @@ impl DesEngine {
             let dt = eng.time_model.draw_compute(&mut eng.rng);
             eng.schedule(dt, EventKind::Wake(w));
         }
-        eng
+        Ok(eng)
     }
 
     fn schedule(&mut self, at: f64, kind: EventKind) {
@@ -230,8 +271,8 @@ impl DesEngine {
             }
             self.report.end_time = ev.time;
             match ev.kind {
-                EventKind::Deliver { to, params, weight } => {
-                    self.workers[to].mailbox.push((params, weight));
+                EventKind::Deliver { to, params, weight, shard } => {
+                    self.workers[to].mailbox.push((shard, params, weight));
                 }
                 EventKind::Wake(w) => self.wake(w, ev.time, grad)?,
             }
@@ -249,11 +290,17 @@ impl DesEngine {
             self.schedule(now + d, EventKind::Wake(w));
             return Ok(());
         }
-        // 1. Process pending messages (GoSGD ProcessMessages).
+        // 1. Process pending messages (GoSGD ProcessMessages): each blends
+        //    its shard range against that shard's sum weight.
         let pending = std::mem::take(&mut self.workers[w].mailbox);
-        for (params, weight) in pending {
-            let t = self.workers[w].weight.absorb(SumWeight::from_value(weight));
-            self.workers[w].x.mix_from(&params, 1.0 - t, t)?;
+        for (shard, params, weight) in pending {
+            let t =
+                self.workers[w].weights[shard.index].absorb(SumWeight::from_value(weight));
+            if shard.is_full() {
+                self.workers[w].x.mix_from(&params, 1.0 - t, t)?;
+            } else {
+                self.workers[w].x.mix_range_from(&params, shard.offset, 1.0 - t, t)?;
+            }
         }
 
         // 2. Local gradient step.
@@ -276,16 +323,48 @@ impl DesEngine {
                 if self.rng.bernoulli(p) {
                     let m = self.workers.len();
                     let r = self.rng.peer(m, w);
-                    let shipped = self.workers[w].weight.halve_for_send();
+                    let shipped = self.workers[w].weights[0].halve_for_send();
                     let latency = self.time_model.draw_latency(&mut self.rng);
                     let params = self.workers[w].x.clone();
+                    let shard = Shard::full(params.len());
                     self.report.messages += 1;
+                    self.report.bytes += wire_bytes_for(params.len(), false) as u64;
                     self.schedule(
                         now + latency,
-                        EventKind::Deliver { to: r, params, weight: shipped.value() },
+                        EventKind::Deliver { to: r, params, weight: shipped.value(), shard },
                     );
                 }
                 // Fire-and-forget: compute continues immediately.
+                let dt = self.time_model.draw_compute(&mut self.rng);
+                self.busy_until[w] = now + dt;
+                self.schedule(now + dt, EventKind::Wake(w));
+            }
+            DesStrategy::ShardedGoSgd { p, shards } => {
+                if self.rng.bernoulli(p) {
+                    let m = self.workers.len();
+                    let r = self.rng.peer(m, w);
+                    let shard = self.plan.shard(self.next_shard[w]);
+                    self.next_shard[w] = (self.next_shard[w] + 1) % shards;
+                    let shipped =
+                        self.workers[w].weights[shard.index].halve_for_send();
+                    // Bandwidth-dominated latency at paper-scale messages:
+                    // shipping 1/shards of the vector takes ~1/shards of
+                    // the one-way latency.
+                    let dim = self.workers[w].x.len();
+                    let frac = shard.len as f64 / dim as f64;
+                    let latency = self.time_model.draw_latency(&mut self.rng) * frac;
+                    let params = FlatVec::from_vec(
+                        self.workers[w].x.as_slice()[shard.offset..shard.offset + shard.len]
+                            .to_vec(),
+                    );
+                    self.report.messages += 1;
+                    self.report.bytes += wire_bytes_for(shard.len, true) as u64;
+                    self.schedule(
+                        now + latency,
+                        EventKind::Deliver { to: r, params, weight: shipped.value(), shard },
+                    );
+                }
+                // Fire-and-forget, exactly like unsharded GoSGD.
                 let dt = self.time_model.draw_compute(&mut self.rng);
                 self.busy_until[w] = now + dt;
                 self.schedule(now + dt, EventKind::Wake(w));
@@ -305,6 +384,7 @@ impl DesEngine {
                     self.workers[w].x.mix_from(&xr, 0.5, 0.5)?;
                     self.workers[r].x = self.workers[w].x.clone();
                     self.report.messages += 2;
+                    self.report.bytes += 2 * wire_bytes_for(xr.len(), false) as u64;
                     // Sender blocks for the wait + handshake; receiver owes
                     // the handshake at its next wake.
                     self.report.blocked_secs += wait + lat;
@@ -353,6 +433,7 @@ impl DesEngine {
                             self.workers[i].at_barrier = false;
                         }
                         self.report.messages += 2 * m as u64;
+                        self.report.bytes += 2 * m as u64 * wire_bytes_for(old_master.len(), false) as u64;
                         for arrival in self.barrier_arrivals.clone() {
                             self.report.blocked_secs += resume - arrival;
                         }
@@ -388,6 +469,7 @@ impl DesEngine {
                         let bcast = self.time_model.draw_latency(&mut self.rng);
                         let resume = last + gather + service + bcast;
                         self.report.messages += 2 * m as u64;
+                        self.report.bytes += 2 * m as u64 * wire_bytes_for(mean.len(), false) as u64;
                         for (i, arrival) in self.barrier_arrivals.clone().iter().enumerate() {
                             self.report.blocked_secs += resume - arrival;
                             self.workers[i].x = mean.clone();
@@ -436,7 +518,8 @@ mod tests {
             1.0,
             0.0,
             seed ^ 0xD5,
-        );
+        )
+        .unwrap();
         eng.run(&mut grad, horizon).unwrap();
         let model = eng.consensus_model().unwrap();
         (std::mem::take(&mut eng.report), model)
@@ -520,6 +603,58 @@ mod tests {
             asym.steps,
             sym.steps
         );
+    }
+
+    #[test]
+    fn sharded_gossip_never_blocks_and_ships_fewer_bytes() {
+        let (full, _) = run(DesStrategy::GoSgd { p: 0.2 }, 30.0, 6);
+        let (sharded, _) = run(DesStrategy::ShardedGoSgd { p: 0.2, shards: 4 }, 30.0, 6);
+        assert_eq!(sharded.blocked_secs, 0.0, "sharded gossip is still fire-and-forget");
+        assert!(sharded.messages > 0);
+        let full_per_msg = full.bytes as f64 / full.messages as f64;
+        let sharded_per_msg = sharded.bytes as f64 / sharded.messages as f64;
+        let ratio = sharded_per_msg / full_per_msg;
+        // dim 32, 4 shards: (8*4 + 32) / (32*4 + 24) = 0.42 with headers.
+        assert!(
+            ratio < 0.5,
+            "bytes/msg ratio {ratio} (full {full_per_msg}, sharded {sharded_per_msg})"
+        );
+    }
+
+    #[test]
+    fn sharded_gossip_still_descends() {
+        let (rep, _) = run(DesStrategy::ShardedGoSgd { p: 0.1, shards: 4 }, 60.0, 8);
+        let early: f64 = rep.trace.iter().take(50).map(|(_, l)| l).sum::<f64>() / 50.0;
+        let n = rep.trace.len();
+        let late: f64 = rep.trace[n - 50..].iter().map(|(_, l)| l).sum::<f64>() / 50.0;
+        assert!(late < early * 0.7, "{early} -> {late}");
+    }
+
+    #[test]
+    fn oversized_or_zero_shard_count_is_a_config_error() {
+        let init = FlatVec::zeros(16);
+        for shards in [0usize, 64] {
+            let r = DesEngine::new(
+                DesStrategy::ShardedGoSgd { p: 0.1, shards },
+                TimeModel::paper_like(),
+                4,
+                &init,
+                1.0,
+                0.0,
+                1,
+            );
+            assert!(r.is_err(), "shards = {shards} must be rejected");
+        }
+    }
+
+    #[test]
+    fn sharded_deterministic_given_seed() {
+        let (a, ma) = run(DesStrategy::ShardedGoSgd { p: 0.2, shards: 4 }, 15.0, 12);
+        let (b, mb) = run(DesStrategy::ShardedGoSgd { p: 0.2, shards: 4 }, 15.0, 12);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.bytes, b.bytes);
+        assert_eq!(ma.as_slice(), mb.as_slice());
     }
 
     #[test]

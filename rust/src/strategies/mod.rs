@@ -33,7 +33,7 @@ pub use grad::GradSource;
 
 use crate::error::Result;
 use crate::framework::{CommMatrix, Stacked};
-use crate::gossip::{MessageQueue, SumWeight};
+use crate::gossip::{MessageQueue, ShardPlan, SumWeight};
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
 
@@ -65,8 +65,16 @@ pub struct CommStats {
 pub struct ClusterState {
     /// Parameter state `[x̃, x_1 … x_M]`.
     pub stacked: Stacked,
-    /// Sum-weight per slot (slot 0 unused; init 1/M per paper Alg. 3).
+    /// Sum-weight per slot (slot 0 unused; init 1/M per paper Alg. 3) —
+    /// the classic whole-vector protocol state.
     pub weights: Vec<SumWeight>,
+    /// Sharded-exchange partition, set by [`ClusterState::init_shards`].
+    /// `None` means the classic protocol (whole-vector messages).
+    pub shard_plan: Option<ShardPlan>,
+    /// Per-slot, per-shard sum weights (empty until `init_shards`).  Each
+    /// shard carries its own conserved unit of mass: `Σ_slots w[slot][k]`
+    /// (plus in-flight shard-`k` messages) stays exactly 1 for every `k`.
+    pub shard_weights: Vec<Vec<SumWeight>>,
     /// Per-slot mailboxes (slot 0 unused by gossip).
     pub queues: Vec<MessageQueue>,
     /// Per-worker local step counters.
@@ -84,6 +92,8 @@ impl ClusterState {
         ClusterState {
             stacked: Stacked::replicate(workers, init),
             weights: (0..=workers).map(|_| SumWeight::init(workers)).collect(),
+            shard_plan: None,
+            shard_weights: Vec::new(),
             queues: (0..=workers).map(|_| MessageQueue::unbounded()).collect(),
             steps: vec![0; workers + 1],
             comm: CommStats::default(),
@@ -95,6 +105,27 @@ impl ClusterState {
         self.stacked.workers()
     }
 
+    /// Switch to sharded exchange: partition the vector into `num_shards`
+    /// contiguous ranges and give every slot one `1/M` sum weight *per
+    /// shard*.  Idempotent for a given `num_shards`; changing the count
+    /// mid-run would break per-shard conservation and panics.
+    pub fn init_shards(&mut self, num_shards: usize) {
+        let plan = ShardPlan::new(self.stacked.vec_len(), num_shards);
+        if let Some(existing) = &self.shard_plan {
+            assert_eq!(
+                existing.num_shards(),
+                num_shards,
+                "cannot re-partition a running cluster"
+            );
+            return;
+        }
+        let m = self.workers();
+        self.shard_weights = (0..=m)
+            .map(|_| (0..num_shards).map(|_| SumWeight::init(m)).collect())
+            .collect();
+        self.shard_plan = Some(plan);
+    }
+
     /// Enable event recording (matrix cross-check tests).
     pub fn enable_recording(&mut self) {
         self.recorder = Some(Recorder::default());
@@ -104,6 +135,15 @@ impl ClusterState {
     pub fn record_matrix(&mut self, k: CommMatrix) {
         if let Some(rec) = &mut self.recorder {
             rec.events.push(Event::Communicate(k));
+        }
+    }
+
+    /// Record a block-diagonal communication matrix acting only on
+    /// coordinates `[offset, offset + len)` — a sharded gossip exchange
+    /// (no-op if disabled).
+    pub fn record_matrix_block(&mut self, k: CommMatrix, offset: usize, len: usize) {
+        if let Some(rec) = &mut self.recorder {
+            rec.events.push(Event::CommunicateBlock { k, offset, len });
         }
     }
 
@@ -138,6 +178,9 @@ pub enum Event {
     LocalStep { m: usize, grad: FlatVec, eta: f32 },
     /// `x ← K x`.
     Communicate(CommMatrix),
+    /// `x ← diag(I, …, K, …, I) x`: `K` acts on coordinates
+    /// `[offset, offset + len)` only — one shard of a sharded exchange.
+    CommunicateBlock { k: CommMatrix, offset: usize, len: usize },
 }
 
 /// Replay an event log from `init` through the section-3 recursion.
@@ -149,6 +192,9 @@ pub fn replay_events(workers: usize, init: &FlatVec, events: &[Event]) -> Result
         match ev {
             Event::LocalStep { m, grad, eta } => x.local_step(*m, grad, *eta)?,
             Event::Communicate(k) => x = k.apply(&x)?,
+            Event::CommunicateBlock { k, offset, len } => {
+                x = k.apply_block(&x, *offset, *len)?;
+            }
         }
     }
     Ok(x)
@@ -237,6 +283,56 @@ mod tests {
         assert_eq!(out.worker(1).as_slice(), &[3.0]);
         assert_eq!(out.worker(2).as_slice(), &[3.0]);
         assert_eq!(out.master().as_slice(), &[3.0]);
+    }
+
+    #[test]
+    fn init_shards_populates_per_shard_weights() {
+        let mut s = ClusterState::new(4, &FlatVec::zeros(10));
+        assert!(s.shard_plan.is_none());
+        assert!(s.shard_weights.is_empty());
+        s.init_shards(3);
+        let plan = s.shard_plan.expect("plan set");
+        assert_eq!(plan.num_shards(), 3);
+        assert_eq!(plan.dim(), 10);
+        assert_eq!(s.shard_weights.len(), 5);
+        for slot in &s.shard_weights {
+            assert_eq!(slot.len(), 3);
+            for w in slot {
+                assert_eq!(w.value(), 0.25, "per-shard init is 1/M");
+            }
+        }
+        // Idempotent for the same count.
+        s.init_shards(3);
+        assert_eq!(s.shard_weights.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "re-partition")]
+    fn changing_shard_count_mid_run_panics() {
+        let mut s = ClusterState::new(2, &FlatVec::zeros(8));
+        s.init_shards(2);
+        s.init_shards(4);
+    }
+
+    #[test]
+    fn replay_applies_block_matrices_only_in_range() {
+        let init = FlatVec::from_vec(vec![4.0, 8.0]);
+        let events = vec![
+            Event::LocalStep { m: 1, grad: FlatVec::from_vec(vec![0.0, 2.0]), eta: 1.0 },
+            Event::CommunicateBlock {
+                k: generators::allreduce(2).unwrap(),
+                offset: 1,
+                len: 1,
+            },
+        ];
+        let out = replay_events(2, &init, &events).unwrap();
+        // Component 0 is outside the block: untouched by the communication.
+        assert_eq!(out.worker(1).as_slice()[0], 4.0);
+        assert_eq!(out.worker(2).as_slice()[0], 4.0);
+        // Component 1: worker 1 stepped to 6, worker 2 stayed 8 -> mean 7.
+        assert_eq!(out.worker(1).as_slice()[1], 7.0);
+        assert_eq!(out.worker(2).as_slice()[1], 7.0);
+        assert_eq!(out.master().as_slice()[1], 7.0);
     }
 
     #[test]

@@ -91,6 +91,33 @@ impl FlatVec {
         Ok(())
     }
 
+    /// Shard-local sum-weight blend: mixes `other` (a shard payload of
+    /// `other.len()` elements) into coordinates
+    /// `[offset, offset + other.len())` of `self`, leaving every other
+    /// coordinate untouched.  Same fused `x += t * (y - x)` pass as
+    /// [`FlatVec::mix_from`], restricted to the shard's range.
+    pub fn mix_range_from(
+        &mut self,
+        other: &FlatVec,
+        offset: usize,
+        w_r: f64,
+        w_s: f64,
+    ) -> Result<()> {
+        let end = offset
+            .checked_add(other.len())
+            .ok_or_else(|| Error::shape("shard range overflows usize"))?;
+        if end > self.len() {
+            return Err(Error::shape(format!(
+                "shard range {offset}..{end} out of vector length {}",
+                self.len()
+            )));
+        }
+        debug_assert!(w_r >= 0.0 && w_s > 0.0, "weights must be positive");
+        let t = (w_s / (w_r + w_s)) as f32;
+        ops::mix_into(&mut self.data[offset..end], &other.data, t);
+        Ok(())
+    }
+
     /// `self <- self + alpha * other`.
     pub fn axpy(&mut self, alpha: f32, other: &FlatVec) -> Result<()> {
         self.check_len(other)?;
@@ -188,6 +215,49 @@ mod tests {
         let b = FlatVec::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
         a.mix_from(&b, 0.0, 1.0).unwrap();
         assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn mix_range_touches_only_the_shard() {
+        let mut a = FlatVec::from_vec(vec![0.0; 8]);
+        let shard = FlatVec::from_vec(vec![4.0, 4.0, 4.0]);
+        a.mix_range_from(&shard, 2, 0.5, 0.5).unwrap();
+        assert_eq!(a.as_slice(), &[0.0, 0.0, 2.0, 2.0, 2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn mix_range_matches_full_mix_on_the_range() {
+        check("mix_range == mix restricted to range", 40, |rng| {
+            let n = 8 + rng.below(100) as usize;
+            let mut full = rv(rng, n);
+            let mut ranged = full.clone();
+            let other = rv(rng, n);
+            let w_r = rng.f64() + 1e-3;
+            let w_s = rng.f64() + 1e-3;
+            let offset = rng.below(n as u64 / 2) as usize;
+            let len = 1 + rng.below((n - offset) as u64) as usize;
+            let shard =
+                FlatVec::from_vec(other.as_slice()[offset..offset + len].to_vec());
+            let orig = full.clone();
+            full.mix_from(&other, w_r, w_s).unwrap();
+            ranged.mix_range_from(&shard, offset, w_r, w_s).unwrap();
+            for i in 0..n {
+                let want = if (offset..offset + len).contains(&i) {
+                    full.as_slice()[i] // blended exactly like the full mix
+                } else {
+                    orig.as_slice()[i] // outside the shard: untouched
+                };
+                assert!((ranged.as_slice()[i] - want).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn mix_range_out_of_bounds_errors() {
+        let mut a = FlatVec::zeros(4);
+        let b = FlatVec::zeros(3);
+        assert!(a.mix_range_from(&b, 2, 0.5, 0.5).is_err());
+        assert!(a.mix_range_from(&b, 1, 0.5, 0.5).is_ok());
     }
 
     #[test]

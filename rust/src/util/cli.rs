@@ -161,22 +161,27 @@ impl Args {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Parse an option value into any `FromStr` type (the typed getters
+    /// below are shorthands for the common cases).
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        self.get(name)?.parse().map_err(|_| {
+            Error::cli(format!(
+                "--{name} expects a {}",
+                std::any::type_name::<T>()
+            ))
+        })
+    }
+
     pub fn get_usize(&self, name: &str) -> Result<usize> {
-        self.get(name)?
-            .parse()
-            .map_err(|_| Error::cli(format!("--{name} expects an integer")))
+        self.get_parsed(name)
     }
 
     pub fn get_u64(&self, name: &str) -> Result<u64> {
-        self.get(name)?
-            .parse()
-            .map_err(|_| Error::cli(format!("--{name} expects an integer")))
+        self.get_parsed(name)
     }
 
     pub fn get_f64(&self, name: &str) -> Result<f64> {
-        self.get(name)?
-            .parse()
-            .map_err(|_| Error::cli(format!("--{name} expects a number")))
+        self.get_parsed(name)
     }
 
     pub fn get_flag(&self, name: &str) -> bool {
@@ -248,5 +253,20 @@ mod tests {
     fn type_errors() {
         let a = Args::new("t", "").opt("n", "abc", "").parse_from(vec![]).unwrap();
         assert!(a.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn get_parsed_covers_any_fromstr() {
+        let a = Args::new("t", "")
+            .opt("ratio", "0.25", "")
+            .opt("flagword", "true", "")
+            .parse_from(vec![])
+            .unwrap();
+        let r: f32 = a.get_parsed("ratio").unwrap();
+        assert_eq!(r, 0.25);
+        let b: bool = a.get_parsed("flagword").unwrap();
+        assert!(b);
+        let bad: Result<u8> = a.get_parsed("ratio");
+        assert!(bad.is_err());
     }
 }

@@ -15,7 +15,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
 use crate::error::{Error, Result};
-use crate::gossip::{Message, MessageQueue, PeerSelector, SumWeight};
+use crate::gossip::{Message, MessageQueue, PeerSelector, ShardPlan, SumWeight};
 use crate::strategies::grad::GradSource;
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -32,6 +32,10 @@ pub struct ThreadedGossip {
     pub weight_decay: f32,
     pub seed: u64,
     pub peer: PeerSelector,
+    /// Shards per gossip event (1 = the paper's whole-vector messages;
+    /// > 1 ships one round-robin shard per send — see
+    /// [`crate::gossip::shard`]).
+    pub shards: usize,
 }
 
 impl Default for ThreadedGossip {
@@ -44,6 +48,7 @@ impl Default for ThreadedGossip {
             weight_decay: 1e-4,
             seed: 0,
             peer: PeerSelector::Uniform,
+            shards: 1,
         }
     }
 }
@@ -52,12 +57,15 @@ impl Default for ThreadedGossip {
 pub struct ThreadedReport {
     /// Final per-worker parameters (index 0..M-1).
     pub params: Vec<FlatVec>,
-    /// Final per-worker weights.
+    /// Final per-worker weights (for sharded runs: the mean over a
+    /// worker's shard weights, so the global sum stays 1 either way).
     pub weights: Vec<f64>,
     /// Per-worker loss traces (local step, loss).
     pub losses: Vec<Vec<(u64, f64)>>,
     /// Total messages sent.
     pub messages: u64,
+    /// Total wire bytes those messages carried.
+    pub bytes: u64,
     /// Wall-clock seconds for the training section.
     pub elapsed_secs: f64,
     /// Consensus error across final worker models.
@@ -83,11 +91,24 @@ impl ThreadedGossip {
         if m < 2 {
             return Err(Error::config("threaded gossip needs >= 2 workers"));
         }
+        if self.shards == 0 {
+            return Err(Error::config("shards must be >= 1"));
+        }
+        if self.shards > init.len() {
+            return Err(Error::config(format!(
+                "cannot cut {} parameters into {} shards",
+                init.len(),
+                self.shards
+            )));
+        }
+        let plan = ShardPlan::new(init.len(), self.shards);
         let queues: Arc<Vec<MessageQueue>> =
             Arc::new((0..m).map(|_| MessageQueue::unbounded()).collect());
         let start_barrier = Arc::new(Barrier::new(m));
         let total_messages = Arc::new(AtomicU64::new(0));
-        let results: Arc<Vec<Mutex<Option<(FlatVec, f64, Vec<(u64, f64)>)>>>> =
+        let total_bytes = Arc::new(AtomicU64::new(0));
+        #[allow(clippy::type_complexity)]
+        let results: Arc<Vec<Mutex<Option<(FlatVec, Vec<f64>, Vec<(u64, f64)>)>>>> =
             Arc::new((0..m).map(|_| Mutex::new(None)).collect());
         let base_rng = Rng::new(self.seed);
 
@@ -98,6 +119,7 @@ impl ThreadedGossip {
                 let queues = queues.clone();
                 let start_barrier = start_barrier.clone();
                 let total_messages = total_messages.clone();
+                let total_bytes = total_bytes.clone();
                 let results = results.clone();
                 let mut rng = base_rng.split(w as u64 + 1);
                 let make_source = &make_source;
@@ -109,38 +131,63 @@ impl ThreadedGossip {
                         return Err(Error::shape("grad source dim mismatch"));
                     }
                     let mut x = init;
-                    let mut weight = SumWeight::init(m);
+                    // One sum weight per shard (a single one when unsharded).
+                    let mut weights: Vec<SumWeight> =
+                        (0..cfg.shards).map(|_| SumWeight::init(m)).collect();
+                    // Stagger cursors so concurrent senders cover different
+                    // shards from the start.
+                    let mut cursor = w % cfg.shards;
                     let mut grad = FlatVec::zeros(x.len());
                     let mut losses = Vec::with_capacity(cfg.steps_per_worker as usize);
                     start_barrier.wait();
 
                     for step in 0..cfg.steps_per_worker {
-                        // 1. ProcessMessages(q_s)
+                        // 1. ProcessMessages(q_s): blend each message into
+                        //    its shard's range with its shard's weight.
                         for msg in queues[w].drain() {
-                            let t = weight.absorb(msg.weight);
-                            x.mix_from(&msg.params, 1.0 - t, t)?;
+                            let t = weights[msg.shard.index].absorb(msg.weight);
+                            if msg.shard.is_full() {
+                                x.mix_from(&msg.params, 1.0 - t, t)?;
+                            } else {
+                                x.mix_range_from(&msg.params, msg.shard.offset, 1.0 - t, t)?;
+                            }
                         }
                         // 2. local gradient step
                         let loss = source.grad(w + 1, &x, step, &mut grad)?;
                         x.sgd_step(&grad, cfg.eta, cfg.weight_decay)?;
                         losses.push((step, loss));
-                        // 3. Bernoulli(p) send
+                        // 3. Bernoulli(p) send of the next round-robin shard
                         if rng.bernoulli(cfg.p) {
                             let r = cfg.peer.pick(m, w, &mut rng);
-                            let shipped = weight.halve_for_send();
-                            let msg =
-                                Message::new(Arc::new(x.clone()), shipped, w, step);
+                            let shard = plan.shard(cursor);
+                            cursor = (cursor + 1) % cfg.shards;
+                            let shipped = weights[shard.index].halve_for_send();
+                            let msg = if shard.is_full() {
+                                Message::new(Arc::new(x.clone()), shipped, w, step)
+                            } else {
+                                let payload = FlatVec::from_vec(
+                                    x.as_slice()[shard.offset..shard.offset + shard.len]
+                                        .to_vec(),
+                                );
+                                Message::for_shard(Arc::new(payload), shipped, w, step, shard)
+                            };
                             total_messages.fetch_add(1, Ordering::Relaxed);
+                            total_bytes.fetch_add(msg.wire_bytes() as u64, Ordering::Relaxed);
                             queues[r].push(msg);
                         }
                     }
                     // Final drain so no weight mass is stranded in queues.
                     for msg in queues[w].drain() {
-                        let t = weight.absorb(msg.weight);
-                        x.mix_from(&msg.params, 1.0 - t, t)?;
+                        let t = weights[msg.shard.index].absorb(msg.weight);
+                        if msg.shard.is_full() {
+                            x.mix_from(&msg.params, 1.0 - t, t)?;
+                        } else {
+                            x.mix_range_from(&msg.params, msg.shard.offset, 1.0 - t, t)?;
+                        }
                     }
+                    let weight_values: Vec<f64> = weights.iter().map(|w| w.value()).collect();
                     *results[w].lock().map_err(|_| Error::worker("poisoned result slot"))? =
-                        Some((x, weight.value(), losses));
+                        Some((x, weight_values, losses));
                     Ok(())
                 }));
             }
@@ -153,7 +200,7 @@ impl ThreadedGossip {
         let elapsed = t0.elapsed().as_secs_f64();
 
         let mut params = Vec::with_capacity(m);
-        let mut weights = Vec::with_capacity(m);
+        let mut shard_weights: Vec<Vec<f64>> = Vec::with_capacity(m);
         let mut losses = Vec::with_capacity(m);
         for slot in results.iter() {
             let (x, wgt, l) = slot
@@ -162,7 +209,7 @@ impl ThreadedGossip {
                 .take()
                 .ok_or_else(|| Error::worker("worker produced no result"))?;
             params.push(x);
-            weights.push(wgt);
+            shard_weights.push(wgt);
             losses.push(l);
         }
 
@@ -171,12 +218,23 @@ impl ThreadedGossip {
         // queues we own — fold them into their receivers for exactness.
         for (w, q) in queues.iter().enumerate() {
             for msg in q.drain() {
-                let mut wgt = SumWeight::from_value(weights[w]);
+                let k = msg.shard.index;
+                let mut wgt = SumWeight::from_value(shard_weights[w][k]);
                 let t = wgt.absorb(msg.weight);
-                params[w].mix_from(&msg.params, 1.0 - t, t)?;
-                weights[w] = wgt.value();
+                if msg.shard.is_full() {
+                    params[w].mix_from(&msg.params, 1.0 - t, t)?;
+                } else {
+                    params[w].mix_range_from(&msg.params, msg.shard.offset, 1.0 - t, t)?;
+                }
+                shard_weights[w][k] = wgt.value();
             }
         }
+        // Report a single scalar per worker: the mean over its shard
+        // weights, so Σ_workers weight stays exactly 1 for any shard count.
+        let weights: Vec<f64> = shard_weights
+            .iter()
+            .map(|ws| ws.iter().sum::<f64>() / ws.len() as f64)
+            .collect();
 
         let mean = FlatVec::mean_of(&params.iter().collect::<Vec<_>>())?;
         let mut consensus_error = 0.0;
@@ -189,6 +247,7 @@ impl ThreadedGossip {
             weights,
             losses,
             messages: total_messages.load(Ordering::Relaxed),
+            bytes: total_bytes.load(Ordering::Relaxed),
             elapsed_secs: elapsed,
             consensus_error,
         })
@@ -219,6 +278,7 @@ mod tests {
             weight_decay: 0.0,
             seed: 1,
             peer: PeerSelector::Uniform,
+            shards: 1,
         };
         let init = FlatVec::zeros(dim);
         let rep = cfg.run(&init, quad_factory(dim, 0.1, 7)).unwrap();
@@ -240,6 +300,7 @@ mod tests {
             weight_decay: 0.0,
             seed: 3,
             peer: PeerSelector::Uniform,
+            shards: 1,
         };
         let init = FlatVec::zeros(dim);
         let rep = cfg.run(&init, quad_factory(dim, 0.05, 11)).unwrap();
@@ -263,6 +324,7 @@ mod tests {
                 weight_decay: 0.0,
                 seed: 5,
                 peer: PeerSelector::Uniform,
+                shards: 1,
             };
             cfg.run(&FlatVec::zeros(dim), quad_factory(dim, 0.3, 13))
                 .unwrap()
@@ -287,11 +349,55 @@ mod tests {
             weight_decay: 0.0,
             seed: 9,
             peer: PeerSelector::Uniform,
+            shards: 1,
         };
         let rep = cfg
             .run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 17))
             .unwrap();
         assert_eq!(rep.messages, 0);
+    }
+
+    #[test]
+    fn sharded_run_conserves_weight_and_cuts_bytes() {
+        let dim = 256;
+        let mk = |shards: usize| {
+            let cfg = ThreadedGossip {
+                workers: 4,
+                p: 0.5,
+                steps_per_worker: 300,
+                eta: 1.0,
+                weight_decay: 0.0,
+                seed: 21,
+                peer: PeerSelector::Uniform,
+                shards,
+            };
+            cfg.run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 23)).unwrap()
+        };
+        let full = mk(1);
+        let sharded = mk(4);
+        // Weight mass conservation holds under sharding (reported scalar is
+        // the per-worker mean over shard weights).
+        let total: f64 = sharded.weights.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "weight mass {total}");
+        // Per-message cost drops by ~1/shards (modulo headers).
+        assert!(full.messages > 0 && sharded.messages > 0);
+        let full_per_msg = full.bytes as f64 / full.messages as f64;
+        let sharded_per_msg = sharded.bytes as f64 / sharded.messages as f64;
+        let ratio = sharded_per_msg / full_per_msg;
+        assert!(
+            (0.2..0.32).contains(&ratio),
+            "bytes/msg ratio {ratio} (full {full_per_msg}, sharded {sharded_per_msg})"
+        );
+        // Sharded gossip still trains and keeps workers coupled.
+        assert!(sharded.consensus_error.is_finite());
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let cfg = ThreadedGossip { shards: 0, ..Default::default() };
+        assert!(cfg
+            .run(&FlatVec::zeros(8), quad_factory(8, 0.1, 1))
+            .is_err());
     }
 
     #[test]

@@ -86,6 +86,23 @@ fn gosgd_immediate_equals_matrix_replay() {
 }
 
 #[test]
+fn gosgd_sharded_immediate_equals_matrix_replay() {
+    // Sharded exchanges record block-diagonal K^(t) events
+    // (Event::CommunicateBlock); the engine applies the exchange through
+    // the very same apply_block call, so replay matches float-for-float.
+    check("gosgd sharded crosscheck", 10, |rng| {
+        let m = 2 + rng.below(6) as usize;
+        let shards = 1 + rng.below(4) as usize;
+        crosscheck(
+            Box::new(GoSgd::new(0.6).with_shards(shards).immediate_delivery()),
+            m,
+            40,
+            rng.next_u64(),
+        );
+    });
+}
+
+#[test]
 fn mixed_strategy_sequence_is_consistent() {
     // Sanity: the recorder event count matches steps (1 local step per
     // worker per round + 1 matrix per round for sync strategies).

@@ -97,6 +97,7 @@ fn fig2_gosgd_faster_than_easgd_wallclock() {
         eta: 1.0,
         weight_decay: 0.0,
         ema_beta: 0.95,
+        shards: 1,
     };
     let series = fig2::run(&cfg, None).unwrap();
     let gossip = &series[0];
