@@ -50,7 +50,7 @@ impl Checkpoint {
     /// first so no weight mass is lost.
     pub fn capture(state: &mut ClusterState) -> Result<Checkpoint> {
         let m = state.workers();
-        if state.shard_plan.is_some() {
+        if state.sharded() {
             // Format v1 stores one sum weight per worker; a sharded run
             // carries one per (worker, shard).  Refuse rather than silently
             // collapse the per-shard masses.
@@ -59,20 +59,19 @@ impl Checkpoint {
                  stores a single weight per worker)",
             ));
         }
-        // Drain all mailboxes into their owners (exact: blend associativity).
+        // Drain all mailboxes into their owners (exact: blend associativity;
+        // the blend itself is the protocol core's absorb transition).
         for w in 1..=m {
-            for msg in state.queues[w].drain() {
-                let t = state.weights[w].absorb(msg.weight);
-                state
-                    .stacked
-                    .worker_mut(w)
-                    .mix_from(&msg.params, 1.0 - t, t)?;
+            let pending = state.queues[w].drain();
+            let (cores, stacked) = (&mut state.cores, &mut state.stacked);
+            for msg in pending {
+                cores[w].absorb_message(stacked.worker_mut(w), &msg)?;
             }
         }
         let workers = (1..=m)
             .map(|w| WorkerSnapshot {
                 params: state.stacked.worker(w).clone(),
-                weight: state.weights[w].value(),
+                weight: state.cores[w].weights()[0].value(),
                 steps: state.steps[w],
             })
             .collect();
@@ -94,7 +93,7 @@ impl Checkpoint {
                 return Err(Error::shape("ragged checkpoint"));
             }
             *state.stacked.worker_mut(w) = snap.params.clone();
-            state.weights[w] = SumWeight::from_value(snap.weight);
+            state.cores[w].set_weight(0, SumWeight::from_value(snap.weight));
             state.steps[w] = snap.steps;
         }
         Ok(state)
@@ -250,7 +249,10 @@ mod tests {
                 restored.stacked.worker(w).as_slice(),
                 state.stacked.worker(w).as_slice()
             );
-            assert_eq!(restored.weights[w].value(), state.weights[w].value());
+            assert_eq!(
+                restored.cores[w].weights()[0].value(),
+                state.cores[w].weights()[0].value()
+            );
             assert_eq!(restored.steps[w], state.steps[w]);
         }
     }
@@ -269,8 +271,9 @@ mod tests {
     #[test]
     fn capture_folds_queued_messages_preserving_weight() {
         let mut state = populated_state(2, 16, 3);
-        // Put a message in flight: sender 1 ships half its weight to 2.
-        let shipped = state.weights[1].halve_for_send();
+        // Put a message in flight: sender 1 ships half its weight to 2
+        // (the core's send-side transition, minus the payload snapshot).
+        let (_, shipped) = state.cores[1].begin_send();
         let snapshot = Arc::new(state.stacked.worker(1).clone());
         state.queues[2].push(Message::new(snapshot, shipped, 1, 0));
         let ckpt = Checkpoint::capture(&mut state).unwrap();

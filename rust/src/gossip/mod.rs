@@ -16,15 +16,21 @@
 //!   contiguous shards, each with its own sum weight, and gossip one shard
 //!   per event.  Exact (the blend is per-coordinate associative), and the
 //!   per-event bandwidth drops by `~1/num_shards`.
+//! * [`protocol`] — the runtime-agnostic protocol core: the
+//!   drain/blend/send state machine of Algorithms 3/4, written once and
+//!   driven by all three runtimes (sequential engine, OS threads,
+//!   discrete-event simulator).
 
 pub mod message;
 pub mod peer;
+pub mod protocol;
 pub mod queue;
 pub mod shard;
 pub mod weights;
 
 pub use message::{wire_bytes_for, Message};
 pub use peer::PeerSelector;
+pub use protocol::{Outbound, ProtocolCore};
 pub use queue::MessageQueue;
 pub use shard::{Shard, ShardPlan};
 pub use weights::SumWeight;

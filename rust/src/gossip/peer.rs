@@ -7,6 +7,7 @@
 //! [`PeerSelector::SmallWorld`] are provided for the topology ablation
 //! bench (`cargo bench --bench strategy_e2e`).
 
+use crate::error::{Error, Result};
 use crate::util::rng::Rng;
 
 /// How a sender picks the receiver of a gossip message.
@@ -41,15 +42,32 @@ impl PeerSelector {
     }
 
     /// Parse from a CLI string: `uniform`, `ring`, `smallworld:0.2`.
-    pub fn parse(text: &str) -> Option<PeerSelector> {
+    ///
+    /// Validates the input instead of accepting garbage: the shortcut
+    /// probability of `smallworld:q` must be a finite number in `[0, 1]`
+    /// (`NaN` is rejected explicitly — it would silently disable every
+    /// shortcut), and anything else is a config error naming the valid
+    /// forms.
+    pub fn parse(text: &str) -> Result<PeerSelector> {
         match text {
-            "uniform" => Some(PeerSelector::Uniform),
-            "ring" => Some(PeerSelector::Ring),
-            _ => text
-                .strip_prefix("smallworld:")
-                .and_then(|q| q.parse().ok())
-                .filter(|q| (0.0..=1.0).contains(q))
-                .map(|q| PeerSelector::SmallWorld { q }),
+            "uniform" => Ok(PeerSelector::Uniform),
+            "ring" => Ok(PeerSelector::Ring),
+            _ => {
+                let q_text = text.strip_prefix("smallworld:").ok_or_else(|| {
+                    Error::config(format!(
+                        "unknown peer selector {text:?} (expected uniform | ring | smallworld:Q)"
+                    ))
+                })?;
+                let q: f64 = q_text.parse().map_err(|_| {
+                    Error::config(format!("smallworld shortcut probability is not a number: {q_text:?}"))
+                })?;
+                if !q.is_finite() || !(0.0..=1.0).contains(&q) {
+                    return Err(Error::config(format!(
+                        "smallworld shortcut probability must be in [0, 1], got {q}"
+                    )));
+                }
+                Ok(PeerSelector::SmallWorld { q })
+            }
         }
     }
 }
@@ -104,13 +122,61 @@ mod tests {
 
     #[test]
     fn parse_round_trips() {
-        assert_eq!(PeerSelector::parse("uniform"), Some(PeerSelector::Uniform));
-        assert_eq!(PeerSelector::parse("ring"), Some(PeerSelector::Ring));
+        assert_eq!(PeerSelector::parse("uniform").unwrap(), PeerSelector::Uniform);
+        assert_eq!(PeerSelector::parse("ring").unwrap(), PeerSelector::Ring);
         assert_eq!(
-            PeerSelector::parse("smallworld:0.25"),
-            Some(PeerSelector::SmallWorld { q: 0.25 })
+            PeerSelector::parse("smallworld:0.25").unwrap(),
+            PeerSelector::SmallWorld { q: 0.25 }
         );
-        assert_eq!(PeerSelector::parse("smallworld:2.0"), None);
-        assert_eq!(PeerSelector::parse("mesh"), None);
+        // Boundary values are legal probabilities.
+        assert_eq!(
+            PeerSelector::parse("smallworld:0").unwrap(),
+            PeerSelector::SmallWorld { q: 0.0 }
+        );
+        assert_eq!(
+            PeerSelector::parse("smallworld:1").unwrap(),
+            PeerSelector::SmallWorld { q: 1.0 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage_with_config_errors() {
+        for bad in [
+            "mesh",
+            "",
+            "smallworld:",
+            "smallworld:2.0",
+            "smallworld:-0.1",
+            "smallworld:NaN",
+            "smallworld:inf",
+            "smallworld:abc",
+        ] {
+            let err = PeerSelector::parse(bad).unwrap_err();
+            assert!(
+                err.to_string().contains("config"),
+                "{bad:?} should be a config error, got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_selectors_handle_the_two_worker_edge() {
+        // m = 2: the only legal receiver is the other worker, for every
+        // policy (uniform has one candidate; ring's successor is the other
+        // worker; smallworld's shortcut and ring move coincide).
+        let mut rng = Rng::new(9);
+        for sel in [
+            PeerSelector::Uniform,
+            PeerSelector::Ring,
+            PeerSelector::SmallWorld { q: 0.0 },
+            PeerSelector::SmallWorld { q: 0.5 },
+            PeerSelector::SmallWorld { q: 1.0 },
+        ] {
+            for s in 0..2 {
+                for _ in 0..50 {
+                    assert_eq!(sel.pick(2, s, &mut rng), 1 - s, "{sel:?} from {s}");
+                }
+            }
+        }
     }
 }

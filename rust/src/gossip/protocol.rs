@@ -1,0 +1,477 @@
+//! The runtime-agnostic GoSGD protocol core (paper Algorithms 3 & 4).
+//!
+//! Three runtimes execute the same protocol under different clocks: the
+//! sequential universal-clock [`Engine`](crate::strategies::Engine), the
+//! OS-thread runtime ([`crate::worker::ThreadedGossip`]) and the
+//! discrete-event simulator ([`crate::sim::DesEngine`]).  Before this
+//! module existed each of them hand-copied the drain/blend/send state
+//! machine; every protocol feature (sharding, topologies, churn) had to be
+//! written and debugged three times.
+//!
+//! [`ProtocolCore`] is that state machine, extracted once: one core per
+//! worker holds the per-shard sum weights, the round-robin shard cursor,
+//! the exchange probability and the peer-selection policy, and exposes
+//! exactly three transitions:
+//!
+//! * [`ProtocolCore::absorb`] — Algorithm 4 `ProcessMessages`, one
+//!   message: compute the blend coefficient `t = w_s/(w_r + w_s)` from the
+//!   shard-local sum weight, blend the payload into the shard's range, add
+//!   the weight.
+//! * [`ProtocolCore::local_step`] — the fused SGD + weight-decay update
+//!   plus the local step counter.
+//! * [`ProtocolCore::emit`] — Algorithm 3 lines 6-9: Bernoulli(`p`) gate,
+//!   peer pick, round-robin shard-cursor advance, weight halving, payload
+//!   slice.  Returns an [`Outbound`] the runtime delivers however it
+//!   likes (concurrent queue, event heap, engine mailbox).
+//!
+//! The core never touches clocks, queues, threads or latency models —
+//! those stay in the runtimes — and it does not own the parameter vector:
+//! every transition borrows `x` from the runtime's storage (the engine
+//! keeps params inside its [`Stacked`](crate::framework::Stacked) matrix
+//! for the section-3 replay; the threaded and DES runtimes own per-worker
+//! vectors), which is what lets all three drive the identical code.
+//! The unsharded paper protocol is the `shards == 1` special case: one
+//! sum weight, a cursor that never moves, whole-vector payloads.
+//!
+//! A cross-runtime test (`rust/tests/runtime_equivalence.rs`) hand-drives
+//! cores next to the sequential engine and demands *bit-identical*
+//! parameter trajectories for a fixed seed.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::gossip::message::{wire_bytes_for, Message};
+use crate::gossip::peer::PeerSelector;
+use crate::gossip::shard::{Shard, ShardPlan};
+use crate::gossip::weights::SumWeight;
+use crate::tensor::FlatVec;
+use crate::util::rng::Rng;
+
+/// One worker's protocol state machine.
+#[derive(Clone, Debug)]
+pub struct ProtocolCore {
+    /// 0-based worker id (the peer selector excludes it).
+    id: usize,
+    /// Exchange probability per local step (the paper's `p`).
+    p: f64,
+    /// Receiver selection policy (paper: uniform).
+    selector: PeerSelector,
+    /// The deterministic shard partition (one shard when unsharded).
+    plan: ShardPlan,
+    /// One sum weight per shard, each initialized to `1/M`.
+    weights: Vec<SumWeight>,
+    /// Round-robin shard cursor; staggered by worker id at construction so
+    /// concurrent senders cover different shards from the start.
+    cursor: usize,
+    /// Local gradient steps taken through [`ProtocolCore::local_step`].
+    steps: u64,
+}
+
+/// The send-side product of one gossip event: everything a runtime needs
+/// to deliver the message, with the sender's state already transitioned
+/// (weight halved, cursor advanced).
+#[derive(Clone, Debug)]
+pub struct Outbound {
+    /// 0-based receiver id.
+    pub to: usize,
+    /// Which slice of the vector the payload covers.
+    pub shard: Shard,
+    /// The sender's halved shard-local weight.
+    pub weight: SumWeight,
+    /// Snapshot of the shard's coordinates at send time.
+    pub payload: FlatVec,
+}
+
+impl Outbound {
+    /// Wire size under the shared accounting model.
+    pub fn wire_bytes(&self) -> usize {
+        wire_bytes_for(self.payload.len(), !self.shard.is_full())
+    }
+
+    /// Wrap into a queueable [`Message`] (`sender` in the runtime's own id
+    /// space — it is metadata only).
+    pub fn into_message(self, sender: usize, sent_at_step: u64) -> Message {
+        if self.shard.is_full() {
+            Message::new(Arc::new(self.payload), self.weight, sender, sent_at_step)
+        } else {
+            Message::for_shard(Arc::new(self.payload), self.weight, sender, sent_at_step, self.shard)
+        }
+    }
+}
+
+impl ProtocolCore {
+    /// Build the core for worker `id` (0-based) in a cluster of `workers`
+    /// over a `dim`-dimensional model.  Fails with a config error when `p`
+    /// is not a probability or the shard count does not fit the model —
+    /// the two places user input meets the dimension for the first time.
+    pub fn new(
+        id: usize,
+        workers: usize,
+        dim: usize,
+        p: f64,
+        selector: PeerSelector,
+        shards: usize,
+    ) -> Result<Self> {
+        if !(0.0..=1.0).contains(&p) {
+            return Err(Error::config(format!("gosgd p out of [0,1]: {p}")));
+        }
+        if shards == 0 {
+            return Err(Error::config("shards must be >= 1"));
+        }
+        // One shard (the whole vector) fits any dimension; a real
+        // partition needs at least one coordinate per shard.
+        if shards > 1 && shards > dim {
+            return Err(Error::config(format!(
+                "cannot cut {dim} parameters into {shards} shards"
+            )));
+        }
+        if workers == 0 {
+            return Err(Error::config("workers must be >= 1"));
+        }
+        let plan = ShardPlan::new(dim, shards);
+        Ok(ProtocolCore {
+            id,
+            p,
+            selector,
+            plan,
+            weights: (0..shards).map(|_| SumWeight::init(workers)).collect(),
+            cursor: id % shards,
+            steps: 0,
+        })
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    pub fn selector(&self) -> &PeerSelector {
+        &self.selector
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.plan.num_shards()
+    }
+
+    pub fn plan(&self) -> ShardPlan {
+        self.plan
+    }
+
+    /// Per-shard sum weights (one entry when unsharded).
+    pub fn weights(&self) -> &[SumWeight] {
+        &self.weights
+    }
+
+    /// Per-shard weight values, as raw `f64`s (reporting).
+    pub fn weight_values(&self) -> Vec<f64> {
+        self.weights.iter().map(|w| w.value()).collect()
+    }
+
+    /// Mean over the per-shard weights — a single scalar per worker whose
+    /// cluster-wide sum stays exactly 1 for any shard count.
+    pub fn mean_weight(&self) -> f64 {
+        self.weights.iter().map(|w| w.value()).sum::<f64>() / self.weights.len() as f64
+    }
+
+    /// Local steps taken through [`ProtocolCore::local_step`].
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Overwrite one shard's sum weight (checkpoint restore).
+    pub fn set_weight(&mut self, k: usize, w: SumWeight) {
+        self.weights[k] = w;
+    }
+
+    /// Re-point the exchange knobs without touching weight state (safe at
+    /// any time; the weights are the conserved quantity, `p`/selector are
+    /// policy).
+    pub fn set_exchange(&mut self, p: f64, selector: PeerSelector) -> Result<()> {
+        if !(0.0..=1.0).contains(&p) {
+            return Err(Error::config(format!("gosgd p out of [0,1]: {p}")));
+        }
+        self.p = p;
+        self.selector = selector;
+        Ok(())
+    }
+
+    // ---- transitions -----------------------------------------------------
+
+    /// Receive transition (Algorithm 4 `ProcessMessages`, one message):
+    /// absorb `weight` into the shard-local sum weight and blend `payload`
+    /// into `x` over the shard's range with `t = w_s/(w_r + w_s)`.
+    pub fn absorb(
+        &mut self,
+        x: &mut FlatVec,
+        shard: Shard,
+        payload: &FlatVec,
+        weight: SumWeight,
+    ) -> Result<()> {
+        // The message's shard geometry must match the local plan exactly —
+        // crediting a weight to shard `k` while blending a differently-cut
+        // coordinate range would silently corrupt per-shard conservation.
+        if shard.num_shards != self.plan.num_shards()
+            || shard.index >= self.plan.num_shards()
+            || shard != self.plan.shard(shard.index)
+        {
+            return Err(Error::shape(format!(
+                "message shard {shard:?} does not match the local plan ({} shards over {} coordinates)",
+                self.plan.num_shards(),
+                self.plan.dim()
+            )));
+        }
+        let t = self.weights[shard.index].absorb(weight);
+        if shard.is_full() {
+            x.mix_from(payload, 1.0 - t, t)
+        } else {
+            x.mix_range_from(payload, shard.offset, 1.0 - t, t)
+        }
+    }
+
+    /// [`ProtocolCore::absorb`] for a queued [`Message`].
+    pub fn absorb_message(&mut self, x: &mut FlatVec, msg: &Message) -> Result<()> {
+        self.absorb(x, msg.shard, &msg.params, msg.weight)
+    }
+
+    /// Weight-only receive transition: absorb and return the blend
+    /// coefficient `t` without touching any parameters.  Used by the
+    /// engine's immediate-delivery cross-check, where the exchange is
+    /// applied through the recorded `K^(t)` matrix instead of a payload.
+    pub fn absorb_weight(&mut self, shard_index: usize, weight: SumWeight) -> f64 {
+        self.weights[shard_index].absorb(weight)
+    }
+
+    /// Local update: fused SGD + weight decay, and the step counter.
+    pub fn local_step(&mut self, x: &mut FlatVec, grad: &FlatVec, eta: f32, wd: f32) -> Result<()> {
+        x.sgd_step(grad, eta, wd)?;
+        self.steps += 1;
+        Ok(())
+    }
+
+    /// Send-side state transition without a payload: advance the
+    /// round-robin cursor and halve that shard's weight.  Exposed for the
+    /// immediate-delivery cross-check; queued runtimes use
+    /// [`ProtocolCore::emit`].
+    pub fn begin_send(&mut self) -> (Shard, SumWeight) {
+        let shard = self.plan.shard(self.cursor);
+        self.cursor = (self.cursor + 1) % self.plan.num_shards();
+        let shipped = self.weights[shard.index].halve_for_send();
+        (shard, shipped)
+    }
+
+    /// Send transition (Algorithm 3, lines 6-9): with probability `p`,
+    /// pick a receiver among the `workers` others, advance the shard
+    /// cursor, halve the shard's weight and snapshot its coordinates.
+    /// Returns `None` when the coin says no (or the cluster has a single
+    /// worker — nobody to gossip with).
+    pub fn emit(&mut self, x: &FlatVec, workers: usize, rng: &mut Rng) -> Result<Option<Outbound>> {
+        if workers < 2 || !rng.bernoulli(self.p) {
+            return Ok(None);
+        }
+        let to = self.selector.pick(workers, self.id, rng);
+        Ok(Some(self.emit_to(x, to)?))
+    }
+
+    /// Unconditional send to a chosen receiver — the state transition of
+    /// [`ProtocolCore::emit`] with the gate and peer pick already decided.
+    pub fn emit_to(&mut self, x: &FlatVec, to: usize) -> Result<Outbound> {
+        if x.len() != self.plan.dim() {
+            return Err(Error::shape(format!(
+                "params length {} vs shard plan dim {}",
+                x.len(),
+                self.plan.dim()
+            )));
+        }
+        let (shard, shipped) = self.begin_send();
+        let payload = if shard.is_full() {
+            x.clone()
+        } else {
+            FlatVec::from_vec(x.as_slice()[shard.offset..shard.offset + shard.len].to_vec())
+        };
+        Ok(Outbound { to, shard, weight: shipped, payload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn core(id: usize, m: usize, dim: usize, p: f64, shards: usize) -> ProtocolCore {
+        ProtocolCore::new(id, m, dim, p, PeerSelector::Uniform, shards).unwrap()
+    }
+
+    #[test]
+    fn new_validates_inputs() {
+        assert!(ProtocolCore::new(0, 4, 8, 1.5, PeerSelector::Uniform, 1).is_err());
+        assert!(ProtocolCore::new(0, 4, 8, 0.5, PeerSelector::Uniform, 0).is_err());
+        assert!(ProtocolCore::new(0, 4, 8, 0.5, PeerSelector::Uniform, 9).is_err());
+        assert!(ProtocolCore::new(0, 0, 8, 0.5, PeerSelector::Uniform, 1).is_err());
+        assert!(ProtocolCore::new(0, 4, 8, 0.5, PeerSelector::Uniform, 8).is_ok());
+        // The trivial 1-shard core accepts any dimension, even empty —
+        // ClusterState builds default cores before knowing the model.
+        assert!(ProtocolCore::new(0, 2, 0, 0.0, PeerSelector::Uniform, 1).is_ok());
+    }
+
+    #[test]
+    fn weights_start_at_one_over_m_per_shard() {
+        let c = core(2, 4, 12, 0.5, 3);
+        assert_eq!(c.weights().len(), 3);
+        for w in c.weights() {
+            assert_eq!(w.value(), 0.25);
+        }
+        assert!((c.mean_weight() - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cursor_staggered_by_worker_id_and_round_robins() {
+        let dim = 12;
+        let x = FlatVec::zeros(dim);
+        for id in 0..5 {
+            let mut c = core(id, 8, dim, 1.0, 3);
+            let first = c.emit_to(&x, 0).unwrap();
+            assert_eq!(first.shard.index, id % 3, "stagger for worker {id}");
+            let second = c.emit_to(&x, 0).unwrap();
+            assert_eq!(second.shard.index, (id + 1) % 3);
+        }
+    }
+
+    #[test]
+    fn emit_halves_weight_and_slices_payload() {
+        let dim = 10;
+        let x = FlatVec::from_vec((0..dim).map(|i| i as f32).collect());
+        let mut c = core(0, 2, dim, 1.0, 2);
+        let out = c.emit_to(&x, 1).unwrap();
+        assert_eq!(out.to, 1);
+        assert_eq!(out.shard.index, 0);
+        assert_eq!(out.payload.len(), out.shard.len);
+        assert_eq!(out.weight.value(), 0.25, "half of the 1/2 init");
+        assert_eq!(c.weights()[0].value(), 0.25);
+        assert_eq!(c.weights()[1].value(), 0.5, "other shard untouched");
+        assert_eq!(
+            out.payload.as_slice(),
+            &x.as_slice()[out.shard.offset..out.shard.offset + out.shard.len]
+        );
+    }
+
+    #[test]
+    fn unsharded_emit_ships_whole_vector_as_full_message() {
+        let x = FlatVec::from_vec(vec![1.0; 7]);
+        let mut c = core(0, 4, 7, 1.0, 1);
+        let out = c.emit_to(&x, 2).unwrap();
+        assert!(out.shard.is_full());
+        let msg = out.into_message(0, 9);
+        assert!(msg.shard.is_full());
+        assert_eq!(msg.sent_at_step, 9);
+        assert_eq!(msg.params.len(), 7);
+    }
+
+    #[test]
+    fn absorb_blends_only_the_shard_range() {
+        let dim = 8;
+        let mut sender = core(0, 2, dim, 1.0, 2);
+        let mut receiver = core(1, 2, dim, 1.0, 2);
+        let xs = FlatVec::from_vec(vec![4.0; dim]);
+        let mut xr = FlatVec::zeros(dim);
+        let out = sender.emit_to(&xs, 1).unwrap();
+        let shard = out.shard;
+        receiver.absorb(&mut xr, shard, &out.payload, out.weight).unwrap();
+        // t = 0.25/(0.5 + 0.25) = 1/3: blended range becomes 4/3.
+        for (i, &v) in xr.as_slice().iter().enumerate() {
+            if (shard.offset..shard.offset + shard.len).contains(&i) {
+                assert!((v - 4.0 / 3.0).abs() < 1e-6, "coord {i}: {v}");
+            } else {
+                assert_eq!(v, 0.0, "coord {i} outside the shard must be untouched");
+            }
+        }
+        assert!((receiver.weights()[shard.index].value() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exchange_conserves_mass_per_shard() {
+        // Any emit/absorb schedule keeps each shard's total mass at 1.
+        let m = 4;
+        let dim = 24;
+        let shards = 3;
+        let mut rng = Rng::new(0xC0DE);
+        let mut xs: Vec<FlatVec> = (0..m).map(|_| FlatVec::zeros(dim)).collect();
+        let mut cores: Vec<ProtocolCore> =
+            (0..m).map(|w| core(w, m, dim, 0.8, shards)).collect();
+        let mut in_flight: Vec<Outbound> = Vec::new();
+        for _ in 0..500 {
+            let w = rng.below(m as u64) as usize;
+            if let Some(out) = cores[w].emit(&xs[w], m, &mut rng).unwrap() {
+                in_flight.push(out);
+            }
+            if !in_flight.is_empty() && rng.bernoulli(0.6) {
+                let k = rng.below(in_flight.len() as u64) as usize;
+                let out = in_flight.swap_remove(k);
+                cores[out.to]
+                    .absorb(&mut xs[out.to], out.shard, &out.payload, out.weight)
+                    .unwrap();
+            }
+            for k in 0..shards {
+                let mut total: f64 = cores.iter().map(|c| c.weights()[k].value()).sum();
+                total += in_flight
+                    .iter()
+                    .filter(|o| o.shard.index == k)
+                    .map(|o| o.weight.value())
+                    .sum::<f64>();
+                assert!((total - 1.0).abs() < 1e-9, "shard {k} mass {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn emit_respects_p_zero_and_single_worker() {
+        let x = FlatVec::zeros(4);
+        let mut rng = Rng::new(1);
+        let mut silent = core(0, 4, 4, 0.0, 1);
+        for _ in 0..100 {
+            assert!(silent.emit(&x, 4, &mut rng).unwrap().is_none());
+        }
+        let mut lonely = core(0, 1, 4, 1.0, 1);
+        assert!(lonely.emit(&x, 1, &mut rng).unwrap().is_none());
+    }
+
+    #[test]
+    fn local_step_counts_and_updates() {
+        let mut c = core(0, 2, 4, 0.5, 1);
+        let mut x = FlatVec::from_vec(vec![1.0; 4]);
+        let g = FlatVec::from_vec(vec![0.5; 4]);
+        c.local_step(&mut x, &g, 0.1, 0.0).unwrap();
+        assert_eq!(c.steps(), 1);
+        for &v in x.as_slice() {
+            assert!((v - 0.95).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn absorb_rejects_foreign_shard_geometry() {
+        let mut c = core(0, 2, 8, 0.5, 2);
+        let mut x = FlatVec::zeros(8);
+        // Wrong shard count entirely.
+        let bad = Shard { index: 5, num_shards: 6, offset: 0, len: 1 };
+        let payload = FlatVec::zeros(1);
+        assert!(c.absorb(&mut x, bad, &payload, SumWeight::from_value(0.1)).is_err());
+        // Right count, wrong cut: plan.shard(1) is offset 4, len 4.
+        let forged = Shard { index: 1, num_shards: 2, offset: 0, len: 2 };
+        let payload = FlatVec::zeros(2);
+        assert!(c.absorb(&mut x, forged, &payload, SumWeight::from_value(0.1)).is_err());
+        // The genuine descriptor is accepted.
+        let good = c.plan().shard(1);
+        let payload = FlatVec::zeros(good.len);
+        assert!(c.absorb(&mut x, good, &payload, SumWeight::from_value(0.1)).is_ok());
+    }
+
+    #[test]
+    fn emit_to_rejects_dim_mismatch() {
+        let mut c = core(0, 2, 8, 1.0, 2);
+        let x = FlatVec::zeros(5);
+        assert!(c.emit_to(&x, 1).is_err());
+    }
+}

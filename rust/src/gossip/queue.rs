@@ -139,11 +139,17 @@ fn oldest_compatible_pair(deque: &VecDeque<Message>) -> Option<(usize, usize)> {
 /// Fold message `a` into message `b` preserving total weight:
 /// the combined payload is the sum-weight blend of the two payloads.
 /// Both messages must cover the same shard.
+///
+/// When the queue is the payload's sole owner — the common case once the
+/// sender has dropped its snapshot — the blend runs *in place* on `a`'s
+/// buffer (`Arc::try_unwrap`); only a still-shared payload is cloned, so
+/// another holder of the snapshot never observes the fold.
 fn coalesce(a: Message, b: Message) -> Message {
     debug_assert_eq!(a.shard.key(), b.shard.key(), "coalescing across shards");
     let w_a = a.weight.value();
     let w_b = b.weight.value();
-    let mut blended: FlatVec = (*a.params).clone();
+    let mut blended: FlatVec =
+        std::sync::Arc::try_unwrap(a.params).unwrap_or_else(|shared| (*shared).clone());
     // blended <- (w_a * a + w_b * b) / (w_a + w_b)
     blended
         .mix_from(&b.params, w_a, w_b)
@@ -342,6 +348,37 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn coalesce_reuses_a_uniquely_owned_payload_buffer() {
+        // Sole owner: the fold blends into `a`'s existing buffer instead
+        // of cloning a full vector — the heap allocation survives the fold.
+        let a = msg(2.0, 0.25, 0);
+        let ptr = a.params.as_slice().as_ptr();
+        let b = msg(6.0, 0.25, 1);
+        let c = coalesce(a, b);
+        assert!((c.params.as_slice()[0] - 4.0).abs() < 1e-6);
+        assert_eq!(c.params.as_slice().as_ptr(), ptr, "expected in-place blend");
+    }
+
+    #[test]
+    fn coalesce_never_mutates_a_shared_snapshot() {
+        // A sender (or a second queue) still holding the snapshot must not
+        // see the fold: the shared path clones.
+        let shared = Arc::new(FlatVec::from_vec(vec![2.0; 8]));
+        let a = Message::new(shared.clone(), SumWeight::from_value(0.25), 0, 0);
+        let b = msg(6.0, 0.25, 1);
+        let q = MessageQueue::bounded(2);
+        q.push(a);
+        q.push(b);
+        q.push(msg(1.0, 0.5, 2)); // overflow folds the two oldest
+        assert_eq!(q.stats().coalesced, 1);
+        for &v in shared.as_slice() {
+            assert_eq!(v, 2.0, "shared snapshot mutated by coalescing");
+        }
+        let total_w: f64 = q.drain().iter().map(|m| m.weight.value()).sum();
+        assert!((total_w - 1.0).abs() < 1e-12);
     }
 
     #[test]

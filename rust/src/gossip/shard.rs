@@ -57,8 +57,10 @@ pub struct ShardPlan {
 impl ShardPlan {
     pub fn new(dim: usize, num_shards: usize) -> Self {
         assert!(num_shards >= 1, "need at least one shard");
+        // The trivial 1-shard plan is the whole vector and is valid for
+        // any dimension (including the degenerate empty model).
         assert!(
-            dim >= num_shards,
+            num_shards == 1 || dim >= num_shards,
             "cannot cut {dim} coordinates into {num_shards} shards"
         );
         ShardPlan { dim, num_shards }
@@ -109,6 +111,9 @@ mod tests {
     fn plan_of_one_shard_is_full_vector() {
         let p = ShardPlan::new(17, 1);
         assert_eq!(p.shard(0), Shard::full(17));
+        // Degenerate but legal: the 1-shard plan over an empty vector.
+        let empty = ShardPlan::new(0, 1);
+        assert_eq!(empty.shard(0), Shard::full(0));
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::path::Path;
 
 use crate::data::{BatchSampler, SyntheticCifar};
 use crate::error::Result;
-use crate::metrics::CsvWriter;
+use crate::metrics::{ema_series, CsvWriter};
 use crate::runtime::{ModelRuntime, PjrtSource};
 use crate::sim::{DesEngine, DesStrategy, TimeModel};
 use crate::strategies::grad::{GradSource, QuadraticSource};
@@ -84,20 +84,6 @@ impl WallClockSeries {
     }
 }
 
-fn ema(points: &[(f64, f64)], beta: f64) -> Vec<(f64, f64)> {
-    let mut out = Vec::with_capacity(points.len());
-    let mut acc = None;
-    for &(t, v) in points {
-        let next = match acc {
-            None => v,
-            Some(prev) => beta * prev + (1.0 - beta) * v,
-        };
-        out.push((t, next));
-        acc = Some(next);
-    }
-    out
-}
-
 fn run_strategy(cfg: &Fig2Config, strategy: DesStrategy, label: &str) -> Result<WallClockSeries> {
     let run_with = |grad: &mut dyn GradSource, init: &FlatVec| -> Result<WallClockSeries> {
         let mut eng = DesEngine::new(
@@ -113,7 +99,7 @@ fn run_strategy(cfg: &Fig2Config, strategy: DesStrategy, label: &str) -> Result<
         let rep = eng.report();
         Ok(WallClockSeries {
             label: label.to_string(),
-            points: ema(&rep.trace, cfg.ema_beta),
+            points: ema_series(&rep.trace, cfg.ema_beta),
             steps: rep.steps,
             messages: rep.messages,
             bytes: rep.bytes,

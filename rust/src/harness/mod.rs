@@ -8,9 +8,12 @@
 //! * [`fig3`] — validation accuracy vs iterations, PerSyn vs GoSGD.
 //! * [`fig4`] — consensus error ε(t) under pure-noise updates.
 //! * [`variance`] — Appendix A: gradient-estimator error ∝ 1/N.
+//! * [`scenarios`] — beyond the paper: GoSGD vs the barrier baseline
+//!   under heterogeneous compute and crash/rejoin worker churn (DES).
 
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod scenarios;
 pub mod variance;

@@ -1,0 +1,339 @@
+//! Scenario-diversity harness: GoSGD under heterogeneous compute and
+//! worker churn (DES).
+//!
+//! The paper's evaluation assumes a homogeneous, reliable cluster.  Real
+//! fleets are neither: machines differ in speed (mixed hardware
+//! generations, co-tenancy) and workers crash and come back.  This
+//! harness runs the gossip protocol — and the PerSyn barrier baseline —
+//! through the discrete-event simulator under four scenarios:
+//!
+//! * `uniform` — the paper's setting (baseline).
+//! * `hetero`  — persistent per-worker compute multipliers
+//!   ([`ScenarioModel::compute_scale`]); one slow machine, everyone else
+//!   unaffected under gossip, everyone dragged down under a barrier.
+//! * `churn`   — crash/rejoin worker churn
+//!   ([`ScenarioModel::crash_mtbf`] / [`ScenarioModel::rejoin_mttr`]);
+//!   mailboxes buffer through downtime, weight mass is conserved.
+//! * `hetero_churn` — both at once.
+//!
+//! ```text
+//! cargo run --release -- figure --figure scenarios \
+//!     --p 0.05 --hetero 1,1,1,1,1,1,1,4 --mtbf 20 --mttr 5 \
+//!     --horizon 120 --out results/scenarios.csv
+//! ```
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::metrics::{ema_series, CsvWriter};
+use crate::sim::{DesEngine, DesStrategy, ScenarioModel, TimeModel};
+use crate::strategies::grad::QuadraticSource;
+use crate::tensor::FlatVec;
+
+/// Configuration for the scenario comparison.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    pub workers: usize,
+    /// Exchange probability for the gossip series.
+    pub p: f64,
+    /// Gossip shards per exchange (1 = whole-vector messages).
+    pub shards: usize,
+    /// Quadratic-backend dimension and gradient noise.
+    pub dim: usize,
+    pub sigma: f32,
+    /// Simulated horizon in seconds.
+    pub horizon_secs: f64,
+    pub time_model: TimeModel,
+    /// Compute multipliers for the hetero series, cycled over the workers
+    /// (`w % len`, matching [`ScenarioModel::scale`]).  Empty = the
+    /// default shape: every worker at 1.0 except one 4× straggler.
+    pub compute_scale: Vec<f64>,
+    /// Mean seconds between crashes / mean downtime for the churn series.
+    pub crash_mtbf: f64,
+    pub rejoin_mttr: f64,
+    pub seed: u64,
+    pub eta: f32,
+    pub weight_decay: f32,
+    /// EMA smoothing for the loss traces.
+    pub ema_beta: f64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            workers: 8,
+            p: 0.05,
+            shards: 1,
+            dim: 512,
+            sigma: 0.2,
+            horizon_secs: 120.0,
+            time_model: TimeModel::paper_like(),
+            // Empty = derive the default shape (one 4× straggler).
+            compute_scale: Vec::new(),
+            crash_mtbf: 20.0,
+            rejoin_mttr: 5.0,
+            seed: 0,
+            eta: 1.0,
+            weight_decay: 0.0,
+            ema_beta: 0.95,
+        }
+    }
+}
+
+/// One scenario series.
+#[derive(Clone, Debug)]
+pub struct ScenarioSeries {
+    pub label: String,
+    /// `(sim_seconds, ema_loss)`.
+    pub points: Vec<(f64, f64)>,
+    pub steps: u64,
+    pub messages: u64,
+    pub bytes: u64,
+    pub blocked_secs: f64,
+    pub crashes: u64,
+    pub downtime_secs: f64,
+}
+
+fn run_one(
+    cfg: &ScenarioConfig,
+    strategy: DesStrategy,
+    scenario: ScenarioModel,
+    label: &str,
+) -> Result<ScenarioSeries> {
+    let mut grad = QuadraticSource::new(cfg.dim, cfg.sigma, cfg.seed ^ 0x5CE0);
+    let init = FlatVec::zeros(cfg.dim);
+    let mut eng = DesEngine::new(
+        strategy,
+        cfg.time_model.clone(),
+        cfg.workers,
+        &init,
+        cfg.eta,
+        cfg.weight_decay,
+        cfg.seed,
+    )?
+    .with_scenario(scenario);
+    eng.run(&mut grad, cfg.horizon_secs)?;
+    let rep = eng.report();
+    Ok(ScenarioSeries {
+        label: label.to_string(),
+        points: ema_series(&rep.trace, cfg.ema_beta),
+        steps: rep.steps,
+        messages: rep.messages,
+        bytes: rep.bytes,
+        blocked_secs: rep.blocked_secs,
+        crashes: rep.crashes,
+        downtime_secs: rep.downtime_secs,
+    })
+}
+
+/// Run the scenario grid: gossip under uniform / hetero / churn / both,
+/// plus PerSyn under uniform and hetero (the barrier pays for the
+/// straggler; churn would deadlock it, which is the point).
+pub fn run(cfg: &ScenarioConfig, out: Option<&Path>) -> Result<Vec<ScenarioSeries>> {
+    if !(cfg.p > 0.0 && cfg.p <= 1.0) {
+        // p = 0 would also saturate the PerSyn tau below into a
+        // never-syncing baseline — reject instead of comparing nonsense.
+        return Err(crate::error::Error::config(format!(
+            "scenarios needs an exchange probability in (0, 1], got {}",
+            cfg.p
+        )));
+    }
+    if !(cfg.crash_mtbf > 0.0
+        && cfg.crash_mtbf.is_finite()
+        && cfg.rejoin_mttr > 0.0
+        && cfg.rejoin_mttr.is_finite())
+    {
+        // Disabled churn would silently duplicate the baseline under a
+        // "churn" label.
+        return Err(crate::error::Error::config(format!(
+            "scenarios needs positive churn parameters (mtbf {}, mttr {})",
+            cfg.crash_mtbf, cfg.rejoin_mttr
+        )));
+    }
+    // Empty multipliers = the default shape; an explicit list keeps the
+    // cycled `w % len` semantics of `ScenarioModel::scale` but must
+    // actually slow some worker down, or the "hetero" series would be the
+    // uniform series relabeled.
+    let compute_scale = if cfg.compute_scale.is_empty() {
+        let mut v = vec![1.0; cfg.workers.saturating_sub(1)];
+        v.push(4.0);
+        v
+    } else {
+        cfg.compute_scale.clone()
+    };
+    let hetero = ScenarioModel { compute_scale, ..ScenarioModel::none() };
+    if (0..cfg.workers).all(|w| hetero.scale(w) == 1.0) {
+        return Err(crate::error::Error::config(format!(
+            "every one of the {} workers gets compute multiplier 1.0 from {:?} — \
+             the hetero series would equal the baseline",
+            cfg.workers, hetero.compute_scale
+        )));
+    }
+    let gossip = if cfg.shards > 1 {
+        DesStrategy::ShardedGoSgd { p: cfg.p, shards: cfg.shards }
+    } else {
+        DesStrategy::GoSgd { p: cfg.p }
+    };
+    let churn = ScenarioModel {
+        compute_scale: Vec::new(),
+        crash_mtbf: cfg.crash_mtbf,
+        rejoin_mttr: cfg.rejoin_mttr,
+    };
+    let both = ScenarioModel {
+        compute_scale: hetero.compute_scale.clone(),
+        crash_mtbf: cfg.crash_mtbf,
+        rejoin_mttr: cfg.rejoin_mttr,
+    };
+    let tau = (1.0 / cfg.p).round().max(1.0) as u64;
+    let series = vec![
+        run_one(cfg, gossip.clone(), ScenarioModel::none(), "gosgd_uniform")?,
+        run_one(cfg, gossip.clone(), hetero.clone(), "gosgd_hetero")?,
+        run_one(cfg, gossip.clone(), churn, "gosgd_churn")?,
+        run_one(cfg, gossip, both, "gosgd_hetero_churn")?,
+        run_one(
+            cfg,
+            DesStrategy::PerSyn { tau },
+            ScenarioModel::none(),
+            &format!("persyn_tau{tau}_uniform"),
+        )?,
+        run_one(
+            cfg,
+            DesStrategy::PerSyn { tau },
+            hetero,
+            &format!("persyn_tau{tau}_hetero"),
+        )?,
+    ];
+    if let Some(path) = out {
+        let mut csv = CsvWriter::create(path, &["series", "sim_seconds", "loss"])?;
+        for s in &series {
+            for &(t, l) in &s.points {
+                csv.write_tagged_row(&s.label, &[t, l])?;
+            }
+        }
+        csv.flush()?;
+    }
+    Ok(series)
+}
+
+/// Console table with the headline comparison.
+pub fn format_table(series: &[ScenarioSeries]) -> String {
+    let mut out = String::from(
+        "series                     steps   messages  blocked_s  crashes  downtime_s\n",
+    );
+    for s in series {
+        out.push_str(&format!(
+            "{:<25} {:>6}  {:>9}  {:>9.1}  {:>7}  {:>10.1}\n",
+            s.label, s.steps, s.messages, s.blocked_secs, s.crashes, s.downtime_secs
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ScenarioConfig {
+        ScenarioConfig {
+            dim: 64,
+            horizon_secs: 50.0,
+            p: 0.1,
+            crash_mtbf: 8.0,
+            rejoin_mttr: 3.0,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn scenario_grid_runs_and_shows_the_expected_shape() {
+        let cfg = small_cfg();
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 6);
+        let by_label = |l: &str| {
+            series
+                .iter()
+                .find(|s| s.label.contains(l))
+                .unwrap_or_else(|| panic!("missing series {l}"))
+        };
+        let uniform = by_label("gosgd_uniform");
+        let hetero = by_label("gosgd_hetero");
+        let churn = by_label("gosgd_churn");
+        // Gossip never blocks, in any scenario.
+        assert_eq!(uniform.blocked_secs, 0.0);
+        assert_eq!(hetero.blocked_secs, 0.0);
+        // The straggler only costs its own steps.
+        assert!(hetero.steps < uniform.steps, "{} vs {}", hetero.steps, uniform.steps);
+        // Churn crashes workers and costs downtime, but training goes on.
+        assert!(churn.crashes > 0);
+        assert!(churn.downtime_secs > 0.0);
+        assert!(churn.steps < uniform.steps);
+        assert!(churn.steps > 0);
+        // The barrier baseline pays for the persistent straggler.
+        let persyn_uniform = by_label("persyn_tau10_uniform");
+        let persyn_hetero = by_label("persyn_tau10_hetero");
+        assert!(
+            persyn_hetero.blocked_secs > persyn_uniform.blocked_secs,
+            "persyn hetero {} vs uniform {}",
+            persyn_hetero.blocked_secs,
+            persyn_uniform.blocked_secs
+        );
+        // Gossip keeps descending under the combined scenario.
+        let both = by_label("gosgd_hetero_churn");
+        let early: f64 = both.points.iter().take(30).map(|(_, l)| l).sum::<f64>() / 30.0;
+        let late: f64 = both.points[both.points.len() - 30..]
+            .iter()
+            .map(|(_, l)| l)
+            .sum::<f64>()
+            / 30.0;
+        assert!(late < early, "{early} -> {late}");
+    }
+
+    #[test]
+    fn sharded_gossip_scenarios_run_too() {
+        let cfg = ScenarioConfig { shards: 4, ..small_cfg() };
+        let series = run(&cfg, None).unwrap();
+        assert!(series[0].messages > 0);
+        assert!(series.iter().all(|s| s.steps > 0));
+    }
+
+    #[test]
+    fn degenerate_knobs_are_config_errors() {
+        // p = 0 would saturate the PerSyn tau into a never-syncing run.
+        let cfg = ScenarioConfig { p: 0.0, ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+        // A multiplier list whose reachable entries are all 1.0 would
+        // silently relabel the uniform series as "hetero".
+        let cfg = ScenarioConfig {
+            workers: 4,
+            compute_scale: vec![1.0, 1.0],
+            ..small_cfg()
+        };
+        assert!(run(&cfg, None).is_err());
+        // Disabled churn would duplicate the baseline under a churn label.
+        let cfg = ScenarioConfig { crash_mtbf: 0.0, ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn default_hetero_shape_adapts_to_the_worker_count() {
+        // Empty compute_scale derives one straggler regardless of fleet
+        // size — the CLI default works for any --workers.
+        let cfg = ScenarioConfig { workers: 4, horizon_secs: 20.0, ..small_cfg() };
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 6);
+        assert!(series.iter().all(|s| s.steps > 0));
+    }
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join("gosgd_scenarios_test");
+        let path = dir.join("scenarios.csv");
+        let cfg = ScenarioConfig { horizon_secs: 10.0, dim: 32, ..small_cfg() };
+        run(&cfg, Some(&path)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,sim_seconds,loss\n"));
+        assert!(text.lines().count() > 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -26,12 +26,15 @@
 //! * [`framework`] — section 3's communication-matrix formalism; every
 //!   strategy can be *compiled* to its `K^(t)` sequence and cross-checked.
 //! * [`gossip`] — sum-weight protocol substrate: weights, messages, queues,
-//!   and the sharded-exchange extension (`gossip::shard`) that ships one
-//!   chunk of the vector per gossip event for large models.
+//!   the sharded-exchange extension (`gossip::shard`) that ships one
+//!   chunk of the vector per gossip event for large models, and the
+//!   runtime-agnostic protocol core (`gossip::protocol`) all three
+//!   runtimes drive.
 //! * [`worker`] / [`coordinator`] — the threaded runtime.
 //! * [`runtime`] — PJRT executor for the AOT artifacts.
 //! * [`sim`] — discrete-event simulator used for the wall-clock experiment
-//!   (paper Fig. 2) and the consensus experiment (Fig. 4).
+//!   (paper Fig. 2), the consensus experiment (Fig. 4), and the
+//!   straggler/churn scenario grid (`sim::ScenarioModel`).
 //! * [`harness`] — one module per paper figure/table; regenerates the series.
 
 pub mod bench;

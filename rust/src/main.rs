@@ -21,7 +21,7 @@ use gosgd::config::{RunConfig, StrategyKind};
 use gosgd::coordinator::Coordinator;
 use gosgd::error::Result;
 use gosgd::gossip::PeerSelector;
-use gosgd::harness::{fig1, fig2, fig3, fig4, variance};
+use gosgd::harness::{fig1, fig2, fig3, fig4, scenarios, variance};
 use gosgd::model::Manifest;
 use gosgd::optim::LrSchedule;
 use gosgd::util::cli::Args;
@@ -74,24 +74,23 @@ fn train_args() -> Args {
 }
 
 fn parse_run_config(a: &Args) -> Result<RunConfig> {
-    let mut cfg = RunConfig::default();
-    cfg.artifacts_dir = a.get("artifacts")?.into();
-    cfg.model = a.get("model")?.to_string();
-    cfg.workers = a.get_usize("workers")?;
-    cfg.steps = a.get_u64("steps")?;
-    cfg.strategy = StrategyKind::parse(a.get("strategy")?)?;
-    cfg.lr = LrSchedule::parse(a.get("lr")?)
-        .ok_or_else(|| gosgd::Error::cli("bad --lr"))?;
-    cfg.weight_decay = a.get_f64("weight-decay")? as f32;
-    cfg.seed = a.get_u64("seed")?;
-    cfg.peer = PeerSelector::parse(a.get("peer")?)
-        .ok_or_else(|| gosgd::Error::cli("bad --peer"))?;
-    cfg.eval_every = a.get_u64("eval-every")?;
-    cfg.eval_batches = a.get_u64("eval-batches")?;
-    cfg.data_noise = a.get_f64("data-noise")? as f32;
-    cfg.save_checkpoint = non_empty(a.get("save-checkpoint")?);
-    cfg.resume_from = non_empty(a.get("resume-from")?);
-    Ok(cfg)
+    Ok(RunConfig {
+        artifacts_dir: a.get("artifacts")?.into(),
+        model: a.get("model")?.to_string(),
+        workers: a.get_usize("workers")?,
+        steps: a.get_u64("steps")?,
+        strategy: StrategyKind::parse(a.get("strategy")?)?,
+        lr: LrSchedule::parse(a.get("lr")?).ok_or_else(|| gosgd::Error::cli("bad --lr"))?,
+        weight_decay: a.get_f64("weight-decay")? as f32,
+        seed: a.get_u64("seed")?,
+        peer: PeerSelector::parse(a.get("peer")?)?,
+        eval_every: a.get_u64("eval-every")?,
+        eval_batches: a.get_u64("eval-batches")?,
+        data_noise: a.get_f64("data-noise")? as f32,
+        save_checkpoint: non_empty(a.get("save-checkpoint")?),
+        resume_from: non_empty(a.get("resume-from")?),
+        ..RunConfig::default()
+    })
 }
 
 fn cmd_train(argv: Vec<String>) -> Result<()> {
@@ -140,16 +139,19 @@ fn cmd_consensus(argv: Vec<String>) -> Result<()> {
 
 fn cmd_figure(argv: Vec<String>) -> Result<()> {
     let a = Args::new("gosgd figure", "regenerate a paper figure's series")
-        .opt("figure", "fig1", "fig1 | fig2 | fig3")
+        .opt("figure", "fig1", "fig1 | fig2 | fig3 | scenarios")
         .opt("artifacts", "artifacts", "artifact directory root")
         .opt("model", "tiny", "model variant")
         .opt("workers", "8", "number of workers")
         .opt("iterations", "150", "worker iterations (fig1/fig3)")
         .opt("ps", "0.01,0.4", "exchange probabilities (fig1/fig3)")
-        .opt("p", "0.02", "exchange probability (fig2)")
-        .opt("shards", "1", "gossip shards per exchange (fig2; > 1 adds a sharded series)")
-        .opt("horizon", "120", "simulated seconds (fig2)")
+        .opt("p", "0.02", "exchange probability (fig2/scenarios)")
+        .opt("shards", "1", "gossip shards per exchange (fig2/scenarios)")
+        .opt("horizon", "120", "simulated seconds (fig2/scenarios)")
         .opt("backend", "quadratic", "fig2 gradients: quadratic | pjrt")
+        .opt("hetero", "", "compute multipliers, cycled over workers; empty = one 4x straggler (scenarios)")
+        .opt("mtbf", "20", "mean seconds between worker crashes (scenarios)")
+        .opt("mttr", "5", "mean downtime before rejoin (scenarios)")
         .opt("seed", "0", "RNG seed")
         .opt("out", "", "CSV output path")
         .parse_from(argv)?;
@@ -205,6 +207,24 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
             };
             let series = fig3::run(&cfg, out.as_deref())?;
             println!("{}", fig3::format_table(&series));
+        }
+        "scenarios" => {
+            let cfg = scenarios::ScenarioConfig {
+                workers: a.get_usize("workers")?,
+                p: a.get_f64("p")?,
+                shards: a.get_usize("shards")?,
+                horizon_secs: a.get_f64("horizon")?,
+                compute_scale: match a.get("hetero")? {
+                    "" => Vec::new(),
+                    list => parse_list(list)?,
+                },
+                crash_mtbf: a.get_f64("mtbf")?,
+                rejoin_mttr: a.get_f64("mttr")?,
+                seed: a.get_u64("seed")?,
+                ..Default::default()
+            };
+            let series = scenarios::run(&cfg, out.as_deref())?;
+            println!("{}", scenarios::format_table(&series));
         }
         other => return Err(gosgd::Error::cli(format!("unknown figure {other}"))),
     }

@@ -104,6 +104,23 @@ pub fn consensus_error(stacked: &Stacked) -> Result<f64> {
     stacked.consensus_error()
 }
 
+/// EMA smoothing over a `(time, value)` trace, preserving the time axis —
+/// the pair-shaped sibling of [`LossCurve::ema`], shared by the DES
+/// harnesses (fig2, scenarios).
+pub fn ema_series(points: &[(f64, f64)], beta: f64) -> Vec<(f64, f64)> {
+    let mut out = Vec::with_capacity(points.len());
+    let mut acc = None;
+    for &(t, v) in points {
+        let next = match acc {
+            None => v,
+            Some(prev) => beta * prev + (1.0 - beta) * v,
+        };
+        out.push((t, next));
+        acc = Some(next);
+    }
+    out
+}
+
 /// Simple wall-clock stopwatch for run phases.
 pub struct Stopwatch {
     start: std::time::Instant,

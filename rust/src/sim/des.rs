@@ -3,12 +3,20 @@
 //! Time is simulated; gradients are real.  Every worker alternates
 //! compute and (strategy-dependent) communication; the event queue orders
 //! everything by simulated seconds.
+//!
+//! All gossip state transitions — blend, weight halving, shard cursor —
+//! are delegated to the per-worker
+//! [`ProtocolCore`](crate::gossip::ProtocolCore); this module owns only
+//! what is genuinely simulation: the event heap, clocks, the latency
+//! model, barrier bookkeeping for the synchronous baselines, and the
+//! scenario-diversity knobs ([`ScenarioModel`]: heterogeneous per-worker
+//! compute speeds and crash/rejoin worker churn).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::error::Result;
-use crate::gossip::{wire_bytes_for, Shard, ShardPlan, SumWeight};
+use crate::error::{Error, Result};
+use crate::gossip::{wire_bytes_for, PeerSelector, ProtocolCore, Shard, SumWeight};
 use crate::strategies::grad::GradSource;
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -64,6 +72,44 @@ impl TimeModel {
     }
 }
 
+/// Scenario-diversity knobs layered on top of the [`TimeModel`]:
+/// *persistent* heterogeneity (slow machines, not transient jitter) and
+/// worker churn.  Both are things a decentralized protocol should shrug
+/// off and a barrier-based one cannot — the `scenarios` harness
+/// quantifies exactly that.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioModel {
+    /// Per-worker compute-time multipliers; worker `w` uses entry
+    /// `w % len` (empty = homogeneous, all 1.0).  `[1, 1, 1, 4]` makes
+    /// every fourth worker a persistent 4× straggler.
+    pub compute_scale: Vec<f64>,
+    /// Mean simulated seconds between crashes per worker (exponential);
+    /// 0 disables churn.
+    pub crash_mtbf: f64,
+    /// Mean downtime before a crashed worker rejoins (exponential).
+    pub rejoin_mttr: f64,
+}
+
+impl ScenarioModel {
+    /// The neutral scenario: homogeneous compute, no churn.
+    pub fn none() -> Self {
+        ScenarioModel::default()
+    }
+
+    /// Compute multiplier for worker `w`.
+    pub fn scale(&self, w: usize) -> f64 {
+        if self.compute_scale.is_empty() {
+            1.0
+        } else {
+            self.compute_scale[w % self.compute_scale.len()]
+        }
+    }
+
+    pub fn churn_enabled(&self) -> bool {
+        self.crash_mtbf > 0.0
+    }
+}
+
 /// Strategy semantics under simulated time.
 #[derive(Clone, Debug)]
 pub enum DesStrategy {
@@ -99,16 +145,44 @@ impl DesStrategy {
             DesStrategy::Local => "local".into(),
         }
     }
+
+    /// Gossip (fire-and-forget) strategies tolerate churn; the barrier
+    /// strategies would deadlock on a crashed member without membership
+    /// logic the paper's baselines don't have.
+    fn supports_churn(&self) -> bool {
+        matches!(
+            self,
+            DesStrategy::GoSgd { .. } | DesStrategy::ShardedGoSgd { .. } | DesStrategy::Local
+        )
+    }
+
+    /// The protocol core's exchange configuration for this strategy
+    /// (`p = 0` for the non-core strategies — their cores stay silent).
+    fn core_config(&self) -> (f64, usize) {
+        match self {
+            DesStrategy::GoSgd { p } => (*p, 1),
+            DesStrategy::ShardedGoSgd { p, shards } => (*p, *shards),
+            _ => (0.0, 1),
+        }
+    }
 }
 
 /// Priority-queue event.
 #[derive(Debug)]
 enum EventKind {
-    /// Worker finished a compute step (or resumed from a block).
-    Wake(usize),
+    /// Worker finished a compute step (or resumed from a block).  The
+    /// epoch stamps the wake stream it belongs to: a crash bumps the
+    /// worker's epoch, invalidating wakes scheduled before it died.
+    Wake { w: usize, epoch: u32 },
     /// A gossip message lands in worker `to`'s mailbox; `shard` records
     /// which slice of the vector `params` covers.
     Deliver { to: usize, params: FlatVec, weight: f64, shard: Shard },
+    /// Worker `w` crashes: it stops computing, its state freezes, its
+    /// mailbox keeps accumulating (peers fire-and-forget as usual).
+    Crash(usize),
+    /// A crashed worker comes back with its preserved state (warm restart
+    /// from local checkpoint) and drains its backlog at the next wake.
+    Rejoin(usize),
 }
 
 struct Event {
@@ -151,24 +225,35 @@ pub struct DesReport {
     pub blocked_secs: f64,
     /// Total local gradient steps executed.
     pub steps: u64,
+    /// Crash events that fired (churn scenarios).
+    pub crashes: u64,
+    /// Total simulated seconds workers spent offline.
+    pub downtime_secs: f64,
     /// Final simulated time.
     pub end_time: f64,
 }
 
 struct WorkerState {
     x: FlatVec,
-    /// One sum weight per shard (a single entry when unsharded).
-    weights: Vec<SumWeight>,
+    /// The worker's protocol state machine (per-shard sum weights, shard
+    /// cursor, exchange policy, local step counter).
+    core: ProtocolCore,
     mailbox: Vec<(Shard, FlatVec, f64)>,
-    local_step: u64,
-    /// PerSyn: parked at the barrier.
+    /// PerSyn/EASGD: parked at the barrier.
     at_barrier: bool,
+    /// Churn: offline workers swallow wakes and let mail accumulate.
+    alive: bool,
+    /// When the current outage began (meaningful only while `!alive`);
+    /// downtime is accounted on rejoin / at the horizon, so the report
+    /// never counts offline seconds that fall outside the run.
+    down_since: f64,
 }
 
 /// The discrete-event engine.
 pub struct DesEngine {
     strategy: DesStrategy,
     time_model: TimeModel,
+    scenario: ScenarioModel,
     workers: Vec<WorkerState>,
     master: FlatVec,
 
@@ -178,12 +263,13 @@ pub struct DesEngine {
     /// (earliest rendezvous point) and handshake delays owed at next wake.
     busy_until: Vec<f64>,
     pending_delay: Vec<f64>,
-    /// Sharded gossip: the vector partition and per-worker round-robin
-    /// cursors (plan has one shard when unsharded).
-    plan: ShardPlan,
-    next_shard: Vec<usize>,
+    /// Per-worker wake-stream epoch (bumped on crash so stale wakes die).
+    wake_epoch: Vec<u32>,
     events: BinaryHeap<Event>,
     seq: u64,
+    /// Initial wakes (and crash schedules) are laid down lazily on the
+    /// first `run` call so `with_scenario` can still adjust the model.
+    started: bool,
     eta: f32,
     weight_decay: f32,
     rng: Rng,
@@ -206,55 +292,53 @@ impl DesEngine {
         seed: u64,
     ) -> Result<Self> {
         assert!(workers >= 2);
-        let shards = match &strategy {
-            DesStrategy::ShardedGoSgd { shards, .. } => {
-                if *shards == 0 {
-                    return Err(crate::error::Error::config("shards must be >= 1"));
-                }
-                if *shards > init.len() {
-                    return Err(crate::error::Error::config(format!(
-                        "cannot cut {} parameters into {shards} shards",
-                        init.len()
-                    )));
-                }
-                *shards
-            }
-            _ => 1,
-        };
-        let plan = ShardPlan::new(init.len(), shards);
+        let (p, shards) = strategy.core_config();
         let ws = (0..workers)
-            .map(|_| WorkerState {
-                x: init.clone(),
-                weights: (0..shards).map(|_| SumWeight::init(workers)).collect(),
-                mailbox: Vec::new(),
-                local_step: 0,
-                at_barrier: false,
+            .map(|w| {
+                Ok(WorkerState {
+                    x: init.clone(),
+                    core: ProtocolCore::new(
+                        w,
+                        workers,
+                        init.len(),
+                        p,
+                        PeerSelector::Uniform,
+                        shards,
+                    )?,
+                    mailbox: Vec::new(),
+                    at_barrier: false,
+                    alive: true,
+                    down_since: 0.0,
+                })
             })
-            .collect();
-        let mut eng = DesEngine {
+            .collect::<Result<Vec<WorkerState>>>()?;
+        Ok(DesEngine {
             strategy,
             time_model,
+            scenario: ScenarioModel::none(),
             workers: ws,
             master: init.clone(),
             barrier_arrivals: Vec::new(),
             busy_until: vec![0.0; workers],
             pending_delay: vec![0.0; workers],
-            plan,
-            next_shard: (0..workers).map(|w| w % shards).collect(),
+            wake_epoch: vec![0; workers],
             events: BinaryHeap::new(),
             seq: 0,
+            started: false,
             eta,
             weight_decay,
             rng: Rng::new(seed),
             grad_buf: FlatVec::zeros(init.len()),
             report: DesReport::default(),
-        };
-        // Stagger initial wakes slightly so workers don't tick in lockstep.
-        for w in 0..workers {
-            let dt = eng.time_model.draw_compute(&mut eng.rng);
-            eng.schedule(dt, EventKind::Wake(w));
-        }
-        Ok(eng)
+        })
+    }
+
+    /// Attach a scenario (heterogeneous compute and/or churn).  Must be
+    /// called before the first [`DesEngine::run`].
+    pub fn with_scenario(mut self, scenario: ScenarioModel) -> Self {
+        assert!(!self.started, "with_scenario must precede run");
+        self.scenario = scenario;
+        self
     }
 
     fn schedule(&mut self, at: f64, kind: EventKind) {
@@ -262,22 +346,132 @@ impl DesEngine {
         self.events.push(Event { time: at, seq: self.seq, kind });
     }
 
+    /// Schedule a wake stamped with `w`'s current epoch.
+    fn schedule_wake(&mut self, at: f64, w: usize) {
+        let epoch = self.wake_epoch[w];
+        self.schedule(at, EventKind::Wake { w, epoch });
+    }
+
+    /// Per-worker compute draw: base jittered time × the scenario's
+    /// persistent multiplier.
+    fn draw_compute_for(&mut self, w: usize) -> f64 {
+        self.time_model.draw_compute(&mut self.rng) * self.scenario.scale(w)
+    }
+
+    /// Exponential deviate with the given mean (churn inter-arrivals).
+    fn draw_exp(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.rng.f64()).ln()
+    }
+
+    /// Lay down the initial wake (and crash) schedule; validates the
+    /// scenario against the strategy.
+    fn start(&mut self) -> Result<()> {
+        if self.started {
+            return Ok(());
+        }
+        for s in &self.scenario.compute_scale {
+            if !(s.is_finite() && *s > 0.0) {
+                return Err(Error::config(format!(
+                    "compute multipliers must be positive and finite, got {s}"
+                )));
+            }
+        }
+        if self.scenario.churn_enabled() {
+            if !self.strategy.supports_churn() {
+                return Err(Error::config(format!(
+                    "worker churn requires a decentralized strategy, not {}",
+                    self.strategy.name()
+                )));
+            }
+            if !self.scenario.crash_mtbf.is_finite() {
+                return Err(Error::config(
+                    "crash_mtbf must be finite when churn is enabled",
+                ));
+            }
+            if !(self.scenario.rejoin_mttr > 0.0 && self.scenario.rejoin_mttr.is_finite()) {
+                return Err(Error::config("rejoin_mttr must be > 0 when churn is enabled"));
+            }
+        }
+        // Only latch after validation: a rejected scenario must keep
+        // rejecting on a retried run, not fall through to an empty heap.
+        self.started = true;
+        // Stagger initial wakes slightly so workers don't tick in lockstep.
+        for w in 0..self.workers.len() {
+            let dt = self.draw_compute_for(w);
+            self.schedule_wake(dt, w);
+        }
+        if self.scenario.churn_enabled() {
+            for w in 0..self.workers.len() {
+                let at = self.draw_exp(self.scenario.crash_mtbf);
+                self.schedule(at, EventKind::Crash(w));
+            }
+        }
+        Ok(())
+    }
+
     /// Run until simulated `horizon` seconds (or the event queue drains).
     pub fn run(&mut self, grad: &mut dyn GradSource, horizon: f64) -> Result<&DesReport> {
+        self.start()?;
         while let Some(ev) = self.events.pop() {
             if ev.time > horizon {
+                // Leave the event for a later run with a longer horizon —
+                // in-flight deliveries keep their weight mass.
+                self.events.push(ev);
                 self.report.end_time = horizon;
                 break;
             }
             self.report.end_time = ev.time;
             match ev.kind {
                 EventKind::Deliver { to, params, weight, shard } => {
+                    // Delivered even while `to` is down: the mailbox
+                    // accumulates and the backlog blends at rejoin.
                     self.workers[to].mailbox.push((shard, params, weight));
                 }
-                EventKind::Wake(w) => self.wake(w, ev.time, grad)?,
+                EventKind::Wake { w, epoch } => {
+                    if self.workers[w].alive && epoch == self.wake_epoch[w] {
+                        self.wake(w, ev.time, grad)?;
+                    }
+                }
+                EventKind::Crash(w) => self.crash(w, ev.time),
+                EventKind::Rejoin(w) => self.rejoin(w, ev.time),
+            }
+        }
+        // Account the in-progress outages up to the point the run stopped
+        // (resetting `down_since` keeps a longer-horizon resume exact).
+        let end = self.report.end_time;
+        for ws in &mut self.workers {
+            if !ws.alive && ws.down_since < end {
+                self.report.downtime_secs += end - ws.down_since;
+                ws.down_since = end;
             }
         }
         Ok(&self.report)
+    }
+
+    fn crash(&mut self, w: usize, now: f64) {
+        // A worker parked at a barrier never crashes in this model (churn
+        // is gated to the decentralized strategies, which have no barrier).
+        if !self.workers[w].alive || self.workers[w].at_barrier {
+            return;
+        }
+        self.workers[w].alive = false;
+        self.workers[w].down_since = now;
+        // Invalidate the in-flight wake of the interrupted compute step.
+        self.wake_epoch[w] = self.wake_epoch[w].wrapping_add(1);
+        self.report.crashes += 1;
+        let down = self.draw_exp(self.scenario.rejoin_mttr);
+        self.schedule(now + down, EventKind::Rejoin(w));
+    }
+
+    fn rejoin(&mut self, w: usize, now: f64) {
+        self.report.downtime_secs += now - self.workers[w].down_since;
+        self.workers[w].alive = true;
+        let dt = self.draw_compute_for(w);
+        self.busy_until[w] = now + dt;
+        self.schedule_wake(now + dt, w);
+        // Next failure of this worker.
+        let next = self.draw_exp(self.scenario.crash_mtbf);
+        self.schedule(now + next, EventKind::Crash(w));
     }
 
     fn wake(&mut self, w: usize, now: f64, grad: &mut dyn GradSource) -> Result<()> {
@@ -287,87 +481,67 @@ impl DesEngine {
             let d = std::mem::take(&mut self.pending_delay[w]);
             self.report.blocked_secs += d;
             self.busy_until[w] = now + d;
-            self.schedule(now + d, EventKind::Wake(w));
+            self.schedule_wake(now + d, w);
             return Ok(());
         }
-        // 1. Process pending messages (GoSGD ProcessMessages): each blends
-        //    its shard range against that shard's sum weight.
+        // 1. Process pending messages (GoSGD ProcessMessages): the core
+        //    blends each shard range against that shard's sum weight.
         let pending = std::mem::take(&mut self.workers[w].mailbox);
-        for (shard, params, weight) in pending {
-            let t =
-                self.workers[w].weights[shard.index].absorb(SumWeight::from_value(weight));
-            if shard.is_full() {
-                self.workers[w].x.mix_from(&params, 1.0 - t, t)?;
-            } else {
-                self.workers[w].x.mix_range_from(&params, shard.offset, 1.0 - t, t)?;
+        {
+            let ws = &mut self.workers[w];
+            for (shard, params, weight) in pending {
+                ws.core.absorb(&mut ws.x, shard, &params, SumWeight::from_value(weight))?;
             }
         }
 
-        // 2. Local gradient step.
-        let step = self.workers[w].local_step;
-        let loss = grad.grad(w + 1, &self.workers[w].x, step, &mut self.grad_buf)?;
-        self.workers[w]
-            .x
-            .sgd_step(&self.grad_buf, self.eta, self.weight_decay)?;
-        self.workers[w].local_step += 1;
+        // 2. Local gradient step (through the core's step transition).
+        let loss = {
+            let ws = &mut self.workers[w];
+            let step = ws.core.steps();
+            let loss = grad.grad(w + 1, &ws.x, step, &mut self.grad_buf)?;
+            ws.core.local_step(&mut ws.x, &self.grad_buf, self.eta, self.weight_decay)?;
+            loss
+        };
         self.report.steps += 1;
         self.report.trace.push((now, loss));
 
         // 3. Strategy-specific communication + next wake.
         match self.strategy.clone() {
             DesStrategy::Local => {
-                let dt = self.time_model.draw_compute(&mut self.rng);
-                self.schedule(now + dt, EventKind::Wake(w));
+                let dt = self.draw_compute_for(w);
+                self.schedule_wake(now + dt, w);
             }
-            DesStrategy::GoSgd { p } => {
-                if self.rng.bernoulli(p) {
-                    let m = self.workers.len();
-                    let r = self.rng.peer(m, w);
-                    let shipped = self.workers[w].weights[0].halve_for_send();
-                    let latency = self.time_model.draw_latency(&mut self.rng);
-                    let params = self.workers[w].x.clone();
-                    let shard = Shard::full(params.len());
+            DesStrategy::GoSgd { .. } | DesStrategy::ShardedGoSgd { .. } => {
+                // The core runs the whole send-side transition; the
+                // engine only prices and delivers the message.
+                let m = self.workers.len();
+                let dim = self.workers[w].x.len();
+                let out = {
+                    let ws = &mut self.workers[w];
+                    ws.core.emit(&ws.x, m, &mut self.rng)?
+                };
+                if let Some(out) = out {
+                    // Bandwidth-dominated latency at paper-scale messages:
+                    // shipping a fraction of the vector takes the same
+                    // fraction of the one-way latency (1.0 when full).
+                    let frac = out.shard.len as f64 / dim as f64;
+                    let latency = self.time_model.draw_latency(&mut self.rng) * frac;
                     self.report.messages += 1;
-                    self.report.bytes += wire_bytes_for(params.len(), false) as u64;
+                    self.report.bytes += out.wire_bytes() as u64;
                     self.schedule(
                         now + latency,
-                        EventKind::Deliver { to: r, params, weight: shipped.value(), shard },
+                        EventKind::Deliver {
+                            to: out.to,
+                            params: out.payload,
+                            weight: out.weight.value(),
+                            shard: out.shard,
+                        },
                     );
                 }
                 // Fire-and-forget: compute continues immediately.
-                let dt = self.time_model.draw_compute(&mut self.rng);
+                let dt = self.draw_compute_for(w);
                 self.busy_until[w] = now + dt;
-                self.schedule(now + dt, EventKind::Wake(w));
-            }
-            DesStrategy::ShardedGoSgd { p, shards } => {
-                if self.rng.bernoulli(p) {
-                    let m = self.workers.len();
-                    let r = self.rng.peer(m, w);
-                    let shard = self.plan.shard(self.next_shard[w]);
-                    self.next_shard[w] = (self.next_shard[w] + 1) % shards;
-                    let shipped =
-                        self.workers[w].weights[shard.index].halve_for_send();
-                    // Bandwidth-dominated latency at paper-scale messages:
-                    // shipping 1/shards of the vector takes ~1/shards of
-                    // the one-way latency.
-                    let dim = self.workers[w].x.len();
-                    let frac = shard.len as f64 / dim as f64;
-                    let latency = self.time_model.draw_latency(&mut self.rng) * frac;
-                    let params = FlatVec::from_vec(
-                        self.workers[w].x.as_slice()[shard.offset..shard.offset + shard.len]
-                            .to_vec(),
-                    );
-                    self.report.messages += 1;
-                    self.report.bytes += wire_bytes_for(shard.len, true) as u64;
-                    self.schedule(
-                        now + latency,
-                        EventKind::Deliver { to: r, params, weight: shipped.value(), shard },
-                    );
-                }
-                // Fire-and-forget, exactly like unsharded GoSGD.
-                let dt = self.time_model.draw_compute(&mut self.rng);
-                self.busy_until[w] = now + dt;
-                self.schedule(now + dt, EventKind::Wake(w));
+                self.schedule_wake(now + dt, w);
             }
             DesStrategy::SymmetricGossip { p } => {
                 let mut resume = now;
@@ -391,12 +565,12 @@ impl DesEngine {
                     self.pending_delay[r] += lat;
                     resume = now + wait + lat;
                 }
-                let dt = self.time_model.draw_compute(&mut self.rng);
+                let dt = self.draw_compute_for(w);
                 self.busy_until[w] = resume + dt;
-                self.schedule(resume + dt, EventKind::Wake(w));
+                self.schedule_wake(resume + dt, w);
             }
             DesStrategy::Easgd { alpha, tau } => {
-                if self.workers[w].local_step % tau == 0 {
+                if self.workers[w].core.steps() % tau == 0 {
                     // Paper section 3.2: "a global synchronization is still
                     // required as the master has to [combine] local models
                     // that have been updated the same number of times."
@@ -438,19 +612,19 @@ impl DesEngine {
                             self.report.blocked_secs += resume - arrival;
                         }
                         for i in 0..m {
-                            let dt = self.time_model.draw_compute(&mut self.rng);
-                            self.schedule(resume + dt, EventKind::Wake(i));
+                            let dt = self.draw_compute_for(i);
+                            self.schedule_wake(resume + dt, i);
                         }
                         self.barrier_arrivals.clear();
                     }
                     // else: parked until the barrier releases
                 } else {
-                    let dt = self.time_model.draw_compute(&mut self.rng);
-                    self.schedule(now + dt, EventKind::Wake(w));
+                    let dt = self.draw_compute_for(w);
+                    self.schedule_wake(now + dt, w);
                 }
             }
             DesStrategy::PerSyn { tau } => {
-                if self.workers[w].local_step % tau == 0 {
+                if self.workers[w].core.steps() % tau == 0 {
                     // Park at the barrier.
                     self.workers[w].at_barrier = true;
                     self.barrier_arrivals.push(now);
@@ -474,16 +648,16 @@ impl DesEngine {
                             self.report.blocked_secs += resume - arrival;
                             self.workers[i].x = mean.clone();
                             self.workers[i].at_barrier = false;
-                            let dt = self.time_model.draw_compute(&mut self.rng);
-                            self.schedule(resume + dt, EventKind::Wake(i));
+                            let dt = self.draw_compute_for(i);
+                            self.schedule_wake(resume + dt, i);
                         }
                         self.master = mean;
                         self.barrier_arrivals.clear();
                     }
                     // else: stay parked (no wake scheduled until release)
                 } else {
-                    let dt = self.time_model.draw_compute(&mut self.rng);
-                    self.schedule(now + dt, EventKind::Wake(w));
+                    let dt = self.draw_compute_for(w);
+                    self.schedule_wake(now + dt, w);
                 }
             }
         }
@@ -494,6 +668,16 @@ impl DesEngine {
     pub fn consensus_model(&self) -> Result<FlatVec> {
         let refs: Vec<&FlatVec> = self.workers.iter().map(|s| &s.x).collect();
         FlatVec::mean_of(&refs)
+    }
+
+    /// Per-worker local step counts (scenario diagnostics).
+    pub fn worker_steps(&self) -> Vec<u64> {
+        self.workers.iter().map(|s| s.core.steps()).collect()
+    }
+
+    /// Per-worker, per-shard sum weights (conservation diagnostics).
+    pub fn worker_weights(&self) -> Vec<Vec<f64>> {
+        self.workers.iter().map(|s| s.core.weight_values()).collect()
     }
 
     pub fn report(&self) -> &DesReport {
@@ -523,6 +707,30 @@ mod tests {
         eng.run(&mut grad, horizon).unwrap();
         let model = eng.consensus_model().unwrap();
         (std::mem::take(&mut eng.report), model)
+    }
+
+    fn run_scenario(
+        strategy: DesStrategy,
+        scenario: ScenarioModel,
+        horizon: f64,
+        seed: u64,
+    ) -> DesEngine {
+        let dim = 32;
+        let mut grad = QuadraticSource::new(dim, 0.1, seed);
+        let init = FlatVec::zeros(dim);
+        let mut eng = DesEngine::new(
+            strategy,
+            TimeModel::paper_like(),
+            8,
+            &init,
+            1.0,
+            0.0,
+            seed ^ 0xD5,
+        )
+        .unwrap()
+        .with_scenario(scenario);
+        eng.run(&mut grad, horizon).unwrap();
+        eng
     }
 
     #[test]
@@ -675,5 +883,155 @@ mod tests {
         // Every completed barrier costs exactly 2M = 16 messages, so the
         // total must be a multiple of 16.
         assert_eq!(rep.messages % 16, 0);
+    }
+
+    // ---- scenario diversity: heterogeneous compute + churn -------------
+
+    #[test]
+    fn hetero_compute_slows_the_scaled_worker_only() {
+        let scenario = ScenarioModel {
+            compute_scale: vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 4.0],
+            ..ScenarioModel::none()
+        };
+        let eng = run_scenario(DesStrategy::GoSgd { p: 0.1 }, scenario, 40.0, 31);
+        let steps = eng.worker_steps();
+        // The 4× straggler takes ~1/4 the steps of a normal worker; gossip
+        // never blocks, so the fast workers are unaffected.
+        assert!(
+            (steps[7] as f64) < steps[0] as f64 * 0.5,
+            "straggler {} vs fast {}",
+            steps[7],
+            steps[0]
+        );
+        assert_eq!(eng.report().blocked_secs, 0.0);
+    }
+
+    #[test]
+    fn hetero_hurts_barrier_strategies_more_than_gossip() {
+        let hetero = || ScenarioModel {
+            compute_scale: vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 4.0],
+            ..ScenarioModel::none()
+        };
+        let persyn_uniform = {
+            let (rep, _) = run(DesStrategy::PerSyn { tau: 10 }, 40.0, 33);
+            rep.blocked_secs
+        };
+        let persyn_hetero = run_scenario(DesStrategy::PerSyn { tau: 10 }, hetero(), 40.0, 33)
+            .report()
+            .blocked_secs;
+        // Every barrier now waits for the persistent straggler.
+        assert!(
+            persyn_hetero > persyn_uniform * 1.5,
+            "hetero blocked {persyn_hetero} vs uniform {persyn_uniform}"
+        );
+    }
+
+    #[test]
+    fn churn_crashes_rejoin_and_conserve_mass_per_shard() {
+        let scenario = ScenarioModel {
+            compute_scale: Vec::new(),
+            crash_mtbf: 6.0,
+            rejoin_mttr: 2.0,
+        };
+        let shards = 4;
+        let eng = run_scenario(
+            DesStrategy::ShardedGoSgd { p: 0.3, shards },
+            scenario,
+            60.0,
+            35,
+        );
+        let rep = eng.report();
+        assert!(rep.crashes > 0, "expected crashes over a 60 s horizon");
+        assert!(rep.downtime_secs > 0.0);
+        assert!(rep.steps > 0);
+        // Per-shard conservation including every in-flight location:
+        // worker cores + mailboxes + undelivered Deliver events.
+        let mut totals = vec![0.0f64; shards];
+        for ws in eng.worker_weights() {
+            for (k, v) in ws.iter().enumerate() {
+                totals[k] += v;
+            }
+        }
+        for w in &eng.workers {
+            for (shard, _, weight) in &w.mailbox {
+                totals[shard.index] += weight;
+            }
+        }
+        for ev in eng.events.iter() {
+            if let EventKind::Deliver { weight, shard, .. } = &ev.kind {
+                totals[shard.index] += weight;
+            }
+        }
+        for (k, total) in totals.iter().enumerate() {
+            assert!((total - 1.0).abs() < 1e-9, "shard {k} mass {total}");
+        }
+    }
+
+    #[test]
+    fn churn_reduces_throughput_but_training_continues() {
+        let uniform = run_scenario(
+            DesStrategy::GoSgd { p: 0.1 },
+            ScenarioModel::none(),
+            60.0,
+            37,
+        );
+        let churned = run_scenario(
+            DesStrategy::GoSgd { p: 0.1 },
+            ScenarioModel { compute_scale: Vec::new(), crash_mtbf: 8.0, rejoin_mttr: 4.0 },
+            60.0,
+            37,
+        );
+        assert!(churned.report().steps < uniform.report().steps);
+        // Loss still descends through the crashes.
+        let rep = churned.report();
+        let early: f64 = rep.trace.iter().take(50).map(|(_, l)| l).sum::<f64>() / 50.0;
+        let n = rep.trace.len();
+        let late: f64 = rep.trace[n - 50..].iter().map(|(_, l)| l).sum::<f64>() / 50.0;
+        assert!(late < early * 0.7, "{early} -> {late}");
+    }
+
+    #[test]
+    fn churn_with_barrier_strategy_is_a_config_error() {
+        let dim = 16;
+        let mut grad = QuadraticSource::new(dim, 0.1, 1);
+        let init = FlatVec::zeros(dim);
+        let mut eng = DesEngine::new(
+            DesStrategy::PerSyn { tau: 5 },
+            TimeModel::paper_like(),
+            4,
+            &init,
+            1.0,
+            0.0,
+            1,
+        )
+        .unwrap()
+        .with_scenario(ScenarioModel {
+            compute_scale: Vec::new(),
+            crash_mtbf: 5.0,
+            rejoin_mttr: 1.0,
+        });
+        assert!(eng.run(&mut grad, 10.0).is_err());
+    }
+
+    #[test]
+    fn bad_compute_scale_is_a_config_error() {
+        let dim = 16;
+        let mut grad = QuadraticSource::new(dim, 0.1, 1);
+        let init = FlatVec::zeros(dim);
+        let mut eng = DesEngine::new(
+            DesStrategy::GoSgd { p: 0.1 },
+            TimeModel::paper_like(),
+            4,
+            &init,
+            1.0,
+            0.0,
+            1,
+        )
+        .unwrap()
+        .with_scenario(ScenarioModel {
+            compute_scale: vec![1.0, 0.0],
+            ..ScenarioModel::none()
+        });
+        assert!(eng.run(&mut grad, 10.0).is_err());
     }
 }

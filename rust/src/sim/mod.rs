@@ -21,6 +21,13 @@
 //! * **PerSyn** — a global barrier every `tau` rounds: everyone waits for
 //!   the straggler, then for the master's gather+broadcast.
 
+//! Scenario diversity: [`des::ScenarioModel`] layers *persistent*
+//! heterogeneity (per-worker compute multipliers — slow machines, not
+//! transient jitter) and crash/rejoin worker churn on top of the time
+//! model.  Gossip shrugs both off (fire-and-forget sends, mailboxes
+//! buffer through downtime); the barrier baselines pay for every
+//! straggler at every sync — the `scenarios` harness quantifies it.
+
 pub mod des;
 
-pub use des::{DesEngine, DesReport, DesStrategy, TimeModel};
+pub use des::{DesEngine, DesReport, DesStrategy, ScenarioModel, TimeModel};

@@ -12,20 +12,30 @@
 //!   pick a uniform peer `r ≠ s`, halve the own weight and push
 //!   `(x_s, w_s/2)` to `q_r` — non-blocking, exactly one message.
 //!
+//! The whole state machine — blend coefficients, weight halving, the
+//! round-robin shard cursor — lives in the runtime-agnostic
+//! [`ProtocolCore`](crate::gossip::ProtocolCore); this strategy is only
+//! the *driver* that wires the cores into the sequential engine's
+//! universal clock: it empties the engine's mailboxes, hands each message
+//! to the awake worker's core, and delivers the core's outbound messages
+//! into the receivers' queues.  The OS-thread runtime
+//! ([`crate::worker::ThreadedGossip`]) and the discrete-event simulator
+//! ([`crate::sim::DesEngine`]) drive the very same cores under their own
+//! clocks.
+//!
 //! The blend itself is exactly the `mix` Pallas kernel of Layer 1; the
 //! sequential engine uses the host [`FlatVec::mix_from`] path and the PJRT
 //! integration test asserts both produce the same numbers.
 
-use std::sync::Arc;
-
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::framework::generators;
-use crate::gossip::{wire_bytes_for, Message, PeerSelector};
+use crate::gossip::{wire_bytes_for, PeerSelector};
 use crate::strategies::{Clock, ClusterState, Strategy};
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
 
-/// GoSGD configuration + per-run protocol state.
+/// GoSGD configuration: the exchange policy the engine's protocol cores
+/// are configured with.
 pub struct GoSgd {
     /// Exchange probability per awake step (the paper's `p`).
     p: f64,
@@ -38,20 +48,12 @@ pub struct GoSgd {
     /// ships one round-robin shard per gossip event (see
     /// [`crate::gossip::shard`]), cutting per-event bytes by `~1/shards`.
     shards: usize,
-    /// Round-robin shard cursor per sender slot (lazily sized).
-    next_shard: Vec<usize>,
 }
 
 impl GoSgd {
     pub fn new(p: f64) -> Self {
         assert!((0.0..=1.0).contains(&p), "p must be a probability, got {p}");
-        GoSgd {
-            p,
-            selector: PeerSelector::Uniform,
-            immediate: false,
-            shards: 1,
-            next_shard: Vec::new(),
-        }
+        GoSgd { p, selector: PeerSelector::Uniform, immediate: false, shards: 1 }
     }
 
     pub fn with_selector(mut self, selector: PeerSelector) -> Self {
@@ -83,88 +85,31 @@ impl GoSgd {
         self.shards
     }
 
-    /// Make sure the cluster's shard partition exists before the first
-    /// sharded operation.  The shard count can only be checked against the
-    /// model dimension here (config validation never sees the dimension),
-    /// so an oversized count is a config error, not a panic.
-    fn ensure_shards(&self, state: &mut ClusterState) -> Result<()> {
-        if self.shards > 1 && state.shard_plan.is_none() {
-            let dim = state.stacked.vec_len();
-            if self.shards > dim {
-                return Err(Error::config(format!(
-                    "cannot cut {dim} parameters into {} shards",
-                    self.shards
-                )));
-            }
-            state.init_shards(self.shards);
-        }
-        Ok(())
-    }
-
-    /// Drain and fold all pending messages for worker `m`
-    /// (Algorithm 4, `ProcessMessages`).  Full messages blend the whole
-    /// vector against the slot weight; shard messages blend only their
-    /// range against the shard-local weight.
-    fn process_messages(&self, m: usize, state: &mut ClusterState) -> Result<()> {
-        let pending = state.queues[m].drain();
-        for msg in pending {
-            if msg.shard.is_full() {
-                let t = state.weights[m].absorb(msg.weight);
-                // x_r <- (1-t) x_r + t x_s with t = w_s/(w_r+w_s)
-                state
-                    .stacked
-                    .worker_mut(m)
-                    .mix_from(&msg.params, 1.0 - t, t)?;
-            } else {
-                let k = msg.shard.index;
-                let t = state.shard_weights[m][k].absorb(msg.weight);
-                state.stacked.worker_mut(m).mix_range_from(
-                    &msg.params,
-                    msg.shard.offset,
-                    1.0 - t,
-                    t,
-                )?;
-            }
-        }
-        Ok(())
-    }
-
-    /// The sharded send path: halve the shard-local weight, ship only the
-    /// shard's slice.  In immediate mode the exchange is applied through
-    /// the block-diagonal `K^(t)` itself so the framework replay is
-    /// float-for-float identical.
-    fn send_shard(
+    /// Immediate-delivery exchange (cross-check only): the send-side core
+    /// transition runs as usual, but the exchange is applied to *current*
+    /// state through the recorded `K^(t)` matrix — block-diagonal for a
+    /// shard — so the framework replay is float-for-float identical.
+    fn exchange_immediately(
         &mut self,
         s: usize,
         r: usize,
         state: &mut ClusterState,
     ) -> Result<()> {
         let m = state.workers();
-        if self.next_shard.len() <= s {
-            self.next_shard.resize(m + 1, 0);
-        }
-        let k_idx = self.next_shard[s];
-        self.next_shard[s] = (k_idx + 1) % self.shards;
-        let plan = state.shard_plan.expect("ensure_shards ran");
-        let shard = plan.shard(k_idx);
-
-        let shipped = state.shard_weights[s][k_idx].halve_for_send();
-        if self.immediate {
-            let w_r = state.shard_weights[r][k_idx].value();
-            let k = generators::gossip_exchange(m, s, r, shipped.value(), w_r)?;
+        let (shard, shipped) = state.cores[s].begin_send();
+        let w_r = state.cores[r].weights()[shard.index].value();
+        let k = generators::gossip_exchange(m, s, r, shipped.value(), w_r)?;
+        if shard.is_full() {
+            state.record_matrix(k);
+            let t = state.cores[r].absorb_weight(shard.index, shipped);
+            let snapshot = state.stacked.worker(s).clone();
+            state.stacked.worker_mut(r).mix_from(&snapshot, 1.0 - t, t)?;
+            state.count_message(wire_bytes_for(shard.len, false));
+        } else {
             state.record_matrix_block(k.clone(), shard.offset, shard.len);
             state.stacked = k.apply_block(&state.stacked, shard.offset, shard.len)?;
-            state.shard_weights[r][k_idx].absorb(shipped);
+            state.cores[r].absorb_weight(shard.index, shipped);
             state.count_message(wire_bytes_for(shard.len, true));
-        } else {
-            let payload = FlatVec::from_vec(
-                state.stacked.worker(s).as_slice()[shard.offset..shard.offset + shard.len]
-                    .to_vec(),
-            );
-            let msg =
-                Message::for_shard(Arc::new(payload), shipped, s, state.steps[s], shard);
-            state.count_message(msg.wire_bytes());
-            state.queues[r].push(msg);
         }
         Ok(())
     }
@@ -190,8 +135,15 @@ impl Strategy for GoSgd {
         state: &mut ClusterState,
         _rng: &mut Rng,
     ) -> Result<()> {
-        self.ensure_shards(state)?;
-        self.process_messages(m, state)
+        state.configure_gossip(self.p, &self.selector, self.shards)?;
+        // ProcessMessages (Algorithm 4): drain the mailbox, fold each
+        // message in through the worker's protocol core.
+        let pending = state.queues[m].drain();
+        let (cores, stacked) = (&mut state.cores, &mut state.stacked);
+        for msg in pending {
+            cores[m].absorb_message(stacked.worker_mut(m), &msg)?;
+        }
+        Ok(())
     }
 
     fn after_local_step(
@@ -203,40 +155,27 @@ impl Strategy for GoSgd {
         rng: &mut Rng,
     ) -> Result<()> {
         let m = state.workers();
-        if m < 2 || !rng.bernoulli(self.p) {
-            return Ok(());
-        }
-        // Uniform receiver among the other workers (slots are 1-based).
-        let r = self.selector.pick(m, s - 1, rng) + 1;
-        debug_assert_ne!(r, s);
-
-        if self.shards > 1 {
-            self.ensure_shards(state)?;
-            return self.send_shard(s, r, state);
-        }
-
-        // PushMessage: halve own weight, ship (x_s, w_s/2).
-        let shipped = state.weights[s].halve_for_send();
         if self.immediate {
-            // Cross-check path: apply the exchange matrix right now.
-            let w_r = state.weights[r].value();
-            state.record_matrix(generators::gossip_exchange(
-                m,
-                s,
-                r,
-                shipped.value(),
-                w_r,
-            )?);
-            let t = state.weights[r].absorb(shipped);
-            let sender_snapshot = state.stacked.worker(s).clone();
-            state
-                .stacked
-                .worker_mut(r)
-                .mix_from(&sender_snapshot, 1.0 - t, t)?;
-            state.count_message(sender_snapshot.len() * 4);
-        } else {
-            let snapshot = Arc::new(state.stacked.worker(s).clone());
-            let msg = Message::new(snapshot, shipped, s, state.steps[s]);
+            // Cross-check path: same gate and peer pick as the core's
+            // emit, applied through the exchange matrix right now.
+            if m < 2 || !rng.bernoulli(self.p) {
+                return Ok(());
+            }
+            // Uniform receiver among the other workers (slots are 1-based).
+            let r = self.selector.pick(m, s - 1, rng) + 1;
+            debug_assert_ne!(r, s);
+            return self.exchange_immediately(s, r, state);
+        }
+        // PushMessage: the core runs the whole send-side transition
+        // (Bernoulli gate, peer pick, cursor advance, weight halving,
+        // payload snapshot); the driver only delivers.
+        let out = {
+            let (cores, stacked) = (&mut state.cores, &state.stacked);
+            cores[s].emit(stacked.worker(s), m, rng)?
+        };
+        if let Some(out) = out {
+            let r = out.to + 1; // cores are 0-based, slots 1-based
+            let msg = out.into_message(s, state.steps[s]);
             state.count_message(msg.wire_bytes());
             state.queues[r].push(msg);
         }
@@ -281,7 +220,7 @@ mod tests {
         let eng = run_gosgd(0.5, 5000, 5);
         let state = eng.state();
         let m = state.workers();
-        let mut total: f64 = (1..=m).map(|w| state.weights[w].value()).sum();
+        let mut total: f64 = (1..=m).map(|w| state.cores[w].weights()[0].value()).sum();
         for q in &state.queues {
             for msg in q.drain() {
                 total += msg.weight.value();
@@ -378,7 +317,7 @@ mod tests {
         let m = state.workers();
         let mut totals = vec![0.0f64; shards];
         for w in 1..=m {
-            for (k, wgt) in state.shard_weights[w].iter().enumerate() {
+            for (k, wgt) in state.cores[w].weights().iter().enumerate() {
                 totals[k] += wgt.value();
             }
         }
@@ -482,8 +421,9 @@ mod tests {
         // have moved some mass somewhere.
         let m = state.workers();
         for k in 0..shards {
-            let untouched = (1..=m)
-                .all(|w| (state.shard_weights[w][k].value() - 1.0 / m as f64).abs() < 1e-15);
+            let untouched = (1..=m).all(|w| {
+                (state.cores[w].weights()[k].value() - 1.0 / m as f64).abs() < 1e-15
+            });
             assert!(
                 !untouched || seen[k] > 0,
                 "shard {k} saw no traffic in 400 p=1 ticks"

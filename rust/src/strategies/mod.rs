@@ -33,7 +33,7 @@ pub use grad::GradSource;
 
 use crate::error::Result;
 use crate::framework::{CommMatrix, Stacked};
-use crate::gossip::{MessageQueue, ShardPlan, SumWeight};
+use crate::gossip::{MessageQueue, PeerSelector, ProtocolCore};
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
 
@@ -65,16 +65,14 @@ pub struct CommStats {
 pub struct ClusterState {
     /// Parameter state `[x̃, x_1 … x_M]`.
     pub stacked: Stacked,
-    /// Sum-weight per slot (slot 0 unused; init 1/M per paper Alg. 3) —
-    /// the classic whole-vector protocol state.
-    pub weights: Vec<SumWeight>,
-    /// Sharded-exchange partition, set by [`ClusterState::init_shards`].
-    /// `None` means the classic protocol (whole-vector messages).
-    pub shard_plan: Option<ShardPlan>,
-    /// Per-slot, per-shard sum weights (empty until `init_shards`).  Each
-    /// shard carries its own conserved unit of mass: `Σ_slots w[slot][k]`
-    /// (plus in-flight shard-`k` messages) stays exactly 1 for every `k`.
-    pub shard_weights: Vec<Vec<SumWeight>>,
+    /// Per-slot gossip protocol cores (slot 0 mirrors the master for the
+    /// uniform slot layout; gossip never uses it).  Each core holds the
+    /// per-shard sum weights (init 1/M per paper Alg. 3), the round-robin
+    /// shard cursor and the exchange policy — see
+    /// [`crate::gossip::protocol`].  Created with the silent default
+    /// (p = 0, uniform, 1 shard); a gossip strategy reconfigures them via
+    /// [`ClusterState::configure_gossip`].
+    pub cores: Vec<ProtocolCore>,
     /// Per-slot mailboxes (slot 0 unused by gossip).
     pub queues: Vec<MessageQueue>,
     /// Per-worker local step counters.
@@ -89,11 +87,22 @@ impl ClusterState {
     /// Fresh state: all slots replicate `init` (paper: `x_m = x`).
     pub fn new(workers: usize, init: &FlatVec) -> Self {
         assert!(workers >= 1);
+        let dim = init.len();
         ClusterState {
             stacked: Stacked::replicate(workers, init),
-            weights: (0..=workers).map(|_| SumWeight::init(workers)).collect(),
-            shard_plan: None,
-            shard_weights: Vec::new(),
+            cores: (0..=workers)
+                .map(|slot| {
+                    ProtocolCore::new(
+                        slot.saturating_sub(1),
+                        workers,
+                        dim,
+                        0.0,
+                        PeerSelector::Uniform,
+                        1,
+                    )
+                    .expect("default protocol core is always valid")
+                })
+                .collect(),
             queues: (0..=workers).map(|_| MessageQueue::unbounded()).collect(),
             steps: vec![0; workers + 1],
             comm: CommStats::default(),
@@ -105,25 +114,56 @@ impl ClusterState {
         self.stacked.workers()
     }
 
-    /// Switch to sharded exchange: partition the vector into `num_shards`
-    /// contiguous ranges and give every slot one `1/M` sum weight *per
-    /// shard*.  Idempotent for a given `num_shards`; changing the count
-    /// mid-run would break per-shard conservation and panics.
-    pub fn init_shards(&mut self, num_shards: usize) {
-        let plan = ShardPlan::new(self.stacked.vec_len(), num_shards);
-        if let Some(existing) = &self.shard_plan {
-            assert_eq!(
-                existing.num_shards(),
-                num_shards,
-                "cannot re-partition a running cluster"
-            );
-            return;
+    /// Whether the cluster runs the sharded protocol.
+    pub fn sharded(&self) -> bool {
+        self.cores[0].num_shards() > 1
+    }
+
+    /// Point every slot's protocol core at the strategy's exchange policy
+    /// and shard partition.  Idempotent per configuration and cheap, so
+    /// gossip strategies call it every tick.  Moving from the 1-shard
+    /// default to `shards > 1` re-partitions (weights are still at their
+    /// 1/M init the first time a strategy runs); changing an established
+    /// shard count mid-run would break per-shard conservation and panics.
+    pub fn configure_gossip(
+        &mut self,
+        p: f64,
+        selector: &PeerSelector,
+        shards: usize,
+    ) -> Result<()> {
+        if shards == 0 {
+            return Err(crate::error::Error::config("shards must be >= 1"));
         }
-        let m = self.workers();
-        self.shard_weights = (0..=m)
-            .map(|_| (0..num_shards).map(|_| SumWeight::init(m)).collect())
-            .collect();
-        self.shard_plan = Some(plan);
+        // Fast path for the per-tick call: everything already matches
+        // (cores are always configured uniformly, so slot 0 speaks for all).
+        let sample = &self.cores[0];
+        if sample.num_shards() == shards && sample.p() == p && sample.selector() == selector {
+            return Ok(());
+        }
+        let current = self.cores[0].num_shards();
+        if shards != current {
+            assert_eq!(current, 1, "cannot re-partition a running cluster");
+            // ProtocolCore::new validates shards against the dimension;
+            // all slots share the arguments, so slot 0 errors before any
+            // core is replaced.
+            let dim = self.stacked.vec_len();
+            let m = self.workers();
+            for (slot, core) in self.cores.iter_mut().enumerate() {
+                *core = ProtocolCore::new(
+                    slot.saturating_sub(1),
+                    m,
+                    dim,
+                    p,
+                    selector.clone(),
+                    shards,
+                )?;
+            }
+        } else {
+            for core in &mut self.cores {
+                core.set_exchange(p, selector.clone())?;
+            }
+        }
+        Ok(())
     }
 
     /// Enable event recording (matrix cross-check tests).
@@ -254,8 +294,9 @@ mod tests {
         let init = FlatVec::from_vec(vec![1.0, 2.0]);
         let s = ClusterState::new(4, &init);
         assert_eq!(s.workers(), 4);
-        assert_eq!(s.weights.len(), 5);
-        assert_eq!(s.weights[1].value(), 0.25);
+        assert_eq!(s.cores.len(), 5);
+        assert_eq!(s.cores[1].weights()[0].value(), 0.25);
+        assert!(!s.sharded());
         assert_eq!(s.stacked.worker(3).as_slice(), &[1.0, 2.0]);
         assert!(s.queues[2].is_empty());
     }
@@ -286,32 +327,36 @@ mod tests {
     }
 
     #[test]
-    fn init_shards_populates_per_shard_weights() {
+    fn configure_gossip_populates_per_shard_weights() {
         let mut s = ClusterState::new(4, &FlatVec::zeros(10));
-        assert!(s.shard_plan.is_none());
-        assert!(s.shard_weights.is_empty());
-        s.init_shards(3);
-        let plan = s.shard_plan.expect("plan set");
-        assert_eq!(plan.num_shards(), 3);
-        assert_eq!(plan.dim(), 10);
-        assert_eq!(s.shard_weights.len(), 5);
-        for slot in &s.shard_weights {
-            assert_eq!(slot.len(), 3);
-            for w in slot {
+        assert!(!s.sharded());
+        s.configure_gossip(0.3, &crate::gossip::PeerSelector::Uniform, 3).unwrap();
+        assert!(s.sharded());
+        assert_eq!(s.cores.len(), 5);
+        for core in &s.cores {
+            assert_eq!(core.num_shards(), 3);
+            assert_eq!(core.plan().dim(), 10);
+            assert_eq!(core.p(), 0.3);
+            for w in core.weights() {
                 assert_eq!(w.value(), 0.25, "per-shard init is 1/M");
             }
         }
         // Idempotent for the same count.
-        s.init_shards(3);
-        assert_eq!(s.shard_weights.len(), 5);
+        s.configure_gossip(0.3, &crate::gossip::PeerSelector::Uniform, 3).unwrap();
+        assert_eq!(s.cores.len(), 5);
+        // Oversized shard counts are config errors, not panics.
+        let mut t = ClusterState::new(2, &FlatVec::zeros(4));
+        assert!(t
+            .configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 100)
+            .is_err());
     }
 
     #[test]
     #[should_panic(expected = "re-partition")]
     fn changing_shard_count_mid_run_panics() {
         let mut s = ClusterState::new(2, &FlatVec::zeros(8));
-        s.init_shards(2);
-        s.init_shards(4);
+        s.configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 2).unwrap();
+        s.configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 4).unwrap();
     }
 
     #[test]

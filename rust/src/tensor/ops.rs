@@ -35,9 +35,16 @@ pub fn axpy(x: &mut [f32], alpha: f32, y: &[f32]) {
     }
 }
 
-/// `x[i] *= alpha`.
+/// `x[i] *= alpha` — same fixed-width chunk pattern as the other kernels
+/// so LLVM emits full-width vector multiplies with a scalar tail.
 pub fn scale(x: &mut [f32], alpha: f32) {
-    for xi in x.iter_mut() {
+    let mut xc = x.chunks_exact_mut(8);
+    for xs in &mut xc {
+        for xi in xs.iter_mut() {
+            *xi *= alpha;
+        }
+    }
+    for xi in xc.into_remainder() {
         *xi *= alpha;
     }
 }
@@ -160,5 +167,67 @@ mod tests {
         let x = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
         let y = vec![0.0f32; 5];
         assert!((dist_sq(&x, &y) - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_handles_chunks_and_tail() {
+        for n in [0usize, 1, 7, 8, 9, 16, 23] {
+            let mut x: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+            scale(&mut x, 0.5);
+            for (i, &v) in x.iter().enumerate() {
+                assert_eq!(v, (i as f32 + 1.0) * 0.5, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_kernels_match_naive_reference_property() {
+        // Every mutating kernel (mix_into, axpy, scale, sgd_step) against
+        // a per-element reference loop, over lengths that cover the empty
+        // slice, pure-tail, exact-chunk and chunk+tail shapes.  The chunked
+        // loops perform the identical scalar arithmetic, so agreement is
+        // exact, not approximate.
+        use crate::util::proptest::check;
+        use crate::util::rng::Rng;
+        check("chunked kernels == naive reference", 50, |rng| {
+            let n = rng.below(70) as usize;
+            let randv = |rng: &mut Rng| -> Vec<f32> {
+                (0..n).map(|_| rng.normal_f32(1.0)).collect()
+            };
+            let x0 = randv(rng);
+            let y = randv(rng);
+            let t = rng.f32();
+            let alpha = rng.normal_f32(1.0);
+            let (lr, wd) = (rng.f32(), rng.f32() * 0.01);
+
+            let mut got = x0.clone();
+            mix_into(&mut got, &y, t);
+            for i in 0..n {
+                let want = x0[i] + t * (y[i] - x0[i]);
+                assert_eq!(got[i], want, "mix_into n={n} i={i}");
+            }
+
+            let mut got = x0.clone();
+            axpy(&mut got, alpha, &y);
+            for i in 0..n {
+                let want = x0[i] + alpha * y[i];
+                assert_eq!(got[i], want, "axpy n={n} i={i}");
+            }
+
+            let mut got = x0.clone();
+            scale(&mut got, alpha);
+            for i in 0..n {
+                let want = x0[i] * alpha;
+                assert_eq!(got[i], want, "scale n={n} i={i}");
+            }
+
+            let mut got = x0.clone();
+            sgd_step(&mut got, &y, lr, wd);
+            let decay = 1.0 - lr * wd;
+            for i in 0..n {
+                let want = decay * x0[i] - lr * y[i];
+                assert_eq!(got[i], want, "sgd_step n={n} i={i}");
+            }
+        });
     }
 }

@@ -7,15 +7,21 @@
 //! thread* (PJRT clients are not `Send`), via the factory the caller
 //! provides.
 //!
+//! Every protocol transition — blend, weight halving, shard cursor — is
+//! delegated to a per-thread [`ProtocolCore`]; this module owns only what
+//! is genuinely runtime: thread spawning, the concurrent queues, the
+//! atomics for accounting, and result collection.
+//!
 //! The sequential [`Engine`](crate::strategies::Engine) and this runtime
-//! implement the same protocol under different clocks; the integration
-//! tests check they agree statistically (consensus error, message rate).
+//! drive the same cores under different clocks; the cross-runtime test
+//! (`rust/tests/runtime_equivalence.rs`) pins the engine/core agreement
+//! bit-for-bit and the tests below pin the conservation invariants here.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
 use crate::error::{Error, Result};
-use crate::gossip::{Message, MessageQueue, PeerSelector, ShardPlan, SumWeight};
+use crate::gossip::{MessageQueue, PeerSelector, ProtocolCore};
 use crate::strategies::grad::GradSource;
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -60,6 +66,9 @@ pub struct ThreadedReport {
     /// Final per-worker weights (for sharded runs: the mean over a
     /// worker's shard weights, so the global sum stays 1 either way).
     pub weights: Vec<f64>,
+    /// Final per-worker, per-shard sum weights (one entry per worker when
+    /// unsharded).  `Σ_workers shard_weights[w][k] == 1` for every `k`.
+    pub shard_weights: Vec<Vec<f64>>,
     /// Per-worker loss traces (local step, loss).
     pub losses: Vec<Vec<(u64, f64)>>,
     /// Total messages sent.
@@ -101,14 +110,13 @@ impl ThreadedGossip {
                 self.shards
             )));
         }
-        let plan = ShardPlan::new(init.len(), self.shards);
         let queues: Arc<Vec<MessageQueue>> =
             Arc::new((0..m).map(|_| MessageQueue::unbounded()).collect());
         let start_barrier = Arc::new(Barrier::new(m));
         let total_messages = Arc::new(AtomicU64::new(0));
         let total_bytes = Arc::new(AtomicU64::new(0));
         #[allow(clippy::type_complexity)]
-        let results: Arc<Vec<Mutex<Option<(FlatVec, Vec<f64>, Vec<(u64, f64)>)>>>> =
+        let results: Arc<Vec<Mutex<Option<(FlatVec, ProtocolCore, Vec<(u64, f64)>)>>>> =
             Arc::new((0..m).map(|_| Mutex::new(None)).collect());
         let base_rng = Rng::new(self.seed);
 
@@ -131,63 +139,44 @@ impl ThreadedGossip {
                         return Err(Error::shape("grad source dim mismatch"));
                     }
                     let mut x = init;
-                    // One sum weight per shard (a single one when unsharded).
-                    let mut weights: Vec<SumWeight> =
-                        (0..cfg.shards).map(|_| SumWeight::init(m)).collect();
-                    // Stagger cursors so concurrent senders cover different
-                    // shards from the start.
-                    let mut cursor = w % cfg.shards;
+                    // The whole protocol state machine lives here.
+                    let mut core = ProtocolCore::new(
+                        w,
+                        m,
+                        x.len(),
+                        cfg.p,
+                        cfg.peer.clone(),
+                        cfg.shards,
+                    )?;
                     let mut grad = FlatVec::zeros(x.len());
                     let mut losses = Vec::with_capacity(cfg.steps_per_worker as usize);
                     start_barrier.wait();
 
                     for step in 0..cfg.steps_per_worker {
-                        // 1. ProcessMessages(q_s): blend each message into
-                        //    its shard's range with its shard's weight.
+                        // 1. ProcessMessages(q_s): fold every pending
+                        //    message in through the core.
                         for msg in queues[w].drain() {
-                            let t = weights[msg.shard.index].absorb(msg.weight);
-                            if msg.shard.is_full() {
-                                x.mix_from(&msg.params, 1.0 - t, t)?;
-                            } else {
-                                x.mix_range_from(&msg.params, msg.shard.offset, 1.0 - t, t)?;
-                            }
+                            core.absorb_message(&mut x, &msg)?;
                         }
                         // 2. local gradient step
                         let loss = source.grad(w + 1, &x, step, &mut grad)?;
-                        x.sgd_step(&grad, cfg.eta, cfg.weight_decay)?;
+                        core.local_step(&mut x, &grad, cfg.eta, cfg.weight_decay)?;
                         losses.push((step, loss));
                         // 3. Bernoulli(p) send of the next round-robin shard
-                        if rng.bernoulli(cfg.p) {
-                            let r = cfg.peer.pick(m, w, &mut rng);
-                            let shard = plan.shard(cursor);
-                            cursor = (cursor + 1) % cfg.shards;
-                            let shipped = weights[shard.index].halve_for_send();
-                            let msg = if shard.is_full() {
-                                Message::new(Arc::new(x.clone()), shipped, w, step)
-                            } else {
-                                let payload = FlatVec::from_vec(
-                                    x.as_slice()[shard.offset..shard.offset + shard.len]
-                                        .to_vec(),
-                                );
-                                Message::for_shard(Arc::new(payload), shipped, w, step, shard)
-                            };
+                        if let Some(out) = core.emit(&x, m, &mut rng)? {
+                            let to = out.to;
+                            let msg = out.into_message(w, step);
                             total_messages.fetch_add(1, Ordering::Relaxed);
                             total_bytes.fetch_add(msg.wire_bytes() as u64, Ordering::Relaxed);
-                            queues[r].push(msg);
+                            queues[to].push(msg);
                         }
                     }
                     // Final drain so no weight mass is stranded in queues.
                     for msg in queues[w].drain() {
-                        let t = weights[msg.shard.index].absorb(msg.weight);
-                        if msg.shard.is_full() {
-                            x.mix_from(&msg.params, 1.0 - t, t)?;
-                        } else {
-                            x.mix_range_from(&msg.params, msg.shard.offset, 1.0 - t, t)?;
-                        }
+                        core.absorb_message(&mut x, &msg)?;
                     }
-                    let weight_values: Vec<f64> = weights.iter().map(|w| w.value()).collect();
                     *results[w].lock().map_err(|_| Error::worker("poisoned result slot"))? =
-                        Some((x, weight_values, losses));
+                        Some((x, core, losses));
                     Ok(())
                 }));
             }
@@ -200,16 +189,16 @@ impl ThreadedGossip {
         let elapsed = t0.elapsed().as_secs_f64();
 
         let mut params = Vec::with_capacity(m);
-        let mut shard_weights: Vec<Vec<f64>> = Vec::with_capacity(m);
+        let mut cores: Vec<ProtocolCore> = Vec::with_capacity(m);
         let mut losses = Vec::with_capacity(m);
         for slot in results.iter() {
-            let (x, wgt, l) = slot
+            let (x, core, l) = slot
                 .lock()
                 .map_err(|_| Error::worker("poisoned result slot"))?
                 .take()
                 .ok_or_else(|| Error::worker("worker produced no result"))?;
             params.push(x);
-            shard_weights.push(wgt);
+            cores.push(core);
             losses.push(l);
         }
 
@@ -218,23 +207,13 @@ impl ThreadedGossip {
         // queues we own — fold them into their receivers for exactness.
         for (w, q) in queues.iter().enumerate() {
             for msg in q.drain() {
-                let k = msg.shard.index;
-                let mut wgt = SumWeight::from_value(shard_weights[w][k]);
-                let t = wgt.absorb(msg.weight);
-                if msg.shard.is_full() {
-                    params[w].mix_from(&msg.params, 1.0 - t, t)?;
-                } else {
-                    params[w].mix_range_from(&msg.params, msg.shard.offset, 1.0 - t, t)?;
-                }
-                shard_weights[w][k] = wgt.value();
+                cores[w].absorb_message(&mut params[w], &msg)?;
             }
         }
+        let shard_weights: Vec<Vec<f64>> = cores.iter().map(|c| c.weight_values()).collect();
         // Report a single scalar per worker: the mean over its shard
         // weights, so Σ_workers weight stays exactly 1 for any shard count.
-        let weights: Vec<f64> = shard_weights
-            .iter()
-            .map(|ws| ws.iter().sum::<f64>() / ws.len() as f64)
-            .collect();
+        let weights: Vec<f64> = cores.iter().map(|c| c.mean_weight()).collect();
 
         let mean = FlatVec::mean_of(&params.iter().collect::<Vec<_>>())?;
         let mut consensus_error = 0.0;
@@ -245,6 +224,7 @@ impl ThreadedGossip {
         Ok(ThreadedReport {
             params,
             weights,
+            shard_weights,
             losses,
             messages: total_messages.load(Ordering::Relaxed),
             bytes: total_bytes.load(Ordering::Relaxed),
@@ -390,6 +370,36 @@ mod tests {
         );
         // Sharded gossip still trains and keeps workers coupled.
         assert!(sharded.consensus_error.is_finite());
+    }
+
+    #[test]
+    fn sharded_run_conserves_mass_shard_by_shard() {
+        // The stronger invariant behind the mean-based check above: after
+        // the final fold, every shard's column of weights sums to exactly
+        // 1 — no shard leaks mass into another.
+        let dim = 96;
+        let shards = 6;
+        let cfg = ThreadedGossip {
+            workers: 4,
+            p: 0.6,
+            steps_per_worker: 250,
+            eta: 1.0,
+            weight_decay: 0.0,
+            seed: 27,
+            peer: PeerSelector::Uniform,
+            shards,
+        };
+        let rep = cfg
+            .run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 29))
+            .unwrap();
+        assert_eq!(rep.shard_weights.len(), 4);
+        for ws in &rep.shard_weights {
+            assert_eq!(ws.len(), shards);
+        }
+        for k in 0..shards {
+            let total: f64 = rep.shard_weights.iter().map(|ws| ws[k]).sum();
+            assert!((total - 1.0).abs() < 1e-9, "shard {k} mass {total}");
+        }
     }
 
     #[test]
