@@ -1,0 +1,123 @@
+//! Bench: payload codec encode/absorb throughput + wire-size accounting.
+//!
+//! Two questions, per codec (dense / top-k / u8 quantization):
+//!
+//! 1. **Compute**: what does encoding a shard and blending an encoded
+//!    shard cost per byte?  The codecs trade wire bytes for CPU — both
+//!    sides must stay far below a gradient step to be free in practice.
+//! 2. **Wire**: how many encoded bytes does a message actually ship at a
+//!    fixed shard count?  The acceptance line for `q8` is ≥ 3× fewer
+//!    encoded bytes than `dense` at equal shard count — printed (and
+//!    checked) by the summary below.
+//!
+//! Run with `cargo bench --bench codec_throughput`; set `BENCH_CSV` or
+//! `BENCH_JSON` for machine-readable output (CI uploads the JSON as
+//! `BENCH_codec.json` to accumulate the perf trajectory).
+
+use gosgd::bench::Bencher;
+use gosgd::gossip::{Codec, CodecSpec, EncodedPayload};
+use gosgd::strategies::engine::Engine;
+use gosgd::strategies::gosgd::GoSgd;
+use gosgd::strategies::grad::NoiseSource;
+use gosgd::tensor::FlatVec;
+use gosgd::util::rng::Rng;
+
+const SHARD_LEN: usize = 1 << 16; // 64k coords ≈ one shard of a 1M model / 16
+
+fn specs() -> Vec<CodecSpec> {
+    vec![
+        CodecSpec::Dense,
+        CodecSpec::TopK { k: SHARD_LEN / 16 },
+        CodecSpec::QuantizeU8,
+    ]
+}
+
+fn main() {
+    let mut b = Bencher::new("codec_throughput");
+    let mut rng = Rng::new(0xC0DE);
+    let payload = FlatVec::randn(SHARD_LEN, 1.0, &mut rng);
+    let raw_bytes = (SHARD_LEN * 4) as u64;
+
+    // Encode throughput (clone cost included uniformly for every codec —
+    // the protocol snapshots the shard either way).
+    for spec in specs() {
+        let codec = spec.build();
+        let mut residual = vec![0.0f32; SHARD_LEN];
+        b.bench_bytes(&format!("encode_{}_64k", spec.label()), raw_bytes, || {
+            std::hint::black_box(codec.encode(payload.clone(), &mut residual));
+        });
+    }
+
+    // Absorb (decode-blend) throughput on a pre-encoded payload.
+    for spec in specs() {
+        let codec = spec.build();
+        let mut residual = vec![0.0f32; SHARD_LEN];
+        let enc = codec.encode(payload.clone(), &mut residual);
+        let mut x = vec![0.0f32; SHARD_LEN];
+        b.bench_bytes(&format!("absorb_{}_64k", spec.label()), raw_bytes, || {
+            enc.blend_into(&mut x, 0.25);
+            std::hint::black_box(&x);
+        });
+    }
+
+    // Wire accounting at a fixed shard count, end to end through the
+    // engine driver (the codec-vs-shard sweep the acceptance line reads).
+    println!("\nconfig                 bytes/msg  raw/msg  compression  messages");
+    let dim = 4096;
+    let shards = 8;
+    let mut dense_per_msg = 0.0f64;
+    for spec in specs() {
+        let src = NoiseSource::new(dim, 0xBEEF);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(
+            Box::new(GoSgd::new(0.4).with_shards(shards).with_codec(spec)),
+            src,
+            8,
+            &init,
+            1.0,
+            0.0,
+            0x5EED,
+        );
+        eng.run(8000).unwrap();
+        let comm = eng.state().comm;
+        assert!(comm.messages > 0);
+        let per_msg = comm.bytes as f64 / comm.messages as f64;
+        let raw_per_msg = comm.raw_bytes as f64 / comm.messages as f64;
+        if spec == CodecSpec::Dense {
+            dense_per_msg = per_msg;
+        }
+        println!(
+            "m8_s{shards}_{:<12} {:>10.0}  {:>7.0}  {:>10.2}x  {:>8}",
+            spec.label(),
+            per_msg,
+            raw_per_msg,
+            raw_per_msg / per_msg,
+            comm.messages
+        );
+        if spec == CodecSpec::QuantizeU8 {
+            let ratio = dense_per_msg / per_msg;
+            assert!(
+                ratio >= 3.0,
+                "acceptance: q8 must ship >= 3x fewer encoded bytes than dense \
+                 at equal shard count, got {ratio:.2}x"
+            );
+            println!("  -> q8 vs dense at equal shard count: {ratio:.2}x fewer encoded bytes");
+        }
+    }
+
+    // One EncodedPayload body-size sanity line per codec (headers aside).
+    println!();
+    for spec in specs() {
+        let codec = spec.build();
+        let mut residual = vec![0.0f32; SHARD_LEN];
+        let enc: EncodedPayload = codec.encode(payload.clone(), &mut residual);
+        println!(
+            "body bytes {}: {} (dense would be {})",
+            spec.label(),
+            enc.payload_wire_bytes(),
+            raw_bytes
+        );
+    }
+
+    b.finish();
+}

@@ -7,7 +7,7 @@
 //! (clone + push + drain + blend).
 
 use gosgd::bench::Bencher;
-use gosgd::gossip::{Message, MessageQueue, SumWeight};
+use gosgd::gossip::{EncodedPayload, Message, MessageQueue, SumWeight};
 use gosgd::tensor::FlatVec;
 use gosgd::util::rng::Rng;
 use std::sync::Arc;
@@ -46,11 +46,12 @@ fn main() {
         let mut x_r = FlatVec::randn(n, 1.0, &mut rng);
         let mut w_r = SumWeight::init(8);
         b.bench_bytes("full_message_path_n1105098", (4 * n * 4) as u64, || {
-            let snapshot = Arc::new(x_s.clone());
+            let snapshot = Arc::new(EncodedPayload::Dense(x_s.clone()));
             q.push(Message::new(snapshot, SumWeight::from_value(0.0625), 0, 0));
             for msg in q.drain() {
                 let t = w_r.absorb(msg.weight);
-                x_r.mix_from(&msg.params, 1.0 - t, t).unwrap();
+                let body = msg.payload.as_dense().expect("dense bench payload");
+                x_r.mix_from(body, 1.0 - t, t).unwrap();
             }
         });
     }

@@ -5,17 +5,18 @@
 //! so the protocol's overhead stays negligible at p = 0.01…1.
 
 use gosgd::bench::Bencher;
-use gosgd::gossip::{Message, MessageQueue, SumWeight};
+use gosgd::gossip::{EncodedPayload, Message, MessageQueue, SumWeight};
 use gosgd::tensor::FlatVec;
 use std::sync::Arc;
 
-fn msg(payload: &Arc<FlatVec>) -> Message {
+fn msg(payload: &Arc<EncodedPayload>) -> Message {
     Message::new(payload.clone(), SumWeight::from_value(0.01), 0, 0)
 }
 
 fn main() {
     let mut b = Bencher::new("queue_throughput");
-    let payload = Arc::new(FlatVec::zeros(1_105_098)); // paper-scale CNN
+    // Paper-scale CNN payload.
+    let payload = Arc::new(EncodedPayload::Dense(FlatVec::zeros(1_105_098)));
 
     // Single-threaded push+drain round trip (payload shared, not copied).
     {
@@ -41,7 +42,7 @@ fn main() {
     // beyond capacity folds two 1.1M-float payloads).
     {
         let q = MessageQueue::bounded(4);
-        let small = Arc::new(FlatVec::zeros(10_000));
+        let small = Arc::new(EncodedPayload::Dense(FlatVec::zeros(10_000)));
         b.bench_elems("bounded_coalesce_10k", 8, || {
             for _ in 0..8 {
                 q.push(Message::new(small.clone(), SumWeight::from_value(0.01), 0, 0));

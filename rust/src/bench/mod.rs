@@ -62,19 +62,36 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Nanoseconds per iteration implied by a warm-up run.  Uses the
+/// *measured* elapsed time, not the warm-up target: a closure slower than
+/// the warm-up window runs exactly once but overshoots the window (one
+/// iteration can take seconds), and dividing the 100 ms target by 1 would
+/// wildly underestimate its cost and inflate the calibrated batch size.
+fn per_iter_ns(elapsed: Duration, iters: u64) -> f64 {
+    elapsed.as_nanos() as f64 / iters.max(1) as f64
+}
+
+/// Iterations per timed sample for a given per-iteration estimate.
+fn iters_per_sample_for(per_iter: f64) -> u64 {
+    ((TARGET_SAMPLE_TIME.as_nanos() as f64 / SAMPLES as f64 / per_iter).ceil() as u64).max(1)
+}
+
 /// Benchmark group runner: times closures and prints a criterion-like table.
 pub struct Bencher {
     group: &'static str,
     results: Vec<Stats>,
     /// Optional CSV output path (`BENCH_CSV` env var).
     csv: Option<std::path::PathBuf>,
+    /// Optional JSON output path (`BENCH_JSON` env var).
+    json: Option<std::path::PathBuf>,
 }
 
 impl Bencher {
     pub fn new(group: &'static str) -> Self {
         println!("\n== bench group: {group} ==");
         let csv = std::env::var_os("BENCH_CSV").map(Into::into);
-        Bencher { group, results: Vec::new(), csv }
+        let json = std::env::var_os("BENCH_JSON").map(Into::into);
+        Bencher { group, results: Vec::new(), csv, json }
     }
 
     /// Time `f`, auto-calibrating iterations per sample.
@@ -100,16 +117,17 @@ impl Bencher {
         mut f: F,
     ) -> &Stats {
         // Warm-up + calibration: how many iters fit in the target window?
+        // The estimate divides the *measured* elapsed time by the iteration
+        // count — see `per_iter_ns` for why the warm-up target must not be
+        // used as the numerator.
         let warm_start = Instant::now();
         let mut warm_iters: u64 = 0;
         while warm_start.elapsed() < WARMUP_TIME {
             f();
             warm_iters += 1;
         }
-        let per_iter = WARMUP_TIME.as_nanos() as f64 / warm_iters.max(1) as f64;
-        let iters_per_sample =
-            ((TARGET_SAMPLE_TIME.as_nanos() as f64 / SAMPLES as f64 / per_iter).ceil() as u64)
-                .max(1);
+        let per_iter = per_iter_ns(warm_start.elapsed(), warm_iters);
+        let iters_per_sample = iters_per_sample_for(per_iter);
 
         let mut samples_ns = Vec::with_capacity(SAMPLES);
         for _ in 0..SAMPLES {
@@ -152,20 +170,67 @@ impl Bencher {
         );
     }
 
-    /// Write CSV (if requested) and return the collected stats.
+    /// Write CSV / JSON (if requested) and return the collected stats.
+    /// A failed write aborts loudly: a bench run whose requested artifact
+    /// silently vanished would poison the perf trajectory with gaps.
     pub fn finish(self) -> Vec<Stats> {
         if let Some(path) = &self.csv {
-            let mut out = String::from("group,name,mean_ns,stddev_ns,p50_ns,p95_ns,iters\n");
-            for s in &self.results {
-                out.push_str(&format!(
-                    "{},{},{},{},{},{},{}\n",
-                    self.group, s.name, s.mean_ns, s.stddev_ns, s.p50_ns, s.p95_ns, s.iters
-                ));
-            }
-            let _ = std::fs::write(path, out);
+            std::fs::write(path, csv_text(self.group, &self.results)).unwrap_or_else(|e| {
+                panic!("BENCH_CSV: cannot write {}: {e}", path.display())
+            });
+        }
+        if let Some(path) = &self.json {
+            std::fs::write(path, json_text(self.group, &self.results)).unwrap_or_else(|e| {
+                panic!("BENCH_JSON: cannot write {}: {e}", path.display())
+            });
         }
         self.results
     }
+}
+
+/// CSV rendering of a bench group's results (`BENCH_CSV`).
+fn csv_text(group: &str, results: &[Stats]) -> String {
+    let mut out = String::from("group,name,mean_ns,stddev_ns,p50_ns,p95_ns,iters\n");
+    for s in results {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{}\n",
+            group, s.name, s.mean_ns, s.stddev_ns, s.p50_ns, s.p95_ns, s.iters
+        ));
+    }
+    out
+}
+
+/// JSON rendering of a bench group's results (`BENCH_JSON`) — one object
+/// per benchmark, machine-readable for the CI perf trajectory.  Names are
+/// bench identifiers (no quoting hazards beyond `"` and `\`, escaped
+/// anyway for safety).
+fn json_text(group: &str, results: &[Stats]) -> String {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    fn opt(v: Option<u64>) -> String {
+        v.map_or_else(|| "null".into(), |x| x.to_string())
+    }
+    let rows: Vec<String> = results
+        .iter()
+        .map(|s| {
+            format!(
+                "  {{\"group\":\"{}\",\"name\":\"{}\",\"mean_ns\":{},\"stddev_ns\":{},\
+                 \"p50_ns\":{},\"p95_ns\":{},\"iters\":{},\"bytes_per_iter\":{},\
+                 \"elems_per_iter\":{}}}",
+                esc(group),
+                esc(&s.name),
+                s.mean_ns,
+                s.stddev_ns,
+                s.p50_ns,
+                s.p95_ns,
+                s.iters,
+                opt(s.bytes_per_iter),
+                opt(s.elems_per_iter),
+            )
+        })
+        .collect();
+    format!("[\n{}\n]\n", rows.join(",\n"))
 }
 
 #[cfg(test)]
@@ -178,6 +243,52 @@ mod tests {
         assert_eq!(fmt_ns(12_300.0), "12.30 µs");
         assert_eq!(fmt_ns(12_300_000.0), "12.30 ms");
         assert_eq!(fmt_ns(2_000_000_000.0), "2.000 s");
+    }
+
+    #[test]
+    fn calibration_uses_measured_elapsed_not_the_warmup_target() {
+        // Regression: a closure slower than the warm-up window runs once
+        // and takes (say) 2 s.  Dividing the 100 ms warm-up *target* by 1
+        // would claim 100 ms/iter — 20x too fast.  The estimate must use
+        // the measured elapsed time.
+        let est = per_iter_ns(Duration::from_secs(2), 1);
+        assert_eq!(est, 2e9, "per-iter estimate must reflect the 2 s reality");
+        // And the batch calibration keeps slow closures at 1 iter/sample
+        // instead of inflating the count off a bogus estimate.
+        assert_eq!(iters_per_sample_for(est), 1);
+        // Fast closures still batch up to fill the sample window.
+        let fast = per_iter_ns(Duration::from_millis(100), 100_000);
+        assert!(iters_per_sample_for(fast) > 1000);
+    }
+
+    #[test]
+    fn csv_and_json_render_all_fields() {
+        let stats = vec![Stats {
+            name: "blend".into(),
+            mean_ns: 1500.0,
+            stddev_ns: 10.0,
+            p50_ns: 1490.0,
+            p95_ns: 1525.0,
+            iters: 4000,
+            bytes_per_iter: Some(4096),
+            elems_per_iter: None,
+        }];
+        let csv = csv_text("codec", &stats);
+        assert!(csv.starts_with("group,name,mean_ns"));
+        assert!(csv.contains("codec,blend,1500,10,1490,1525,4000"));
+        let json = json_text("codec", &stats);
+        assert!(json.trim_start().starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"group\":\"codec\""));
+        assert!(json.contains("\"name\":\"blend\""));
+        assert!(json.contains("\"bytes_per_iter\":4096"));
+        assert!(json.contains("\"elems_per_iter\":null"));
+        // It must be parseable by the crate's own JSON reader.
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        let rows = parsed.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str().unwrap(), "blend");
+        assert_eq!(rows[0].get("iters").unwrap().as_usize().unwrap(), 4000);
     }
 
     #[test]

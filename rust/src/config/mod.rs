@@ -4,7 +4,7 @@
 use std::path::PathBuf;
 
 use crate::error::{Error, Result};
-use crate::gossip::PeerSelector;
+use crate::gossip::{CodecSpec, PeerSelector};
 use crate::optim::LrSchedule;
 use crate::strategies::{
     allreduce::AllReduce, downpour::Downpour, easgd::Easgd, gosgd::GoSgd, local::Local,
@@ -18,8 +18,10 @@ pub enum StrategyKind {
     GoSgd { p: f64 },
     /// GoSGD with sharded exchange: each gossip event ships one of
     /// `shards` contiguous slices of the vector (see
-    /// [`crate::gossip::shard`]), cutting per-event bandwidth `~1/shards`.
-    GoSgdSharded { p: f64, shards: usize },
+    /// [`crate::gossip::shard`]), cutting per-event bandwidth `~1/shards`;
+    /// `codec` optionally compresses the payload body on top (see
+    /// [`crate::gossip::codec`]).
+    GoSgdSharded { p: f64, shards: usize, codec: CodecSpec },
     /// Periodic synchronization every `tau` rounds (section 3.1).
     PerSyn { tau: u64 },
     /// Elastic averaging every `tau` rounds (section 3.2).
@@ -34,7 +36,8 @@ pub enum StrategyKind {
 
 impl StrategyKind {
     /// Parse a CLI strategy spec:
-    /// `gosgd:0.02`, `gosgd:0.02:8` (sharded), `persyn:50`,
+    /// `gosgd:0.02`, `gosgd:0.02:8` (sharded), `gosgd:0.02:8:q8`
+    /// (sharded + codec: `dense` | `q8` | `top<K>`), `persyn:50`,
     /// `easgd:0.1:50`, `downpour:4:4`, `allreduce`, `local`.
     pub fn parse(text: &str) -> Result<StrategyKind> {
         let parts: Vec<&str> = text.split(':').collect();
@@ -46,16 +49,25 @@ impl StrategyKind {
             }
             Ok(p)
         };
+        let parse_shards = |shards: &str| -> Result<usize> {
+            let shards: usize = shards.parse().map_err(|_| bad())?;
+            if shards == 0 {
+                return Err(Error::config("gosgd shards must be >= 1"));
+            }
+            Ok(shards)
+        };
         match parts.as_slice() {
             ["gosgd", p] => Ok(StrategyKind::GoSgd { p: parse_p(p)? }),
-            ["gosgd", p, shards] => {
-                let p = parse_p(p)?;
-                let shards: usize = shards.parse().map_err(|_| bad())?;
-                if shards == 0 {
-                    return Err(Error::config("gosgd shards must be >= 1"));
-                }
-                Ok(StrategyKind::GoSgdSharded { p, shards })
-            }
+            ["gosgd", p, shards] => Ok(StrategyKind::GoSgdSharded {
+                p: parse_p(p)?,
+                shards: parse_shards(shards)?,
+                codec: CodecSpec::Dense,
+            }),
+            ["gosgd", p, shards, codec] => Ok(StrategyKind::GoSgdSharded {
+                p: parse_p(p)?,
+                shards: parse_shards(shards)?,
+                codec: CodecSpec::parse(codec)?,
+            }),
             ["persyn", tau] => Ok(StrategyKind::PerSyn { tau: tau.parse().map_err(|_| bad())? }),
             ["easgd", alpha, tau] => Ok(StrategyKind::Easgd {
                 alpha: alpha.parse().map_err(|_| bad())?,
@@ -75,7 +87,12 @@ impl StrategyKind {
     pub fn tag(&self) -> String {
         match self {
             StrategyKind::GoSgd { p } => format!("gosgd_p{p}"),
-            StrategyKind::GoSgdSharded { p, shards } => format!("gosgd_p{p}_s{shards}"),
+            StrategyKind::GoSgdSharded { p, shards, codec: CodecSpec::Dense } => {
+                format!("gosgd_p{p}_s{shards}")
+            }
+            StrategyKind::GoSgdSharded { p, shards, codec } => {
+                format!("gosgd_p{p}_s{shards}_{}", codec.label())
+            }
             StrategyKind::PerSyn { tau } => format!("persyn_tau{tau}"),
             StrategyKind::Easgd { alpha, tau } => format!("easgd_a{alpha}_tau{tau}"),
             StrategyKind::Downpour { n_push, n_fetch } => {
@@ -186,9 +203,12 @@ impl RunConfig {
             }
             _ => {}
         }
-        if let StrategyKind::GoSgdSharded { shards, .. } = self.strategy {
+        if let StrategyKind::GoSgdSharded { shards, codec, .. } = self.strategy {
             if shards == 0 {
                 return Err(Error::config("gosgd shards must be >= 1"));
+            }
+            if codec == (CodecSpec::TopK { k: 0 }) {
+                return Err(Error::config("top-k codec needs k >= 1"));
             }
         }
         if self.steps == 0 {
@@ -203,10 +223,11 @@ impl RunConfig {
             StrategyKind::GoSgd { p } => {
                 Box::new(GoSgd::new(*p).with_selector(self.peer.clone()))
             }
-            StrategyKind::GoSgdSharded { p, shards } => Box::new(
+            StrategyKind::GoSgdSharded { p, shards, codec } => Box::new(
                 GoSgd::new(*p)
                     .with_selector(self.peer.clone())
-                    .with_shards(*shards),
+                    .with_shards(*shards)
+                    .with_codec(*codec),
             ),
             StrategyKind::PerSyn { tau } => Box::new(PerSyn::new(*tau)),
             StrategyKind::Easgd { alpha, tau } => Box::new(Easgd::new(*alpha, *tau)),
@@ -236,7 +257,23 @@ mod tests {
         );
         assert_eq!(
             StrategyKind::parse("gosgd:0.02:8").unwrap(),
-            StrategyKind::GoSgdSharded { p: 0.02, shards: 8 }
+            StrategyKind::GoSgdSharded { p: 0.02, shards: 8, codec: CodecSpec::Dense }
+        );
+        assert_eq!(
+            StrategyKind::parse("gosgd:0.02:8:q8").unwrap(),
+            StrategyKind::GoSgdSharded { p: 0.02, shards: 8, codec: CodecSpec::QuantizeU8 }
+        );
+        assert_eq!(
+            StrategyKind::parse("gosgd:0.02:8:top16").unwrap(),
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::TopK { k: 16 }
+            }
+        );
+        assert_eq!(
+            StrategyKind::parse("gosgd:0.02:8:dense").unwrap(),
+            StrategyKind::GoSgdSharded { p: 0.02, shards: 8, codec: CodecSpec::Dense }
         );
         assert_eq!(
             StrategyKind::parse("persyn:50").unwrap(),
@@ -260,6 +297,9 @@ mod tests {
         assert!(StrategyKind::parse("gosgd:2.0").is_err());
         assert!(StrategyKind::parse("gosgd:0.1:0").is_err());
         assert!(StrategyKind::parse("gosgd:0.1:abc").is_err());
+        assert!(StrategyKind::parse("gosgd:0.1:8:zstd").is_err());
+        assert!(StrategyKind::parse("gosgd:0.1:8:top0").is_err());
+        assert!(StrategyKind::parse("gosgd:0.1:8:q8:extra").is_err());
         assert!(StrategyKind::parse("persyn:abc").is_err());
         assert!(StrategyKind::parse("").is_err());
         assert!(StrategyKind::parse("easgd:0.1").is_err());
@@ -285,8 +325,12 @@ mod tests {
     fn build_strategy_names() {
         let mut cfg = RunConfig::default();
         assert!(cfg.build_strategy().name().starts_with("gosgd"));
-        cfg.strategy = StrategyKind::GoSgdSharded { p: 0.02, shards: 4 };
+        cfg.strategy =
+            StrategyKind::GoSgdSharded { p: 0.02, shards: 4, codec: CodecSpec::Dense };
         assert!(cfg.build_strategy().name().contains("shards=4"));
+        cfg.strategy =
+            StrategyKind::GoSgdSharded { p: 0.02, shards: 4, codec: CodecSpec::QuantizeU8 };
+        assert!(cfg.build_strategy().name().contains("codec=q8"));
         cfg.strategy = StrategyKind::PerSyn { tau: 7 };
         assert!(cfg.build_strategy().name().contains("tau=7"));
         cfg.strategy = StrategyKind::Local;
@@ -297,7 +341,13 @@ mod tests {
     fn tags_are_filename_safe() {
         for s in [
             StrategyKind::GoSgd { p: 0.02 },
-            StrategyKind::GoSgdSharded { p: 0.02, shards: 8 },
+            StrategyKind::GoSgdSharded { p: 0.02, shards: 8, codec: CodecSpec::Dense },
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::TopK { k: 32 },
+            },
+            StrategyKind::GoSgdSharded { p: 0.02, shards: 8, codec: CodecSpec::QuantizeU8 },
             StrategyKind::PerSyn { tau: 50 },
             StrategyKind::Easgd { alpha: 0.1, tau: 50 },
             StrategyKind::Downpour { n_push: 1, n_fetch: 2 },

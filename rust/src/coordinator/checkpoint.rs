@@ -59,6 +59,16 @@ impl Checkpoint {
                  stores a single weight per worker)",
             ));
         }
+        if state.cores[0].codec_spec().stateful() {
+            // The top-k codec's error-feedback buffer is live protocol
+            // state; dropping it silently would un-track pending residual
+            // mass across a restart.  (Stateless codecs — dense, q8 —
+            // checkpoint fine: their wire form carries no sender state.)
+            return Err(Error::config(
+                "checkpointing top-k gossip runs is not supported (format v1 \
+                 does not store the error-feedback residual)",
+            ));
+        }
         // Drain all mailboxes into their owners (exact: blend associativity;
         // the blend itself is the protocol core's absorb transition).
         for w in 1..=m {
@@ -223,7 +233,6 @@ mod tests {
     use super::*;
     use crate::gossip::Message;
     use crate::util::rng::Rng;
-    use std::sync::Arc;
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("gosgd_ckpt_{name}.bin"))
@@ -274,8 +283,8 @@ mod tests {
         // Put a message in flight: sender 1 ships half its weight to 2
         // (the core's send-side transition, minus the payload snapshot).
         let (_, shipped) = state.cores[1].begin_send();
-        let snapshot = Arc::new(state.stacked.worker(1).clone());
-        state.queues[2].push(Message::new(snapshot, shipped, 1, 0));
+        let snapshot = state.stacked.worker(1).clone();
+        state.queues[2].push(Message::dense(snapshot, shipped, 1, 0));
         let ckpt = Checkpoint::capture(&mut state).unwrap();
         assert!((ckpt.total_weight() - 1.0).abs() < 1e-9, "{}", ckpt.total_weight());
     }
@@ -304,6 +313,22 @@ mod tests {
         std::fs::write(&path, &bytes[..bytes.len() - 30]).unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn topk_codec_state_refuses_capture() {
+        use crate::gossip::{CodecSpec, PeerSelector};
+        let mut state = populated_state(2, 16, 9);
+        state
+            .configure_gossip(0.5, &PeerSelector::Uniform, 1, CodecSpec::TopK { k: 4 })
+            .unwrap();
+        let err = Checkpoint::capture(&mut state).unwrap_err();
+        assert!(err.to_string().contains("error-feedback"), "{err}");
+        // The stateless codecs checkpoint fine.
+        state
+            .configure_gossip(0.5, &PeerSelector::Uniform, 1, CodecSpec::QuantizeU8)
+            .unwrap();
+        assert!(Checkpoint::capture(&mut state).is_ok());
     }
 
     #[test]

@@ -34,8 +34,19 @@ impl BatchSampler {
 
     /// Training batch for `worker` (1-based, engine slot convention) at its
     /// `local_step`.
+    ///
+    /// The worker id is checked unconditionally (not `debug_assert!`):
+    /// in a release build an out-of-range id would silently alias another
+    /// worker's sample stream — e.g. `worker = workers + 1` at step `t`
+    /// reads exactly worker 1's samples from step `t + 1` — destroying the
+    /// disjointness invariant this module promises without any visible
+    /// failure.
     pub fn train_batch(&self, worker: usize, local_step: u64) -> Batch {
-        debug_assert!(worker >= 1 && worker <= self.workers);
+        assert!(
+            worker >= 1 && worker <= self.workers,
+            "worker id {worker} out of range 1..={} (would alias another worker's samples)",
+            self.workers
+        );
         // Global sample index: interleave workers so the union over workers
         // at a given step is a contiguous range (mirrors "splitting the
         // batch in subsets", section 2.1).
@@ -128,6 +139,20 @@ mod tests {
         let mut combined = w1.images.clone();
         combined.extend_from_slice(&w2.images);
         assert_eq!(combined, all.images);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range 1..=")]
+    fn worker_zero_is_rejected_in_release_builds_too() {
+        sampler(4, 2).train_batch(0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range 1..=")]
+    fn worker_above_the_fleet_is_rejected() {
+        // Without the hard check this id would silently read worker 1's
+        // step-1 samples (the aliasing the module doc rules out).
+        sampler(4, 2).train_batch(5, 0);
     }
 
     #[test]

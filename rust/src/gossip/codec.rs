@@ -1,0 +1,602 @@
+//! Payload codecs: compress the gossip message body on the wire.
+//!
+//! Sharding (PR 1) cut the *per-event* cost to one slice of the vector;
+//! the codec layer cuts the cost of the slice itself.  GossipGraD (Daily
+//! et al., 2018) and Jin et al. (2016) both identify communication volume
+//! as the binding constraint of distributed SGD at scale — and because the
+//! whole protocol lives in [`ProtocolCore`](crate::gossip::ProtocolCore),
+//! a codec plugged in there is inherited by all three runtimes (sequential
+//! engine, OS threads, discrete-event simulator) at once.
+//!
+//! Three codecs implement the [`Codec`] trait:
+//!
+//! * [`Dense`] — identity.  The payload ships as raw `f32`s; today's
+//!   behavior, bit-exact.
+//! * [`TopK`] — ship only the `k` coordinates with the largest
+//!   *un-communicated change*, each as an `(index, value)` pair carrying
+//!   the sender's **exact** current value.  The per-shard error-feedback
+//!   buffer holds the last-shipped snapshot of every coordinate; the
+//!   selection score `|x_i − shipped_i|` means mass dropped from one send
+//!   (a coordinate that changed but did not make the top k) keeps
+//!   accumulating score until a later send ships it.  On absorb, the
+//!   receiver blends only the listed coordinates — untouched coordinates
+//!   keep their value while the shard's sum weight still absorbs the
+//!   sender's full shipped weight.  Weight conservation therefore stays
+//!   exact; *value* transport is exact only up to the residual
+//!   `x − shipped` tracked in the buffer (see the round-trip tests).
+//! * [`QuantizeU8`] — per-shard affine u8 quantization: 1 byte per
+//!   coordinate plus two `f32`s (`min`, `step`).  Dequantize-blend on
+//!   absorb is deterministic, so every runtime blends the identical
+//!   dequantized values and sum-weight conservation is bit-exact.
+//!
+//! Wire format per codec (payload body only; every message additionally
+//! pays the shared header model of
+//! [`wire_bytes_for`](crate::gossip::wire_bytes_for)):
+//!
+//! | codec   | body bytes                          | exactness                       |
+//! |---------|-------------------------------------|---------------------------------|
+//! | `dense` | `4·len`                             | bit-exact                       |
+//! | `topK`  | `8·k` (`k ≥ len` ships dense `4·len`) | exact values, partial coverage |
+//! | `q8`    | `len + 8`                           | ±`(max−min)/510` per coordinate |
+//!
+//! [`CodecSpec`] is the plain-data description used by configuration and
+//! the CLI (`gosgd:P:SHARDS:CODEC` accepts `dense`, `q8`, `topK` as in
+//! `top32`); [`CodecSpec::build`] materializes the trait object the core
+//! encodes with.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::tensor::{self, FlatVec};
+
+/// Plain-data codec description: parseable, comparable, copyable — the
+/// form carried by configs, CLIs and reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CodecSpec {
+    /// Identity: raw `f32` payloads (the paper's wire format).
+    #[default]
+    Dense,
+    /// Keep the `k` coordinates with the largest un-shipped change.
+    TopK { k: usize },
+    /// Per-shard affine u8 quantization.
+    QuantizeU8,
+}
+
+impl CodecSpec {
+    /// Parse the CLI token: `dense`, `q8`, or `top<K>` (e.g. `top32`).
+    pub fn parse(text: &str) -> Result<CodecSpec> {
+        match text {
+            "dense" => Ok(CodecSpec::Dense),
+            "q8" => Ok(CodecSpec::QuantizeU8),
+            _ => {
+                if let Some(k) = text.strip_prefix("top") {
+                    let k: usize = k
+                        .parse()
+                        .map_err(|_| Error::config(format!("cannot parse codec {text:?}")))?;
+                    if k == 0 {
+                        return Err(Error::config("top-k codec needs k >= 1"));
+                    }
+                    Ok(CodecSpec::TopK { k })
+                } else {
+                    Err(Error::config(format!(
+                        "unknown codec {text:?} (expected dense | q8 | top<K>)"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// The CLI token / report label for this codec.
+    pub fn label(&self) -> String {
+        match self {
+            CodecSpec::Dense => "dense".into(),
+            CodecSpec::TopK { k } => format!("top{k}"),
+            CodecSpec::QuantizeU8 => "q8".into(),
+        }
+    }
+
+    /// Materialize the encoder.
+    pub fn build(&self) -> CodecRef {
+        match *self {
+            CodecSpec::Dense => Arc::new(Dense),
+            CodecSpec::TopK { k } => Arc::new(TopK { k }),
+            CodecSpec::QuantizeU8 => Arc::new(QuantizeU8),
+        }
+    }
+
+    /// Whether this codec keeps per-shard encoder state in the core (only
+    /// [`CodecSpec::TopK`]'s error-feedback buffer today).
+    pub fn stateful(&self) -> bool {
+        matches!(self, CodecSpec::TopK { .. })
+    }
+
+    /// Encoded payload-body bytes for a shard of `len` coordinates —
+    /// the planning-side mirror of [`EncodedPayload::payload_wire_bytes`]
+    /// (used to match bandwidth across codecs before running anything).
+    pub fn payload_wire_bytes(&self, len: usize) -> usize {
+        match *self {
+            CodecSpec::Dense => 4 * len,
+            // k >= len degenerates to a dense body (see TopK::encode).
+            CodecSpec::TopK { k } if k >= len => 4 * len,
+            CodecSpec::TopK { k } => 8 * k,
+            CodecSpec::QuantizeU8 => len + 8,
+        }
+    }
+}
+
+/// A payload codec: turns one shard's raw coordinates into the form that
+/// goes on the wire.  Implementations must be deterministic — all three
+/// runtimes drive the same cores and the cross-runtime equivalence tests
+/// demand identical trajectories.
+pub trait Codec: Send + Sync + std::fmt::Debug {
+    /// The plain-data description of this codec.
+    fn spec(&self) -> CodecSpec;
+
+    /// Encode one shard payload.  `residual` is the caller-owned
+    /// error-feedback state for this shard: empty for stateless codecs,
+    /// exactly `payload.len()` entries (the last-shipped snapshot) for
+    /// [`TopK`], updated in place.
+    fn encode(&self, payload: FlatVec, residual: &mut [f32]) -> EncodedPayload;
+}
+
+/// Shared handle to a codec (protocol cores are `Clone`).
+pub type CodecRef = Arc<dyn Codec>;
+
+/// Identity codec: the payload ships as raw `f32`s.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Dense;
+
+impl Codec for Dense {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Dense
+    }
+
+    fn encode(&self, payload: FlatVec, _residual: &mut [f32]) -> EncodedPayload {
+        EncodedPayload::Dense(payload)
+    }
+}
+
+/// Top-k sparsifier with error feedback.
+///
+/// Ships `(index, value)` pairs for the `k` coordinates whose current
+/// value differs most from the value last shipped for that coordinate
+/// (first send: from zero, i.e. plain largest-magnitude).  The shipped
+/// values are the sender's exact current coordinates, so every blend the
+/// receiver performs is the protocol's exact convex blend — sparsity only
+/// limits *which* coordinates move per message, and the residual buffer
+/// guarantees a persistently-changed coordinate cannot be starved: its
+/// score grows until it wins a later send.
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    /// Coordinates kept per shard message (`>= 1`).
+    pub k: usize,
+}
+
+impl Codec for TopK {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::TopK { k: self.k }
+    }
+
+    fn encode(&self, payload: FlatVec, residual: &mut [f32]) -> EncodedPayload {
+        assert!(self.k >= 1, "top-k codec needs k >= 1");
+        let n = payload.len();
+        if n == 0 {
+            return EncodedPayload::Dense(payload);
+        }
+        assert_eq!(
+            residual.len(),
+            n,
+            "top-k error-feedback buffer length {} vs payload {}",
+            residual.len(),
+            n
+        );
+        if self.k >= n {
+            // Degenerate: everything fits — ship dense, snapshot all.
+            residual.copy_from_slice(payload.as_slice());
+            return EncodedPayload::Dense(payload);
+        }
+        let xs = payload.as_slice();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        // Partition so the k largest |x - shipped| scores come first; the
+        // comparator is descending, with total_cmp so NaN payloads cannot
+        // panic the protocol.
+        {
+            let score = |i: u32| (xs[i as usize] - residual[i as usize]).abs();
+            order.select_nth_unstable_by(self.k - 1, |&a, &b| score(b).total_cmp(&score(a)));
+        }
+        let mut indices = order[..self.k].to_vec();
+        indices.sort_unstable();
+        let values: Vec<f32> = indices.iter().map(|&i| xs[i as usize]).collect();
+        // Shipped coordinates are now fully communicated; the rest keep
+        // their accumulated residual |x - shipped| for later sends.
+        for (&i, &v) in indices.iter().zip(&values) {
+            residual[i as usize] = v;
+        }
+        EncodedPayload::TopK { len: n, indices, values }
+    }
+}
+
+/// Per-shard affine u8 quantizer: `code = round((x − min)/step)`,
+/// `step = (max − min)/255`.  A constant shard (or an empty one) encodes
+/// with `step = 0` and round-trips bit-exactly; a shard containing a
+/// non-finite value falls back to a dense body rather than poisoning the
+/// whole range.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuantizeU8;
+
+impl Codec for QuantizeU8 {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::QuantizeU8
+    }
+
+    fn encode(&self, payload: FlatVec, _residual: &mut [f32]) -> EncodedPayload {
+        let mut min = f32::INFINITY;
+        let mut max = f32::NEG_INFINITY;
+        // Track finiteness explicitly: `f32::min`/`max` *ignore* NaN
+        // operands, so a NaN coordinate would otherwise slip past a
+        // min/max-finiteness check and be silently quantized to `min`.
+        let mut finite = true;
+        for &v in payload.as_slice() {
+            finite &= v.is_finite();
+            min = min.min(v);
+            max = max.max(v);
+        }
+        if !(finite && min.is_finite() && max.is_finite()) {
+            // Empty or non-finite payloads: lossless fallback.
+            return EncodedPayload::Dense(payload);
+        }
+        let range = max - min;
+        let step = range / 255.0;
+        let inv = if range > 0.0 { 255.0 / range } else { 0.0 };
+        let codes = payload
+            .as_slice()
+            .iter()
+            .map(|&v| ((v - min) * inv).round().clamp(0.0, 255.0) as u8)
+            .collect();
+        EncodedPayload::QuantU8 { min, step, codes }
+    }
+}
+
+/// One shard payload in its on-the-wire form.
+///
+/// The decode side is fused into [`EncodedPayload::blend_into`] — the
+/// absorb transition never materializes a dense intermediate for the
+/// sparse/quantized forms.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EncodedPayload {
+    /// Raw `f32` coordinates (also the fallback the other codecs degrade
+    /// to on degenerate input).
+    Dense(FlatVec),
+    /// Sparse `(index, value)` pairs over a shard of `len` coordinates;
+    /// indices are strictly ascending and unique.
+    TopK {
+        len: usize,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    },
+    /// Affine u8: `value_i = min + step · codes[i]`.
+    QuantU8 { min: f32, step: f32, codes: Vec<u8> },
+}
+
+impl EncodedPayload {
+    /// Number of shard coordinates this payload covers (the decoded
+    /// length, not the number of values carried).
+    pub fn coord_count(&self) -> usize {
+        match self {
+            EncodedPayload::Dense(v) => v.len(),
+            EncodedPayload::TopK { len, .. } => *len,
+            EncodedPayload::QuantU8 { codes, .. } => codes.len(),
+        }
+    }
+
+    /// Payload-body bytes on the wire (headers are accounted separately —
+    /// see [`wire_bytes_for`](crate::gossip::wire_bytes_for)).
+    pub fn payload_wire_bytes(&self) -> usize {
+        match self {
+            EncodedPayload::Dense(v) => 4 * v.len(),
+            EncodedPayload::TopK { indices, .. } => 8 * indices.len(),
+            EncodedPayload::QuantU8 { codes, .. } => codes.len() + 8,
+        }
+    }
+
+    /// Whether queue coalescing may fold this payload with another of the
+    /// same shard by decoding.  Sparse payloads must not fold: they carry
+    /// no value for the unlisted coordinates ("receiver keeps its own"),
+    /// so any dense stand-in would corrupt them.
+    pub fn coalescible(&self) -> bool {
+        !matches!(self, EncodedPayload::TopK { .. })
+    }
+
+    /// Direct access to a dense body, if this is one.
+    pub fn as_dense(&self) -> Option<&FlatVec> {
+        match self {
+            EncodedPayload::Dense(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Materialize a dense vector.  For [`EncodedPayload::TopK`] the
+    /// unlisted coordinates decode to 0 — that is the *serialization*
+    /// round trip, not the absorb semantics (absorb leaves them alone;
+    /// use [`EncodedPayload::blend_into`]).
+    pub fn decode(&self) -> FlatVec {
+        match self {
+            EncodedPayload::Dense(v) => v.clone(),
+            EncodedPayload::TopK { len, indices, values } => {
+                let mut out = vec![0.0f32; *len];
+                for (&i, &v) in indices.iter().zip(values) {
+                    out[i as usize] = v;
+                }
+                FlatVec::from_vec(out)
+            }
+            EncodedPayload::QuantU8 { min, step, codes } => FlatVec::from_vec(
+                codes.iter().map(|&c| min + step * c as f32).collect(),
+            ),
+        }
+    }
+
+    /// The absorb kernel: blend this payload into the shard's coordinate
+    /// range `x` (exactly `coord_count()` elements) with coefficient `t`
+    /// — `x_i += t·(v_i − x_i)` for every coordinate the payload carries.
+    /// Coordinates a sparse payload does not list keep their value.
+    pub fn blend_into(&self, x: &mut [f32], t: f32) {
+        debug_assert_eq!(x.len(), self.coord_count(), "payload vs shard range");
+        match self {
+            EncodedPayload::Dense(v) => tensor::mix_into(x, v.as_slice(), t),
+            EncodedPayload::TopK { indices, values, .. } => {
+                for (&i, &v) in indices.iter().zip(values) {
+                    let xi = &mut x[i as usize];
+                    *xi += t * (v - *xi);
+                }
+            }
+            EncodedPayload::QuantU8 { min, step, codes } => {
+                for (xi, &c) in x.iter_mut().zip(codes) {
+                    let v = min + step * c as f32;
+                    *xi += t * (v - *xi);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, n: usize) -> FlatVec {
+        FlatVec::randn(n, 1.0, rng)
+    }
+
+    #[test]
+    fn spec_parse_and_label_round_trip() {
+        for spec in [CodecSpec::Dense, CodecSpec::TopK { k: 32 }, CodecSpec::QuantizeU8] {
+            assert_eq!(CodecSpec::parse(&spec.label()).unwrap(), spec);
+            assert_eq!(spec.build().spec(), spec);
+        }
+        assert!(CodecSpec::parse("top0").is_err());
+        assert!(CodecSpec::parse("topx").is_err());
+        assert!(CodecSpec::parse("zstd").is_err());
+        assert!(CodecSpec::parse("").is_err());
+    }
+
+    #[test]
+    fn wire_size_table() {
+        // The documented per-codec body sizes, and their planning mirror.
+        let n = 1000;
+        let mut rng = Rng::new(1);
+        let payload = randn(&mut rng, n);
+        let mut residual = vec![0.0f32; n];
+        let dense = Dense.encode(payload.clone(), &mut []);
+        assert_eq!(dense.payload_wire_bytes(), 4 * n);
+        let topk = TopK { k: 25 }.encode(payload.clone(), &mut residual);
+        assert_eq!(topk.payload_wire_bytes(), 8 * 25);
+        let q8 = QuantizeU8.encode(payload.clone(), &mut []);
+        assert_eq!(q8.payload_wire_bytes(), n + 8);
+        for spec in [CodecSpec::Dense, CodecSpec::TopK { k: 25 }, CodecSpec::QuantizeU8] {
+            let enc = spec.build().encode(payload.clone(), &mut vec![0.0f32; n]);
+            assert_eq!(
+                enc.payload_wire_bytes(),
+                spec.payload_wire_bytes(n),
+                "planning mirror diverged for {}",
+                spec.label()
+            );
+        }
+    }
+
+    #[test]
+    fn dense_round_trip_is_bit_exact() {
+        check("dense round trip", 20, |rng| {
+            let n = 1 + rng.below(300) as usize;
+            let payload = randn(rng, n);
+            let enc = Dense.encode(payload.clone(), &mut []);
+            assert_eq!(enc.decode().as_slice(), payload.as_slice());
+            assert_eq!(enc.coord_count(), n);
+        });
+    }
+
+    #[test]
+    fn quantize_round_trip_within_half_step() {
+        check("q8 round trip", 30, |rng| {
+            let n = 2 + rng.below(400) as usize;
+            let payload = randn(rng, n);
+            let enc = QuantizeU8.encode(payload.clone(), &mut []);
+            let dec = enc.decode();
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &v in payload.as_slice() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let tol = (hi - lo) / 255.0 / 2.0 + 1e-6;
+            for (a, b) in payload.as_slice().iter().zip(dec.as_slice()) {
+                assert!((a - b).abs() <= tol, "{a} vs {b} (tol {tol})");
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_constant_and_degenerate_inputs() {
+        // A constant shard round-trips bit-exactly (step 0).
+        let payload = FlatVec::from_vec(vec![3.5; 64]);
+        let enc = QuantizeU8.encode(payload.clone(), &mut []);
+        assert_eq!(enc.decode().as_slice(), payload.as_slice());
+        // Non-finite input falls back to a lossless dense body — including
+        // NaN, which `f32::min`/`max` would silently skip over.
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let payload = FlatVec::from_vec(vec![1.0, bad, 2.0]);
+            let enc = QuantizeU8.encode(payload.clone(), &mut []);
+            assert!(enc.as_dense().is_some(), "expected dense fallback for {bad}");
+            assert_eq!(
+                enc.decode().as_slice()[0],
+                1.0,
+                "fallback must be lossless"
+            );
+        }
+        // Empty payload: dense fallback, zero coordinates.
+        let enc = QuantizeU8.encode(FlatVec::zeros(0), &mut []);
+        assert_eq!(enc.coord_count(), 0);
+    }
+
+    #[test]
+    fn quantize_endpoints_are_exact() {
+        let payload = FlatVec::from_vec(vec![-2.0, 0.5, 6.0]);
+        let enc = QuantizeU8.encode(payload, &mut []);
+        let dec = enc.decode();
+        assert_eq!(dec.as_slice()[0], -2.0, "min maps to code 0 exactly");
+        let hi = dec.as_slice()[2];
+        assert!((hi - 6.0).abs() < 1e-4, "max maps to code 255: {hi}");
+    }
+
+    #[test]
+    fn topk_ships_exact_values_and_tracks_the_rest() {
+        // First send (zeroed buffer): selection is by raw magnitude.
+        let payload = FlatVec::from_vec(vec![0.1, -5.0, 0.2, 4.0, -0.3, 0.0]);
+        let mut residual = vec![0.0f32; 6];
+        let enc = TopK { k: 2 }.encode(payload.clone(), &mut residual);
+        match &enc {
+            EncodedPayload::TopK { len, indices, values } => {
+                assert_eq!(*len, 6);
+                assert_eq!(indices, &[1, 3], "largest magnitudes, ascending");
+                assert_eq!(values, &[-5.0, 4.0], "exact current values");
+            }
+            other => panic!("expected sparse payload, got {other:?}"),
+        }
+        // Shipped coordinates are snapshotted; the rest stay un-shipped,
+        // so their full value remains pending residual (shipped 0).
+        assert_eq!(residual, vec![0.0, -5.0, 0.0, 4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_residual_rotates_starved_coordinates_in() {
+        // A coordinate that keeps changing but never wins on raw size must
+        // eventually ship: its |x - shipped| score only grows.
+        let k = 1;
+        let mut residual = vec![0.0f32; 3];
+        // Coordinate 0 is huge but static after the first send; coordinate
+        // 2 drifts by 0.4 per send.
+        let mut drift = 0.0f32;
+        let first = TopK { k }.encode(FlatVec::from_vec(vec![10.0, 0.0, drift]), &mut residual);
+        match first {
+            EncodedPayload::TopK { ref indices, .. } => assert_eq!(indices, &[0]),
+            _ => panic!(),
+        }
+        let mut shipped2 = false;
+        for _ in 0..30 {
+            drift += 0.4;
+            let enc = TopK { k }.encode(FlatVec::from_vec(vec![10.0, 0.0, drift]), &mut residual);
+            if let EncodedPayload::TopK { indices, values, .. } = enc {
+                if indices == [2] {
+                    assert_eq!(values, vec![drift], "exact value at ship time");
+                    shipped2 = true;
+                    break;
+                }
+            }
+        }
+        assert!(shipped2, "drifting coordinate was starved by the static one");
+    }
+
+    #[test]
+    fn topk_round_trip_is_residual_bounded() {
+        // The serialization round trip: at shipped coordinates the decode
+        // is bit-exact; everywhere else the deviation from the payload is
+        // exactly the pending residual |x - shipped| tracked in the buffer.
+        check("topk residual bound", 30, |rng| {
+            let n = 4 + rng.below(200) as usize;
+            let k = 1 + rng.below(n as u64 / 2) as usize;
+            let mut residual: Vec<f32> = randn(rng, n).into_vec();
+            let before = residual.clone();
+            let payload = randn(rng, n);
+            let enc = TopK { k }.encode(payload.clone(), &mut residual);
+            let (indices, values) = match &enc {
+                EncodedPayload::TopK { indices, values, .. } => (indices, values),
+                other => panic!("expected sparse, got {other:?}"),
+            };
+            assert_eq!(indices.len(), k);
+            for w in indices.windows(2) {
+                assert!(w[0] < w[1], "indices ascending and unique");
+            }
+            let mut sparse = vec![false; n];
+            for (&i, &v) in indices.iter().zip(values) {
+                assert_eq!(v, payload.as_slice()[i as usize], "exact at shipped coords");
+                assert_eq!(residual[i as usize], v, "buffer snapshots the ship");
+                sparse[i as usize] = true;
+            }
+            for i in 0..n {
+                if !sparse[i] {
+                    // Un-shipped: buffer unchanged, deviation fully tracked.
+                    assert_eq!(residual[i], before[i]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn topk_k_at_least_len_degenerates_to_dense() {
+        let payload = FlatVec::from_vec(vec![1.0, 2.0, 3.0]);
+        let mut residual = vec![0.0f32; 3];
+        let enc = TopK { k: 8 }.encode(payload.clone(), &mut residual);
+        assert_eq!(enc.as_dense().unwrap().as_slice(), payload.as_slice());
+        assert_eq!(residual, vec![1.0, 2.0, 3.0], "everything snapshotted");
+    }
+
+    #[test]
+    fn blend_into_matches_sequential_semantics() {
+        let t = 0.25f32;
+        // Dense blend == mix kernel (trivially), q8 blends the dequantized
+        // values, topk leaves unlisted coordinates alone.
+        let payload = FlatVec::from_vec(vec![4.0, -2.0, 8.0, 0.0]);
+        let base = [1.0f32, 1.0, 1.0, 1.0];
+        let mut x = base;
+        EncodedPayload::Dense(payload.clone()).blend_into(&mut x, t);
+        for (i, &xi) in x.iter().enumerate() {
+            let want = base[i] + t * (payload.as_slice()[i] - base[i]);
+            assert!((xi - want).abs() < 1e-6);
+        }
+        let enc = QuantizeU8.encode(payload.clone(), &mut []);
+        let deq = enc.decode();
+        let mut x = base;
+        enc.blend_into(&mut x, t);
+        for (i, &xi) in x.iter().enumerate() {
+            let want = base[i] + t * (deq.as_slice()[i] - base[i]);
+            assert!((xi - want).abs() < 1e-6, "q8 blend must use dequantized values");
+        }
+        let mut residual = vec![0.0f32; 4];
+        let enc = TopK { k: 2 }.encode(payload, &mut residual);
+        let mut x = base;
+        enc.blend_into(&mut x, t);
+        assert!((x[0] - (1.0 + t * 3.0)).abs() < 1e-6, "listed coord blends");
+        assert!((x[2] - (1.0 + t * 7.0)).abs() < 1e-6, "listed coord blends");
+        assert_eq!(x[1], 1.0, "unlisted coord keeps its value");
+        assert_eq!(x[3], 1.0, "unlisted coord keeps its value");
+    }
+
+    #[test]
+    fn only_sparse_payloads_refuse_coalescing() {
+        let payload = FlatVec::from_vec(vec![1.0; 8]);
+        assert!(EncodedPayload::Dense(payload.clone()).coalescible());
+        assert!(QuantizeU8.encode(payload.clone(), &mut []).coalescible());
+        let mut residual = vec![0.0f32; 8];
+        assert!(!TopK { k: 2 }.encode(payload, &mut residual).coalescible());
+    }
+}

@@ -1,9 +1,9 @@
 //! The gossip message: `(x_s, w_s)` plus accounting metadata.
 //!
 //! The paper (section 4.1) encapsulates the sender's parameter vector and
-//! its halved weight in a single message.  The parameter payload is shared
-//! via `Arc` so pushing one snapshot to several queues (or keeping it in a
-//! queue while the sender keeps training) never copies the vector — a real
+//! its halved weight in a single message.  The payload is shared via `Arc`
+//! so pushing one snapshot to several queues (or keeping it in a queue
+//! while the sender keeps training) never copies the vector — a real
 //! concern at 10⁶-10⁸ floats.
 //!
 //! With sharded exchange ([`crate::gossip::shard`]) a message may carry
@@ -12,9 +12,15 @@
 //! weight.  The classic whole-vector message is the `num_shards == 1`
 //! special case, so nothing downstream needs to branch on "sharded or
 //! not" except the blend itself.
+//!
+//! With payload codecs ([`crate::gossip::codec`]) the body travels in its
+//! encoded form ([`EncodedPayload`]); [`Message::wire_bytes`] prices the
+//! encoded bytes actually shipped while [`Message::raw_wire_bytes`] keeps
+//! the uncompressed cost for compression-ratio accounting.
 
 use std::sync::Arc;
 
+use crate::gossip::codec::EncodedPayload;
 use crate::gossip::shard::Shard;
 use crate::gossip::weights::SumWeight;
 use crate::tensor::FlatVec;
@@ -22,9 +28,10 @@ use crate::tensor::FlatVec;
 /// One gossip message from `sender` (paper Algorithm 4, `PushMessage`).
 #[derive(Clone, Debug)]
 pub struct Message {
-    /// Snapshot of the sender's parameters at send time — the whole vector
-    /// for a full message, or just `shard.len` elements for a shard.
-    pub params: Arc<FlatVec>,
+    /// The shard's coordinates at send time, in wire (encoded) form — the
+    /// whole vector for a full message, or `shard.len` coordinates for a
+    /// shard.
+    pub payload: Arc<EncodedPayload>,
     /// The sender's halved (shard-local) weight shipped with the snapshot.
     pub weight: SumWeight,
     /// Worker id of the sender (diagnostics / staleness accounting).
@@ -37,32 +44,50 @@ pub struct Message {
 
 impl Message {
     /// Whole-vector message (the paper's protocol).
-    pub fn new(params: Arc<FlatVec>, weight: SumWeight, sender: usize, sent_at_step: u64) -> Self {
-        let shard = Shard::full(params.len());
-        Message { params, weight, sender, sent_at_step, shard }
+    pub fn new(
+        payload: Arc<EncodedPayload>,
+        weight: SumWeight,
+        sender: usize,
+        sent_at_step: u64,
+    ) -> Self {
+        let shard = Shard::full(payload.coord_count());
+        Message { payload, weight, sender, sent_at_step, shard }
     }
 
-    /// Shard message: `params` holds only the shard's `shard.len` elements.
+    /// Whole-vector message with an uncompressed body (tests / benches).
+    pub fn dense(params: FlatVec, weight: SumWeight, sender: usize, sent_at_step: u64) -> Self {
+        Message::new(Arc::new(EncodedPayload::Dense(params)), weight, sender, sent_at_step)
+    }
+
+    /// Shard message: `payload` covers exactly the shard's `shard.len`
+    /// coordinates.
     pub fn for_shard(
-        params: Arc<FlatVec>,
+        payload: Arc<EncodedPayload>,
         weight: SumWeight,
         sender: usize,
         sent_at_step: u64,
         shard: Shard,
     ) -> Self {
         assert_eq!(
-            params.len(),
+            payload.coord_count(),
             shard.len,
-            "shard payload length {} vs descriptor len {}",
-            params.len(),
+            "shard payload covers {} coordinates vs descriptor len {}",
+            payload.coord_count(),
             shard.len
         );
-        Message { params, weight, sender, sent_at_step, shard }
+        Message { payload, weight, sender, sent_at_step, shard }
     }
 
-    /// Payload size in bytes (throughput accounting).
+    /// Wire size in bytes of the message as actually shipped (encoded
+    /// body + the shared header model).
     pub fn wire_bytes(&self) -> usize {
-        wire_bytes_for(self.params.len(), !self.shard.is_full())
+        encoded_wire_bytes(&self.payload, !self.shard.is_full())
+    }
+
+    /// Wire size the same message would have had with the dense codec —
+    /// the denominator of every compression-ratio report.
+    pub fn raw_wire_bytes(&self) -> usize {
+        wire_bytes_for(self.shard.len, !self.shard.is_full())
     }
 
     /// Staleness in local steps relative to the receiver's step counter.
@@ -74,31 +99,38 @@ impl Message {
 /// The single wire-size model every accounting path shares: a message is
 /// the f32 payload + one f64 weight + 16 bytes of headers, plus an 8-byte
 /// shard descriptor when the exchange is sharded.  Used by
-/// [`Message::wire_bytes`] and by paths that count bytes without
-/// materializing a `Message` (DES simulator, immediate-delivery mode).
+/// [`Message::raw_wire_bytes`] and by paths that count bytes without
+/// materializing a `Message` (DES simulator, immediate-delivery mode,
+/// the barrier baselines — all of which ship uncompressed f32 bodies).
 pub fn wire_bytes_for(payload_len: usize, sharded: bool) -> usize {
     let shard_header = if sharded { 8 } else { 0 };
     payload_len * std::mem::size_of::<f32>() + 8 + 16 + shard_header
 }
 
+/// Wire size of an encoded body under the same header model: the codec's
+/// body bytes + one f64 weight + 16 bytes of headers (+ 8-byte shard
+/// descriptor when sharded).  The dense codec reproduces
+/// [`wire_bytes_for`] exactly.
+pub fn encoded_wire_bytes(payload: &EncodedPayload, sharded: bool) -> usize {
+    let shard_header = if sharded { 8 } else { 0 };
+    payload.payload_wire_bytes() + 8 + 16 + shard_header
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gossip::codec::{Codec, QuantizeU8, TopK};
     use crate::gossip::shard::ShardPlan;
 
     fn msg(n: usize, sent: u64) -> Message {
-        Message::new(
-            Arc::new(FlatVec::zeros(n)),
-            SumWeight::from_value(0.5),
-            3,
-            sent,
-        )
+        Message::dense(FlatVec::zeros(n), SumWeight::from_value(0.5), 3, sent)
     }
 
     #[test]
     fn wire_bytes_counts_payload() {
         let m = msg(1000, 0);
         assert_eq!(m.wire_bytes(), 4000 + 24);
+        assert_eq!(m.raw_wire_bytes(), m.wire_bytes(), "dense: encoded == raw");
     }
 
     #[test]
@@ -113,7 +145,7 @@ mod tests {
         let plan = ShardPlan::new(1000, 4);
         let shard = plan.shard(1);
         let m = Message::for_shard(
-            Arc::new(FlatVec::zeros(shard.len)),
+            Arc::new(EncodedPayload::Dense(FlatVec::zeros(shard.len))),
             SumWeight::from_value(0.25),
             0,
             0,
@@ -125,11 +157,37 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "shard payload length")]
+    fn encoded_messages_report_encoded_and_raw_bytes() {
+        let plan = ShardPlan::new(1024, 4);
+        let shard = plan.shard(0);
+        let payload = FlatVec::zeros(shard.len);
+        let q8 = Message::for_shard(
+            Arc::new(QuantizeU8.encode(payload.clone(), &mut [])),
+            SumWeight::from_value(0.25),
+            0,
+            0,
+            shard,
+        );
+        assert_eq!(q8.wire_bytes(), 256 + 8 + 24 + 8);
+        assert_eq!(q8.raw_wire_bytes(), 256 * 4 + 24 + 8);
+        assert!(q8.raw_wire_bytes() >= 3 * q8.wire_bytes());
+        let mut residual = vec![0.0f32; shard.len];
+        let topk = Message::for_shard(
+            Arc::new(TopK { k: 16 }.encode(payload, &mut residual)),
+            SumWeight::from_value(0.25),
+            0,
+            0,
+            shard,
+        );
+        assert_eq!(topk.wire_bytes(), 16 * 8 + 24 + 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "shard payload covers")]
     fn shard_payload_length_must_match_descriptor() {
         let plan = ShardPlan::new(100, 4);
         Message::for_shard(
-            Arc::new(FlatVec::zeros(7)),
+            Arc::new(EncodedPayload::Dense(FlatVec::zeros(7))),
             SumWeight::from_value(0.25),
             0,
             0,
@@ -146,10 +204,10 @@ mod tests {
 
     #[test]
     fn arc_payload_is_shared_not_copied() {
-        let params = Arc::new(FlatVec::zeros(1 << 20));
-        let a = Message::new(params.clone(), SumWeight::from_value(0.1), 0, 0);
+        let payload = Arc::new(EncodedPayload::Dense(FlatVec::zeros(1 << 20)));
+        let a = Message::new(payload.clone(), SumWeight::from_value(0.1), 0, 0);
         let b = a.clone();
-        assert!(Arc::ptr_eq(&a.params, &b.params));
-        assert_eq!(Arc::strong_count(&params), 3);
+        assert!(Arc::ptr_eq(&a.payload, &b.payload));
+        assert_eq!(Arc::strong_count(&payload), 3);
     }
 }

@@ -16,11 +16,16 @@
 //!   contiguous shards, each with its own sum weight, and gossip one shard
 //!   per event.  Exact (the blend is per-coordinate associative), and the
 //!   per-event bandwidth drops by `~1/num_shards`.
+//! * [`codec`] — payload codecs for the message body: dense (identity),
+//!   top-k sparsification with per-worker error feedback, and per-shard
+//!   u8 quantization; wire size shrinks to the encoded form while
+//!   sum-weight conservation is untouched.
 //! * [`protocol`] — the runtime-agnostic protocol core: the
 //!   drain/blend/send state machine of Algorithms 3/4, written once and
 //!   driven by all three runtimes (sequential engine, OS threads,
 //!   discrete-event simulator).
 
+pub mod codec;
 pub mod message;
 pub mod peer;
 pub mod protocol;
@@ -28,7 +33,8 @@ pub mod queue;
 pub mod shard;
 pub mod weights;
 
-pub use message::{wire_bytes_for, Message};
+pub use codec::{Codec, CodecRef, CodecSpec, EncodedPayload};
+pub use message::{encoded_wire_bytes, wire_bytes_for, Message};
 pub use peer::PeerSelector;
 pub use protocol::{Outbound, ProtocolCore};
 pub use queue::MessageQueue;

@@ -40,7 +40,8 @@
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::gossip::message::{wire_bytes_for, Message};
+use crate::gossip::codec::{Codec, CodecRef, CodecSpec, EncodedPayload};
+use crate::gossip::message::{encoded_wire_bytes, wire_bytes_for, Message};
 use crate::gossip::peer::PeerSelector;
 use crate::gossip::shard::{Shard, ShardPlan};
 use crate::gossip::weights::SumWeight;
@@ -65,11 +66,18 @@ pub struct ProtocolCore {
     cursor: usize,
     /// Local gradient steps taken through [`ProtocolCore::local_step`].
     steps: u64,
+    /// Payload codec applied at [`ProtocolCore::emit`] (dense by default —
+    /// see [`crate::gossip::codec`]).
+    codec: CodecRef,
+    /// Per-shard encoder state for stateful codecs (top-k error feedback:
+    /// the last-shipped snapshot of each shard's coordinates).  Empty for
+    /// stateless codecs.
+    residuals: Vec<FlatVec>,
 }
 
 /// The send-side product of one gossip event: everything a runtime needs
 /// to deliver the message, with the sender's state already transitioned
-/// (weight halved, cursor advanced).
+/// (weight halved, cursor advanced, codec state updated).
 #[derive(Clone, Debug)]
 pub struct Outbound {
     /// 0-based receiver id.
@@ -78,14 +86,20 @@ pub struct Outbound {
     pub shard: Shard,
     /// The sender's halved shard-local weight.
     pub weight: SumWeight,
-    /// Snapshot of the shard's coordinates at send time.
-    pub payload: FlatVec,
+    /// Snapshot of the shard's coordinates at send time, in wire form.
+    pub payload: EncodedPayload,
 }
 
 impl Outbound {
-    /// Wire size under the shared accounting model.
+    /// Wire size of the message as actually shipped (encoded body under
+    /// the shared accounting model).
     pub fn wire_bytes(&self) -> usize {
-        wire_bytes_for(self.payload.len(), !self.shard.is_full())
+        encoded_wire_bytes(&self.payload, !self.shard.is_full())
+    }
+
+    /// Wire size the same message would cost uncompressed (dense f32).
+    pub fn raw_wire_bytes(&self) -> usize {
+        wire_bytes_for(self.shard.len, !self.shard.is_full())
     }
 
     /// Wrap into a queueable [`Message`] (`sender` in the runtime's own id
@@ -137,7 +151,15 @@ impl ProtocolCore {
             weights: (0..shards).map(|_| SumWeight::init(workers)).collect(),
             cursor: id % shards,
             steps: 0,
+            codec: CodecSpec::Dense.build(),
+            residuals: Vec::new(),
         })
+    }
+
+    /// Builder form of [`ProtocolCore::set_codec`].
+    pub fn with_codec(mut self, spec: CodecSpec) -> Self {
+        self.set_codec(spec);
+        self
     }
 
     // ---- accessors -------------------------------------------------------
@@ -200,16 +222,40 @@ impl ProtocolCore {
         Ok(())
     }
 
+    /// The payload codec's plain-data description.
+    pub fn codec_spec(&self) -> CodecSpec {
+        self.codec.spec()
+    }
+
+    /// Switch the payload codec.  Sum-weight state is untouched (the codec
+    /// only shapes payload bodies); switching away from a stateful codec
+    /// resets its per-shard encoder state — a top-k core's error-feedback
+    /// buffer starts over from the zero snapshot.
+    pub fn set_codec(&mut self, spec: CodecSpec) {
+        if self.codec.spec() == spec {
+            return;
+        }
+        self.codec = spec.build();
+        self.residuals = if spec.stateful() {
+            self.plan.shards().iter().map(|s| FlatVec::zeros(s.len)).collect()
+        } else {
+            Vec::new()
+        };
+    }
+
     // ---- transitions -----------------------------------------------------
 
     /// Receive transition (Algorithm 4 `ProcessMessages`, one message):
     /// absorb `weight` into the shard-local sum weight and blend `payload`
-    /// into `x` over the shard's range with `t = w_s/(w_r + w_s)`.
+    /// into `x` over the shard's range with `t = w_s/(w_r + w_s)`.  The
+    /// blend is codec-aware: a quantized body blends its dequantized
+    /// values, a sparse body blends only the coordinates it lists (the
+    /// rest keep their value while the weight is still fully absorbed).
     pub fn absorb(
         &mut self,
         x: &mut FlatVec,
         shard: Shard,
-        payload: &FlatVec,
+        payload: &EncodedPayload,
         weight: SumWeight,
     ) -> Result<()> {
         // The message's shard geometry must match the local plan exactly —
@@ -225,17 +271,29 @@ impl ProtocolCore {
                 self.plan.dim()
             )));
         }
-        let t = self.weights[shard.index].absorb(weight);
-        if shard.is_full() {
-            x.mix_from(payload, 1.0 - t, t)
-        } else {
-            x.mix_range_from(payload, shard.offset, 1.0 - t, t)
+        if payload.coord_count() != shard.len {
+            return Err(Error::shape(format!(
+                "payload covers {} coordinates vs shard len {}",
+                payload.coord_count(),
+                shard.len
+            )));
         }
+        let end = shard.offset + shard.len;
+        if end > x.len() {
+            return Err(Error::shape(format!(
+                "shard range {}..{end} out of vector length {}",
+                shard.offset,
+                x.len()
+            )));
+        }
+        let t = self.weights[shard.index].absorb(weight);
+        payload.blend_into(&mut x.as_mut_slice()[shard.offset..end], t as f32);
+        Ok(())
     }
 
     /// [`ProtocolCore::absorb`] for a queued [`Message`].
     pub fn absorb_message(&mut self, x: &mut FlatVec, msg: &Message) -> Result<()> {
-        self.absorb(x, msg.shard, &msg.params, msg.weight)
+        self.absorb(x, msg.shard, &msg.payload, msg.weight)
     }
 
     /// Weight-only receive transition: absorb and return the blend
@@ -279,6 +337,8 @@ impl ProtocolCore {
 
     /// Unconditional send to a chosen receiver — the state transition of
     /// [`ProtocolCore::emit`] with the gate and peer pick already decided.
+    /// The raw shard snapshot runs through the configured codec (updating
+    /// any per-shard encoder state) before it leaves the core.
     pub fn emit_to(&mut self, x: &FlatVec, to: usize) -> Result<Outbound> {
         if x.len() != self.plan.dim() {
             return Err(Error::shape(format!(
@@ -288,11 +348,16 @@ impl ProtocolCore {
             )));
         }
         let (shard, shipped) = self.begin_send();
-        let payload = if shard.is_full() {
+        let raw = if shard.is_full() {
             x.clone()
         } else {
             FlatVec::from_vec(x.as_slice()[shard.offset..shard.offset + shard.len].to_vec())
         };
+        let residual: &mut [f32] = match self.residuals.get_mut(shard.index) {
+            Some(r) => r.as_mut_slice(),
+            None => &mut [],
+        };
+        let payload = self.codec.encode(raw, residual);
         Ok(Outbound { to, shard, weight: shipped, payload })
     }
 }
@@ -348,12 +413,12 @@ mod tests {
         let out = c.emit_to(&x, 1).unwrap();
         assert_eq!(out.to, 1);
         assert_eq!(out.shard.index, 0);
-        assert_eq!(out.payload.len(), out.shard.len);
+        assert_eq!(out.payload.coord_count(), out.shard.len);
         assert_eq!(out.weight.value(), 0.25, "half of the 1/2 init");
         assert_eq!(c.weights()[0].value(), 0.25);
         assert_eq!(c.weights()[1].value(), 0.5, "other shard untouched");
         assert_eq!(
-            out.payload.as_slice(),
+            out.payload.as_dense().expect("default codec is dense").as_slice(),
             &x.as_slice()[out.shard.offset..out.shard.offset + out.shard.len]
         );
     }
@@ -367,7 +432,7 @@ mod tests {
         let msg = out.into_message(0, 9);
         assert!(msg.shard.is_full());
         assert_eq!(msg.sent_at_step, 9);
-        assert_eq!(msg.params.len(), 7);
+        assert_eq!(msg.payload.coord_count(), 7);
     }
 
     #[test]
@@ -456,16 +521,19 @@ mod tests {
         let mut x = FlatVec::zeros(8);
         // Wrong shard count entirely.
         let bad = Shard { index: 5, num_shards: 6, offset: 0, len: 1 };
-        let payload = FlatVec::zeros(1);
+        let payload = EncodedPayload::Dense(FlatVec::zeros(1));
         assert!(c.absorb(&mut x, bad, &payload, SumWeight::from_value(0.1)).is_err());
         // Right count, wrong cut: plan.shard(1) is offset 4, len 4.
         let forged = Shard { index: 1, num_shards: 2, offset: 0, len: 2 };
-        let payload = FlatVec::zeros(2);
+        let payload = EncodedPayload::Dense(FlatVec::zeros(2));
         assert!(c.absorb(&mut x, forged, &payload, SumWeight::from_value(0.1)).is_err());
-        // The genuine descriptor is accepted.
+        // The genuine descriptor is accepted...
         let good = c.plan().shard(1);
-        let payload = FlatVec::zeros(good.len);
+        let payload = EncodedPayload::Dense(FlatVec::zeros(good.len));
         assert!(c.absorb(&mut x, good, &payload, SumWeight::from_value(0.1)).is_ok());
+        // ...but only with a payload covering exactly the shard's range.
+        let short = EncodedPayload::Dense(FlatVec::zeros(good.len - 1));
+        assert!(c.absorb(&mut x, good, &short, SumWeight::from_value(0.1)).is_err());
     }
 
     #[test]
@@ -473,5 +541,116 @@ mod tests {
         let mut c = core(0, 2, 8, 1.0, 2);
         let x = FlatVec::zeros(5);
         assert!(c.emit_to(&x, 1).is_err());
+    }
+
+    // ---- codec-aware transitions ----------------------------------------
+
+    #[test]
+    fn q8_emit_encodes_and_cuts_wire_bytes() {
+        let dim = 1024;
+        let x = FlatVec::from_vec((0..dim).map(|i| i as f32).collect());
+        let mut c = core(0, 2, dim, 1.0, 2).with_codec(CodecSpec::QuantizeU8);
+        assert_eq!(c.codec_spec(), CodecSpec::QuantizeU8);
+        let out = c.emit_to(&x, 1).unwrap();
+        assert!(matches!(&out.payload, EncodedPayload::QuantU8 { .. }));
+        assert_eq!(out.payload.coord_count(), out.shard.len);
+        assert!(
+            out.raw_wire_bytes() >= 3 * out.wire_bytes(),
+            "q8 {} vs raw {}",
+            out.wire_bytes(),
+            out.raw_wire_bytes()
+        );
+    }
+
+    #[test]
+    fn topk_emit_keeps_per_shard_error_feedback() {
+        // Two emits of the same shard: the second selection is driven by
+        // the change since the first ship, not by raw magnitude.
+        let dim = 8;
+        let k = 1;
+        let mut x = FlatVec::from_vec(vec![9.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let mut c = core(0, 2, dim, 1.0, 1).with_codec(CodecSpec::TopK { k });
+        let first = c.emit_to(&x, 1).unwrap();
+        match &first.payload {
+            EncodedPayload::TopK { indices, values, .. } => {
+                assert_eq!(indices.as_slice(), &[0]);
+                assert_eq!(values.as_slice(), &[9.0]);
+            }
+            other => panic!("expected sparse payload, got {other:?}"),
+        }
+        // Coordinate 0 is still the largest by magnitude but it has not
+        // changed since it shipped; coordinate 3 moved the most.
+        x.as_mut_slice()[3] = 2.0;
+        let second = c.emit_to(&x, 1).unwrap();
+        match &second.payload {
+            EncodedPayload::TopK { indices, values, .. } => {
+                assert_eq!(indices.as_slice(), &[3]);
+                assert_eq!(values.as_slice(), &[2.0]);
+            }
+            other => panic!("expected sparse payload, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn codec_exchange_conserves_mass_per_shard() {
+        // The conservation schedule of `exchange_conserves_mass_per_shard`,
+        // under every codec: the weights never touch the payload path.
+        for spec in [CodecSpec::QuantizeU8, CodecSpec::TopK { k: 2 }] {
+            let m = 4;
+            let dim = 24;
+            let shards = 3;
+            let mut rng = Rng::new(0xC0DEC);
+            let mut xs: Vec<FlatVec> = (0..m).map(|_| FlatVec::zeros(dim)).collect();
+            let mut cores: Vec<ProtocolCore> = (0..m)
+                .map(|w| core(w, m, dim, 0.8, shards).with_codec(spec))
+                .collect();
+            let mut in_flight: Vec<Outbound> = Vec::new();
+            for _ in 0..300 {
+                let w = rng.below(m as u64) as usize;
+                if let Some(out) = cores[w].emit(&xs[w], m, &mut rng).unwrap() {
+                    in_flight.push(out);
+                }
+                if !in_flight.is_empty() && rng.bernoulli(0.6) {
+                    let k = rng.below(in_flight.len() as u64) as usize;
+                    let out = in_flight.swap_remove(k);
+                    cores[out.to]
+                        .absorb(&mut xs[out.to], out.shard, &out.payload, out.weight)
+                        .unwrap();
+                }
+                for k in 0..shards {
+                    let mut total: f64 = cores.iter().map(|c| c.weights()[k].value()).sum();
+                    total += in_flight
+                        .iter()
+                        .filter(|o| o.shard.index == k)
+                        .map(|o| o.weight.value())
+                        .sum::<f64>();
+                    assert!(
+                        (total - 1.0).abs() < 1e-9,
+                        "codec {:?}: shard {k} mass {total}",
+                        spec
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn switching_codecs_resets_error_feedback_only() {
+        let dim = 6;
+        let x = FlatVec::from_vec(vec![5.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        let mut c = core(0, 2, dim, 1.0, 1).with_codec(CodecSpec::TopK { k: 1 });
+        let _ = c.emit_to(&x, 1).unwrap();
+        let w_after = c.weights()[0].value();
+        c.set_codec(CodecSpec::Dense);
+        assert_eq!(c.codec_spec(), CodecSpec::Dense);
+        assert_eq!(c.weights()[0].value(), w_after, "weights untouched by codec swap");
+        // Back to top-k: buffer starts over, so selection is by raw
+        // magnitude again — coordinate 0 wins even though it shipped once.
+        c.set_codec(CodecSpec::TopK { k: 1 });
+        let out = c.emit_to(&x, 1).unwrap();
+        match &out.payload {
+            EncodedPayload::TopK { indices, .. } => assert_eq!(indices.as_slice(), &[0]),
+            other => panic!("expected sparse payload, got {other:?}"),
+        }
     }
 }

@@ -21,13 +21,19 @@
 //! [`Shard::key`](crate::gossip::Shard::key)): the shard-wise blend is
 //! associative, so folding same-shard messages leaves the receiver's final
 //! state unchanged, while folding across shards would mix unrelated
-//! coordinates.  If no two queued messages share a shard the queue is
-//! allowed to exceed its bound (tracked in the `over_capacity` stat)
-//! rather than lose mass.
+//! coordinates.  With payload codecs, both messages must additionally be
+//! [`EncodedPayload::coalescible`]: dense and quantized bodies fold by
+//! (de)coding — the dequantize-blend is deterministic, so the fold equals
+//! sequential processing — while sparse top-k bodies never fold (they
+//! carry no value for unlisted coordinates, so any dense stand-in would
+//! corrupt the receiver's "keep your own value" semantics).  If no two
+//! queued messages are compatible the queue is allowed to exceed its
+//! bound (tracked in the `over_capacity` stat) rather than lose mass.
 
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
+use crate::gossip::codec::EncodedPayload;
 use crate::gossip::message::Message;
 use crate::gossip::weights::SumWeight;
 use crate::tensor::FlatVec;
@@ -123,12 +129,16 @@ impl MessageQueue {
 }
 
 /// Oldest pair of indices `(i, j)`, `i < j`, whose messages cover the same
-/// coordinate range and may therefore be folded.  O(n²) over the queue
-/// depth, which the capacity bound keeps tiny.
+/// coordinate range and whose payloads may be folded by decoding (no
+/// sparse bodies).  O(n²) over the queue depth, which the capacity bound
+/// keeps tiny.
 fn oldest_compatible_pair(deque: &VecDeque<Message>) -> Option<(usize, usize)> {
     for i in 0..deque.len() {
+        if !deque[i].payload.coalescible() {
+            continue;
+        }
         for j in (i + 1)..deque.len() {
-            if deque[i].shard.key() == deque[j].shard.key() {
+            if deque[i].shard.key() == deque[j].shard.key() && deque[j].payload.coalescible() {
                 return Some((i, j));
             }
         }
@@ -136,26 +146,38 @@ fn oldest_compatible_pair(deque: &VecDeque<Message>) -> Option<(usize, usize)> {
     None
 }
 
-/// Fold message `a` into message `b` preserving total weight:
-/// the combined payload is the sum-weight blend of the two payloads.
-/// Both messages must cover the same shard.
+/// Fold message `a` into message `b` preserving total weight: the combined
+/// payload is the sum-weight blend of the two decoded payloads (a dense
+/// body).  Both messages must cover the same shard and be coalescible —
+/// quantized bodies fold via their deterministic dequantization, which is
+/// exactly what the receiver would have blended one at a time.
 ///
-/// When the queue is the payload's sole owner — the common case once the
-/// sender has dropped its snapshot — the blend runs *in place* on `a`'s
-/// buffer (`Arc::try_unwrap`); only a still-shared payload is cloned, so
-/// another holder of the snapshot never observes the fold.
+/// When the queue is the sole owner of a dense payload — the common case
+/// once the sender has dropped its snapshot — the blend runs *in place* on
+/// `a`'s buffer (`Arc::try_unwrap`); only a still-shared payload is cloned
+/// (and an encoded one decoded), so another holder of the snapshot never
+/// observes the fold.
 fn coalesce(a: Message, b: Message) -> Message {
     debug_assert_eq!(a.shard.key(), b.shard.key(), "coalescing across shards");
+    debug_assert!(
+        a.payload.coalescible() && b.payload.coalescible(),
+        "coalescing a sparse payload"
+    );
     let w_a = a.weight.value();
     let w_b = b.weight.value();
-    let mut blended: FlatVec =
-        std::sync::Arc::try_unwrap(a.params).unwrap_or_else(|shared| (*shared).clone());
+    let mut blended: FlatVec = match std::sync::Arc::try_unwrap(a.payload) {
+        Ok(EncodedPayload::Dense(v)) => v,
+        Ok(other) => other.decode(),
+        Err(shared) => shared.decode(),
+    };
     // blended <- (w_a * a + w_b * b) / (w_a + w_b)
-    blended
-        .mix_from(&b.params, w_a, w_b)
-        .expect("coalesce: length mismatch inside one queue");
+    match &*b.payload {
+        EncodedPayload::Dense(v) => blended.mix_from(v, w_a, w_b),
+        other => blended.mix_from(&other.decode(), w_a, w_b),
+    }
+    .expect("coalesce: length mismatch inside one queue");
     Message::for_shard(
-        std::sync::Arc::new(blended),
+        std::sync::Arc::new(EncodedPayload::Dense(blended)),
         SumWeight::from_value(w_a + w_b),
         b.sender,
         b.sent_at_step,
@@ -166,16 +188,21 @@ fn coalesce(a: Message, b: Message) -> Message {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gossip::codec::{Codec, QuantizeU8, TopK};
     use crate::util::proptest::check;
     use std::sync::Arc;
 
     fn msg(val: f32, w: f64, sender: usize) -> Message {
-        Message::new(
-            Arc::new(FlatVec::from_vec(vec![val; 8])),
+        Message::dense(
+            FlatVec::from_vec(vec![val; 8]),
             SumWeight::from_value(w),
             sender,
             0,
         )
+    }
+
+    fn first_coord(m: &Message) -> f32 {
+        m.payload.decode().as_slice()[0]
     }
 
     #[test]
@@ -185,7 +212,7 @@ mod tests {
         q.push(msg(2.0, 0.1, 1));
         q.push(msg(3.0, 0.1, 2));
         let out = q.drain();
-        let vals: Vec<f32> = out.iter().map(|m| m.params.as_slice()[0]).collect();
+        let vals: Vec<f32> = out.iter().map(first_coord).collect();
         assert_eq!(vals, vec![1.0, 2.0, 3.0]);
         assert!(q.is_empty());
     }
@@ -223,7 +250,7 @@ mod tests {
         let total_w: f64 = out.iter().map(|m| m.weight.value()).sum();
         assert!((total_w - 1.0).abs() < 1e-12, "weight mass lost: {total_w}");
         // Folded payload is the weight-blend of 0.0 and 1.0 at equal weight.
-        assert!((out[0].params.as_slice()[0] - 0.5).abs() < 1e-6);
+        assert!((first_coord(&out[0]) - 0.5).abs() < 1e-6);
         assert_eq!(q.stats().coalesced, 1);
     }
 
@@ -236,15 +263,15 @@ mod tests {
         let m1 = msg(2.0, 0.25, 0);
         let m2 = msg(6.0, 0.25, 1);
         let t1 = w_direct.absorb(m1.weight);
-        direct.mix_from(&m1.params, 1.0 - t1, t1).unwrap();
+        direct.mix_from(m1.payload.as_dense().unwrap(), 1.0 - t1, t1).unwrap();
         let t2 = w_direct.absorb(m2.weight);
-        direct.mix_from(&m2.params, 1.0 - t2, t2).unwrap();
+        direct.mix_from(m2.payload.as_dense().unwrap(), 1.0 - t2, t2).unwrap();
 
         let mut folded = FlatVec::from_vec(vec![10.0; 8]);
         let mut w_folded = SumWeight::from_value(0.5);
         let c = coalesce(msg(2.0, 0.25, 0), msg(6.0, 0.25, 1));
         let t = w_folded.absorb(c.weight);
-        folded.mix_from(&c.params, 1.0 - t, t).unwrap();
+        folded.mix_from(c.payload.as_dense().unwrap(), 1.0 - t, t).unwrap();
 
         assert!((w_direct.value() - w_folded.value()).abs() < 1e-12);
         for i in 0..8 {
@@ -264,7 +291,7 @@ mod tests {
         let mk = |k: usize, val: f32, w: f64| {
             let shard = plan.shard(k);
             Message::for_shard(
-                Arc::new(FlatVec::from_vec(vec![val; shard.len])),
+                Arc::new(EncodedPayload::Dense(FlatVec::from_vec(vec![val; shard.len]))),
                 SumWeight::from_value(w),
                 0,
                 0,
@@ -283,14 +310,14 @@ mod tests {
         let s0: Vec<&Message> = out.iter().filter(|m| m.shard.index == 0).collect();
         assert_eq!(s0.len(), 1);
         assert!((s0[0].weight.value() - 0.5).abs() < 1e-12);
-        assert!((s0[0].params.as_slice()[0] - 2.0).abs() < 1e-6, "blend of 1 and 3");
+        assert!((first_coord(s0[0]) - 2.0).abs() < 1e-6, "blend of 1 and 3");
         // Now three mutually incompatible shards: bound must stretch.
         let plan3 = ShardPlan::new(9, 3);
         let q = MessageQueue::bounded(2);
         for k in 0..3 {
             let shard = plan3.shard(k);
             q.push(Message::for_shard(
-                Arc::new(FlatVec::zeros(shard.len)),
+                Arc::new(EncodedPayload::Dense(FlatVec::zeros(shard.len))),
                 SumWeight::from_value(0.1),
                 0,
                 0,
@@ -322,7 +349,10 @@ mod tests {
                 let w = rng.f64() + 1e-6;
                 *pushed.entry(shard.key()).or_insert(0.0) += w;
                 q.push(Message::for_shard(
-                    Arc::new(FlatVec::from_vec(vec![i as f32; shard.len])),
+                    Arc::new(EncodedPayload::Dense(FlatVec::from_vec(vec![
+                        i as f32;
+                        shard.len
+                    ]))),
                     SumWeight::from_value(w),
                     i % 4,
                     i as u64,
@@ -355,18 +385,19 @@ mod tests {
         // Sole owner: the fold blends into `a`'s existing buffer instead
         // of cloning a full vector — the heap allocation survives the fold.
         let a = msg(2.0, 0.25, 0);
-        let ptr = a.params.as_slice().as_ptr();
+        let ptr = a.payload.as_dense().unwrap().as_slice().as_ptr();
         let b = msg(6.0, 0.25, 1);
         let c = coalesce(a, b);
-        assert!((c.params.as_slice()[0] - 4.0).abs() < 1e-6);
-        assert_eq!(c.params.as_slice().as_ptr(), ptr, "expected in-place blend");
+        let folded = c.payload.as_dense().unwrap();
+        assert!((folded.as_slice()[0] - 4.0).abs() < 1e-6);
+        assert_eq!(folded.as_slice().as_ptr(), ptr, "expected in-place blend");
     }
 
     #[test]
     fn coalesce_never_mutates_a_shared_snapshot() {
         // A sender (or a second queue) still holding the snapshot must not
         // see the fold: the shared path clones.
-        let shared = Arc::new(FlatVec::from_vec(vec![2.0; 8]));
+        let shared = Arc::new(EncodedPayload::Dense(FlatVec::from_vec(vec![2.0; 8])));
         let a = Message::new(shared.clone(), SumWeight::from_value(0.25), 0, 0);
         let b = msg(6.0, 0.25, 1);
         let q = MessageQueue::bounded(2);
@@ -374,11 +405,71 @@ mod tests {
         q.push(b);
         q.push(msg(1.0, 0.5, 2)); // overflow folds the two oldest
         assert_eq!(q.stats().coalesced, 1);
-        for &v in shared.as_slice() {
+        for &v in shared.as_dense().unwrap().as_slice() {
             assert_eq!(v, 2.0, "shared snapshot mutated by coalescing");
         }
         let total_w: f64 = q.drain().iter().map(|m| m.weight.value()).sum();
         assert!((total_w - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coalescing_two_quantized_messages_equals_sequential_processing() {
+        // Satellite invariant: two encoded same-shard messages fold through
+        // their deterministic decode — the receiver's final state matches
+        // absorbing them one at a time, and the fold's weight is the sum.
+        let body = |vals: Vec<f32>| QuantizeU8.encode(FlatVec::from_vec(vals), &mut []);
+        let m1 = Message::new(Arc::new(body(vec![2.0, -1.0, 0.5, 8.0])), SumWeight::from_value(0.25), 0, 0);
+        let m2 = Message::new(Arc::new(body(vec![6.0, 3.0, -2.0, 1.0])), SumWeight::from_value(0.25), 1, 0);
+
+        let mut direct = FlatVec::from_vec(vec![10.0; 4]);
+        let mut w_direct = SumWeight::from_value(0.5);
+        for m in [&m1, &m2] {
+            let t = w_direct.absorb(m.weight);
+            let deq = m.payload.decode();
+            direct.mix_from(&deq, 1.0 - t, t).unwrap();
+        }
+
+        let c = coalesce(m1, m2);
+        assert!(c.payload.as_dense().is_some(), "fold produces a dense body");
+        assert!((c.weight.value() - 0.5).abs() < 1e-12);
+        let mut folded = FlatVec::from_vec(vec![10.0; 4]);
+        let mut w_folded = SumWeight::from_value(0.5);
+        let t = w_folded.absorb(c.weight);
+        folded.mix_from(c.payload.as_dense().unwrap(), 1.0 - t, t).unwrap();
+        assert!((w_direct.value() - w_folded.value()).abs() < 1e-12);
+        for (a, b) in direct.as_slice().iter().zip(folded.as_slice()) {
+            assert!((a - b).abs() < 1e-5, "{direct:?} vs {folded:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_messages_never_fold_the_bound_stretches() {
+        // Top-k bodies carry no value for unlisted coordinates; folding
+        // them would corrupt the "receiver keeps its own value" semantics,
+        // so overflow stretches the bound instead (mass intact).
+        let sparse = |vals: Vec<f32>| {
+            let n = vals.len();
+            let mut residual = vec![0.0f32; n];
+            TopK { k: 1 }.encode(FlatVec::from_vec(vals), &mut residual)
+        };
+        let q = MessageQueue::bounded(2);
+        q.push(Message::new(Arc::new(sparse(vec![1.0; 8])), SumWeight::from_value(0.2), 0, 0));
+        q.push(Message::new(Arc::new(sparse(vec![2.0; 8])), SumWeight::from_value(0.2), 1, 0));
+        q.push(Message::new(Arc::new(sparse(vec![3.0; 8])), SumWeight::from_value(0.2), 2, 0));
+        assert_eq!(q.stats().coalesced, 0);
+        assert_eq!(q.stats().over_capacity, 1);
+        let out = q.drain();
+        assert_eq!(out.len(), 3, "nothing folded, nothing dropped");
+        let total: f64 = out.iter().map(|m| m.weight.value()).sum();
+        assert!((total - 0.6).abs() < 1e-12);
+        // A dense pair behind a sparse head still folds: compatibility is
+        // per pair, not per queue.
+        let q = MessageQueue::bounded(2);
+        q.push(Message::new(Arc::new(sparse(vec![1.0; 8])), SumWeight::from_value(0.2), 0, 0));
+        q.push(msg(4.0, 0.2, 1));
+        q.push(msg(8.0, 0.2, 2));
+        assert_eq!(q.stats().coalesced, 1);
+        assert_eq!(q.len(), 2);
     }
 
     #[test]

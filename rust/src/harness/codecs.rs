@@ -1,0 +1,289 @@
+//! Codec-comparison harness: consensus distance and train loss across
+//! payload codecs at **fixed wall-clock bandwidth** (DES).
+//!
+//! A codec is only worth its accuracy loss if the saved bytes buy
+//! something.  This harness makes the tradeoff explicit: every series
+//! gets the *same wire budget per simulated second* — the dense baseline
+//! runs at the configured `p`, and each compressed codec runs at
+//! `p · (dense message bytes / its message bytes)` (capped at 1), so a
+//! codec that ships 4× fewer bytes gossips 4× more often.  Under the
+//! simulator's bandwidth-dominated latency model the per-second wire
+//! usage then matches across series, and the question becomes purely:
+//! which codec converts a byte of bandwidth into the most consensus and
+//! loss progress?
+//!
+//! ```text
+//! cargo run --release -- figure --figure codecs \
+//!     --p 0.05 --shards 8 --codecs dense,top32,q8 \
+//!     --horizon 120 --out results/codecs.csv
+//! ```
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::gossip::{CodecSpec, ShardPlan};
+use crate::metrics::{ema_series, CsvWriter};
+use crate::sim::{DesEngine, DesStrategy, TimeModel};
+use crate::strategies::grad::QuadraticSource;
+use crate::tensor::FlatVec;
+
+/// Configuration for the codec comparison.
+#[derive(Clone, Debug)]
+pub struct CodecFigConfig {
+    pub workers: usize,
+    /// Exchange probability of the **dense** baseline; compressed codecs
+    /// get proportionally more sends for the same bandwidth.
+    pub p: f64,
+    /// Gossip shards per exchange (1 = whole-vector messages).
+    pub shards: usize,
+    /// Codecs to compare.
+    pub codecs: Vec<CodecSpec>,
+    /// Quadratic-backend dimension and gradient noise.
+    pub dim: usize,
+    pub sigma: f32,
+    /// Simulated horizon in seconds.
+    pub horizon_secs: f64,
+    pub time_model: TimeModel,
+    pub seed: u64,
+    pub eta: f32,
+    pub weight_decay: f32,
+    /// EMA smoothing for the loss traces.
+    pub ema_beta: f64,
+}
+
+impl Default for CodecFigConfig {
+    fn default() -> Self {
+        CodecFigConfig {
+            workers: 8,
+            p: 0.05,
+            shards: 8,
+            codecs: vec![
+                CodecSpec::Dense,
+                CodecSpec::TopK { k: 32 },
+                CodecSpec::QuantizeU8,
+            ],
+            dim: 1024,
+            sigma: 0.2,
+            horizon_secs: 120.0,
+            time_model: TimeModel::paper_like(),
+            seed: 0,
+            eta: 1.0,
+            weight_decay: 0.0,
+            ema_beta: 0.95,
+        }
+    }
+}
+
+/// One codec's series.
+#[derive(Clone, Debug)]
+pub struct CodecSeries {
+    pub label: String,
+    /// `(sim_seconds, ema_loss)`.
+    pub points: Vec<(f64, f64)>,
+    /// The bandwidth-matched exchange probability this series ran at.
+    pub effective_p: f64,
+    pub steps: u64,
+    pub messages: u64,
+    /// Encoded wire bytes actually shipped.
+    pub bytes: u64,
+    /// Uncompressed cost of the same messages.
+    pub raw_bytes: u64,
+    /// Final consensus error `Σ_m ‖x_m − x̄‖²`.
+    pub consensus_error: f64,
+}
+
+/// Mean encoded message bytes for `spec` over the shard plan (headers
+/// included) — the planning-side quantity behind the bandwidth matching.
+fn mean_message_bytes(spec: CodecSpec, dim: usize, shards: usize) -> f64 {
+    let plan = ShardPlan::new(dim, shards);
+    let sharded = shards > 1;
+    let header = 8 + 16 + if sharded { 8 } else { 0 };
+    let total: usize = plan
+        .shards()
+        .iter()
+        .map(|s| spec.payload_wire_bytes(s.len) + header)
+        .sum();
+    total as f64 / shards as f64
+}
+
+fn run_one(cfg: &CodecFigConfig, spec: CodecSpec, effective_p: f64) -> Result<CodecSeries> {
+    let mut grad = QuadraticSource::new(cfg.dim, cfg.sigma, cfg.seed ^ 0xC0DE);
+    let init = FlatVec::zeros(cfg.dim);
+    let strategy = if cfg.shards > 1 {
+        DesStrategy::ShardedGoSgd { p: effective_p, shards: cfg.shards }
+    } else {
+        DesStrategy::GoSgd { p: effective_p }
+    };
+    let mut eng = DesEngine::new(
+        strategy,
+        cfg.time_model.clone(),
+        cfg.workers,
+        &init,
+        cfg.eta,
+        cfg.weight_decay,
+        cfg.seed,
+    )?
+    .with_codec(spec);
+    eng.run(&mut grad, cfg.horizon_secs)?;
+    let consensus_error = eng.consensus_error()?;
+    let rep = eng.report();
+    Ok(CodecSeries {
+        label: spec.label(),
+        points: ema_series(&rep.trace, cfg.ema_beta),
+        effective_p,
+        steps: rep.steps,
+        messages: rep.messages,
+        bytes: rep.bytes,
+        raw_bytes: rep.raw_bytes,
+        consensus_error,
+    })
+}
+
+/// Run every configured codec at matched bandwidth.
+pub fn run(cfg: &CodecFigConfig, out: Option<&Path>) -> Result<Vec<CodecSeries>> {
+    if !(cfg.p > 0.0 && cfg.p <= 1.0) {
+        return Err(Error::config(format!(
+            "codec comparison needs an exchange probability in (0, 1], got {}",
+            cfg.p
+        )));
+    }
+    if cfg.codecs.is_empty() {
+        return Err(Error::config("codec comparison needs at least one codec"));
+    }
+    if cfg.shards == 0 || (cfg.shards > 1 && cfg.shards > cfg.dim) {
+        return Err(Error::config(format!(
+            "cannot cut {} parameters into {} shards",
+            cfg.dim, cfg.shards
+        )));
+    }
+    let dense_bytes = mean_message_bytes(CodecSpec::Dense, cfg.dim, cfg.shards);
+    let mut series = Vec::with_capacity(cfg.codecs.len());
+    for &spec in &cfg.codecs {
+        let ratio = dense_bytes / mean_message_bytes(spec, cfg.dim, cfg.shards);
+        let effective_p = (cfg.p * ratio).min(1.0);
+        series.push(run_one(cfg, spec, effective_p)?);
+    }
+    if let Some(path) = out {
+        let mut csv = CsvWriter::create(path, &["series", "sim_seconds", "loss"])?;
+        for s in &series {
+            for &(t, l) in &s.points {
+                csv.write_tagged_row(&s.label, &[t, l])?;
+            }
+        }
+        csv.flush()?;
+    }
+    Ok(series)
+}
+
+/// Console table with the headline comparison.
+pub fn format_table(series: &[CodecSeries]) -> String {
+    let mut out = String::from(
+        "codec        p_eff   steps   messages    enc_MB    raw_MB   consensus_eps\n",
+    );
+    for s in series {
+        out.push_str(&format!(
+            "{:<12} {:>5.3}  {:>6}  {:>9}  {:>8.2}  {:>8.2}  {:>14.5}\n",
+            s.label,
+            s.effective_p,
+            s.steps,
+            s.messages,
+            s.bytes as f64 / 1e6,
+            s.raw_bytes as f64 / 1e6,
+            s.consensus_error,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CodecFigConfig {
+        CodecFigConfig {
+            dim: 512,
+            shards: 4,
+            p: 0.1,
+            horizon_secs: 40.0,
+            seed: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn codec_grid_runs_and_matches_bandwidth() {
+        let cfg = small_cfg();
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 3);
+        let by_label = |l: &str| {
+            series
+                .iter()
+                .find(|s| s.label == l)
+                .unwrap_or_else(|| panic!("missing series {l}"))
+        };
+        let dense = by_label("dense");
+        let q8 = by_label("q8");
+        assert_eq!(dense.effective_p, cfg.p);
+        assert!(q8.effective_p > dense.effective_p, "q8 gets more sends per byte");
+        // Dense: encoded == raw; q8: >= 3x compression at shard len 128.
+        assert_eq!(dense.bytes, dense.raw_bytes);
+        assert!(q8.raw_bytes >= 3 * q8.bytes, "{} vs {}", q8.bytes, q8.raw_bytes);
+        // Bandwidth matching: encoded bytes per simulated second agree
+        // within the stochastic send-count noise.
+        let rate = |s: &CodecSeries| s.bytes as f64 / cfg.horizon_secs;
+        let ratio = rate(q8) / rate(dense);
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "q8 wire rate {} vs dense {} (ratio {ratio})",
+            rate(q8),
+            rate(dense)
+        );
+        // Everyone trains and reaches a finite consensus.
+        for s in &series {
+            assert!(s.steps > 0 && s.messages > 0);
+            assert!(s.consensus_error.is_finite());
+            let early: f64 = s.points.iter().take(30).map(|(_, l)| l).sum::<f64>() / 30.0;
+            let late: f64 = s.points[s.points.len() - 30..]
+                .iter()
+                .map(|(_, l)| l)
+                .sum::<f64>()
+                / 30.0;
+            assert!(late < early, "{}: {early} -> {late}", s.label);
+        }
+    }
+
+    #[test]
+    fn unsharded_comparison_runs_too() {
+        let cfg = CodecFigConfig {
+            shards: 1,
+            codecs: vec![CodecSpec::Dense, CodecSpec::QuantizeU8],
+            horizon_secs: 20.0,
+            ..small_cfg()
+        };
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 2);
+        assert!(series.iter().all(|s| s.steps > 0));
+    }
+
+    #[test]
+    fn degenerate_knobs_are_config_errors() {
+        let cfg = CodecFigConfig { p: 0.0, ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+        let cfg = CodecFigConfig { codecs: Vec::new(), ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+        let cfg = CodecFigConfig { shards: 4096, ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join("gosgd_codecs_test");
+        let path = dir.join("codecs.csv");
+        let cfg = CodecFigConfig { horizon_secs: 10.0, dim: 128, ..small_cfg() };
+        run(&cfg, Some(&path)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,sim_seconds,loss\n"));
+        assert!(text.lines().count() > 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

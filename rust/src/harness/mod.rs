@@ -10,7 +10,11 @@
 //! * [`variance`] — Appendix A: gradient-estimator error ∝ 1/N.
 //! * [`scenarios`] — beyond the paper: GoSGD vs the barrier baseline
 //!   under heterogeneous compute and crash/rejoin worker churn (DES).
+//! * [`codecs`] — beyond the paper: consensus distance and train loss
+//!   across payload codecs (dense / top-k / u8 quantization) at fixed
+//!   wall-clock bandwidth (DES).
 
+pub mod codecs;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;

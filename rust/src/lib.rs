@@ -27,7 +27,9 @@
 //!   strategy can be *compiled* to its `K^(t)` sequence and cross-checked.
 //! * [`gossip`] — sum-weight protocol substrate: weights, messages, queues,
 //!   the sharded-exchange extension (`gossip::shard`) that ships one
-//!   chunk of the vector per gossip event for large models, and the
+//!   chunk of the vector per gossip event for large models, the payload
+//!   codecs (`gossip::codec`: dense / top-k with error feedback / u8
+//!   quantization) that compress each chunk on the wire, and the
 //!   runtime-agnostic protocol core (`gossip::protocol`) all three
 //!   runtimes drive.
 //! * [`worker`] / [`coordinator`] — the threaded runtime.

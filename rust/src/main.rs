@@ -21,7 +21,8 @@ use gosgd::config::{RunConfig, StrategyKind};
 use gosgd::coordinator::Coordinator;
 use gosgd::error::Result;
 use gosgd::gossip::PeerSelector;
-use gosgd::harness::{fig1, fig2, fig3, fig4, scenarios, variance};
+use gosgd::gossip::CodecSpec;
+use gosgd::harness::{codecs, fig1, fig2, fig3, fig4, scenarios, variance};
 use gosgd::model::Manifest;
 use gosgd::optim::LrSchedule;
 use gosgd::util::cli::Args;
@@ -60,7 +61,7 @@ fn train_args() -> Args {
         .opt("model", "tiny", "model variant: tiny | cnn | mlp_wide")
         .opt("workers", "8", "number of workers M")
         .opt("steps", "200", "engine steps (rounds or ticks)")
-        .opt("strategy", "gosgd:0.02", "gosgd:P[:SHARDS] | persyn:TAU | easgd:A:TAU | downpour:NP:NF | allreduce | local")
+        .opt("strategy", "gosgd:0.02", "gosgd:P[:SHARDS[:CODEC]] (codec: dense | q8 | top<K>) | persyn:TAU | easgd:A:TAU | downpour:NP:NF | allreduce | local")
         .opt("lr", "0.1", "learning rate (or step:BASE:GAMMA:EVERY)")
         .opt("weight-decay", "0.0001", "weight decay")
         .opt("seed", "0", "RNG seed")
@@ -139,15 +140,16 @@ fn cmd_consensus(argv: Vec<String>) -> Result<()> {
 
 fn cmd_figure(argv: Vec<String>) -> Result<()> {
     let a = Args::new("gosgd figure", "regenerate a paper figure's series")
-        .opt("figure", "fig1", "fig1 | fig2 | fig3 | scenarios")
+        .opt("figure", "fig1", "fig1 | fig2 | fig3 | scenarios | codecs")
         .opt("artifacts", "artifacts", "artifact directory root")
         .opt("model", "tiny", "model variant")
         .opt("workers", "8", "number of workers")
         .opt("iterations", "150", "worker iterations (fig1/fig3)")
         .opt("ps", "0.01,0.4", "exchange probabilities (fig1/fig3)")
-        .opt("p", "0.02", "exchange probability (fig2/scenarios)")
-        .opt("shards", "1", "gossip shards per exchange (fig2/scenarios)")
-        .opt("horizon", "120", "simulated seconds (fig2/scenarios)")
+        .opt("p", "0.02", "exchange probability (fig2/scenarios/codecs)")
+        .opt("shards", "1", "gossip shards per exchange (fig2/scenarios/codecs)")
+        .opt("codecs", "dense,top32,q8", "payload codecs to compare (codecs)")
+        .opt("horizon", "120", "simulated seconds (fig2/scenarios/codecs)")
         .opt("backend", "quadratic", "fig2 gradients: quadratic | pjrt")
         .opt("hetero", "", "compute multipliers, cycled over workers; empty = one 4x straggler (scenarios)")
         .opt("mtbf", "20", "mean seconds between worker crashes (scenarios)")
@@ -207,6 +209,24 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
             };
             let series = fig3::run(&cfg, out.as_deref())?;
             println!("{}", fig3::format_table(&series));
+        }
+        "codecs" => {
+            let codec_specs = a
+                .get("codecs")?
+                .split(',')
+                .map(|s| CodecSpec::parse(s.trim()))
+                .collect::<Result<Vec<CodecSpec>>>()?;
+            let cfg = codecs::CodecFigConfig {
+                workers: a.get_usize("workers")?,
+                p: a.get_f64("p")?,
+                shards: a.get_usize("shards")?,
+                codecs: codec_specs,
+                horizon_secs: a.get_f64("horizon")?,
+                seed: a.get_u64("seed")?,
+                ..Default::default()
+            };
+            let series = codecs::run(&cfg, out.as_deref())?;
+            println!("{}", codecs::format_table(&series));
         }
         "scenarios" => {
             let cfg = scenarios::ScenarioConfig {

@@ -16,7 +16,9 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use crate::error::{Error, Result};
-use crate::gossip::{wire_bytes_for, PeerSelector, ProtocolCore, Shard, SumWeight};
+use crate::gossip::{
+    wire_bytes_for, CodecSpec, EncodedPayload, PeerSelector, ProtocolCore, Shard, SumWeight,
+};
 use crate::strategies::grad::GradSource;
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -175,8 +177,9 @@ enum EventKind {
     /// worker's epoch, invalidating wakes scheduled before it died.
     Wake { w: usize, epoch: u32 },
     /// A gossip message lands in worker `to`'s mailbox; `shard` records
-    /// which slice of the vector `params` covers.
-    Deliver { to: usize, params: FlatVec, weight: f64, shard: Shard },
+    /// which slice of the vector the (possibly codec-encoded) `payload`
+    /// covers.
+    Deliver { to: usize, payload: EncodedPayload, weight: f64, shard: Shard },
     /// Worker `w` crashes: it stops computing, its state freezes, its
     /// mailbox keeps accumulating (peers fire-and-forget as usual).
     Crash(usize),
@@ -218,9 +221,13 @@ impl Ord for Event {
 pub struct DesReport {
     pub trace: Vec<(f64, f64)>,
     pub messages: u64,
-    /// Wire bytes carried by gossip messages (sharded messages are
-    /// proportionally smaller; barrier strategies count full models).
+    /// Wire bytes carried by gossip messages in their encoded form
+    /// (sharded messages are proportionally smaller, codecs shrink the
+    /// body further; barrier strategies count full dense models).
     pub bytes: u64,
+    /// Bytes the same messages would have cost uncompressed (dense f32);
+    /// equals `bytes` when no codec is active.
+    pub raw_bytes: u64,
     /// Total seconds workers spent blocked on synchronization.
     pub blocked_secs: f64,
     /// Total local gradient steps executed.
@@ -238,7 +245,7 @@ struct WorkerState {
     /// The worker's protocol state machine (per-shard sum weights, shard
     /// cursor, exchange policy, local step counter).
     core: ProtocolCore,
-    mailbox: Vec<(Shard, FlatVec, f64)>,
+    mailbox: Vec<(Shard, EncodedPayload, f64)>,
     /// PerSyn/EASGD: parked at the barrier.
     at_barrier: bool,
     /// Churn: offline workers swallow wakes and let mail accumulate.
@@ -341,6 +348,19 @@ impl DesEngine {
         self
     }
 
+    /// Compress gossip payloads with a codec (gossip strategies only —
+    /// the barrier baselines ship dense models).  Message latency is
+    /// bandwidth-dominated at paper-scale payloads, so the encoded form
+    /// proportionally cuts per-message latency as well as bytes.  Must be
+    /// called before the first [`DesEngine::run`].
+    pub fn with_codec(mut self, codec: CodecSpec) -> Self {
+        assert!(!self.started, "with_codec must precede run");
+        for ws in &mut self.workers {
+            ws.core.set_codec(codec);
+        }
+        self
+    }
+
     fn schedule(&mut self, at: f64, kind: EventKind) {
         self.seq += 1;
         self.events.push(Event { time: at, seq: self.seq, kind });
@@ -422,10 +442,10 @@ impl DesEngine {
             }
             self.report.end_time = ev.time;
             match ev.kind {
-                EventKind::Deliver { to, params, weight, shard } => {
+                EventKind::Deliver { to, payload, weight, shard } => {
                     // Delivered even while `to` is down: the mailbox
                     // accumulates and the backlog blends at rejoin.
-                    self.workers[to].mailbox.push((shard, params, weight));
+                    self.workers[to].mailbox.push((shard, payload, weight));
                 }
                 EventKind::Wake { w, epoch } => {
                     if self.workers[w].alive && epoch == self.wake_epoch[w] {
@@ -489,8 +509,8 @@ impl DesEngine {
         let pending = std::mem::take(&mut self.workers[w].mailbox);
         {
             let ws = &mut self.workers[w];
-            for (shard, params, weight) in pending {
-                ws.core.absorb(&mut ws.x, shard, &params, SumWeight::from_value(weight))?;
+            for (shard, payload, weight) in pending {
+                ws.core.absorb(&mut ws.x, shard, &payload, SumWeight::from_value(weight))?;
             }
         }
 
@@ -522,17 +542,22 @@ impl DesEngine {
                 };
                 if let Some(out) = out {
                     // Bandwidth-dominated latency at paper-scale messages:
-                    // shipping a fraction of the vector takes the same
-                    // fraction of the one-way latency (1.0 when full).
-                    let frac = out.shard.len as f64 / dim as f64;
+                    // shipping a fraction of the full dense message's bytes
+                    // takes the same fraction of the one-way latency
+                    // (exactly 1.0 for an unsharded dense send), so both
+                    // sharding and payload codecs directly cut per-message
+                    // latency.
+                    let encoded = out.wire_bytes();
+                    let frac = encoded as f64 / wire_bytes_for(dim, false) as f64;
                     let latency = self.time_model.draw_latency(&mut self.rng) * frac;
                     self.report.messages += 1;
-                    self.report.bytes += out.wire_bytes() as u64;
+                    self.report.bytes += encoded as u64;
+                    self.report.raw_bytes += out.raw_wire_bytes() as u64;
                     self.schedule(
                         now + latency,
                         EventKind::Deliver {
                             to: out.to,
-                            params: out.payload,
+                            payload: out.payload,
                             weight: out.weight.value(),
                             shard: out.shard,
                         },
@@ -558,7 +583,9 @@ impl DesEngine {
                     self.workers[w].x.mix_from(&xr, 0.5, 0.5)?;
                     self.workers[r].x = self.workers[w].x.clone();
                     self.report.messages += 2;
-                    self.report.bytes += 2 * wire_bytes_for(xr.len(), false) as u64;
+                    let b = 2 * wire_bytes_for(xr.len(), false) as u64;
+                    self.report.bytes += b;
+                    self.report.raw_bytes += b;
                     // Sender blocks for the wait + handshake; receiver owes
                     // the handshake at its next wake.
                     self.report.blocked_secs += wait + lat;
@@ -607,7 +634,9 @@ impl DesEngine {
                             self.workers[i].at_barrier = false;
                         }
                         self.report.messages += 2 * m as u64;
-                        self.report.bytes += 2 * m as u64 * wire_bytes_for(old_master.len(), false) as u64;
+                        let b = 2 * m as u64 * wire_bytes_for(old_master.len(), false) as u64;
+                        self.report.bytes += b;
+                        self.report.raw_bytes += b;
                         for arrival in self.barrier_arrivals.clone() {
                             self.report.blocked_secs += resume - arrival;
                         }
@@ -643,7 +672,9 @@ impl DesEngine {
                         let bcast = self.time_model.draw_latency(&mut self.rng);
                         let resume = last + gather + service + bcast;
                         self.report.messages += 2 * m as u64;
-                        self.report.bytes += 2 * m as u64 * wire_bytes_for(mean.len(), false) as u64;
+                        let b = 2 * m as u64 * wire_bytes_for(mean.len(), false) as u64;
+                        self.report.bytes += b;
+                        self.report.raw_bytes += b;
                         for (i, arrival) in self.barrier_arrivals.clone().iter().enumerate() {
                             self.report.blocked_secs += resume - arrival;
                             self.workers[i].x = mean.clone();
@@ -668,6 +699,17 @@ impl DesEngine {
     pub fn consensus_model(&self) -> Result<FlatVec> {
         let refs: Vec<&FlatVec> = self.workers.iter().map(|s| &s.x).collect();
         FlatVec::mean_of(&refs)
+    }
+
+    /// Consensus error `Σ_m ‖x_m − x̄‖²` over the final worker models —
+    /// the accuracy side of the codec bandwidth/accuracy tradeoff.
+    pub fn consensus_error(&self) -> Result<f64> {
+        let mean = self.consensus_model()?;
+        let mut eps = 0.0;
+        for ws in &self.workers {
+            eps += ws.x.dist_sq(&mean)?;
+        }
+        Ok(eps)
     }
 
     /// Per-worker local step counts (scenario diagnostics).
@@ -1033,5 +1075,90 @@ mod tests {
             ..ScenarioModel::none()
         });
         assert!(eng.run(&mut grad, 10.0).is_err());
+    }
+
+    // ---- payload codecs under simulated time ---------------------------
+
+    fn run_codec(codec: CodecSpec, horizon: f64, seed: u64) -> DesEngine {
+        let dim = 2048;
+        let mut grad = QuadraticSource::new(dim, 0.1, seed);
+        let init = FlatVec::zeros(dim);
+        let mut eng = DesEngine::new(
+            DesStrategy::ShardedGoSgd { p: 0.2, shards: 4 },
+            TimeModel::paper_like(),
+            8,
+            &init,
+            1.0,
+            0.0,
+            seed ^ 0xD5,
+        )
+        .unwrap()
+        .with_codec(codec);
+        eng.run(&mut grad, horizon).unwrap();
+        eng
+    }
+
+    #[test]
+    fn q8_codec_compresses_bytes_and_latency_in_sim() {
+        let dense = run_codec(CodecSpec::Dense, 30.0, 61);
+        let q8 = run_codec(CodecSpec::QuantizeU8, 30.0, 61);
+        assert_eq!(dense.report().bytes, dense.report().raw_bytes);
+        let q8_rep = q8.report();
+        assert!(q8_rep.messages > 0);
+        assert!(
+            q8_rep.raw_bytes >= 3 * q8_rep.bytes,
+            "encoded {} vs raw {}",
+            q8_rep.bytes,
+            q8_rep.raw_bytes
+        );
+        // Fire-and-forget is untouched by the codec.
+        assert_eq!(q8_rep.blocked_secs, 0.0);
+        // Training still descends through the quantized exchanges.
+        let early: f64 = q8_rep.trace.iter().take(50).map(|(_, l)| l).sum::<f64>() / 50.0;
+        let n = q8_rep.trace.len();
+        let late: f64 = q8_rep.trace[n - 50..].iter().map(|(_, l)| l).sum::<f64>() / 50.0;
+        assert!(late < early * 0.7, "{early} -> {late}");
+    }
+
+    #[test]
+    fn codec_runs_conserve_mass_per_shard_in_sim() {
+        for codec in [CodecSpec::QuantizeU8, CodecSpec::TopK { k: 64 }] {
+            let eng = run_codec(codec, 20.0, 63);
+            let shards = 4;
+            let mut totals = vec![0.0f64; shards];
+            for ws in eng.worker_weights() {
+                for (k, v) in ws.iter().enumerate() {
+                    totals[k] += v;
+                }
+            }
+            for w in &eng.workers {
+                for (shard, _, weight) in &w.mailbox {
+                    totals[shard.index] += weight;
+                }
+            }
+            for ev in eng.events.iter() {
+                if let EventKind::Deliver { weight, shard, .. } = &ev.kind {
+                    totals[shard.index] += weight;
+                }
+            }
+            for (k, total) in totals.iter().enumerate() {
+                assert!(
+                    (total - 1.0).abs() < 1e-9,
+                    "codec {codec:?}: shard {k} mass {total}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn codec_deterministic_given_seed() {
+        let a = run_codec(CodecSpec::QuantizeU8, 15.0, 67);
+        let b = run_codec(CodecSpec::QuantizeU8, 15.0, 67);
+        assert_eq!(a.report().steps, b.report().steps);
+        assert_eq!(a.report().bytes, b.report().bytes);
+        assert_eq!(
+            a.consensus_model().unwrap().as_slice(),
+            b.consensus_model().unwrap().as_slice()
+        );
     }
 }

@@ -27,9 +27,9 @@
 //! sequential engine uses the host [`FlatVec::mix_from`] path and the PJRT
 //! integration test asserts both produce the same numbers.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::framework::generators;
-use crate::gossip::{wire_bytes_for, PeerSelector};
+use crate::gossip::{wire_bytes_for, CodecSpec, PeerSelector};
 use crate::strategies::{Clock, ClusterState, Strategy};
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -48,12 +48,21 @@ pub struct GoSgd {
     /// ships one round-robin shard per gossip event (see
     /// [`crate::gossip::shard`]), cutting per-event bytes by `~1/shards`.
     shards: usize,
+    /// Payload codec applied to every message body (see
+    /// [`crate::gossip::codec`]); dense by default.
+    codec: CodecSpec,
 }
 
 impl GoSgd {
     pub fn new(p: f64) -> Self {
         assert!((0.0..=1.0).contains(&p), "p must be a probability, got {p}");
-        GoSgd { p, selector: PeerSelector::Uniform, immediate: false, shards: 1 }
+        GoSgd {
+            p,
+            selector: PeerSelector::Uniform,
+            immediate: false,
+            shards: 1,
+            codec: CodecSpec::Dense,
+        }
     }
 
     pub fn with_selector(mut self, selector: PeerSelector) -> Self {
@@ -71,6 +80,13 @@ impl GoSgd {
         self
     }
 
+    /// Compress message bodies with a payload codec (dense / top-k / u8
+    /// quantization — see [`crate::gossip::codec`]).
+    pub fn with_codec(mut self, codec: CodecSpec) -> Self {
+        self.codec = codec;
+        self
+    }
+
     /// Immediate-delivery mode (cross-check only; the real protocol queues).
     pub fn immediate_delivery(mut self) -> Self {
         self.immediate = true;
@@ -83,6 +99,10 @@ impl GoSgd {
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    pub fn codec(&self) -> CodecSpec {
+        self.codec
     }
 
     /// Immediate-delivery exchange (cross-check only): the send-side core
@@ -117,11 +137,15 @@ impl GoSgd {
 
 impl Strategy for GoSgd {
     fn name(&self) -> String {
+        let mut name = format!("gosgd(p={}", self.p);
         if self.shards > 1 {
-            format!("gosgd(p={},shards={})", self.p, self.shards)
-        } else {
-            format!("gosgd(p={})", self.p)
+            name.push_str(&format!(",shards={}", self.shards));
         }
+        if self.codec != CodecSpec::Dense {
+            name.push_str(&format!(",codec={}", self.codec.label()));
+        }
+        name.push(')');
+        name
     }
 
     fn clock(&self) -> Clock {
@@ -135,7 +159,7 @@ impl Strategy for GoSgd {
         state: &mut ClusterState,
         _rng: &mut Rng,
     ) -> Result<()> {
-        state.configure_gossip(self.p, &self.selector, self.shards)?;
+        state.configure_gossip(self.p, &self.selector, self.shards, self.codec)?;
         // ProcessMessages (Algorithm 4): drain the mailbox, fold each
         // message in through the worker's protocol core.
         let pending = state.queues[m].drain();
@@ -157,7 +181,14 @@ impl Strategy for GoSgd {
         let m = state.workers();
         if self.immediate {
             // Cross-check path: same gate and peer pick as the core's
-            // emit, applied through the exchange matrix right now.
+            // emit, applied through the exchange matrix right now.  The
+            // matrix replay has no notion of encoded payloads, so the
+            // cross-check only speaks dense.
+            if self.codec != CodecSpec::Dense {
+                return Err(Error::config(
+                    "immediate-delivery cross-check supports only the dense codec",
+                ));
+            }
             if m < 2 || !rng.bernoulli(self.p) {
                 return Ok(());
             }
@@ -176,7 +207,7 @@ impl Strategy for GoSgd {
         if let Some(out) = out {
             let r = out.to + 1; // cores are 0-based, slots 1-based
             let msg = out.into_message(s, state.steps[s]);
-            state.count_message(msg.wire_bytes());
+            state.count_message_encoded(msg.wire_bytes(), msg.raw_wire_bytes());
             state.queues[r].push(msg);
         }
         Ok(())
@@ -466,5 +497,120 @@ mod tests {
         }
         assert_eq!(pushed, state.comm.messages);
         assert_eq!(pushed, drained + depth);
+    }
+
+    // ---- payload codecs through the engine driver ------------------------
+
+    fn run_codec(codec: CodecSpec, dim: usize, shards: usize, steps: u64) -> Engine<'static> {
+        let src = NoiseSource::new(dim, 41);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(
+            Box::new(GoSgd::new(0.5).with_shards(shards).with_codec(codec)),
+            src,
+            8,
+            &init,
+            1.0,
+            0.0,
+            43,
+        );
+        eng.run(steps).unwrap();
+        eng
+    }
+
+    #[test]
+    fn q8_codec_cuts_encoded_bytes_at_least_3x_at_equal_shard_count() {
+        // The acceptance ratio: same shard count, q8 vs dense, >= 3x fewer
+        // encoded wire bytes per message (raw accounting identical).
+        let (dim, shards, steps) = (2048, 4, 2000);
+        let dense = run_codec(CodecSpec::Dense, dim, shards, steps);
+        let q8 = run_codec(CodecSpec::QuantizeU8, dim, shards, steps);
+        let dense_per_msg =
+            dense.state().comm.bytes as f64 / dense.state().comm.messages as f64;
+        let q8_per_msg = q8.state().comm.bytes as f64 / q8.state().comm.messages as f64;
+        assert!(
+            dense_per_msg >= 3.0 * q8_per_msg,
+            "dense {dense_per_msg} vs q8 {q8_per_msg} bytes/msg"
+        );
+        // Raw accounting is codec-independent and matches dense's wire.
+        assert_eq!(
+            q8.state().comm.raw_bytes / q8.state().comm.messages,
+            dense.state().comm.bytes / dense.state().comm.messages,
+        );
+        assert_eq!(dense.state().comm.bytes, dense.state().comm.raw_bytes);
+    }
+
+    #[test]
+    fn codec_runs_conserve_mass_per_shard_in_the_engine() {
+        for codec in [CodecSpec::QuantizeU8, CodecSpec::TopK { k: 8 }] {
+            let shards = 4;
+            let eng = run_codec(codec, 64, shards, 3000);
+            let state = eng.state();
+            let m = state.workers();
+            let mut totals = vec![0.0f64; shards];
+            for w in 1..=m {
+                for (k, wgt) in state.cores[w].weights().iter().enumerate() {
+                    totals[k] += wgt.value();
+                }
+            }
+            for q in &state.queues {
+                for msg in q.drain() {
+                    totals[msg.shard.index] += msg.weight.value();
+                }
+            }
+            for (k, total) in totals.iter().enumerate() {
+                assert!(
+                    (total - 1.0).abs() < 1e-9,
+                    "codec {codec:?}: shard {k} mass {total}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn codec_runs_still_bound_consensus_error() {
+        // Compressed exchange must still couple the workers far below the
+        // no-communication baseline.
+        let dim = 64;
+        let steps = 6000;
+        let init = FlatVec::zeros(dim);
+        let mk = |strategy: Box<dyn crate::strategies::Strategy>| {
+            let src = NoiseSource::new(dim, 47);
+            let mut eng = Engine::new(strategy, src, 8, &init, 1.0, 0.0, 53);
+            eng.run(steps).unwrap();
+            eng.state().stacked.consensus_error().unwrap()
+        };
+        let eps_local = mk(Box::new(crate::strategies::local::Local));
+        for codec in [CodecSpec::QuantizeU8, CodecSpec::TopK { k: 8 }] {
+            let eps = mk(Box::new(GoSgd::new(0.5).with_shards(4).with_codec(codec)));
+            assert!(
+                eps < eps_local * 0.3,
+                "codec {codec:?}: eps {eps} vs local {eps_local}"
+            );
+        }
+    }
+
+    #[test]
+    fn immediate_mode_rejects_compressed_codecs() {
+        let dim = 8;
+        let src = NoiseSource::new(dim, 3);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(
+            Box::new(GoSgd::new(1.0).immediate_delivery().with_codec(CodecSpec::QuantizeU8)),
+            src,
+            2,
+            &init,
+            0.1,
+            0.0,
+            5,
+        );
+        let err = eng.run(10).unwrap_err();
+        assert!(err.to_string().contains("dense codec"), "{err}");
+    }
+
+    #[test]
+    fn codec_name_reports_the_codec() {
+        let s = GoSgd::new(0.02).with_shards(8).with_codec(CodecSpec::QuantizeU8);
+        assert_eq!(s.name(), "gosgd(p=0.02,shards=8,codec=q8)");
+        assert_eq!(GoSgd::new(0.02).name(), "gosgd(p=0.02)");
     }
 }

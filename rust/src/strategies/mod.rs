@@ -33,7 +33,7 @@ pub use grad::GradSource;
 
 use crate::error::Result;
 use crate::framework::{CommMatrix, Stacked};
-use crate::gossip::{MessageQueue, PeerSelector, ProtocolCore};
+use crate::gossip::{CodecSpec, MessageQueue, PeerSelector, ProtocolCore};
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
 
@@ -52,8 +52,13 @@ pub enum Clock {
 pub struct CommStats {
     /// Parameter-vector messages actually sent.
     pub messages: u64,
-    /// Bytes those messages carried.
+    /// Bytes those messages carried on the wire (encoded form when a
+    /// payload codec is active).
     pub bytes: u64,
+    /// Bytes the same messages would have carried uncompressed (dense
+    /// f32) — `bytes == raw_bytes` without a codec; the ratio is the
+    /// achieved compression.
+    pub raw_bytes: u64,
     /// Synchronization barriers (events where workers must wait).
     pub barriers: u64,
 }
@@ -119,17 +124,21 @@ impl ClusterState {
         self.cores[0].num_shards() > 1
     }
 
-    /// Point every slot's protocol core at the strategy's exchange policy
-    /// and shard partition.  Idempotent per configuration and cheap, so
-    /// gossip strategies call it every tick.  Moving from the 1-shard
-    /// default to `shards > 1` re-partitions (weights are still at their
-    /// 1/M init the first time a strategy runs); changing an established
-    /// shard count mid-run would break per-shard conservation and panics.
+    /// Point every slot's protocol core at the strategy's exchange policy,
+    /// shard partition and payload codec.  Idempotent per configuration and
+    /// cheap, so gossip strategies call it every tick.  Moving from the
+    /// 1-shard default to `shards > 1` re-partitions (weights are still at
+    /// their 1/M init the first time a strategy runs); changing an
+    /// established shard count mid-run would break per-shard conservation
+    /// and panics.  Codec swaps never touch weight state (a stateful
+    /// codec's encoder buffer restarts — see
+    /// [`ProtocolCore::set_codec`]).
     pub fn configure_gossip(
         &mut self,
         p: f64,
         selector: &PeerSelector,
         shards: usize,
+        codec: CodecSpec,
     ) -> Result<()> {
         if shards == 0 {
             return Err(crate::error::Error::config("shards must be >= 1"));
@@ -137,7 +146,11 @@ impl ClusterState {
         // Fast path for the per-tick call: everything already matches
         // (cores are always configured uniformly, so slot 0 speaks for all).
         let sample = &self.cores[0];
-        if sample.num_shards() == shards && sample.p() == p && sample.selector() == selector {
+        if sample.num_shards() == shards
+            && sample.p() == p
+            && sample.selector() == selector
+            && sample.codec_spec() == codec
+        {
             return Ok(());
         }
         let current = self.cores[0].num_shards();
@@ -156,11 +169,13 @@ impl ClusterState {
                     p,
                     selector.clone(),
                     shards,
-                )?;
+                )?
+                .with_codec(codec);
             }
         } else {
             for core in &mut self.cores {
                 core.set_exchange(p, selector.clone())?;
+                core.set_codec(codec);
             }
         }
         Ok(())
@@ -194,10 +209,18 @@ impl ClusterState {
         }
     }
 
-    /// Count one sent parameter message of `bytes` bytes.
+    /// Count one sent parameter message of `bytes` uncompressed bytes
+    /// (encoded == raw; the path for codec-free strategies).
     pub fn count_message(&mut self, bytes: usize) {
+        self.count_message_encoded(bytes, bytes);
+    }
+
+    /// Count one sent message whose wire form is `encoded` bytes against
+    /// an uncompressed cost of `raw` bytes.
+    pub fn count_message_encoded(&mut self, encoded: usize, raw: usize) {
         self.comm.messages += 1;
-        self.comm.bytes += bytes as u64;
+        self.comm.bytes += encoded as u64;
+        self.comm.raw_bytes += raw as u64;
     }
 
     /// Count one synchronization barrier.
@@ -309,7 +332,13 @@ mod tests {
         s.count_barrier();
         assert_eq!(s.comm.messages, 2);
         assert_eq!(s.comm.bytes, 32);
+        assert_eq!(s.comm.raw_bytes, 32, "no codec: encoded == raw");
         assert_eq!(s.comm.barriers, 1);
+        // An encoded message counts both sides of the compression ratio.
+        s.count_message_encoded(10, 40);
+        assert_eq!(s.comm.messages, 3);
+        assert_eq!(s.comm.bytes, 42);
+        assert_eq!(s.comm.raw_bytes, 72);
     }
 
     #[test]
@@ -330,7 +359,8 @@ mod tests {
     fn configure_gossip_populates_per_shard_weights() {
         let mut s = ClusterState::new(4, &FlatVec::zeros(10));
         assert!(!s.sharded());
-        s.configure_gossip(0.3, &crate::gossip::PeerSelector::Uniform, 3).unwrap();
+        s.configure_gossip(0.3, &crate::gossip::PeerSelector::Uniform, 3, CodecSpec::Dense)
+            .unwrap();
         assert!(s.sharded());
         assert_eq!(s.cores.len(), 5);
         for core in &s.cores {
@@ -342,21 +372,54 @@ mod tests {
             }
         }
         // Idempotent for the same count.
-        s.configure_gossip(0.3, &crate::gossip::PeerSelector::Uniform, 3).unwrap();
+        s.configure_gossip(0.3, &crate::gossip::PeerSelector::Uniform, 3, CodecSpec::Dense)
+            .unwrap();
         assert_eq!(s.cores.len(), 5);
         // Oversized shard counts are config errors, not panics.
         let mut t = ClusterState::new(2, &FlatVec::zeros(4));
         assert!(t
-            .configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 100)
+            .configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 100, CodecSpec::Dense)
             .is_err());
+    }
+
+    #[test]
+    fn configure_gossip_applies_the_codec_to_every_core() {
+        let mut s = ClusterState::new(3, &FlatVec::zeros(12));
+        s.configure_gossip(
+            0.2,
+            &crate::gossip::PeerSelector::Uniform,
+            2,
+            CodecSpec::QuantizeU8,
+        )
+        .unwrap();
+        for core in &s.cores {
+            assert_eq!(core.codec_spec(), CodecSpec::QuantizeU8);
+        }
+        // Same shard count, different codec: cores are re-pointed in
+        // place, weights untouched.
+        s.configure_gossip(
+            0.2,
+            &crate::gossip::PeerSelector::Uniform,
+            2,
+            CodecSpec::TopK { k: 4 },
+        )
+        .unwrap();
+        for core in &s.cores {
+            assert_eq!(core.codec_spec(), CodecSpec::TopK { k: 4 });
+            for w in core.weights() {
+                assert!((w.value() - 1.0 / 3.0).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]
     #[should_panic(expected = "re-partition")]
     fn changing_shard_count_mid_run_panics() {
         let mut s = ClusterState::new(2, &FlatVec::zeros(8));
-        s.configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 2).unwrap();
-        s.configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 4).unwrap();
+        s.configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 2, CodecSpec::Dense)
+            .unwrap();
+        s.configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 4, CodecSpec::Dense)
+            .unwrap();
     }
 
     #[test]

@@ -25,13 +25,23 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// p-th percentile (nearest-rank) of an unsorted slice.
+/// p-th percentile of an unsorted slice, computed as the **rounded
+/// linear index** into the sorted data: `sorted[round(p/100 · (N−1))]`.
+/// (Not the classic "nearest-rank" `sorted[ceil(p·N/100) − 1]` — the two
+/// agree at 0/100 and on odd-length medians but differ in between; the
+/// rounded-index rule is what the bench harness has always reported, so
+/// it is now the documented contract.)
+///
+/// Samples are ordered with [`f64::total_cmp`], so NaN inputs sort to the
+/// ends (positive NaN above +∞) instead of panicking mid-sort; a NaN can
+/// therefore only surface at the extreme percentiles that genuinely point
+/// at it.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -49,11 +59,27 @@ mod tests {
     }
 
     #[test]
-    fn percentile_nearest_rank() {
+    fn percentile_rounded_linear_index() {
         let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+        // The documented rule on an even-length input: round(0.5·3) = 2.
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression: a NaN sample used to panic the partial_cmp sort.
+        // Under total_cmp, positive NaN orders above +inf, so the finite
+        // percentiles stay meaningful and only the top rank reads NaN.
+        let xs = [f64::NAN, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!(percentile(&xs, 100.0).is_nan(), "p100 genuinely points at the NaN");
+        // All-NaN input no longer aborts the whole bench report.
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(percentile(&all_nan, 50.0).is_nan());
     }
 }

@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
 use crate::error::{Error, Result};
-use crate::gossip::{MessageQueue, PeerSelector, ProtocolCore};
+use crate::gossip::{CodecSpec, MessageQueue, PeerSelector, ProtocolCore};
 use crate::strategies::grad::GradSource;
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -42,6 +42,8 @@ pub struct ThreadedGossip {
     /// > 1 ships one round-robin shard per send — see
     /// [`crate::gossip::shard`]).
     pub shards: usize,
+    /// Payload codec for message bodies (see [`crate::gossip::codec`]).
+    pub codec: CodecSpec,
 }
 
 impl Default for ThreadedGossip {
@@ -55,6 +57,7 @@ impl Default for ThreadedGossip {
             seed: 0,
             peer: PeerSelector::Uniform,
             shards: 1,
+            codec: CodecSpec::Dense,
         }
     }
 }
@@ -73,8 +76,10 @@ pub struct ThreadedReport {
     pub losses: Vec<Vec<(u64, f64)>>,
     /// Total messages sent.
     pub messages: u64,
-    /// Total wire bytes those messages carried.
+    /// Total wire bytes those messages carried (encoded form).
     pub bytes: u64,
+    /// Bytes the same messages would have cost uncompressed (dense f32).
+    pub raw_bytes: u64,
     /// Wall-clock seconds for the training section.
     pub elapsed_secs: f64,
     /// Consensus error across final worker models.
@@ -110,11 +115,15 @@ impl ThreadedGossip {
                 self.shards
             )));
         }
+        if self.codec == (CodecSpec::TopK { k: 0 }) {
+            return Err(Error::config("top-k codec needs k >= 1"));
+        }
         let queues: Arc<Vec<MessageQueue>> =
             Arc::new((0..m).map(|_| MessageQueue::unbounded()).collect());
         let start_barrier = Arc::new(Barrier::new(m));
         let total_messages = Arc::new(AtomicU64::new(0));
         let total_bytes = Arc::new(AtomicU64::new(0));
+        let total_raw_bytes = Arc::new(AtomicU64::new(0));
         #[allow(clippy::type_complexity)]
         let results: Arc<Vec<Mutex<Option<(FlatVec, ProtocolCore, Vec<(u64, f64)>)>>>> =
             Arc::new((0..m).map(|_| Mutex::new(None)).collect());
@@ -128,6 +137,7 @@ impl ThreadedGossip {
                 let start_barrier = start_barrier.clone();
                 let total_messages = total_messages.clone();
                 let total_bytes = total_bytes.clone();
+                let total_raw_bytes = total_raw_bytes.clone();
                 let results = results.clone();
                 let mut rng = base_rng.split(w as u64 + 1);
                 let make_source = &make_source;
@@ -147,7 +157,8 @@ impl ThreadedGossip {
                         cfg.p,
                         cfg.peer.clone(),
                         cfg.shards,
-                    )?;
+                    )?
+                    .with_codec(cfg.codec);
                     let mut grad = FlatVec::zeros(x.len());
                     let mut losses = Vec::with_capacity(cfg.steps_per_worker as usize);
                     start_barrier.wait();
@@ -168,6 +179,8 @@ impl ThreadedGossip {
                             let msg = out.into_message(w, step);
                             total_messages.fetch_add(1, Ordering::Relaxed);
                             total_bytes.fetch_add(msg.wire_bytes() as u64, Ordering::Relaxed);
+                            total_raw_bytes
+                                .fetch_add(msg.raw_wire_bytes() as u64, Ordering::Relaxed);
                             queues[to].push(msg);
                         }
                     }
@@ -228,6 +241,7 @@ impl ThreadedGossip {
             losses,
             messages: total_messages.load(Ordering::Relaxed),
             bytes: total_bytes.load(Ordering::Relaxed),
+            raw_bytes: total_raw_bytes.load(Ordering::Relaxed),
             elapsed_secs: elapsed,
             consensus_error,
         })
@@ -259,6 +273,7 @@ mod tests {
             seed: 1,
             peer: PeerSelector::Uniform,
             shards: 1,
+            codec: CodecSpec::Dense,
         };
         let init = FlatVec::zeros(dim);
         let rep = cfg.run(&init, quad_factory(dim, 0.1, 7)).unwrap();
@@ -281,6 +296,7 @@ mod tests {
             seed: 3,
             peer: PeerSelector::Uniform,
             shards: 1,
+            codec: CodecSpec::Dense,
         };
         let init = FlatVec::zeros(dim);
         let rep = cfg.run(&init, quad_factory(dim, 0.05, 11)).unwrap();
@@ -305,6 +321,7 @@ mod tests {
                 seed: 5,
                 peer: PeerSelector::Uniform,
                 shards: 1,
+                codec: CodecSpec::Dense,
             };
             cfg.run(&FlatVec::zeros(dim), quad_factory(dim, 0.3, 13))
                 .unwrap()
@@ -330,6 +347,7 @@ mod tests {
             seed: 9,
             peer: PeerSelector::Uniform,
             shards: 1,
+            codec: CodecSpec::Dense,
         };
         let rep = cfg
             .run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 17))
@@ -350,6 +368,7 @@ mod tests {
                 seed: 21,
                 peer: PeerSelector::Uniform,
                 shards,
+                codec: CodecSpec::Dense,
             };
             cfg.run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 23)).unwrap()
         };
@@ -388,6 +407,7 @@ mod tests {
             seed: 27,
             peer: PeerSelector::Uniform,
             shards,
+            codec: CodecSpec::Dense,
         };
         let rep = cfg
             .run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 29))
@@ -416,5 +436,64 @@ mod tests {
         assert!(cfg
             .run(&FlatVec::zeros(4), quad_factory(4, 0.1, 1))
             .is_err());
+    }
+
+    #[test]
+    fn q8_codec_conserves_mass_and_compresses_the_wire() {
+        let dim = 2048;
+        let shards = 4;
+        let cfg = ThreadedGossip {
+            workers: 4,
+            p: 0.5,
+            steps_per_worker: 300,
+            eta: 1.0,
+            weight_decay: 0.0,
+            seed: 33,
+            peer: PeerSelector::Uniform,
+            shards,
+            codec: CodecSpec::QuantizeU8,
+        };
+        let rep = cfg
+            .run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 35))
+            .unwrap();
+        assert!(rep.messages > 0);
+        // Shard-by-shard conservation holds with the codec active.
+        for k in 0..shards {
+            let total: f64 = rep.shard_weights.iter().map(|ws| ws[k]).sum();
+            assert!((total - 1.0).abs() < 1e-9, "shard {k} mass {total}");
+        }
+        // The acceptance ratio: >= 3x fewer encoded than raw bytes.
+        assert!(
+            rep.raw_bytes >= 3 * rep.bytes,
+            "encoded {} vs raw {}",
+            rep.bytes,
+            rep.raw_bytes
+        );
+        assert!(rep.consensus_error.is_finite());
+    }
+
+    #[test]
+    fn topk_codec_runs_and_conserves_mass() {
+        let dim = 256;
+        let cfg = ThreadedGossip {
+            workers: 4,
+            p: 0.5,
+            steps_per_worker: 300,
+            eta: 1.0,
+            weight_decay: 0.0,
+            seed: 37,
+            peer: PeerSelector::Uniform,
+            shards: 4,
+            codec: CodecSpec::TopK { k: 16 },
+        };
+        let rep = cfg
+            .run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 39))
+            .unwrap();
+        let total: f64 = rep.weights.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "weight mass {total}");
+        assert!(rep.bytes < rep.raw_bytes, "sparse bodies must be smaller");
+        // k = 0 is a config error, not a panic.
+        let bad = ThreadedGossip { codec: CodecSpec::TopK { k: 0 }, ..Default::default() };
+        assert!(bad.run(&FlatVec::zeros(8), quad_factory(8, 0.1, 1)).is_err());
     }
 }

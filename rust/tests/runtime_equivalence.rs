@@ -8,7 +8,7 @@
 //! trajectories, plus the conservation invariants the other runtimes rely
 //! on.
 
-use gosgd::gossip::{MessageQueue, PeerSelector, ProtocolCore};
+use gosgd::gossip::{CodecSpec, MessageQueue, PeerSelector, ProtocolCore};
 use gosgd::strategies::engine::Engine;
 use gosgd::strategies::gosgd::GoSgd;
 use gosgd::strategies::grad::{GradSource, NoiseSource};
@@ -20,11 +20,13 @@ const ETA: f32 = 0.5;
 /// Replicate `Engine::run_async` + the GoSgd driver by hand: same RNG
 /// stream, same wake order, same drain/step/emit sequence — but every
 /// protocol transition through a locally-owned `ProtocolCore`.
+#[allow(clippy::too_many_arguments)]
 fn drive_cores_by_hand(
     dim: usize,
     m: usize,
     p: f64,
     shards: usize,
+    codec: CodecSpec,
     ticks: u64,
     grad_seed: u64,
     engine_seed: u64,
@@ -33,7 +35,11 @@ fn drive_cores_by_hand(
     let mut rng = Rng::new(engine_seed);
     let mut xs: Vec<FlatVec> = (0..m).map(|_| FlatVec::zeros(dim)).collect();
     let mut cores: Vec<ProtocolCore> = (0..m)
-        .map(|w| ProtocolCore::new(w, m, dim, p, PeerSelector::Uniform, shards).unwrap())
+        .map(|w| {
+            ProtocolCore::new(w, m, dim, p, PeerSelector::Uniform, shards)
+                .unwrap()
+                .with_codec(codec)
+        })
         .collect();
     let queues: Vec<MessageQueue> = (0..m).map(|_| MessageQueue::unbounded()).collect();
     let mut grad = FlatVec::zeros(dim);
@@ -59,11 +65,13 @@ fn drive_cores_by_hand(
     xs
 }
 
+#[allow(clippy::too_many_arguments)]
 fn engine_trajectory(
     dim: usize,
     m: usize,
     p: f64,
     shards: usize,
+    codec: CodecSpec,
     ticks: u64,
     grad_seed: u64,
     engine_seed: u64,
@@ -71,37 +79,53 @@ fn engine_trajectory(
     let src = NoiseSource::new(dim, grad_seed);
     let init = FlatVec::zeros(dim);
     let strategy = if shards > 1 {
-        GoSgd::new(p).with_shards(shards)
+        GoSgd::new(p).with_shards(shards).with_codec(codec)
     } else {
-        GoSgd::new(p)
+        GoSgd::new(p).with_codec(codec)
     };
     let mut eng = Engine::new(Box::new(strategy), src, m, &init, ETA, 0.0, engine_seed);
     eng.run(ticks).unwrap();
     eng
 }
 
-fn assert_bit_identical(dim: usize, m: usize, p: f64, shards: usize, ticks: u64, seed: u64) {
-    let eng = engine_trajectory(dim, m, p, shards, ticks, seed, seed ^ 0xE9);
-    let hand = drive_cores_by_hand(dim, m, p, shards, ticks, seed, seed ^ 0xE9);
+fn assert_bit_identical(
+    dim: usize,
+    m: usize,
+    p: f64,
+    shards: usize,
+    codec: CodecSpec,
+    ticks: u64,
+    seed: u64,
+) {
+    let eng = engine_trajectory(dim, m, p, shards, codec, ticks, seed, seed ^ 0xE9);
+    let hand = drive_cores_by_hand(dim, m, p, shards, codec, ticks, seed, seed ^ 0xE9);
     for w in 0..m {
         assert_eq!(
             eng.state().stacked.worker(w + 1).as_slice(),
             hand[w].as_slice(),
-            "worker {w} diverged (p={p}, shards={shards})"
+            "worker {w} diverged (p={p}, shards={shards}, codec={codec:?})"
         );
     }
 }
 
 #[test]
 fn engine_equals_hand_driven_core_bit_for_bit_unsharded() {
-    assert_bit_identical(16, 4, 0.7, 1, 400, 11);
-    assert_bit_identical(33, 3, 1.0, 1, 200, 12);
+    assert_bit_identical(16, 4, 0.7, 1, CodecSpec::Dense, 400, 11);
+    assert_bit_identical(33, 3, 1.0, 1, CodecSpec::Dense, 200, 12);
 }
 
 #[test]
 fn engine_equals_hand_driven_core_bit_for_bit_sharded() {
-    assert_bit_identical(16, 4, 0.7, 3, 400, 13);
-    assert_bit_identical(40, 5, 1.0, 8, 300, 14);
+    assert_bit_identical(16, 4, 0.7, 3, CodecSpec::Dense, 400, 13);
+    assert_bit_identical(40, 5, 1.0, 8, CodecSpec::Dense, 300, 14);
+}
+
+#[test]
+fn engine_equals_hand_driven_core_bit_for_bit_with_codecs() {
+    // The codec layer lives inside the core, so compressed exchange must
+    // be just as bit-reproducible across drivers as dense exchange.
+    assert_bit_identical(40, 4, 0.8, 4, CodecSpec::QuantizeU8, 300, 15);
+    assert_bit_identical(40, 4, 0.8, 4, CodecSpec::TopK { k: 3 }, 300, 16);
 }
 
 #[test]
@@ -109,7 +133,7 @@ fn engine_conserves_mass_shard_by_shard_including_in_flight() {
     // The invariant every runtime's driver relies on, checked through the
     // engine's cores: each shard's mass (workers + queued messages) ≡ 1.
     let shards = 5;
-    let eng = engine_trajectory(60, 6, 0.8, shards, 3000, 21, 22);
+    let eng = engine_trajectory(60, 6, 0.8, shards, CodecSpec::Dense, 3000, 21, 22);
     let state = eng.state();
     let mut totals = vec![0.0f64; shards];
     for w in 1..=state.workers() {
@@ -142,6 +166,7 @@ fn threaded_runtime_conserves_mass_shard_by_shard() {
         seed: 31,
         peer: PeerSelector::Uniform,
         shards,
+        codec: CodecSpec::Dense,
     };
     let rep = cfg
         .run(&FlatVec::zeros(dim), |_w| {
@@ -185,5 +210,84 @@ fn des_runtime_conserves_mass_across_workers() {
     for k in 0..shards {
         let total: f64 = weights.iter().map(|ws| ws[k]).sum();
         assert!(total > 0.0 && total <= 1.0 + 1e-9, "shard {k} mass {total}");
+    }
+}
+
+#[test]
+fn all_three_runtimes_conserve_mass_shard_by_shard_with_codecs() {
+    use gosgd::sim::{DesEngine, DesStrategy, TimeModel};
+    use gosgd::strategies::grad::QuadraticSource;
+    use gosgd::worker::ThreadedGossip;
+    let shards = 4;
+    for codec in [CodecSpec::QuantizeU8, CodecSpec::TopK { k: 4 }] {
+        // 1. Sequential engine: exact identity over workers + queues.
+        let eng = engine_trajectory(48, 4, 0.7, shards, codec, 2000, 71, 72);
+        let state = eng.state();
+        let mut totals = vec![0.0f64; shards];
+        for w in 1..=state.workers() {
+            for (k, wgt) in state.cores[w].weights().iter().enumerate() {
+                totals[k] += wgt.value();
+            }
+        }
+        for q in &state.queues {
+            for msg in q.drain() {
+                totals[msg.shard.index] += msg.weight.value();
+            }
+        }
+        for (k, total) in totals.iter().enumerate() {
+            assert!(
+                (total - 1.0).abs() < 1e-9,
+                "engine codec {codec:?}: shard {k} mass {total}"
+            );
+        }
+
+        // 2. OS-thread runtime: exact identity after the final fold.
+        let cfg = ThreadedGossip {
+            workers: 4,
+            p: 0.5,
+            steps_per_worker: 150,
+            eta: 1.0,
+            weight_decay: 0.0,
+            seed: 73,
+            peer: PeerSelector::Uniform,
+            shards,
+            codec,
+        };
+        let rep = cfg
+            .run(&FlatVec::zeros(48), |_w| {
+                Ok(Box::new(QuadraticSource::new(48, 0.1, 75)) as Box<dyn GradSource>)
+            })
+            .unwrap();
+        for k in 0..shards {
+            let total: f64 = rep.shard_weights.iter().map(|ws| ws[k]).sum();
+            assert!(
+                (total - 1.0).abs() < 1e-9,
+                "threaded codec {codec:?}: shard {k} mass {total}"
+            );
+        }
+
+        // 3. DES: worker-held mass stays positive and never exceeds the
+        // invariant (the rest is in flight — the exact all-locations
+        // identity is pinned in sim::des's own suite).
+        let mut grad = QuadraticSource::new(48, 0.1, 77);
+        let mut des = DesEngine::new(
+            DesStrategy::ShardedGoSgd { p: 0.4, shards },
+            TimeModel::paper_like(),
+            4,
+            &FlatVec::zeros(48),
+            1.0,
+            0.0,
+            79,
+        )
+        .unwrap()
+        .with_codec(codec);
+        des.run(&mut grad, 25.0).unwrap();
+        for k in 0..shards {
+            let total: f64 = des.worker_weights().iter().map(|ws| ws[k]).sum();
+            assert!(
+                total > 0.0 && total <= 1.0 + 1e-9,
+                "des codec {codec:?}: shard {k} mass {total}"
+            );
+        }
     }
 }
