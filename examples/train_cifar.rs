@@ -24,7 +24,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .opt("workers", "8", "number of workers M")
         .opt("iterations", "300", "worker-local iterations")
         .opt("strategy", "gosgd:0.02", "communication strategy spec")
-        .opt("lr", "0.05", "learning rate (the paper's 0.1 sits at the stability edge for the BN-free CNN; see EXPERIMENTS.md)")
+        .opt(
+            "lr",
+            "0.05",
+            "learning rate (the paper's 0.1 sits at the stability edge for the BN-free CNN; \
+             see EXPERIMENTS.md)",
+        )
         .opt("weight-decay", "0.0001", "weight decay")
         .opt("eval-every", "50", "evaluate every N worker-iterations")
         .opt("seed", "0", "RNG seed")

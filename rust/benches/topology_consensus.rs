@@ -1,0 +1,126 @@
+//! Bench: gossip topologies — rounds-to-consensus + pick overhead.
+//!
+//! Two questions, per topology (uniform / ring / hypercube / rotation):
+//!
+//! 1. **Mixing**: starting from disagreeing workers, how many full gossip
+//!    rounds (every worker: drain → send) does the sum-weight protocol
+//!    need to shrink the consensus error by 10⁴×?  The acceptance line —
+//!    the GossipGraD claim this repo's topologies exist to reproduce — is
+//!    that the **structured rotating schedules (hypercube, rotation) beat
+//!    uniform-random** on mean rounds-to-consensus: a deterministic
+//!    permutation delivers exactly one message to every worker per round,
+//!    while uniform draws leave coupon-collector holes.  (Ring is
+//!    reported but not asserted: its O(M) diameter trades mixing speed
+//!    for locality.)
+//! 2. **Compute**: what does a schedule pick cost?  All topologies must
+//!    be O(1) per pick — the selection can never rival a gradient step.
+//!
+//! Run with `cargo bench --bench topology_consensus`; set `BENCH_CSV` or
+//! `BENCH_JSON` for machine-readable output (CI uploads the JSON as
+//! `BENCH_topology.json` to accumulate the perf trajectory).
+
+use gosgd::bench::Bencher;
+use gosgd::gossip::{MessageQueue, ProtocolCore, TopologySpec};
+use gosgd::tensor::FlatVec;
+use gosgd::util::rng::Rng;
+
+const M: usize = 16; // power of two so the hypercube is legal
+const DIM: usize = 64;
+const SHRINK: f64 = 1e-4;
+const ROUND_CAP: u64 = 10_000;
+
+fn specs() -> Vec<TopologySpec> {
+    vec![
+        TopologySpec::UniformRandom,
+        TopologySpec::Ring,
+        TopologySpec::Hypercube,
+        TopologySpec::PartnerRotation,
+    ]
+}
+
+fn consensus_error(xs: &[FlatVec]) -> f64 {
+    let refs: Vec<&FlatVec> = xs.iter().collect();
+    let mean = FlatVec::mean_of(&refs).unwrap();
+    xs.iter().map(|x| x.dist_sq(&mean).unwrap()).sum()
+}
+
+/// Full gossip rounds (no gradients — pure mixing) until the consensus
+/// error falls below `SHRINK` of its initial value.
+fn rounds_to_consensus(topo: TopologySpec, seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    let mut xs: Vec<FlatVec> = (0..M).map(|_| FlatVec::randn(DIM, 1.0, &mut rng)).collect();
+    let mut cores: Vec<ProtocolCore> = (0..M)
+        .map(|w| ProtocolCore::new(w, M, DIM, 1.0, topo, 1).unwrap())
+        .collect();
+    let queues: Vec<MessageQueue> = (0..M).map(|_| MessageQueue::unbounded()).collect();
+    let target = consensus_error(&xs) * SHRINK;
+    for round in 1..=ROUND_CAP {
+        for w in 0..M {
+            for msg in queues[w].drain() {
+                cores[w].absorb_message(&mut xs[w], &msg).unwrap();
+            }
+            if let Some(out) = cores[w].emit(&xs[w], M, &mut rng).unwrap() {
+                let to = out.to;
+                queues[to].push(out.into_message(w, round));
+            }
+        }
+        if consensus_error(&xs) <= target {
+            return round;
+        }
+    }
+    ROUND_CAP
+}
+
+fn main() {
+    let mut b = Bencher::new("topology_consensus");
+
+    // Pick overhead: a schedule step must stay O(1) nanoseconds.
+    for spec in specs() {
+        let mut core = ProtocolCore::new(0, M, DIM, 1.0, spec, 1).unwrap();
+        let mut rng = Rng::new(7);
+        b.bench(&format!("pick_{}", spec.label()), || {
+            std::hint::black_box(core.pick_peer(M, &mut rng));
+        });
+    }
+
+    // Rounds-to-consensus, averaged over seeds.
+    let seeds = [11u64, 12, 13, 14, 15];
+    println!("\ntopology     mean_rounds  per-seed");
+    let mut mean_rounds = Vec::new();
+    for spec in specs() {
+        let rounds: Vec<u64> = seeds.iter().map(|&s| rounds_to_consensus(spec, s)).collect();
+        let mean = rounds.iter().sum::<u64>() as f64 / rounds.len() as f64;
+        println!("{:<12} {:>11.1}  {:?}", spec.label(), mean, rounds);
+        mean_rounds.push((spec, mean));
+    }
+    let mean_of = |want: TopologySpec| {
+        mean_rounds
+            .iter()
+            .find(|(s, _)| *s == want)
+            .map(|(_, m)| *m)
+            .unwrap()
+    };
+    let uniform = mean_of(TopologySpec::UniformRandom);
+    let hypercube = mean_of(TopologySpec::Hypercube);
+    let rotation = mean_of(TopologySpec::PartnerRotation);
+    assert!(
+        uniform < ROUND_CAP as f64,
+        "uniform gossip never reached consensus within {ROUND_CAP} rounds"
+    );
+    assert!(
+        hypercube <= uniform,
+        "acceptance: the hypercube schedule must beat uniform-random on mean \
+         rounds-to-consensus, got {hypercube:.1} vs {uniform:.1}"
+    );
+    assert!(
+        rotation <= uniform,
+        "acceptance: the rotating-partner schedule must beat uniform-random on mean \
+         rounds-to-consensus, got {rotation:.1} vs {uniform:.1}"
+    );
+    println!(
+        "  -> structured schedules beat uniform: hypercube {hypercube:.1}, \
+         rotation {rotation:.1}, uniform {uniform:.1} rounds"
+    );
+
+    b.finish();
+}

@@ -4,7 +4,7 @@
 use std::path::PathBuf;
 
 use crate::error::{Error, Result};
-use crate::gossip::{CodecSpec, PeerSelector};
+use crate::gossip::{CodecSpec, PeerSelector, TopologySpec};
 use crate::optim::LrSchedule;
 use crate::strategies::{
     allreduce::AllReduce, downpour::Downpour, easgd::Easgd, gosgd::GoSgd, local::Local,
@@ -20,8 +20,14 @@ pub enum StrategyKind {
     /// `shards` contiguous slices of the vector (see
     /// [`crate::gossip::shard`]), cutting per-event bandwidth `~1/shards`;
     /// `codec` optionally compresses the payload body on top (see
-    /// [`crate::gossip::codec`]).
-    GoSgdSharded { p: f64, shards: usize, codec: CodecSpec },
+    /// [`crate::gossip::codec`]) and `topo` selects the gossip topology
+    /// (see [`crate::gossip::topology`]; `uniform` defers to `--peer`).
+    GoSgdSharded {
+        p: f64,
+        shards: usize,
+        codec: CodecSpec,
+        topo: TopologySpec,
+    },
     /// Periodic synchronization every `tau` rounds (section 3.1).
     PerSyn { tau: u64 },
     /// Elastic averaging every `tau` rounds (section 3.2).
@@ -36,9 +42,12 @@ pub enum StrategyKind {
 
 impl StrategyKind {
     /// Parse a CLI strategy spec:
-    /// `gosgd:0.02`, `gosgd:0.02:8` (sharded), `gosgd:0.02:8:q8`
-    /// (sharded + codec: `dense` | `q8` | `top<K>`), `persyn:50`,
-    /// `easgd:0.1:50`, `downpour:4:4`, `allreduce`, `local`.
+    /// `gosgd:0.02`, `gosgd:0.02:8` (sharded), and the full grammar
+    /// `gosgd:P:SHARDS[:CODEC][:TOPO]` with codec `dense` | `q8` |
+    /// `top<K>` and topology `uniform` | `ring` | `hypercube` |
+    /// `rotation` (the codec may be omitted: `gosgd:0.02:8:ring`);
+    /// plus `persyn:50`, `easgd:0.1:50`, `downpour:4:4`, `allreduce`,
+    /// `local`.
     pub fn parse(text: &str) -> Result<StrategyKind> {
         let parts: Vec<&str> = text.split(':').collect();
         let bad = || Error::config(format!("cannot parse strategy {text:?}"));
@@ -62,11 +71,33 @@ impl StrategyKind {
                 p: parse_p(p)?,
                 shards: parse_shards(shards)?,
                 codec: CodecSpec::Dense,
+                topo: TopologySpec::UniformRandom,
             }),
-            ["gosgd", p, shards, codec] => Ok(StrategyKind::GoSgdSharded {
+            ["gosgd", p, shards, tok] => {
+                let p = parse_p(p)?;
+                let shards = parse_shards(shards)?;
+                // The optional 4th token is a codec or a topology — the
+                // token sets are disjoint, so try the codec grammar
+                // first and fall back to the topology grammar.
+                let (codec, topo) = match CodecSpec::parse(tok) {
+                    Ok(codec) => (codec, TopologySpec::UniformRandom),
+                    Err(_) => match TopologySpec::parse(tok) {
+                        Ok(topo) => (CodecSpec::Dense, topo),
+                        Err(_) => {
+                            return Err(Error::config(format!(
+                                "cannot parse {tok:?} as a codec (dense | q8 | top<K>) or a \
+                                 topology (uniform | ring | hypercube | rotation)"
+                            )))
+                        }
+                    },
+                };
+                Ok(StrategyKind::GoSgdSharded { p, shards, codec, topo })
+            }
+            ["gosgd", p, shards, codec, topo] => Ok(StrategyKind::GoSgdSharded {
                 p: parse_p(p)?,
                 shards: parse_shards(shards)?,
                 codec: CodecSpec::parse(codec)?,
+                topo: TopologySpec::parse(topo)?,
             }),
             ["persyn", tau] => Ok(StrategyKind::PerSyn { tau: tau.parse().map_err(|_| bad())? }),
             ["easgd", alpha, tau] => Ok(StrategyKind::Easgd {
@@ -87,11 +118,19 @@ impl StrategyKind {
     pub fn tag(&self) -> String {
         match self {
             StrategyKind::GoSgd { p } => format!("gosgd_p{p}"),
-            StrategyKind::GoSgdSharded { p, shards, codec: CodecSpec::Dense } => {
-                format!("gosgd_p{p}_s{shards}")
-            }
-            StrategyKind::GoSgdSharded { p, shards, codec } => {
-                format!("gosgd_p{p}_s{shards}_{}", codec.label())
+            StrategyKind::GoSgdSharded { p, shards, codec, topo } => {
+                let mut tag = format!("gosgd_p{p}_s{shards}");
+                if *codec != CodecSpec::Dense {
+                    tag.push('_');
+                    tag.push_str(&codec.label());
+                }
+                if *topo != TopologySpec::UniformRandom {
+                    tag.push('_');
+                    // smallworld:Q carries a colon; strip it for CSV/file
+                    // safety.
+                    tag.push_str(&topo.label().replace(':', ""));
+                }
+                tag
             }
             StrategyKind::PerSyn { tau } => format!("persyn_tau{tau}"),
             StrategyKind::Easgd { alpha, tau } => format!("easgd_a{alpha}_tau{tau}"),
@@ -203,13 +242,14 @@ impl RunConfig {
             }
             _ => {}
         }
-        if let StrategyKind::GoSgdSharded { shards, codec, .. } = self.strategy {
+        if let StrategyKind::GoSgdSharded { shards, codec, topo, .. } = self.strategy {
             if shards == 0 {
                 return Err(Error::config("gosgd shards must be >= 1"));
             }
             if codec == (CodecSpec::TopK { k: 0 }) {
                 return Err(Error::config("top-k codec needs k >= 1"));
             }
+            topo.validate_for(self.workers)?;
         }
         if self.steps == 0 {
             return Err(Error::config("steps must be >= 1"));
@@ -223,12 +263,21 @@ impl RunConfig {
             StrategyKind::GoSgd { p } => {
                 Box::new(GoSgd::new(*p).with_selector(self.peer.clone()))
             }
-            StrategyKind::GoSgdSharded { p, shards, codec } => Box::new(
-                GoSgd::new(*p)
-                    .with_selector(self.peer.clone())
-                    .with_shards(*shards)
-                    .with_codec(*codec),
-            ),
+            StrategyKind::GoSgdSharded { p, shards, codec, topo } => {
+                // An explicit strategy-string topology wins; the default
+                // `uniform` token defers to the legacy `--peer` flag.
+                let topo = if *topo == TopologySpec::UniformRandom {
+                    self.peer.clone().into()
+                } else {
+                    *topo
+                };
+                Box::new(
+                    GoSgd::new(*p)
+                        .with_topology(topo)
+                        .with_shards(*shards)
+                        .with_codec(*codec),
+                )
+            }
             StrategyKind::PerSyn { tau } => Box::new(PerSyn::new(*tau)),
             StrategyKind::Easgd { alpha, tau } => Box::new(Easgd::new(*alpha, *tau)),
             StrategyKind::Downpour { n_push, n_fetch } => {
@@ -257,23 +306,68 @@ mod tests {
         );
         assert_eq!(
             StrategyKind::parse("gosgd:0.02:8").unwrap(),
-            StrategyKind::GoSgdSharded { p: 0.02, shards: 8, codec: CodecSpec::Dense }
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::Dense,
+                topo: TopologySpec::UniformRandom,
+            }
         );
         assert_eq!(
             StrategyKind::parse("gosgd:0.02:8:q8").unwrap(),
-            StrategyKind::GoSgdSharded { p: 0.02, shards: 8, codec: CodecSpec::QuantizeU8 }
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::QuantizeU8,
+                topo: TopologySpec::UniformRandom,
+            }
         );
         assert_eq!(
             StrategyKind::parse("gosgd:0.02:8:top16").unwrap(),
             StrategyKind::GoSgdSharded {
                 p: 0.02,
                 shards: 8,
-                codec: CodecSpec::TopK { k: 16 }
+                codec: CodecSpec::TopK { k: 16 },
+                topo: TopologySpec::UniformRandom,
             }
         );
         assert_eq!(
             StrategyKind::parse("gosgd:0.02:8:dense").unwrap(),
-            StrategyKind::GoSgdSharded { p: 0.02, shards: 8, codec: CodecSpec::Dense }
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::Dense,
+                topo: TopologySpec::UniformRandom,
+            }
+        );
+        // The 4th token may be a topology instead of a codec...
+        assert_eq!(
+            StrategyKind::parse("gosgd:0.02:8:rotation").unwrap(),
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::Dense,
+                topo: TopologySpec::PartnerRotation,
+            }
+        );
+        // ...and the full 5-token grammar carries both.
+        assert_eq!(
+            StrategyKind::parse("gosgd:0.02:8:q8:hypercube").unwrap(),
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::QuantizeU8,
+                topo: TopologySpec::Hypercube,
+            }
+        );
+        assert_eq!(
+            StrategyKind::parse("gosgd:0.02:1:dense:ring").unwrap(),
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 1,
+                codec: CodecSpec::Dense,
+                topo: TopologySpec::Ring,
+            }
         );
         assert_eq!(
             StrategyKind::parse("persyn:50").unwrap(),
@@ -300,6 +394,8 @@ mod tests {
         assert!(StrategyKind::parse("gosgd:0.1:8:zstd").is_err());
         assert!(StrategyKind::parse("gosgd:0.1:8:top0").is_err());
         assert!(StrategyKind::parse("gosgd:0.1:8:q8:extra").is_err());
+        assert!(StrategyKind::parse("gosgd:0.1:8:torus").is_err());
+        assert!(StrategyKind::parse("gosgd:0.1:8:ring:q8").is_err(), "codec before topo");
         assert!(StrategyKind::parse("persyn:abc").is_err());
         assert!(StrategyKind::parse("").is_err());
         assert!(StrategyKind::parse("easgd:0.1").is_err());
@@ -319,6 +415,25 @@ mod tests {
         cfg.strategy = StrategyKind::AllReduce;
         cfg.steps = 0;
         assert!(cfg.validate().is_err());
+        // Hypercube topologies must fit the fleet.
+        cfg.steps = 100;
+        cfg.workers = 6;
+        cfg.strategy = StrategyKind::parse("gosgd:0.1:4:hypercube").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.workers = 8;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn strategy_topology_overrides_the_peer_flag() {
+        let mut cfg = RunConfig::default();
+        cfg.peer = PeerSelector::Ring;
+        // Explicit strategy topology wins...
+        cfg.strategy = StrategyKind::parse("gosgd:0.1:4:rotation").unwrap();
+        assert!(cfg.build_strategy().name().contains("topo=rotation"));
+        // ...the default `uniform` defers to --peer.
+        cfg.strategy = StrategyKind::parse("gosgd:0.1:4").unwrap();
+        assert!(cfg.build_strategy().name().contains("topo=ring"));
     }
 
     #[test]
@@ -326,10 +441,20 @@ mod tests {
         let mut cfg = RunConfig::default();
         assert!(cfg.build_strategy().name().starts_with("gosgd"));
         cfg.strategy =
-            StrategyKind::GoSgdSharded { p: 0.02, shards: 4, codec: CodecSpec::Dense };
+            StrategyKind::GoSgdSharded {
+            p: 0.02,
+            shards: 4,
+            codec: CodecSpec::Dense,
+            topo: TopologySpec::UniformRandom,
+        };
         assert!(cfg.build_strategy().name().contains("shards=4"));
         cfg.strategy =
-            StrategyKind::GoSgdSharded { p: 0.02, shards: 4, codec: CodecSpec::QuantizeU8 };
+            StrategyKind::GoSgdSharded {
+            p: 0.02,
+            shards: 4,
+            codec: CodecSpec::QuantizeU8,
+            topo: TopologySpec::UniformRandom,
+        };
         assert!(cfg.build_strategy().name().contains("codec=q8"));
         cfg.strategy = StrategyKind::PerSyn { tau: 7 };
         assert!(cfg.build_strategy().name().contains("tau=7"));
@@ -341,13 +466,36 @@ mod tests {
     fn tags_are_filename_safe() {
         for s in [
             StrategyKind::GoSgd { p: 0.02 },
-            StrategyKind::GoSgdSharded { p: 0.02, shards: 8, codec: CodecSpec::Dense },
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::Dense,
+                topo: TopologySpec::UniformRandom,
+            },
             StrategyKind::GoSgdSharded {
                 p: 0.02,
                 shards: 8,
                 codec: CodecSpec::TopK { k: 32 },
+                topo: TopologySpec::UniformRandom,
             },
-            StrategyKind::GoSgdSharded { p: 0.02, shards: 8, codec: CodecSpec::QuantizeU8 },
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::QuantizeU8,
+                topo: TopologySpec::UniformRandom,
+            },
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::QuantizeU8,
+                topo: TopologySpec::Hypercube,
+            },
+            StrategyKind::GoSgdSharded {
+                p: 0.02,
+                shards: 8,
+                codec: CodecSpec::Dense,
+                topo: TopologySpec::SmallWorld { q: 0.2 },
+            },
             StrategyKind::PerSyn { tau: 50 },
             StrategyKind::Easgd { alpha: 0.1, tau: 50 },
             StrategyKind::Downpour { n_push: 1, n_fetch: 2 },
@@ -355,7 +503,10 @@ mod tests {
             StrategyKind::Local,
         ] {
             let tag = s.tag();
-            assert!(!tag.contains(' ') && !tag.contains('/'), "{tag}");
+            assert!(
+                !tag.contains(' ') && !tag.contains('/') && !tag.contains(':'),
+                "{tag}"
+            );
         }
     }
 }

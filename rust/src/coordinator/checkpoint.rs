@@ -3,16 +3,22 @@
 //! A deployable trainer must survive preemption.  The checkpoint captures
 //! everything the paper's protocol needs to resume *exactly*: every
 //! worker's parameter vector, its sum-weight (conservation must hold
-//! across restarts), its local step count, and the master slot.
+//! across restarts), its local step count, its topology schedule cursor
+//! (a deterministic schedule — ring index, rotation position — must
+//! resume where it stopped, not restart from slot 0), and the master
+//! slot.
 //!
-//! Format (little-endian, versioned):
+//! Format v2 (little-endian, versioned):
 //!
 //! ```text
 //! magic "GOSGDCKP" | u32 version | u32 workers M | u64 param_count n
 //! master: n × f32
-//! per worker m = 1..=M: f64 weight | u64 steps | n × f32 params
+//! per worker m = 1..=M: f64 weight | u64 steps | u64 topo_cursor | n × f32 params
 //! u64 fletcher-style checksum over all payload bytes
 //! ```
+//!
+//! (v1 lacked the per-worker `topo_cursor`; v1 files are rejected with a
+//! version error rather than silently resetting every schedule.)
 //!
 //! In-flight queue messages are deliberately *not* checkpointed: the save
 //! path drains every queue into its receiver first (the blend is
@@ -29,7 +35,7 @@ use crate::strategies::ClusterState;
 use crate::tensor::FlatVec;
 
 const MAGIC: &[u8; 8] = b"GOSGDCKP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Serializable snapshot of a cluster.
 #[derive(Debug, Clone, PartialEq)]
@@ -43,6 +49,11 @@ pub struct WorkerSnapshot {
     pub params: FlatVec,
     pub weight: f64,
     pub steps: u64,
+    /// Topology schedule position (see
+    /// [`ProtocolCore::topo_cursor`](crate::gossip::ProtocolCore::topo_cursor));
+    /// 0 for the random topologies, live state for ring / hypercube /
+    /// rotation schedules.
+    pub topo_cursor: u64,
 }
 
 impl Checkpoint {
@@ -51,11 +62,11 @@ impl Checkpoint {
     pub fn capture(state: &mut ClusterState) -> Result<Checkpoint> {
         let m = state.workers();
         if state.sharded() {
-            // Format v1 stores one sum weight per worker; a sharded run
+            // Format v2 stores one sum weight per worker; a sharded run
             // carries one per (worker, shard).  Refuse rather than silently
             // collapse the per-shard masses.
             return Err(Error::config(
-                "checkpointing sharded gossip runs is not supported (format v1 \
+                "checkpointing sharded gossip runs is not supported (format v2 \
                  stores a single weight per worker)",
             ));
         }
@@ -65,7 +76,7 @@ impl Checkpoint {
             // mass across a restart.  (Stateless codecs — dense, q8 —
             // checkpoint fine: their wire form carries no sender state.)
             return Err(Error::config(
-                "checkpointing top-k gossip runs is not supported (format v1 \
+                "checkpointing top-k gossip runs is not supported (format v2 \
                  does not store the error-feedback residual)",
             ));
         }
@@ -83,6 +94,7 @@ impl Checkpoint {
                 params: state.stacked.worker(w).clone(),
                 weight: state.cores[w].weights()[0].value(),
                 steps: state.steps[w],
+                topo_cursor: state.cores[w].topo_cursor(),
             })
             .collect();
         Ok(Checkpoint { master: state.stacked.master().clone(), workers })
@@ -105,6 +117,11 @@ impl Checkpoint {
             *state.stacked.worker_mut(w) = snap.params.clone();
             state.cores[w].set_weight(0, SumWeight::from_value(snap.weight));
             state.steps[w] = snap.steps;
+            // The schedule cursor survives the run config re-applying the
+            // topology on the first tick (set_topology keeps the cursor),
+            // so a deterministic schedule resumes exactly where it
+            // stopped.
+            state.cores[w].set_topo_cursor(snap.topo_cursor);
         }
         Ok(state)
     }
@@ -132,6 +149,7 @@ impl Checkpoint {
         for w in &self.workers {
             payload.extend_from_slice(&w.weight.to_le_bytes());
             payload.extend_from_slice(&w.steps.to_le_bytes());
+            payload.extend_from_slice(&w.topo_cursor.to_le_bytes());
             for v in w.params.as_slice() {
                 payload.extend_from_slice(&v.to_le_bytes());
             }
@@ -170,11 +188,12 @@ impl Checkpoint {
         for _ in 0..m {
             let weight = cur.f64()?;
             let steps = cur.u64()?;
+            let topo_cursor = cur.u64()?;
             let params = FlatVec::from_vec(cur.f32s(n)?);
             if weight <= 0.0 || !weight.is_finite() {
                 return Err(Error::artifact(format!("bad checkpoint weight {weight}")));
             }
-            workers.push(WorkerSnapshot { params, weight, steps });
+            workers.push(WorkerSnapshot { params, weight, steps, topo_cursor });
         }
         if cur.pos != payload.len() {
             return Err(Error::artifact("trailing bytes in checkpoint"));
@@ -317,18 +336,67 @@ mod tests {
 
     #[test]
     fn topk_codec_state_refuses_capture() {
-        use crate::gossip::{CodecSpec, PeerSelector};
+        use crate::gossip::{CodecSpec, TopologySpec};
         let mut state = populated_state(2, 16, 9);
         state
-            .configure_gossip(0.5, &PeerSelector::Uniform, 1, CodecSpec::TopK { k: 4 })
+            .configure_gossip(0.5, TopologySpec::UniformRandom, 1, CodecSpec::TopK { k: 4 })
             .unwrap();
         let err = Checkpoint::capture(&mut state).unwrap_err();
         assert!(err.to_string().contains("error-feedback"), "{err}");
         // The stateless codecs checkpoint fine.
         state
-            .configure_gossip(0.5, &PeerSelector::Uniform, 1, CodecSpec::QuantizeU8)
+            .configure_gossip(0.5, TopologySpec::UniformRandom, 1, CodecSpec::QuantizeU8)
             .unwrap();
         assert!(Checkpoint::capture(&mut state).is_ok());
+    }
+
+    #[test]
+    fn topology_cursor_round_trips_through_capture_and_restore() {
+        use crate::gossip::{CodecSpec, TopologySpec};
+        let m = 4;
+        let mut state = populated_state(m, 16, 11);
+        state
+            .configure_gossip(1.0, TopologySpec::PartnerRotation, 1, CodecSpec::Dense)
+            .unwrap();
+        // Walk each worker's rotation schedule a different distance so the
+        // cursors genuinely differ, delivering every message so no weight
+        // mass is stranded.
+        let mut rng = Rng::new(13);
+        for w in 1..=m {
+            for _ in 0..w {
+                let x = state.stacked.worker(w).clone();
+                let out = state.cores[w].emit(&x, m, &mut rng).unwrap().unwrap();
+                state.queues[out.to + 1].push(out.into_message(w, 0));
+            }
+        }
+        let ckpt = Checkpoint::capture(&mut state).unwrap();
+        assert!((ckpt.total_weight() - 1.0).abs() < 1e-9);
+        for (i, snap) in ckpt.workers.iter().enumerate() {
+            assert_eq!(snap.topo_cursor, (i + 1) as u64, "worker {} cursor", i + 1);
+        }
+        // The cursor survives the binary round trip...
+        let path = tmp("topo_cursor");
+        ckpt.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, ckpt);
+        std::fs::remove_file(&path).ok();
+        // ...and restore + the first-tick topology re-application resume
+        // the schedule exactly where the original left off: the next
+        // deterministic pick of every worker matches.
+        let mut restored = loaded.restore().unwrap();
+        restored
+            .configure_gossip(1.0, TopologySpec::PartnerRotation, 1, CodecSpec::Dense)
+            .unwrap();
+        for w in 1..=m {
+            assert_eq!(restored.cores[w].topo_cursor(), state.cores[w].topo_cursor());
+            let mut ra = Rng::new(0);
+            let mut rb = Rng::new(0);
+            assert_eq!(
+                restored.cores[w].pick_peer(m, &mut ra),
+                state.cores[w].pick_peer(m, &mut rb),
+                "worker {w} resumed a different schedule position"
+            );
+        }
     }
 
     #[test]

@@ -64,6 +64,16 @@ pub enum CodecSpec {
 
 impl CodecSpec {
     /// Parse the CLI token: `dense`, `q8`, or `top<K>` (e.g. `top32`).
+    ///
+    /// ```
+    /// use gosgd::gossip::CodecSpec;
+    ///
+    /// assert_eq!(CodecSpec::parse("dense").unwrap(), CodecSpec::Dense);
+    /// assert_eq!(CodecSpec::parse("top32").unwrap(), CodecSpec::TopK { k: 32 });
+    /// assert_eq!(CodecSpec::parse("q8").unwrap().label(), "q8");
+    /// assert!(CodecSpec::parse("top0").is_err());
+    /// assert!(CodecSpec::parse("zstd").is_err());
+    /// ```
     pub fn parse(text: &str) -> Result<CodecSpec> {
         match text {
             "dense" => Ok(CodecSpec::Dense),

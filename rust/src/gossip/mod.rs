@@ -9,9 +9,13 @@
 //!   (paper Lemma 1 / Appendix B).
 //! * [`message`] — the `(x_s, w_s)` message and its accounting metadata.
 //! * [`queue`] — the per-worker concurrent mailbox of Algorithm 3/4.
-//! * [`peer`] — peer-selection policies (the paper draws uniformly from
-//!   `{1..M} \ {s}`; ring and small-world variants are provided for the
-//!   topology ablation).
+//! * [`peer`] — the legacy `--peer` selection policies (the paper draws
+//!   uniformly from `{1..M} \ {s}`); superseded by [`topology`], into
+//!   which every selector converts.
+//! * [`topology`] — pluggable gossip topologies behind the `Topology`
+//!   trait: uniform random (default), ring, GossipGraD-style hypercube
+//!   and rotating-partner schedules, each exposing its schedule-averaged
+//!   (doubly stochastic) selection matrix for the consensus analysis.
 //! * [`shard`] — the chunked-exchange extension: cut the vector into
 //!   contiguous shards, each with its own sum weight, and gossip one shard
 //!   per event.  Exact (the blend is per-coordinate associative), and the
@@ -31,6 +35,7 @@ pub mod peer;
 pub mod protocol;
 pub mod queue;
 pub mod shard;
+pub mod topology;
 pub mod weights;
 
 pub use codec::{Codec, CodecRef, CodecSpec, EncodedPayload};
@@ -39,4 +44,5 @@ pub use peer::PeerSelector;
 pub use protocol::{Outbound, ProtocolCore};
 pub use queue::MessageQueue;
 pub use shard::{Shard, ShardPlan};
+pub use topology::{Topology, TopologyRef, TopologySpec};
 pub use weights::SumWeight;

@@ -1,4 +1,4 @@
-//! Peer-selection policies.
+//! Peer-selection policies (the legacy `--peer` flag).
 //!
 //! The paper draws the receiver `r` uniformly from `{1..M} \ {s}` (section
 //! 4).  Uniform selection gives the complete-graph gossip whose spectral
@@ -6,8 +6,15 @@
 //! speed for locality.  [`PeerSelector::Ring`] and
 //! [`PeerSelector::SmallWorld`] are provided for the topology ablation
 //! bench (`cargo bench --bench strategy_e2e`).
+//!
+//! The protocol core selects receivers through the richer
+//! [`crate::gossip::topology`] subsystem (which adds the hypercube and
+//! rotating-partner schedules and the mixing-matrix view); every
+//! `PeerSelector` converts into a
+//! [`TopologySpec`](crate::gossip::TopologySpec) via `From`.
 
 use crate::error::{Error, Result};
+use crate::gossip::topology::TopologySpec;
 use crate::util::rng::Rng;
 
 /// How a sender picks the receiver of a gossip message.
@@ -25,20 +32,15 @@ pub enum PeerSelector {
 
 impl PeerSelector {
     /// Pick a receiver for sender `s` among `m` workers.
+    ///
+    /// Delegates to the equivalent [`TopologySpec`] schedule (at slot 0)
+    /// so the selection math lives in exactly one place —
+    /// `gossip/topology.rs` — and cannot drift from what the protocol
+    /// core does.
     pub fn pick(&self, m: usize, s: usize, rng: &mut Rng) -> usize {
         assert!(m >= 2, "need at least two workers");
         assert!(s < m);
-        match self {
-            PeerSelector::Uniform => rng.peer(m, s),
-            PeerSelector::Ring => (s + 1) % m,
-            PeerSelector::SmallWorld { q } => {
-                if rng.bernoulli(*q) {
-                    rng.peer(m, s)
-                } else {
-                    (s + 1) % m
-                }
-            }
-        }
+        TopologySpec::from(self.clone()).build().next_peer(m, s, 0, rng)
     }
 
     /// Parse from a CLI string: `uniform`, `ring`, `smallworld:0.2`.
@@ -48,6 +50,18 @@ impl PeerSelector {
     /// (`NaN` is rejected explicitly — it would silently disable every
     /// shortcut), and anything else is a config error naming the valid
     /// forms.
+    ///
+    /// ```
+    /// use gosgd::gossip::PeerSelector;
+    ///
+    /// assert_eq!(PeerSelector::parse("ring").unwrap(), PeerSelector::Ring);
+    /// assert_eq!(
+    ///     PeerSelector::parse("smallworld:0.25").unwrap(),
+    ///     PeerSelector::SmallWorld { q: 0.25 }
+    /// );
+    /// assert!(PeerSelector::parse("smallworld:2.0").is_err());
+    /// assert!(PeerSelector::parse("mesh").is_err());
+    /// ```
     pub fn parse(text: &str) -> Result<PeerSelector> {
         match text {
             "uniform" => Ok(PeerSelector::Uniform),
@@ -59,7 +73,9 @@ impl PeerSelector {
                     ))
                 })?;
                 let q: f64 = q_text.parse().map_err(|_| {
-                    Error::config(format!("smallworld shortcut probability is not a number: {q_text:?}"))
+                    Error::config(format!(
+                        "smallworld shortcut probability is not a number: {q_text:?}"
+                    ))
                 })?;
                 if !q.is_finite() || !(0.0..=1.0).contains(&q) {
                     return Err(Error::config(format!(

@@ -36,14 +36,40 @@
 //! A cross-runtime test (`rust/tests/runtime_equivalence.rs`) hand-drives
 //! cores next to the sequential engine and demands *bit-identical*
 //! parameter trajectories for a fixed seed.
+//!
+//! # Example
+//!
+//! One sender/receiver pair, driven by hand — the same three transitions
+//! every runtime calls:
+//!
+//! ```
+//! use gosgd::gossip::{ProtocolCore, TopologySpec};
+//! use gosgd::tensor::FlatVec;
+//!
+//! // Two workers, 4 parameters, unsharded, ring schedule.
+//! let mut sender = ProtocolCore::new(0, 2, 4, 1.0, TopologySpec::Ring, 1).unwrap();
+//! let mut receiver = ProtocolCore::new(1, 2, 4, 1.0, TopologySpec::Ring, 1).unwrap();
+//! let xs = FlatVec::from_vec(vec![2.0; 4]);
+//! let mut xr = FlatVec::zeros(4);
+//!
+//! // Send: the weight halves (1/2 -> 1/4) and the payload snapshots xs.
+//! let out = sender.emit_to(&xs, 1).unwrap();
+//! assert_eq!(out.to, 1);
+//! assert!((sender.weights()[0].value() - 0.25).abs() < 1e-12);
+//!
+//! // Receive: blend coefficient t = 0.25 / (0.5 + 0.25) = 1/3.
+//! receiver.absorb(&mut xr, out.shard, &out.payload, out.weight).unwrap();
+//! assert!((xr.as_slice()[0] - 2.0 / 3.0).abs() < 1e-6);
+//! assert!((receiver.weights()[0].value() - 0.75).abs() < 1e-12);
+//! ```
 
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::gossip::codec::{Codec, CodecRef, CodecSpec, EncodedPayload};
 use crate::gossip::message::{encoded_wire_bytes, wire_bytes_for, Message};
-use crate::gossip::peer::PeerSelector;
 use crate::gossip::shard::{Shard, ShardPlan};
+use crate::gossip::topology::{TopologyRef, TopologySpec};
 use crate::gossip::weights::SumWeight;
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -51,12 +77,17 @@ use crate::util::rng::Rng;
 /// One worker's protocol state machine.
 #[derive(Clone, Debug)]
 pub struct ProtocolCore {
-    /// 0-based worker id (the peer selector excludes it).
+    /// 0-based worker id (the topology's schedule excludes it).
     id: usize,
     /// Exchange probability per local step (the paper's `p`).
     p: f64,
-    /// Receiver selection policy (paper: uniform).
-    selector: PeerSelector,
+    /// Receiver selection schedule (paper: uniform random) — see
+    /// [`crate::gossip::topology`].
+    topology: TopologyRef,
+    /// Position in the topology's schedule; advances once per peer pick.
+    /// Random topologies ignore it; for deterministic ones it is live
+    /// protocol state and round-trips through checkpoints.
+    topo_cursor: u64,
     /// The deterministic shard partition (one shard when unsharded).
     plan: ShardPlan,
     /// One sum weight per shard, each initialized to `1/M`.
@@ -108,7 +139,13 @@ impl Outbound {
         if self.shard.is_full() {
             Message::new(Arc::new(self.payload), self.weight, sender, sent_at_step)
         } else {
-            Message::for_shard(Arc::new(self.payload), self.weight, sender, sent_at_step, self.shard)
+            Message::for_shard(
+                Arc::new(self.payload),
+                self.weight,
+                sender,
+                sent_at_step,
+                self.shard,
+            )
         }
     }
 }
@@ -116,14 +153,16 @@ impl Outbound {
 impl ProtocolCore {
     /// Build the core for worker `id` (0-based) in a cluster of `workers`
     /// over a `dim`-dimensional model.  Fails with a config error when `p`
-    /// is not a probability or the shard count does not fit the model —
-    /// the two places user input meets the dimension for the first time.
+    /// is not a probability, the shard count does not fit the model, or
+    /// the topology does not fit the worker count (hypercube needs a
+    /// power of two) — the places user input meets the dimension and the
+    /// fleet size for the first time.
     pub fn new(
         id: usize,
         workers: usize,
         dim: usize,
         p: f64,
-        selector: PeerSelector,
+        topology: TopologySpec,
         shards: usize,
     ) -> Result<Self> {
         if !(0.0..=1.0).contains(&p) {
@@ -142,11 +181,17 @@ impl ProtocolCore {
         if workers == 0 {
             return Err(Error::config("workers must be >= 1"));
         }
+        // A single-worker core never gossips (emit refuses), so only a
+        // real fleet constrains the topology.
+        if workers >= 2 {
+            topology.validate_for(workers)?;
+        }
         let plan = ShardPlan::new(dim, shards);
         Ok(ProtocolCore {
             id,
             p,
-            selector,
+            topology: topology.build(),
+            topo_cursor: 0,
             plan,
             weights: (0..shards).map(|_| SumWeight::init(workers)).collect(),
             cursor: id % shards,
@@ -172,8 +217,19 @@ impl ProtocolCore {
         self.p
     }
 
-    pub fn selector(&self) -> &PeerSelector {
-        &self.selector
+    /// The plain-data description of the receiver-selection topology.
+    pub fn topology_spec(&self) -> TopologySpec {
+        self.topology.spec()
+    }
+
+    /// Current position in the topology's deterministic schedule.
+    pub fn topo_cursor(&self) -> u64 {
+        self.topo_cursor
+    }
+
+    /// Overwrite the schedule position (checkpoint restore).
+    pub fn set_topo_cursor(&mut self, cursor: u64) {
+        self.topo_cursor = cursor;
     }
 
     pub fn num_shards(&self) -> usize {
@@ -211,15 +267,29 @@ impl ProtocolCore {
     }
 
     /// Re-point the exchange knobs without touching weight state (safe at
-    /// any time; the weights are the conserved quantity, `p`/selector are
-    /// policy).
-    pub fn set_exchange(&mut self, p: f64, selector: PeerSelector) -> Result<()> {
+    /// any time; the weights are the conserved quantity, `p`/topology are
+    /// policy).  The schedule cursor survives a topology swap — it is a
+    /// plain position, and keeping it is what lets a checkpoint restore
+    /// (which re-applies the topology on the first tick) resume the
+    /// schedule exactly where it stopped.
+    pub fn set_exchange(&mut self, p: f64, topology: TopologySpec) -> Result<()> {
         if !(0.0..=1.0).contains(&p) {
             return Err(Error::config(format!("gosgd p out of [0,1]: {p}")));
         }
         self.p = p;
-        self.selector = selector;
+        self.set_topology(topology);
         Ok(())
+    }
+
+    /// Switch the receiver-selection topology, keeping the schedule
+    /// cursor (see [`ProtocolCore::set_exchange`]).  The caller is
+    /// responsible for fleet-size validation
+    /// ([`TopologySpec::validate_for`]) — the core does not know the
+    /// worker count after construction.
+    pub fn set_topology(&mut self, topology: TopologySpec) {
+        if self.topology.spec() != topology {
+            self.topology = topology.build();
+        }
     }
 
     /// The payload codec's plain-data description.
@@ -322,16 +392,79 @@ impl ProtocolCore {
         (shard, shipped)
     }
 
+    /// Pick the next receiver from the topology's schedule, advancing
+    /// the schedule cursor.  Exposed for drivers that separate the pick
+    /// from the payload transition (the engine's immediate-delivery
+    /// cross-check); queued runtimes use [`ProtocolCore::emit`].
+    pub fn pick_peer(&mut self, workers: usize, rng: &mut Rng) -> usize {
+        let slot = self.topo_cursor;
+        self.topo_cursor += 1;
+        self.topology.next_peer(workers, self.id, slot, rng)
+    }
+
     /// Send transition (Algorithm 3, lines 6-9): with probability `p`,
-    /// pick a receiver among the `workers` others, advance the shard
-    /// cursor, halve the shard's weight and snapshot its coordinates.
-    /// Returns `None` when the coin says no (or the cluster has a single
-    /// worker — nobody to gossip with).
+    /// pick the topology's next receiver among the `workers` others,
+    /// advance the shard cursor, halve the shard's weight and snapshot
+    /// its coordinates.  Returns `None` when the coin says no (or the
+    /// cluster has a single worker — nobody to gossip with).
     pub fn emit(&mut self, x: &FlatVec, workers: usize, rng: &mut Rng) -> Result<Option<Outbound>> {
+        self.emit_alive(x, workers, rng, None)
+    }
+
+    /// [`ProtocolCore::emit`] with churn awareness: when an aliveness
+    /// mask is given and the pick lands on a dead worker, the send is
+    /// *repaired* instead of parking mass in a mailbox nobody drains.
+    /// A deterministic schedule walks forward to the next alive peer
+    /// (the schedule keeps making progress around the outage); a random
+    /// topology re-draws **uniformly among the alive peers** — an index
+    /// walk there would hand the dead worker's whole selection mass to
+    /// its successor and skew the expected gossip matrix off doubly
+    /// stochastic over the alive set.  If no other worker is alive the
+    /// send is skipped entirely and no weight leaves the core (mass
+    /// conservation needs no special case).
+    pub fn emit_alive(
+        &mut self,
+        x: &FlatVec,
+        workers: usize,
+        rng: &mut Rng,
+        alive: Option<&[bool]>,
+    ) -> Result<Option<Outbound>> {
         if workers < 2 || !rng.bernoulli(self.p) {
             return Ok(None);
         }
-        let to = self.selector.pick(workers, self.id, rng);
+        let mut to = self.pick_peer(workers, rng);
+        if let Some(alive) = alive {
+            debug_assert_eq!(alive.len(), workers, "aliveness mask vs worker count");
+            if !alive[to] {
+                let candidates = (0..workers)
+                    .filter(|&w| w != self.id && alive[w])
+                    .count();
+                if candidates == 0 {
+                    return Ok(None); // nobody alive to talk to
+                }
+                if self.topology.spec().deterministic() {
+                    // Schedule repair: next alive peer after the pick.
+                    loop {
+                        to = (to + 1) % workers;
+                        if to != self.id && alive[to] {
+                            break;
+                        }
+                    }
+                } else {
+                    // Unbiased repair: uniform over the alive peers.
+                    let mut k = rng.below(candidates as u64) as usize;
+                    for w in 0..workers {
+                        if w != self.id && alive[w] {
+                            if k == 0 {
+                                to = w;
+                                break;
+                            }
+                            k -= 1;
+                        }
+                    }
+                }
+            }
+        }
         Ok(Some(self.emit_to(x, to)?))
     }
 
@@ -367,19 +500,97 @@ mod tests {
     use super::*;
 
     fn core(id: usize, m: usize, dim: usize, p: f64, shards: usize) -> ProtocolCore {
-        ProtocolCore::new(id, m, dim, p, PeerSelector::Uniform, shards).unwrap()
+        ProtocolCore::new(id, m, dim, p, TopologySpec::UniformRandom, shards).unwrap()
     }
 
     #[test]
     fn new_validates_inputs() {
-        assert!(ProtocolCore::new(0, 4, 8, 1.5, PeerSelector::Uniform, 1).is_err());
-        assert!(ProtocolCore::new(0, 4, 8, 0.5, PeerSelector::Uniform, 0).is_err());
-        assert!(ProtocolCore::new(0, 4, 8, 0.5, PeerSelector::Uniform, 9).is_err());
-        assert!(ProtocolCore::new(0, 0, 8, 0.5, PeerSelector::Uniform, 1).is_err());
-        assert!(ProtocolCore::new(0, 4, 8, 0.5, PeerSelector::Uniform, 8).is_ok());
+        let uni = TopologySpec::UniformRandom;
+        assert!(ProtocolCore::new(0, 4, 8, 1.5, uni, 1).is_err());
+        assert!(ProtocolCore::new(0, 4, 8, 0.5, uni, 0).is_err());
+        assert!(ProtocolCore::new(0, 4, 8, 0.5, uni, 9).is_err());
+        assert!(ProtocolCore::new(0, 0, 8, 0.5, uni, 1).is_err());
+        assert!(ProtocolCore::new(0, 4, 8, 0.5, uni, 8).is_ok());
         // The trivial 1-shard core accepts any dimension, even empty —
         // ClusterState builds default cores before knowing the model.
-        assert!(ProtocolCore::new(0, 2, 0, 0.0, PeerSelector::Uniform, 1).is_ok());
+        assert!(ProtocolCore::new(0, 2, 0, 0.0, uni, 1).is_ok());
+        // The topology must fit the fleet: a 6-worker hypercube is a
+        // config error, the power-of-two fleets are fine.
+        assert!(ProtocolCore::new(0, 6, 8, 0.5, TopologySpec::Hypercube, 1).is_err());
+        assert!(ProtocolCore::new(0, 8, 8, 0.5, TopologySpec::Hypercube, 1).is_ok());
+        // Single-worker cores never gossip, so any topology is legal.
+        assert!(ProtocolCore::new(0, 1, 8, 0.5, TopologySpec::Hypercube, 1).is_ok());
+    }
+
+    #[test]
+    fn deterministic_topologies_walk_their_schedule_per_send() {
+        let x = FlatVec::zeros(8);
+        let mut rng = Rng::new(3);
+        let m = 4;
+        let mut c = ProtocolCore::new(0, m, 8, 1.0, TopologySpec::PartnerRotation, 1).unwrap();
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            let out = c.emit(&x, m, &mut rng).unwrap().unwrap();
+            seen.push(out.to);
+        }
+        assert_eq!(seen, vec![1, 2, 3], "rotation covers every peer in order");
+        assert_eq!(c.topo_cursor(), 3);
+        // The cursor survives a topology swap (checkpoint-restore path).
+        c.set_topology(TopologySpec::Ring);
+        assert_eq!(c.topo_cursor(), 3);
+        c.set_topology(TopologySpec::PartnerRotation);
+        let out = c.emit(&x, m, &mut rng).unwrap().unwrap();
+        assert_eq!(out.to, 1, "schedule resumes at cursor 3: offset 1 + (3 mod 3)");
+    }
+
+    #[test]
+    fn emit_alive_repairs_around_dead_peers_and_skips_when_alone() {
+        let x = FlatVec::zeros(4);
+        let mut rng = Rng::new(1);
+        let mut c = ProtocolCore::new(0, 4, 4, 1.0, TopologySpec::Ring, 1).unwrap();
+        // Ring successor of 0 is 1; 1 is down, so the send repairs to 2.
+        let alive = [true, false, true, true];
+        let out = c.emit_alive(&x, 4, &mut rng, Some(&alive[..])).unwrap().unwrap();
+        assert_eq!(out.to, 2);
+        // Everyone else down: the send is skipped and no weight leaves.
+        let w_before = c.weights()[0].value();
+        let alone = [true, false, false, false];
+        assert!(c.emit_alive(&x, 4, &mut rng, Some(&alone[..])).unwrap().is_none());
+        assert_eq!(c.weights()[0].value(), w_before);
+        // A full mask behaves exactly like no mask.
+        let all = [true; 4];
+        let out = c.emit_alive(&x, 4, &mut rng, Some(&all[..])).unwrap().unwrap();
+        assert_eq!(out.to, 1);
+    }
+
+    #[test]
+    fn uniform_repair_redraws_unbiased_among_alive_peers() {
+        // With a random topology the repair must NOT hand the dead
+        // worker's selection mass to its index-successor: it re-draws
+        // uniformly over the alive peers, keeping the expected matrix
+        // over the alive set doubly stochastic.
+        let m = 5;
+        let x = FlatVec::zeros(4);
+        let mut rng = Rng::new(17);
+        let mut c = ProtocolCore::new(0, m, 4, 1.0, TopologySpec::UniformRandom, 1).unwrap();
+        let alive = [true, true, false, true, true]; // worker 2 is down
+        let mut counts = [0u32; 5];
+        let trials = 6000;
+        for _ in 0..trials {
+            let out = c.emit_alive(&x, m, &mut rng, Some(&alive[..])).unwrap().unwrap();
+            counts[out.to] += 1;
+        }
+        assert_eq!(counts[0], 0, "never self");
+        assert_eq!(counts[2], 0, "never the dead worker");
+        // Workers 1, 3 and 4 each get ~1/3 of the sends; an index-walk
+        // repair would give worker 3 twice the share of the others.
+        for w in [1usize, 3, 4] {
+            let share = counts[w] as f64 / trials as f64;
+            assert!(
+                (share - 1.0 / 3.0).abs() < 0.04,
+                "worker {w} share {share} (counts {counts:?})"
+            );
+        }
     }
 
     #[test]

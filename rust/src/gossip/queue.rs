@@ -66,13 +66,19 @@ struct Inner {
 impl MessageQueue {
     /// Unbounded queue (the paper's model).
     pub fn unbounded() -> Self {
-        MessageQueue { inner: Mutex::new(Inner { deque: VecDeque::new(), stats: QueueStats::default() }), capacity: None }
+        MessageQueue {
+            inner: Mutex::new(Inner { deque: VecDeque::new(), stats: QueueStats::default() }),
+            capacity: None,
+        }
     }
 
     /// Bounded queue that *coalesces* (never drops) on overflow.
     pub fn bounded(capacity: usize) -> Self {
         assert!(capacity >= 2, "coalescing bound needs capacity >= 2");
-        MessageQueue { inner: Mutex::new(Inner { deque: VecDeque::new(), stats: QueueStats::default() }), capacity: Some(capacity) }
+        MessageQueue {
+            inner: Mutex::new(Inner { deque: VecDeque::new(), stats: QueueStats::default() }),
+            capacity: Some(capacity),
+        }
     }
 
     /// Non-blocking push (paper `PushMessage`). Never fails, never waits.
@@ -418,8 +424,18 @@ mod tests {
         // their deterministic decode — the receiver's final state matches
         // absorbing them one at a time, and the fold's weight is the sum.
         let body = |vals: Vec<f32>| QuantizeU8.encode(FlatVec::from_vec(vals), &mut []);
-        let m1 = Message::new(Arc::new(body(vec![2.0, -1.0, 0.5, 8.0])), SumWeight::from_value(0.25), 0, 0);
-        let m2 = Message::new(Arc::new(body(vec![6.0, 3.0, -2.0, 1.0])), SumWeight::from_value(0.25), 1, 0);
+        let m1 = Message::new(
+            Arc::new(body(vec![2.0, -1.0, 0.5, 8.0])),
+            SumWeight::from_value(0.25),
+            0,
+            0,
+        );
+        let m2 = Message::new(
+            Arc::new(body(vec![6.0, 3.0, -2.0, 1.0])),
+            SumWeight::from_value(0.25),
+            1,
+            0,
+        );
 
         let mut direct = FlatVec::from_vec(vec![10.0; 4]);
         let mut w_direct = SumWeight::from_value(0.5);

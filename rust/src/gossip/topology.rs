@@ -1,0 +1,549 @@
+//! Pluggable gossip topologies: who a sender gossips *to*.
+//!
+//! The paper draws the receiver uniformly from `{1..M} \ {s}` — the
+//! complete-graph gossip whose expected exchange matrix is doubly
+//! stochastic and whose spectral gap gives exponential consensus.
+//! GossipGraD (Daily et al., 2018) showed that *structured, rotating*
+//! partner schedules (ring / hypercube) reach consensus with far fewer
+//! messages at scale, and Jin et al. (2016) motivate comparing exchange
+//! patterns at fixed bandwidth.  This module makes the topology a
+//! first-class, pluggable axis of the protocol:
+//!
+//! * [`TopologySpec`] — the plain-data description carried by configs and
+//!   the CLI (`gosgd:P:SHARDS[:CODEC][:TOPO]` accepts `uniform | ring |
+//!   hypercube | rotation`); [`TopologySpec::build`] materializes the
+//!   [`Topology`] the protocol core picks peers with.
+//! * [`Topology`] — next-peer schedule plus the *mixing-graph view*: the
+//!   schedule-averaged peer-selection matrix `E[S]` with
+//!   `S[s][r] = Pr(s picks r)`, which the consensus theory needs to be
+//!   doubly stochastic (see `docs/ARCHITECTURE.md`, "Gossip matrices &
+//!   topologies").
+//!
+//! Deterministic topologies are driven by a per-worker **schedule
+//! cursor** owned by [`ProtocolCore`](crate::gossip::ProtocolCore) — it
+//! advances once per peer pick, is checkpointed, and repairs around dead
+//! peers under churn (the DES passes an aliveness mask; see
+//! [`ProtocolCore::emit_alive`](crate::gossip::ProtocolCore::emit_alive)).
+//!
+//! | topology    | CLI token      | schedule at cursor `c`                  | period  |
+//! |-------------|----------------|------------------------------------------|---------|
+//! | uniform     | `uniform`      | uniform over the `M − 1` others (paper)  | 1       |
+//! | ring        | `ring`         | successor `(s + 1) mod M`                | 1       |
+//! | hypercube   | `hypercube`    | `s XOR 2^(c mod d)`, `d = log2 M`        | `d`     |
+//! | rotation    | `rotation`     | `(s + 1 + (c mod (M−1))) mod M`          | `M − 1` |
+//! | small world | `smallworld:Q` | ring successor, long-range w.p. `Q`      | 1       |
+//!
+//! Every schedule above averages to a doubly stochastic selection matrix
+//! (`hypercube` requires a power-of-two `M`, enforced by
+//! [`TopologySpec::validate_for`]); the property test lives in
+//! `rust/tests/runtime_equivalence.rs`.
+//!
+//! ```
+//! use gosgd::gossip::TopologySpec;
+//! use gosgd::util::rng::Rng;
+//!
+//! let spec = TopologySpec::parse("rotation").unwrap();
+//! assert_eq!(spec, TopologySpec::PartnerRotation);
+//!
+//! // Worker 0 of 4 rotates through offsets 1, 2, 3, 1, ...
+//! let topo = spec.build();
+//! let mut rng = Rng::new(0); // deterministic schedules ignore the RNG
+//! assert_eq!(topo.next_peer(4, 0, 0, &mut rng), 1);
+//! assert_eq!(topo.next_peer(4, 0, 1, &mut rng), 2);
+//! assert_eq!(topo.next_peer(4, 0, 2, &mut rng), 3);
+//! assert_eq!(topo.next_peer(4, 0, 3, &mut rng), 1);
+//!
+//! // The schedule-averaged selection matrix is doubly stochastic.
+//! let m = 8;
+//! let mat = TopologySpec::Hypercube.expected_matrix(m);
+//! for r in 0..m {
+//!     let col: f64 = (0..m).map(|s| mat[s * m + r]).sum();
+//!     assert!((col - 1.0).abs() < 1e-12);
+//! }
+//! ```
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::gossip::peer::PeerSelector;
+use crate::util::rng::Rng;
+
+/// Plain-data topology description: parseable, comparable, copyable —
+/// the form carried by configs, CLIs and reports.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum TopologySpec {
+    /// Uniform over the other `M − 1` workers (the paper's choice).
+    #[default]
+    UniformRandom,
+    /// Deterministic ring successor `(s + 1) mod M` — minimal
+    /// connectivity, slowest mixing, perfectly local traffic.
+    Ring,
+    /// GossipGraD-style hypercube: at schedule step `c` worker `s` sends
+    /// to `s XOR 2^(c mod d)` with `d = log2 M`.  Each round is a perfect
+    /// matching; all `M` workers reach each other within `d` steps.
+    /// Requires a power-of-two worker count
+    /// ([`TopologySpec::validate_for`]).
+    Hypercube,
+    /// Rotating partner schedule: at step `c` worker `s` sends to
+    /// `(s + 1 + (c mod (M − 1))) mod M` — a deterministic cycle through
+    /// every peer, one permutation per step.
+    PartnerRotation,
+    /// Ring successor with probability `1 − q`, uniform long-range
+    /// shortcut with probability `q` (Watts–Strogatz flavoured).
+    SmallWorld { q: f64 },
+}
+
+impl TopologySpec {
+    /// Parse the CLI token: `uniform`, `ring`, `hypercube`, `rotation`,
+    /// or `smallworld:Q` (the last only outside the colon-separated
+    /// strategy grammar).
+    pub fn parse(text: &str) -> Result<TopologySpec> {
+        match text {
+            "uniform" => Ok(TopologySpec::UniformRandom),
+            "ring" => Ok(TopologySpec::Ring),
+            "hypercube" => Ok(TopologySpec::Hypercube),
+            "rotation" => Ok(TopologySpec::PartnerRotation),
+            _ if text.starts_with("smallworld") => {
+                // Reuse the PeerSelector validation for smallworld:Q so
+                // both grammars reject the same garbage the same way.
+                PeerSelector::parse(text).map(Into::into)
+            }
+            _ => Err(Error::config(format!(
+                "unknown topology {text:?} (expected uniform | ring | hypercube | \
+                 rotation | smallworld:Q)"
+            ))),
+        }
+    }
+
+    /// The CLI token / report label for this topology.
+    pub fn label(&self) -> String {
+        match self {
+            TopologySpec::UniformRandom => "uniform".into(),
+            TopologySpec::Ring => "ring".into(),
+            TopologySpec::Hypercube => "hypercube".into(),
+            TopologySpec::PartnerRotation => "rotation".into(),
+            TopologySpec::SmallWorld { q } => format!("smallworld:{q}"),
+        }
+    }
+
+    /// Whether the schedule is deterministic (cursor-driven, no RNG).
+    pub fn deterministic(&self) -> bool {
+        matches!(
+            self,
+            TopologySpec::Ring | TopologySpec::Hypercube | TopologySpec::PartnerRotation
+        )
+    }
+
+    /// Validate the topology against a worker count.  The hypercube
+    /// schedule is only a sequence of perfect matchings — and its
+    /// expected matrix only doubly stochastic — when `M` is a power of
+    /// two, so anything else is a config error.
+    pub fn validate_for(&self, workers: usize) -> Result<()> {
+        if matches!(self, TopologySpec::Hypercube)
+            && (workers < 2 || !workers.is_power_of_two())
+        {
+            return Err(Error::config(format!(
+                "hypercube topology needs a power-of-two worker count >= 2, got {workers}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Materialize the schedule.
+    pub fn build(&self) -> TopologyRef {
+        match *self {
+            TopologySpec::UniformRandom => Arc::new(UniformRandom),
+            TopologySpec::Ring => Arc::new(Ring),
+            TopologySpec::Hypercube => Arc::new(Hypercube),
+            TopologySpec::PartnerRotation => Arc::new(PartnerRotation),
+            TopologySpec::SmallWorld { q } => Arc::new(SmallWorld { q }),
+        }
+    }
+
+    /// Convenience: the schedule-averaged selection matrix (see
+    /// [`Topology::expected_matrix`]).
+    pub fn expected_matrix(&self, m: usize) -> Vec<f64> {
+        self.build().expected_matrix(m)
+    }
+}
+
+/// The legacy `--peer` selector names a subset of the topologies.
+impl From<PeerSelector> for TopologySpec {
+    fn from(sel: PeerSelector) -> TopologySpec {
+        match sel {
+            PeerSelector::Uniform => TopologySpec::UniformRandom,
+            PeerSelector::Ring => TopologySpec::Ring,
+            PeerSelector::SmallWorld { q } => TopologySpec::SmallWorld { q },
+        }
+    }
+}
+
+/// A gossip topology: the next-peer schedule plus its mixing-graph view.
+///
+/// Implementations must be deterministic functions of `(m, s, slot)` and
+/// the RNG stream — all three runtimes drive the same cores and the
+/// cross-runtime equivalence tests demand identical trajectories.
+pub trait Topology: Send + Sync + std::fmt::Debug {
+    /// The plain-data description of this topology.
+    fn spec(&self) -> TopologySpec;
+
+    /// Schedule period: after how many cursor steps the deterministic
+    /// schedule repeats (1 for the random topologies).
+    fn period(&self, m: usize) -> u64;
+
+    /// Receiver for sender `s` among `m` workers at schedule position
+    /// `slot`.  Never returns `s`.  Random topologies ignore `slot`;
+    /// deterministic ones ignore `rng`.
+    fn next_peer(&self, m: usize, s: usize, slot: u64, rng: &mut Rng) -> usize;
+
+    /// The mixing-graph view: the `m × m` row-major matrix `E[S]` with
+    /// `S[s][r] = Pr(s picks r)`, averaged over the RNG and one full
+    /// schedule period.  Rows always sum to 1; the consensus analysis
+    /// additionally needs columns summing to 1 (doubly stochastic),
+    /// which every shipped topology satisfies on its valid worker
+    /// counts.
+    fn expected_matrix(&self, m: usize) -> Vec<f64>;
+}
+
+/// Shared handle to a topology (protocol cores are `Clone`).
+pub type TopologyRef = Arc<dyn Topology>;
+
+/// Average a deterministic schedule over one period — the exact
+/// mixing-graph view for the cursor-driven topologies.
+fn matrix_from_schedule(topo: &dyn Topology, m: usize) -> Vec<f64> {
+    let period = topo.period(m).max(1);
+    let mut mat = vec![0.0; m * m];
+    // Deterministic schedules never touch the RNG; a fixed seed keeps
+    // this helper pure either way.
+    let mut rng = Rng::new(0);
+    for s in 0..m {
+        for slot in 0..period {
+            let r = topo.next_peer(m, s, slot, &mut rng);
+            mat[s * m + r] += 1.0 / period as f64;
+        }
+    }
+    mat
+}
+
+/// The paper's uniform draw over the other `M − 1` workers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UniformRandom;
+
+impl Topology for UniformRandom {
+    fn spec(&self) -> TopologySpec {
+        TopologySpec::UniformRandom
+    }
+
+    fn period(&self, _m: usize) -> u64 {
+        1
+    }
+
+    fn next_peer(&self, m: usize, s: usize, _slot: u64, rng: &mut Rng) -> usize {
+        rng.peer(m, s)
+    }
+
+    fn expected_matrix(&self, m: usize) -> Vec<f64> {
+        let p = 1.0 / (m - 1) as f64;
+        let mut mat = vec![p; m * m];
+        for s in 0..m {
+            mat[s * m + s] = 0.0;
+        }
+        mat
+    }
+}
+
+/// Deterministic ring successor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ring;
+
+impl Topology for Ring {
+    fn spec(&self) -> TopologySpec {
+        TopologySpec::Ring
+    }
+
+    fn period(&self, _m: usize) -> u64 {
+        1
+    }
+
+    fn next_peer(&self, m: usize, s: usize, _slot: u64, _rng: &mut Rng) -> usize {
+        (s + 1) % m
+    }
+
+    fn expected_matrix(&self, m: usize) -> Vec<f64> {
+        matrix_from_schedule(self, m)
+    }
+}
+
+/// Number of hypercube dimensions for `m` workers: `ceil(log2 m)`.
+fn hypercube_dims(m: usize) -> usize {
+    debug_assert!(m >= 2);
+    (usize::BITS - (m - 1).leading_zeros()) as usize
+}
+
+/// GossipGraD-style rotating hypercube dimension.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Hypercube;
+
+impl Topology for Hypercube {
+    fn spec(&self) -> TopologySpec {
+        TopologySpec::Hypercube
+    }
+
+    fn period(&self, m: usize) -> u64 {
+        hypercube_dims(m) as u64
+    }
+
+    fn next_peer(&self, m: usize, s: usize, slot: u64, _rng: &mut Rng) -> usize {
+        let d = hypercube_dims(m);
+        let start = (slot % d as u64) as usize;
+        // For a power-of-two m the first candidate is always in range.
+        // The scan only matters for non-power-of-two counts (rejected by
+        // validate_for, but next_peer must still be total): the partner
+        // along the sender's own highest set bit is always < s, so some
+        // dimension always lands in range.
+        for j in 0..d {
+            let partner = s ^ (1usize << ((start + j) % d));
+            if partner < m {
+                return partner;
+            }
+        }
+        (s + 1) % m
+    }
+
+    fn expected_matrix(&self, m: usize) -> Vec<f64> {
+        matrix_from_schedule(self, m)
+    }
+}
+
+/// Deterministic rotation through every peer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PartnerRotation;
+
+impl Topology for PartnerRotation {
+    fn spec(&self) -> TopologySpec {
+        TopologySpec::PartnerRotation
+    }
+
+    fn period(&self, m: usize) -> u64 {
+        (m as u64 - 1).max(1)
+    }
+
+    fn next_peer(&self, m: usize, s: usize, slot: u64, _rng: &mut Rng) -> usize {
+        let offset = 1 + (slot % (m as u64 - 1)) as usize;
+        (s + offset) % m
+    }
+
+    fn expected_matrix(&self, m: usize) -> Vec<f64> {
+        matrix_from_schedule(self, m)
+    }
+}
+
+/// Ring neighbour with a probability-`q` uniform shortcut.
+#[derive(Clone, Copy, Debug)]
+pub struct SmallWorld {
+    pub q: f64,
+}
+
+impl Topology for SmallWorld {
+    fn spec(&self) -> TopologySpec {
+        TopologySpec::SmallWorld { q: self.q }
+    }
+
+    fn period(&self, _m: usize) -> u64 {
+        1
+    }
+
+    fn next_peer(&self, m: usize, s: usize, _slot: u64, rng: &mut Rng) -> usize {
+        if rng.bernoulli(self.q) {
+            rng.peer(m, s)
+        } else {
+            (s + 1) % m
+        }
+    }
+
+    fn expected_matrix(&self, m: usize) -> Vec<f64> {
+        // Shortcut mass spreads uniformly (the successor can also be the
+        // shortcut's draw); the remaining 1 − q sits on the successor.
+        let shortcut = self.q / (m - 1) as f64;
+        let mut mat = vec![shortcut; m * m];
+        for s in 0..m {
+            mat[s * m + s] = 0.0;
+            mat[s * m + (s + 1) % m] += 1.0 - self.q;
+        }
+        mat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_specs() -> Vec<TopologySpec> {
+        vec![
+            TopologySpec::UniformRandom,
+            TopologySpec::Ring,
+            TopologySpec::Hypercube,
+            TopologySpec::PartnerRotation,
+            TopologySpec::SmallWorld { q: 0.25 },
+        ]
+    }
+
+    #[test]
+    fn parse_label_round_trips() {
+        for spec in all_specs() {
+            assert_eq!(TopologySpec::parse(&spec.label()).unwrap(), spec);
+            assert_eq!(spec.build().spec(), spec);
+        }
+        assert!(TopologySpec::parse("torus").is_err());
+        assert!(TopologySpec::parse("").is_err());
+        assert!(TopologySpec::parse("smallworld:2.0").is_err());
+        assert!(TopologySpec::parse("smallworld:NaN").is_err());
+    }
+
+    #[test]
+    fn peer_selector_converts_losslessly() {
+        assert_eq!(
+            TopologySpec::from(PeerSelector::Uniform),
+            TopologySpec::UniformRandom
+        );
+        assert_eq!(TopologySpec::from(PeerSelector::Ring), TopologySpec::Ring);
+        assert_eq!(
+            TopologySpec::from(PeerSelector::SmallWorld { q: 0.5 }),
+            TopologySpec::SmallWorld { q: 0.5 }
+        );
+    }
+
+    #[test]
+    fn next_peer_never_returns_self_and_stays_in_range() {
+        let mut rng = Rng::new(7);
+        for spec in all_specs() {
+            let topo = spec.build();
+            for m in [2usize, 4, 8] {
+                for s in 0..m {
+                    for slot in 0..(2 * topo.period(m)) {
+                        let r = topo.next_peer(m, s, slot, &mut rng);
+                        assert!(r < m && r != s, "{spec:?} m={m} s={s} slot={slot} -> {r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hypercube_rounds_are_perfect_matchings() {
+        // Power-of-two m: at every slot, partner-of-partner is self.
+        let topo = Hypercube;
+        let mut rng = Rng::new(0);
+        for m in [2usize, 4, 8, 16] {
+            for slot in 0..topo.period(m) {
+                for s in 0..m {
+                    let r = topo.next_peer(m, s, slot, &mut rng);
+                    let back = topo.next_peer(m, r, slot, &mut rng);
+                    assert_eq!(back, s, "m={m} slot={slot}: {s} -> {r} -> {back}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_covers_every_peer_once_per_period() {
+        let topo = PartnerRotation;
+        let mut rng = Rng::new(0);
+        let m = 6;
+        for s in 0..m {
+            let mut seen = vec![false; m];
+            for slot in 0..topo.period(m) {
+                let r = topo.next_peer(m, s, slot, &mut rng);
+                assert!(!seen[r], "peer {r} repeated within the period");
+                seen[r] = true;
+            }
+            assert_eq!(seen.iter().filter(|&&x| x).count(), m - 1);
+        }
+    }
+
+    #[test]
+    fn expected_matrices_are_doubly_stochastic() {
+        for spec in all_specs() {
+            // Hypercube only on power-of-two counts; everything else on
+            // awkward counts too.
+            let ms: &[usize] = if spec == TopologySpec::Hypercube {
+                &[2, 4, 8, 16]
+            } else {
+                &[2, 3, 5, 8]
+            };
+            for &m in ms {
+                let mat = spec.expected_matrix(m);
+                for s in 0..m {
+                    let row: f64 = mat[s * m..(s + 1) * m].iter().sum();
+                    assert!((row - 1.0).abs() < 1e-12, "{spec:?} m={m} row {s}: {row}");
+                    assert_eq!(mat[s * m + s], 0.0, "{spec:?} m={m}: self-loop at {s}");
+                }
+                for r in 0..m {
+                    let col: f64 = (0..m).map(|s| mat[s * m + r]).sum();
+                    assert!((col - 1.0).abs() < 1e-12, "{spec:?} m={m} col {r}: {col}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expected_matrix_matches_the_empirical_pick_frequency() {
+        // The analytic matrices of the random topologies must agree with
+        // what next_peer actually does.
+        let mut rng = Rng::new(42);
+        for spec in [TopologySpec::UniformRandom, TopologySpec::SmallWorld { q: 0.3 }] {
+            let m = 5;
+            let topo = spec.build();
+            let want = topo.expected_matrix(m);
+            let trials = 40_000;
+            for s in 0..m {
+                let mut counts = vec![0u32; m];
+                for _ in 0..trials {
+                    counts[topo.next_peer(m, s, 0, &mut rng)] += 1;
+                }
+                for r in 0..m {
+                    let got = counts[r] as f64 / trials as f64;
+                    assert!(
+                        (got - want[s * m + r]).abs() < 0.015,
+                        "{spec:?} s={s} r={r}: {got} vs {}",
+                        want[s * m + r]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_for_rejects_non_power_of_two_hypercubes() {
+        assert!(TopologySpec::Hypercube.validate_for(8).is_ok());
+        assert!(TopologySpec::Hypercube.validate_for(2).is_ok());
+        for bad in [0usize, 1, 3, 6, 12] {
+            assert!(
+                TopologySpec::Hypercube.validate_for(bad).is_err(),
+                "hypercube must reject M = {bad}"
+            );
+        }
+        // Everything else accepts any count the protocol accepts.
+        for spec in all_specs() {
+            if spec != TopologySpec::Hypercube {
+                assert!(spec.validate_for(3).is_ok(), "{spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_flag_matches_rng_usage() {
+        // A deterministic topology must not consume RNG state.
+        for spec in all_specs() {
+            let topo = spec.build();
+            let mut a = Rng::new(9);
+            let mut b = a.clone();
+            let _ = topo.next_peer(8, 3, 5, &mut a);
+            if spec.deterministic() {
+                assert_eq!(a.next_u64(), b.next_u64(), "{spec:?} consumed RNG");
+            } else {
+                assert_ne!(a.next_u64(), b.next_u64(), "{spec:?} ignored its RNG");
+            }
+        }
+    }
+}

@@ -13,6 +13,9 @@
 //! * [`codecs`] — beyond the paper: consensus distance and train loss
 //!   across payload codecs (dense / top-k / u8 quantization) at fixed
 //!   wall-clock bandwidth (DES).
+//! * [`topologies`] — beyond the paper: consensus distance and train
+//!   loss across gossip topologies (uniform / ring / hypercube /
+//!   partner rotation) at equal encoded-byte budget (DES).
 
 pub mod codecs;
 pub mod fig1;
@@ -20,4 +23,5 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod scenarios;
+pub mod topologies;
 pub mod variance;

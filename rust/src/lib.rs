@@ -29,9 +29,11 @@
 //!   the sharded-exchange extension (`gossip::shard`) that ships one
 //!   chunk of the vector per gossip event for large models, the payload
 //!   codecs (`gossip::codec`: dense / top-k with error feedback / u8
-//!   quantization) that compress each chunk on the wire, and the
-//!   runtime-agnostic protocol core (`gossip::protocol`) all three
-//!   runtimes drive.
+//!   quantization) that compress each chunk on the wire, the pluggable
+//!   gossip topologies (`gossip::topology`: uniform / ring / hypercube /
+//!   partner rotation, each with its doubly stochastic expected gossip
+//!   matrix), and the runtime-agnostic protocol core (`gossip::protocol`)
+//!   all three runtimes drive.
 //! * [`worker`] / [`coordinator`] — the threaded runtime.
 //! * [`runtime`] — PJRT executor for the AOT artifacts.
 //! * [`sim`] — discrete-event simulator used for the wall-clock experiment

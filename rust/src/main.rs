@@ -22,7 +22,8 @@ use gosgd::coordinator::Coordinator;
 use gosgd::error::Result;
 use gosgd::gossip::PeerSelector;
 use gosgd::gossip::CodecSpec;
-use gosgd::harness::{codecs, fig1, fig2, fig3, fig4, scenarios, variance};
+use gosgd::gossip::TopologySpec;
+use gosgd::harness::{codecs, fig1, fig2, fig3, fig4, scenarios, topologies, variance};
 use gosgd::model::Manifest;
 use gosgd::optim::LrSchedule;
 use gosgd::util::cli::Args;
@@ -61,11 +62,20 @@ fn train_args() -> Args {
         .opt("model", "tiny", "model variant: tiny | cnn | mlp_wide")
         .opt("workers", "8", "number of workers M")
         .opt("steps", "200", "engine steps (rounds or ticks)")
-        .opt("strategy", "gosgd:0.02", "gosgd:P[:SHARDS[:CODEC]] (codec: dense | q8 | top<K>) | persyn:TAU | easgd:A:TAU | downpour:NP:NF | allreduce | local")
+        .opt(
+            "strategy",
+            "gosgd:0.02",
+            "gosgd:P:SHARDS[:CODEC][:TOPO] (codec: dense | q8 | top<K>; topo: uniform | ring | \
+             hypercube | rotation) | persyn:TAU | easgd:A:TAU | downpour:NP:NF | allreduce | local",
+        )
         .opt("lr", "0.1", "learning rate (or step:BASE:GAMMA:EVERY)")
         .opt("weight-decay", "0.0001", "weight decay")
         .opt("seed", "0", "RNG seed")
-        .opt("peer", "uniform", "peer selector: uniform | ring | smallworld:Q")
+        .opt(
+            "peer",
+            "uniform",
+            "peer selector: uniform | ring | smallworld:Q (a strategy-string TOPO overrides it)",
+        )
         .opt("eval-every", "0", "evaluate every N steps (0 = only at end)")
         .opt("eval-batches", "4", "validation batches per evaluation")
         .opt("data-noise", "4.0", "synthetic data class-overlap noise")
@@ -97,7 +107,13 @@ fn parse_run_config(a: &Args) -> Result<RunConfig> {
 fn cmd_train(argv: Vec<String>) -> Result<()> {
     let a = train_args().parse_from(argv)?;
     let cfg = parse_run_config(&a)?;
-    println!("training: {} on {} with M={} for {} steps", cfg.strategy.tag(), cfg.model, cfg.workers, cfg.steps);
+    println!(
+        "training: {} on {} with M={} for {} steps",
+        cfg.strategy.tag(),
+        cfg.model,
+        cfg.workers,
+        cfg.steps
+    );
     let report = Coordinator::new(cfg)?.run()?;
     println!("{}", report.summary());
     for (step, vl, va) in &report.evals {
@@ -140,18 +156,28 @@ fn cmd_consensus(argv: Vec<String>) -> Result<()> {
 
 fn cmd_figure(argv: Vec<String>) -> Result<()> {
     let a = Args::new("gosgd figure", "regenerate a paper figure's series")
-        .opt("figure", "fig1", "fig1 | fig2 | fig3 | scenarios | codecs")
+        .opt("figure", "fig1", "fig1 | fig2 | fig3 | scenarios | codecs | topologies")
         .opt("artifacts", "artifacts", "artifact directory root")
         .opt("model", "tiny", "model variant")
         .opt("workers", "8", "number of workers")
         .opt("iterations", "150", "worker iterations (fig1/fig3)")
         .opt("ps", "0.01,0.4", "exchange probabilities (fig1/fig3)")
-        .opt("p", "0.02", "exchange probability (fig2/scenarios/codecs)")
-        .opt("shards", "1", "gossip shards per exchange (fig2/scenarios/codecs)")
+        .opt("p", "0.02", "exchange probability (fig2/scenarios/codecs/topologies)")
+        .opt("shards", "1", "gossip shards per exchange (fig2/scenarios/codecs/topologies)")
         .opt("codecs", "dense,top32,q8", "payload codecs to compare (codecs)")
-        .opt("horizon", "120", "simulated seconds (fig2/scenarios/codecs)")
+        .opt("codec", "dense", "payload codec shared by every series (topologies)")
+        .opt(
+            "topologies",
+            "uniform,ring,hypercube,rotation",
+            "gossip topologies to compare (topologies)",
+        )
+        .opt("horizon", "120", "simulated seconds (fig2/scenarios/codecs/topologies)")
         .opt("backend", "quadratic", "fig2 gradients: quadratic | pjrt")
-        .opt("hetero", "", "compute multipliers, cycled over workers; empty = one 4x straggler (scenarios)")
+        .opt(
+            "hetero",
+            "",
+            "compute multipliers, cycled over workers; empty = one 4x straggler (scenarios)",
+        )
         .opt("mtbf", "20", "mean seconds between worker crashes (scenarios)")
         .opt("mttr", "5", "mean downtime before rejoin (scenarios)")
         .opt("seed", "0", "RNG seed")
@@ -227,6 +253,25 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
             };
             let series = codecs::run(&cfg, out.as_deref())?;
             println!("{}", codecs::format_table(&series));
+        }
+        "topologies" => {
+            let topo_specs = a
+                .get("topologies")?
+                .split(',')
+                .map(|s| TopologySpec::parse(s.trim()))
+                .collect::<Result<Vec<TopologySpec>>>()?;
+            let cfg = topologies::TopoFigConfig {
+                workers: a.get_usize("workers")?,
+                p: a.get_f64("p")?,
+                shards: a.get_usize("shards")?,
+                codec: CodecSpec::parse(a.get("codec")?)?,
+                topologies: topo_specs,
+                horizon_secs: a.get_f64("horizon")?,
+                seed: a.get_u64("seed")?,
+                ..Default::default()
+            };
+            let series = topologies::run(&cfg, out.as_deref())?;
+            println!("{}", topologies::format_table(&series));
         }
         "scenarios" => {
             let cfg = scenarios::ScenarioConfig {

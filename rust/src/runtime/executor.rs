@@ -169,7 +169,12 @@ impl ModelRuntime {
     }
 
     /// Evaluate over `n_batches` validation batches: `(mean_loss, accuracy)`.
-    pub fn evaluate(&self, params: &FlatVec, sampler: &BatchSampler, n_batches: u64) -> Result<(f64, f64)> {
+    pub fn evaluate(
+        &self,
+        params: &FlatVec,
+        sampler: &BatchSampler,
+        n_batches: u64,
+    ) -> Result<(f64, f64)> {
         let b = self.manifest.eval_batch;
         let mut loss_sum = 0.0;
         let mut correct = 0.0;

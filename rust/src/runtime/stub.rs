@@ -113,7 +113,13 @@ impl<'rt> PjrtSource<'rt> {
 }
 
 impl<'rt> GradSource for PjrtSource<'rt> {
-    fn grad(&mut self, _m: usize, _params: &FlatVec, _step: u64, _out: &mut FlatVec) -> Result<f64> {
+    fn grad(
+        &mut self,
+        _m: usize,
+        _params: &FlatVec,
+        _step: u64,
+        _out: &mut FlatVec,
+    ) -> Result<f64> {
         Err(unavailable())
     }
 

@@ -17,7 +17,7 @@ use std::collections::BinaryHeap;
 
 use crate::error::{Error, Result};
 use crate::gossip::{
-    wire_bytes_for, CodecSpec, EncodedPayload, PeerSelector, ProtocolCore, Shard, SumWeight,
+    wire_bytes_for, CodecSpec, EncodedPayload, ProtocolCore, Shard, SumWeight, TopologySpec,
 };
 use crate::strategies::grad::GradSource;
 use crate::tensor::FlatVec;
@@ -261,6 +261,9 @@ pub struct DesEngine {
     strategy: DesStrategy,
     time_model: TimeModel,
     scenario: ScenarioModel,
+    /// Receiver-selection topology for the gossip strategies (uniform
+    /// random by default); applied to every worker's core at `start`.
+    topology: TopologySpec,
     workers: Vec<WorkerState>,
     master: FlatVec,
 
@@ -272,6 +275,10 @@ pub struct DesEngine {
     pending_delay: Vec<f64>,
     /// Per-worker wake-stream epoch (bumped on crash so stale wakes die).
     wake_epoch: Vec<u32>,
+    /// Mirror of each worker's `alive` flag, maintained at crash/rejoin
+    /// so the hot wake path can hand `emit_alive` a mask without
+    /// allocating per event.
+    alive_mask: Vec<bool>,
     events: BinaryHeap<Event>,
     seq: u64,
     /// Initial wakes (and crash schedules) are laid down lazily on the
@@ -309,7 +316,7 @@ impl DesEngine {
                         workers,
                         init.len(),
                         p,
-                        PeerSelector::Uniform,
+                        TopologySpec::UniformRandom,
                         shards,
                     )?,
                     mailbox: Vec::new(),
@@ -323,12 +330,14 @@ impl DesEngine {
             strategy,
             time_model,
             scenario: ScenarioModel::none(),
+            topology: TopologySpec::UniformRandom,
             workers: ws,
             master: init.clone(),
             barrier_arrivals: Vec::new(),
             busy_until: vec![0.0; workers],
             pending_delay: vec![0.0; workers],
             wake_epoch: vec![0; workers],
+            alive_mask: vec![true; workers],
             events: BinaryHeap::new(),
             seq: 0,
             started: false,
@@ -345,6 +354,16 @@ impl DesEngine {
     pub fn with_scenario(mut self, scenario: ScenarioModel) -> Self {
         assert!(!self.started, "with_scenario must precede run");
         self.scenario = scenario;
+        self
+    }
+
+    /// Select the gossip topology (see [`crate::gossip::topology`]);
+    /// uniform random by default.  Validated against the fleet size (and
+    /// applied to every worker core) at the first [`DesEngine::run`].
+    /// Must be called before that run.
+    pub fn with_topology(mut self, topology: TopologySpec) -> Self {
+        assert!(!self.started, "with_topology must precede run");
+        self.topology = topology;
         self
     }
 
@@ -412,9 +431,15 @@ impl DesEngine {
                 return Err(Error::config("rejoin_mttr must be > 0 when churn is enabled"));
             }
         }
+        self.topology.validate_for(self.workers.len())?;
         // Only latch after validation: a rejected scenario must keep
         // rejecting on a retried run, not fall through to an empty heap.
         self.started = true;
+        if self.topology != TopologySpec::UniformRandom {
+            for ws in &mut self.workers {
+                ws.core.set_topology(self.topology);
+            }
+        }
         // Stagger initial wakes slightly so workers don't tick in lockstep.
         for w in 0..self.workers.len() {
             let dt = self.draw_compute_for(w);
@@ -475,6 +500,7 @@ impl DesEngine {
             return;
         }
         self.workers[w].alive = false;
+        self.alive_mask[w] = false;
         self.workers[w].down_since = now;
         // Invalidate the in-flight wake of the interrupted compute step.
         self.wake_epoch[w] = self.wake_epoch[w].wrapping_add(1);
@@ -486,6 +512,7 @@ impl DesEngine {
     fn rejoin(&mut self, w: usize, now: f64) {
         self.report.downtime_secs += now - self.workers[w].down_since;
         self.workers[w].alive = true;
+        self.alive_mask[w] = true;
         let dt = self.draw_compute_for(w);
         self.busy_until[w] = now + dt;
         self.schedule_wake(now + dt, w);
@@ -533,12 +560,21 @@ impl DesEngine {
             }
             DesStrategy::GoSgd { .. } | DesStrategy::ShardedGoSgd { .. } => {
                 // The core runs the whole send-side transition; the
-                // engine only prices and delivers the message.
+                // engine only prices and delivers the message.  Under
+                // churn the scenario makes the pick topology-aware: a
+                // dead receiver is repaired around (the deterministic
+                // schedules walk to the next alive peer) instead of
+                // parking mass in a mailbox nobody is draining.
                 let m = self.workers.len();
                 let dim = self.workers[w].x.len();
+                let alive: Option<&[bool]> = if self.scenario.churn_enabled() {
+                    Some(&self.alive_mask)
+                } else {
+                    None
+                };
                 let out = {
                     let ws = &mut self.workers[w];
-                    ws.core.emit(&ws.x, m, &mut self.rng)?
+                    ws.core.emit_alive(&ws.x, m, &mut self.rng, alive)?
                 };
                 if let Some(out) = out {
                     // Bandwidth-dominated latency at paper-scale messages:
@@ -1160,5 +1196,125 @@ mod tests {
             a.consensus_model().unwrap().as_slice(),
             b.consensus_model().unwrap().as_slice()
         );
+    }
+
+    // ---- gossip topologies under simulated time ------------------------
+
+    fn run_topo(
+        topology: TopologySpec,
+        scenario: ScenarioModel,
+        horizon: f64,
+        seed: u64,
+    ) -> DesEngine {
+        let dim = 32;
+        let mut grad = QuadraticSource::new(dim, 0.1, seed);
+        let init = FlatVec::zeros(dim);
+        let mut eng = DesEngine::new(
+            DesStrategy::ShardedGoSgd { p: 0.3, shards: 4 },
+            TimeModel::paper_like(),
+            8,
+            &init,
+            1.0,
+            0.0,
+            seed ^ 0xD5,
+        )
+        .unwrap()
+        .with_scenario(scenario)
+        .with_topology(topology);
+        eng.run(&mut grad, horizon).unwrap();
+        eng
+    }
+
+    #[test]
+    fn structured_topologies_descend_and_never_block() {
+        for topology in [
+            TopologySpec::Ring,
+            TopologySpec::Hypercube, // 8 workers: a 3-cube
+            TopologySpec::PartnerRotation,
+        ] {
+            let eng = run_topo(topology, ScenarioModel::none(), 60.0, 81);
+            let rep = eng.report();
+            assert_eq!(rep.blocked_secs, 0.0, "{topology:?} must stay fire-and-forget");
+            assert!(rep.messages > 0);
+            let early: f64 = rep.trace.iter().take(50).map(|(_, l)| l).sum::<f64>() / 50.0;
+            let n = rep.trace.len();
+            let late: f64 = rep.trace[n - 50..].iter().map(|(_, l)| l).sum::<f64>() / 50.0;
+            assert!(late < early * 0.7, "{topology:?}: {early} -> {late}");
+        }
+    }
+
+    #[test]
+    fn churn_with_rotation_topology_repairs_and_conserves_mass() {
+        // Crashes remove workers from the schedule; the rotation repairs
+        // around them (next alive peer) and per-shard mass — including
+        // mailboxes and in-flight deliveries — stays exactly 1.
+        let scenario = ScenarioModel {
+            compute_scale: Vec::new(),
+            crash_mtbf: 6.0,
+            rejoin_mttr: 2.0,
+        };
+        let shards = 4;
+        let eng = run_topo(TopologySpec::PartnerRotation, scenario, 60.0, 83);
+        let rep = eng.report();
+        assert!(rep.crashes > 0, "expected crashes over a 60 s horizon");
+        assert!(rep.steps > 0);
+        let mut totals = vec![0.0f64; shards];
+        for ws in eng.worker_weights() {
+            for (k, v) in ws.iter().enumerate() {
+                totals[k] += v;
+            }
+        }
+        for w in &eng.workers {
+            for (shard, _, weight) in &w.mailbox {
+                totals[shard.index] += weight;
+            }
+        }
+        for ev in eng.events.iter() {
+            if let EventKind::Deliver { weight, shard, .. } = &ev.kind {
+                totals[shard.index] += weight;
+            }
+        }
+        for (k, total) in totals.iter().enumerate() {
+            assert!((total - 1.0).abs() < 1e-9, "shard {k} mass {total}");
+        }
+        // Training continues through the repaired schedule.
+        let early: f64 = rep.trace.iter().take(50).map(|(_, l)| l).sum::<f64>() / 50.0;
+        let n = rep.trace.len();
+        let late: f64 = rep.trace[n - 50..].iter().map(|(_, l)| l).sum::<f64>() / 50.0;
+        assert!(late < early * 0.7, "{early} -> {late}");
+    }
+
+    #[test]
+    fn topology_deterministic_given_seed() {
+        let a = run_topo(TopologySpec::Hypercube, ScenarioModel::none(), 15.0, 85);
+        let b = run_topo(TopologySpec::Hypercube, ScenarioModel::none(), 15.0, 85);
+        assert_eq!(a.report().steps, b.report().steps);
+        assert_eq!(a.report().messages, b.report().messages);
+        assert_eq!(
+            a.consensus_model().unwrap().as_slice(),
+            b.consensus_model().unwrap().as_slice()
+        );
+    }
+
+    #[test]
+    fn hypercube_with_wrong_fleet_size_is_a_config_error() {
+        let dim = 16;
+        let mut grad = QuadraticSource::new(dim, 0.1, 1);
+        let init = FlatVec::zeros(dim);
+        let mut eng = DesEngine::new(
+            DesStrategy::GoSgd { p: 0.1 },
+            TimeModel::paper_like(),
+            6, // not a power of two
+            &init,
+            1.0,
+            0.0,
+            1,
+        )
+        .unwrap()
+        .with_topology(TopologySpec::Hypercube);
+        let err = eng.run(&mut grad, 10.0).unwrap_err();
+        assert!(err.to_string().contains("hypercube"), "{err}");
+        // A rejected topology keeps rejecting on a retried run.
+        assert!(eng.run(&mut grad, 10.0).is_err());
     }
 }

@@ -29,7 +29,7 @@
 
 use crate::error::{Error, Result};
 use crate::framework::generators;
-use crate::gossip::{wire_bytes_for, CodecSpec, PeerSelector};
+use crate::gossip::{wire_bytes_for, CodecSpec, PeerSelector, TopologySpec};
 use crate::strategies::{Clock, ClusterState, Strategy};
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -39,8 +39,9 @@ use crate::util::rng::Rng;
 pub struct GoSgd {
     /// Exchange probability per awake step (the paper's `p`).
     p: f64,
-    /// Receiver selection policy (paper: uniform).
-    selector: PeerSelector,
+    /// Receiver selection topology (paper: uniform random) — see
+    /// [`crate::gossip::topology`].
+    topology: TopologySpec,
     /// Deliver exchanges instantly instead of queueing — used only by the
     /// matrix-framework cross-check, where `K^(t)` acts on current state.
     immediate: bool,
@@ -58,15 +59,23 @@ impl GoSgd {
         assert!((0.0..=1.0).contains(&p), "p must be a probability, got {p}");
         GoSgd {
             p,
-            selector: PeerSelector::Uniform,
+            topology: TopologySpec::UniformRandom,
             immediate: false,
             shards: 1,
             codec: CodecSpec::Dense,
         }
     }
 
-    pub fn with_selector(mut self, selector: PeerSelector) -> Self {
-        self.selector = selector;
+    /// Legacy `--peer` form of [`GoSgd::with_topology`].
+    pub fn with_selector(self, selector: PeerSelector) -> Self {
+        self.with_topology(selector.into())
+    }
+
+    /// Receiver-selection topology: `uniform` (the paper), `ring`,
+    /// `hypercube`, `rotation`, or `smallworld:Q` — see
+    /// [`crate::gossip::topology`].
+    pub fn with_topology(mut self, topology: TopologySpec) -> Self {
+        self.topology = topology;
         self
     }
 
@@ -103,6 +112,10 @@ impl GoSgd {
 
     pub fn codec(&self) -> CodecSpec {
         self.codec
+    }
+
+    pub fn topology(&self) -> TopologySpec {
+        self.topology
     }
 
     /// Immediate-delivery exchange (cross-check only): the send-side core
@@ -144,6 +157,9 @@ impl Strategy for GoSgd {
         if self.codec != CodecSpec::Dense {
             name.push_str(&format!(",codec={}", self.codec.label()));
         }
+        if self.topology != TopologySpec::UniformRandom {
+            name.push_str(&format!(",topo={}", self.topology.label()));
+        }
         name.push(')');
         name
     }
@@ -159,7 +175,7 @@ impl Strategy for GoSgd {
         state: &mut ClusterState,
         _rng: &mut Rng,
     ) -> Result<()> {
-        state.configure_gossip(self.p, &self.selector, self.shards, self.codec)?;
+        state.configure_gossip(self.p, self.topology, self.shards, self.codec)?;
         // ProcessMessages (Algorithm 4): drain the mailbox, fold each
         // message in through the worker's protocol core.
         let pending = state.queues[m].drain();
@@ -192,8 +208,10 @@ impl Strategy for GoSgd {
             if m < 2 || !rng.bernoulli(self.p) {
                 return Ok(());
             }
-            // Uniform receiver among the other workers (slots are 1-based).
-            let r = self.selector.pick(m, s - 1, rng) + 1;
+            // The core's topology schedule picks the receiver (slots are
+            // 1-based), so the cross-check and the queued path walk the
+            // identical schedule cursor.
+            let r = state.cores[s].pick_peer(m, rng) + 1;
             debug_assert_ne!(r, s);
             return self.exchange_immediately(s, r, state);
         }
@@ -612,5 +630,95 @@ mod tests {
         let s = GoSgd::new(0.02).with_shards(8).with_codec(CodecSpec::QuantizeU8);
         assert_eq!(s.name(), "gosgd(p=0.02,shards=8,codec=q8)");
         assert_eq!(GoSgd::new(0.02).name(), "gosgd(p=0.02)");
+        let s = GoSgd::new(0.02).with_topology(TopologySpec::PartnerRotation);
+        assert_eq!(s.name(), "gosgd(p=0.02,topo=rotation)");
+    }
+
+    // ---- gossip topologies through the engine driver ---------------------
+
+    #[test]
+    fn every_topology_trains_and_bounds_consensus_error() {
+        let dim = 64;
+        let steps = 6000;
+        let init = FlatVec::zeros(dim);
+        let mk = |strategy: Box<dyn crate::strategies::Strategy>| {
+            let src = NoiseSource::new(dim, 59);
+            let mut eng = Engine::new(strategy, src, 8, &init, 1.0, 0.0, 61);
+            eng.run(steps).unwrap();
+            eng.state().stacked.consensus_error().unwrap()
+        };
+        let eps_local = mk(Box::new(crate::strategies::local::Local));
+        for topo in [
+            TopologySpec::Ring,
+            TopologySpec::Hypercube, // 8 workers: a 3-cube
+            TopologySpec::PartnerRotation,
+        ] {
+            let eps = mk(Box::new(GoSgd::new(0.5).with_topology(topo)));
+            assert!(
+                eps < eps_local * 0.3,
+                "topology {topo:?}: eps {eps} vs local {eps_local}"
+            );
+        }
+    }
+
+    #[test]
+    fn topology_runs_conserve_mass_per_shard_in_the_engine() {
+        for topo in [
+            TopologySpec::Ring,
+            TopologySpec::Hypercube,
+            TopologySpec::PartnerRotation,
+        ] {
+            let dim = 64;
+            let shards = 4;
+            let src = NoiseSource::new(dim, 67);
+            let init = FlatVec::zeros(dim);
+            let mut eng = Engine::new(
+                Box::new(GoSgd::new(0.5).with_shards(shards).with_topology(topo)),
+                src,
+                8,
+                &init,
+                1.0,
+                0.0,
+                71,
+            );
+            eng.run(3000).unwrap();
+            let state = eng.state();
+            let m = state.workers();
+            let mut totals = vec![0.0f64; shards];
+            for w in 1..=m {
+                for (k, wgt) in state.cores[w].weights().iter().enumerate() {
+                    totals[k] += wgt.value();
+                }
+            }
+            for q in &state.queues {
+                for msg in q.drain() {
+                    totals[msg.shard.index] += msg.weight.value();
+                }
+            }
+            for (k, total) in totals.iter().enumerate() {
+                assert!(
+                    (total - 1.0).abs() < 1e-9,
+                    "topology {topo:?}: shard {k} mass {total}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hypercube_with_wrong_fleet_size_is_a_config_error_not_a_panic() {
+        let dim = 16;
+        let src = NoiseSource::new(dim, 3);
+        let init = FlatVec::zeros(dim);
+        let mut eng = Engine::new(
+            Box::new(GoSgd::new(0.5).with_topology(TopologySpec::Hypercube)),
+            src,
+            6, // not a power of two
+            &init,
+            0.1,
+            0.0,
+            5,
+        );
+        let err = eng.run(10).unwrap_err();
+        assert!(err.to_string().contains("hypercube"), "{err}");
     }
 }

@@ -33,7 +33,7 @@ pub use grad::GradSource;
 
 use crate::error::Result;
 use crate::framework::{CommMatrix, Stacked};
-use crate::gossip::{CodecSpec, MessageQueue, PeerSelector, ProtocolCore};
+use crate::gossip::{CodecSpec, MessageQueue, ProtocolCore, TopologySpec};
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
 
@@ -102,7 +102,7 @@ impl ClusterState {
                         workers,
                         dim,
                         0.0,
-                        PeerSelector::Uniform,
+                        TopologySpec::UniformRandom,
                         1,
                     )
                     .expect("default protocol core is always valid")
@@ -125,30 +125,33 @@ impl ClusterState {
     }
 
     /// Point every slot's protocol core at the strategy's exchange policy,
-    /// shard partition and payload codec.  Idempotent per configuration and
-    /// cheap, so gossip strategies call it every tick.  Moving from the
-    /// 1-shard default to `shards > 1` re-partitions (weights are still at
-    /// their 1/M init the first time a strategy runs); changing an
-    /// established shard count mid-run would break per-shard conservation
-    /// and panics.  Codec swaps never touch weight state (a stateful
-    /// codec's encoder buffer restarts — see
-    /// [`ProtocolCore::set_codec`]).
+    /// gossip topology, shard partition and payload codec.  Idempotent per
+    /// configuration and cheap, so gossip strategies call it every tick.
+    /// Moving from the 1-shard default to `shards > 1` re-partitions
+    /// (weights are still at their 1/M init the first time a strategy
+    /// runs); changing an established shard count mid-run would break
+    /// per-shard conservation and panics.  Codec and topology swaps never
+    /// touch weight state (a stateful codec's encoder buffer restarts —
+    /// see [`ProtocolCore::set_codec`] — and the topology schedule cursor
+    /// survives, which is what lets a checkpoint restore resume the
+    /// schedule).
     pub fn configure_gossip(
         &mut self,
         p: f64,
-        selector: &PeerSelector,
+        topology: TopologySpec,
         shards: usize,
         codec: CodecSpec,
     ) -> Result<()> {
         if shards == 0 {
             return Err(crate::error::Error::config("shards must be >= 1"));
         }
+        topology.validate_for(self.workers())?;
         // Fast path for the per-tick call: everything already matches
         // (cores are always configured uniformly, so slot 0 speaks for all).
         let sample = &self.cores[0];
         if sample.num_shards() == shards
             && sample.p() == p
-            && sample.selector() == selector
+            && sample.topology_spec() == topology
             && sample.codec_spec() == codec
         {
             return Ok(());
@@ -162,19 +165,21 @@ impl ClusterState {
             let dim = self.stacked.vec_len();
             let m = self.workers();
             for (slot, core) in self.cores.iter_mut().enumerate() {
+                let cursor = core.topo_cursor();
                 *core = ProtocolCore::new(
                     slot.saturating_sub(1),
                     m,
                     dim,
                     p,
-                    selector.clone(),
+                    topology,
                     shards,
                 )?
                 .with_codec(codec);
+                core.set_topo_cursor(cursor);
             }
         } else {
             for core in &mut self.cores {
-                core.set_exchange(p, selector.clone())?;
+                core.set_exchange(p, topology)?;
                 core.set_codec(codec);
             }
         }
@@ -359,7 +364,7 @@ mod tests {
     fn configure_gossip_populates_per_shard_weights() {
         let mut s = ClusterState::new(4, &FlatVec::zeros(10));
         assert!(!s.sharded());
-        s.configure_gossip(0.3, &crate::gossip::PeerSelector::Uniform, 3, CodecSpec::Dense)
+        s.configure_gossip(0.3, crate::gossip::TopologySpec::UniformRandom, 3, CodecSpec::Dense)
             .unwrap();
         assert!(s.sharded());
         assert_eq!(s.cores.len(), 5);
@@ -372,14 +377,13 @@ mod tests {
             }
         }
         // Idempotent for the same count.
-        s.configure_gossip(0.3, &crate::gossip::PeerSelector::Uniform, 3, CodecSpec::Dense)
+        s.configure_gossip(0.3, crate::gossip::TopologySpec::UniformRandom, 3, CodecSpec::Dense)
             .unwrap();
         assert_eq!(s.cores.len(), 5);
         // Oversized shard counts are config errors, not panics.
         let mut t = ClusterState::new(2, &FlatVec::zeros(4));
-        assert!(t
-            .configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 100, CodecSpec::Dense)
-            .is_err());
+        let uni = crate::gossip::TopologySpec::UniformRandom;
+        assert!(t.configure_gossip(0.5, uni, 100, CodecSpec::Dense).is_err());
     }
 
     #[test]
@@ -387,7 +391,7 @@ mod tests {
         let mut s = ClusterState::new(3, &FlatVec::zeros(12));
         s.configure_gossip(
             0.2,
-            &crate::gossip::PeerSelector::Uniform,
+            crate::gossip::TopologySpec::UniformRandom,
             2,
             CodecSpec::QuantizeU8,
         )
@@ -399,7 +403,7 @@ mod tests {
         // place, weights untouched.
         s.configure_gossip(
             0.2,
-            &crate::gossip::PeerSelector::Uniform,
+            crate::gossip::TopologySpec::UniformRandom,
             2,
             CodecSpec::TopK { k: 4 },
         )
@@ -413,12 +417,38 @@ mod tests {
     }
 
     #[test]
+    fn configure_gossip_applies_the_topology_and_keeps_cursors() {
+        use crate::gossip::TopologySpec;
+        let mut s = ClusterState::new(4, &FlatVec::zeros(12));
+        s.configure_gossip(1.0, TopologySpec::PartnerRotation, 1, CodecSpec::Dense)
+            .unwrap();
+        for core in &s.cores {
+            assert_eq!(core.topology_spec(), TopologySpec::PartnerRotation);
+        }
+        // Advance worker 1's schedule, then re-point everything at a new
+        // shard count: the schedule position must survive the rebuild.
+        let mut rng = crate::util::rng::Rng::new(5);
+        let x = s.stacked.worker(1).clone();
+        s.cores[1].emit(&x, 4, &mut rng).unwrap().unwrap();
+        assert_eq!(s.cores[1].topo_cursor(), 1);
+        s.configure_gossip(1.0, TopologySpec::PartnerRotation, 3, CodecSpec::Dense)
+            .unwrap();
+        assert_eq!(s.cores[1].topo_cursor(), 1, "cursor lost in re-partition");
+        assert_eq!(s.cores[2].topo_cursor(), 0);
+        // A topology that does not fit the fleet is a config error.
+        let mut t = ClusterState::new(6, &FlatVec::zeros(4));
+        assert!(t
+            .configure_gossip(0.5, TopologySpec::Hypercube, 1, CodecSpec::Dense)
+            .is_err());
+    }
+
+    #[test]
     #[should_panic(expected = "re-partition")]
     fn changing_shard_count_mid_run_panics() {
         let mut s = ClusterState::new(2, &FlatVec::zeros(8));
-        s.configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 2, CodecSpec::Dense)
+        s.configure_gossip(0.5, crate::gossip::TopologySpec::UniformRandom, 2, CodecSpec::Dense)
             .unwrap();
-        s.configure_gossip(0.5, &crate::gossip::PeerSelector::Uniform, 4, CodecSpec::Dense)
+        s.configure_gossip(0.5, crate::gossip::TopologySpec::UniformRandom, 4, CodecSpec::Dense)
             .unwrap();
     }
 

@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
 use crate::error::{Error, Result};
-use crate::gossip::{CodecSpec, MessageQueue, PeerSelector, ProtocolCore};
+use crate::gossip::{CodecSpec, MessageQueue, ProtocolCore, TopologySpec};
 use crate::strategies::grad::GradSource;
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -37,7 +37,10 @@ pub struct ThreadedGossip {
     pub eta: f32,
     pub weight_decay: f32,
     pub seed: u64,
-    pub peer: PeerSelector,
+    /// Receiver-selection topology (see [`crate::gossip::topology`]):
+    /// uniform random (the paper), ring, hypercube, partner rotation or
+    /// small world.
+    pub topology: TopologySpec,
     /// Shards per gossip event (1 = the paper's whole-vector messages;
     /// > 1 ships one round-robin shard per send — see
     /// [`crate::gossip::shard`]).
@@ -55,7 +58,7 @@ impl Default for ThreadedGossip {
             eta: 0.1,
             weight_decay: 1e-4,
             seed: 0,
-            peer: PeerSelector::Uniform,
+            topology: TopologySpec::UniformRandom,
             shards: 1,
             codec: CodecSpec::Dense,
         }
@@ -118,6 +121,7 @@ impl ThreadedGossip {
         if self.codec == (CodecSpec::TopK { k: 0 }) {
             return Err(Error::config("top-k codec needs k >= 1"));
         }
+        self.topology.validate_for(m)?;
         let queues: Arc<Vec<MessageQueue>> =
             Arc::new((0..m).map(|_| MessageQueue::unbounded()).collect());
         let start_barrier = Arc::new(Barrier::new(m));
@@ -155,7 +159,7 @@ impl ThreadedGossip {
                         m,
                         x.len(),
                         cfg.p,
-                        cfg.peer.clone(),
+                        cfg.topology,
                         cfg.shards,
                     )?
                     .with_codec(cfg.codec);
@@ -271,7 +275,7 @@ mod tests {
             eta: 1.0,
             weight_decay: 0.0,
             seed: 1,
-            peer: PeerSelector::Uniform,
+            topology: TopologySpec::UniformRandom,
             shards: 1,
             codec: CodecSpec::Dense,
         };
@@ -294,7 +298,7 @@ mod tests {
             eta: 2.0,
             weight_decay: 0.0,
             seed: 3,
-            peer: PeerSelector::Uniform,
+            topology: TopologySpec::UniformRandom,
             shards: 1,
             codec: CodecSpec::Dense,
         };
@@ -319,7 +323,7 @@ mod tests {
                 eta: 1.0,
                 weight_decay: 0.0,
                 seed: 5,
-                peer: PeerSelector::Uniform,
+                topology: TopologySpec::UniformRandom,
                 shards: 1,
                 codec: CodecSpec::Dense,
             };
@@ -345,7 +349,7 @@ mod tests {
             eta: 0.1,
             weight_decay: 0.0,
             seed: 9,
-            peer: PeerSelector::Uniform,
+            topology: TopologySpec::UniformRandom,
             shards: 1,
             codec: CodecSpec::Dense,
         };
@@ -366,7 +370,7 @@ mod tests {
                 eta: 1.0,
                 weight_decay: 0.0,
                 seed: 21,
-                peer: PeerSelector::Uniform,
+                topology: TopologySpec::UniformRandom,
                 shards,
                 codec: CodecSpec::Dense,
             };
@@ -405,7 +409,7 @@ mod tests {
             eta: 1.0,
             weight_decay: 0.0,
             seed: 27,
-            peer: PeerSelector::Uniform,
+            topology: TopologySpec::UniformRandom,
             shards,
             codec: CodecSpec::Dense,
         };
@@ -449,7 +453,7 @@ mod tests {
             eta: 1.0,
             weight_decay: 0.0,
             seed: 33,
-            peer: PeerSelector::Uniform,
+            topology: TopologySpec::UniformRandom,
             shards,
             codec: CodecSpec::QuantizeU8,
         };
@@ -482,7 +486,7 @@ mod tests {
             eta: 1.0,
             weight_decay: 0.0,
             seed: 37,
-            peer: PeerSelector::Uniform,
+            topology: TopologySpec::UniformRandom,
             shards: 4,
             codec: CodecSpec::TopK { k: 16 },
         };
@@ -495,5 +499,49 @@ mod tests {
         // k = 0 is a config error, not a panic.
         let bad = ThreadedGossip { codec: CodecSpec::TopK { k: 0 }, ..Default::default() };
         assert!(bad.run(&FlatVec::zeros(8), quad_factory(8, 0.1, 1)).is_err());
+    }
+
+    #[test]
+    fn structured_topologies_run_and_conserve_mass_shard_by_shard() {
+        let dim = 96;
+        let shards = 4;
+        for topology in [
+            TopologySpec::Ring,
+            TopologySpec::Hypercube, // 4 workers: a 2-cube
+            TopologySpec::PartnerRotation,
+        ] {
+            let cfg = ThreadedGossip {
+                workers: 4,
+                p: 0.6,
+                steps_per_worker: 250,
+                eta: 1.0,
+                weight_decay: 0.0,
+                seed: 41,
+                topology,
+                shards,
+                codec: CodecSpec::Dense,
+            };
+            let rep = cfg
+                .run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 43))
+                .unwrap();
+            assert!(rep.messages > 0, "{topology:?} sent nothing");
+            for k in 0..shards {
+                let total: f64 = rep.shard_weights.iter().map(|ws| ws[k]).sum();
+                assert!(
+                    (total - 1.0).abs() < 1e-9,
+                    "{topology:?}: shard {k} mass {total}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hypercube_rejects_non_power_of_two_fleets() {
+        let cfg = ThreadedGossip {
+            workers: 6,
+            topology: TopologySpec::Hypercube,
+            ..Default::default()
+        };
+        assert!(cfg.run(&FlatVec::zeros(8), quad_factory(8, 0.1, 1)).is_err());
     }
 }

@@ -8,7 +8,7 @@
 //! trajectories, plus the conservation invariants the other runtimes rely
 //! on.
 
-use gosgd::gossip::{CodecSpec, MessageQueue, PeerSelector, ProtocolCore};
+use gosgd::gossip::{CodecSpec, MessageQueue, ProtocolCore, TopologySpec};
 use gosgd::strategies::engine::Engine;
 use gosgd::strategies::gosgd::GoSgd;
 use gosgd::strategies::grad::{GradSource, NoiseSource};
@@ -27,6 +27,7 @@ fn drive_cores_by_hand(
     p: f64,
     shards: usize,
     codec: CodecSpec,
+    topo: TopologySpec,
     ticks: u64,
     grad_seed: u64,
     engine_seed: u64,
@@ -36,7 +37,7 @@ fn drive_cores_by_hand(
     let mut xs: Vec<FlatVec> = (0..m).map(|_| FlatVec::zeros(dim)).collect();
     let mut cores: Vec<ProtocolCore> = (0..m)
         .map(|w| {
-            ProtocolCore::new(w, m, dim, p, PeerSelector::Uniform, shards)
+            ProtocolCore::new(w, m, dim, p, topo, shards)
                 .unwrap()
                 .with_codec(codec)
         })
@@ -72,6 +73,7 @@ fn engine_trajectory(
     p: f64,
     shards: usize,
     codec: CodecSpec,
+    topo: TopologySpec,
     ticks: u64,
     grad_seed: u64,
     engine_seed: u64,
@@ -79,13 +81,35 @@ fn engine_trajectory(
     let src = NoiseSource::new(dim, grad_seed);
     let init = FlatVec::zeros(dim);
     let strategy = if shards > 1 {
-        GoSgd::new(p).with_shards(shards).with_codec(codec)
+        GoSgd::new(p).with_shards(shards).with_codec(codec).with_topology(topo)
     } else {
-        GoSgd::new(p).with_codec(codec)
+        GoSgd::new(p).with_codec(codec).with_topology(topo)
     };
     let mut eng = Engine::new(Box::new(strategy), src, m, &init, ETA, 0.0, engine_seed);
     eng.run(ticks).unwrap();
     eng
+}
+
+#[allow(clippy::too_many_arguments)]
+fn assert_bit_identical_topo(
+    dim: usize,
+    m: usize,
+    p: f64,
+    shards: usize,
+    codec: CodecSpec,
+    topo: TopologySpec,
+    ticks: u64,
+    seed: u64,
+) {
+    let eng = engine_trajectory(dim, m, p, shards, codec, topo, ticks, seed, seed ^ 0xE9);
+    let hand = drive_cores_by_hand(dim, m, p, shards, codec, topo, ticks, seed, seed ^ 0xE9);
+    for w in 0..m {
+        assert_eq!(
+            eng.state().stacked.worker(w + 1).as_slice(),
+            hand[w].as_slice(),
+            "worker {w} diverged (p={p}, shards={shards}, codec={codec:?}, topo={topo:?})"
+        );
+    }
 }
 
 fn assert_bit_identical(
@@ -97,15 +121,7 @@ fn assert_bit_identical(
     ticks: u64,
     seed: u64,
 ) {
-    let eng = engine_trajectory(dim, m, p, shards, codec, ticks, seed, seed ^ 0xE9);
-    let hand = drive_cores_by_hand(dim, m, p, shards, codec, ticks, seed, seed ^ 0xE9);
-    for w in 0..m {
-        assert_eq!(
-            eng.state().stacked.worker(w + 1).as_slice(),
-            hand[w].as_slice(),
-            "worker {w} diverged (p={p}, shards={shards}, codec={codec:?})"
-        );
-    }
+    assert_bit_identical_topo(dim, m, p, shards, codec, TopologySpec::UniformRandom, ticks, seed);
 }
 
 #[test]
@@ -133,7 +149,17 @@ fn engine_conserves_mass_shard_by_shard_including_in_flight() {
     // The invariant every runtime's driver relies on, checked through the
     // engine's cores: each shard's mass (workers + queued messages) ≡ 1.
     let shards = 5;
-    let eng = engine_trajectory(60, 6, 0.8, shards, CodecSpec::Dense, 3000, 21, 22);
+    let eng = engine_trajectory(
+        60,
+        6,
+        0.8,
+        shards,
+        CodecSpec::Dense,
+        TopologySpec::UniformRandom,
+        3000,
+        21,
+        22,
+    );
     let state = eng.state();
     let mut totals = vec![0.0f64; shards];
     for w in 1..=state.workers() {
@@ -164,7 +190,7 @@ fn threaded_runtime_conserves_mass_shard_by_shard() {
         eta: 1.0,
         weight_decay: 0.0,
         seed: 31,
-        peer: PeerSelector::Uniform,
+        topology: TopologySpec::UniformRandom,
         shards,
         codec: CodecSpec::Dense,
     };
@@ -221,7 +247,17 @@ fn all_three_runtimes_conserve_mass_shard_by_shard_with_codecs() {
     let shards = 4;
     for codec in [CodecSpec::QuantizeU8, CodecSpec::TopK { k: 4 }] {
         // 1. Sequential engine: exact identity over workers + queues.
-        let eng = engine_trajectory(48, 4, 0.7, shards, codec, 2000, 71, 72);
+        let eng = engine_trajectory(
+            48,
+            4,
+            0.7,
+            shards,
+            codec,
+            TopologySpec::UniformRandom,
+            2000,
+            71,
+            72,
+        );
         let state = eng.state();
         let mut totals = vec![0.0f64; shards];
         for w in 1..=state.workers() {
@@ -249,7 +285,7 @@ fn all_three_runtimes_conserve_mass_shard_by_shard_with_codecs() {
             eta: 1.0,
             weight_decay: 0.0,
             seed: 73,
-            peer: PeerSelector::Uniform,
+            topology: TopologySpec::UniformRandom,
             shards,
             codec,
         };
@@ -287,6 +323,163 @@ fn all_three_runtimes_conserve_mass_shard_by_shard_with_codecs() {
             assert!(
                 total > 0.0 && total <= 1.0 + 1e-9,
                 "des codec {codec:?}: shard {k} mass {total}"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_equals_hand_driven_core_bit_for_bit_with_topologies() {
+    // The topology schedule lives inside the core (cursor and all), so a
+    // structured schedule must be exactly as bit-reproducible across
+    // drivers as the paper's uniform draw.
+    assert_bit_identical_topo(16, 4, 0.7, 1, CodecSpec::Dense, TopologySpec::Ring, 400, 17);
+    assert_bit_identical_topo(
+        40,
+        4,
+        0.8,
+        4,
+        CodecSpec::Dense,
+        TopologySpec::Hypercube,
+        300,
+        18,
+    );
+    assert_bit_identical_topo(
+        40,
+        5,
+        1.0,
+        4,
+        CodecSpec::QuantizeU8,
+        TopologySpec::PartnerRotation,
+        300,
+        19,
+    );
+}
+
+#[test]
+fn every_topology_expected_matrix_is_doubly_stochastic() {
+    // The consensus analysis needs E[S] doubly stochastic: rows sum to 1
+    // (every sender picks someone), columns sum to 1 (expected in-degree
+    // is uniform), diagonal 0 (never self).  Hypercube only on its legal
+    // power-of-two fleets; the rest also on awkward counts.
+    let structured = [
+        TopologySpec::UniformRandom,
+        TopologySpec::Ring,
+        TopologySpec::Hypercube,
+        TopologySpec::PartnerRotation,
+        TopologySpec::SmallWorld { q: 0.3 },
+    ];
+    for topo in structured {
+        let ms: &[usize] = if topo == TopologySpec::Hypercube {
+            &[2, 4, 8, 16, 32]
+        } else {
+            &[2, 3, 5, 7, 8, 16]
+        };
+        for &m in ms {
+            let mat = topo.expected_matrix(m);
+            assert_eq!(mat.len(), m * m);
+            for s in 0..m {
+                let row: f64 = mat[s * m..(s + 1) * m].iter().sum();
+                assert!((row - 1.0).abs() < 1e-12, "{topo:?} m={m} row {s}: {row}");
+                assert_eq!(mat[s * m + s], 0.0, "{topo:?} m={m}: self-loop at {s}");
+            }
+            for r in 0..m {
+                let col: f64 = (0..m).map(|s| mat[s * m + r]).sum();
+                assert!((col - 1.0).abs() < 1e-12, "{topo:?} m={m} col {r}: {col}");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_three_runtimes_conserve_mass_shard_by_shard_with_topologies() {
+    use gosgd::sim::{DesEngine, DesStrategy, TimeModel};
+    use gosgd::strategies::grad::QuadraticSource;
+    use gosgd::worker::ThreadedGossip;
+    let shards = 4;
+    for topo in [
+        TopologySpec::Ring,
+        TopologySpec::Hypercube, // 4 workers: a 2-cube
+        TopologySpec::PartnerRotation,
+    ] {
+        // 1. Sequential engine: exact identity over workers + queues.
+        let eng = engine_trajectory(
+            48,
+            4,
+            0.7,
+            shards,
+            CodecSpec::Dense,
+            topo,
+            2000,
+            91,
+            92,
+        );
+        let state = eng.state();
+        let mut totals = vec![0.0f64; shards];
+        for w in 1..=state.workers() {
+            for (k, wgt) in state.cores[w].weights().iter().enumerate() {
+                totals[k] += wgt.value();
+            }
+        }
+        for q in &state.queues {
+            for msg in q.drain() {
+                totals[msg.shard.index] += msg.weight.value();
+            }
+        }
+        for (k, total) in totals.iter().enumerate() {
+            assert!(
+                (total - 1.0).abs() < 1e-9,
+                "engine topo {topo:?}: shard {k} mass {total}"
+            );
+        }
+
+        // 2. OS-thread runtime: exact identity after the final fold.
+        let cfg = ThreadedGossip {
+            workers: 4,
+            p: 0.5,
+            steps_per_worker: 150,
+            eta: 1.0,
+            weight_decay: 0.0,
+            seed: 93,
+            topology: topo,
+            shards,
+            codec: CodecSpec::Dense,
+        };
+        let rep = cfg
+            .run(&FlatVec::zeros(48), |_w| {
+                Ok(Box::new(QuadraticSource::new(48, 0.1, 95)) as Box<dyn GradSource>)
+            })
+            .unwrap();
+        for k in 0..shards {
+            let total: f64 = rep.shard_weights.iter().map(|ws| ws[k]).sum();
+            assert!(
+                (total - 1.0).abs() < 1e-9,
+                "threaded topo {topo:?}: shard {k} mass {total}"
+            );
+        }
+
+        // 3. DES: worker-held mass stays positive and never exceeds the
+        // invariant (the rest is in flight — the exact all-locations
+        // identity, including under churn, is pinned in sim::des's own
+        // suite).
+        let mut grad = QuadraticSource::new(48, 0.1, 97);
+        let mut des = DesEngine::new(
+            DesStrategy::ShardedGoSgd { p: 0.4, shards },
+            TimeModel::paper_like(),
+            4,
+            &FlatVec::zeros(48),
+            1.0,
+            0.0,
+            99,
+        )
+        .unwrap()
+        .with_topology(topo);
+        des.run(&mut grad, 25.0).unwrap();
+        for k in 0..shards {
+            let total: f64 = des.worker_weights().iter().map(|ws| ws[k]).sum();
+            assert!(
+                total > 0.0 && total <= 1.0 + 1e-9,
+                "des topo {topo:?}: shard {k} mass {total}"
             );
         }
     }
