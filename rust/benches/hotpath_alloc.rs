@@ -1,0 +1,108 @@
+//! Bench + acceptance gate: the zero-allocation gossip hot path.
+//!
+//! Installs a counting global allocator and drives the full steady-state
+//! exchange — emit → encode → enqueue → drain → absorb/blend — through
+//! the shared `gosgd::bench::ExchangePair` harness, with and without a
+//! `BufferPool` attached.  Two outputs:
+//!
+//! 1. **ns/exchange** for every codec, pooled vs unpooled (the
+//!    before/after of the pooling change), written to `BENCH_hotpath.json`
+//!    when `BENCH_JSON` is set (CI uploads it beside `BENCH_codec.json`).
+//! 2. **allocations/exchange**, measured at the allocator.  The acceptance
+//!    assertions make allocation regressions a CI failure:
+//!    * dense and q8 with a pool: **exactly 0** steady-state heap
+//!      allocations per exchange;
+//!    * top-k with a pool: bounded by a small constant *total* (its
+//!      index/value/scratch buffers are pooled too; after warm-up the
+//!      freelist serves every size class);
+//!    * unpooled: strictly positive (sanity that the counter counts).
+//!
+//! The same contract runs as a plain test suite in
+//! `rust/tests/alloc_regression.rs`, over the identical harness.
+
+use gosgd::bench::{Bencher, ExchangePair};
+use gosgd::gossip::CodecSpec;
+use gosgd::util::alloc_count::CountingAllocator;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator::new();
+
+/// Paper-scale-ish model slice: 64k parameters in 4 shards.
+const DIM: usize = 1 << 16;
+const SHARDS: usize = 4;
+const SHARD_LEN: usize = DIM / SHARDS;
+
+/// Heap allocations over `iters` exchanges after `warmup` warm ones.
+fn measure_allocs(codec: CodecSpec, pooled: bool, warmup: usize, iters: usize) -> u64 {
+    let mut pair = ExchangePair::new(codec, pooled, DIM, SHARDS, 0x407);
+    for _ in 0..warmup {
+        pair.exchange();
+    }
+    CountingAllocator::reset();
+    for _ in 0..iters {
+        pair.exchange();
+    }
+    CountingAllocator::allocations()
+}
+
+fn main() {
+    let specs = [
+        CodecSpec::Dense,
+        CodecSpec::QuantizeU8,
+        CodecSpec::TopK { k: SHARD_LEN / 16 },
+    ];
+
+    // ---- latency: ns/exchange, pooled vs unpooled ----------------------
+    let mut b = Bencher::new("hotpath_alloc");
+    let bytes = (SHARD_LEN * 4) as u64; // raw payload moved per exchange
+    for spec in specs {
+        for pooled in [false, true] {
+            let mode = if pooled { "pooled" } else { "unpooled" };
+            let mut pair = ExchangePair::new(spec, pooled, DIM, SHARDS, 0x407);
+            b.bench_bytes(&format!("exchange_{}_{mode}", spec.label()), bytes, || {
+                pair.exchange();
+            });
+        }
+    }
+
+    // ---- the acceptance gate: allocations per steady-state exchange ----
+    let (warmup, iters) = (512usize, 512usize);
+    println!("\ncodec      mode      allocs over {iters} exchanges   allocs/exchange");
+    let mut report = Vec::new();
+    for spec in specs {
+        for pooled in [false, true] {
+            let n = measure_allocs(spec, pooled, warmup, iters);
+            println!(
+                "{:<10} {:<9} {:>10}                      {:>8.3}",
+                spec.label(),
+                if pooled { "pooled" } else { "unpooled" },
+                n,
+                n as f64 / iters as f64
+            );
+            report.push((spec, pooled, n));
+        }
+    }
+    for (spec, pooled, n) in report {
+        match (spec, pooled) {
+            (CodecSpec::Dense, true) | (CodecSpec::QuantizeU8, true) => assert_eq!(
+                n,
+                0,
+                "acceptance: {} with a pool must perform ZERO steady-state heap \
+                 allocations per exchange, measured {n} over {iters}",
+                spec.label()
+            ),
+            (CodecSpec::TopK { .. }, true) => assert!(
+                n <= 16,
+                "acceptance: pooled top-k must stay within a bounded constant of \
+                 allocations ({n} over {iters} exchanges)"
+            ),
+            (_, false) => assert!(
+                n > 0,
+                "sanity: the unpooled path must allocate (counter broken?)"
+            ),
+        }
+    }
+    println!("\nzero-allocation acceptance passed (dense/q8 = 0, top-k bounded)");
+
+    b.finish();
+}

@@ -1,57 +1,75 @@
 //! Bench: message-queue operations (the gossip substrate's control path).
 //!
-//! Perf target (DESIGN.md §Perf): queue ops are O(1) with `Arc`'d payloads
-//! — push/drain must be orders of magnitude cheaper than a gradient step
-//! so the protocol's overhead stays negligible at p = 0.01…1.
+//! Perf target (DESIGN.md §Perf): queue ops are O(1) — payload bodies
+//! move, they are never copied — so push/drain must be orders of
+//! magnitude cheaper than a gradient step and the protocol's overhead
+//! stays negligible at p = 0.01…1.  Bodies cycle through a shared
+//! [`BufferPool`] exactly as the runtimes run them, so the loop also
+//! exercises the zero-allocation steady state (asserted for real in
+//! `benches/hotpath_alloc.rs`).
 
 use gosgd::bench::Bencher;
 use gosgd::gossip::{EncodedPayload, Message, MessageQueue, SumWeight};
-use gosgd::tensor::FlatVec;
+use gosgd::tensor::{BufferPool, FlatVec};
 use std::sync::Arc;
 
-fn msg(payload: &Arc<EncodedPayload>) -> Message {
-    Message::new(payload.clone(), SumWeight::from_value(0.01), 0, 0)
+/// A pooled paper-scale dense message: the body's storage is recycled
+/// when the drained message drops, so repeated calls recycle one buffer.
+fn msg(pool: &Arc<BufferPool>, n: usize) -> Message {
+    Message::new(
+        EncodedPayload::Dense(FlatVec::pooled(pool, n)),
+        SumWeight::from_value(0.01),
+        0,
+        0,
+    )
 }
 
 fn main() {
     let mut b = Bencher::new("queue_throughput");
-    // Paper-scale CNN payload.
-    let payload = Arc::new(EncodedPayload::Dense(FlatVec::zeros(1_105_098)));
+    // Paper-scale CNN payload length.
+    let n = 1_105_098usize;
+    let pool = BufferPool::shared();
 
-    // Single-threaded push+drain round trip (payload shared, not copied).
+    // Single-threaded push+drain round trip (body moved, then recycled).
     {
         let q = MessageQueue::unbounded();
+        let mut inbox = Vec::new();
         b.bench_elems("push_drain_roundtrip", 1, || {
-            q.push(msg(&payload));
-            std::hint::black_box(q.drain());
+            q.push(msg(&pool, n));
+            q.drain_into(&mut inbox);
+            std::hint::black_box(inbox.drain(..).count());
         });
     }
 
     // Batched: 8 producers' worth of messages drained at once.
     {
         let q = MessageQueue::unbounded();
+        let mut inbox = Vec::new();
         b.bench_elems("push8_drain", 8, || {
             for _ in 0..8 {
-                q.push(msg(&payload));
+                q.push(msg(&pool, n));
             }
-            std::hint::black_box(q.drain());
+            q.drain_into(&mut inbox);
+            std::hint::black_box(inbox.drain(..).count());
         });
     }
 
     // Bounded queue with coalescing under overflow (worst case: every push
-    // beyond capacity folds two 1.1M-float payloads).
+    // beyond capacity folds two 10k-float payloads through pooled scratch).
     {
-        let q = MessageQueue::bounded(4);
-        let small = Arc::new(EncodedPayload::Dense(FlatVec::zeros(10_000)));
+        let q = MessageQueue::bounded(4).with_pool(pool.clone());
+        let mut inbox = Vec::new();
         b.bench_elems("bounded_coalesce_10k", 8, || {
             for _ in 0..8 {
-                q.push(Message::new(small.clone(), SumWeight::from_value(0.01), 0, 0));
+                q.push(msg(&pool, 10_000));
             }
-            std::hint::black_box(q.drain());
+            q.drain_into(&mut inbox);
+            std::hint::black_box(inbox.drain(..).count());
         });
     }
 
-    // Cross-thread contention: 4 pusher threads against one drainer.
+    // Cross-thread contention: 4 pusher threads against one drainer, all
+    // recycling through the same pool (the threaded runtime's shape).
     {
         let q = Arc::new(MessageQueue::unbounded());
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -59,10 +77,10 @@ fn main() {
         for _ in 0..4 {
             let q = q.clone();
             let stop = stop.clone();
-            let p = payload.clone();
+            let pool = pool.clone();
             handles.push(std::thread::spawn(move || {
                 while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                    q.push(Message::new(p.clone(), SumWeight::from_value(0.01), 0, 0));
+                    q.push(msg(&pool, 10_000));
                     std::thread::yield_now();
                 }
             }));

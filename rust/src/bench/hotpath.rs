@@ -1,0 +1,103 @@
+//! Shared two-core exchange harness for the hot-path acceptance gates.
+//!
+//! The zero-allocation contract is enforced twice — by
+//! `benches/hotpath_alloc.rs` (with timing + `BENCH_hotpath.json`) and by
+//! `rust/tests/alloc_regression.rs` (on every `cargo test`) — and both
+//! gates must drive the *identical* loop or they can drift apart.  This
+//! module is that loop: the minimal closed system exercising every stage
+//! of the per-message hot path (emit → encode → enqueue → drain →
+//! absorb/blend) between two protocol cores.
+//!
+//! The exchange alternates direction (A→B then B→A) so the sum weights
+//! orbit a fixed point instead of halving toward zero over a long run.
+
+use crate::gossip::{CodecSpec, Message, MessageQueue, ProtocolCore, TopologySpec};
+use crate::tensor::{BufferPool, FlatVec};
+use crate::util::rng::Rng;
+
+/// Two cores, one queue, one reusable inbox — the engine-shaped exchange
+/// loop of the allocation gates.
+pub struct ExchangePair {
+    cores: [ProtocolCore; 2],
+    xs: [FlatVec; 2],
+    queue: MessageQueue,
+    inbox: Vec<Message>,
+    step: u64,
+    turn: usize,
+}
+
+impl ExchangePair {
+    /// Build the pair over a `dim`-parameter model cut into `shards`,
+    /// with or without a shared [`BufferPool`] attached.  Panics on an
+    /// invalid configuration (bench/test harness, not a public API).
+    pub fn new(codec: CodecSpec, pooled: bool, dim: usize, shards: usize, seed: u64) -> Self {
+        let pool = BufferPool::shared();
+        let mk = |id: usize| {
+            let core = ProtocolCore::new(id, 2, dim, 1.0, TopologySpec::UniformRandom, shards)
+                .unwrap()
+                .with_codec(codec);
+            if pooled {
+                core.with_pool(pool.clone())
+            } else {
+                core
+            }
+        };
+        let mut rng = Rng::new(seed);
+        ExchangePair {
+            cores: [mk(0), mk(1)],
+            xs: [
+                FlatVec::randn(dim, 1.0, &mut rng),
+                FlatVec::randn(dim, 1.0, &mut rng),
+            ],
+            queue: if pooled {
+                MessageQueue::unbounded().with_pool(pool)
+            } else {
+                MessageQueue::unbounded()
+            },
+            inbox: Vec::new(),
+            step: 0,
+            turn: 0,
+        }
+    }
+
+    /// One full exchange: the sender's emit/encode, the queue round trip,
+    /// the receiver's drain + decode-blend.
+    pub fn exchange(&mut self) {
+        self.step += 1;
+        let s = self.turn;
+        let r = 1 - s;
+        self.turn = r;
+        let out = self.cores[s].emit_to(&self.xs[s], r).unwrap();
+        self.queue.push(out.into_message(s, self.step));
+        self.queue.drain_into(&mut self.inbox);
+        for msg in self.inbox.drain(..) {
+            self.cores[r].absorb_message(&mut self.xs[r], &msg).unwrap();
+        }
+    }
+
+    /// Worker `w`'s current parameters (trajectory comparisons).
+    pub fn params(&self, w: usize) -> &FlatVec {
+        &self.xs[w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exchange_alternates_and_keeps_weights_bounded() {
+        let mut pair = ExchangePair::new(CodecSpec::Dense, true, 64, 4, 3);
+        for _ in 0..200 {
+            pair.exchange();
+        }
+        // Ping-pong keeps every shard weight bounded away from zero (a
+        // one-directional loop would halve one side into denormals).
+        for w in 0..2 {
+            for k in 0..4 {
+                let v = pair.cores[w].weights()[k].value();
+                assert!(v > 1e-3, "worker {w} shard {k} weight collapsed: {v}");
+            }
+        }
+    }
+}

@@ -13,6 +13,10 @@
 //! b.finish();
 //! ```
 
+pub mod hotpath;
+
+pub use hotpath::ExchangePair;
+
 use std::time::{Duration, Instant};
 
 use crate::util::{mean, percentile, stddev};

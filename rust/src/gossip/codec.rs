@@ -43,11 +43,20 @@
 //! the CLI (`gosgd:P:SHARDS:CODEC` accepts `dense`, `q8`, `topK` as in
 //! `top32`); [`CodecSpec::build`] materializes the trait object the core
 //! encodes with.
+//!
+//! **Storage**: every encoded body lives in pool-recyclable storage — the
+//! dense form in a (possibly pooled) [`FlatVec`], the q8 codes and top-k
+//! index/value arrays in [`PoolVec`]s.  [`Codec::encode_with`] takes an
+//! optional [`BufferPool`]; when one is supplied (the protocol core's, on
+//! the hot path) a steady-state encode performs **zero heap allocations**:
+//! output buffers come from the pool and the consumed input snapshot's
+//! storage flows straight back into it.  Without a pool everything
+//! degrades to plain allocation ([`Codec::encode`]).
 
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::tensor::{self, FlatVec};
+use crate::tensor::{self, BufferPool, FlatVec, PoolVec, Poolable};
 
 /// Plain-data codec description: parseable, comparable, copyable — the
 /// form carried by configs, CLIs and reports.
@@ -145,8 +154,43 @@ pub trait Codec: Send + Sync + std::fmt::Debug {
     /// Encode one shard payload.  `residual` is the caller-owned
     /// error-feedback state for this shard: empty for stateless codecs,
     /// exactly `payload.len()` entries (the last-shipped snapshot) for
-    /// [`TopK`], updated in place.
-    fn encode(&self, payload: FlatVec, residual: &mut [f32]) -> EncodedPayload;
+    /// [`TopK`], updated in place.  `pool` supplies recycled storage for
+    /// the encoded body (and receives the consumed snapshot's storage
+    /// back, if the snapshot was pooled); `None` falls back to plain
+    /// allocation.
+    fn encode_with(
+        &self,
+        payload: FlatVec,
+        residual: &mut [f32],
+        pool: Option<&Arc<BufferPool>>,
+    ) -> EncodedPayload;
+
+    /// [`Codec::encode_with`] without a pool (tests, cold paths).
+    fn encode(&self, payload: FlatVec, residual: &mut [f32]) -> EncodedPayload {
+        self.encode_with(payload, residual, None)
+    }
+}
+
+/// A body buffer of `len` elements filled by `f(index)` in one write
+/// pass: recycled from `pool` when one is given, freshly allocated
+/// otherwise — never zeroed first.
+fn body_from_fn<T: Poolable>(
+    pool: Option<&Arc<BufferPool>>,
+    len: usize,
+    f: impl FnMut(usize) -> T,
+) -> PoolVec<T> {
+    match pool {
+        Some(pool) => BufferPool::acquire_with(pool, len, f),
+        None => PoolVec::from_vec((0..len).map(f).collect()),
+    }
+}
+
+/// A body buffer copying `src` in one pass (same pool/no-pool split).
+fn body_copy<T: Poolable>(pool: Option<&Arc<BufferPool>>, src: &[T]) -> PoolVec<T> {
+    match pool {
+        Some(pool) => BufferPool::acquire_copy(pool, src),
+        None => PoolVec::from_vec(src.to_vec()),
+    }
 }
 
 /// Shared handle to a codec (protocol cores are `Clone`).
@@ -161,7 +205,14 @@ impl Codec for Dense {
         CodecSpec::Dense
     }
 
-    fn encode(&self, payload: FlatVec, _residual: &mut [f32]) -> EncodedPayload {
+    fn encode_with(
+        &self,
+        payload: FlatVec,
+        _residual: &mut [f32],
+        _pool: Option<&Arc<BufferPool>>,
+    ) -> EncodedPayload {
+        // The snapshot ships as-is; if it was pooled its storage returns
+        // to the pool when the receiver drops the message.
         EncodedPayload::Dense(payload)
     }
 }
@@ -187,7 +238,12 @@ impl Codec for TopK {
         CodecSpec::TopK { k: self.k }
     }
 
-    fn encode(&self, payload: FlatVec, residual: &mut [f32]) -> EncodedPayload {
+    fn encode_with(
+        &self,
+        payload: FlatVec,
+        residual: &mut [f32],
+        pool: Option<&Arc<BufferPool>>,
+    ) -> EncodedPayload {
         assert!(self.k >= 1, "top-k codec needs k >= 1");
         let n = payload.len();
         if n == 0 {
@@ -206,22 +262,28 @@ impl Codec for TopK {
             return EncodedPayload::Dense(payload);
         }
         let xs = payload.as_slice();
-        let mut order: Vec<u32> = (0..n as u32).collect();
-        // Partition so the k largest |x - shipped| scores come first; the
-        // comparator is descending, with total_cmp so NaN payloads cannot
-        // panic the protocol.
+        // O(n) selection over a pooled index scratch: partition so the k
+        // largest |x - shipped| scores come first, then sort only the k
+        // winners for deterministic ascending index order.  total_cmp so
+        // NaN payloads cannot panic the protocol.
+        let mut order: PoolVec<u32> = body_from_fn(pool, n, |i| i as u32);
         {
             let score = |i: u32| (xs[i as usize] - residual[i as usize]).abs();
-            order.select_nth_unstable_by(self.k - 1, |&a, &b| score(b).total_cmp(&score(a)));
+            order
+                .as_mut_slice()
+                .select_nth_unstable_by(self.k - 1, |&a, &b| score(b).total_cmp(&score(a)));
         }
-        let mut indices = order[..self.k].to_vec();
-        indices.sort_unstable();
-        let values: Vec<f32> = indices.iter().map(|&i| xs[i as usize]).collect();
+        let mut indices: PoolVec<u32> = body_copy(pool, &order.as_slice()[..self.k]);
+        indices.as_mut_slice().sort_unstable();
+        let values: PoolVec<f32> =
+            body_from_fn(pool, self.k, |j| xs[indices.as_slice()[j] as usize]);
         // Shipped coordinates are now fully communicated; the rest keep
         // their accumulated residual |x - shipped| for later sends.
-        for (&i, &v) in indices.iter().zip(&values) {
+        for (&i, &v) in indices.as_slice().iter().zip(values.as_slice()) {
             residual[i as usize] = v;
         }
+        // `order` and the consumed snapshot drop here — their storage
+        // flows back to the pool for the next exchange.
         EncodedPayload::TopK { len: n, indices, values }
     }
 }
@@ -239,7 +301,12 @@ impl Codec for QuantizeU8 {
         CodecSpec::QuantizeU8
     }
 
-    fn encode(&self, payload: FlatVec, _residual: &mut [f32]) -> EncodedPayload {
+    fn encode_with(
+        &self,
+        payload: FlatVec,
+        _residual: &mut [f32],
+        pool: Option<&Arc<BufferPool>>,
+    ) -> EncodedPayload {
         let mut min = f32::INFINITY;
         let mut max = f32::NEG_INFINITY;
         // Track finiteness explicitly: `f32::min`/`max` *ignore* NaN
@@ -258,11 +325,11 @@ impl Codec for QuantizeU8 {
         let range = max - min;
         let step = range / 255.0;
         let inv = if range > 0.0 { 255.0 / range } else { 0.0 };
-        let codes = payload
-            .as_slice()
-            .iter()
-            .map(|&v| ((v - min) * inv).round().clamp(0.0, 255.0) as u8)
-            .collect();
+        let xs = payload.as_slice();
+        let codes: PoolVec<u8> = body_from_fn(pool, xs.len(), |i| {
+            ((xs[i] - min) * inv).round().clamp(0.0, 255.0) as u8
+        });
+        // The consumed snapshot drops here; pooled storage recycles.
         EncodedPayload::QuantU8 { min, step, codes }
     }
 }
@@ -271,7 +338,9 @@ impl Codec for QuantizeU8 {
 ///
 /// The decode side is fused into [`EncodedPayload::blend_into`] — the
 /// absorb transition never materializes a dense intermediate for the
-/// sparse/quantized forms.
+/// sparse/quantized forms.  Every body lives in pool-recyclable storage:
+/// dropping a payload whose buffers came from a [`BufferPool`] returns
+/// their capacity for the next exchange.
 #[derive(Clone, Debug, PartialEq)]
 pub enum EncodedPayload {
     /// Raw `f32` coordinates (also the fallback the other codecs degrade
@@ -281,11 +350,15 @@ pub enum EncodedPayload {
     /// indices are strictly ascending and unique.
     TopK {
         len: usize,
-        indices: Vec<u32>,
-        values: Vec<f32>,
+        indices: PoolVec<u32>,
+        values: PoolVec<f32>,
     },
     /// Affine u8: `value_i = min + step · codes[i]`.
-    QuantU8 { min: f32, step: f32, codes: Vec<u8> },
+    QuantU8 {
+        min: f32,
+        step: f32,
+        codes: PoolVec<u8>,
+    },
 }
 
 impl EncodedPayload {
@@ -325,24 +398,36 @@ impl EncodedPayload {
         }
     }
 
-    /// Materialize a dense vector.  For [`EncodedPayload::TopK`] the
-    /// unlisted coordinates decode to 0 — that is the *serialization*
-    /// round trip, not the absorb semantics (absorb leaves them alone;
-    /// use [`EncodedPayload::blend_into`]).
-    pub fn decode(&self) -> FlatVec {
+    /// Materialize into a caller-owned slice of exactly `coord_count()`
+    /// elements — the allocation-free decode used by queue coalescing's
+    /// pooled scratch.  For [`EncodedPayload::TopK`] the unlisted
+    /// coordinates decode to 0 — that is the *serialization* round trip,
+    /// not the absorb semantics (absorb leaves them alone; use
+    /// [`EncodedPayload::blend_into`]).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.coord_count(), "decode target vs payload");
         match self {
-            EncodedPayload::Dense(v) => v.clone(),
-            EncodedPayload::TopK { len, indices, values } => {
-                let mut out = vec![0.0f32; *len];
-                for (&i, &v) in indices.iter().zip(values) {
+            EncodedPayload::Dense(v) => out.copy_from_slice(v.as_slice()),
+            EncodedPayload::TopK { indices, values, .. } => {
+                out.fill(0.0);
+                for (&i, &v) in indices.iter().zip(values.iter()) {
                     out[i as usize] = v;
                 }
-                FlatVec::from_vec(out)
             }
-            EncodedPayload::QuantU8 { min, step, codes } => FlatVec::from_vec(
-                codes.iter().map(|&c| min + step * c as f32).collect(),
-            ),
+            EncodedPayload::QuantU8 { min, step, codes } => {
+                for (o, &c) in out.iter_mut().zip(codes.iter()) {
+                    *o = min + step * c as f32;
+                }
+            }
         }
+    }
+
+    /// Materialize a fresh dense vector ([`EncodedPayload::decode_into`]
+    /// with its own allocation; tests and cold paths).
+    pub fn decode(&self) -> FlatVec {
+        let mut out = FlatVec::zeros(self.coord_count());
+        self.decode_into(out.as_mut_slice());
+        out
     }
 
     /// The absorb kernel: blend this payload into the shard's coordinate
@@ -354,13 +439,13 @@ impl EncodedPayload {
         match self {
             EncodedPayload::Dense(v) => tensor::mix_into(x, v.as_slice(), t),
             EncodedPayload::TopK { indices, values, .. } => {
-                for (&i, &v) in indices.iter().zip(values) {
+                for (&i, &v) in indices.iter().zip(values.iter()) {
                     let xi = &mut x[i as usize];
                     *xi += t * (v - *xi);
                 }
             }
             EncodedPayload::QuantU8 { min, step, codes } => {
-                for (xi, &c) in x.iter_mut().zip(codes) {
+                for (xi, &c) in x.iter_mut().zip(codes.iter()) {
                     let v = min + step * c as f32;
                     *xi += t * (v - *xi);
                 }
@@ -487,8 +572,8 @@ mod tests {
         match &enc {
             EncodedPayload::TopK { len, indices, values } => {
                 assert_eq!(*len, 6);
-                assert_eq!(indices, &[1, 3], "largest magnitudes, ascending");
-                assert_eq!(values, &[-5.0, 4.0], "exact current values");
+                assert_eq!(indices.as_slice(), &[1, 3], "largest magnitudes, ascending");
+                assert_eq!(values.as_slice(), &[-5.0, 4.0], "exact current values");
             }
             other => panic!("expected sparse payload, got {other:?}"),
         }
@@ -508,7 +593,7 @@ mod tests {
         let mut drift = 0.0f32;
         let first = TopK { k }.encode(FlatVec::from_vec(vec![10.0, 0.0, drift]), &mut residual);
         match first {
-            EncodedPayload::TopK { ref indices, .. } => assert_eq!(indices, &[0]),
+            EncodedPayload::TopK { ref indices, .. } => assert_eq!(indices.as_slice(), &[0]),
             _ => panic!(),
         }
         let mut shipped2 = false;
@@ -516,8 +601,8 @@ mod tests {
             drift += 0.4;
             let enc = TopK { k }.encode(FlatVec::from_vec(vec![10.0, 0.0, drift]), &mut residual);
             if let EncodedPayload::TopK { indices, values, .. } = enc {
-                if indices == [2] {
-                    assert_eq!(values, vec![drift], "exact value at ship time");
+                if indices.as_slice() == [2] {
+                    assert_eq!(values.as_slice(), &[drift], "exact value at ship time");
                     shipped2 = true;
                     break;
                 }
@@ -547,7 +632,7 @@ mod tests {
                 assert!(w[0] < w[1], "indices ascending and unique");
             }
             let mut sparse = vec![false; n];
-            for (&i, &v) in indices.iter().zip(values) {
+            for (&i, &v) in indices.iter().zip(values.iter()) {
                 assert_eq!(v, payload.as_slice()[i as usize], "exact at shipped coords");
                 assert_eq!(residual[i as usize], v, "buffer snapshots the ship");
                 sparse[i as usize] = true;
@@ -608,5 +693,93 @@ mod tests {
         assert!(QuantizeU8.encode(payload.clone(), &mut []).coalescible());
         let mut residual = vec![0.0f32; 8];
         assert!(!TopK { k: 2 }.encode(payload, &mut residual).coalescible());
+    }
+
+    #[test]
+    fn topk_selection_matches_sort_based_reference() {
+        // The O(n) `select_nth_unstable_by` pick must produce exactly the
+        // output of the straightforward full-sort reference: sort every
+        // index by descending |x - shipped| score, keep the first k, ship
+        // them in ascending index order with exact current values.
+        check("topk selection == full-sort reference", 40, |rng| {
+            let n = 4 + rng.below(300) as usize;
+            let k = 1 + rng.below(n as u64 - 1) as usize;
+            let payload = randn(rng, n);
+            let shipped: Vec<f32> = randn(rng, n).into_vec();
+            let xs = payload.as_slice();
+
+            // Reference: full sort (descending score, total order).
+            let score = |i: u32| (xs[i as usize] - shipped[i as usize]).abs();
+            let mut by_score: Vec<u32> = (0..n as u32).collect();
+            by_score.sort_by(|&a, &b| score(b).total_cmp(&score(a)));
+            let mut want_idx: Vec<u32> = by_score[..k].to_vec();
+            want_idx.sort_unstable();
+            let want_val: Vec<f32> = want_idx.iter().map(|&i| xs[i as usize]).collect();
+            let mut want_residual = shipped.clone();
+            for (&i, &v) in want_idx.iter().zip(&want_val) {
+                want_residual[i as usize] = v;
+            }
+
+            let mut residual = shipped.clone();
+            match (TopK { k }).encode(payload, &mut residual) {
+                EncodedPayload::TopK { len, indices, values } => {
+                    assert_eq!(len, n);
+                    assert_eq!(indices.as_slice(), want_idx.as_slice(), "n={n} k={k}");
+                    assert_eq!(values.as_slice(), want_val.as_slice(), "n={n} k={k}");
+                    assert_eq!(residual, want_residual, "n={n} k={k}");
+                }
+                other => panic!("expected sparse payload, got {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn pooled_encode_is_byte_identical_to_unpooled() {
+        // Pooling is storage, not semantics: the encoded body must be
+        // identical with and without a pool, for every codec.
+        let pool = BufferPool::shared();
+        let mut rng = Rng::new(0xB0);
+        let n = 257;
+        let payload = randn(&mut rng, n);
+        for spec in [CodecSpec::Dense, CodecSpec::TopK { k: 9 }, CodecSpec::QuantizeU8] {
+            let codec = spec.build();
+            let mut r1 = vec![0.5f32; n];
+            let mut r2 = r1.clone();
+            let plain = codec.encode_with(payload.clone(), &mut r1, None);
+            let pooled = codec.encode_with(payload.clone(), &mut r2, Some(&pool));
+            assert_eq!(plain, pooled, "{}", spec.label());
+            assert_eq!(r1, r2, "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn pooled_encode_recycles_the_consumed_snapshot() {
+        // The snapshot handed to a compressing codec dies inside encode;
+        // its storage must come back out of the pool for the next one.
+        let pool = BufferPool::shared();
+        let n = 64;
+        let snap = FlatVec::pooled(&pool, n);
+        let ptr = snap.as_slice().as_ptr();
+        let enc = QuantizeU8.encode_with(snap, &mut [], Some(&pool));
+        assert!(matches!(enc, EncodedPayload::QuantU8 { .. }));
+        assert!(pool.stats().recycled >= 1, "snapshot storage not recycled");
+        let next = FlatVec::pooled(&pool, n);
+        assert_eq!(next.as_slice().as_ptr(), ptr, "next snapshot reuses storage");
+    }
+
+    #[test]
+    fn decode_into_matches_decode_for_every_codec() {
+        check("decode_into == decode", 20, |rng| {
+            let n = 2 + rng.below(200) as usize;
+            let payload = randn(rng, n);
+            let mut residual = vec![0.0f32; n];
+            for spec in [CodecSpec::Dense, CodecSpec::TopK { k: 3 }, CodecSpec::QuantizeU8] {
+                let enc = spec.build().encode(payload.clone(), &mut residual);
+                let dec = enc.decode();
+                let mut out = vec![7.0f32; enc.coord_count()];
+                enc.decode_into(&mut out);
+                assert_eq!(out.as_slice(), dec.as_slice(), "{}", spec.label());
+            }
+        });
     }
 }

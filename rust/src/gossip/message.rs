@@ -1,10 +1,16 @@
 //! The gossip message: `(x_s, w_s)` plus accounting metadata.
 //!
 //! The paper (section 4.1) encapsulates the sender's parameter vector and
-//! its halved weight in a single message.  The payload is shared via `Arc`
-//! so pushing one snapshot to several queues (or keeping it in a queue
-//! while the sender keeps training) never copies the vector — a real
-//! concern at 10⁶-10⁸ floats.
+//! its halved weight in a single message.  The payload body is owned
+//! directly by the message: the protocol is strictly point-to-point (one
+//! emit produces one message for one receiver's queue), so there is
+//! nothing to share — and owning the body keeps the steady-state hot path
+//! allocation-free: the [`EncodedPayload`] travels by move from
+//! `emit` through the queue to `absorb`, and when the receiver drops the
+//! message, pool-backed storage flows back to the
+//! [`BufferPool`](crate::tensor::BufferPool) it came from.  (Earlier
+//! revisions wrapped the body in an `Arc`, which cost one heap allocation
+//! per message for sharing no production path used.)
 //!
 //! With sharded exchange ([`crate::gossip::shard`]) a message may carry
 //! only one contiguous slice of the vector; the `shard` field records
@@ -18,8 +24,6 @@
 //! encoded bytes actually shipped while [`Message::raw_wire_bytes`] keeps
 //! the uncompressed cost for compression-ratio accounting.
 
-use std::sync::Arc;
-
 use crate::gossip::codec::EncodedPayload;
 use crate::gossip::shard::Shard;
 use crate::gossip::weights::SumWeight;
@@ -30,8 +34,9 @@ use crate::tensor::FlatVec;
 pub struct Message {
     /// The shard's coordinates at send time, in wire (encoded) form — the
     /// whole vector for a full message, or `shard.len` coordinates for a
-    /// shard.
-    pub payload: Arc<EncodedPayload>,
+    /// shard.  Owned: dropping the message releases (or pool-recycles)
+    /// the body storage.
+    pub payload: EncodedPayload,
     /// The sender's halved (shard-local) weight shipped with the snapshot.
     pub weight: SumWeight,
     /// Worker id of the sender (diagnostics / staleness accounting).
@@ -45,7 +50,7 @@ pub struct Message {
 impl Message {
     /// Whole-vector message (the paper's protocol).
     pub fn new(
-        payload: Arc<EncodedPayload>,
+        payload: EncodedPayload,
         weight: SumWeight,
         sender: usize,
         sent_at_step: u64,
@@ -56,13 +61,13 @@ impl Message {
 
     /// Whole-vector message with an uncompressed body (tests / benches).
     pub fn dense(params: FlatVec, weight: SumWeight, sender: usize, sent_at_step: u64) -> Self {
-        Message::new(Arc::new(EncodedPayload::Dense(params)), weight, sender, sent_at_step)
+        Message::new(EncodedPayload::Dense(params), weight, sender, sent_at_step)
     }
 
     /// Shard message: `payload` covers exactly the shard's `shard.len`
     /// coordinates.
     pub fn for_shard(
-        payload: Arc<EncodedPayload>,
+        payload: EncodedPayload,
         weight: SumWeight,
         sender: usize,
         sent_at_step: u64,
@@ -121,6 +126,7 @@ mod tests {
     use super::*;
     use crate::gossip::codec::{Codec, QuantizeU8, TopK};
     use crate::gossip::shard::ShardPlan;
+    use crate::tensor::BufferPool;
 
     fn msg(n: usize, sent: u64) -> Message {
         Message::dense(FlatVec::zeros(n), SumWeight::from_value(0.5), 3, sent)
@@ -145,7 +151,7 @@ mod tests {
         let plan = ShardPlan::new(1000, 4);
         let shard = plan.shard(1);
         let m = Message::for_shard(
-            Arc::new(EncodedPayload::Dense(FlatVec::zeros(shard.len))),
+            EncodedPayload::Dense(FlatVec::zeros(shard.len)),
             SumWeight::from_value(0.25),
             0,
             0,
@@ -162,7 +168,7 @@ mod tests {
         let shard = plan.shard(0);
         let payload = FlatVec::zeros(shard.len);
         let q8 = Message::for_shard(
-            Arc::new(QuantizeU8.encode(payload.clone(), &mut [])),
+            QuantizeU8.encode(payload.clone(), &mut []),
             SumWeight::from_value(0.25),
             0,
             0,
@@ -173,7 +179,7 @@ mod tests {
         assert!(q8.raw_wire_bytes() >= 3 * q8.wire_bytes());
         let mut residual = vec![0.0f32; shard.len];
         let topk = Message::for_shard(
-            Arc::new(TopK { k: 16 }.encode(payload, &mut residual)),
+            TopK { k: 16 }.encode(payload, &mut residual),
             SumWeight::from_value(0.25),
             0,
             0,
@@ -187,7 +193,7 @@ mod tests {
     fn shard_payload_length_must_match_descriptor() {
         let plan = ShardPlan::new(100, 4);
         Message::for_shard(
-            Arc::new(EncodedPayload::Dense(FlatVec::zeros(7))),
+            EncodedPayload::Dense(FlatVec::zeros(7)),
             SumWeight::from_value(0.25),
             0,
             0,
@@ -203,11 +209,16 @@ mod tests {
     }
 
     #[test]
-    fn arc_payload_is_shared_not_copied() {
-        let payload = Arc::new(EncodedPayload::Dense(FlatVec::zeros(1 << 20)));
-        let a = Message::new(payload.clone(), SumWeight::from_value(0.1), 0, 0);
-        let b = a.clone();
-        assert!(Arc::ptr_eq(&a.payload, &b.payload));
-        assert_eq!(Arc::strong_count(&payload), 3);
+    fn dropping_a_message_recycles_pooled_payload_storage() {
+        // The receive side of the zero-allocation contract: a message
+        // whose body came from the pool hands the capacity back on drop.
+        let pool = BufferPool::shared();
+        let body = FlatVec::pooled(&pool, 4096);
+        let ptr = body.as_slice().as_ptr();
+        let m = Message::dense(body, SumWeight::from_value(0.1), 0, 0);
+        drop(m);
+        assert_eq!(pool.stats().recycled, 1);
+        let next = FlatVec::pooled(&pool, 4096);
+        assert_eq!(next.as_slice().as_ptr(), ptr, "payload storage reused");
     }
 }

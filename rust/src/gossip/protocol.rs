@@ -71,7 +71,7 @@ use crate::gossip::message::{encoded_wire_bytes, wire_bytes_for, Message};
 use crate::gossip::shard::{Shard, ShardPlan};
 use crate::gossip::topology::{TopologyRef, TopologySpec};
 use crate::gossip::weights::SumWeight;
-use crate::tensor::FlatVec;
+use crate::tensor::{BufferPool, FlatVec};
 use crate::util::rng::Rng;
 
 /// One worker's protocol state machine.
@@ -104,6 +104,12 @@ pub struct ProtocolCore {
     /// the last-shipped snapshot of each shard's coordinates).  Empty for
     /// stateless codecs.
     residuals: Vec<FlatVec>,
+    /// Recycled-buffer source for emit snapshots and encoded bodies
+    /// (`None` = plain allocation).  Shared by every core of a runtime so
+    /// a buffer freed by one worker is reusable by any other.  Pure
+    /// storage: with or without a pool the core computes bit-identical
+    /// results.
+    pool: Option<Arc<BufferPool>>,
 }
 
 /// The send-side product of one gossip event: everything a runtime needs
@@ -134,18 +140,13 @@ impl Outbound {
     }
 
     /// Wrap into a queueable [`Message`] (`sender` in the runtime's own id
-    /// space — it is metadata only).
+    /// space — it is metadata only).  A pure move: the payload body is
+    /// not copied and nothing is allocated.
     pub fn into_message(self, sender: usize, sent_at_step: u64) -> Message {
         if self.shard.is_full() {
-            Message::new(Arc::new(self.payload), self.weight, sender, sent_at_step)
+            Message::new(self.payload, self.weight, sender, sent_at_step)
         } else {
-            Message::for_shard(
-                Arc::new(self.payload),
-                self.weight,
-                sender,
-                sent_at_step,
-                self.shard,
-            )
+            Message::for_shard(self.payload, self.weight, sender, sent_at_step, self.shard)
         }
     }
 }
@@ -198,6 +199,7 @@ impl ProtocolCore {
             steps: 0,
             codec: CodecSpec::Dense.build(),
             residuals: Vec::new(),
+            pool: None,
         })
     }
 
@@ -205,6 +207,25 @@ impl ProtocolCore {
     pub fn with_codec(mut self, spec: CodecSpec) -> Self {
         self.set_codec(spec);
         self
+    }
+
+    /// Builder form of [`ProtocolCore::set_pool`].
+    pub fn with_pool(mut self, pool: Arc<BufferPool>) -> Self {
+        self.set_pool(pool);
+        self
+    }
+
+    /// Attach a buffer pool: emit snapshots and encoded bodies draw from
+    /// (and retire to) recycled storage, making the steady-state exchange
+    /// allocation-free.  Safe at any time — the pool never affects the
+    /// numbers, only where the bytes live.
+    pub fn set_pool(&mut self, pool: Arc<BufferPool>) {
+        self.pool = Some(pool);
+    }
+
+    /// The attached buffer pool, if any.
+    pub fn pool(&self) -> Option<&Arc<BufferPool>> {
+        self.pool.as_ref()
     }
 
     // ---- accessors -------------------------------------------------------
@@ -472,6 +493,11 @@ impl ProtocolCore {
     /// [`ProtocolCore::emit`] with the gate and peer pick already decided.
     /// The raw shard snapshot runs through the configured codec (updating
     /// any per-shard encoder state) before it leaves the core.
+    ///
+    /// With a pool attached ([`ProtocolCore::set_pool`]) the snapshot is
+    /// copied into recycled storage instead of a fresh `clone()`/`to_vec`
+    /// allocation, and the codec's output buffers are recycled the same
+    /// way — the whole steady-state emit performs zero heap allocations.
     pub fn emit_to(&mut self, x: &FlatVec, to: usize) -> Result<Outbound> {
         if x.len() != self.plan.dim() {
             return Err(Error::shape(format!(
@@ -481,16 +507,21 @@ impl ProtocolCore {
             )));
         }
         let (shard, shipped) = self.begin_send();
-        let raw = if shard.is_full() {
-            x.clone()
-        } else {
-            FlatVec::from_vec(x.as_slice()[shard.offset..shard.offset + shard.len].to_vec())
+        let raw = match &self.pool {
+            Some(pool) => FlatVec::pooled_copy(
+                pool,
+                &x.as_slice()[shard.offset..shard.offset + shard.len],
+            ),
+            None if shard.is_full() => x.clone(),
+            None => {
+                FlatVec::from_vec(x.as_slice()[shard.offset..shard.offset + shard.len].to_vec())
+            }
         };
         let residual: &mut [f32] = match self.residuals.get_mut(shard.index) {
             Some(r) => r.as_mut_slice(),
             None => &mut [],
         };
-        let payload = self.codec.encode(raw, residual);
+        let payload = self.codec.encode_with(raw, residual, self.pool.as_ref());
         Ok(Outbound { to, shard, weight: shipped, payload })
     }
 }
@@ -843,6 +874,51 @@ mod tests {
                 }
             }
         }
+    }
+
+    // ---- pooled hot path -------------------------------------------------
+
+    #[test]
+    fn pooled_emit_is_bit_identical_to_unpooled() {
+        // Pooling is storage, not semantics: the same core config with and
+        // without a pool produces identical outbound messages and weights.
+        let dim = 48;
+        let x = FlatVec::from_vec((0..dim).map(|i| (i as f32).sin()).collect());
+        for codec in [CodecSpec::Dense, CodecSpec::QuantizeU8, CodecSpec::TopK { k: 3 }] {
+            let pool = BufferPool::shared();
+            let mut plain = core(0, 4, dim, 1.0, 3).with_codec(codec);
+            let mut pooled = core(0, 4, dim, 1.0, 3).with_codec(codec).with_pool(pool);
+            for _ in 0..7 {
+                let a = plain.emit_to(&x, 1).unwrap();
+                let b = pooled.emit_to(&x, 1).unwrap();
+                assert_eq!(a.shard, b.shard);
+                assert_eq!(a.weight.value(), b.weight.value());
+                assert_eq!(a.payload, b.payload, "codec {codec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_emit_recycles_snapshot_storage_across_sends() {
+        let dim = 32;
+        let pool = BufferPool::shared();
+        let x = FlatVec::from_vec(vec![1.0; dim]);
+        let mut c = core(0, 2, dim, 1.0, 1).with_pool(pool.clone());
+        assert!(c.pool().is_some());
+        // First send: cold pool, fresh buffer.
+        let out = c.emit_to(&x, 1).unwrap();
+        assert_eq!(pool.stats().hits, 0);
+        drop(out); // payload storage retires to the pool
+        assert_eq!(pool.stats().recycled, 1);
+        // Second send: the snapshot comes straight off the freelist.
+        let out = c.emit_to(&x, 1).unwrap();
+        assert_eq!(pool.stats().hits, 1);
+        // And absorbing it returns the storage once more.
+        let mut receiver = core(1, 2, dim, 1.0, 1).with_pool(pool.clone());
+        let mut xr = FlatVec::zeros(dim);
+        receiver.absorb(&mut xr, out.shard, &out.payload, out.weight).unwrap();
+        drop(out);
+        assert_eq!(pool.stats().recycled, 2);
     }
 
     #[test]

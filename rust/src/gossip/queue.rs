@@ -11,32 +11,39 @@
 //! * **FIFO** per queue — messages blend in arrival order.
 //!
 //! Implementation: `Mutex<VecDeque>`; the lock is held for O(1) pointer
-//! moves only (payloads are `Arc`ed), so contention is negligible compared
-//! to a gradient step.  An optional bound sheds the *oldest* message on
-//! overflow — under sum-weight semantics dropping a message would destroy
-//! weight mass, so instead of dropping, `push` coalesces: overflow folds
-//! the oldest two *compatible* messages into one blended message,
-//! preserving total weight exactly.  With sharded exchange, "compatible"
-//! means covering the same coordinate range (same
-//! [`Shard::key`](crate::gossip::Shard::key)): the shard-wise blend is
-//! associative, so folding same-shard messages leaves the receiver's final
-//! state unchanged, while folding across shards would mix unrelated
-//! coordinates.  With payload codecs, both messages must additionally be
-//! [`EncodedPayload::coalescible`]: dense and quantized bodies fold by
-//! (de)coding — the dequantize-blend is deterministic, so the fold equals
-//! sequential processing — while sparse top-k bodies never fold (they
-//! carry no value for unlisted coordinates, so any dense stand-in would
-//! corrupt the receiver's "keep your own value" semantics).  If no two
-//! queued messages are compatible the queue is allowed to exceed its
-//! bound (tracked in the `over_capacity` stat) rather than lose mass.
+//! moves only (payload bodies move, they are never copied), so contention
+//! is negligible compared to a gradient step.  The steady-state drain path
+//! is [`MessageQueue::drain_into`], which refills a caller-owned `Vec` —
+//! after warm-up neither push nor drain touches the heap, which is what
+//! the hot-path allocation bench pins.
+//!
+//! An optional bound sheds the *oldest* message on overflow — under
+//! sum-weight semantics dropping a message would destroy weight mass, so
+//! instead of dropping, `push` coalesces: overflow folds the oldest two
+//! *compatible* messages into one blended message, preserving total weight
+//! exactly.  With sharded exchange, "compatible" means covering the same
+//! coordinate range (same [`Shard::key`](crate::gossip::Shard::key)): the
+//! shard-wise blend is associative, so folding same-shard messages leaves
+//! the receiver's final state unchanged, while folding across shards would
+//! mix unrelated coordinates.  With payload codecs, both messages must
+//! additionally be [`EncodedPayload::coalescible`]: dense and quantized
+//! bodies fold by (de)coding — the dequantize-blend is deterministic, so
+//! the fold equals sequential processing — while sparse top-k bodies never
+//! fold (they carry no value for unlisted coordinates, so any dense
+//! stand-in would corrupt them).  A fold that must decode an encoded body
+//! takes its dense scratch from the queue's [`BufferPool`]
+//! ([`MessageQueue::with_pool`]) when one is attached, so even overflow
+//! coalescing stays allocation-free once warm.  If no two queued messages
+//! are compatible the queue is allowed to exceed its bound (tracked in the
+//! `over_capacity` stat) rather than lose mass.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::gossip::codec::EncodedPayload;
 use crate::gossip::message::Message;
 use crate::gossip::weights::SumWeight;
-use crate::tensor::FlatVec;
+use crate::tensor::{BufferPool, FlatVec};
 
 /// Statistics counters for one queue (all monotonic).
 #[derive(Debug, Default, Clone, Copy)]
@@ -55,6 +62,8 @@ pub struct QueueStats {
 pub struct MessageQueue {
     inner: Mutex<Inner>,
     capacity: Option<usize>,
+    /// Recycled-buffer source for coalesce scratch (None = plain alloc).
+    pool: Option<Arc<BufferPool>>,
 }
 
 #[derive(Debug)]
@@ -69,6 +78,7 @@ impl MessageQueue {
         MessageQueue {
             inner: Mutex::new(Inner { deque: VecDeque::new(), stats: QueueStats::default() }),
             capacity: None,
+            pool: None,
         }
     }
 
@@ -78,7 +88,15 @@ impl MessageQueue {
         MessageQueue {
             inner: Mutex::new(Inner { deque: VecDeque::new(), stats: QueueStats::default() }),
             capacity: Some(capacity),
+            pool: None,
         }
+    }
+
+    /// Attach a buffer pool: coalesce folds that need a dense scratch
+    /// draw it from here instead of allocating.
+    pub fn with_pool(mut self, pool: Arc<BufferPool>) -> Self {
+        self.pool = Some(pool);
+        self
     }
 
     /// Non-blocking push (paper `PushMessage`). Never fails, never waits.
@@ -95,7 +113,7 @@ impl MessageQueue {
                 if let Some((i, j)) = oldest_compatible_pair(&g.deque) {
                     let b = g.deque.remove(j).expect("index in range");
                     let a = g.deque.remove(i).expect("index in range");
-                    g.deque.insert(i, coalesce(a, b));
+                    g.deque.insert(i, coalesce(a, b, self.pool.as_ref()));
                     g.stats.coalesced += 1;
                 } else {
                     // No two messages share a shard: folding would corrupt
@@ -112,11 +130,20 @@ impl MessageQueue {
         }
     }
 
-    /// Drain everything currently queued (paper `ProcessMessages`).
-    pub fn drain(&self) -> Vec<Message> {
+    /// Drain everything currently queued into a caller-owned buffer
+    /// (paper `ProcessMessages`).  The steady-state path: the caller
+    /// reuses the same `Vec` across wakes, so neither side of the
+    /// exchange allocates once capacities are warm.
+    pub fn drain_into(&self, out: &mut Vec<Message>) {
         let mut g = self.inner.lock().expect("queue poisoned");
-        let out: Vec<Message> = g.deque.drain(..).collect();
-        g.stats.drained += out.len() as u64;
+        g.stats.drained += g.deque.len() as u64;
+        out.extend(g.deque.drain(..));
+    }
+
+    /// Drain into a fresh `Vec` (tests / cold paths).
+    pub fn drain(&self) -> Vec<Message> {
+        let mut out = Vec::new();
+        self.drain_into(&mut out);
         out
     }
 
@@ -153,17 +180,17 @@ fn oldest_compatible_pair(deque: &VecDeque<Message>) -> Option<(usize, usize)> {
 }
 
 /// Fold message `a` into message `b` preserving total weight: the combined
-/// payload is the sum-weight blend of the two decoded payloads (a dense
-/// body).  Both messages must cover the same shard and be coalescible —
-/// quantized bodies fold via their deterministic dequantization, which is
-/// exactly what the receiver would have blended one at a time.
+/// payload is the sum-weight blend of the two payloads (a dense body).
+/// Both messages must cover the same shard and be coalescible — quantized
+/// bodies fold via their deterministic dequantization, which is exactly
+/// what the receiver would have blended one at a time.
 ///
-/// When the queue is the sole owner of a dense payload — the common case
-/// once the sender has dropped its snapshot — the blend runs *in place* on
-/// `a`'s buffer (`Arc::try_unwrap`); only a still-shared payload is cloned
-/// (and an encoded one decoded), so another holder of the snapshot never
-/// observes the fold.
-fn coalesce(a: Message, b: Message) -> Message {
+/// A dense `a` blends *in place* on its own (possibly pooled) buffer; an
+/// encoded `a` decodes into a scratch buffer drawn from `pool` when one
+/// is attached.  `b`'s body blends through the fused
+/// [`EncodedPayload::blend_into`] kernel, so no second dense intermediate
+/// ever exists, and both original bodies' storage recycles on drop.
+fn coalesce(a: Message, b: Message, pool: Option<&Arc<BufferPool>>) -> Message {
     debug_assert_eq!(a.shard.key(), b.shard.key(), "coalescing across shards");
     debug_assert!(
         a.payload.coalescible() && b.payload.coalescible(),
@@ -171,19 +198,23 @@ fn coalesce(a: Message, b: Message) -> Message {
     );
     let w_a = a.weight.value();
     let w_b = b.weight.value();
-    let mut blended: FlatVec = match std::sync::Arc::try_unwrap(a.payload) {
-        Ok(EncodedPayload::Dense(v)) => v,
-        Ok(other) => other.decode(),
-        Err(shared) => shared.decode(),
+    let mut blended: FlatVec = match a.payload {
+        EncodedPayload::Dense(v) => v,
+        other => {
+            let mut scratch = match pool {
+                Some(pool) => FlatVec::pooled(pool, other.coord_count()),
+                None => FlatVec::zeros(other.coord_count()),
+            };
+            other.decode_into(scratch.as_mut_slice());
+            scratch
+        }
     };
-    // blended <- (w_a * a + w_b * b) / (w_a + w_b)
-    match &*b.payload {
-        EncodedPayload::Dense(v) => blended.mix_from(v, w_a, w_b),
-        other => blended.mix_from(&other.decode(), w_a, w_b),
-    }
-    .expect("coalesce: length mismatch inside one queue");
+    // blended <- (w_a * a + w_b * b) / (w_a + w_b): the same fused
+    // x += t (y - x) pass the receiver would run, t = w_b / (w_a + w_b).
+    let t = (w_b / (w_a + w_b)) as f32;
+    b.payload.blend_into(blended.as_mut_slice(), t);
     Message::for_shard(
-        std::sync::Arc::new(EncodedPayload::Dense(blended)),
+        EncodedPayload::Dense(blended),
         SumWeight::from_value(w_a + w_b),
         b.sender,
         b.sent_at_step,
@@ -232,6 +263,35 @@ mod tests {
     }
 
     #[test]
+    fn drain_into_reuses_the_caller_buffer() {
+        let q = MessageQueue::unbounded();
+        let mut inbox: Vec<Message> = Vec::with_capacity(8);
+        for round in 0..5 {
+            for i in 0..3 {
+                q.push(msg(i as f32, 0.1, i));
+            }
+            q.drain_into(&mut inbox);
+            assert_eq!(inbox.len(), 3, "round {round}");
+            let cap = inbox.capacity();
+            inbox.clear();
+            assert_eq!(inbox.capacity(), cap, "capacity survives the clear");
+        }
+        let s = q.stats();
+        assert_eq!(s.pushed, 15);
+        assert_eq!(s.drained, 15);
+    }
+
+    #[test]
+    fn drain_into_appends_after_existing_elements() {
+        let q = MessageQueue::unbounded();
+        q.push(msg(2.0, 0.1, 0));
+        let mut inbox = vec![msg(1.0, 0.1, 9)];
+        q.drain_into(&mut inbox);
+        let vals: Vec<f32> = inbox.iter().map(first_coord).collect();
+        assert_eq!(vals, vec![1.0, 2.0]);
+    }
+
+    #[test]
     fn stats_track_push_drain() {
         let q = MessageQueue::unbounded();
         for i in 0..5 {
@@ -275,7 +335,7 @@ mod tests {
 
         let mut folded = FlatVec::from_vec(vec![10.0; 8]);
         let mut w_folded = SumWeight::from_value(0.5);
-        let c = coalesce(msg(2.0, 0.25, 0), msg(6.0, 0.25, 1));
+        let c = coalesce(msg(2.0, 0.25, 0), msg(6.0, 0.25, 1), None);
         let t = w_folded.absorb(c.weight);
         folded.mix_from(c.payload.as_dense().unwrap(), 1.0 - t, t).unwrap();
 
@@ -297,7 +357,7 @@ mod tests {
         let mk = |k: usize, val: f32, w: f64| {
             let shard = plan.shard(k);
             Message::for_shard(
-                Arc::new(EncodedPayload::Dense(FlatVec::from_vec(vec![val; shard.len]))),
+                EncodedPayload::Dense(FlatVec::from_vec(vec![val; shard.len])),
                 SumWeight::from_value(w),
                 0,
                 0,
@@ -323,7 +383,7 @@ mod tests {
         for k in 0..3 {
             let shard = plan3.shard(k);
             q.push(Message::for_shard(
-                Arc::new(EncodedPayload::Dense(FlatVec::zeros(shard.len))),
+                EncodedPayload::Dense(FlatVec::zeros(shard.len)),
                 SumWeight::from_value(0.1),
                 0,
                 0,
@@ -355,10 +415,7 @@ mod tests {
                 let w = rng.f64() + 1e-6;
                 *pushed.entry(shard.key()).or_insert(0.0) += w;
                 q.push(Message::for_shard(
-                    Arc::new(EncodedPayload::Dense(FlatVec::from_vec(vec![
-                        i as f32;
-                        shard.len
-                    ]))),
+                    EncodedPayload::Dense(FlatVec::from_vec(vec![i as f32; shard.len])),
                     SumWeight::from_value(w),
                     i % 4,
                     i as u64,
@@ -388,32 +445,45 @@ mod tests {
 
     #[test]
     fn coalesce_reuses_a_uniquely_owned_payload_buffer() {
-        // Sole owner: the fold blends into `a`'s existing buffer instead
-        // of cloning a full vector — the heap allocation survives the fold.
+        // Dense fold: the blend runs in place on `a`'s existing buffer
+        // instead of touching the heap — the allocation survives the fold.
         let a = msg(2.0, 0.25, 0);
         let ptr = a.payload.as_dense().unwrap().as_slice().as_ptr();
         let b = msg(6.0, 0.25, 1);
-        let c = coalesce(a, b);
+        let c = coalesce(a, b, None);
         let folded = c.payload.as_dense().unwrap();
         assert!((folded.as_slice()[0] - 4.0).abs() < 1e-6);
         assert_eq!(folded.as_slice().as_ptr(), ptr, "expected in-place blend");
     }
 
     #[test]
-    fn coalesce_never_mutates_a_shared_snapshot() {
-        // A sender (or a second queue) still holding the snapshot must not
-        // see the fold: the shared path clones.
-        let shared = Arc::new(EncodedPayload::Dense(FlatVec::from_vec(vec![2.0; 8])));
-        let a = Message::new(shared.clone(), SumWeight::from_value(0.25), 0, 0);
-        let b = msg(6.0, 0.25, 1);
-        let q = MessageQueue::bounded(2);
-        q.push(a);
-        q.push(b);
-        q.push(msg(1.0, 0.5, 2)); // overflow folds the two oldest
+    fn coalesce_of_encoded_bodies_uses_pooled_scratch() {
+        // Folding two q8 bodies needs one dense scratch; with a pool
+        // attached that scratch is recycled storage, and both encoded
+        // bodies' buffers flow back to the pool when the fold drops them.
+        let pool = BufferPool::shared();
+        let n = 64;
+        let body = |val: f32| {
+            QuantizeU8.encode_with(
+                FlatVec::from_vec((0..n).map(|i| val + i as f32).collect()),
+                &mut [],
+                Some(&pool),
+            )
+        };
+        let q = MessageQueue::bounded(2).with_pool(pool.clone());
+        q.push(Message::new(body(0.0), SumWeight::from_value(0.25), 0, 0));
+        q.push(Message::new(body(100.0), SumWeight::from_value(0.25), 1, 0));
+        // Warm the f32 freelist so the fold's scratch is a hit.
+        drop(FlatVec::pooled(&pool, n));
+        let before = pool.stats();
+        q.push(Message::new(body(200.0), SumWeight::from_value(0.5), 2, 0));
         assert_eq!(q.stats().coalesced, 1);
-        for &v in shared.as_dense().unwrap().as_slice() {
-            assert_eq!(v, 2.0, "shared snapshot mutated by coalescing");
-        }
+        let after = pool.stats();
+        assert!(after.hits > before.hits, "fold scratch must come from the pool");
+        assert!(
+            after.recycled > before.recycled,
+            "folded-away encoded bodies must recycle"
+        );
         let total_w: f64 = q.drain().iter().map(|m| m.weight.value()).sum();
         assert!((total_w - 1.0).abs() < 1e-12);
     }
@@ -425,13 +495,13 @@ mod tests {
         // absorbing them one at a time, and the fold's weight is the sum.
         let body = |vals: Vec<f32>| QuantizeU8.encode(FlatVec::from_vec(vals), &mut []);
         let m1 = Message::new(
-            Arc::new(body(vec![2.0, -1.0, 0.5, 8.0])),
+            body(vec![2.0, -1.0, 0.5, 8.0]),
             SumWeight::from_value(0.25),
             0,
             0,
         );
         let m2 = Message::new(
-            Arc::new(body(vec![6.0, 3.0, -2.0, 1.0])),
+            body(vec![6.0, 3.0, -2.0, 1.0]),
             SumWeight::from_value(0.25),
             1,
             0,
@@ -445,7 +515,7 @@ mod tests {
             direct.mix_from(&deq, 1.0 - t, t).unwrap();
         }
 
-        let c = coalesce(m1, m2);
+        let c = coalesce(m1, m2, None);
         assert!(c.payload.as_dense().is_some(), "fold produces a dense body");
         assert!((c.weight.value() - 0.5).abs() < 1e-12);
         let mut folded = FlatVec::from_vec(vec![10.0; 4]);
@@ -469,9 +539,9 @@ mod tests {
             TopK { k: 1 }.encode(FlatVec::from_vec(vals), &mut residual)
         };
         let q = MessageQueue::bounded(2);
-        q.push(Message::new(Arc::new(sparse(vec![1.0; 8])), SumWeight::from_value(0.2), 0, 0));
-        q.push(Message::new(Arc::new(sparse(vec![2.0; 8])), SumWeight::from_value(0.2), 1, 0));
-        q.push(Message::new(Arc::new(sparse(vec![3.0; 8])), SumWeight::from_value(0.2), 2, 0));
+        q.push(Message::new(sparse(vec![1.0; 8]), SumWeight::from_value(0.2), 0, 0));
+        q.push(Message::new(sparse(vec![2.0; 8]), SumWeight::from_value(0.2), 1, 0));
+        q.push(Message::new(sparse(vec![3.0; 8]), SumWeight::from_value(0.2), 2, 0));
         assert_eq!(q.stats().coalesced, 0);
         assert_eq!(q.stats().over_capacity, 1);
         let out = q.drain();
@@ -481,7 +551,7 @@ mod tests {
         // A dense pair behind a sparse head still folds: compatibility is
         // per pair, not per queue.
         let q = MessageQueue::bounded(2);
-        q.push(Message::new(Arc::new(sparse(vec![1.0; 8])), SumWeight::from_value(0.2), 0, 0));
+        q.push(Message::new(sparse(vec![1.0; 8]), SumWeight::from_value(0.2), 0, 0));
         q.push(msg(4.0, 0.2, 1));
         q.push(msg(8.0, 0.2, 2));
         assert_eq!(q.stats().coalesced, 1);

@@ -20,7 +20,7 @@ use crate::gossip::{
     wire_bytes_for, CodecSpec, EncodedPayload, ProtocolCore, Shard, SumWeight, TopologySpec,
 };
 use crate::strategies::grad::GradSource;
-use crate::tensor::FlatVec;
+use crate::tensor::{BufferPool, FlatVec};
 use crate::util::rng::Rng;
 
 /// Cluster timing parameters (seconds).
@@ -288,6 +288,11 @@ pub struct DesEngine {
     weight_decay: f32,
     rng: Rng,
     grad_buf: FlatVec,
+    /// Reusable drain buffer for mailbox processing: swapped with the
+    /// awake worker's mailbox each wake so neither side allocates once
+    /// capacities are warm (absorbed payloads retire to the cores' shared
+    /// buffer pool).
+    mail_scratch: Vec<(Shard, EncodedPayload, f64)>,
     report: DesReport,
 }
 
@@ -307,6 +312,9 @@ impl DesEngine {
     ) -> Result<Self> {
         assert!(workers >= 2);
         let (p, shards) = strategy.core_config();
+        // One shared pool: a payload acquired at any worker's emit is
+        // recycled when the receiving worker absorbs it.
+        let pool = BufferPool::shared();
         let ws = (0..workers)
             .map(|w| {
                 Ok(WorkerState {
@@ -318,7 +326,8 @@ impl DesEngine {
                         p,
                         TopologySpec::UniformRandom,
                         shards,
-                    )?,
+                    )?
+                    .with_pool(pool.clone()),
                     mailbox: Vec::new(),
                     at_barrier: false,
                     alive: true,
@@ -345,6 +354,7 @@ impl DesEngine {
             weight_decay,
             rng: Rng::new(seed),
             grad_buf: FlatVec::zeros(init.len()),
+            mail_scratch: Vec::new(),
             report: DesReport::default(),
         })
     }
@@ -533,10 +543,15 @@ impl DesEngine {
         }
         // 1. Process pending messages (GoSGD ProcessMessages): the core
         //    blends each shard range against that shard's sum weight.
-        let pending = std::mem::take(&mut self.workers[w].mailbox);
+        //    The mailbox is swapped against a reusable scratch buffer —
+        //    no fresh Vec per wake — and each absorbed payload's pooled
+        //    storage retires for the next emit.  (No delivery can land in
+        //    `w`'s mailbox mid-wake: deliveries are heap events.)
+        debug_assert!(self.mail_scratch.is_empty());
+        std::mem::swap(&mut self.mail_scratch, &mut self.workers[w].mailbox);
         {
             let ws = &mut self.workers[w];
-            for (shard, payload, weight) in pending {
+            for (shard, payload, weight) in self.mail_scratch.drain(..) {
                 ws.core.absorb(&mut ws.x, shard, &payload, SumWeight::from_value(weight))?;
             }
         }

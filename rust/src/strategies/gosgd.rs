@@ -29,7 +29,7 @@
 
 use crate::error::{Error, Result};
 use crate::framework::generators;
-use crate::gossip::{wire_bytes_for, CodecSpec, PeerSelector, TopologySpec};
+use crate::gossip::{wire_bytes_for, CodecSpec, Message, PeerSelector, TopologySpec};
 use crate::strategies::{Clock, ClusterState, Strategy};
 use crate::tensor::FlatVec;
 use crate::util::rng::Rng;
@@ -52,6 +52,10 @@ pub struct GoSgd {
     /// Payload codec applied to every message body (see
     /// [`crate::gossip::codec`]); dense by default.
     codec: CodecSpec,
+    /// Reusable drain buffer for `ProcessMessages`: refilled from the
+    /// awake worker's queue each tick, so the steady-state drain never
+    /// allocates (capacity persists across ticks).
+    inbox: Vec<Message>,
 }
 
 impl GoSgd {
@@ -63,6 +67,7 @@ impl GoSgd {
             immediate: false,
             shards: 1,
             codec: CodecSpec::Dense,
+            inbox: Vec::new(),
         }
     }
 
@@ -176,11 +181,14 @@ impl Strategy for GoSgd {
         _rng: &mut Rng,
     ) -> Result<()> {
         state.configure_gossip(self.p, self.topology, self.shards, self.codec)?;
-        // ProcessMessages (Algorithm 4): drain the mailbox, fold each
-        // message in through the worker's protocol core.
-        let pending = state.queues[m].drain();
+        // ProcessMessages (Algorithm 4): drain the mailbox into the
+        // reusable inbox, fold each message in through the worker's
+        // protocol core.  Dropping each absorbed message retires its
+        // pooled payload storage for the next emit.
+        debug_assert!(self.inbox.is_empty());
+        state.queues[m].drain_into(&mut self.inbox);
         let (cores, stacked) = (&mut state.cores, &mut state.stacked);
-        for msg in pending {
+        for msg in self.inbox.drain(..) {
             cores[m].absorb_message(stacked.worker_mut(m), &msg)?;
         }
         Ok(())

@@ -31,10 +31,12 @@ pub mod persyn;
 pub use engine::Engine;
 pub use grad::GradSource;
 
+use std::sync::Arc;
+
 use crate::error::Result;
 use crate::framework::{CommMatrix, Stacked};
 use crate::gossip::{CodecSpec, MessageQueue, ProtocolCore, TopologySpec};
-use crate::tensor::FlatVec;
+use crate::tensor::{BufferPool, FlatVec};
 use crate::util::rng::Rng;
 
 /// Which clock model a strategy runs under (paper sections 3.3/4: Downpour
@@ -86,6 +88,10 @@ pub struct ClusterState {
     pub comm: CommStats,
     /// Optional event recorder for the matrix-framework cross-check.
     pub recorder: Option<Recorder>,
+    /// Shared recycled-buffer pool: every core's emit snapshots and
+    /// encoded bodies live here, so the engine's steady-state gossip ticks
+    /// are allocation-free (see [`crate::tensor::pool`]).
+    pub pool: Arc<BufferPool>,
 }
 
 impl ClusterState {
@@ -93,6 +99,7 @@ impl ClusterState {
     pub fn new(workers: usize, init: &FlatVec) -> Self {
         assert!(workers >= 1);
         let dim = init.len();
+        let pool = BufferPool::shared();
         ClusterState {
             stacked: Stacked::replicate(workers, init),
             cores: (0..=workers)
@@ -106,12 +113,14 @@ impl ClusterState {
                         1,
                     )
                     .expect("default protocol core is always valid")
+                    .with_pool(pool.clone())
                 })
                 .collect(),
             queues: (0..=workers).map(|_| MessageQueue::unbounded()).collect(),
             steps: vec![0; workers + 1],
             comm: CommStats::default(),
             recorder: None,
+            pool,
         }
     }
 
@@ -174,7 +183,8 @@ impl ClusterState {
                     topology,
                     shards,
                 )?
-                .with_codec(codec);
+                .with_codec(codec)
+                .with_pool(self.pool.clone());
                 core.set_topo_cursor(cursor);
             }
         } else {

@@ -17,27 +17,79 @@
 //! LLVM auto-vectorizes them; there is no explicit SIMD dependency.
 
 pub mod ops;
+pub mod pool;
 
 pub use ops::*;
+pub use pool::{BufferPool, PoolStats, PoolVec, Poolable};
+
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::util::rng::Rng;
 
 /// A contiguous f32 parameter (or gradient) vector.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Storage is either plainly owned or borrowed from a [`BufferPool`]
+/// ([`FlatVec::pooled`]): a pooled vector returns its capacity to the pool
+/// when dropped, which is what makes the gossip hot path allocation-free
+/// — see [`pool`].  The distinction is invisible to every operation and
+/// to equality; pooling is storage, not semantics.
 pub struct FlatVec {
     data: Vec<f32>,
+    /// Pool this vector's storage returns to on drop (None = plain heap).
+    home: Option<Arc<BufferPool>>,
+}
+
+impl Clone for FlatVec {
+    fn clone(&self) -> Self {
+        // The clone's fresh buffer also retires to the pool, if any.
+        FlatVec { data: self.data.clone(), home: self.home.clone() }
+    }
+}
+
+impl PartialEq for FlatVec {
+    fn eq(&self, other: &Self) -> bool {
+        self.data == other.data
+    }
+}
+
+impl std::fmt::Debug for FlatVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlatVec").field("data", &self.data).finish()
+    }
+}
+
+impl Drop for FlatVec {
+    fn drop(&mut self) {
+        if let Some(pool) = self.home.take() {
+            pool.recycle(std::mem::take(&mut self.data));
+        }
+    }
 }
 
 impl FlatVec {
     /// Zero-filled vector of length `n`.
     pub fn zeros(n: usize) -> Self {
-        FlatVec { data: vec![0.0; n] }
+        FlatVec { data: vec![0.0; n], home: None }
     }
 
     /// Take ownership of an existing buffer.
     pub fn from_vec(data: Vec<f32>) -> Self {
-        FlatVec { data }
+        FlatVec { data, home: None }
+    }
+
+    /// Zero-filled vector of length `n` whose storage is recycled through
+    /// `pool` (falls back to a plain allocation when the pool is cold).
+    pub fn pooled(pool: &Arc<BufferPool>, n: usize) -> Self {
+        let (data, home) = BufferPool::acquire::<f32>(pool, n).into_parts();
+        FlatVec { data, home }
+    }
+
+    /// Copy of `src` in pooled storage — the emit-snapshot constructor:
+    /// exactly one write pass (no zeroing) over recycled memory.
+    pub fn pooled_copy(pool: &Arc<BufferPool>, src: &[f32]) -> Self {
+        let (data, home) = BufferPool::acquire_copy(pool, src).into_parts();
+        FlatVec { data, home }
     }
 
     /// I.i.d. N(0, std²) samples (used by the consensus experiment and by
@@ -45,7 +97,7 @@ impl FlatVec {
     pub fn randn(n: usize, std: f32, rng: &mut Rng) -> Self {
         let mut v = vec![0.0f32; n];
         rng.fill_normal(&mut v, std);
-        FlatVec { data: v }
+        FlatVec { data: v, home: None }
     }
 
     pub fn len(&self) -> usize {
@@ -64,8 +116,11 @@ impl FlatVec {
         &mut self.data
     }
 
-    pub fn into_vec(self) -> Vec<f32> {
-        self.data
+    /// Extract the raw buffer, detaching it from any pool (the storage
+    /// is now the caller's; nothing flows back on drop).
+    pub fn into_vec(mut self) -> Vec<f32> {
+        self.home = None;
+        std::mem::take(&mut self.data)
     }
 
     fn check_len(&self, other: &FlatVec) -> Result<()> {
@@ -355,6 +410,33 @@ mod tests {
         assert_eq!(a.as_slice(), &[6.0, 12.0]);
         a.scale(2.0);
         assert_eq!(a.as_slice(), &[12.0, 24.0]);
+    }
+
+    #[test]
+    fn pooled_flatvec_round_trips_through_the_pool() {
+        let pool = BufferPool::shared();
+        let mut v = FlatVec::pooled(&pool, 32);
+        assert_eq!(v.len(), 32);
+        assert_eq!(v.norm(), 0.0, "pooled vectors start zeroed");
+        v.as_mut_slice().fill(2.0);
+        let ptr = v.as_slice().as_ptr();
+        drop(v);
+        assert_eq!(pool.stats().recycled, 1);
+        let w = FlatVec::pooled(&pool, 16);
+        assert_eq!(w.as_slice().as_ptr(), ptr, "storage reused");
+        assert_eq!(w.norm(), 0.0, "recycled storage re-zeroed");
+        // Pooling is invisible to equality.
+        assert_eq!(FlatVec::pooled(&pool, 3), FlatVec::zeros(3));
+    }
+
+    #[test]
+    fn into_vec_detaches_pooled_storage() {
+        let pool = BufferPool::shared();
+        let v = FlatVec::pooled(&pool, 8);
+        let raw = v.into_vec();
+        assert_eq!(raw.len(), 8);
+        drop(raw);
+        assert_eq!(pool.stats().recycled, 0, "detached storage is the caller's");
     }
 
     #[test]

@@ -66,14 +66,17 @@ pub fn sgd_step(p: &mut [f32], g: &[f32], lr: f32, wd: f32) {
     }
 }
 
-/// Dot product with f64 accumulation.
+/// Dot product with f64 accumulation.  Eight-wide chunks with eight
+/// independent accumulators, matching the mutating kernels' width: the
+/// accumulator array breaks the loop-carried dependence so LLVM can keep
+/// multiple vector FMAs in flight instead of serializing on one sum.
 pub fn dot(x: &[f32], y: &[f32]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    let mut acc = [0.0f64; 4];
-    let mut xc = x.chunks_exact(4);
-    let mut yc = y.chunks_exact(4);
+    let mut acc = [0.0f64; 8];
+    let mut xc = x.chunks_exact(8);
+    let mut yc = y.chunks_exact(8);
     for (xs, ys) in (&mut xc).zip(&mut yc) {
-        for i in 0..4 {
+        for i in 0..8 {
             acc[i] += xs[i] as f64 * ys[i] as f64;
         }
     }
@@ -84,14 +87,15 @@ pub fn dot(x: &[f32], y: &[f32]) -> f64 {
     acc.iter().sum::<f64>() + tail
 }
 
-/// Squared Euclidean distance with f64 accumulation.
+/// Squared Euclidean distance with f64 accumulation — same eight-wide,
+/// multi-accumulator shape as [`dot`].
 pub fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    let mut acc = [0.0f64; 4];
-    let mut xc = x.chunks_exact(4);
-    let mut yc = y.chunks_exact(4);
+    let mut acc = [0.0f64; 8];
+    let mut xc = x.chunks_exact(8);
+    let mut yc = y.chunks_exact(8);
     for (xs, ys) in (&mut xc).zip(&mut yc) {
-        for i in 0..4 {
+        for i in 0..8 {
             let d = (xs[i] - ys[i]) as f64;
             acc[i] += d * d;
         }
@@ -228,6 +232,30 @@ mod tests {
                 let want = decay * x0[i] - lr * y[i];
                 assert_eq!(got[i], want, "sgd_step n={n} i={i}");
             }
+
+            // Reductions: the 8-wide multi-accumulator kernels sum the
+            // same f64 terms as a sequential reference loop, just in a
+            // different association order — agreement is to f64 round-off,
+            // not bit-exact.
+            let want: f64 = x0.iter().zip(&y).map(|(a, b)| *a as f64 * *b as f64).sum();
+            let got = dot(&x0, &y);
+            assert!(
+                (got - want).abs() <= 1e-10 * want.abs().max(1.0),
+                "dot n={n}: {got} vs {want}"
+            );
+            let want: f64 = x0
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| {
+                    let d = (*a - *b) as f64;
+                    d * d
+                })
+                .sum();
+            let got = dist_sq(&x0, &y);
+            assert!(
+                (got - want).abs() <= 1e-10 * want.max(1.0),
+                "dist_sq n={n}: {got} vs {want}"
+            );
         });
     }
 }

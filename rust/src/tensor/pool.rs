@@ -1,0 +1,571 @@
+//! Recycled buffer storage for the gossip hot path.
+//!
+//! Every gossip exchange needs transient buffers: the shard snapshot at
+//! emit time, the encoded body (u8 codes for q8, index/value arrays for
+//! top-k), and the occasional dense scratch when the queue coalesces an
+//! encoded payload.  Allocating those on every exchange puts the global
+//! allocator — a lock, a size-class search, a potential `mmap` — squarely
+//! on the path the paper requires to be non-blocking (section 4:
+//! fire-and-forget push messages).  GossipGraD (Daily et al., 2018) makes
+//! the same point from the systems side: gossip only beats all-reduce when
+//! per-message overhead is driven toward zero.
+//!
+//! [`BufferPool`] removes the allocator from that path:
+//!
+//! * One **lock-free freelist per element type** (`f32`, `u8`, `u32`) — a
+//!   fixed array of atomic slots, each holding one recycled buffer as a
+//!   raw `(ptr, capacity)` pair.  Acquire and release are a handful of
+//!   atomic operations; there is no mutex anywhere.
+//! * [`PoolVec`] is the RAII handle: it behaves like a `Vec<T>`, and on
+//!   drop its capacity flows back to the pool it came from — even if it
+//!   was dropped on a *different thread* (a payload acquired by the
+//!   sender is released by the receiver; both talk to the same shared
+//!   `Arc<BufferPool>`).
+//! * **Graceful degradation**: a cold pool (or `PoolVec::from_vec` with
+//!   no pool at all) simply allocates.  Nothing in the protocol requires
+//!   the pool; it is a storage optimization, invisible to the numerics —
+//!   the cross-runtime equivalence suite pins that.
+//!
+//! The freelist is a *slot array*, not a linked stack: each slot holds at
+//! most one parked buffer as a raw `(ptr, capacity)` pair, guarded by a
+//! per-slot atomic claim flag.  A thread that fails to claim a slot simply
+//! moves to the next one — nothing ever blocks or spins in place — and the
+//! claim's acquire/release pair is the only synchronization the buffer
+//! hand-off needs, so there is no ABA hazard to reason about at all.  When
+//! every slot is full a released buffer is simply dropped (the pool never
+//! grows without bound); when every slot is empty an acquire falls through
+//! to a fresh allocation.
+
+use std::mem::ManuallyDrop;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Number of freelist slots per element type (96 recycled buffers per
+/// type is far beyond what any runtime keeps in flight: one snapshot per
+/// worker plus one encoded body per queued message).
+const DEFAULT_SLOTS: usize = 96;
+
+/// One freelist slot: a parked buffer's pointer + capacity, guarded by a
+/// claim flag.  `ptr`/`cap` are only touched by the thread currently
+/// holding the claim; the claim's swap(Acquire)/store(Release) pair
+/// publishes them between threads.
+struct Slot<T> {
+    claimed: AtomicBool,
+    ptr: AtomicPtr<T>,
+    cap: AtomicUsize,
+}
+
+/// Lock-free freelist of recycled `Vec<T>` storage.
+struct FreeList<T> {
+    slots: Box<[Slot<T>]>,
+}
+
+// The freelist owns plain `Vec<T>` buffers disguised as raw parts; moving
+// them across threads is exactly as safe as moving the `Vec` itself.
+unsafe impl<T: Send> Send for FreeList<T> {}
+unsafe impl<T: Send> Sync for FreeList<T> {}
+
+impl<T> FreeList<T> {
+    fn new(slots: usize) -> Self {
+        FreeList {
+            slots: (0..slots)
+                .map(|_| Slot {
+                    claimed: AtomicBool::new(false),
+                    ptr: AtomicPtr::new(std::ptr::null_mut()),
+                    cap: AtomicUsize::new(0),
+                })
+                .collect(),
+        }
+    }
+
+    /// Pop any recycled buffer (length reset to 0, capacity intact).
+    fn take(&self) -> Option<Vec<T>> {
+        for slot in self.slots.iter() {
+            if slot.claimed.swap(true, Ordering::Acquire) {
+                continue; // another thread holds this slot right now
+            }
+            let p = slot.ptr.load(Ordering::Relaxed);
+            if p.is_null() {
+                slot.claimed.store(false, Ordering::Release);
+                continue;
+            }
+            let cap = slot.cap.load(Ordering::Relaxed);
+            slot.ptr.store(std::ptr::null_mut(), Ordering::Relaxed);
+            slot.claimed.store(false, Ordering::Release);
+            // SAFETY: (p, cap) were parked by `put`, which disassembled a
+            // live `Vec<T>` of this same element type; length 0 is always
+            // valid, and `Poolable`'s `Copy` bound guarantees the elements
+            // carry no drop glue.
+            return Some(unsafe { Vec::from_raw_parts(p, 0, cap) });
+        }
+        None
+    }
+
+    /// Park a buffer's storage; returns false (the caller drops it) if
+    /// every slot is occupied.
+    fn put(&self, v: Vec<T>) -> bool {
+        debug_assert!(v.capacity() > 0, "zero-capacity buffers are filtered upstream");
+        for slot in self.slots.iter() {
+            if slot.claimed.swap(true, Ordering::Acquire) {
+                continue;
+            }
+            if !slot.ptr.load(Ordering::Relaxed).is_null() {
+                slot.claimed.store(false, Ordering::Release);
+                continue;
+            }
+            let mut v = ManuallyDrop::new(v);
+            slot.cap.store(v.capacity(), Ordering::Relaxed);
+            slot.ptr.store(v.as_mut_ptr(), Ordering::Relaxed);
+            slot.claimed.store(false, Ordering::Release);
+            return true;
+        }
+        false
+    }
+}
+
+impl<T> Drop for FreeList<T> {
+    fn drop(&mut self) {
+        for slot in self.slots.iter() {
+            // Exclusive access (&mut self): no claim needed.
+            let p = slot.ptr.load(Ordering::Acquire);
+            if !p.is_null() {
+                let cap = slot.cap.load(Ordering::Relaxed);
+                // SAFETY: reconstituting the parked Vec frees the storage
+                // exactly once.
+                drop(unsafe { Vec::from_raw_parts(p, 0, cap) });
+            }
+        }
+    }
+}
+
+/// Monotonic pool counters (aggregated over all element types).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Acquires served from a recycled buffer.
+    pub hits: u64,
+    /// Acquires that fell through to a fresh allocation (cold pool).
+    pub misses: u64,
+    /// Buffers returned to a freelist on drop.
+    pub recycled: u64,
+    /// Buffers dropped because every freelist slot was occupied.
+    pub discarded: u64,
+}
+
+/// Shared pool of recycled buffer storage for the gossip hot path.
+///
+/// Cheap to share (`Arc`), safe to hammer from many threads, and a pure
+/// storage optimization: with or without it the protocol computes
+/// bit-identical results.
+///
+/// ```
+/// use gosgd::tensor::BufferPool;
+///
+/// let pool = BufferPool::shared();
+/// let a = BufferPool::acquire::<f32>(&pool, 1024);
+/// drop(a); // capacity returns to the pool...
+/// let b = BufferPool::acquire::<f32>(&pool, 512); // ...and is reused here
+/// assert_eq!(b.len(), 512);
+/// assert_eq!(pool.stats().hits, 1);
+/// ```
+pub struct BufferPool {
+    f32s: FreeList<f32>,
+    u8s: FreeList<u8>,
+    u32s: FreeList<u32>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+    discarded: AtomicU64,
+}
+
+impl std::fmt::Debug for BufferPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BufferPool").field("stats", &self.stats()).finish()
+    }
+}
+
+impl BufferPool {
+    /// A fresh shared pool with the default slot count.
+    pub fn shared() -> Arc<BufferPool> {
+        Self::shared_with_slots(DEFAULT_SLOTS)
+    }
+
+    /// A fresh shared pool with `slots` freelist entries per element type.
+    pub fn shared_with_slots(slots: usize) -> Arc<BufferPool> {
+        Arc::new(BufferPool {
+            f32s: FreeList::new(slots),
+            u8s: FreeList::new(slots),
+            u32s: FreeList::new(slots),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+            discarded: AtomicU64::new(0),
+        })
+    }
+
+    /// Pop a recycled storage buffer (emptied, capacity intact) or start a
+    /// fresh one — the shared first half of every acquire flavor.  (These
+    /// are associated fns rather than methods because the handle must hold
+    /// an owned `Arc` — `self: &Arc<Self>` receivers are not stable Rust.)
+    fn storage<T: Poolable>(pool: &Arc<BufferPool>) -> Vec<T> {
+        match T::take_from(pool) {
+            Some(mut v) => {
+                pool.hits.fetch_add(1, Ordering::Relaxed);
+                v.clear();
+                v
+            }
+            None => {
+                pool.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Take a buffer of exactly `len` elements, default-filled (recycled
+    /// contents are overwritten).  Falls back to a plain allocation when
+    /// the pool is cold.  The returned handle sends its storage back to
+    /// `pool` on drop.  Hot-path callers that overwrite every element
+    /// should use [`BufferPool::acquire_with`] / [`BufferPool::acquire_copy`]
+    /// instead and skip the zeroing pass.
+    pub fn acquire<T: Poolable>(pool: &Arc<BufferPool>, len: usize) -> PoolVec<T> {
+        let mut data = Self::storage(pool);
+        data.resize(len, T::default());
+        PoolVec { data, home: Some(pool.clone()) }
+    }
+
+    /// Take a buffer of exactly `len` elements, each produced by
+    /// `fill(index)` — a single write pass over recycled storage, with no
+    /// intermediate zeroing.
+    pub fn acquire_with<T: Poolable>(
+        pool: &Arc<BufferPool>,
+        len: usize,
+        fill: impl FnMut(usize) -> T,
+    ) -> PoolVec<T> {
+        let mut data = Self::storage(pool);
+        data.extend((0..len).map(fill));
+        PoolVec { data, home: Some(pool.clone()) }
+    }
+
+    /// Take a buffer holding a copy of `src` — one `memcpy` into recycled
+    /// storage, no intermediate zeroing (the emit-snapshot path).
+    pub fn acquire_copy<T: Poolable>(pool: &Arc<BufferPool>, src: &[T]) -> PoolVec<T> {
+        let mut data = Self::storage(pool);
+        data.extend_from_slice(src);
+        PoolVec { data, home: Some(pool.clone()) }
+    }
+
+    /// Return a buffer's storage to the matching freelist (called by the
+    /// RAII handles; also usable directly with a bare `Vec`).
+    pub fn recycle<T: Poolable>(&self, v: Vec<T>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        if T::put_into(self, v) {
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            discarded: self.discarded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Element types the pool can recycle.  The `Copy + Default` bound is what
+/// makes `Vec::from_raw_parts(ptr, 0, cap)` unconditionally sound: no
+/// element ever carries drop glue, and a resize can always manufacture
+/// fill values.
+pub trait Poolable: Copy + Default + Send + Sync + 'static {
+    #[doc(hidden)]
+    fn take_from(pool: &BufferPool) -> Option<Vec<Self>>;
+    #[doc(hidden)]
+    fn put_into(pool: &BufferPool, v: Vec<Self>) -> bool;
+}
+
+macro_rules! impl_poolable {
+    ($t:ty, $field:ident) => {
+        impl Poolable for $t {
+            fn take_from(pool: &BufferPool) -> Option<Vec<Self>> {
+                pool.$field.take()
+            }
+            fn put_into(pool: &BufferPool, v: Vec<Self>) -> bool {
+                pool.$field.put(v)
+            }
+        }
+    };
+}
+
+impl_poolable!(f32, f32s);
+impl_poolable!(u8, u8s);
+impl_poolable!(u32, u32s);
+
+/// A `Vec<T>` whose storage returns to its [`BufferPool`] on drop.
+///
+/// Dereferences to `[T]`; equality and `Debug` see only the contents, so
+/// a pooled and an unpooled buffer with the same elements compare equal —
+/// pooling is invisible to the protocol's semantics.
+pub struct PoolVec<T: Poolable> {
+    data: Vec<T>,
+    home: Option<Arc<BufferPool>>,
+}
+
+impl<T: Poolable> PoolVec<T> {
+    /// Wrap an ordinary vector (no pool; drop simply frees).
+    pub fn from_vec(data: Vec<T>) -> Self {
+        PoolVec { data, home: None }
+    }
+
+    /// Detach the storage from the pool and hand it out.
+    pub fn into_vec(mut self) -> Vec<T> {
+        self.home = None;
+        std::mem::take(&mut self.data)
+    }
+
+    /// Split into raw storage + pool handle (used by `FlatVec` to adopt
+    /// pooled storage without an extra wrapper layer).
+    pub(crate) fn into_parts(mut self) -> (Vec<T>, Option<Arc<BufferPool>>) {
+        let home = self.home.take();
+        (std::mem::take(&mut self.data), home)
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+impl<T: Poolable> std::ops::Deref for PoolVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        &self.data
+    }
+}
+
+impl<T: Poolable> std::ops::DerefMut for PoolVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+}
+
+impl<T: Poolable> Drop for PoolVec<T> {
+    fn drop(&mut self) {
+        if let Some(pool) = self.home.take() {
+            pool.recycle(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+impl<T: Poolable> Clone for PoolVec<T> {
+    fn clone(&self) -> Self {
+        // The clone's fresh storage also flows back to the pool on drop.
+        PoolVec { data: self.data.clone(), home: self.home.clone() }
+    }
+}
+
+impl<T: Poolable + PartialEq> PartialEq for PoolVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.data == other.data
+    }
+}
+
+impl<T: Poolable + std::fmt::Debug> std::fmt::Debug for PoolVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.data.fmt(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raii_returns_storage_on_drop_and_reuses_it() {
+        let pool = BufferPool::shared();
+        let a = BufferPool::acquire::<f32>(&pool, 128);
+        let ptr = a.as_slice().as_ptr();
+        drop(a);
+        let s = pool.stats();
+        assert_eq!(s.recycled, 1);
+        assert_eq!(s.misses, 1, "first acquire is a cold miss");
+        // The very same storage comes back (single-threaded: first slot).
+        let b = BufferPool::acquire::<f32>(&pool, 64);
+        assert_eq!(b.as_slice().as_ptr(), ptr, "expected recycled storage");
+        assert_eq!(b.len(), 64);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn cold_pool_falls_back_to_plain_allocation() {
+        let pool = BufferPool::shared();
+        let v = BufferPool::acquire::<u8>(&pool, 32);
+        assert_eq!(v.len(), 32);
+        assert!(v.iter().all(|&b| b == 0));
+        assert_eq!(pool.stats().misses, 1);
+        assert_eq!(pool.stats().hits, 0);
+    }
+
+    #[test]
+    fn acquired_buffers_are_default_filled() {
+        let pool = BufferPool::shared();
+        let mut a = BufferPool::acquire::<f32>(&pool, 16);
+        a.as_mut_slice().fill(7.5);
+        drop(a);
+        // Recycled storage must be re-zeroed by the resize.
+        let b = BufferPool::acquire::<f32>(&pool, 16);
+        assert!(b.iter().all(|&x| x == 0.0), "stale contents leaked: {b:?}");
+    }
+
+    #[test]
+    fn typed_freelists_are_independent() {
+        let pool = BufferPool::shared();
+        drop(BufferPool::acquire::<f32>(&pool, 8));
+        // The f32 buffer must not satisfy a u32 acquire.
+        let _u = BufferPool::acquire::<u32>(&pool, 8);
+        let s = pool.stats();
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits, 0);
+    }
+
+    #[test]
+    fn full_freelist_discards_instead_of_growing() {
+        let pool = BufferPool::shared_with_slots(1);
+        let a = BufferPool::acquire::<f32>(&pool, 8);
+        let b = BufferPool::acquire::<f32>(&pool, 8);
+        drop(a); // fills the single slot
+        drop(b); // no room: dropped for real
+        let s = pool.stats();
+        assert_eq!(s.recycled, 1);
+        assert_eq!(s.discarded, 1);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_never_parked() {
+        let pool = BufferPool::shared();
+        pool.recycle::<f32>(Vec::new());
+        let s = pool.stats();
+        assert_eq!(s.recycled, 0);
+        assert_eq!(s.discarded, 0);
+        drop(BufferPool::acquire::<f32>(&pool, 0));
+        // A zero-length acquire may own no storage; either way nothing
+        // bogus lands in the freelist.
+        assert!(BufferPool::acquire::<f32>(&pool, 4).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn acquire_with_and_copy_fill_without_zeroing() {
+        let pool = BufferPool::shared();
+        // Warm the freelist with stale contents.
+        let mut stale = BufferPool::acquire::<u32>(&pool, 8);
+        stale.as_mut_slice().fill(9);
+        drop(stale);
+        let v = BufferPool::acquire_with::<u32>(&pool, 4, |i| i as u32 * 10);
+        assert_eq!(v.as_slice(), &[0, 10, 20, 30]);
+        drop(v);
+        let w = BufferPool::acquire_copy::<u32>(&pool, &[7, 8]);
+        assert_eq!(w.as_slice(), &[7, 8]);
+        let s = pool.stats();
+        assert_eq!(s.hits, 2, "both flavors reuse recycled storage");
+    }
+
+    #[test]
+    fn from_vec_is_unpooled_and_into_vec_detaches() {
+        let pool = BufferPool::shared();
+        let v = PoolVec::<u32>::from_vec(vec![1, 2, 3]);
+        assert_eq!(v.as_slice(), &[1, 2, 3]);
+        drop(v);
+        assert_eq!(pool.stats().recycled, 0, "unpooled drop is a plain free");
+        let w = BufferPool::acquire::<u32>(&pool, 4);
+        let raw = w.into_vec();
+        assert_eq!(raw.len(), 4);
+        drop(raw);
+        assert_eq!(pool.stats().recycled, 0, "into_vec detaches from the pool");
+    }
+
+    #[test]
+    fn clones_recycle_too() {
+        let pool = BufferPool::shared();
+        let a = BufferPool::acquire::<f32>(&pool, 8);
+        let b = a.clone();
+        assert_eq!(a, b);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.stats().recycled, 2);
+    }
+
+    #[test]
+    fn cross_thread_recycle_round_trip() {
+        // A buffer acquired here, dropped on another thread, must be
+        // reusable here again — the exact shape of a gossip payload's
+        // life (sender allocates, receiver frees).
+        let pool = BufferPool::shared();
+        let a = BufferPool::acquire::<f32>(&pool, 256);
+        let ptr = a.as_slice().as_ptr() as usize;
+        let pool2 = pool.clone();
+        std::thread::spawn(move || {
+            let _takes_ownership = a;
+            let _pool_alive = pool2;
+        })
+        .join()
+        .unwrap();
+        assert_eq!(pool.stats().recycled, 1);
+        let b = BufferPool::acquire::<f32>(&pool, 256);
+        assert_eq!(b.as_slice().as_ptr() as usize, ptr, "worker A's buffer reused");
+    }
+
+    #[test]
+    fn concurrent_hammering_stays_consistent() {
+        let pool = BufferPool::shared_with_slots(8);
+        let threads = 4;
+        let rounds = 2000;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..rounds {
+                    let len = 1 + ((t * 131 + i * 17) % 64);
+                    let mut v = BufferPool::acquire::<u32>(&pool, len);
+                    v.as_mut_slice().fill(t as u32);
+                    assert_eq!(v.len(), len);
+                    assert!(v.iter().all(|&x| x == t as u32));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert_eq!(s.hits + s.misses, (threads * rounds) as u64);
+        assert_eq!(s.recycled + s.discarded, (threads * rounds) as u64);
+    }
+
+    #[test]
+    fn dropping_the_pool_frees_parked_buffers() {
+        // Leak check by construction: parked storage is reconstituted and
+        // dropped with the pool (run under a leak detector to verify; the
+        // assertion here is simply that nothing crashes or double-frees).
+        let pool = BufferPool::shared();
+        for _ in 0..10 {
+            drop(BufferPool::acquire::<f32>(&pool, 1024));
+            drop(BufferPool::acquire::<u8>(&pool, 1024));
+            drop(BufferPool::acquire::<u32>(&pool, 1024));
+        }
+        drop(pool);
+    }
+}

@@ -1,0 +1,87 @@
+//! Per-thread heap-allocation counting for the zero-allocation contract.
+//!
+//! The gossip hot path claims **zero steady-state heap allocations per
+//! exchange** (see [`crate::tensor::pool`]).  Claims about allocators are
+//! only worth anything when measured at the allocator: this module
+//! provides [`CountingAllocator`], a `GlobalAlloc` wrapper around the
+//! system allocator that counts every `alloc`/`alloc_zeroed`/`realloc`
+//! (and, separately, every `dealloc`) in **thread-local** counters.
+//!
+//! Binaries that want the numbers install it as their global allocator:
+//!
+//! ```ignore
+//! use gosgd::util::alloc_count::CountingAllocator;
+//!
+//! #[global_allocator]
+//! static ALLOC: CountingAllocator = CountingAllocator::new();
+//!
+//! CountingAllocator::reset();
+//! hot_path();
+//! assert_eq!(CountingAllocator::allocations(), 0);
+//! ```
+//!
+//! The library itself never installs it — only the `hotpath_alloc` bench
+//! and the `alloc_regression` integration suite do.  Counters are
+//! thread-local so a multi-threaded test harness cannot pollute a
+//! measurement taken on the measuring thread, and so the counting itself
+//! needs no atomics on the allocation path.  The thread-local cells are
+//! const-initialized plain `Cell<u64>`s: no lazy initialization and no
+//! destructor, which is what makes touching them from inside the
+//! allocator re-entrancy-safe.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static FREES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System-allocator wrapper that counts this thread's heap traffic.
+#[derive(Default)]
+pub struct CountingAllocator;
+
+impl CountingAllocator {
+    pub const fn new() -> Self {
+        CountingAllocator
+    }
+
+    /// Zero this thread's counters.
+    pub fn reset() {
+        ALLOCS.with(|c| c.set(0));
+        FREES.with(|c| c.set(0));
+    }
+
+    /// Heap acquisitions (`alloc` + `alloc_zeroed` + `realloc`) on this
+    /// thread since the last [`CountingAllocator::reset`].
+    pub fn allocations() -> u64 {
+        ALLOCS.with(|c| c.get())
+    }
+
+    /// `dealloc` calls on this thread since the last reset.
+    pub fn frees() -> u64 {
+        FREES.with(|c| c.get())
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        FREES.with(|c| c.set(c.get() + 1));
+        System.dealloc(ptr, layout)
+    }
+}

@@ -1,8 +1,11 @@
 //! Support substrates built from scratch for the offline environment:
 //! a deterministic RNG ([`rng`]), a minimal JSON parser ([`json`]) for the
-//! artifact manifests, a CLI argument parser ([`cli`]), and a tiny
-//! property-testing helper ([`proptest`]) used across the test suites.
+//! artifact manifests, a CLI argument parser ([`cli`]), a tiny
+//! property-testing helper ([`proptest`]) used across the test suites,
+//! and a counting global allocator ([`alloc_count`]) backing the
+//! zero-allocation hot-path contract.
 
+pub mod alloc_count;
 pub mod cli;
 pub mod json;
 pub mod proptest;

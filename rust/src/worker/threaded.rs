@@ -10,7 +10,14 @@
 //! Every protocol transition — blend, weight halving, shard cursor — is
 //! delegated to a per-thread [`ProtocolCore`]; this module owns only what
 //! is genuinely runtime: thread spawning, the concurrent queues, the
-//! atomics for accounting, and result collection.
+//! atomics for accounting, and result collection (each worker's final
+//! state travels back through its `JoinHandle` return value — no shared
+//! result slots, no extra locks on the join path).
+//!
+//! All workers share one lock-free [`BufferPool`]: a payload buffer
+//! acquired by the sender is recycled when the receiver drops the
+//! message, so the steady-state exchange loop performs zero heap
+//! allocations (pinned by `benches/hotpath_alloc.rs`).
 //!
 //! The sequential [`Engine`](crate::strategies::Engine) and this runtime
 //! drive the same cores under different clocks; the cross-runtime test
@@ -18,12 +25,12 @@
 //! bit-for-bit and the tests below pin the conservation invariants here.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Barrier};
 
 use crate::error::{Error, Result};
-use crate::gossip::{CodecSpec, MessageQueue, ProtocolCore, TopologySpec};
+use crate::gossip::{CodecSpec, Message, MessageQueue, ProtocolCore, TopologySpec};
 use crate::strategies::grad::GradSource;
-use crate::tensor::FlatVec;
+use crate::tensor::{BufferPool, FlatVec};
 use crate::util::rng::Rng;
 
 /// Configuration for a threaded gossip run.
@@ -97,6 +104,23 @@ impl ThreadedReport {
     }
 }
 
+/// Releases the start barrier on drop unless disarmed: a worker whose
+/// setup fails — by `Err` *or* by panic in the user-supplied source
+/// factory — must still count toward the barrier, or its peers would
+/// park in `Barrier::wait` forever and the scope join would hang.
+struct BarrierRelease<'a> {
+    barrier: &'a Barrier,
+    armed: bool,
+}
+
+impl Drop for BarrierRelease<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.barrier.wait();
+        }
+    }
+}
+
 impl ThreadedGossip {
     /// Run the protocol.  `make_source(worker_id)` is called on each worker
     /// thread to build its gradient source (0-based worker ids here).
@@ -128,13 +152,16 @@ impl ThreadedGossip {
         let total_messages = Arc::new(AtomicU64::new(0));
         let total_bytes = Arc::new(AtomicU64::new(0));
         let total_raw_bytes = Arc::new(AtomicU64::new(0));
-        #[allow(clippy::type_complexity)]
-        let results: Arc<Vec<Mutex<Option<(FlatVec, ProtocolCore, Vec<(u64, f64)>)>>>> =
-            Arc::new((0..m).map(|_| Mutex::new(None)).collect());
+        // One pool for the whole fleet: payload storage acquired by any
+        // sender is recycled by whichever receiver drops it.
+        let pool = BufferPool::shared();
         let base_rng = Rng::new(self.seed);
 
+        // Each worker's final state rides home on its JoinHandle.
+        type WorkerOut = (FlatVec, ProtocolCore, Vec<(u64, f64)>);
+
         let t0 = std::time::Instant::now();
-        std::thread::scope(|scope| -> Result<()> {
+        let outs: Vec<WorkerOut> = std::thread::scope(|scope| -> Result<Vec<WorkerOut>> {
             let mut handles = Vec::new();
             for w in 0..m {
                 let queues = queues.clone();
@@ -142,35 +169,52 @@ impl ThreadedGossip {
                 let total_messages = total_messages.clone();
                 let total_bytes = total_bytes.clone();
                 let total_raw_bytes = total_raw_bytes.clone();
-                let results = results.clone();
+                let pool = pool.clone();
                 let mut rng = base_rng.split(w as u64 + 1);
                 let make_source = &make_source;
                 let cfg = self.clone();
                 let init = init.clone();
-                handles.push(scope.spawn(move || -> Result<()> {
-                    let mut source = make_source(w)?;
-                    if source.dim() != init.len() {
-                        return Err(Error::shape("grad source dim mismatch"));
-                    }
+                handles.push(scope.spawn(move || -> Result<WorkerOut> {
+                    // Fallible setup first, but the barrier must be reached
+                    // on EVERY path — Err *and* panic (the guard waits on
+                    // unwind): a worker that bailed before waiting would
+                    // leave its m-1 peers parked in Barrier::wait forever
+                    // (and the scope join would hang) instead of surfacing
+                    // the failure.
+                    let mut gate = BarrierRelease { barrier: &start_barrier, armed: true };
+                    let setup = (|| -> Result<(Box<dyn GradSource>, ProtocolCore)> {
+                        let source = make_source(w)?;
+                        if source.dim() != init.len() {
+                            return Err(Error::shape("grad source dim mismatch"));
+                        }
+                        // The whole protocol state machine lives here.
+                        let core = ProtocolCore::new(
+                            w,
+                            m,
+                            init.len(),
+                            cfg.p,
+                            cfg.topology,
+                            cfg.shards,
+                        )?
+                        .with_codec(cfg.codec)
+                        .with_pool(pool);
+                        Ok((source, core))
+                    })();
+                    gate.armed = false;
+                    start_barrier.wait();
+                    let (mut source, mut core) = setup?;
                     let mut x = init;
-                    // The whole protocol state machine lives here.
-                    let mut core = ProtocolCore::new(
-                        w,
-                        m,
-                        x.len(),
-                        cfg.p,
-                        cfg.topology,
-                        cfg.shards,
-                    )?
-                    .with_codec(cfg.codec);
                     let mut grad = FlatVec::zeros(x.len());
                     let mut losses = Vec::with_capacity(cfg.steps_per_worker as usize);
-                    start_barrier.wait();
+                    let mut inbox: Vec<Message> = Vec::new();
 
                     for step in 0..cfg.steps_per_worker {
                         // 1. ProcessMessages(q_s): fold every pending
-                        //    message in through the core.
-                        for msg in queues[w].drain() {
+                        //    message in through the core.  The inbox is
+                        //    reused across iterations and each absorbed
+                        //    message retires its pooled payload storage.
+                        queues[w].drain_into(&mut inbox);
+                        for msg in inbox.drain(..) {
                             core.absorb_message(&mut x, &msg)?;
                         }
                         // 2. local gradient step
@@ -189,31 +233,28 @@ impl ThreadedGossip {
                         }
                     }
                     // Final drain so no weight mass is stranded in queues.
-                    for msg in queues[w].drain() {
+                    queues[w].drain_into(&mut inbox);
+                    for msg in inbox.drain(..) {
                         core.absorb_message(&mut x, &msg)?;
                     }
-                    *results[w].lock().map_err(|_| Error::worker("poisoned result slot"))? =
-                        Some((x, core, losses));
-                    Ok(())
+                    Ok((x, core, losses))
                 }));
             }
+            let mut outs = Vec::with_capacity(m);
             for h in handles {
-                h.join()
-                    .map_err(|_| Error::worker("worker thread panicked"))??;
+                outs.push(
+                    h.join()
+                        .map_err(|_| Error::worker("worker thread panicked"))??,
+                );
             }
-            Ok(())
+            Ok(outs)
         })?;
         let elapsed = t0.elapsed().as_secs_f64();
 
         let mut params = Vec::with_capacity(m);
         let mut cores: Vec<ProtocolCore> = Vec::with_capacity(m);
         let mut losses = Vec::with_capacity(m);
-        for slot in results.iter() {
-            let (x, core, l) = slot
-                .lock()
-                .map_err(|_| Error::worker("poisoned result slot"))?
-                .take()
-                .ok_or_else(|| Error::worker("worker produced no result"))?;
+        for (x, core, l) in outs {
             params.push(x);
             cores.push(core);
             losses.push(l);
@@ -432,6 +473,46 @@ mod tests {
         assert!(cfg
             .run(&FlatVec::zeros(8), quad_factory(8, 0.1, 1))
             .is_err());
+    }
+
+    #[test]
+    fn one_failing_source_errors_instead_of_deadlocking_the_barrier() {
+        // A worker whose setup fails must still reach the start barrier
+        // (then bail), or its peers would park in Barrier::wait forever.
+        let dim = 8;
+        let cfg = ThreadedGossip {
+            workers: 4,
+            steps_per_worker: 50,
+            ..Default::default()
+        };
+        let r = cfg.run(&FlatVec::zeros(dim), |w| {
+            if w == 2 {
+                Err(Error::worker("synthetic source failure"))
+            } else {
+                Ok(Box::new(QuadraticSource::new(dim, 0.1, 1)) as Box<dyn GradSource>)
+            }
+        });
+        assert!(r.is_err(), "the setup failure must surface as an error");
+    }
+
+    #[test]
+    fn one_panicking_source_errors_instead_of_deadlocking_the_barrier() {
+        // Same invariant for the panic path: the unwinding worker's
+        // barrier guard must release its peers, and the panic surfaces
+        // as a worker error through the join.
+        let dim = 8;
+        let cfg = ThreadedGossip {
+            workers: 4,
+            steps_per_worker: 50,
+            ..Default::default()
+        };
+        let r = cfg.run(&FlatVec::zeros(dim), |w| {
+            if w == 1 {
+                panic!("synthetic source panic");
+            }
+            Ok(Box::new(QuadraticSource::new(dim, 0.1, 1)) as Box<dyn GradSource>)
+        });
+        assert!(r.is_err(), "the panic must surface as a worker error");
     }
 
     #[test]

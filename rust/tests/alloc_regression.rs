@@ -1,0 +1,87 @@
+//! Allocation-count regression suite (counting global allocator).
+//!
+//! The pooling contract of `tensor::pool`: once the `BufferPool` is
+//! warm, the engine-driven emit → encode → enqueue → drain → absorb cycle
+//! performs **zero** heap allocations per exchange for the dense and q8
+//! codecs, and a bounded constant for top-k.  These tests measure at the
+//! allocator itself, so any future change that sneaks an allocation back
+//! into the hot path (a stray `clone`, a fresh `Vec` in a codec, a
+//! per-message `Arc`) fails loudly here and in CI.
+//!
+//! The exchange loop is the shared `gosgd::bench::ExchangePair` harness —
+//! the same one `benches/hotpath_alloc.rs` times — so the two gates
+//! cannot drift apart.  Counters are thread-local (see
+//! `util::alloc_count`), so the parallel test harness cannot pollute a
+//! measurement: each test only reads heap traffic from its own thread.
+
+use gosgd::bench::ExchangePair;
+use gosgd::gossip::CodecSpec;
+use gosgd::util::alloc_count::CountingAllocator;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator::new();
+
+const DIM: usize = 4096;
+const SHARDS: usize = 4;
+
+fn steady_state_allocs(codec: CodecSpec, pooled: bool) -> u64 {
+    let mut pair = ExchangePair::new(codec, pooled, DIM, SHARDS, 11);
+    for _ in 0..256 {
+        pair.exchange(); // warm the pool and every retained capacity
+    }
+    CountingAllocator::reset();
+    for _ in 0..256 {
+        pair.exchange();
+    }
+    CountingAllocator::allocations()
+}
+
+#[test]
+fn dense_steady_state_exchange_allocates_nothing() {
+    assert_eq!(steady_state_allocs(CodecSpec::Dense, true), 0);
+}
+
+#[test]
+fn q8_steady_state_exchange_allocates_nothing() {
+    assert_eq!(steady_state_allocs(CodecSpec::QuantizeU8, true), 0);
+}
+
+#[test]
+fn topk_steady_state_exchange_is_alloc_bounded() {
+    // Top-k's order/index/value buffers are pooled too; after warm-up the
+    // freelist serves every size class, so the total over 256 exchanges
+    // must stay a small constant (expected 0).
+    let n = steady_state_allocs(CodecSpec::TopK { k: 64 }, true);
+    assert!(n <= 16, "pooled top-k allocated {n} times over 256 exchanges");
+}
+
+#[test]
+fn unpooled_exchange_does_allocate() {
+    // Sanity for the whole suite: without the pool the same loop hits the
+    // heap every exchange — proving the counter actually counts.
+    let n = steady_state_allocs(CodecSpec::Dense, false);
+    assert!(n >= 256, "unpooled loop allocated only {n} times; counter broken?");
+}
+
+#[test]
+fn pooled_and_unpooled_exchanges_agree_bitwise() {
+    // The zero-allocation machinery must be invisible to the numerics:
+    // identical seeds with and without a pool end in bit-identical
+    // parameters.  (The cross-runtime equivalence suite pins the same
+    // property through the full engines.)
+    for codec in [CodecSpec::Dense, CodecSpec::QuantizeU8, CodecSpec::TopK { k: 64 }] {
+        let mut a = ExchangePair::new(codec, true, DIM, SHARDS, 11);
+        let mut b = ExchangePair::new(codec, false, DIM, SHARDS, 11);
+        for _ in 0..64 {
+            a.exchange();
+            b.exchange();
+        }
+        for w in 0..2 {
+            assert_eq!(
+                a.params(w).as_slice(),
+                b.params(w).as_slice(),
+                "{codec:?}: worker {w} diverged under pooling"
+            );
+        }
+    }
+}

@@ -7,6 +7,13 @@
 //! exact universal-clock loop and demand **bit-identical** parameter
 //! trajectories, plus the conservation invariants the other runtimes rely
 //! on.
+//!
+//! Note the asymmetry that makes these tests also pin the buffer-pooling
+//! contract (`tensor::pool`): the engine's cores run with a shared
+//! `BufferPool` attached (every runtime pools by default), while the
+//! hand-driven cores below are built bare and allocate plainly.  The
+//! demanded bit-identity across that divide is exactly the "pooling is
+//! storage, not semantics" guarantee.
 
 use gosgd::gossip::{CodecSpec, MessageQueue, ProtocolCore, TopologySpec};
 use gosgd::strategies::engine::Engine;
