@@ -1,0 +1,78 @@
+//! Bench: DES event throughput with the finite-bandwidth fabric on.
+//!
+//! The fabric turns every gossip send into a small pipeline (NIC → link →
+//! switch arbiter → link → NIC) driven by its own event heap, so each
+//! message costs a handful of extra heap operations instead of one.  The
+//! acceptance line pins that overhead: a fabric-on DES run must finish in
+//! **< 3× the ideal-fabric wall time** at identical protocol settings —
+//! asserted below for the rack and wan presets, printed for edge.
+//!
+//! Run with `cargo bench --bench fabric_throughput`; set `BENCH_CSV` or
+//! `BENCH_JSON` for machine-readable output (CI uploads the JSON as
+//! `BENCH_fabric.json` to accumulate the perf trajectory).
+
+use gosgd::bench::Bencher;
+use gosgd::sim::{DesEngine, DesStrategy, FabricSpec, TimeModel};
+use gosgd::strategies::grad::QuadraticSource;
+use gosgd::tensor::FlatVec;
+
+const DIM: usize = 512;
+const WORKERS: usize = 8;
+const HORIZON: f64 = 30.0;
+
+fn run_des(spec: FabricSpec) -> (u64, u64) {
+    let mut grad = QuadraticSource::new(DIM, 0.1, 0x11);
+    let mut eng = DesEngine::new(
+        DesStrategy::ShardedGoSgd { p: 0.3, shards: 4 },
+        TimeModel::paper_like(),
+        WORKERS,
+        &FlatVec::zeros(DIM),
+        1.0,
+        0.0,
+        0xFAB1,
+    )
+    .unwrap()
+    .with_fabric(spec);
+    eng.run(&mut grad, HORIZON).unwrap();
+    let rep = eng.report();
+    (rep.steps, rep.messages)
+}
+
+fn main() {
+    let mut b = Bencher::new("fabric_throughput");
+
+    // Step + message counts per run, so mean_ns translates to events/sec.
+    let specs = [
+        ("ideal", FabricSpec::Ideal),
+        ("rack", FabricSpec::Rack),
+        ("wan", FabricSpec::Wan),
+        ("edge", FabricSpec::Edge),
+    ];
+    let mut means = Vec::new();
+    for (label, spec) in specs {
+        let (steps, messages) = run_des(spec);
+        assert!(steps > 0 && messages > 0, "{label}: empty run");
+        let mean = b
+            .bench_elems(&format!("des_30s_{label}"), steps + messages, || {
+                std::hint::black_box(run_des(spec));
+            })
+            .mean_ns;
+        means.push((label, mean));
+    }
+
+    let ideal = means[0].1;
+    println!();
+    for &(label, mean) in &means[1..] {
+        let slowdown = mean / ideal;
+        println!("{label:<5} vs ideal: {slowdown:.2}x wall time");
+        if label != "edge" {
+            assert!(
+                slowdown < 3.0,
+                "acceptance: {label} fabric must stay under 3x the ideal DES \
+                 wall time, got {slowdown:.2}x"
+            );
+        }
+    }
+
+    b.finish();
+}

@@ -23,7 +23,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::gossip::{CodecSpec, ShardPlan};
 use crate::metrics::{ema_series, CsvWriter};
-use crate::sim::{DesEngine, DesStrategy, TimeModel};
+use crate::sim::{DesEngine, DesStrategy, FabricSpec, TimeModel};
 use crate::strategies::grad::QuadraticSource;
 use crate::tensor::FlatVec;
 
@@ -44,6 +44,9 @@ pub struct CodecFigConfig {
     /// Simulated horizon in seconds.
     pub horizon_secs: f64,
     pub time_model: TimeModel,
+    /// Network model every series runs through (`Ideal` reproduces the
+    /// pre-fabric figures; a finite preset adds NIC/switch contention).
+    pub fabric: FabricSpec,
     pub seed: u64,
     pub eta: f32,
     pub weight_decay: f32,
@@ -66,6 +69,7 @@ impl Default for CodecFigConfig {
             sigma: 0.2,
             horizon_secs: 120.0,
             time_model: TimeModel::paper_like(),
+            fabric: FabricSpec::Ideal,
             seed: 0,
             eta: 1.0,
             weight_decay: 0.0,
@@ -123,7 +127,8 @@ fn run_one(cfg: &CodecFigConfig, spec: CodecSpec, effective_p: f64) -> Result<Co
         cfg.weight_decay,
         cfg.seed,
     )?
-    .with_codec(spec);
+    .with_codec(spec)
+    .with_fabric(cfg.fabric);
     eng.run(&mut grad, cfg.horizon_secs)?;
     let consensus_error = eng.consensus_error()?;
     let rep = eng.report();
@@ -263,6 +268,18 @@ mod tests {
         let series = run(&cfg, None).unwrap();
         assert_eq!(series.len(), 2);
         assert!(series.iter().all(|s| s.steps > 0));
+    }
+
+    #[test]
+    fn codec_grid_runs_through_a_finite_fabric() {
+        let cfg = CodecFigConfig {
+            fabric: FabricSpec::Rack,
+            horizon_secs: 20.0,
+            ..small_cfg()
+        };
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 3);
+        assert!(series.iter().all(|s| s.steps > 0 && s.messages > 0));
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! Fabric-comparison harness: consensus distance and train loss across
+//! network fabrics at **equal fabric budget** (DES).
+//!
+//! The codec and topology harnesses ask which protocol choice converts a
+//! byte into the most progress — under an ideal network.  This harness
+//! inverts the question: the protocol is pinned (same `(p, shards,
+//! codec, topology)` for every series, so the *offered* traffic is
+//! identical by construction — the equal fabric budget) and only the
+//! network changes, from the ideal scalar-latency model through the
+//! `rack` / `wan` / `edge` presets.  What the figure shows is how much
+//! consensus and loss progress the same gossip stream loses to NIC
+//! serialization, link delay + jitter, and switch oversubscription —
+//! the contention costs GossipGraD argues actually decide the
+//! gossip-vs-all-reduce question.
+//!
+//! Consensus is sampled along the horizon (the DES resumes across `run`
+//! calls), so the output carries a per-fabric *consensus curve* next to
+//! the loss curve, plus the fabric's queueing-delay accounting.
+//!
+//! ```text
+//! cargo run --release -- figure --figure fabrics \
+//!     --p 0.3 --shards 4 --fabrics ideal,rack,wan,edge \
+//!     --horizon 120 --out results/fabrics.csv
+//! ```
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::gossip::{CodecSpec, TopologySpec};
+use crate::metrics::{ema_series, CsvWriter};
+use crate::sim::{DesEngine, DesStrategy, FabricSpec, TimeModel};
+use crate::strategies::grad::QuadraticSource;
+use crate::tensor::FlatVec;
+
+/// Configuration for the fabric comparison.
+#[derive(Clone, Debug)]
+pub struct FabricFigConfig {
+    pub workers: usize,
+    /// Exchange probability — shared by every series (equal offered load).
+    pub p: f64,
+    /// Gossip shards per exchange (1 = whole-vector messages).
+    pub shards: usize,
+    /// Payload codec — shared by every series.
+    pub codec: CodecSpec,
+    /// Receiver-selection topology — shared by every series.
+    pub topology: TopologySpec,
+    /// Fabrics to compare.
+    pub fabrics: Vec<FabricSpec>,
+    /// Quadratic-backend dimension and gradient noise.
+    pub dim: usize,
+    pub sigma: f32,
+    /// Simulated horizon in seconds.
+    pub horizon_secs: f64,
+    pub time_model: TimeModel,
+    /// Consensus samples taken along the horizon.
+    pub samples: usize,
+    pub seed: u64,
+    pub eta: f32,
+    pub weight_decay: f32,
+    /// EMA smoothing for the loss traces.
+    pub ema_beta: f64,
+}
+
+impl Default for FabricFigConfig {
+    fn default() -> Self {
+        FabricFigConfig {
+            workers: 8,
+            p: 0.3,
+            shards: 4,
+            codec: CodecSpec::Dense,
+            topology: TopologySpec::UniformRandom,
+            fabrics: vec![
+                FabricSpec::Ideal,
+                FabricSpec::Rack,
+                FabricSpec::Wan,
+                FabricSpec::Edge,
+            ],
+            dim: 4096,
+            sigma: 0.2,
+            horizon_secs: 120.0,
+            time_model: TimeModel::paper_like(),
+            samples: 40,
+            seed: 0,
+            eta: 1.0,
+            weight_decay: 0.0,
+            ema_beta: 0.95,
+        }
+    }
+}
+
+/// One fabric's series.
+#[derive(Clone, Debug)]
+pub struct FabricSeries {
+    pub label: String,
+    /// `(sim_seconds, ema_loss)`.
+    pub loss: Vec<(f64, f64)>,
+    /// `(sim_seconds, Σ_m ‖x_m − x̄‖²)` sampled along the horizon.
+    pub consensus: Vec<(f64, f64)>,
+    pub steps: u64,
+    pub messages: u64,
+    /// Encoded wire bytes actually shipped.
+    pub bytes: u64,
+    /// Total seconds messages spent queued inside the fabric (sender
+    /// NICs + switch + receiver NICs); 0 under the ideal model.
+    pub queued_secs: f64,
+    /// Peak per-worker transmit-link utilization; 0 under ideal.
+    pub peak_nic_utilization: f64,
+    /// Final consensus error.
+    pub final_consensus: f64,
+}
+
+fn run_one(cfg: &FabricFigConfig, fabric: FabricSpec) -> Result<FabricSeries> {
+    let mut grad = QuadraticSource::new(cfg.dim, cfg.sigma, cfg.seed ^ 0xFAB);
+    let init = FlatVec::zeros(cfg.dim);
+    let strategy = if cfg.shards > 1 {
+        DesStrategy::ShardedGoSgd { p: cfg.p, shards: cfg.shards }
+    } else {
+        DesStrategy::GoSgd { p: cfg.p }
+    };
+    let mut eng = DesEngine::new(
+        strategy,
+        cfg.time_model.clone(),
+        cfg.workers,
+        &init,
+        cfg.eta,
+        cfg.weight_decay,
+        cfg.seed,
+    )?
+    .with_codec(cfg.codec)
+    .with_topology(cfg.topology)
+    .with_fabric(fabric);
+    // The DES resumes across run calls, so consensus can be sampled along
+    // the horizon without disturbing the event stream.
+    let mut consensus = Vec::with_capacity(cfg.samples);
+    for i in 1..=cfg.samples.max(1) {
+        let t = cfg.horizon_secs * i as f64 / cfg.samples.max(1) as f64;
+        eng.run(&mut grad, t)?;
+        consensus.push((t, eng.consensus_error()?));
+    }
+    let final_consensus = eng.consensus_error()?;
+    let rep = eng.report();
+    let (queued_secs, peak_nic_utilization) = match &rep.fabric {
+        Some(stats) => {
+            let peak = stats
+                .nic_utilization(rep.end_time)
+                .into_iter()
+                .fold(0.0f64, f64::max);
+            (stats.queued_secs(), peak)
+        }
+        None => (0.0, 0.0),
+    };
+    Ok(FabricSeries {
+        label: fabric.label(),
+        loss: ema_series(&rep.trace, cfg.ema_beta),
+        consensus,
+        steps: rep.steps,
+        messages: rep.messages,
+        bytes: rep.bytes,
+        queued_secs,
+        peak_nic_utilization,
+        final_consensus,
+    })
+}
+
+/// Run every configured fabric under the shared offered load.
+pub fn run(cfg: &FabricFigConfig, out: Option<&Path>) -> Result<Vec<FabricSeries>> {
+    if !(cfg.p > 0.0 && cfg.p <= 1.0) {
+        return Err(Error::config(format!(
+            "fabric comparison needs an exchange probability in (0, 1], got {}",
+            cfg.p
+        )));
+    }
+    if cfg.fabrics.is_empty() {
+        return Err(Error::config("fabric comparison needs at least one fabric"));
+    }
+    if cfg.shards == 0 || (cfg.shards > 1 && cfg.shards > cfg.dim) {
+        return Err(Error::config(format!(
+            "cannot cut {} parameters into {} shards",
+            cfg.dim, cfg.shards
+        )));
+    }
+    // Fail the whole grid up front rather than after minutes of sim.
+    cfg.topology.validate_for(cfg.workers)?;
+    let mut series = Vec::with_capacity(cfg.fabrics.len());
+    for &fabric in &cfg.fabrics {
+        series.push(run_one(cfg, fabric)?);
+    }
+    if let Some(path) = out {
+        // Two curves per fabric, tagged `<label>/loss` and
+        // `<label>/consensus`.
+        let mut csv = CsvWriter::create(path, &["series", "sim_seconds", "value"])?;
+        for s in &series {
+            let loss_tag = format!("{}/loss", s.label);
+            for &(t, l) in &s.loss {
+                csv.write_tagged_row(&loss_tag, &[t, l])?;
+            }
+            let eps_tag = format!("{}/consensus", s.label);
+            for &(t, e) in &s.consensus {
+                csv.write_tagged_row(&eps_tag, &[t, e])?;
+            }
+        }
+        csv.flush()?;
+    }
+    Ok(series)
+}
+
+/// Console table with the headline comparison.
+pub fn format_table(series: &[FabricSeries]) -> String {
+    let mut out = String::from(
+        "fabric        steps   messages    enc_MB   queued_s  peak_util   consensus_eps\n",
+    );
+    for s in series {
+        out.push_str(&format!(
+            "{:<12} {:>6}  {:>9}  {:>8.2}  {:>9.2}  {:>9.3}  {:>14.5}\n",
+            s.label,
+            s.steps,
+            s.messages,
+            s.bytes as f64 / 1e6,
+            s.queued_secs,
+            s.peak_nic_utilization,
+            s.final_consensus,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> FabricFigConfig {
+        FabricFigConfig {
+            dim: 256,
+            shards: 4,
+            p: 0.3,
+            horizon_secs: 40.0,
+            samples: 10,
+            seed: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fabric_grid_runs_at_equal_offered_load() {
+        let cfg = small_cfg();
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 4);
+        let by_label = |l: &str| {
+            series
+                .iter()
+                .find(|s| s.label == l)
+                .unwrap_or_else(|| panic!("missing series {l}"))
+        };
+        let ideal = by_label("ideal");
+        assert_eq!(ideal.queued_secs, 0.0, "the ideal model never queues");
+        for s in &series {
+            assert!(s.steps > 0 && s.messages > 0, "{} sent nothing", s.label);
+            // Equal fabric budget: fire-and-forget compute is untouched by
+            // the network, so every series offers the same load within
+            // stochastic noise.
+            let ratio = s.messages as f64 / ideal.messages as f64;
+            assert!(
+                (0.8..1.25).contains(&ratio),
+                "{}: offered load drifted ({} vs ideal {})",
+                s.label,
+                s.messages,
+                ideal.messages
+            );
+            assert!(!s.loss.is_empty());
+            assert_eq!(s.consensus.len(), cfg.samples);
+            for w in s.consensus.windows(2) {
+                assert!(w[0].0 < w[1].0);
+            }
+            assert!(s.final_consensus.is_finite());
+            assert!((0.0..1.0).contains(&s.peak_nic_utilization), "{}", s.label);
+            // Everyone still trains through every fabric.
+            let early: f64 = s.loss.iter().take(30).map(|(_, l)| l).sum::<f64>() / 30.0;
+            let late: f64 =
+                s.loss[s.loss.len() - 30..].iter().map(|(_, l)| l).sum::<f64>() / 30.0;
+            assert!(late < early, "{}: {early} -> {late}", s.label);
+        }
+    }
+
+    #[test]
+    fn congested_custom_fabric_accumulates_queueing_delay() {
+        // A deliberately starved custom fabric (10 kB/s NICs) must show
+        // the queueing the presets are calibrated to mostly avoid.
+        let cfg = FabricFigConfig {
+            fabrics: vec![FabricSpec::parse("custom:0.01:1:4").unwrap()],
+            dim: 1024,
+            horizon_secs: 20.0,
+            samples: 4,
+            ..small_cfg()
+        };
+        let series = run(&cfg, None).unwrap();
+        assert!(
+            series[0].queued_secs > 0.0,
+            "starved NICs must queue, got {}",
+            series[0].queued_secs
+        );
+        assert!(series[0].peak_nic_utilization > 0.1);
+    }
+
+    #[test]
+    fn degenerate_knobs_are_config_errors() {
+        let cfg = FabricFigConfig { p: 0.0, ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+        let cfg = FabricFigConfig { fabrics: Vec::new(), ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+        let cfg = FabricFigConfig { shards: 4096, ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+        // Hypercube + a non-power-of-two fleet fails up front.
+        let cfg = FabricFigConfig {
+            workers: 6,
+            topology: TopologySpec::Hypercube,
+            ..small_cfg()
+        };
+        assert!(run(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn csv_written_with_both_curves() {
+        let dir = std::env::temp_dir().join("gosgd_fabrics_test");
+        let path = dir.join("fabrics.csv");
+        let cfg = FabricFigConfig {
+            horizon_secs: 10.0,
+            dim: 64,
+            samples: 4,
+            fabrics: vec![FabricSpec::Ideal, FabricSpec::Rack],
+            ..small_cfg()
+        };
+        run(&cfg, Some(&path)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,sim_seconds,value\n"));
+        assert!(text.contains("rack/loss,"));
+        assert!(text.contains("rack/consensus,"));
+        assert!(text.contains("ideal/consensus,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

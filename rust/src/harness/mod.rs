@@ -16,8 +16,12 @@
 //! * [`topologies`] — beyond the paper: consensus distance and train
 //!   loss across gossip topologies (uniform / ring / hypercube /
 //!   partner rotation) at equal encoded-byte budget (DES).
+//! * [`fabrics`] — beyond the paper: the same gossip stream through the
+//!   ideal / rack / wan / edge network fabrics at equal offered load
+//!   (DES with finite-bandwidth fabric).
 
 pub mod codecs;
+pub mod fabrics;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;

@@ -26,7 +26,7 @@ use std::path::Path;
 
 use crate::error::Result;
 use crate::metrics::{ema_series, CsvWriter};
-use crate::sim::{DesEngine, DesStrategy, ScenarioModel, TimeModel};
+use crate::sim::{DesEngine, DesStrategy, FabricSpec, ScenarioModel, TimeModel};
 use crate::strategies::grad::QuadraticSource;
 use crate::tensor::FlatVec;
 
@@ -44,6 +44,11 @@ pub struct ScenarioConfig {
     /// Simulated horizon in seconds.
     pub horizon_secs: f64,
     pub time_model: TimeModel,
+    /// Network model for the gossip series (`Ideal` reproduces the
+    /// pre-fabric figures).  The PerSyn baseline always runs ideal: its
+    /// barrier synchronizes through master paths the fabric does not
+    /// model, and the engine rejects the combination.
+    pub fabric: FabricSpec,
     /// Compute multipliers for the hetero series, cycled over the workers
     /// (`w % len`, matching [`ScenarioModel::scale`]).  Empty = the
     /// default shape: every worker at 1.0 except one 4× straggler.
@@ -68,6 +73,7 @@ impl Default for ScenarioConfig {
             sigma: 0.2,
             horizon_secs: 120.0,
             time_model: TimeModel::paper_like(),
+            fabric: FabricSpec::Ideal,
             // Empty = derive the default shape (one 4× straggler).
             compute_scale: Vec::new(),
             crash_mtbf: 20.0,
@@ -102,6 +108,14 @@ fn run_one(
 ) -> Result<ScenarioSeries> {
     let mut grad = QuadraticSource::new(cfg.dim, cfg.sigma, cfg.seed ^ 0x5CE0);
     let init = FlatVec::zeros(cfg.dim);
+    // Only the fire-and-forget series route through a finite fabric; the
+    // barrier baseline keeps the ideal model (the engine would reject the
+    // combination as a config error).
+    let fabric = if strategy.fire_and_forget() {
+        cfg.fabric
+    } else {
+        FabricSpec::Ideal
+    };
     let mut eng = DesEngine::new(
         strategy,
         cfg.time_model.clone(),
@@ -111,7 +125,8 @@ fn run_one(
         cfg.weight_decay,
         cfg.seed,
     )?
-    .with_scenario(scenario);
+    .with_scenario(scenario)
+    .with_fabric(fabric);
     eng.run(&mut grad, cfg.horizon_secs)?;
     let rep = eng.report();
     Ok(ScenarioSeries {
@@ -294,6 +309,20 @@ mod tests {
         let cfg = ScenarioConfig { shards: 4, ..small_cfg() };
         let series = run(&cfg, None).unwrap();
         assert!(series[0].messages > 0);
+        assert!(series.iter().all(|s| s.steps > 0));
+    }
+
+    #[test]
+    fn scenario_grid_runs_through_a_finite_fabric() {
+        // The gossip series take the fabric; PerSyn silently keeps ideal
+        // (instead of erroring the whole grid out).
+        let cfg = ScenarioConfig {
+            fabric: FabricSpec::Wan,
+            horizon_secs: 30.0,
+            ..small_cfg()
+        };
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 6);
         assert!(series.iter().all(|s| s.steps > 0));
     }
 

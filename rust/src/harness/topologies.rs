@@ -27,7 +27,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::gossip::{CodecSpec, TopologySpec};
 use crate::metrics::{ema_series, CsvWriter};
-use crate::sim::{DesEngine, DesStrategy, TimeModel};
+use crate::sim::{DesEngine, DesStrategy, FabricSpec, TimeModel};
 use crate::strategies::grad::QuadraticSource;
 use crate::tensor::FlatVec;
 
@@ -49,6 +49,9 @@ pub struct TopoFigConfig {
     /// Simulated horizon in seconds.
     pub horizon_secs: f64,
     pub time_model: TimeModel,
+    /// Network model every series runs through (`Ideal` reproduces the
+    /// pre-fabric figures; a finite preset adds NIC/switch contention).
+    pub fabric: FabricSpec,
     /// Consensus samples taken along the horizon.
     pub samples: usize,
     pub seed: u64,
@@ -75,6 +78,7 @@ impl Default for TopoFigConfig {
             sigma: 0.2,
             horizon_secs: 120.0,
             time_model: TimeModel::paper_like(),
+            fabric: FabricSpec::Ideal,
             samples: 40,
             seed: 0,
             eta: 1.0,
@@ -118,7 +122,8 @@ fn run_one(cfg: &TopoFigConfig, topology: TopologySpec) -> Result<TopoSeries> {
         cfg.seed,
     )?
     .with_codec(cfg.codec)
-    .with_topology(topology);
+    .with_topology(topology)
+    .with_fabric(cfg.fabric);
     // The DES resumes across run calls, so consensus can be sampled along
     // the horizon without disturbing the event stream.
     let mut consensus = Vec::with_capacity(cfg.samples);
@@ -269,6 +274,20 @@ mod tests {
         // Hypercube in the grid + a non-power-of-two fleet fails up front.
         let cfg = TopoFigConfig { workers: 6, ..small_cfg() };
         assert!(run(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn topology_grid_runs_through_a_finite_fabric() {
+        let cfg = TopoFigConfig {
+            fabric: FabricSpec::Rack,
+            topologies: vec![TopologySpec::UniformRandom, TopologySpec::Ring],
+            horizon_secs: 20.0,
+            samples: 5,
+            ..small_cfg()
+        };
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 2);
+        assert!(series.iter().all(|s| s.steps > 0 && s.messages > 0));
     }
 
     #[test]

@@ -23,9 +23,10 @@ use gosgd::error::Result;
 use gosgd::gossip::PeerSelector;
 use gosgd::gossip::CodecSpec;
 use gosgd::gossip::TopologySpec;
-use gosgd::harness::{codecs, fig1, fig2, fig3, fig4, scenarios, topologies, variance};
+use gosgd::harness::{codecs, fabrics, fig1, fig2, fig3, fig4, scenarios, topologies, variance};
 use gosgd::model::Manifest;
 use gosgd::optim::LrSchedule;
+use gosgd::sim::FabricSpec;
 use gosgd::util::cli::Args;
 
 fn main() {
@@ -156,22 +157,46 @@ fn cmd_consensus(argv: Vec<String>) -> Result<()> {
 
 fn cmd_figure(argv: Vec<String>) -> Result<()> {
     let a = Args::new("gosgd figure", "regenerate a paper figure's series")
-        .opt("figure", "fig1", "fig1 | fig2 | fig3 | scenarios | codecs | topologies")
+        .opt(
+            "figure",
+            "fig1",
+            "fig1 | fig2 | fig3 | scenarios | codecs | topologies | fabrics",
+        )
         .opt("artifacts", "artifacts", "artifact directory root")
         .opt("model", "tiny", "model variant")
         .opt("workers", "8", "number of workers")
         .opt("iterations", "150", "worker iterations (fig1/fig3)")
         .opt("ps", "0.01,0.4", "exchange probabilities (fig1/fig3)")
-        .opt("p", "0.02", "exchange probability (fig2/scenarios/codecs/topologies)")
-        .opt("shards", "1", "gossip shards per exchange (fig2/scenarios/codecs/topologies)")
+        .opt("p", "0.02", "exchange probability (fig2/scenarios/codecs/topologies/fabrics)")
+        .opt(
+            "shards",
+            "1",
+            "gossip shards per exchange (fig2/scenarios/codecs/topologies/fabrics)",
+        )
         .opt("codecs", "dense,top32,q8", "payload codecs to compare (codecs)")
-        .opt("codec", "dense", "payload codec shared by every series (topologies)")
+        .opt("codec", "dense", "payload codec shared by every series (topologies/fabrics)")
         .opt(
             "topologies",
             "uniform,ring,hypercube,rotation",
             "gossip topologies to compare (topologies)",
         )
-        .opt("horizon", "120", "simulated seconds (fig2/scenarios/codecs/topologies)")
+        .opt(
+            "topology",
+            "uniform",
+            "gossip topology shared by every series (fabrics)",
+        )
+        .opt(
+            "fabric",
+            "ideal",
+            "network fabric: ideal | rack | wan | edge | custom:BW_MBS:DELAY_MS:OVERSUB[:JFRAC] \
+             (scenarios/codecs/topologies)",
+        )
+        .opt(
+            "fabrics",
+            "ideal,rack,wan,edge",
+            "network fabrics to compare (fabrics)",
+        )
+        .opt("horizon", "120", "simulated seconds (fig2/scenarios/codecs/topologies/fabrics)")
         .opt("backend", "quadratic", "fig2 gradients: quadratic | pjrt")
         .opt(
             "hetero",
@@ -248,6 +273,7 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
                 shards: a.get_usize("shards")?,
                 codecs: codec_specs,
                 horizon_secs: a.get_f64("horizon")?,
+                fabric: FabricSpec::parse(a.get("fabric")?)?,
                 seed: a.get_u64("seed")?,
                 ..Default::default()
             };
@@ -267,11 +293,32 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
                 codec: CodecSpec::parse(a.get("codec")?)?,
                 topologies: topo_specs,
                 horizon_secs: a.get_f64("horizon")?,
+                fabric: FabricSpec::parse(a.get("fabric")?)?,
                 seed: a.get_u64("seed")?,
                 ..Default::default()
             };
             let series = topologies::run(&cfg, out.as_deref())?;
             println!("{}", topologies::format_table(&series));
+        }
+        "fabrics" => {
+            let fabric_specs = a
+                .get("fabrics")?
+                .split(',')
+                .map(|s| FabricSpec::parse(s.trim()))
+                .collect::<Result<Vec<FabricSpec>>>()?;
+            let cfg = fabrics::FabricFigConfig {
+                workers: a.get_usize("workers")?,
+                p: a.get_f64("p")?,
+                shards: a.get_usize("shards")?,
+                codec: CodecSpec::parse(a.get("codec")?)?,
+                topology: TopologySpec::parse(a.get("topology")?)?,
+                fabrics: fabric_specs,
+                horizon_secs: a.get_f64("horizon")?,
+                seed: a.get_u64("seed")?,
+                ..Default::default()
+            };
+            let series = fabrics::run(&cfg, out.as_deref())?;
+            println!("{}", fabrics::format_table(&series));
         }
         "scenarios" => {
             let cfg = scenarios::ScenarioConfig {
@@ -285,6 +332,7 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
                 },
                 crash_mtbf: a.get_f64("mtbf")?,
                 rejoin_mttr: a.get_f64("mttr")?,
+                fabric: FabricSpec::parse(a.get("fabric")?)?,
                 seed: a.get_u64("seed")?,
                 ..Default::default()
             };

@@ -19,9 +19,13 @@ use crate::error::{Error, Result};
 use crate::gossip::{
     wire_bytes_for, CodecSpec, EncodedPayload, ProtocolCore, Shard, SumWeight, TopologySpec,
 };
+use crate::sim::fabric::{Delivery, Fabric, FabricSpec, FabricStats};
 use crate::strategies::grad::GradSource;
 use crate::tensor::{BufferPool, FlatVec};
 use crate::util::rng::Rng;
+
+/// What a gossip message carries while inside the network fabric.
+type GossipMsg = (Shard, EncodedPayload, f64);
 
 /// Cluster timing parameters (seconds).
 #[derive(Clone, Debug)]
@@ -148,14 +152,23 @@ impl DesStrategy {
         }
     }
 
-    /// Gossip (fire-and-forget) strategies tolerate churn; the barrier
-    /// strategies would deadlock on a crashed member without membership
-    /// logic the paper's baselines don't have.
-    fn supports_churn(&self) -> bool {
+    /// The fire-and-forget strategies: every message they send is an
+    /// asynchronous `Outbound` the engine can route through the network
+    /// fabric, and a crashed peer never deadlocks them.  The barrier
+    /// strategies (and the symmetric-gossip ablation) synchronize through
+    /// rendezvous/master abstractions the fabric does not model.
+    pub fn fire_and_forget(&self) -> bool {
         matches!(
             self,
             DesStrategy::GoSgd { .. } | DesStrategy::ShardedGoSgd { .. } | DesStrategy::Local
         )
+    }
+
+    /// Gossip (fire-and-forget) strategies tolerate churn; the barrier
+    /// strategies would deadlock on a crashed member without membership
+    /// logic the paper's baselines don't have.
+    fn supports_churn(&self) -> bool {
+        self.fire_and_forget()
     }
 
     /// The protocol core's exchange configuration for this strategy
@@ -186,6 +199,12 @@ enum EventKind {
     /// A crashed worker comes back with its preserved state (warm restart
     /// from local checkpoint) and drains its backlog at the next wake.
     Rejoin(usize),
+    /// The finite-bandwidth fabric has an internal transition due (a
+    /// message finishing a NIC, link, or switch hop).  The engine keeps
+    /// exactly one *useful* tick pending: scheduled at the fabric's
+    /// earliest transition, re-armed after every fire and after any
+    /// inject that creates an earlier transition.
+    FabricTick,
 }
 
 struct Event {
@@ -238,6 +257,54 @@ pub struct DesReport {
     pub downtime_secs: f64,
     /// Final simulated time.
     pub end_time: f64,
+    /// Per-worker queueing-delay and link-utilization accounting when a
+    /// finite-bandwidth fabric is active (`None` under the ideal scalar
+    /// model).
+    pub fabric: Option<FabricStats>,
+}
+
+/// FNV-1a over one little-endian `u64`.
+fn fnv(h: &mut u64, x: u64) {
+    for b in x.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+impl DesReport {
+    /// Order-sensitive hash of the full event outcome: every trace point
+    /// (time and loss at f64 bit precision), the message/byte/step
+    /// counters, and the fabric accounting.  Two runs with the same seed
+    /// and configuration must produce the same hash — the determinism
+    /// contract the fabric-invariants suite pins, including under
+    /// jittered latency distributions.
+    pub fn trace_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        fnv(&mut h, self.messages);
+        fnv(&mut h, self.bytes);
+        fnv(&mut h, self.raw_bytes);
+        fnv(&mut h, self.steps);
+        fnv(&mut h, self.crashes);
+        fnv(&mut h, self.blocked_secs.to_bits());
+        fnv(&mut h, self.downtime_secs.to_bits());
+        fnv(&mut h, self.end_time.to_bits());
+        for (t, loss) in &self.trace {
+            fnv(&mut h, t.to_bits());
+            fnv(&mut h, loss.to_bits());
+        }
+        if let Some(stats) = &self.fabric {
+            fnv(&mut h, stats.injected);
+            fnv(&mut h, stats.delivered);
+            fnv(&mut h, stats.switch_queue_secs.to_bits());
+            fnv(&mut h, stats.switch_busy_secs.to_bits());
+            for xs in [&stats.nic_queue_secs, &stats.nic_busy_secs, &stats.rx_queue_secs] {
+                for x in xs {
+                    fnv(&mut h, x.to_bits());
+                }
+            }
+        }
+        h
+    }
 }
 
 struct WorkerState {
@@ -264,6 +331,16 @@ pub struct DesEngine {
     /// Receiver-selection topology for the gossip strategies (uniform
     /// random by default); applied to every worker's core at `start`.
     topology: TopologySpec,
+    /// Network model selection (`Ideal` = the scalar latency function).
+    fabric_spec: FabricSpec,
+    /// The finite-bandwidth fabric, instantiated at `start` when the spec
+    /// is not `Ideal`.  `None` keeps the pre-fabric scalar path —
+    /// bit-identical, same RNG draw order.
+    fabric: Option<Fabric<GossipMsg>>,
+    /// Time of the earliest pending `FabricTick` (`INFINITY` = none).
+    fabric_tick_at: f64,
+    /// Reusable delivery buffer for fabric ticks.
+    fabric_out: Vec<Delivery<GossipMsg>>,
     workers: Vec<WorkerState>,
     master: FlatVec,
 
@@ -340,6 +417,10 @@ impl DesEngine {
             time_model,
             scenario: ScenarioModel::none(),
             topology: TopologySpec::UniformRandom,
+            fabric_spec: FabricSpec::Ideal,
+            fabric: None,
+            fabric_tick_at: f64::INFINITY,
+            fabric_out: Vec::new(),
             workers: ws,
             master: init.clone(),
             barrier_arrivals: Vec::new(),
@@ -374,6 +455,19 @@ impl DesEngine {
     pub fn with_topology(mut self, topology: TopologySpec) -> Self {
         assert!(!self.started, "with_topology must precede run");
         self.topology = topology;
+        self
+    }
+
+    /// Select the network model (see [`crate::sim::fabric`]).  The
+    /// default [`FabricSpec::Ideal`] keeps the scalar latency function —
+    /// bit-identical to the pre-fabric engine — while the finite presets
+    /// route every gossip `Outbound` through NIC serialization queues,
+    /// jittered links, and the oversubscribed-switch arbiter.  Finite
+    /// fabrics are validated against the strategy (fire-and-forget only)
+    /// at the first [`DesEngine::run`].  Must be called before that run.
+    pub fn with_fabric(mut self, spec: FabricSpec) -> Self {
+        assert!(!self.started, "with_fabric must precede run");
+        self.fabric_spec = spec;
         self
     }
 
@@ -442,9 +536,20 @@ impl DesEngine {
             }
         }
         self.topology.validate_for(self.workers.len())?;
+        if self.fabric_spec != FabricSpec::Ideal && !self.strategy.fire_and_forget() {
+            return Err(Error::config(format!(
+                "a finite fabric routes asynchronous gossip messages; {} synchronizes \
+                 through rendezvous/master paths the fabric does not model — use \
+                 --fabric ideal for the barrier baselines",
+                self.strategy.name()
+            )));
+        }
         // Only latch after validation: a rejected scenario must keep
         // rejecting on a retried run, not fall through to an empty heap.
         self.started = true;
+        if let Some(params) = self.fabric_spec.params() {
+            self.fabric = Some(Fabric::new(self.workers.len(), params));
+        }
         if self.topology != TopologySpec::UniformRandom {
             for ws in &mut self.workers {
                 ws.core.set_topology(self.topology);
@@ -489,6 +594,24 @@ impl DesEngine {
                 }
                 EventKind::Crash(w) => self.crash(w, ev.time),
                 EventKind::Rejoin(w) => self.rejoin(w, ev.time),
+                EventKind::FabricTick => {
+                    // This tick may be stale (a later duplicate of one
+                    // that already advanced the fabric); advancing to
+                    // `ev.time` is idempotent, so firing it is harmless.
+                    self.fabric_tick_at = f64::INFINITY;
+                    let mut out = std::mem::take(&mut self.fabric_out);
+                    if let Some(fab) = self.fabric.as_mut() {
+                        fab.advance_into(ev.time, &mut self.rng, &mut out);
+                    }
+                    for d in out.drain(..) {
+                        // Delivered even while `dst` is down — mailbox
+                        // semantics are identical to the ideal path.
+                        let (shard, payload, weight) = d.item;
+                        self.workers[d.dst].mailbox.push((shard, payload, weight));
+                    }
+                    self.fabric_out = out;
+                    self.arm_fabric_tick();
+                }
             }
         }
         // Account the in-progress outages up to the point the run stopped
@@ -500,7 +623,26 @@ impl DesEngine {
                 ws.down_since = end;
             }
         }
+        if let Some(fab) = &self.fabric {
+            self.report.fabric = Some(fab.stats().clone());
+        }
         Ok(&self.report)
+    }
+
+    /// Keep a `FabricTick` pending at the fabric's earliest internal
+    /// transition.  Transitions are only created by `inject` (strictly
+    /// later than `now`) and by firing hops (strictly later than the hop:
+    /// bytes are positive and bandwidth finite), so scheduling whenever
+    /// the earliest transition moves *earlier* than the pending tick
+    /// guarantees no transition is ever reached late.
+    fn arm_fabric_tick(&mut self) {
+        let next = self.fabric.as_ref().and_then(|f| f.next_transition());
+        if let Some(t) = next {
+            if t < self.fabric_tick_at {
+                self.fabric_tick_at = t;
+                self.schedule(t, EventKind::FabricTick);
+            }
+        }
     }
 
     fn crash(&mut self, w: usize, now: f64) {
@@ -592,27 +734,38 @@ impl DesEngine {
                     ws.core.emit_alive(&ws.x, m, &mut self.rng, alive)?
                 };
                 if let Some(out) = out {
-                    // Bandwidth-dominated latency at paper-scale messages:
-                    // shipping a fraction of the full dense message's bytes
-                    // takes the same fraction of the one-way latency
-                    // (exactly 1.0 for an unsharded dense send), so both
-                    // sharding and payload codecs directly cut per-message
-                    // latency.
                     let encoded = out.wire_bytes();
-                    let frac = encoded as f64 / wire_bytes_for(dim, false) as f64;
-                    let latency = self.time_model.draw_latency(&mut self.rng) * frac;
                     self.report.messages += 1;
                     self.report.bytes += encoded as u64;
                     self.report.raw_bytes += out.raw_wire_bytes() as u64;
-                    self.schedule(
-                        now + latency,
-                        EventKind::Deliver {
-                            to: out.to,
-                            payload: out.payload,
-                            weight: out.weight.value(),
-                            shard: out.shard,
-                        },
-                    );
+                    if self.fabric.is_some() {
+                        // Finite fabric: the message's cost is its actual
+                        // byte count through NIC queues, jittered links,
+                        // and the switch arbiter — contention emerges
+                        // instead of being priced by a scalar.
+                        let msg = (out.shard, out.payload, out.weight.value());
+                        let fab = self.fabric.as_mut().expect("checked");
+                        fab.inject(w, out.to, encoded, now, &mut self.rng, msg);
+                        self.arm_fabric_tick();
+                    } else {
+                        // Ideal model — bandwidth-dominated latency at
+                        // paper-scale messages: shipping a fraction of the
+                        // full dense message's bytes takes the same
+                        // fraction of the one-way latency (exactly 1.0 for
+                        // an unsharded dense send), so both sharding and
+                        // payload codecs directly cut per-message latency.
+                        let frac = encoded as f64 / wire_bytes_for(dim, false) as f64;
+                        let latency = self.time_model.draw_latency(&mut self.rng) * frac;
+                        self.schedule(
+                            now + latency,
+                            EventKind::Deliver {
+                                to: out.to,
+                                payload: out.payload,
+                                weight: out.weight.value(),
+                                shard: out.shard,
+                            },
+                        );
+                    }
                 }
                 // Fire-and-forget: compute continues immediately.
                 let dt = self.draw_compute_for(w);
@@ -771,6 +924,30 @@ impl DesEngine {
     /// Per-worker, per-shard sum weights (conservation diagnostics).
     pub fn worker_weights(&self) -> Vec<Vec<f64>> {
         self.workers.iter().map(|s| s.core.weight_values()).collect()
+    }
+
+    /// Per-shard sum-weight mass currently *in flight*: mailboxes,
+    /// undelivered `Deliver` events, and messages inside the fabric.
+    /// Adding [`DesEngine::worker_weights`] must give exactly 1 per shard
+    /// at any instant — the conservation invariant the fabric test suite
+    /// audits under churn.
+    pub fn pending_shard_mass(&self) -> Vec<f64> {
+        let shards = self.workers[0].core.weight_values().len();
+        let mut totals = vec![0.0f64; shards];
+        for ws in &self.workers {
+            for (shard, _, weight) in &ws.mailbox {
+                totals[shard.index] += weight;
+            }
+        }
+        for ev in self.events.iter() {
+            if let EventKind::Deliver { weight, shard, .. } = &ev.kind {
+                totals[shard.index] += weight;
+            }
+        }
+        if let Some(fab) = &self.fabric {
+            fab.for_each_in_flight(|(shard, _, weight)| totals[shard.index] += weight);
+        }
+        totals
     }
 
     pub fn report(&self) -> &DesReport {
@@ -1331,5 +1508,168 @@ mod tests {
         assert!(err.to_string().contains("hypercube"), "{err}");
         // A rejected topology keeps rejecting on a retried run.
         assert!(eng.run(&mut grad, 10.0).is_err());
+    }
+
+    // ---- finite-bandwidth fabric under simulated time -------------------
+
+    fn run_fabric(spec: FabricSpec, horizon: f64, seed: u64) -> DesEngine {
+        let dim = 64;
+        let mut grad = QuadraticSource::new(dim, 0.1, seed);
+        let init = FlatVec::zeros(dim);
+        let mut eng = DesEngine::new(
+            DesStrategy::ShardedGoSgd { p: 0.3, shards: 4 },
+            TimeModel::paper_like(),
+            8,
+            &init,
+            1.0,
+            0.0,
+            seed ^ 0xD5,
+        )
+        .unwrap()
+        .with_fabric(spec);
+        eng.run(&mut grad, horizon).unwrap();
+        eng
+    }
+
+    #[test]
+    fn finite_fabric_conserves_mass_and_descends() {
+        for spec in [FabricSpec::Rack, FabricSpec::Wan, FabricSpec::Edge] {
+            let eng = run_fabric(spec, 40.0, 91);
+            let rep = eng.report();
+            assert!(rep.messages > 0, "{}", spec.label());
+            assert_eq!(rep.blocked_secs, 0.0, "fabric queueing is not blocking");
+            // Core + in-flight (mailboxes, heap, fabric) mass ≡ 1/shard.
+            let mut totals = eng.pending_shard_mass();
+            for ws in eng.worker_weights() {
+                for (k, v) in ws.iter().enumerate() {
+                    totals[k] += v;
+                }
+            }
+            for (k, total) in totals.iter().enumerate() {
+                assert!(
+                    (total - 1.0).abs() < 1e-9,
+                    "{}: shard {k} mass {total}",
+                    spec.label()
+                );
+            }
+            let early: f64 = rep.trace.iter().take(50).map(|(_, l)| l).sum::<f64>() / 50.0;
+            let n = rep.trace.len();
+            let late: f64 = rep.trace[n - 50..].iter().map(|(_, l)| l).sum::<f64>() / 50.0;
+            assert!(late < early * 0.7, "{}: {early} -> {late}", spec.label());
+        }
+    }
+
+    #[test]
+    fn ideal_fabric_spec_is_identical_to_default() {
+        let dim = 32;
+        let mut results = Vec::new();
+        for explicit in [false, true] {
+            let mut grad = QuadraticSource::new(dim, 0.1, 93);
+            let init = FlatVec::zeros(dim);
+            let mut eng = DesEngine::new(
+                DesStrategy::GoSgd { p: 0.2 },
+                TimeModel::paper_like(),
+                8,
+                &init,
+                1.0,
+                0.0,
+                93 ^ 0xD5,
+            )
+            .unwrap();
+            if explicit {
+                eng = eng.with_fabric(FabricSpec::Ideal);
+            }
+            eng.run(&mut grad, 20.0).unwrap();
+            assert!(eng.report().fabric.is_none(), "ideal = no fabric accounting");
+            results.push((eng.report().trace_hash(), eng.consensus_model().unwrap()));
+        }
+        assert_eq!(results[0].0, results[1].0);
+        assert_eq!(results[0].1.as_slice(), results[1].1.as_slice());
+    }
+
+    #[test]
+    fn fabric_report_exposes_queueing_and_utilization_stats() {
+        let eng = run_fabric(FabricSpec::Edge, 30.0, 95);
+        let rep = eng.report();
+        let stats = rep.fabric.as_ref().expect("finite fabric must report stats");
+        assert_eq!(stats.injected, rep.messages);
+        assert!(stats.delivered <= stats.injected);
+        assert!(stats.delivered > 0);
+        assert_eq!(stats.nic_busy_secs.len(), 8);
+        let util = stats.nic_utilization(rep.end_time);
+        assert!(util.iter().all(|u| (0.0..1.0).contains(u)), "{util:?}");
+        assert!(stats.nic_busy_secs.iter().sum::<f64>() > 0.0);
+    }
+
+    #[test]
+    fn fabric_deterministic_given_seed_including_jitter() {
+        // Edge has an exponential-tail jitter on every link sample; the
+        // full report must still be bit-identical across reruns.
+        let a = run_fabric(FabricSpec::Edge, 20.0, 97);
+        let b = run_fabric(FabricSpec::Edge, 20.0, 97);
+        assert_eq!(a.report().trace_hash(), b.report().trace_hash());
+        assert_eq!(
+            a.consensus_model().unwrap().as_slice(),
+            b.consensus_model().unwrap().as_slice()
+        );
+    }
+
+    #[test]
+    fn finite_fabric_with_barrier_strategy_is_a_config_error() {
+        let dim = 16;
+        let mut grad = QuadraticSource::new(dim, 0.1, 1);
+        let init = FlatVec::zeros(dim);
+        for strategy in [
+            DesStrategy::PerSyn { tau: 5 },
+            DesStrategy::Easgd { alpha: 0.1, tau: 5 },
+            DesStrategy::SymmetricGossip { p: 0.1 },
+        ] {
+            let mut eng = DesEngine::new(
+                strategy.clone(),
+                TimeModel::paper_like(),
+                4,
+                &init,
+                1.0,
+                0.0,
+                1,
+            )
+            .unwrap()
+            .with_fabric(FabricSpec::Rack);
+            let err = eng.run(&mut grad, 10.0).unwrap_err();
+            assert!(
+                err.to_string().contains("config"),
+                "{}: {err}",
+                strategy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fabric_resume_across_horizons_matches_single_run() {
+        // The fabric tick must survive a horizon pause: running 10 s then
+        // resuming to 30 s lands on the same final state as one 30 s run.
+        let whole = run_fabric(FabricSpec::Rack, 30.0, 99);
+        let dim = 64;
+        let mut grad = QuadraticSource::new(dim, 0.1, 99);
+        let init = FlatVec::zeros(dim);
+        let mut eng = DesEngine::new(
+            DesStrategy::ShardedGoSgd { p: 0.3, shards: 4 },
+            TimeModel::paper_like(),
+            8,
+            &init,
+            1.0,
+            0.0,
+            99 ^ 0xD5,
+        )
+        .unwrap()
+        .with_fabric(FabricSpec::Rack);
+        eng.run(&mut grad, 10.0).unwrap();
+        eng.run(&mut grad, 30.0).unwrap();
+        assert_eq!(eng.report().steps, whole.report().steps);
+        assert_eq!(eng.report().messages, whole.report().messages);
+        assert_eq!(
+            eng.consensus_model().unwrap().as_slice(),
+            whole.consensus_model().unwrap().as_slice()
+        );
     }
 }

@@ -1,0 +1,838 @@
+//! Finite-bandwidth network fabric for the discrete-event simulator.
+//!
+//! The pre-fabric DES charged a scalar latency per encoded byte — a pure
+//! propagation model.  Real gossip fleets lose time to **contention at
+//! shared resources** instead: a NIC serializes one message at a time, an
+//! oversubscribed top-of-rack switch throttles aggregate throughput, and
+//! queueing behind both dominates raw latency (GossipGraD, Daily et al.
+//! 2018; Jin et al. 2016 make the same point for the gossip-vs-all-reduce
+//! decision).  This module models that pipeline as a composable component
+//! chain in the spirit of the STEAM simulator's clock/rate-limiter kit
+//! (SNIPPETS.md §1):
+//!
+//! ```text
+//!  sender NIC queue ──▶ up link ──▶ switch arbiter ──▶ down link ──▶ receiver NIC queue
+//!  (serialize at      (delay +    (round-robin over   (delay +     (serialize at
+//!   `bandwidth`,       jitter)     flows, aggregate    jitter)      `bandwidth`,
+//!   FIFO per worker)               capacity =                       FIFO per worker)
+//!                                  M·bw / oversub)
+//! ```
+//!
+//! * **NIC serialization** — a message of `B` bytes occupies its worker's
+//!   NIC for `B / bandwidth` seconds; a second send issued while the first
+//!   is still transmitting queues behind it (FIFO per worker).
+//! * **Links** — each NIC↔switch hop adds a propagation `delay`, jittered
+//!   by an optional [`Jitter`] distribution.  Delivery is in-order per
+//!   flow (a jitter draw can never reorder two messages on the same link),
+//!   matching a reliable transport.
+//! * **Switch arbiter** — a shared uplink of aggregate capacity
+//!   `workers × bandwidth / oversub`.  Contending flows hold per-sender
+//!   FIFO queues and are served **fair round-robin**: when a transfer
+//!   completes, the arbiter resumes scanning from the flow after the one
+//!   it last served.  `oversub = 1` is a non-blocking switch; `oversub =
+//!   4` is the classic 4:1 oversubscribed ToR uplink.
+//!
+//! [`Fabric`] is generic over the payload it carries (`T`) and knows only
+//! `(src, dst, bytes, time)` — the DES threads gossip payloads through it,
+//! the invariants suite threads plain ids.  It advances on its own small
+//! event heap: [`Fabric::inject`] enqueues a message,
+//! [`Fabric::next_transition`] exposes the earliest pending internal hop,
+//! and [`Fabric::advance_into`] processes every hop due by `now`,
+//! yielding completed [`Delivery`]s.  Every random draw flows through the
+//! caller's [`Rng`], so a seeded run is exactly reproducible.
+//!
+//! [`FabricSpec`] is the plain-data configuration surface (`--fabric` on
+//! the CLI): the `ideal` scalar-latency model (byte-identical to the
+//! pre-fabric DES) plus `rack` / `wan` / `edge` presets and a fully
+//! custom form, with [`FabricSpec::parse`] rejecting nonsense (zero or
+//! negative bandwidth, NaN delay, oversubscription below 1) the same way
+//! [`PeerSelector::parse`](crate::gossip::PeerSelector::parse) does.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Per-link latency jitter distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Jitter {
+    /// Deterministic links: every delay sample equals the base delay.
+    None,
+    /// Multiplicative uniform jitter: `delay × (1 ± frac)`.
+    Uniform { frac: f64 },
+    /// Additive exponential tail with the given mean (seconds) on top of
+    /// the base delay — the heavy-tailed WAN/edge shape.
+    ExpTail { mean: f64 },
+}
+
+/// The finite-bandwidth fabric's knobs (all links share them; per-link
+/// heterogeneity composes on top by splitting fleets, not needed yet).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FabricParams {
+    /// Per-NIC line rate, bytes/second (paid once to serialize onto the
+    /// up link and once to serialize into the receiver).
+    pub bandwidth: f64,
+    /// One-way propagation delay per link hop, seconds (paid on the up
+    /// link and again on the down link).
+    pub delay: f64,
+    /// Jitter applied to every link-delay sample.
+    pub jitter: Jitter,
+    /// Switch oversubscription ratio (≥ 1): the shared uplink's aggregate
+    /// capacity is `workers × bandwidth / oversub`.
+    pub oversub: f64,
+}
+
+impl FabricParams {
+    /// One jittered link-delay sample.
+    fn sample_delay(&self, rng: &mut Rng) -> f64 {
+        match self.jitter {
+            Jitter::None => self.delay,
+            Jitter::Uniform { frac } => self.delay * (1.0 + frac * (2.0 * rng.f64() - 1.0)),
+            Jitter::ExpTail { mean } => self.delay - mean * (1.0 - rng.f64()).ln(),
+        }
+    }
+
+    /// The smallest delay a link can ever sample — the propagation term
+    /// of the ideal-latency lower bound.
+    pub fn min_delay(&self) -> f64 {
+        match self.jitter {
+            Jitter::None | Jitter::ExpTail { .. } => self.delay,
+            Jitter::Uniform { frac } => self.delay * (1.0 - frac),
+        }
+    }
+}
+
+/// The `--fabric` configuration surface: the ideal (scalar-latency) model
+/// or a finite-bandwidth preset/custom parameter set.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FabricSpec {
+    /// Scalar latency per encoded byte — byte-identical to the pre-fabric
+    /// DES, so every PR 3–5 figure stays reproducible.
+    Ideal,
+    /// Single rack behind a non-blocking ToR switch: 1 Gb/s NICs, 0.2 ms
+    /// links with mild uniform jitter.
+    Rack,
+    /// Cross-region WAN: 200 Mb/s effective per worker, 30 ms links with
+    /// a 10 ms exponential tail, 4:1 oversubscribed shared uplink.
+    Wan,
+    /// Edge/mobile: 20 Mb/s, 80 ms links with a 40 ms exponential tail,
+    /// 8:1 oversubscription — high-variance, contention-dominated.
+    Edge,
+    /// Fully custom parameters (`custom:BW_MBS:DELAY_MS:OVERSUB[:JFRAC]`).
+    Custom(FabricParams),
+}
+
+impl FabricSpec {
+    /// The finite-fabric parameters, or `None` for the ideal model.
+    pub fn params(&self) -> Option<FabricParams> {
+        match self {
+            FabricSpec::Ideal => None,
+            FabricSpec::Rack => Some(FabricParams {
+                bandwidth: 125.0e6,
+                delay: 0.2e-3,
+                jitter: Jitter::Uniform { frac: 0.1 },
+                oversub: 1.0,
+            }),
+            FabricSpec::Wan => Some(FabricParams {
+                bandwidth: 25.0e6,
+                delay: 30.0e-3,
+                jitter: Jitter::ExpTail { mean: 10.0e-3 },
+                oversub: 4.0,
+            }),
+            FabricSpec::Edge => Some(FabricParams {
+                bandwidth: 2.5e6,
+                delay: 80.0e-3,
+                jitter: Jitter::ExpTail { mean: 40.0e-3 },
+                oversub: 8.0,
+            }),
+            FabricSpec::Custom(p) => Some(*p),
+        }
+    }
+
+    /// Series label for figures and CSV tags.
+    pub fn label(&self) -> String {
+        match self {
+            FabricSpec::Ideal => "ideal".into(),
+            FabricSpec::Rack => "rack".into(),
+            FabricSpec::Wan => "wan".into(),
+            FabricSpec::Edge => "edge".into(),
+            FabricSpec::Custom(p) => format!(
+                "custom:{:.0}:{:.1}:{:.0}",
+                p.bandwidth / 1.0e6,
+                p.delay * 1.0e3,
+                p.oversub
+            ),
+        }
+    }
+
+    /// Parse from a CLI string: `ideal`, `rack`, `wan`, `edge`, or
+    /// `custom:BW_MBS:DELAY_MS:OVERSUB[:JFRAC]` (bandwidth in MB/s, delay
+    /// in milliseconds, optional uniform jitter fraction).
+    ///
+    /// Garbage is a config error, not a panic or a silent default:
+    /// bandwidth must be finite and positive, delay finite and
+    /// non-negative (NaN rejected explicitly), oversubscription finite
+    /// and at least 1, and the jitter fraction inside `[0, 1)`.
+    ///
+    /// ```
+    /// use gosgd::sim::FabricSpec;
+    ///
+    /// assert_eq!(FabricSpec::parse("ideal").unwrap(), FabricSpec::Ideal);
+    /// assert_eq!(FabricSpec::parse("wan").unwrap(), FabricSpec::Wan);
+    /// let custom = FabricSpec::parse("custom:100:5:2:0.25").unwrap();
+    /// assert!(custom.params().unwrap().bandwidth == 100.0e6);
+    /// assert!(FabricSpec::parse("custom:0:5:1").is_err());      // zero bandwidth
+    /// assert!(FabricSpec::parse("custom:100:NaN:1").is_err());  // NaN delay
+    /// assert!(FabricSpec::parse("custom:100:5:0.5").is_err());  // oversub < 1
+    /// assert!(FabricSpec::parse("infiniband").is_err());
+    /// ```
+    pub fn parse(text: &str) -> Result<FabricSpec> {
+        match text {
+            "ideal" => return Ok(FabricSpec::Ideal),
+            "rack" => return Ok(FabricSpec::Rack),
+            "wan" => return Ok(FabricSpec::Wan),
+            "edge" => return Ok(FabricSpec::Edge),
+            _ => {}
+        }
+        let body = text.strip_prefix("custom:").ok_or_else(|| {
+            Error::config(format!(
+                "unknown fabric {text:?} (expected ideal | rack | wan | edge | \
+                 custom:BW_MBS:DELAY_MS:OVERSUB[:JFRAC])"
+            ))
+        })?;
+        let parts: Vec<&str> = body.split(':').collect();
+        if parts.len() != 3 && parts.len() != 4 {
+            return Err(Error::config(format!(
+                "custom fabric needs BW_MBS:DELAY_MS:OVERSUB[:JFRAC], got {body:?}"
+            )));
+        }
+        let num = |name: &str, s: &str| -> Result<f64> {
+            s.parse::<f64>()
+                .map_err(|_| Error::config(format!("fabric {name} is not a number: {s:?}")))
+        };
+        let bandwidth = num("bandwidth", parts[0])? * 1.0e6;
+        let delay = num("delay", parts[1])? * 1.0e-3;
+        let oversub = num("oversubscription", parts[2])?;
+        if !(bandwidth.is_finite() && bandwidth > 0.0) {
+            return Err(Error::config(format!(
+                "fabric bandwidth must be positive and finite, got {} MB/s",
+                bandwidth / 1.0e6
+            )));
+        }
+        if !(delay.is_finite() && delay >= 0.0) {
+            // The NaN case matters: every comparison with NaN is false, so
+            // an unchecked NaN delay would silently pass `delay < 0` style
+            // guards and poison every event timestamp downstream.
+            return Err(Error::config(format!(
+                "fabric delay must be non-negative and finite, got {} ms",
+                delay * 1.0e3
+            )));
+        }
+        if !(oversub.is_finite() && oversub >= 1.0) {
+            return Err(Error::config(format!(
+                "fabric oversubscription must be >= 1 (1 = non-blocking), got {oversub}"
+            )));
+        }
+        let jitter = if parts.len() == 4 {
+            let frac = num("jitter fraction", parts[3])?;
+            if !(frac.is_finite() && (0.0..1.0).contains(&frac)) {
+                return Err(Error::config(format!(
+                    "fabric jitter fraction must be in [0, 1), got {frac}"
+                )));
+            }
+            if frac == 0.0 {
+                Jitter::None
+            } else {
+                Jitter::Uniform { frac }
+            }
+        } else {
+            Jitter::None
+        };
+        Ok(FabricSpec::Custom(FabricParams { bandwidth, delay, jitter, oversub }))
+    }
+}
+
+/// Aggregate fabric accounting, exposed through
+/// [`DesReport`](crate::sim::DesReport)`.fabric`.
+#[derive(Clone, Debug, Default)]
+pub struct FabricStats {
+    /// Messages injected / delivered (equal once the fabric drains).
+    pub injected: u64,
+    pub delivered: u64,
+    /// Per-worker seconds messages spent queued behind the sender's NIC.
+    pub nic_queue_secs: Vec<f64>,
+    /// Per-worker seconds the sender's NIC spent transmitting.
+    pub nic_busy_secs: Vec<f64>,
+    /// Per-worker seconds messages spent queued at the receiver's NIC.
+    pub rx_queue_secs: Vec<f64>,
+    /// Seconds messages waited in the switch's flow queues.
+    pub switch_queue_secs: f64,
+    /// Seconds the switch uplink spent serving.
+    pub switch_busy_secs: f64,
+}
+
+impl FabricStats {
+    /// Per-worker transmit-side link utilization over a run of
+    /// `end_time` simulated seconds.
+    pub fn nic_utilization(&self, end_time: f64) -> Vec<f64> {
+        self.nic_busy_secs
+            .iter()
+            .map(|b| if end_time > 0.0 { b / end_time } else { 0.0 })
+            .collect()
+    }
+
+    /// Total queueing delay absorbed anywhere in the fabric (sender NICs,
+    /// switch, receiver NICs).
+    pub fn queued_secs(&self) -> f64 {
+        self.nic_queue_secs.iter().sum::<f64>()
+            + self.rx_queue_secs.iter().sum::<f64>()
+            + self.switch_queue_secs
+    }
+}
+
+/// A message completing its last hop: delivered to `dst` at time `at`.
+#[derive(Debug)]
+pub struct Delivery<T> {
+    pub at: f64,
+    pub src: usize,
+    pub dst: usize,
+    /// When [`Fabric::inject`] accepted the message (transit time is
+    /// `at - injected_at`).
+    pub injected_at: f64,
+    pub item: T,
+}
+
+/// One message in flight.
+#[derive(Debug)]
+struct Msg<T> {
+    src: usize,
+    dst: usize,
+    bytes: f64,
+    injected_at: f64,
+    /// When the message reached the switch's flow queue (switch-queueing
+    /// accounting; set by the arrive transition).
+    switch_arrive: f64,
+    item: T,
+}
+
+/// Internal fabric transitions, ordered by time on the fabric's own heap.
+#[derive(Debug)]
+enum Hop<T> {
+    /// The message finishes its up link and joins its flow queue.
+    ArriveSwitch(Msg<T>),
+    /// The switch uplink finishes serving the message.
+    SwitchDone(Msg<T>),
+    /// The receiver's NIC finishes deserializing the message.
+    Deliver(Msg<T>),
+}
+
+struct FabEvent<T> {
+    time: f64,
+    seq: u64,
+    hop: Hop<T>,
+}
+
+impl<T> PartialEq for FabEvent<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<T> Eq for FabEvent<T> {}
+impl<T> PartialOrd for FabEvent<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for FabEvent<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap: earlier time first; seq breaks ties deterministically
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The finite-bandwidth fabric: NIC queues, jittered links, and the
+/// round-robin switch arbiter, advanced on an internal event heap.
+///
+/// Generic over the carried payload `T` — the fabric reads only
+/// `(src, dst, bytes, time)`.
+pub struct Fabric<T> {
+    params: FabricParams,
+    /// Aggregate switch-uplink capacity, bytes/second.
+    capacity: f64,
+    /// When each worker's transmit NIC frees up.
+    nic_free: Vec<f64>,
+    /// Latest switch-arrival per source flow (in-order link delivery: a
+    /// jitter draw can never reorder two messages on the same link).
+    up_inorder: Vec<f64>,
+    /// Latest receiver-side link arrival per destination, same contract.
+    down_inorder: Vec<f64>,
+    /// When each worker's receive NIC frees up.
+    rx_free: Vec<f64>,
+    /// Per-source FIFO queues contending for the switch uplink.
+    flows: Vec<VecDeque<Msg<T>>>,
+    switch_busy: bool,
+    /// Round-robin arbiter position: the flow served last.
+    rr_cursor: usize,
+    heap: BinaryHeap<FabEvent<T>>,
+    seq: u64,
+    stats: FabricStats,
+}
+
+impl<T> Fabric<T> {
+    /// Build the fabric for a fleet of `workers` NICs.
+    pub fn new(workers: usize, params: FabricParams) -> Self {
+        assert!(workers >= 2, "a fabric needs at least two endpoints");
+        Fabric {
+            params,
+            capacity: workers as f64 * params.bandwidth / params.oversub,
+            nic_free: vec![0.0; workers],
+            up_inorder: vec![0.0; workers],
+            down_inorder: vec![0.0; workers],
+            rx_free: vec![0.0; workers],
+            flows: (0..workers).map(|_| VecDeque::new()).collect(),
+            switch_busy: false,
+            rr_cursor: 0,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            stats: FabricStats {
+                nic_queue_secs: vec![0.0; workers],
+                nic_busy_secs: vec![0.0; workers],
+                rx_queue_secs: vec![0.0; workers],
+                ..FabricStats::default()
+            },
+        }
+    }
+
+    fn push(&mut self, time: f64, hop: Hop<T>) {
+        self.seq += 1;
+        self.heap.push(FabEvent { time, seq: self.seq, hop });
+    }
+
+    /// Accept a message of `bytes` from `src` to `dst` at time `now`:
+    /// serialize it through `src`'s NIC (queueing behind any transmission
+    /// still in progress) and start it up the link.  Call
+    /// [`Fabric::next_transition`] afterwards to learn when the fabric
+    /// next needs [`Fabric::advance_into`].
+    pub fn inject(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: usize,
+        now: f64,
+        rng: &mut Rng,
+        item: T,
+    ) {
+        assert!(src < self.flows.len() && dst < self.flows.len());
+        assert!(src != dst, "a worker never gossips with itself");
+        assert!(bytes > 0, "messages carry at least their headers");
+        let bytes = bytes as f64;
+        let tx = bytes / self.params.bandwidth;
+        // NIC serialization: FIFO per worker by construction (a worker's
+        // injections arrive in time order).
+        let start_tx = now.max(self.nic_free[src]);
+        self.stats.nic_queue_secs[src] += start_tx - now;
+        self.stats.nic_busy_secs[src] += tx;
+        let depart = start_tx + tx;
+        self.nic_free[src] = depart;
+        // Up link: propagation + jitter, clamped to in-order per flow.
+        let arrive = (depart + self.params.sample_delay(rng)).max(self.up_inorder[src]);
+        self.up_inorder[src] = arrive;
+        self.stats.injected += 1;
+        self.push(
+            arrive,
+            Hop::ArriveSwitch(Msg {
+                src,
+                dst,
+                bytes,
+                injected_at: now,
+                switch_arrive: 0.0,
+                item,
+            }),
+        );
+    }
+
+    /// Earliest pending internal transition, if any in-flight message
+    /// still needs the fabric to act.
+    pub fn next_transition(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Messages currently inside the fabric (injected, not yet delivered).
+    pub fn in_flight(&self) -> usize {
+        (self.stats.injected - self.stats.delivered) as usize
+    }
+
+    /// Visit every in-flight message's payload (conservation audits: each
+    /// message lives in exactly one place — an internal hop event or a
+    /// switch flow queue).
+    pub fn for_each_in_flight<F: FnMut(&T)>(&self, mut f: F) {
+        for ev in self.heap.iter() {
+            match &ev.hop {
+                Hop::ArriveSwitch(m) | Hop::SwitchDone(m) | Hop::Deliver(m) => f(&m.item),
+            }
+        }
+        for q in &self.flows {
+            for m in q {
+                f(&m.item);
+            }
+        }
+    }
+
+    /// The fastest any `bytes`-sized message can possibly transit: both
+    /// NIC serializations, both minimum link delays, and one uncontended
+    /// pass through the switch.  Every actual delivery takes at least
+    /// this long — the "ideal-latency lower bound" the invariants suite
+    /// pins per preset.
+    pub fn lower_bound_secs(&self, bytes: usize) -> f64 {
+        let b = bytes as f64;
+        2.0 * b / self.params.bandwidth + 2.0 * self.params.min_delay() + b / self.capacity
+    }
+
+    /// Fabric accounting so far.
+    pub fn stats(&self) -> &FabricStats {
+        &self.stats
+    }
+
+    /// If the switch is idle and any flow has a waiting message, serve
+    /// the next flow in round-robin order (starting after the flow served
+    /// last).
+    fn try_serve(&mut self, now: f64) {
+        if self.switch_busy {
+            return;
+        }
+        let n = self.flows.len();
+        for step in 1..=n {
+            let flow = (self.rr_cursor + step) % n;
+            if let Some(msg) = self.flows[flow].pop_front() {
+                self.rr_cursor = flow;
+                self.switch_busy = true;
+                self.stats.switch_queue_secs += now - msg.switch_arrive;
+                let service = msg.bytes / self.capacity;
+                self.stats.switch_busy_secs += service;
+                self.push(now + service, Hop::SwitchDone(msg));
+                return;
+            }
+        }
+    }
+
+    /// Process every internal transition due by `now`, appending
+    /// completed deliveries to `out` (cleared first).  Transitions only
+    /// ever spawn strictly-later transitions, so one pass drains
+    /// everything due.
+    pub fn advance_into(&mut self, now: f64, rng: &mut Rng, out: &mut Vec<Delivery<T>>) {
+        out.clear();
+        while self.heap.peek().is_some_and(|e| e.time <= now) {
+            let ev = self.heap.pop().expect("peeked");
+            let t = ev.time;
+            match ev.hop {
+                Hop::ArriveSwitch(mut msg) => {
+                    msg.switch_arrive = t;
+                    self.flows[msg.src].push_back(msg);
+                    self.try_serve(t);
+                }
+                Hop::SwitchDone(msg) => {
+                    self.switch_busy = false;
+                    // Down link: propagation + jitter, in-order per
+                    // destination.
+                    let ready =
+                        (t + self.params.sample_delay(rng)).max(self.down_inorder[msg.dst]);
+                    self.down_inorder[msg.dst] = ready;
+                    // Receiver NIC: deserialization is FIFO in switch
+                    // order, so per-destination delivery times are
+                    // monotone and per-link FIFO holds end to end.
+                    let start_rx = ready.max(self.rx_free[msg.dst]);
+                    self.stats.rx_queue_secs[msg.dst] += start_rx - ready;
+                    let deliver = start_rx + msg.bytes / self.params.bandwidth;
+                    self.rx_free[msg.dst] = deliver;
+                    self.push(deliver, Hop::Deliver(msg));
+                    self.try_serve(t);
+                }
+                Hop::Deliver(msg) => {
+                    self.stats.delivered += 1;
+                    out.push(Delivery {
+                        at: t,
+                        src: msg.src,
+                        dst: msg.dst,
+                        injected_at: msg.injected_at,
+                        item: msg.item,
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic params: bandwidth 1000 B/s, no delay, no jitter.
+    fn flat(oversub: f64) -> FabricParams {
+        FabricParams { bandwidth: 1000.0, delay: 0.0, jitter: Jitter::None, oversub }
+    }
+
+    /// Drain the fabric completely, returning deliveries in time order.
+    fn drain(fab: &mut Fabric<u64>, rng: &mut Rng) -> Vec<Delivery<u64>> {
+        let mut all = Vec::new();
+        let mut out = Vec::new();
+        while let Some(t) = fab.next_transition() {
+            fab.advance_into(t, rng, &mut out);
+            all.append(&mut out);
+        }
+        assert_eq!(fab.in_flight(), 0, "drained fabric must be empty");
+        all
+    }
+
+    // ---- NIC serialization ---------------------------------------------
+
+    #[test]
+    fn two_simultaneous_sends_from_one_worker_serialize() {
+        // Two 1000-byte messages from worker 0 at t=0: tx = 1 s each, so
+        // the second departs the NIC only after the first finishes
+        // transmitting, and the deliveries land exactly one tx apart.
+        let mut rng = Rng::new(1);
+        let mut fab: Fabric<u64> = Fabric::new(4, flat(1.0));
+        fab.inject(0, 1, 1000, 0.0, &mut rng, 10);
+        fab.inject(0, 2, 1000, 0.0, &mut rng, 11);
+        let got = drain(&mut fab, &mut rng);
+        assert_eq!(got.len(), 2);
+        // Pipeline: 1 s tx + 0 delay + 1000/4000 s switch + 0 + 1 s rx.
+        assert!((got[0].at - 2.25).abs() < 1e-12, "first at {}", got[0].at);
+        assert!((got[1].at - 3.25).abs() < 1e-12, "second at {}", got[1].at);
+        // The second message queued exactly one tx behind the first.
+        assert!((fab.stats().nic_queue_secs[0] - 1.0).abs() < 1e-12);
+        assert_eq!(fab.stats().nic_queue_secs[1..], [0.0, 0.0, 0.0]);
+        assert!((fab.stats().nic_busy_secs[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sends_spaced_wider_than_tx_never_queue() {
+        let mut rng = Rng::new(2);
+        let mut fab: Fabric<u64> = Fabric::new(4, flat(1.0));
+        fab.inject(0, 1, 500, 0.0, &mut rng, 0); // tx 0.5 s
+        fab.inject(0, 1, 500, 1.0, &mut rng, 1); // NIC long free again
+        drain(&mut fab, &mut rng);
+        assert_eq!(fab.stats().nic_queue_secs[0], 0.0);
+        assert_eq!(fab.stats().queued_secs(), 0.0);
+    }
+
+    // ---- switch arbiter ------------------------------------------------
+
+    #[test]
+    fn oversubscribed_uplink_throttles_aggregate_throughput_to_the_ratio() {
+        // 8 workers, each shipping one 1000-byte message at t=0.  At
+        // oversub r the uplink's capacity is 8000/r B/s, so serving all
+        // 8000 bytes occupies the switch for exactly r seconds — the
+        // aggregate throughput is throttled to 1/r of the non-blocking
+        // switch, which is the definition of the ratio.
+        let serve_time = |oversub: f64| {
+            let mut rng = Rng::new(3);
+            let mut fab: Fabric<u64> = Fabric::new(8, flat(oversub));
+            for w in 0..8 {
+                fab.inject(w, (w + 1) % 8, 1000, 0.0, &mut rng, w as u64);
+            }
+            let got = drain(&mut fab, &mut rng);
+            assert_eq!(got.len(), 8);
+            fab.stats().switch_busy_secs
+        };
+        let non_blocking = serve_time(1.0);
+        let oversubscribed = serve_time(4.0);
+        assert!((non_blocking - 1.0).abs() < 1e-12, "8000 B / 8000 B/s");
+        assert!((oversubscribed - 4.0).abs() < 1e-12, "8000 B / 2000 B/s");
+        assert!((oversubscribed / non_blocking - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oversubscription_delays_the_last_delivery() {
+        let last_delivery = |oversub: f64| {
+            let mut rng = Rng::new(4);
+            let mut fab: Fabric<u64> = Fabric::new(8, flat(oversub));
+            for w in 0..8 {
+                fab.inject(w, (w + 1) % 8, 1000, 0.0, &mut rng, w as u64);
+            }
+            drain(&mut fab, &mut rng)
+                .last()
+                .map(|d| d.at)
+                .expect("deliveries")
+        };
+        assert!(
+            last_delivery(4.0) > last_delivery(1.0) + 2.0,
+            "a 4:1 uplink must visibly stretch the burst"
+        );
+    }
+
+    #[test]
+    fn switch_serves_contending_flows_round_robin() {
+        // Two workers each queue a burst that reaches the switch far
+        // faster than the uplink drains it (oversub 400 → capacity
+        // 10 B/s), so both flows contend for every slot.  Fair
+        // round-robin must alternate flows instead of draining one
+        // worker's burst first.
+        let mut rng = Rng::new(5);
+        let params = FabricParams {
+            bandwidth: 100_000.0,
+            delay: 0.0,
+            jitter: Jitter::None,
+            oversub: 4000.0, // capacity = 4 * 100_000 / 4000 = 100 B/s
+        };
+        let mut fab: Fabric<u64> = Fabric::new(4, params);
+        for k in 0..3 {
+            fab.inject(0, 2, 1000, 0.0, &mut rng, k); // from flow 0
+            fab.inject(1, 3, 1000, 0.0, &mut rng, 10 + k); // from flow 1
+        }
+        let got = drain(&mut fab, &mut rng);
+        let srcs: Vec<usize> = got.iter().map(|d| d.src).collect();
+        assert_eq!(srcs, vec![0, 1, 0, 1, 0, 1], "round-robin over flows");
+        // And within each flow, FIFO.
+        let flow0: Vec<u64> = got.iter().filter(|d| d.src == 0).map(|d| d.item).collect();
+        assert_eq!(flow0, vec![0, 1, 2]);
+    }
+
+    // ---- links ---------------------------------------------------------
+
+    #[test]
+    fn jittered_links_never_reorder_a_flow() {
+        // Heavy exponential jitter; messages on the same (src, dst) link
+        // must still deliver in injection order (in-order transport).
+        let params = FabricParams {
+            bandwidth: 1.0e6,
+            delay: 1.0e-3,
+            jitter: Jitter::ExpTail { mean: 50.0e-3 },
+            oversub: 1.0,
+        };
+        let mut rng = Rng::new(6);
+        let mut fab: Fabric<u64> = Fabric::new(3, params);
+        for k in 0..50 {
+            fab.inject(0, 1, 200, k as f64 * 1.0e-4, &mut rng, k);
+        }
+        let got = drain(&mut fab, &mut rng);
+        let order: Vec<u64> = got.iter().map(|d| d.item).collect();
+        assert_eq!(order, (0..50).collect::<Vec<u64>>());
+        for pair in got.windows(2) {
+            assert!(pair[0].at <= pair[1].at);
+        }
+    }
+
+    #[test]
+    fn deliveries_respect_the_ideal_latency_lower_bound() {
+        for spec in [FabricSpec::Rack, FabricSpec::Wan, FabricSpec::Edge] {
+            let params = spec.params().unwrap();
+            let mut rng = Rng::new(7);
+            let mut fab: Fabric<u64> = Fabric::new(6, params);
+            let bytes = 4096;
+            for k in 0..40u64 {
+                let src = (k % 6) as usize;
+                fab.inject(src, (src + 1) % 6, bytes, k as f64 * 0.01, &mut rng, k);
+            }
+            let bound = fab.lower_bound_secs(bytes);
+            for d in drain(&mut fab, &mut rng) {
+                let transit = d.at - d.injected_at;
+                assert!(
+                    transit >= bound - 1e-12,
+                    "{}: transit {transit} < lower bound {bound}",
+                    spec.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_jitter_is_deterministic() {
+        let run = || {
+            let mut rng = Rng::new(8);
+            let mut fab: Fabric<u64> = Fabric::new(4, FabricSpec::Edge.params().unwrap());
+            for k in 0..20u64 {
+                fab.inject((k % 4) as usize, ((k + 1) % 4) as usize, 1000, k as f64 * 0.02, &mut rng, k);
+            }
+            drain(&mut fab, &mut rng)
+                .iter()
+                .map(|d| (d.at.to_bits(), d.item))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    // ---- spec parsing --------------------------------------------------
+
+    #[test]
+    fn parse_accepts_presets_and_custom_forms() {
+        assert_eq!(FabricSpec::parse("ideal").unwrap(), FabricSpec::Ideal);
+        assert_eq!(FabricSpec::parse("rack").unwrap(), FabricSpec::Rack);
+        assert_eq!(FabricSpec::parse("wan").unwrap(), FabricSpec::Wan);
+        assert_eq!(FabricSpec::parse("edge").unwrap(), FabricSpec::Edge);
+        let spec = FabricSpec::parse("custom:100:5:2").unwrap();
+        let p = spec.params().unwrap();
+        assert_eq!(p.bandwidth, 100.0e6);
+        assert!((p.delay - 5.0e-3).abs() < 1e-12);
+        assert_eq!(p.oversub, 2.0);
+        assert_eq!(p.jitter, Jitter::None);
+        let spec = FabricSpec::parse("custom:100:5:2:0.3").unwrap();
+        assert_eq!(spec.params().unwrap().jitter, Jitter::Uniform { frac: 0.3 });
+        // Boundary values: zero delay and a 1:1 switch are legal.
+        assert!(FabricSpec::parse("custom:1:0:1").is_ok());
+        // Zero jitter collapses to the deterministic link.
+        let spec = FabricSpec::parse("custom:1:0:1:0").unwrap();
+        assert_eq!(spec.params().unwrap().jitter, Jitter::None);
+    }
+
+    #[test]
+    fn parse_rejects_nonsense_with_config_errors() {
+        for bad in [
+            "infiniband",
+            "",
+            "custom:",
+            "custom:100",
+            "custom:100:5",
+            "custom:100:5:2:0.3:9",
+            "custom:0:5:1",      // zero bandwidth
+            "custom:-10:5:1",    // negative bandwidth
+            "custom:inf:5:1",    // infinite bandwidth
+            "custom:100:NaN:1",  // NaN delay
+            "custom:100:-1:1",   // negative delay
+            "custom:100:5:0.5",  // oversubscription < 1
+            "custom:100:5:0",    // oversubscription < 1
+            "custom:100:5:NaN",  // NaN oversubscription
+            "custom:100:5:1:1.5", // jitter fraction out of range
+            "custom:100:5:1:-0.1",
+            "custom:abc:5:1",
+        ] {
+            let err = FabricSpec::parse(bad).unwrap_err();
+            assert!(
+                err.to_string().contains("config"),
+                "{bad:?} should be a config error, got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn labels_are_stable_series_tags() {
+        assert_eq!(FabricSpec::Ideal.label(), "ideal");
+        assert_eq!(FabricSpec::Edge.label(), "edge");
+        let spec = FabricSpec::parse("custom:100:5:2").unwrap();
+        assert_eq!(spec.label(), "custom:100:5.0:2");
+    }
+
+    #[test]
+    fn stats_utilization_and_queueing_roll_up() {
+        let mut rng = Rng::new(9);
+        let mut fab: Fabric<u64> = Fabric::new(4, flat(1.0));
+        fab.inject(0, 1, 1000, 0.0, &mut rng, 0);
+        fab.inject(0, 1, 1000, 0.0, &mut rng, 1);
+        drain(&mut fab, &mut rng);
+        let stats = fab.stats();
+        assert_eq!(stats.injected, 2);
+        assert_eq!(stats.delivered, 2);
+        // Worker 0 transmitted for 2 of the first 4 seconds.
+        let util = stats.nic_utilization(4.0);
+        assert!((util[0] - 0.5).abs() < 1e-12);
+        assert_eq!(util[2], 0.0);
+        // All queueing in this run is the second message's NIC wait plus
+        // its rx wait behind the first delivery.
+        assert!(stats.queued_secs() > 0.0);
+    }
+}

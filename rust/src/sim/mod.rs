@@ -28,6 +28,15 @@
 //! buffer through downtime); the barrier baselines pay for every
 //! straggler at every sync — the `scenarios` harness quantifies it.
 
+//! Network realism: [`fabric`] replaces the scalar per-message latency
+//! with a finite-bandwidth pipeline — per-worker NIC serialization
+//! queues, jittered link delays, and a fair round-robin arbiter over an
+//! oversubscribed switch uplink — selected by [`fabric::FabricSpec`]
+//! (`--fabric ideal|rack|wan|edge|custom:…`).  The `Ideal` spec keeps the
+//! scalar model bit-identical, so prior figures stay reproducible.
+
 pub mod des;
+pub mod fabric;
 
 pub use des::{DesEngine, DesReport, DesStrategy, ScenarioModel, TimeModel};
+pub use fabric::{Delivery, Fabric, FabricParams, FabricSpec, FabricStats, Jitter};

@@ -1,0 +1,254 @@
+//! Fabric-invariant property suite.
+//!
+//! The finite-bandwidth fabric earns its place the same way every prior
+//! subsystem did: by invariants, not by plausible-looking curves.  Four
+//! contracts are pinned here, over randomized fabrics and traffic:
+//!
+//! 1. **Conservation** — every message injected into the fabric is
+//!    delivered exactly once (nothing dropped in a queue, nothing
+//!    duplicated by the arbiter), and through the DES the per-shard
+//!    sum-weight mass stays exactly 1 under the rack/wan/edge presets
+//!    with crash/rejoin churn on.
+//! 2. **FIFO per link** — deliveries on each `(src, dst)` flow keep
+//!    injection order even under heavy-tailed latency jitter (the fabric
+//!    models a reliable, in-order transport).
+//! 3. **Lower bound** — no delivery beats the ideal-latency bound
+//!    (two NIC serializations + two minimum link delays + one
+//!    uncontended switch pass); queueing can only add time.
+//! 4. **Determinism** — same seed + same [`FabricSpec`] ⇒ identical
+//!    [`DesReport`](gosgd::sim::DesReport) trace hash, including under
+//!    jittered latency distributions.
+
+use std::collections::HashMap;
+
+use gosgd::sim::{
+    DesEngine, DesStrategy, Fabric, FabricParams, FabricSpec, Jitter, ScenarioModel, TimeModel,
+};
+use gosgd::strategies::grad::QuadraticSource;
+use gosgd::tensor::FlatVec;
+use gosgd::util::proptest::check;
+use gosgd::util::rng::Rng;
+
+/// A randomized-but-valid parameter set.
+fn random_params(rng: &mut Rng) -> FabricParams {
+    let jitter = match rng.below(3) {
+        0 => Jitter::None,
+        1 => Jitter::Uniform { frac: 0.5 * rng.f64() },
+        _ => Jitter::ExpTail { mean: 0.02 * rng.f64() },
+    };
+    FabricParams {
+        bandwidth: 100.0 + rng.f64() * 100_000.0,
+        delay: rng.f64() * 0.01,
+        jitter,
+        oversub: 1.0 + rng.f64() * 7.0,
+    }
+}
+
+/// Random chronological traffic: `(src, dst, bytes, time)` per message,
+/// id = injection index.  Injection times are globally nondecreasing,
+/// matching how the DES feeds the fabric (event order).
+fn random_traffic(rng: &mut Rng, workers: usize, count: usize) -> Vec<(usize, usize, usize, f64)> {
+    let mut now = 0.0;
+    (0..count)
+        .map(|_| {
+            now += rng.f64() * 0.05;
+            let src = rng.below(workers as u64) as usize;
+            let dst = rng.peer(workers, src);
+            let bytes = 1 + rng.below(4000) as usize;
+            (src, dst, bytes, now)
+        })
+        .collect()
+}
+
+/// Drain the fabric completely, returning deliveries in time order.
+fn drain(fab: &mut Fabric<(u64, usize)>, rng: &mut Rng) -> Vec<gosgd::sim::Delivery<(u64, usize)>> {
+    let mut all = Vec::new();
+    let mut out = Vec::new();
+    while let Some(t) = fab.next_transition() {
+        fab.advance_into(t, rng, &mut out);
+        all.append(&mut out);
+    }
+    all
+}
+
+#[test]
+fn every_injected_message_is_delivered_exactly_once() {
+    check("fabric conservation", 60, |rng| {
+        let workers = 2 + rng.below(6) as usize;
+        let mut fab: Fabric<(u64, usize)> = Fabric::new(workers, random_params(rng));
+        let traffic = random_traffic(rng, workers, 1 + rng.below(40) as usize);
+        for (id, &(src, dst, bytes, t)) in traffic.iter().enumerate() {
+            fab.inject(src, dst, bytes, t, rng, (id as u64, bytes));
+        }
+        let got = drain(&mut fab, rng);
+        assert_eq!(got.len(), traffic.len(), "count mismatch");
+        assert_eq!(fab.in_flight(), 0);
+        assert_eq!(fab.stats().injected, traffic.len() as u64);
+        assert_eq!(fab.stats().delivered, traffic.len() as u64);
+        // Exactly once: the delivered id multiset is {0, 1, …, n-1}.
+        let mut ids: Vec<u64> = got.iter().map(|d| d.item.0).collect();
+        ids.sort_unstable();
+        let expect: Vec<u64> = (0..traffic.len() as u64).collect();
+        assert_eq!(ids, expect, "dropped or duplicated messages");
+        // Endpoints survive the trip.
+        for d in &got {
+            let (src, dst, _, t) = traffic[d.item.0 as usize];
+            assert_eq!((d.src, d.dst), (src, dst));
+            assert_eq!(d.injected_at, t);
+        }
+    });
+}
+
+#[test]
+fn deliveries_keep_fifo_order_per_link() {
+    check("fabric FIFO per (src, dst) flow", 60, |rng| {
+        let workers = 2 + rng.below(6) as usize;
+        let mut fab: Fabric<(u64, usize)> = Fabric::new(workers, random_params(rng));
+        let traffic = random_traffic(rng, workers, 1 + rng.below(60) as usize);
+        for (id, &(src, dst, bytes, t)) in traffic.iter().enumerate() {
+            fab.inject(src, dst, bytes, t, rng, (id as u64, bytes));
+        }
+        let got = drain(&mut fab, rng);
+        // Per flow, delivered ids must be increasing (ids are assigned in
+        // injection order and injection times are nondecreasing).
+        let mut last_id: HashMap<(usize, usize), u64> = HashMap::new();
+        let mut last_at: HashMap<(usize, usize), f64> = HashMap::new();
+        for d in &got {
+            let key = (d.src, d.dst);
+            if let Some(&prev) = last_id.get(&key) {
+                assert!(
+                    d.item.0 > prev,
+                    "flow {key:?} reordered: {prev} then {}",
+                    d.item.0
+                );
+                assert!(d.at >= last_at[&key], "flow {key:?} time went backwards");
+            }
+            last_id.insert(key, d.item.0);
+            last_at.insert(key, d.at);
+        }
+    });
+}
+
+#[test]
+fn no_delivery_beats_the_ideal_latency_lower_bound() {
+    // For every preset (and random customs), transit time ≥ the
+    // uncontended pipeline minimum for that message's size.
+    for spec in [FabricSpec::Rack, FabricSpec::Wan, FabricSpec::Edge] {
+        let params = spec.params().unwrap();
+        let mut rng = Rng::new(0xB0); // same traffic pattern for every preset
+        let workers = 6;
+        let mut fab: Fabric<(u64, usize)> = Fabric::new(workers, params);
+        let traffic = random_traffic(&mut rng, workers, 80);
+        for (id, &(src, dst, bytes, t)) in traffic.iter().enumerate() {
+            fab.inject(src, dst, bytes, t, &mut rng, (id as u64, bytes));
+        }
+        for d in drain(&mut fab, &mut rng) {
+            let bound = fab.lower_bound_secs(d.item.1);
+            let transit = d.at - d.injected_at;
+            assert!(
+                transit >= bound - 1e-12,
+                "{}: transit {transit} < bound {bound} ({} bytes)",
+                spec.label(),
+                d.item.1
+            );
+        }
+    }
+    check("lower bound on random fabrics", 40, |rng| {
+        let workers = 2 + rng.below(5) as usize;
+        let params = random_params(rng);
+        let mut fab: Fabric<(u64, usize)> = Fabric::new(workers, params);
+        for (id, &(src, dst, bytes, t)) in
+            random_traffic(rng, workers, 30).iter().enumerate()
+        {
+            fab.inject(src, dst, bytes, t, rng, (id as u64, bytes));
+        }
+        for d in drain(&mut fab, rng) {
+            let bound = fab.lower_bound_secs(d.item.1);
+            assert!(d.at - d.injected_at >= bound - 1e-12);
+        }
+    });
+}
+
+fn run_des_under_churn(spec: FabricSpec, seed: u64) -> DesEngine {
+    let dim = 64;
+    let shards = 4;
+    let mut grad = QuadraticSource::new(dim, 0.1, seed);
+    let mut eng = DesEngine::new(
+        DesStrategy::ShardedGoSgd { p: 0.3, shards },
+        TimeModel::paper_like(),
+        8,
+        &FlatVec::zeros(dim),
+        1.0,
+        0.0,
+        seed ^ 0xFAB,
+    )
+    .unwrap()
+    .with_scenario(ScenarioModel {
+        compute_scale: Vec::new(),
+        crash_mtbf: 6.0,
+        rejoin_mttr: 2.0,
+    })
+    .with_fabric(spec);
+    eng.run(&mut grad, 50.0).unwrap();
+    eng
+}
+
+#[test]
+fn presets_conserve_shard_mass_exactly_under_churn() {
+    // The protocol invariant must survive the full pipeline: crashes,
+    // mailboxes buffering through downtime, messages parked in NIC
+    // queues, switch flow queues, and link flight — summed over every
+    // location, each shard's mass is exactly 1.
+    for spec in [FabricSpec::Rack, FabricSpec::Wan, FabricSpec::Edge] {
+        let eng = run_des_under_churn(spec, 0xC0);
+        let rep = eng.report();
+        assert!(rep.crashes > 0, "{}: no crashes in 50 s", spec.label());
+        assert!(rep.steps > 0);
+        let mut totals = eng.pending_shard_mass();
+        for ws in eng.worker_weights() {
+            for (k, v) in ws.iter().enumerate() {
+                totals[k] += v;
+            }
+        }
+        for (k, total) in totals.iter().enumerate() {
+            assert!(
+                (total - 1.0).abs() < 1e-9,
+                "{}: shard {k} mass {total}",
+                spec.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_same_spec_gives_identical_reports_including_jitter() {
+    // Rack jitters uniformly, wan/edge add exponential tails; the full
+    // report (every trace point at bit precision, every fabric counter)
+    // must still replay exactly.  Churn is on, so the crash/rejoin
+    // schedule replays too.
+    for spec in [
+        FabricSpec::Ideal,
+        FabricSpec::Rack,
+        FabricSpec::Wan,
+        FabricSpec::Edge,
+    ] {
+        let a = run_des_under_churn(spec, 0xD0);
+        let b = run_des_under_churn(spec, 0xD0);
+        assert_eq!(
+            a.report().trace_hash(),
+            b.report().trace_hash(),
+            "{}: report hash diverged across identical runs",
+            spec.label()
+        );
+        assert_eq!(
+            a.consensus_model().unwrap().as_slice(),
+            b.consensus_model().unwrap().as_slice(),
+            "{}: parameters diverged across identical runs",
+            spec.label()
+        );
+    }
+    // Different seeds must diverge (the hash actually discriminates).
+    let a = run_des_under_churn(FabricSpec::Edge, 0xD0);
+    let b = run_des_under_churn(FabricSpec::Edge, 0xD1);
+    assert_ne!(a.report().trace_hash(), b.report().trace_hash());
+}

@@ -336,6 +336,80 @@ fn all_three_runtimes_conserve_mass_shard_by_shard_with_codecs() {
 }
 
 #[test]
+fn ideal_fabric_des_is_bit_identical_to_the_scalar_latency_des() {
+    // The network-fabric refactor's contract: `FabricSpec::Ideal` is not
+    // "approximately the old model" — it IS the old model, same RNG draw
+    // order, same event schedule, so every figure produced by the
+    // pre-fabric DES remains exactly reproducible.
+    use gosgd::sim::{DesEngine, DesStrategy, FabricSpec, TimeModel};
+    use gosgd::strategies::grad::QuadraticSource;
+    for (strategy, codec, topo) in [
+        (DesStrategy::GoSgd { p: 0.3 }, CodecSpec::Dense, TopologySpec::UniformRandom),
+        (
+            DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            CodecSpec::QuantizeU8,
+            TopologySpec::Ring,
+        ),
+    ] {
+        let mut runs = Vec::new();
+        for explicit_ideal in [false, true] {
+            let dim = 48;
+            let mut grad = QuadraticSource::new(dim, 0.1, 101);
+            let mut eng = DesEngine::new(
+                strategy.clone(),
+                TimeModel::paper_like(),
+                4,
+                &FlatVec::zeros(dim),
+                1.0,
+                0.0,
+                103,
+            )
+            .unwrap()
+            .with_codec(codec)
+            .with_topology(topo);
+            if explicit_ideal {
+                eng = eng.with_fabric(FabricSpec::Ideal);
+            }
+            eng.run(&mut grad, 25.0).unwrap();
+            runs.push((
+                eng.report().trace_hash(),
+                eng.consensus_model().unwrap().as_slice().to_vec(),
+            ));
+        }
+        assert_eq!(runs[0].0, runs[1].0, "{strategy:?}: report diverged");
+        assert_eq!(runs[0].1, runs[1].1, "{strategy:?}: parameters diverged");
+    }
+}
+
+#[test]
+fn finite_fabric_des_actually_diverges_from_ideal() {
+    // Teeth for the equivalence test above: if the fabric routing were a
+    // no-op the regression could never fail.  A finite preset must change
+    // the delivery schedule (and therefore the trajectory).
+    use gosgd::sim::{DesEngine, DesStrategy, FabricSpec, TimeModel};
+    use gosgd::strategies::grad::QuadraticSource;
+    let mut hashes = Vec::new();
+    for spec in [FabricSpec::Ideal, FabricSpec::Wan] {
+        let dim = 48;
+        let mut grad = QuadraticSource::new(dim, 0.1, 107);
+        let mut eng = DesEngine::new(
+            DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            TimeModel::paper_like(),
+            4,
+            &FlatVec::zeros(dim),
+            1.0,
+            0.0,
+            109,
+        )
+        .unwrap()
+        .with_fabric(spec);
+        eng.run(&mut grad, 25.0).unwrap();
+        hashes.push(eng.report().trace_hash());
+    }
+    assert_ne!(hashes[0], hashes[1], "wan fabric left the run untouched");
+}
+
+#[test]
 fn engine_equals_hand_driven_core_bit_for_bit_with_topologies() {
     // The topology schedule lives inside the core (cursor and all), so a
     // structured schedule must be exactly as bit-reproducible across
