@@ -1,0 +1,160 @@
+//! Bench: million-worker DES scale — events/sec and resident bytes/worker.
+//!
+//! The timing-wheel scheduler, lazy copy-on-write worker models, and
+//! sparse churn/telemetry state exist so a fleet three orders of magnitude
+//! past the paper's 8 workers still simulates in bounded memory.  This
+//! bench pins that claim:
+//!
+//! * a **1,048,576-worker** hypercube + q8 run completes, with hard
+//!   ceilings on resident bytes per worker — cold (constructed, never
+//!   stepped) and hot (simulated past every worker's first wake);
+//! * heap and wheel schedulers produce **identical trace hashes** at a
+//!   65,536-worker fleet (the tests pin small fleets; this pins scale);
+//! * events/sec is recorded across fleet sizes for the perf trajectory.
+//!
+//! Reporting convention: each JSON/CSV row is one *run* (`iters = 1`,
+//! recorded via `Bencher::record` — these runs are far too slow for the
+//! sampled loop).  `elems_per_iter` carries the run's event count (steps +
+//! messages), so `Melem/s` reads directly as millions of events per
+//! second; `bytes_per_iter` carries **resident bytes per worker** at the
+//! end of the run, not bytes moved, so ignore the GB/s column for this
+//! group.
+//!
+//! Run with `cargo bench --bench des_scale`; set `BENCH_JSON` (CI uses
+//! `BENCH_des_scale.json`) or `BENCH_CSV` for machine-readable output.
+
+use std::time::Instant;
+
+use gosgd::bench::Bencher;
+use gosgd::gossip::{CodecSpec, TopologySpec};
+use gosgd::sim::{DesEngine, DesStrategy, SchedulerKind, TimeModel};
+use gosgd::strategies::grad::QuadraticSource;
+use gosgd::tensor::FlatVec;
+
+const DIM: usize = 64;
+const SHARDS: usize = 4;
+const P: f64 = 0.05;
+const SEED: u64 = 0x5CA1E;
+
+/// Ceiling on resident bytes per worker for a constructed-but-unstarted
+/// fleet (cold: every model is the shared replica; the dominant costs are
+/// the worker struct, its per-shard weights, and its pending wake event).
+const COLD_BYTES_PER_WORKER: usize = 768;
+/// Ceiling once workers have stepped (hot: adds one `DIM`-coordinate f32
+/// model copy per woken worker plus mailbox/trace capacity).
+const HOT_BYTES_PER_WORKER: usize = 1536;
+
+fn engine(workers: usize, kind: SchedulerKind) -> DesEngine {
+    DesEngine::new(
+        DesStrategy::ShardedGoSgd { p: P, shards: SHARDS },
+        TimeModel::paper_like(),
+        workers,
+        &FlatVec::zeros(DIM),
+        0.5,
+        0.0,
+        SEED,
+    )
+    .unwrap()
+    .with_scheduler(kind)
+    .with_codec(CodecSpec::QuantizeU8)
+    .with_topology(TopologySpec::Hypercube)
+}
+
+/// Run a fleet to `horizon` and record one row; returns (events, bytes/worker).
+fn run_fleet(
+    b: &mut Bencher,
+    name: &str,
+    workers: usize,
+    kind: SchedulerKind,
+    horizon: f64,
+) -> (u64, usize, u64, Vec<f32>) {
+    let mut grad = QuadraticSource::new(DIM, 0.1, SEED ^ 0x11);
+    let mut eng = engine(workers, kind);
+    let t0 = Instant::now();
+    eng.run(&mut grad, horizon).unwrap();
+    let elapsed = t0.elapsed();
+    let rep = eng.report();
+    let events = rep.steps + rep.messages;
+    let per_worker = eng.state_bytes() / workers;
+    b.record(name, elapsed, Some(per_worker as u64), Some(events));
+    let hash = rep.trace_hash();
+    let consensus = eng.consensus_model().unwrap().as_slice().to_vec();
+    (events, per_worker, hash, consensus)
+}
+
+fn main() {
+    let mut b = Bencher::new("des_scale");
+
+    // Fleet-size sweep: events/sec trajectory at 4k and 64k workers.
+    for shift in [12u32, 16] {
+        let workers = 1usize << shift;
+        let (events, per_worker, _, _) = run_fleet(
+            &mut b,
+            &format!("wheel_{}k_workers_0.5s", workers >> 10),
+            workers,
+            SchedulerKind::Wheel,
+            0.5,
+        );
+        assert!(events > workers as u64, "fleet {workers}: suspiciously few events");
+        println!("  {workers} workers: {per_worker} resident bytes/worker");
+    }
+
+    // Scheduler equivalence at scale: 65,536 workers, identical trace
+    // hashes and bit-identical consensus under heap vs wheel.
+    let (_, _, wheel_hash, wheel_x) =
+        run_fleet(&mut b, "wheel_64k_equivalence_0.3s", 1 << 16, SchedulerKind::Wheel, 0.3);
+    let (_, _, heap_hash, heap_x) =
+        run_fleet(&mut b, "heap_64k_equivalence_0.3s", 1 << 16, SchedulerKind::Heap, 0.3);
+    assert_eq!(
+        wheel_hash, heap_hash,
+        "acceptance: heap and wheel schedulers must produce identical traces"
+    );
+    assert_eq!(wheel_x, heap_x, "heap and wheel consensus models diverged");
+    println!("  64k heap == wheel: trace hash {wheel_hash:#018x}");
+
+    // The tentpole: one million workers, cold then hot.
+    let workers = 1usize << 20;
+    let t0 = Instant::now();
+    let mut eng = engine(workers, SchedulerKind::Wheel);
+    let mut grad = QuadraticSource::new(DIM, 0.1, SEED ^ 0x11);
+    // Horizon 0.0 starts the engine (schedules every initial wake) but
+    // processes nothing: all million workers must still share the one
+    // cold replica.
+    eng.run(&mut grad, 0.0).unwrap();
+    let build = t0.elapsed();
+    assert_eq!(eng.cold_workers(), workers, "unstarted workers must stay cold");
+    let cold_per_worker = eng.state_bytes() / workers;
+    b.record("cold_1m_workers", build, Some(cold_per_worker as u64), None);
+    println!("  1M workers cold: {cold_per_worker} bytes/worker (ceiling {COLD_BYTES_PER_WORKER})");
+    assert!(
+        cold_per_worker <= COLD_BYTES_PER_WORKER,
+        "acceptance: cold fleet must cost <= {COLD_BYTES_PER_WORKER} bytes/worker, \
+         got {cold_per_worker}"
+    );
+
+    // Hot: past every worker's first wake (stragglers included: worst
+    // first wake is ~0.115 s + 3x the 100 ms mean compute).
+    let t1 = Instant::now();
+    eng.run(&mut grad, 0.45).unwrap();
+    let elapsed = t1.elapsed();
+    let rep = eng.report();
+    let events = rep.steps + rep.messages;
+    let hot_per_worker = eng.state_bytes() / workers;
+    b.record("hot_1m_workers_0.45s", elapsed, Some(hot_per_worker as u64), Some(events));
+    println!("  1M workers hot:  {hot_per_worker} bytes/worker (ceiling {HOT_BYTES_PER_WORKER})");
+    assert!(
+        hot_per_worker <= HOT_BYTES_PER_WORKER,
+        "acceptance: hot fleet must cost <= {HOT_BYTES_PER_WORKER} bytes/worker, \
+         got {hot_per_worker}"
+    );
+    assert_eq!(eng.cold_workers(), 0, "0.45 s covers every worker's first wake");
+    assert!(
+        rep.steps >= workers as u64,
+        "every worker must step at least once, got {} steps for {workers} workers",
+        rep.steps
+    );
+    let evps = events as f64 / elapsed.as_secs_f64();
+    println!("  1M workers hot:  {events} events in {elapsed:.2?} ({evps:.0} events/sec)");
+
+    b.finish();
+}

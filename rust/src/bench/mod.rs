@@ -113,6 +113,36 @@ impl Bencher {
         self.bench_with(name, None, Some(elems), f)
     }
 
+    /// Record an externally measured result as a single-shot row: one
+    /// run, already timed by the caller.  For workloads far too slow for
+    /// the sampled loop (e.g. a million-worker simulation that takes tens
+    /// of seconds per run), where warm-up plus `SAMPLES` repeats would
+    /// cost minutes for no extra signal.  The spread statistics collapse
+    /// onto the single measurement (stddev 0, p50 = p95 = mean) and the
+    /// row flows into the same table/CSV/JSON as sampled benches.
+    pub fn record(
+        &mut self,
+        name: &str,
+        elapsed: Duration,
+        bytes: Option<u64>,
+        elems: Option<u64>,
+    ) -> &Stats {
+        let ns = elapsed.as_nanos() as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            mean_ns: ns,
+            stddev_ns: 0.0,
+            p50_ns: ns,
+            p95_ns: ns,
+            iters: 1,
+            bytes_per_iter: bytes,
+            elems_per_iter: elems,
+        };
+        self.report(&stats);
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
     fn bench_with<F: FnMut()>(
         &mut self,
         name: &str,
@@ -293,6 +323,19 @@ mod tests {
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].get("name").unwrap().as_str().unwrap(), "blend");
         assert_eq!(rows[0].get("iters").unwrap().as_usize().unwrap(), 4000);
+    }
+
+    #[test]
+    fn record_rows_collapse_onto_the_single_measurement() {
+        let mut b = Bencher::new("record-test");
+        let s = b.record("one-shot", Duration::from_millis(250), Some(1_000_000), Some(500));
+        assert_eq!(s.mean_ns, 250e6);
+        assert_eq!(s.stddev_ns, 0.0);
+        assert_eq!(s.p50_ns, 250e6);
+        assert_eq!(s.p95_ns, 250e6);
+        assert_eq!(s.iters, 1);
+        assert_eq!(s.bytes_per_iter, Some(1_000_000));
+        assert_eq!(s.elems_per_iter, Some(500));
     }
 
     #[test]

@@ -48,7 +48,7 @@ pub mod weights;
 pub use codec::{Codec, CodecRef, CodecSpec, EncodedPayload};
 pub use message::{encoded_wire_bytes, wire_bytes_for, Message};
 pub use peer::PeerSelector;
-pub use protocol::{Outbound, ProtocolCore};
+pub use protocol::{AliveSet, CowModel, Outbound, ProtocolCore};
 pub use queue::MessageQueue;
 pub use shard::{Shard, ShardPlan};
 pub use topology::{Topology, TopologyRef, TopologySpec};

@@ -63,6 +63,7 @@
 //! assert!((receiver.weights()[0].value() - 0.75).abs() < 1e-12);
 //! ```
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
@@ -73,6 +74,138 @@ use crate::gossip::topology::{TopologyRef, TopologySpec};
 use crate::gossip::weights::SumWeight;
 use crate::tensor::{BufferPool, FlatVec};
 use crate::util::rng::Rng;
+
+/// A worker's parameter vector under lazy (copy-on-write) materialization.
+///
+/// A million-worker fleet cannot afford `dim * 4` bytes per worker up
+/// front when most workers have not taken a step yet: until a worker
+/// first writes (local step or absorb), its model *is* the shared cold
+/// replica, and the slot stores nothing.  [`CowModel::read`] resolves a
+/// borrow against the cold replica; [`CowModel::make_hot`] materializes a
+/// private copy (through the [`BufferPool`] when one is attached) on the
+/// first write.  Once hot, a worker never goes back to cold.
+#[derive(Clone, Debug, Default)]
+pub enum CowModel {
+    /// Untouched: reads resolve to the shared cold replica.
+    #[default]
+    Cold,
+    /// Materialized: a locally owned vector that has diverged.
+    Hot(FlatVec),
+}
+
+impl CowModel {
+    pub fn is_cold(&self) -> bool {
+        matches!(self, CowModel::Cold)
+    }
+
+    /// The materialized vector, if any.
+    pub fn hot(&self) -> Option<&FlatVec> {
+        match self {
+            CowModel::Hot(x) => Some(x),
+            CowModel::Cold => None,
+        }
+    }
+
+    /// Resolve for reading: the private copy when hot, `cold` otherwise.
+    pub fn read<'a>(&'a self, cold: &'a FlatVec) -> &'a FlatVec {
+        match self {
+            CowModel::Hot(x) => x,
+            CowModel::Cold => cold,
+        }
+    }
+
+    /// Resolve for writing, materializing a private copy of `cold` on the
+    /// first call (from the pool when given — recycled storage, same
+    /// bits).
+    pub fn make_hot(&mut self, cold: &FlatVec, pool: Option<&Arc<BufferPool>>) -> &mut FlatVec {
+        if self.is_cold() {
+            let owned = match pool {
+                Some(pool) => FlatVec::pooled_copy(pool, cold.as_slice()),
+                None => cold.clone(),
+            };
+            *self = CowModel::Hot(owned);
+        }
+        match self {
+            CowModel::Hot(x) => x,
+            CowModel::Cold => unreachable!("materialized above"),
+        }
+    }
+}
+
+/// Aliveness for churn-aware sends, in whichever representation the
+/// runtime keeps: a dense mask, or the sparse set of down workers (the
+/// DES stores churn sparsely — a million-worker fleet with ten workers
+/// down should not allocate a million-entry mask per engine).  The two
+/// representations are interchangeable: [`ProtocolCore::emit_gated`]
+/// draws the same randomness and repairs to the same peer for equivalent
+/// inputs (pinned by a unit test below).
+#[derive(Debug)]
+pub enum AliveSet<'a> {
+    /// Dense per-worker flags, `true` = alive.
+    Mask(&'a [bool]),
+    /// Sparse ids of the *down* workers; everyone else is alive.
+    Down(&'a BTreeSet<usize>),
+}
+
+impl AliveSet<'_> {
+    pub fn is_alive(&self, w: usize) -> bool {
+        match self {
+            AliveSet::Mask(mask) => mask[w],
+            AliveSet::Down(down) => !down.contains(&w),
+        }
+    }
+
+    /// Alive workers excluding `id` — the candidate pool for a repair.
+    fn peer_count(&self, id: usize, workers: usize) -> usize {
+        match self {
+            AliveSet::Mask(mask) => (0..workers).filter(|&w| w != id && mask[w]).count(),
+            AliveSet::Down(down) => workers - down.len() - usize::from(!down.contains(&id)),
+        }
+    }
+
+    /// The `k`-th (0-based, ascending id) alive worker other than `id`.
+    /// The mask arm is the reference linear scan; the sparse arm computes
+    /// the same order statistic by walking only the excluded ids.
+    fn kth_peer(&self, id: usize, workers: usize, k: usize) -> usize {
+        match self {
+            AliveSet::Mask(mask) => {
+                let mut k = k;
+                for w in 0..workers {
+                    if w != id && mask[w] {
+                        if k == 0 {
+                            return w;
+                        }
+                        k -= 1;
+                    }
+                }
+                unreachable!("k out of range for the alive peer count")
+            }
+            AliveSet::Down(down) => {
+                // Start from rank k over all ids, then shift past every
+                // excluded id (the down set plus `id`) in ascending order:
+                // each excluded id <= the running answer displaces it by 1.
+                let mut x = k;
+                let mut id_pending = !down.contains(&id);
+                for &e in down.iter() {
+                    if id_pending && id < e {
+                        if id <= x {
+                            x += 1;
+                        }
+                        id_pending = false;
+                    }
+                    if e <= x {
+                        x += 1;
+                    }
+                }
+                if id_pending && id <= x {
+                    x += 1;
+                }
+                debug_assert!(x < workers, "k out of range for the alive peer count");
+                x
+            }
+        }
+    }
+}
 
 /// One worker's protocol state machine.
 #[derive(Clone, Debug)]
@@ -313,6 +446,67 @@ impl ProtocolCore {
         }
     }
 
+    /// A cheap per-worker replica of this core: the topology and codec
+    /// are shared behind their existing `Arc`s (two pointer copies
+    /// instead of a rebuild), the counters restart, and the shard cursor
+    /// staggers by the new id exactly as [`ProtocolCore::new`] would.
+    /// Large fleets construct one validated template and fork it per
+    /// worker — O(shards) per fork, no re-validation, no per-worker
+    /// topology/codec objects.
+    pub fn fork(&self, id: usize) -> ProtocolCore {
+        ProtocolCore {
+            id,
+            p: self.p,
+            topology: Arc::clone(&self.topology),
+            topo_cursor: 0,
+            plan: self.plan,
+            weights: self.weights.clone(),
+            cursor: id % self.plan.num_shards(),
+            steps: 0,
+            codec: Arc::clone(&self.codec),
+            residuals: self.residuals.clone(),
+            pool: self.pool.clone(),
+        }
+    }
+
+    /// [`ProtocolCore::set_codec`] from an already-built codec, shared
+    /// across a fleet: one `Arc` clone per worker instead of one codec
+    /// build per worker.  Stateful codecs still get private per-shard
+    /// residual buffers (error feedback is per-worker state).
+    pub fn set_codec_shared(&mut self, codec: &CodecRef) {
+        if self.codec.spec() == codec.spec() {
+            return;
+        }
+        let stateful = codec.spec().stateful();
+        self.codec = Arc::clone(codec);
+        self.residuals = if stateful {
+            self.plan.shards().iter().map(|s| FlatVec::zeros(s.len)).collect()
+        } else {
+            Vec::new()
+        };
+    }
+
+    /// [`ProtocolCore::set_topology`] from an already-built topology,
+    /// shared across a fleet (same caller-validates contract).
+    pub fn set_topology_shared(&mut self, topology: &TopologyRef) {
+        if self.topology.spec() != topology.spec() {
+            self.topology = Arc::clone(topology);
+        }
+    }
+
+    /// Estimated heap bytes owned by this core beyond its inline struct:
+    /// the per-shard weights and any codec residual buffers.  `Arc`-shared
+    /// state (topology, codec, pool) counts as zero — it exists once per
+    /// fleet, not per worker.
+    pub fn state_bytes(&self) -> usize {
+        let mut total = self.weights.capacity() * std::mem::size_of::<SumWeight>();
+        total += self.residuals.capacity() * std::mem::size_of::<FlatVec>();
+        for r in &self.residuals {
+            total += r.len() * std::mem::size_of::<f32>();
+        }
+        total
+    }
+
     /// The payload codec's plain-data description.
     pub fn codec_spec(&self) -> CodecSpec {
         self.codec.spec()
@@ -387,6 +581,41 @@ impl ProtocolCore {
         self.absorb(x, msg.shard, &msg.payload, msg.weight)
     }
 
+    /// [`ProtocolCore::absorb`] against a copy-on-write slot: a cold
+    /// worker materializes its private copy of `cold` first (an absorb is
+    /// a write — the blend diverges the model), then absorbs as usual.
+    pub fn absorb_cow(
+        &mut self,
+        slot: &mut CowModel,
+        cold: &FlatVec,
+        shard: Shard,
+        payload: &EncodedPayload,
+        weight: SumWeight,
+    ) -> Result<()> {
+        if let CowModel::Hot(x) = slot {
+            return self.absorb(x, shard, payload, weight);
+        }
+        let x = slot.make_hot(cold, self.pool.as_ref());
+        self.absorb(x, shard, payload, weight)
+    }
+
+    /// [`ProtocolCore::local_step`] against a copy-on-write slot
+    /// (materializes on the first step).
+    pub fn local_step_cow(
+        &mut self,
+        slot: &mut CowModel,
+        cold: &FlatVec,
+        grad: &FlatVec,
+        eta: f32,
+        wd: f32,
+    ) -> Result<()> {
+        if let CowModel::Hot(x) = slot {
+            return self.local_step(x, grad, eta, wd);
+        }
+        let x = slot.make_hot(cold, self.pool.as_ref());
+        self.local_step(x, grad, eta, wd)
+    }
+
     /// Weight-only receive transition: absorb and return the blend
     /// coefficient `t` without touching any parameters.  Used by the
     /// engine's immediate-delivery cross-check, where the exchange is
@@ -450,16 +679,32 @@ impl ProtocolCore {
         rng: &mut Rng,
         alive: Option<&[bool]>,
     ) -> Result<Option<Outbound>> {
+        if let Some(alive) = alive {
+            debug_assert_eq!(alive.len(), workers, "aliveness mask vs worker count");
+        }
+        let set = alive.map(AliveSet::Mask);
+        self.emit_gated(x, workers, rng, set.as_ref())
+    }
+
+    /// [`ProtocolCore::emit_alive`] over either aliveness representation.
+    /// Draw order and repair choice are representation-independent: a
+    /// `Down` set produces the bit-identical send sequence to the
+    /// equivalent `Mask` (the sparse arm computes the same uniform order
+    /// statistic without scanning the fleet).
+    pub fn emit_gated(
+        &mut self,
+        x: &FlatVec,
+        workers: usize,
+        rng: &mut Rng,
+        alive: Option<&AliveSet>,
+    ) -> Result<Option<Outbound>> {
         if workers < 2 || !rng.bernoulli(self.p) {
             return Ok(None);
         }
         let mut to = self.pick_peer(workers, rng);
-        if let Some(alive) = alive {
-            debug_assert_eq!(alive.len(), workers, "aliveness mask vs worker count");
-            if !alive[to] {
-                let candidates = (0..workers)
-                    .filter(|&w| w != self.id && alive[w])
-                    .count();
+        if let Some(set) = alive {
+            if !set.is_alive(to) {
+                let candidates = set.peer_count(self.id, workers);
                 if candidates == 0 {
                     return Ok(None); // nobody alive to talk to
                 }
@@ -467,22 +712,14 @@ impl ProtocolCore {
                     // Schedule repair: next alive peer after the pick.
                     loop {
                         to = (to + 1) % workers;
-                        if to != self.id && alive[to] {
+                        if to != self.id && set.is_alive(to) {
                             break;
                         }
                     }
                 } else {
                     // Unbiased repair: uniform over the alive peers.
-                    let mut k = rng.below(candidates as u64) as usize;
-                    for w in 0..workers {
-                        if w != self.id && alive[w] {
-                            if k == 0 {
-                                to = w;
-                                break;
-                            }
-                            k -= 1;
-                        }
-                    }
+                    let k = rng.below(candidates as u64) as usize;
+                    to = set.kth_peer(self.id, workers, k);
                 }
             }
         }
@@ -622,6 +859,140 @@ mod tests {
                 "worker {w} share {share} (counts {counts:?})"
             );
         }
+    }
+
+    #[test]
+    fn down_set_gate_is_bit_identical_to_the_mask_gate() {
+        // The DES stores churn sparsely; this is the contract that makes
+        // that safe: for every (topology, down-set) the sparse gate must
+        // pick the same peer with the same RNG draws as the dense mask.
+        let m = 9;
+        let dim = 6;
+        let x = FlatVec::zeros(dim);
+        for topo in [
+            TopologySpec::UniformRandom,
+            TopologySpec::Ring,
+            TopologySpec::PartnerRotation,
+        ] {
+            let mut by_mask = ProtocolCore::new(0, m, dim, 0.9, topo, 2).unwrap();
+            let mut by_set = ProtocolCore::new(0, m, dim, 0.9, topo, 2).unwrap();
+            let mut rng_a = Rng::new(0xA11CE);
+            let mut rng_b = Rng::new(0xA11CE);
+            let mut scen = Rng::new(42);
+            for round in 0..400 {
+                let mut down = BTreeSet::new();
+                for w in 1..m {
+                    if scen.bernoulli(0.3) {
+                        down.insert(w);
+                    }
+                }
+                let mask: Vec<bool> = (0..m).map(|w| !down.contains(&w)).collect();
+                let a = by_mask.emit_alive(&x, m, &mut rng_a, Some(&mask)).unwrap();
+                let set = AliveSet::Down(&down);
+                let b = by_set.emit_gated(&x, m, &mut rng_b, Some(&set)).unwrap();
+                match (&a, &b) {
+                    (Some(oa), Some(ob)) => {
+                        assert_eq!(oa.to, ob.to, "{topo:?} round {round}, down {down:?}");
+                        assert_eq!(oa.shard, ob.shard);
+                        assert_eq!(oa.weight.value(), ob.weight.value());
+                    }
+                    (None, None) => {}
+                    _ => panic!(
+                        "{topo:?} round {round}: gates diverged (mask {} vs set {})",
+                        a.is_some(),
+                        b.is_some()
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fork_shares_topology_and_codec_and_staggers_like_new() {
+        let m = 8;
+        let dim = 12;
+        let template = ProtocolCore::new(0, m, dim, 0.7, TopologySpec::Hypercube, 3)
+            .unwrap()
+            .with_codec(CodecSpec::TopK { k: 2 })
+            .with_pool(BufferPool::shared());
+        for id in 0..m {
+            let forked = template.fork(id);
+            let fresh = ProtocolCore::new(id, m, dim, 0.7, TopologySpec::Hypercube, 3)
+                .unwrap()
+                .with_codec(CodecSpec::TopK { k: 2 });
+            assert_eq!(forked.id(), id);
+            assert_eq!(forked.steps(), 0);
+            assert_eq!(forked.topo_cursor(), 0);
+            assert_eq!(forked.cursor, fresh.cursor, "shard stagger for worker {id}");
+            assert_eq!(forked.weight_values(), fresh.weight_values());
+            assert_eq!(forked.codec_spec(), fresh.codec_spec());
+            assert_eq!(forked.residuals.len(), fresh.residuals.len());
+            // Shared, not rebuilt: the Arcs point at the template's objects.
+            assert!(Arc::ptr_eq(&forked.topology, &template.topology));
+            assert!(Arc::ptr_eq(&forked.codec, &template.codec));
+            assert!(forked.pool().is_some());
+            assert!(forked.state_bytes() > 0);
+        }
+        // Shared setters follow the same no-op-on-same-spec contract.
+        let mut c = template.fork(3);
+        let dense: CodecRef = CodecSpec::Dense.build();
+        c.set_codec_shared(&dense);
+        assert_eq!(c.codec_spec(), CodecSpec::Dense);
+        assert!(c.residuals.is_empty(), "stateless codec drops residuals");
+        let ring: TopologyRef = TopologySpec::Ring.build();
+        c.set_topology_shared(&ring);
+        assert_eq!(c.topology_spec(), TopologySpec::Ring);
+        assert!(Arc::ptr_eq(&c.topology, &ring));
+    }
+
+    #[test]
+    fn cow_model_materializes_on_first_write_only() {
+        let dim = 8;
+        let cold = FlatVec::from_vec((0..dim).map(|i| i as f32).collect());
+        let mut slot = CowModel::default();
+        assert!(slot.is_cold());
+        assert!(slot.hot().is_none());
+        // Reads resolve to the cold replica without materializing.
+        assert_eq!(slot.read(&cold).as_slice(), cold.as_slice());
+        assert!(slot.is_cold());
+
+        // A local step is a write: the slot goes hot with the cold bits,
+        // then applies the update to its private copy only.
+        let mut c = core(0, 2, dim, 1.0, 1);
+        let g = FlatVec::from_vec(vec![1.0; dim]);
+        c.local_step_cow(&mut slot, &cold, &g, 0.5, 0.0).unwrap();
+        assert!(!slot.is_cold());
+        assert_eq!(c.steps(), 1);
+        for (i, &v) in slot.read(&cold).as_slice().iter().enumerate() {
+            assert!((v - (i as f32 - 0.5)).abs() < 1e-6, "coord {i}: {v}");
+        }
+        assert_eq!(cold.as_slice()[0], 0.0, "cold replica untouched");
+
+        // An absorb on a cold slot also materializes, and the result is
+        // bit-identical to absorbing into an owned copy of the replica.
+        let mut sender = core(0, 2, dim, 1.0, 1);
+        let out = sender.emit_to(&FlatVec::from_vec(vec![7.0; dim]), 1).unwrap();
+        let mut cow_recv = core(1, 2, dim, 1.0, 1);
+        let mut plain_recv = core(1, 2, dim, 1.0, 1);
+        let mut cow_slot = CowModel::default();
+        let mut owned = cold.clone();
+        cow_recv
+            .absorb_cow(&mut cow_slot, &cold, out.shard, &out.payload, out.weight)
+            .unwrap();
+        plain_recv.absorb(&mut owned, out.shard, &out.payload, out.weight).unwrap();
+        assert!(!cow_slot.is_cold());
+        assert_eq!(cow_slot.read(&cold).as_slice(), owned.as_slice());
+        assert_eq!(
+            cow_recv.weights()[0].value(),
+            plain_recv.weights()[0].value()
+        );
+
+        // With a pool the materialized copy draws recycled storage.
+        let pool = BufferPool::shared();
+        let mut pooled = CowModel::default();
+        let x = pooled.make_hot(&cold, Some(&pool));
+        assert_eq!(x.as_slice(), cold.as_slice());
+        assert_eq!(pool.stats().misses, 1, "first materialization is a pool miss");
     }
 
     #[test]

@@ -19,6 +19,9 @@
 //! * [`fabrics`] — beyond the paper: the same gossip stream through the
 //!   ideal / rack / wan / edge network fabrics at equal offered load
 //!   (DES with finite-bandwidth fabric).
+//! * [`scale`] — beyond the paper: consensus and loss curves as the
+//!   fleet grows by orders of magnitude (timing-wheel DES with
+//!   copy-on-write worker state and sampled telemetry).
 
 pub mod codecs;
 pub mod fabrics;
@@ -26,6 +29,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod scale;
 pub mod scenarios;
 pub mod topologies;
 pub mod variance;

@@ -1,0 +1,290 @@
+//! Fleet-scaling harness: consensus and loss curves as the worker count
+//! grows by orders of magnitude (DES).
+//!
+//! The paper's evaluation stops at 8 workers; the simulator does not.
+//! With the timing-wheel scheduler, copy-on-write worker models, and
+//! sampled telemetry, the same gossip protocol runs at thousands to a
+//! million simulated workers in bounded memory.  This harness sweeps a
+//! list of fleet sizes at fixed protocol settings (hypercube schedule +
+//! u8-quantized payloads by default — the cheapest wire format that
+//! scales) and records, per fleet: the consensus curve, the loss curve,
+//! resident bytes per worker, and simulator throughput in events/sec.
+//!
+//! Consensus at megafleet scale is computed over the strided telemetry
+//! sample (see `DesEngine::with_telemetry_sample`), not the full fleet —
+//! the estimator the scaling chapter of `docs/ARCHITECTURE.md` describes.
+//!
+//! ```text
+//! cargo run --release -- figure --figure scale \
+//!     --fleets 4096,65536,1048576 --codec q8 --topology hypercube \
+//!     --horizon 2 --out results/scale.csv
+//! ```
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::gossip::{CodecSpec, TopologySpec};
+use crate::metrics::{ema_series, CsvWriter};
+use crate::sim::{DesEngine, DesStrategy, TimeModel};
+use crate::strategies::grad::QuadraticSource;
+use crate::tensor::FlatVec;
+
+/// Configuration for the fleet-scaling sweep.
+#[derive(Clone, Debug)]
+pub struct ScaleFigConfig {
+    /// Fleet sizes to sweep (hypercube needs powers of two).
+    pub fleets: Vec<usize>,
+    /// Exchange probability — fixed across fleets.
+    pub p: f64,
+    /// Gossip shards per exchange.
+    pub shards: usize,
+    /// Payload codec (default u8 quantization).
+    pub codec: CodecSpec,
+    /// Gossip topology (default hypercube — O(1) peer selection and
+    /// log-diameter mixing, the schedule built for large fleets).
+    pub topology: TopologySpec,
+    /// Quadratic-backend dimension and gradient noise.
+    pub dim: usize,
+    pub sigma: f32,
+    /// Simulated horizon in seconds.
+    pub horizon_secs: f64,
+    pub time_model: TimeModel,
+    /// Consensus samples taken along the horizon.
+    pub samples: usize,
+    /// Telemetry sample size per fleet (strided worker subset).
+    pub telemetry: usize,
+    pub seed: u64,
+    pub eta: f32,
+    pub weight_decay: f32,
+    /// EMA smoothing for the loss traces.
+    pub ema_beta: f64,
+}
+
+impl Default for ScaleFigConfig {
+    fn default() -> Self {
+        ScaleFigConfig {
+            fleets: vec![1 << 12, 1 << 16],
+            p: 0.05,
+            shards: 4,
+            codec: CodecSpec::QuantizeU8,
+            topology: TopologySpec::Hypercube,
+            dim: 64,
+            sigma: 0.2,
+            horizon_secs: 2.0,
+            time_model: TimeModel::paper_like(),
+            samples: 8,
+            telemetry: 1024,
+            seed: 0,
+            eta: 0.5,
+            weight_decay: 0.0,
+            ema_beta: 0.95,
+        }
+    }
+}
+
+/// One fleet size's series.
+#[derive(Clone, Debug)]
+pub struct ScaleSeries {
+    pub workers: usize,
+    /// `(sim_seconds, ema_loss)` over the telemetry sample.
+    pub loss: Vec<(f64, f64)>,
+    /// `(sim_seconds, Σ_sample ‖x_m − x̄‖²)` along the horizon.
+    pub consensus: Vec<(f64, f64)>,
+    pub steps: u64,
+    pub messages: u64,
+    /// Resident bytes per worker at the end of the run.
+    pub bytes_per_worker: usize,
+    /// Simulator throughput: (steps + messages) / wall seconds.
+    pub events_per_sec: f64,
+    pub final_consensus: f64,
+}
+
+fn run_one(cfg: &ScaleFigConfig, workers: usize) -> Result<ScaleSeries> {
+    let mut grad = QuadraticSource::new(cfg.dim, cfg.sigma, cfg.seed ^ 0x5CA1);
+    let init = FlatVec::zeros(cfg.dim);
+    let mut eng = DesEngine::new(
+        DesStrategy::ShardedGoSgd { p: cfg.p, shards: cfg.shards },
+        cfg.time_model.clone(),
+        workers,
+        &init,
+        cfg.eta,
+        cfg.weight_decay,
+        cfg.seed,
+    )?
+    .with_codec(cfg.codec)
+    .with_topology(cfg.topology)
+    .with_telemetry_sample(cfg.telemetry);
+    let wall = Instant::now();
+    let mut consensus = Vec::with_capacity(cfg.samples);
+    for i in 1..=cfg.samples.max(1) {
+        let t = cfg.horizon_secs * i as f64 / cfg.samples.max(1) as f64;
+        eng.run(&mut grad, t)?;
+        consensus.push((t, eng.consensus_error()?));
+    }
+    let elapsed = wall.elapsed().as_secs_f64();
+    let final_consensus = eng.consensus_error()?;
+    let bytes_per_worker = eng.state_bytes() / workers;
+    let rep = eng.report();
+    Ok(ScaleSeries {
+        workers,
+        loss: ema_series(&rep.trace, cfg.ema_beta),
+        consensus,
+        steps: rep.steps,
+        messages: rep.messages,
+        bytes_per_worker,
+        events_per_sec: (rep.steps + rep.messages) as f64 / elapsed.max(1e-9),
+        final_consensus,
+    })
+}
+
+/// Sweep every configured fleet size at fixed protocol settings.
+pub fn run(cfg: &ScaleFigConfig, out: Option<&Path>) -> Result<Vec<ScaleSeries>> {
+    if !(cfg.p > 0.0 && cfg.p <= 1.0) {
+        return Err(Error::config(format!(
+            "fleet scaling needs an exchange probability in (0, 1], got {}",
+            cfg.p
+        )));
+    }
+    if cfg.fleets.is_empty() {
+        return Err(Error::config("fleet scaling needs at least one fleet size"));
+    }
+    if cfg.shards == 0 || (cfg.shards > 1 && cfg.shards > cfg.dim) {
+        return Err(Error::config(format!(
+            "cannot cut {} parameters into {} shards",
+            cfg.dim, cfg.shards
+        )));
+    }
+    for &workers in &cfg.fleets {
+        if workers < 2 {
+            return Err(Error::config(format!(
+                "fleet scaling needs at least 2 workers per fleet, got {workers}"
+            )));
+        }
+        // Fail the whole sweep up front rather than hours into a megafleet.
+        cfg.topology.validate_for(workers)?;
+    }
+    let mut series = Vec::with_capacity(cfg.fleets.len());
+    for &workers in &cfg.fleets {
+        series.push(run_one(cfg, workers)?);
+    }
+    if let Some(path) = out {
+        // Two curves per fleet, tagged `scale_<workers>/loss` and
+        // `scale_<workers>/consensus`.
+        let mut csv = CsvWriter::create(path, &["series", "sim_seconds", "value"])?;
+        for s in &series {
+            let loss_tag = format!("scale_{}/loss", s.workers);
+            for &(t, l) in &s.loss {
+                csv.write_tagged_row(&loss_tag, &[t, l])?;
+            }
+            let eps_tag = format!("scale_{}/consensus", s.workers);
+            for &(t, e) in &s.consensus {
+                csv.write_tagged_row(&eps_tag, &[t, e])?;
+            }
+        }
+        csv.flush()?;
+    }
+    Ok(series)
+}
+
+/// Console table with the headline scaling numbers.
+pub fn format_table(series: &[ScaleSeries]) -> String {
+    let mut out = String::from(
+        "workers       steps    messages   bytes/worker    events/sec   consensus_eps\n",
+    );
+    for s in series {
+        out.push_str(&format!(
+            "{:<10} {:>9}  {:>10}  {:>13}  {:>12.0}  {:>14.5}\n",
+            s.workers, s.steps, s.messages, s.bytes_per_worker, s.events_per_sec, s.final_consensus,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ScaleFigConfig {
+        ScaleFigConfig {
+            fleets: vec![16, 64],
+            p: 0.2,
+            horizon_secs: 10.0,
+            samples: 5,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_sweep_produces_both_curves_per_fleet() {
+        let cfg = small_cfg();
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 2);
+        for s in &series {
+            assert!(s.steps > 0 && s.messages > 0, "{} workers sent nothing", s.workers);
+            assert!(!s.loss.is_empty());
+            assert_eq!(s.consensus.len(), cfg.samples);
+            for w in s.consensus.windows(2) {
+                assert!(w[0].0 < w[1].0);
+            }
+            assert!(s.final_consensus.is_finite());
+            assert!(s.bytes_per_worker > 0);
+            assert!(s.events_per_sec > 0.0);
+        }
+        // The larger fleet takes more total steps over the same horizon.
+        assert!(series[1].steps > series[0].steps);
+    }
+
+    #[test]
+    fn degenerate_knobs_are_config_errors() {
+        let cfg = ScaleFigConfig { p: 0.0, ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+        let cfg = ScaleFigConfig { fleets: Vec::new(), ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+        let cfg = ScaleFigConfig { fleets: vec![1], ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+        // Hypercube + a non-power-of-two fleet fails up front.
+        let cfg = ScaleFigConfig { fleets: vec![24], ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+        let cfg = ScaleFigConfig { shards: 4096, ..small_cfg() };
+        assert!(run(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn telemetry_sampling_keeps_consensus_finite_on_a_bigger_fleet() {
+        // 256 workers with an 8-worker telemetry sample: the consensus
+        // estimator runs over the strided subset, stays finite, and the
+        // sweep still completes quickly.
+        let cfg = ScaleFigConfig {
+            fleets: vec![256],
+            telemetry: 8,
+            horizon_secs: 5.0,
+            samples: 3,
+            ..small_cfg()
+        };
+        let series = run(&cfg, None).unwrap();
+        assert_eq!(series.len(), 1);
+        assert!(series[0].final_consensus.is_finite());
+        assert!(series[0].steps > 256);
+    }
+
+    #[test]
+    fn csv_written_with_per_fleet_tags() {
+        let dir = std::env::temp_dir().join("gosgd_scale_test");
+        let path = dir.join("scale.csv");
+        let cfg = ScaleFigConfig {
+            fleets: vec![16, 32],
+            horizon_secs: 5.0,
+            samples: 3,
+            ..small_cfg()
+        };
+        run(&cfg, Some(&path)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,sim_seconds,value\n"));
+        assert!(text.contains("scale_16/loss,"));
+        assert!(text.contains("scale_16/consensus,"));
+        assert!(text.contains("scale_32/consensus,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

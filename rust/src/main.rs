@@ -23,7 +23,9 @@ use gosgd::error::Result;
 use gosgd::gossip::PeerSelector;
 use gosgd::gossip::CodecSpec;
 use gosgd::gossip::TopologySpec;
-use gosgd::harness::{codecs, fabrics, fig1, fig2, fig3, fig4, scenarios, topologies, variance};
+use gosgd::harness::{
+    codecs, fabrics, fig1, fig2, fig3, fig4, scale, scenarios, topologies, variance,
+};
 use gosgd::model::Manifest;
 use gosgd::optim::LrSchedule;
 use gosgd::sim::FabricSpec;
@@ -160,7 +162,7 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
         .opt(
             "figure",
             "fig1",
-            "fig1 | fig2 | fig3 | scenarios | codecs | topologies | fabrics",
+            "fig1 | fig2 | fig3 | scenarios | codecs | topologies | fabrics | scale",
         )
         .opt("artifacts", "artifacts", "artifact directory root")
         .opt("model", "tiny", "model variant")
@@ -174,7 +176,11 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
             "gossip shards per exchange (fig2/scenarios/codecs/topologies/fabrics)",
         )
         .opt("codecs", "dense,top32,q8", "payload codecs to compare (codecs)")
-        .opt("codec", "dense", "payload codec shared by every series (topologies/fabrics)")
+        .opt(
+            "codec",
+            "dense",
+            "payload codec shared by every series (topologies/fabrics/scale)",
+        )
         .opt(
             "topologies",
             "uniform,ring,hypercube,rotation",
@@ -183,8 +189,14 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
         .opt(
             "topology",
             "uniform",
-            "gossip topology shared by every series (fabrics)",
+            "gossip topology shared by every series (fabrics/scale)",
         )
+        .opt(
+            "fleets",
+            "4096,65536",
+            "fleet sizes to sweep, largest last (scale; hypercube needs powers of two)",
+        )
+        .opt("telemetry", "1024", "telemetry sample size per fleet (scale)")
         .opt(
             "fabric",
             "ideal",
@@ -319,6 +331,30 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
             };
             let series = fabrics::run(&cfg, out.as_deref())?;
             println!("{}", fabrics::format_table(&series));
+        }
+        "scale" => {
+            let fleets = a
+                .get("fleets")?
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|_| gosgd::Error::cli(format!("bad fleet size {s:?}")))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            let cfg = scale::ScaleFigConfig {
+                fleets,
+                p: a.get_f64("p")?,
+                shards: a.get_usize("shards")?,
+                codec: CodecSpec::parse(a.get("codec")?)?,
+                topology: TopologySpec::parse(a.get("topology")?)?,
+                horizon_secs: a.get_f64("horizon")?,
+                telemetry: a.get_usize("telemetry")?,
+                seed: a.get_u64("seed")?,
+                ..Default::default()
+            };
+            let series = scale::run(&cfg, out.as_deref())?;
+            println!("{}", scale::format_table(&series));
         }
         "scenarios" => {
             let cfg = scenarios::ScenarioConfig {

@@ -7,19 +7,30 @@
 //! All gossip state transitions — blend, weight halving, shard cursor —
 //! are delegated to the per-worker
 //! [`ProtocolCore`](crate::gossip::ProtocolCore); this module owns only
-//! what is genuinely simulation: the event heap, clocks, the latency
+//! what is genuinely simulation: the event queue, clocks, the latency
 //! model, barrier bookkeeping for the synchronous baselines, and the
 //! scenario-diversity knobs ([`ScenarioModel`]: heterogeneous per-worker
 //! compute speeds and crash/rejoin worker churn).
+//!
+//! The engine is built to scale to million-worker fleets: events schedule
+//! through a hierarchical timing wheel by default ([`SchedulerKind`];
+//! amortized O(1), pop order bit-identical to the reference heap), worker
+//! models materialize copy-on-write from one shared cold replica
+//! ([`CowModel`]), churn state is sparse (per-*down*-worker, not
+//! per-worker), and telemetry samples a strided subset of workers on
+//! large fleets ([`DesEngine::with_telemetry_sample`]).
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::gossip::{
-    wire_bytes_for, CodecSpec, EncodedPayload, ProtocolCore, Shard, SumWeight, TopologySpec,
+    wire_bytes_for, AliveSet, CodecSpec, CowModel, EncodedPayload, ProtocolCore, Shard, SumWeight,
+    TopologySpec,
 };
 use crate::sim::fabric::{Delivery, Fabric, FabricSpec, FabricStats};
+use crate::sim::wheel::TimingWheel;
 use crate::strategies::grad::GradSource;
 use crate::tensor::{BufferPool, FlatVec};
 use crate::util::rng::Rng;
@@ -235,6 +246,93 @@ impl Ord for Event {
     }
 }
 
+/// Which scheduler backs the engine's event queue.  Both pop the exact
+/// same order — ascending `(time, seq)` — and neither consumes RNG, so
+/// every run is bit-identical under either backend (pinned by
+/// `runtime_equivalence.rs`).  The wheel is the default: amortized O(1)
+/// per event versus the heap's O(log n), which is the difference that
+/// lets a million-worker fleet (a million pending wakes at all times)
+/// simulate at full speed.
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum SchedulerKind {
+    /// Global binary heap — the reference implementation.
+    Heap,
+    /// Hierarchical timing wheel ([`crate::sim::wheel::TimingWheel`]).
+    Wheel,
+}
+
+/// The engine's pending-event store, behind the [`SchedulerKind`] choice.
+enum EventQueue {
+    Heap(BinaryHeap<Event>),
+    Wheel(TimingWheel<EventKind>),
+}
+
+impl EventQueue {
+    fn new(kind: SchedulerKind, wheel_tick: f64) -> Self {
+        match kind {
+            SchedulerKind::Heap => EventQueue::Heap(BinaryHeap::new()),
+            SchedulerKind::Wheel => EventQueue::Wheel(TimingWheel::new(wheel_tick)),
+        }
+    }
+
+    fn push(&mut self, ev: Event) {
+        match self {
+            EventQueue::Heap(h) => h.push(ev),
+            EventQueue::Wheel(wh) => wh.push(ev.time, ev.seq, ev.kind),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        match self {
+            EventQueue::Heap(h) => h.pop(),
+            EventQueue::Wheel(wh) => {
+                wh.pop().map(|e| Event { time: e.time, seq: e.seq, kind: e.item })
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            EventQueue::Heap(h) => h.len(),
+            EventQueue::Wheel(wh) => wh.len(),
+        }
+    }
+
+    /// Visit every pending event's kind (order unspecified) — the
+    /// conservation audit sums in-flight `Deliver` mass this way.
+    fn for_each_kind<F: FnMut(&EventKind)>(&self, mut f: F) {
+        match self {
+            EventQueue::Heap(h) => {
+                for ev in h.iter() {
+                    f(&ev.kind);
+                }
+            }
+            EventQueue::Wheel(wh) => wh.for_each(|e| f(&e.item)),
+        }
+    }
+
+    fn approx_bytes(&self) -> usize {
+        match self {
+            EventQueue::Heap(h) => h.capacity() * std::mem::size_of::<Event>(),
+            EventQueue::Wheel(wh) => wh.approx_bytes(),
+        }
+    }
+}
+
+/// Wheel bucket width for a time model: an eighth of the mean compute
+/// time spreads each worker's wake stream across ~8 ticks — fine enough
+/// that per-slot sorts stay short, coarse enough that the wheel's
+/// two-level span (65,536 ticks) covers hours of simulated time before
+/// the overflow list is consulted.
+fn wheel_tick(tm: &TimeModel) -> f64 {
+    let tick = tm.compute / 8.0;
+    if tick.is_finite() && tick > 0.0 {
+        tick
+    } else {
+        1e-3
+    }
+}
+
 /// A `(sim_time_seconds, loss)` training trace plus accounting.
 #[derive(Debug, Default)]
 pub struct DesReport {
@@ -308,19 +406,50 @@ impl DesReport {
 }
 
 struct WorkerState {
-    x: FlatVec,
+    /// The worker's model, copy-on-write against the engine's shared
+    /// cold replica: `Cold` until the first local step or absorb
+    /// materializes a private copy through the buffer pool.  Idle
+    /// workers on a million-worker fleet cost bytes, not a model clone.
+    x: CowModel,
     /// The worker's protocol state machine (per-shard sum weights, shard
     /// cursor, exchange policy, local step counter).
     core: ProtocolCore,
     mailbox: Vec<(Shard, EncodedPayload, f64)>,
     /// PerSyn/EASGD: parked at the barrier.
     at_barrier: bool,
-    /// Churn: offline workers swallow wakes and let mail accumulate.
-    alive: bool,
-    /// When the current outage began (meaningful only while `!alive`);
-    /// downtime is accounted on rejoin / at the horizon, so the report
-    /// never counts offline seconds that fall outside the run.
-    down_since: f64,
+}
+
+/// Sparse churn state, allocated only when the scenario enables churn.
+/// Everything keys by worker id in *ordered* maps so accounting sweeps
+/// (e.g. the end-of-run downtime pass) visit workers in ascending id —
+/// the same order the old dense per-worker arrays walked, keeping f64
+/// summation order (and thus the trace hash) bit-identical.
+#[derive(Debug, Default)]
+struct ChurnState {
+    /// Ids of the workers currently down.  Offline workers swallow wakes
+    /// and let mail accumulate; `AliveSet::Down` hands this to the
+    /// emit path so deterministic schedules repair around dead peers.
+    down: BTreeSet<usize>,
+    /// Wake-stream epochs of workers that have crashed at least once
+    /// (absent = epoch 0).  A crash bumps the epoch, invalidating wakes
+    /// scheduled before the worker died.
+    epochs: BTreeMap<usize, u32>,
+    /// When each down worker's current outage began; downtime is
+    /// accounted on rejoin / at the horizon, so the report never counts
+    /// offline seconds that fall outside the run.
+    down_since: BTreeMap<usize, f64>,
+}
+
+/// Rendezvous bookkeeping for the symmetric-gossip ablation — the only
+/// strategy that reads it, and the only one that pays its two O(workers)
+/// vectors.
+#[derive(Debug)]
+struct SymState {
+    /// When each worker's current compute finishes (earliest rendezvous
+    /// point).
+    busy_until: Vec<f64>,
+    /// Handshake delays owed at next wake.
+    pending_delay: Vec<f64>,
 }
 
 /// The discrete-event engine.
@@ -342,21 +471,23 @@ pub struct DesEngine {
     /// Reusable delivery buffer for fabric ticks.
     fabric_out: Vec<Delivery<GossipMsg>>,
     workers: Vec<WorkerState>,
+    /// The shared cold model replica every `CowModel::Cold` worker reads.
+    cold: Arc<FlatVec>,
     master: FlatVec,
 
     /// PerSyn/EASGD barrier bookkeeping.
     barrier_arrivals: Vec<f64>,
-    /// Symmetric gossip: when each worker's current compute finishes
-    /// (earliest rendezvous point) and handshake delays owed at next wake.
-    busy_until: Vec<f64>,
-    pending_delay: Vec<f64>,
-    /// Per-worker wake-stream epoch (bumped on crash so stale wakes die).
-    wake_epoch: Vec<u32>,
-    /// Mirror of each worker's `alive` flag, maintained at crash/rejoin
-    /// so the hot wake path can hand `emit_alive` a mask without
-    /// allocating per event.
-    alive_mask: Vec<bool>,
-    events: BinaryHeap<Event>,
+    /// Symmetric-gossip rendezvous state; `None` for every other
+    /// strategy (which never reads it).
+    sym: Option<Box<SymState>>,
+    /// Sparse crash/rejoin state; `None` until a churn scenario starts.
+    churn: Option<Box<ChurnState>>,
+    events: EventQueue,
+    scheduler: SchedulerKind,
+    /// Telemetry stride: worker `w` contributes to the loss trace and
+    /// the consensus computations iff `w % trace_stride == 0`.  1 (full
+    /// telemetry) up to 4096 workers; a ~1024-worker sample beyond.
+    trace_stride: usize,
     seq: u64,
     /// Initial wakes (and crash schedules) are laid down lazily on the
     /// first `run` call so `with_scenario` can still adjust the model.
@@ -392,29 +523,29 @@ impl DesEngine {
         // One shared pool: a payload acquired at any worker's emit is
         // recycled when the receiving worker absorbs it.
         let pool = BufferPool::shared();
+        // One fully validated template core; every worker forks it,
+        // sharing the topology/codec objects behind `Arc`s — O(shards)
+        // state per worker instead of per-worker rebuilds.
+        let template =
+            ProtocolCore::new(0, workers, init.len(), p, TopologySpec::UniformRandom, shards)?
+                .with_pool(pool);
         let ws = (0..workers)
-            .map(|w| {
-                Ok(WorkerState {
-                    x: init.clone(),
-                    core: ProtocolCore::new(
-                        w,
-                        workers,
-                        init.len(),
-                        p,
-                        TopologySpec::UniformRandom,
-                        shards,
-                    )?
-                    .with_pool(pool.clone()),
-                    mailbox: Vec::new(),
-                    at_barrier: false,
-                    alive: true,
-                    down_since: 0.0,
-                })
+            .map(|w| WorkerState {
+                x: CowModel::Cold,
+                core: template.fork(w),
+                mailbox: Vec::new(),
+                at_barrier: false,
             })
-            .collect::<Result<Vec<WorkerState>>>()?;
+            .collect::<Vec<WorkerState>>();
+        let sym = matches!(strategy, DesStrategy::SymmetricGossip { .. }).then(|| {
+            Box::new(SymState {
+                busy_until: vec![0.0; workers],
+                pending_delay: vec![0.0; workers],
+            })
+        });
+        let trace_stride = if workers <= 4096 { 1 } else { workers / 1024 };
         Ok(DesEngine {
             strategy,
-            time_model,
             scenario: ScenarioModel::none(),
             topology: TopologySpec::UniformRandom,
             fabric_spec: FabricSpec::Ideal,
@@ -422,13 +553,14 @@ impl DesEngine {
             fabric_tick_at: f64::INFINITY,
             fabric_out: Vec::new(),
             workers: ws,
+            cold: Arc::new(init.clone()),
             master: init.clone(),
             barrier_arrivals: Vec::new(),
-            busy_until: vec![0.0; workers],
-            pending_delay: vec![0.0; workers],
-            wake_epoch: vec![0; workers],
-            alive_mask: vec![true; workers],
-            events: BinaryHeap::new(),
+            sym,
+            churn: None,
+            events: EventQueue::new(SchedulerKind::Wheel, wheel_tick(&time_model)),
+            scheduler: SchedulerKind::Wheel,
+            trace_stride,
             seq: 0,
             started: false,
             eta,
@@ -437,6 +569,7 @@ impl DesEngine {
             grad_buf: FlatVec::zeros(init.len()),
             mail_scratch: Vec::new(),
             report: DesReport::default(),
+            time_model,
         })
     }
 
@@ -478,9 +611,40 @@ impl DesEngine {
     /// called before the first [`DesEngine::run`].
     pub fn with_codec(mut self, codec: CodecSpec) -> Self {
         assert!(!self.started, "with_codec must precede run");
+        // One codec object serves the whole fleet (codecs are stateless;
+        // per-worker codec *state* like error feedback lives in the core).
+        let shared = codec.build();
         for ws in &mut self.workers {
-            ws.core.set_codec(codec);
+            ws.core.set_codec_shared(&shared);
         }
+        self
+    }
+
+    /// Select the event-queue backend (see [`SchedulerKind`]); the timing
+    /// wheel by default.  Pop order — and therefore every run — is
+    /// bit-identical under either, so this is a performance knob and an
+    /// equivalence-testing hook, not a semantics switch.  Must be called
+    /// before the first [`DesEngine::run`].
+    pub fn with_scheduler(mut self, kind: SchedulerKind) -> Self {
+        assert!(!self.started, "with_scheduler must precede run");
+        if kind != self.scheduler {
+            debug_assert_eq!(self.events.len(), 0, "events precede start");
+            self.scheduler = kind;
+            self.events = EventQueue::new(kind, wheel_tick(&self.time_model));
+        }
+        self
+    }
+
+    /// Cap telemetry at roughly `samples` workers: the loss trace and the
+    /// consensus computations use every `stride`-th worker, with
+    /// `stride = max(1, workers / samples)`.  Fleets of ≤ 4096 workers
+    /// default to full telemetry (stride 1); larger fleets default to a
+    /// ~1024-worker sample.  `report.steps` still counts every worker's
+    /// steps — only the per-step trace is sampled.  Must be called before
+    /// the first [`DesEngine::run`].
+    pub fn with_telemetry_sample(mut self, samples: usize) -> Self {
+        assert!(!self.started, "with_telemetry_sample must precede run");
+        self.trace_stride = (self.workers.len() / samples.max(1)).max(1);
         self
     }
 
@@ -491,8 +655,18 @@ impl DesEngine {
 
     /// Schedule a wake stamped with `w`'s current epoch.
     fn schedule_wake(&mut self, at: f64, w: usize) {
-        let epoch = self.wake_epoch[w];
+        let epoch = self.epoch_of(w);
         self.schedule(at, EventKind::Wake { w, epoch });
+    }
+
+    /// Whether worker `w` is currently up (always true without churn).
+    fn is_alive(&self, w: usize) -> bool {
+        self.churn.as_ref().map_or(true, |c| !c.down.contains(&w))
+    }
+
+    /// `w`'s current wake-stream epoch (0 until its first crash).
+    fn epoch_of(&self, w: usize) -> u32 {
+        self.churn.as_ref().and_then(|c| c.epochs.get(&w).copied()).unwrap_or(0)
     }
 
     /// Per-worker compute draw: base jittered time × the scenario's
@@ -550,9 +724,15 @@ impl DesEngine {
         if let Some(params) = self.fabric_spec.params() {
             self.fabric = Some(Fabric::new(self.workers.len(), params));
         }
+        if self.scenario.churn_enabled() {
+            self.churn = Some(Box::default());
+        }
         if self.topology != TopologySpec::UniformRandom {
+            // One topology object serves the whole fleet; per-worker
+            // position (rotation cursor) lives in the core.
+            let shared = self.topology.build();
             for ws in &mut self.workers {
-                ws.core.set_topology(self.topology);
+                ws.core.set_topology_shared(&shared);
             }
         }
         // Stagger initial wakes slightly so workers don't tick in lockstep.
@@ -588,7 +768,7 @@ impl DesEngine {
                     self.workers[to].mailbox.push((shard, payload, weight));
                 }
                 EventKind::Wake { w, epoch } => {
-                    if self.workers[w].alive && epoch == self.wake_epoch[w] {
+                    if self.is_alive(w) && epoch == self.epoch_of(w) {
                         self.wake(w, ev.time, grad)?;
                     }
                 }
@@ -616,11 +796,15 @@ impl DesEngine {
         }
         // Account the in-progress outages up to the point the run stopped
         // (resetting `down_since` keeps a longer-horizon resume exact).
+        // The BTreeMap sweeps in ascending worker id — the summation
+        // order the dense representation used.
         let end = self.report.end_time;
-        for ws in &mut self.workers {
-            if !ws.alive && ws.down_since < end {
-                self.report.downtime_secs += end - ws.down_since;
-                ws.down_since = end;
+        if let Some(churn) = self.churn.as_mut() {
+            for since in churn.down_since.values_mut() {
+                if *since < end {
+                    self.report.downtime_secs += end - *since;
+                    *since = end;
+                }
             }
         }
         if let Some(fab) = &self.fabric {
@@ -648,25 +832,30 @@ impl DesEngine {
     fn crash(&mut self, w: usize, now: f64) {
         // A worker parked at a barrier never crashes in this model (churn
         // is gated to the decentralized strategies, which have no barrier).
-        if !self.workers[w].alive || self.workers[w].at_barrier {
+        if !self.is_alive(w) || self.workers[w].at_barrier {
             return;
         }
-        self.workers[w].alive = false;
-        self.alive_mask[w] = false;
-        self.workers[w].down_since = now;
-        // Invalidate the in-flight wake of the interrupted compute step.
-        self.wake_epoch[w] = self.wake_epoch[w].wrapping_add(1);
+        {
+            let churn = self.churn.as_mut().expect("crash events exist only under churn");
+            churn.down.insert(w);
+            churn.down_since.insert(w, now);
+            // Invalidate the in-flight wake of the interrupted step.
+            let epoch = churn.epochs.entry(w).or_insert(0);
+            *epoch = epoch.wrapping_add(1);
+        }
         self.report.crashes += 1;
         let down = self.draw_exp(self.scenario.rejoin_mttr);
         self.schedule(now + down, EventKind::Rejoin(w));
     }
 
     fn rejoin(&mut self, w: usize, now: f64) {
-        self.report.downtime_secs += now - self.workers[w].down_since;
-        self.workers[w].alive = true;
-        self.alive_mask[w] = true;
+        {
+            let churn = self.churn.as_mut().expect("rejoin events exist only under churn");
+            let since = churn.down_since.remove(&w).expect("rejoining worker was down");
+            churn.down.remove(&w);
+            self.report.downtime_secs += now - since;
+        }
         let dt = self.draw_compute_for(w);
-        self.busy_until[w] = now + dt;
         self.schedule_wake(now + dt, w);
         // Next failure of this worker.
         let next = self.draw_exp(self.scenario.crash_mtbf);
@@ -674,40 +863,45 @@ impl DesEngine {
     }
 
     fn wake(&mut self, w: usize, now: f64, grad: &mut dyn GradSource) -> Result<()> {
+        let cold = Arc::clone(&self.cold);
         // 0. Pay any handshake delay owed from a symmetric rendezvous the
         //    worker was dragged into while computing.
-        if self.pending_delay[w] > 0.0 {
-            let d = std::mem::take(&mut self.pending_delay[w]);
-            self.report.blocked_secs += d;
-            self.busy_until[w] = now + d;
-            self.schedule_wake(now + d, w);
-            return Ok(());
+        if let Some(sym) = self.sym.as_mut() {
+            if sym.pending_delay[w] > 0.0 {
+                let d = std::mem::take(&mut sym.pending_delay[w]);
+                sym.busy_until[w] = now + d;
+                self.report.blocked_secs += d;
+                self.schedule_wake(now + d, w);
+                return Ok(());
+            }
         }
         // 1. Process pending messages (GoSGD ProcessMessages): the core
         //    blends each shard range against that shard's sum weight.
         //    The mailbox is swapped against a reusable scratch buffer —
         //    no fresh Vec per wake — and each absorbed payload's pooled
         //    storage retires for the next emit.  (No delivery can land in
-        //    `w`'s mailbox mid-wake: deliveries are heap events.)
+        //    `w`'s mailbox mid-wake: deliveries are queue events.)
         debug_assert!(self.mail_scratch.is_empty());
         std::mem::swap(&mut self.mail_scratch, &mut self.workers[w].mailbox);
         {
-            let ws = &mut self.workers[w];
+            let WorkerState { x, core, .. } = &mut self.workers[w];
             for (shard, payload, weight) in self.mail_scratch.drain(..) {
-                ws.core.absorb(&mut ws.x, shard, &payload, SumWeight::from_value(weight))?;
+                core.absorb_cow(x, &cold, shard, &payload, SumWeight::from_value(weight))?;
             }
         }
 
         // 2. Local gradient step (through the core's step transition).
         let loss = {
-            let ws = &mut self.workers[w];
-            let step = ws.core.steps();
-            let loss = grad.grad(w + 1, &ws.x, step, &mut self.grad_buf)?;
-            ws.core.local_step(&mut ws.x, &self.grad_buf, self.eta, self.weight_decay)?;
+            let WorkerState { x, core, .. } = &mut self.workers[w];
+            let step = core.steps();
+            let loss = grad.grad(w + 1, x.read(&cold), step, &mut self.grad_buf)?;
+            core.local_step_cow(x, &cold, &self.grad_buf, self.eta, self.weight_decay)?;
             loss
         };
         self.report.steps += 1;
-        self.report.trace.push((now, loss));
+        if w % self.trace_stride == 0 {
+            self.report.trace.push((now, loss));
+        }
 
         // 3. Strategy-specific communication + next wake.
         match self.strategy.clone() {
@@ -721,17 +915,15 @@ impl DesEngine {
                 // churn the scenario makes the pick topology-aware: a
                 // dead receiver is repaired around (the deterministic
                 // schedules walk to the next alive peer) instead of
-                // parking mass in a mailbox nobody is draining.
+                // parking mass in a mailbox nobody is draining.  The
+                // sparse down-set gate draws the same RNG stream the old
+                // dense mask did (pinned in `gossip::protocol` tests).
                 let m = self.workers.len();
-                let dim = self.workers[w].x.len();
-                let alive: Option<&[bool]> = if self.scenario.churn_enabled() {
-                    Some(&self.alive_mask)
-                } else {
-                    None
-                };
+                let dim = cold.len();
                 let out = {
-                    let ws = &mut self.workers[w];
-                    ws.core.emit_alive(&ws.x, m, &mut self.rng, alive)?
+                    let gate = self.churn.as_deref().map(|c| AliveSet::Down(&c.down));
+                    let WorkerState { x, core, .. } = &mut self.workers[w];
+                    core.emit_gated(x.read(&cold), m, &mut self.rng, gate.as_ref())?
                 };
                 if let Some(out) = out {
                     let encoded = out.wire_bytes();
@@ -769,7 +961,6 @@ impl DesEngine {
                 }
                 // Fire-and-forget: compute continues immediately.
                 let dt = self.draw_compute_for(w);
-                self.busy_until[w] = now + dt;
                 self.schedule_wake(now + dt, w);
             }
             DesStrategy::SymmetricGossip { p } => {
@@ -779,13 +970,20 @@ impl DesEngine {
                     let r = self.rng.peer(m, w);
                     // Rendezvous: wait for r to finish its current step,
                     // then a two-way swap (2 messages, 2 latencies).
-                    let wait = (self.busy_until[r] - now).max(0.0);
+                    let wait = {
+                        let sym = self.sym.as_ref().expect("symmetric state");
+                        (sym.busy_until[r] - now).max(0.0)
+                    };
                     let lat = self.time_model.draw_latency(&mut self.rng)
                         + self.time_model.draw_latency(&mut self.rng);
                     // Pairwise average both models (symmetric exchange).
-                    let xr = self.workers[r].x.clone();
-                    self.workers[w].x.mix_from(&xr, 0.5, 0.5)?;
-                    self.workers[r].x = self.workers[w].x.clone();
+                    let xr = self.workers[r].x.read(&cold).clone();
+                    {
+                        let WorkerState { x, core, .. } = &mut self.workers[w];
+                        x.make_hot(&cold, core.pool()).mix_from(&xr, 0.5, 0.5)?;
+                    }
+                    let xw = self.workers[w].x.read(&cold).clone();
+                    self.workers[r].x = CowModel::Hot(xw);
                     self.report.messages += 2;
                     let b = 2 * wire_bytes_for(xr.len(), false) as u64;
                     self.report.bytes += b;
@@ -793,11 +991,13 @@ impl DesEngine {
                     // Sender blocks for the wait + handshake; receiver owes
                     // the handshake at its next wake.
                     self.report.blocked_secs += wait + lat;
-                    self.pending_delay[r] += lat;
+                    self.sym.as_mut().expect("symmetric state").pending_delay[r] += lat;
                     resume = now + wait + lat;
                 }
                 let dt = self.draw_compute_for(w);
-                self.busy_until[w] = resume + dt;
+                if let Some(sym) = self.sym.as_mut() {
+                    sym.busy_until[w] = resume + dt;
+                }
                 self.schedule_wake(resume + dt, w);
             }
             DesStrategy::Easgd { alpha, tau } => {
@@ -826,16 +1026,18 @@ impl DesEngine {
                         let old_master = self.master.clone();
                         let mut sum_delta = FlatVec::zeros(old_master.len());
                         for ws in &self.workers {
-                            let mut d = ws.x.clone();
+                            let mut d = ws.x.read(&cold).clone();
                             d.axpy(-1.0, &old_master)?;
                             sum_delta.add_assign(&d)?;
                         }
                         self.master.axpy(a, &sum_delta)?;
                         for i in 0..m {
-                            let xw = &mut self.workers[i].x;
+                            let WorkerState { x, core, at_barrier, .. } =
+                                &mut self.workers[i];
+                            let xw = x.make_hot(&cold, core.pool());
                             xw.scale(1.0 - a);
                             xw.axpy(a, &old_master)?;
-                            self.workers[i].at_barrier = false;
+                            *at_barrier = false;
                         }
                         self.report.messages += 2 * m as u64;
                         let b = 2 * m as u64 * wire_bytes_for(old_master.len(), false) as u64;
@@ -864,7 +1066,8 @@ impl DesEngine {
                     let m = self.workers.len();
                     if self.barrier_arrivals.len() == m {
                         // Everyone arrived: average, pay gather+broadcast.
-                        let refs: Vec<&FlatVec> = self.workers.iter().map(|s| &s.x).collect();
+                        let refs: Vec<&FlatVec> =
+                            self.workers.iter().map(|s| s.x.read(&cold)).collect();
                         let mean = FlatVec::mean_of(&refs)?;
                         let last = self
                             .barrier_arrivals
@@ -881,7 +1084,7 @@ impl DesEngine {
                         self.report.raw_bytes += b;
                         for (i, arrival) in self.barrier_arrivals.clone().iter().enumerate() {
                             self.report.blocked_secs += resume - arrival;
-                            self.workers[i].x = mean.clone();
+                            self.workers[i].x = CowModel::Hot(mean.clone());
                             self.workers[i].at_barrier = false;
                             let dt = self.draw_compute_for(i);
                             self.schedule_wake(resume + dt, i);
@@ -899,21 +1102,37 @@ impl DesEngine {
         Ok(())
     }
 
-    /// Mean worker model at the end of the run.
+    /// Mean worker model over the telemetry sample (every worker when the
+    /// stride is 1 — the default up to 4096 workers).  Cold workers
+    /// contribute the shared replica by reference: no per-worker clones.
     pub fn consensus_model(&self) -> Result<FlatVec> {
-        let refs: Vec<&FlatVec> = self.workers.iter().map(|s| &s.x).collect();
-        FlatVec::mean_of(&refs)
+        Ok(self.consensus_over_sample()?.0)
     }
 
-    /// Consensus error `Σ_m ‖x_m − x̄‖²` over the final worker models —
+    /// Consensus error `Σ_m ‖x_m − x̄‖²` over the sampled worker models —
     /// the accuracy side of the codec bandwidth/accuracy tradeoff.
     pub fn consensus_error(&self) -> Result<f64> {
-        let mean = self.consensus_model()?;
+        Ok(self.consensus_over_sample()?.1)
+    }
+
+    /// One pass over the telemetry sample: the sample-mean model and the
+    /// consensus error around it.  Strided sampling keeps this
+    /// O(sample · dim) instead of O(workers · dim) at megafleet scale; at
+    /// stride 1 it visits every worker in id order — the exact summation
+    /// order (and therefore the exact bits) of the unsampled computation.
+    pub fn consensus_over_sample(&self) -> Result<(FlatVec, f64)> {
+        let refs: Vec<&FlatVec> = self
+            .workers
+            .iter()
+            .step_by(self.trace_stride)
+            .map(|s| s.x.read(&self.cold))
+            .collect();
+        let mean = FlatVec::mean_of(&refs)?;
         let mut eps = 0.0;
-        for ws in &self.workers {
-            eps += ws.x.dist_sq(&mean)?;
+        for x in &refs {
+            eps += x.dist_sq(&mean)?;
         }
-        Ok(eps)
+        Ok((mean, eps))
     }
 
     /// Per-worker local step counts (scenario diagnostics).
@@ -939,15 +1158,57 @@ impl DesEngine {
                 totals[shard.index] += weight;
             }
         }
-        for ev in self.events.iter() {
-            if let EventKind::Deliver { weight, shard, .. } = &ev.kind {
+        self.events.for_each_kind(|kind| {
+            if let EventKind::Deliver { weight, shard, .. } = kind {
                 totals[shard.index] += weight;
             }
-        }
+        });
         if let Some(fab) = &self.fabric {
             fab.for_each_in_flight(|(shard, _, weight)| totals[shard.index] += weight);
         }
         totals
+    }
+
+    /// Workers still reading the shared cold replica (never stepped,
+    /// never absorbed): each costs O(bytes), not a model copy.
+    pub fn cold_workers(&self) -> usize {
+        self.workers.iter().filter(|ws| ws.x.is_cold()).count()
+    }
+
+    /// Estimated resident bytes of the engine's per-run state: worker
+    /// models (hot copies only — cold workers share one replica), core
+    /// state, mailboxes, event queue, churn/symmetric bookkeeping, and
+    /// the telemetry trace.  An estimate (capacities × element sizes),
+    /// not an allocator audit — `benches/des_scale.rs` asserts a
+    /// bytes-per-worker ceiling on top of it.
+    pub fn state_bytes(&self) -> usize {
+        let mut bytes = std::mem::size_of::<Self>();
+        bytes += self.workers.capacity() * std::mem::size_of::<WorkerState>();
+        for ws in &self.workers {
+            if let Some(x) = ws.x.hot() {
+                bytes += x.len() * 4;
+            }
+            bytes += ws.core.state_bytes();
+            bytes += ws.mailbox.capacity() * std::mem::size_of::<(Shard, EncodedPayload, f64)>();
+            for (_, payload, _) in &ws.mailbox {
+                bytes += payload.payload_wire_bytes();
+            }
+        }
+        bytes += (self.master.len() + self.grad_buf.len() + self.cold.len()) * 4;
+        bytes += self.barrier_arrivals.capacity() * 8;
+        if let Some(sym) = &self.sym {
+            bytes += (sym.busy_until.capacity() + sym.pending_delay.capacity()) * 8;
+        }
+        if let Some(churn) = &self.churn {
+            // BTree nodes: ~3 words of overhead per entry is a fair
+            // estimate for the audit's purposes.
+            let per_entry = 48;
+            bytes += (churn.down.len() + churn.epochs.len() + churn.down_since.len()) * per_entry;
+        }
+        bytes += self.report.trace.capacity() * 16;
+        bytes += self.events.approx_bytes();
+        bytes += self.mail_scratch.capacity() * std::mem::size_of::<(Shard, EncodedPayload, f64)>();
+        bytes
     }
 
     pub fn report(&self) -> &DesReport {
@@ -1216,20 +1477,11 @@ mod tests {
         assert!(rep.steps > 0);
         // Per-shard conservation including every in-flight location:
         // worker cores + mailboxes + undelivered Deliver events.
-        let mut totals = vec![0.0f64; shards];
+        let mut totals = eng.pending_shard_mass();
+        assert_eq!(totals.len(), shards);
         for ws in eng.worker_weights() {
             for (k, v) in ws.iter().enumerate() {
                 totals[k] += v;
-            }
-        }
-        for w in &eng.workers {
-            for (shard, _, weight) in &w.mailbox {
-                totals[shard.index] += weight;
-            }
-        }
-        for ev in eng.events.iter() {
-            if let EventKind::Deliver { weight, shard, .. } = &ev.kind {
-                totals[shard.index] += weight;
             }
         }
         for (k, total) in totals.iter().enumerate() {
@@ -1352,21 +1604,11 @@ mod tests {
     fn codec_runs_conserve_mass_per_shard_in_sim() {
         for codec in [CodecSpec::QuantizeU8, CodecSpec::TopK { k: 64 }] {
             let eng = run_codec(codec, 20.0, 63);
-            let shards = 4;
-            let mut totals = vec![0.0f64; shards];
+            let mut totals = eng.pending_shard_mass();
+            assert_eq!(totals.len(), 4);
             for ws in eng.worker_weights() {
                 for (k, v) in ws.iter().enumerate() {
                     totals[k] += v;
-                }
-            }
-            for w in &eng.workers {
-                for (shard, _, weight) in &w.mailbox {
-                    totals[shard.index] += weight;
-                }
-            }
-            for ev in eng.events.iter() {
-                if let EventKind::Deliver { weight, shard, .. } = &ev.kind {
-                    totals[shard.index] += weight;
                 }
             }
             for (k, total) in totals.iter().enumerate() {
@@ -1450,20 +1692,11 @@ mod tests {
         let rep = eng.report();
         assert!(rep.crashes > 0, "expected crashes over a 60 s horizon");
         assert!(rep.steps > 0);
-        let mut totals = vec![0.0f64; shards];
+        let mut totals = eng.pending_shard_mass();
+        assert_eq!(totals.len(), shards);
         for ws in eng.worker_weights() {
             for (k, v) in ws.iter().enumerate() {
                 totals[k] += v;
-            }
-        }
-        for w in &eng.workers {
-            for (shard, _, weight) in &w.mailbox {
-                totals[shard.index] += weight;
-            }
-        }
-        for ev in eng.events.iter() {
-            if let EventKind::Deliver { weight, shard, .. } = &ev.kind {
-                totals[shard.index] += weight;
             }
         }
         for (k, total) in totals.iter().enumerate() {
@@ -1671,5 +1904,96 @@ mod tests {
             eng.consensus_model().unwrap().as_slice(),
             whole.consensus_model().unwrap().as_slice()
         );
+    }
+
+    // ---- million-worker scaling machinery --------------------------------
+
+    #[test]
+    fn heap_scheduler_is_bit_identical_to_the_default_wheel() {
+        let dim = 48;
+        let mut results = Vec::new();
+        for kind in [SchedulerKind::Wheel, SchedulerKind::Heap] {
+            let mut grad = QuadraticSource::new(dim, 0.1, 113);
+            let init = FlatVec::zeros(dim);
+            let mut eng = DesEngine::new(
+                DesStrategy::ShardedGoSgd { p: 0.3, shards: 4 },
+                TimeModel::paper_like(),
+                8,
+                &init,
+                1.0,
+                0.0,
+                113 ^ 0xD5,
+            )
+            .unwrap()
+            .with_scheduler(kind)
+            .with_scenario(ScenarioModel {
+                compute_scale: Vec::new(),
+                crash_mtbf: 8.0,
+                rejoin_mttr: 2.0,
+            });
+            eng.run(&mut grad, 40.0).unwrap();
+            results.push((eng.report().trace_hash(), eng.consensus_model().unwrap()));
+        }
+        assert_eq!(results[0].0, results[1].0, "trace hash must not depend on the scheduler");
+        assert_eq!(results[0].1.as_slice(), results[1].1.as_slice());
+    }
+
+    #[test]
+    fn workers_stay_cold_until_their_first_wake() {
+        let dim = 32;
+        let init = FlatVec::zeros(dim);
+        let mut grad = QuadraticSource::new(dim, 0.1, 117);
+        let mut eng = DesEngine::new(
+            DesStrategy::GoSgd { p: 0.1 },
+            TimeModel::paper_like(),
+            8,
+            &init,
+            1.0,
+            0.0,
+            117,
+        )
+        .unwrap();
+        // start() only lays down wakes strictly after t = 0: running to a
+        // zero horizon starts the engine without materializing anyone.
+        eng.run(&mut grad, 0.0).unwrap();
+        assert_eq!(eng.cold_workers(), 8, "no worker may materialize before its first wake");
+        // After a real horizon every worker has stepped, so all are hot —
+        // and the consensus path reads hot and cold workers uniformly.
+        eng.run(&mut grad, 5.0).unwrap();
+        assert_eq!(eng.cold_workers(), 0);
+        assert!(eng.state_bytes() > 0);
+    }
+
+    #[test]
+    fn telemetry_sampling_thins_the_trace_but_not_the_steps() {
+        let dim = 32;
+        let init = FlatVec::zeros(dim);
+        let run_sampled = |samples: Option<usize>| {
+            let mut grad = QuadraticSource::new(dim, 0.1, 119);
+            let mut eng = DesEngine::new(
+                DesStrategy::GoSgd { p: 0.1 },
+                TimeModel::paper_like(),
+                8,
+                &init,
+                1.0,
+                0.0,
+                119,
+            )
+            .unwrap();
+            if let Some(s) = samples {
+                eng = eng.with_telemetry_sample(s);
+            }
+            eng.run(&mut grad, 20.0).unwrap();
+            (eng.report().steps, eng.report().trace.len())
+        };
+        let (full_steps, full_trace) = run_sampled(None);
+        let (sampled_steps, sampled_trace) = run_sampled(Some(2));
+        // Same simulation — sampling only filters which wakes get traced.
+        assert_eq!(full_steps, sampled_steps);
+        assert!(
+            sampled_trace * 3 < full_trace,
+            "stride 4 must thin the trace: {sampled_trace} vs {full_trace}"
+        );
+        assert!(sampled_trace > 0);
     }
 }

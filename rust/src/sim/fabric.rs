@@ -49,7 +49,8 @@
 //! [`PeerSelector::parse`](crate::gossip::PeerSelector::parse) does.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BTreeSet, BinaryHeap, VecDeque};
+use std::ops::Bound;
 
 use crate::error::{Error, Result};
 use crate::util::rng::Rng;
@@ -375,6 +376,11 @@ pub struct Fabric<T> {
     rx_free: Vec<f64>,
     /// Per-source FIFO queues contending for the switch uplink.
     flows: Vec<VecDeque<Msg<T>>>,
+    /// Ids of the non-empty flows, ordered — the arbiter's index.  At
+    /// megafleet scale almost every flow is idle; the round-robin pick
+    /// must not scan them (`try_serve` is O(log n) against the old O(n)
+    /// cyclic walk, selecting the identical flow).
+    ready: BTreeSet<usize>,
     switch_busy: bool,
     /// Round-robin arbiter position: the flow served last.
     rr_cursor: usize,
@@ -395,6 +401,7 @@ impl<T> Fabric<T> {
             down_inorder: vec![0.0; workers],
             rx_free: vec![0.0; workers],
             flows: (0..workers).map(|_| VecDeque::new()).collect(),
+            ready: BTreeSet::new(),
             switch_busy: false,
             rr_cursor: 0,
             heap: BinaryHeap::new(),
@@ -457,7 +464,9 @@ impl<T> Fabric<T> {
     }
 
     /// Earliest pending internal transition, if any in-flight message
-    /// still needs the fabric to act.
+    /// still needs the fabric to act.  O(1): a heap peek — the engine
+    /// re-arms its `FabricTick` after every inject and fire, so this
+    /// sits on the hot path at fleet scale.
     pub fn next_transition(&self) -> Option<f64> {
         self.heap.peek().map(|e| e.time)
     }
@@ -500,24 +509,35 @@ impl<T> Fabric<T> {
 
     /// If the switch is idle and any flow has a waiting message, serve
     /// the next flow in round-robin order (starting after the flow served
-    /// last).
+    /// last).  The `ready` index makes the pick O(log n) in the fleet
+    /// size: the first ready flow above the cursor, or — wrapping — the
+    /// smallest ready flow.  That is exactly the flow the cyclic scan
+    /// `(rr_cursor + step) % n, step = 1..=n` reaches first, including
+    /// the full-wrap case where the cursor's own flow is served again,
+    /// so arbitration order (and every figure) is unchanged.
     fn try_serve(&mut self, now: f64) {
         if self.switch_busy {
             return;
         }
-        let n = self.flows.len();
-        for step in 1..=n {
-            let flow = (self.rr_cursor + step) % n;
-            if let Some(msg) = self.flows[flow].pop_front() {
-                self.rr_cursor = flow;
-                self.switch_busy = true;
-                self.stats.switch_queue_secs += now - msg.switch_arrive;
-                let service = msg.bytes / self.capacity;
-                self.stats.switch_busy_secs += service;
-                self.push(now + service, Hop::SwitchDone(msg));
-                return;
-            }
+        let next = self
+            .ready
+            .range((Bound::Excluded(self.rr_cursor), Bound::Unbounded))
+            .next()
+            .or_else(|| self.ready.iter().next())
+            .copied();
+        let Some(flow) = next else {
+            return;
+        };
+        let msg = self.flows[flow].pop_front().expect("ready flows are non-empty");
+        if self.flows[flow].is_empty() {
+            self.ready.remove(&flow);
         }
+        self.rr_cursor = flow;
+        self.switch_busy = true;
+        self.stats.switch_queue_secs += now - msg.switch_arrive;
+        let service = msg.bytes / self.capacity;
+        self.stats.switch_busy_secs += service;
+        self.push(now + service, Hop::SwitchDone(msg));
     }
 
     /// Process every internal transition due by `now`, appending
@@ -532,6 +552,7 @@ impl<T> Fabric<T> {
             match ev.hop {
                 Hop::ArriveSwitch(mut msg) => {
                     msg.switch_arrive = t;
+                    self.ready.insert(msg.src);
                     self.flows[msg.src].push_back(msg);
                     self.try_serve(t);
                 }
@@ -691,6 +712,34 @@ mod tests {
         // And within each flow, FIFO.
         let flow0: Vec<u64> = got.iter().filter(|d| d.src == 0).map(|d| d.item).collect();
         assert_eq!(flow0, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn arbiter_wraps_below_the_cursor_with_exact_times() {
+        // Two flows on both sides of the round-robin cursor: worker 2's
+        // message is served first (first ready flow above cursor 0), and
+        // the arbiter must then wrap *below* its new cursor to flow 0 —
+        // the indexed pick reproducing the cyclic scan's wrap exactly.
+        // All quantities are exact in binary (1 s tx, 0.5 s service), so
+        // every assertion is `==`, not a tolerance.
+        let mut rng = Rng::new(10);
+        let mut fab: Fabric<u64> = Fabric::new(4, flat(2.0)); // capacity 2000 B/s
+        fab.inject(2, 1, 1000, 0.0, &mut rng, 22);
+        fab.inject(0, 1, 1000, 0.0, &mut rng, 20);
+        let got = drain(&mut fab, &mut rng);
+        let order: Vec<(usize, u64)> = got.iter().map(|d| (d.src, d.item)).collect();
+        assert_eq!(order, vec![(2, 22), (0, 20)], "above the cursor first, then wrap");
+        // Both reach the switch at t = 1 (1 s NIC tx, zero-delay links);
+        // flow 2 is served 1.0..1.5, flow 0 is served 1.5..2.0, and the
+        // shared receiver NIC deserializes them back to back.
+        assert_eq!(got[0].at, 2.5);
+        assert_eq!(got[1].at, 3.5);
+        // Flow 0 waited exactly one service slot at the switch; flow 2
+        // never queued.  The second delivery also queued half a second
+        // behind the first at worker 1's receive NIC.
+        assert_eq!(fab.stats().switch_queue_secs, 0.5);
+        assert_eq!(fab.stats().switch_busy_secs, 1.0);
+        assert_eq!(fab.stats().rx_queue_secs[1], 0.5);
     }
 
     // ---- links ---------------------------------------------------------

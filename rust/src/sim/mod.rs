@@ -35,8 +35,19 @@
 //! (`--fabric ideal|rack|wan|edge|custom:…`).  The `Ideal` spec keeps the
 //! scalar model bit-identical, so prior figures stay reproducible.
 
+//! Scale: the engine schedules through a hierarchical timing wheel
+//! ([`wheel::TimingWheel`]) instead of a global binary heap — amortized
+//! O(1) per event with the heap's exact pop order, so trace hashes are
+//! bit-identical under either scheduler ([`des::SchedulerKind`] selects;
+//! `runtime_equivalence.rs` pins the equivalence).  Combined with
+//! copy-on-write worker models and sparse churn state, a million-worker
+//! fleet fits laptop memory — `benches/des_scale.rs` asserts the
+//! bytes-per-worker ceiling.
+
 pub mod des;
 pub mod fabric;
+pub mod wheel;
 
-pub use des::{DesEngine, DesReport, DesStrategy, ScenarioModel, TimeModel};
+pub use des::{DesEngine, DesReport, DesStrategy, ScenarioModel, SchedulerKind, TimeModel};
 pub use fabric::{Delivery, Fabric, FabricParams, FabricSpec, FabricStats, Jitter};
+pub use wheel::TimingWheel;

@@ -1,0 +1,474 @@
+//! Hierarchical timing wheel for the discrete-event simulator.
+//!
+//! The DES originally kept every pending event in one global
+//! `BinaryHeap`, paying O(log n) per push/pop with n = fleet size (a
+//! million-worker run keeps ~1M wakes pending at all times).  A calendar
+//! queue exploits what a heap cannot: simulated time only moves forward,
+//! and almost every event lands within a short horizon of "now".  This
+//! module buckets events by time into fixed-width ticks:
+//!
+//! ```text
+//!   level 0:  W slots, one tick each        — the current window
+//!   level 1:  W slots, one W-tick chunk each — the current span
+//!   overflow: unbucketed far-future events   — rare (e.g. rejoin times)
+//! ```
+//!
+//! Push routes an event by `tick = floor(time / tick_width)` into level 0
+//! (current window), level 1 (current span), or the overflow list — O(1).
+//! Pop drains the slot under the cursor; when it empties the cursor scans
+//! forward, pouring the next level-1 chunk into level 0 on window
+//! crossings and re-routing the overflow only when both levels are dry —
+//! amortized O(1) per event.
+//!
+//! # Determinism contract
+//!
+//! Pop order is **exactly** the heap's: ascending `(time, seq)`, with
+//! NaN-free times compared by `partial_cmp` and ties broken by the
+//! monotone sequence number.  Two facts make this exact rather than
+//! approximate: equal times always map to the same slot (the tick is a
+//! pure function of the time), and the slot under the cursor is kept
+//! sorted — lazily on first pop, then maintained by binary insertion for
+//! events pushed into it mid-drain.  `TimingWheel` draws no randomness,
+//! so a DES run pops the identical event sequence (and therefore produces
+//! the identical trace hash) whichever scheduler backs it.
+
+use std::cmp::Ordering;
+
+/// Slots per level.  Two levels of 256 cover `256 * 256 = 65,536` ticks
+/// (~2.3 simulated hours at the DES default tick of 1/8 the mean compute
+/// time) before anything touches the overflow list.
+const W: u64 = 256;
+
+/// A scheduled event: the caller's `(time, seq)` key plus its payload.
+#[derive(Debug)]
+pub struct Entry<T> {
+    pub time: f64,
+    pub seq: u64,
+    pub item: T,
+}
+
+/// Ascending `(time, seq)` — the heap's pop order.
+fn key_cmp<T>(a: &Entry<T>, b: &Entry<T>) -> Ordering {
+    a.time
+        .partial_cmp(&b.time)
+        .unwrap_or(Ordering::Equal)
+        .then(a.seq.cmp(&b.seq))
+}
+
+/// Two-level calendar queue with an overflow list.  Generic over the
+/// event payload so the unit tests can exercise it with plain integers.
+#[derive(Debug)]
+pub struct TimingWheel<T> {
+    /// Seconds per tick (bucket width).
+    tick: f64,
+    /// Absolute tick currently being drained.  Never decreases.
+    cursor: u64,
+    /// Slot `s` holds exactly tick `win_base() + s` of the current window.
+    lvl0: Vec<Vec<Entry<T>>>,
+    /// Slot `c % W` holds chunk `c` (a run of W ticks) of the current span.
+    lvl1: Vec<Vec<Entry<T>>>,
+    /// Events beyond the current span, unbucketed.
+    overflow: Vec<Entry<T>>,
+    /// Reusable buffer for pouring a level-1 chunk into level 0.
+    scratch: Vec<Entry<T>>,
+    /// Whether the slot under the cursor is sorted (descending, so the
+    /// minimum pops from the back in O(1)).
+    cur_sorted: bool,
+    lvl0_len: usize,
+    lvl1_len: usize,
+    len: usize,
+}
+
+impl<T> TimingWheel<T> {
+    /// A wheel with the given bucket width in seconds.  Non-finite or
+    /// non-positive widths fall back to 1 ms; the width only affects
+    /// performance, never ordering.
+    pub fn new(tick: f64) -> Self {
+        let tick = if tick.is_finite() && tick > 0.0 { tick } else { 1e-3 };
+        TimingWheel {
+            tick,
+            cursor: 0,
+            lvl0: (0..W).map(|_| Vec::new()).collect(),
+            lvl1: (0..W).map(|_| Vec::new()).collect(),
+            overflow: Vec::new(),
+            scratch: Vec::new(),
+            cur_sorted: false,
+            lvl0_len: 0,
+            lvl1_len: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Absolute tick for a timestamp.  The `as` cast saturates, so huge
+    /// times land in the last representable tick (still ordered correctly
+    /// within their slot by the full f64 time).
+    fn tick_of(&self, time: f64) -> u64 {
+        (time / self.tick) as u64
+    }
+
+    /// First tick of the window currently mapped into level 0.
+    fn win_base(&self) -> u64 {
+        (self.cursor / W) * W
+    }
+
+    /// One-past-the-last chunk of the span currently mapped into level 1.
+    fn span_end_chunk(&self) -> u64 {
+        (self.cursor / W / W + 1) * W
+    }
+
+    pub fn push(&mut self, time: f64, seq: u64, item: T) {
+        // Events in the past cannot exist mid-run (the DES never schedules
+        // before "now"); clamping is a safety net that keeps such an event
+        // poppable instead of stranding it behind the cursor.
+        let t = self.tick_of(time).max(self.cursor);
+        self.route(t, Entry { time, seq, item });
+        self.len += 1;
+    }
+
+    /// Place an entry whose clamped tick is `t` into the right structure.
+    fn route(&mut self, t: u64, e: Entry<T>) {
+        let c = t / W;
+        if c == self.cursor / W {
+            let slot = (t % W) as usize;
+            if t == self.cursor && self.cur_sorted {
+                // Mid-drain push into the slot being popped: binary-insert
+                // into the descending order so the next pop still returns
+                // the global minimum.
+                let pos = self.lvl0[slot].partition_point(|x| key_cmp(x, &e) == Ordering::Greater);
+                self.lvl0[slot].insert(pos, e);
+            } else {
+                self.lvl0[slot].push(e);
+            }
+            self.lvl0_len += 1;
+        } else if c < self.span_end_chunk() {
+            self.lvl1[(c % W) as usize].push(e);
+            self.lvl1_len += 1;
+        } else {
+            self.overflow.push(e);
+        }
+    }
+
+    /// Remove and return the minimum-`(time, seq)` entry.
+    pub fn pop(&mut self) -> Option<Entry<T>> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let slot = (self.cursor % W) as usize;
+            if !self.lvl0[slot].is_empty() {
+                if !self.cur_sorted {
+                    self.lvl0[slot].sort_unstable_by(|a, b| key_cmp(b, a));
+                    self.cur_sorted = true;
+                }
+                let e = self.lvl0[slot].pop().expect("slot checked non-empty");
+                self.lvl0_len -= 1;
+                self.len -= 1;
+                return Some(e);
+            }
+            self.advance();
+        }
+    }
+
+    /// Move the cursor to the next non-empty tick.  Only called with the
+    /// current slot empty and at least one entry somewhere in the wheel.
+    fn advance(&mut self) {
+        self.cur_sorted = false;
+        if self.lvl0_len > 0 {
+            // Entries never land below the cursor, so the next tick is
+            // strictly ahead within the current window.
+            let base = self.win_base();
+            for s in (self.cursor - base + 1)..W {
+                if !self.lvl0[s as usize].is_empty() {
+                    self.cursor = base + s;
+                    return;
+                }
+            }
+            unreachable!("lvl0_len > 0 but no slot at or after the cursor");
+        }
+        if self.lvl1_len > 0 {
+            // Enter the next non-empty chunk of the span: pour it into
+            // level 0 and park the cursor on its first non-empty tick.
+            let c0 = self.cursor / W;
+            for c in (c0 + 1)..self.span_end_chunk() {
+                if self.lvl1[(c % W) as usize].is_empty() {
+                    continue;
+                }
+                self.cursor = c * W;
+                self.pour_chunk(c);
+                for s in 0..W {
+                    if !self.lvl0[s as usize].is_empty() {
+                        self.cursor = c * W + s;
+                        return;
+                    }
+                }
+                unreachable!("poured chunk was non-empty");
+            }
+            unreachable!("lvl1_len > 0 but no chunk inside the span");
+        }
+        // Both levels dry: jump the cursor to the overflow's earliest tick
+        // and re-route everything relative to the new window/span.
+        debug_assert!(!self.overflow.is_empty(), "advance called on an empty wheel");
+        let min_tick = self
+            .overflow
+            .iter()
+            .map(|e| self.tick_of(e.time))
+            .min()
+            .expect("overflow checked non-empty");
+        self.cursor = min_tick.max(self.cursor);
+        let pending = std::mem::take(&mut self.overflow);
+        for e in pending {
+            let t = self.tick_of(e.time).max(self.cursor);
+            self.route(t, e);
+        }
+        // The minimum entry now sits in level 0 under the cursor; the pop
+        // loop will find it on the next pass.
+    }
+
+    /// Move every entry of level-1 chunk `c` into level 0.  Valid only
+    /// when the cursor's window is exactly chunk `c`.
+    fn pour_chunk(&mut self, c: u64) {
+        debug_assert_eq!(self.cursor / W, c, "pour target must be the cursor's window");
+        let slot = (c % W) as usize;
+        let mut scratch = std::mem::take(&mut self.scratch);
+        std::mem::swap(&mut scratch, &mut self.lvl1[slot]);
+        self.lvl1_len -= scratch.len();
+        for e in scratch.drain(..) {
+            let t = self.tick_of(e.time);
+            debug_assert_eq!(t / W, c, "chunk entry outside its chunk");
+            self.lvl0[(t % W) as usize].push(e);
+            self.lvl0_len += 1;
+        }
+        self.scratch = scratch;
+    }
+
+    /// Visit every pending entry in unspecified order (used for the DES
+    /// conservation audit over undelivered messages).
+    pub fn for_each<F: FnMut(&Entry<T>)>(&self, mut f: F) {
+        for slot in self.lvl0.iter().chain(self.lvl1.iter()) {
+            for e in slot {
+                f(e);
+            }
+        }
+        for e in &self.overflow {
+            f(e);
+        }
+    }
+
+    /// Rough resident size of the wheel itself (slot headers + entry
+    /// capacity), excluding payload heap allocations.
+    pub fn approx_bytes(&self) -> usize {
+        let entry = std::mem::size_of::<Entry<T>>();
+        let hdr = std::mem::size_of::<Vec<Entry<T>>>();
+        let mut cap = self.overflow.capacity() + self.scratch.capacity();
+        for slot in self.lvl0.iter().chain(self.lvl1.iter()) {
+            cap += slot.capacity();
+        }
+        2 * W as usize * hdr + cap * entry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference scheduler: linear scan for the minimum `(time, seq)`.
+    struct NaiveQueue {
+        items: Vec<Entry<u64>>,
+    }
+
+    impl NaiveQueue {
+        fn new() -> Self {
+            NaiveQueue { items: Vec::new() }
+        }
+        fn push(&mut self, time: f64, seq: u64) {
+            self.items.push(Entry { time, seq, item: seq });
+        }
+        fn pop(&mut self) -> Option<(f64, u64)> {
+            if self.items.is_empty() {
+                return None;
+            }
+            let mut best = 0;
+            for i in 1..self.items.len() {
+                if key_cmp(&self.items[i], &self.items[best]) == Ordering::Less {
+                    best = i;
+                }
+            }
+            let e = self.items.swap_remove(best);
+            Some((e.time, e.seq))
+        }
+    }
+
+    #[test]
+    fn empty_wheel_pops_none() {
+        let mut w: TimingWheel<u64> = TimingWheel::new(0.1);
+        assert!(w.is_empty());
+        assert!(w.pop().is_none());
+        assert_eq!(w.len(), 0);
+    }
+
+    #[test]
+    fn degenerate_tick_width_falls_back() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let mut w: TimingWheel<u64> = TimingWheel::new(bad);
+            w.push(5.0, 1, 1);
+            w.push(2.0, 2, 2);
+            assert_eq!(w.pop().unwrap().item, 2);
+            assert_eq!(w.pop().unwrap().item, 1);
+        }
+    }
+
+    #[test]
+    fn randomized_pop_order_matches_reference_with_interleaved_pushes() {
+        let mut rng = Rng::new(0x77EE1);
+        for trial in 0..20 {
+            let tick = [1e-3, 0.0125, 0.3, 10.0][trial % 4];
+            let mut wheel: TimingWheel<u64> = TimingWheel::new(tick);
+            let mut naive = NaiveQueue::new();
+            let mut seq = 0u64;
+            let mut now = 0.0f64;
+            for _ in 0..600 {
+                if rng.f64() < 0.6 || wheel.is_empty() {
+                    // Pushes land at or after "now", as in the DES.
+                    let dt = rng.f64() * rng.f64() * 40.0;
+                    seq += 1;
+                    wheel.push(now + dt, seq, seq);
+                    naive.push(now + dt, seq);
+                } else {
+                    let got = wheel.pop().map(|e| (e.time, e.seq));
+                    let want = naive.pop();
+                    assert_eq!(got, want, "trial {trial} diverged at seq {seq}");
+                    now = got.unwrap().0.max(now);
+                }
+            }
+            loop {
+                let got = wheel.pop().map(|e| (e.time, e.seq));
+                let want = naive.pop();
+                assert_eq!(got, want, "trial {trial} drain diverged");
+                if got.is_none() {
+                    break;
+                }
+            }
+            assert_eq!(wheel.len(), 0);
+        }
+    }
+
+    #[test]
+    fn window_rollover_keeps_ascending_order() {
+        // Times spanning many level-0 windows (tick 0.1 => window 25.6 s).
+        let mut w: TimingWheel<u64> = TimingWheel::new(0.1);
+        let n = 4000u64;
+        for seq in 0..n {
+            // Deterministic scatter over [0, 400): crosses ~15 windows.
+            let time = ((seq * 2654435761) % 4_000_000) as f64 * 1e-4;
+            w.push(time, seq, seq);
+        }
+        let mut prev: Option<(f64, u64)> = None;
+        for _ in 0..n {
+            let e = w.pop().expect("all pushed events must pop");
+            if let Some((pt, ps)) = prev {
+                assert!(
+                    pt < e.time || (pt == e.time && ps < e.seq),
+                    "pop order regressed: ({pt}, {ps}) before ({}, {})",
+                    e.time,
+                    e.seq
+                );
+            }
+            prev = Some((e.time, e.seq));
+        }
+        assert!(w.pop().is_none());
+    }
+
+    #[test]
+    fn far_future_events_overflow_and_pop_in_order() {
+        let mut w: TimingWheel<u64> = TimingWheel::new(0.01);
+        // Span covers 256 * 256 * 0.01 = 655 s; these must overflow.
+        w.push(1.0e6, 1, 1);
+        w.push(5.0e5, 2, 2);
+        w.push(0.5, 3, 3);
+        w.push(2.0e6, 4, 4);
+        let order: Vec<u64> = std::iter::from_fn(|| w.pop().map(|e| e.item)).collect();
+        assert_eq!(order, vec![3, 2, 1, 4]);
+    }
+
+    #[test]
+    fn overflow_jump_then_new_near_events_stay_ordered() {
+        let mut w: TimingWheel<u64> = TimingWheel::new(0.01);
+        w.push(1.0e5, 1, 1);
+        // Drain to the far-future event: cursor jumps to its tick.
+        let e = w.pop().unwrap();
+        assert_eq!(e.item, 1);
+        // New events relative to the new "now" route into the new window.
+        w.push(1.0e5 + 0.005, 2, 2);
+        w.push(1.0e5 + 3.0, 3, 3);
+        w.push(2.0e5, 4, 4);
+        let order: Vec<u64> = std::iter::from_fn(|| w.pop().map(|e| e.item)).collect();
+        assert_eq!(order, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn equal_times_pop_in_seq_order_regardless_of_push_order() {
+        let mut w: TimingWheel<u64> = TimingWheel::new(0.25);
+        for &seq in &[7u64, 3, 9, 1, 8, 2] {
+            w.push(4.2, seq, seq);
+        }
+        // An equal-time event pushed mid-drain still slots by seq.
+        assert_eq!(w.pop().unwrap().seq, 1);
+        w.push(4.2, 5, 5);
+        let order: Vec<u64> = std::iter::from_fn(|| w.pop().map(|e| e.seq)).collect();
+        assert_eq!(order, vec![2, 3, 5, 7, 8, 9]);
+    }
+
+    #[test]
+    fn push_back_after_pop_returns_the_same_entry() {
+        // The DES horizon loop pops an event past the deadline and pushes
+        // it back verbatim; the wheel must return it first on resume.
+        let mut w: TimingWheel<u64> = TimingWheel::new(0.5);
+        w.push(3.0, 1, 10);
+        w.push(9.0, 2, 20);
+        let e = w.pop().unwrap();
+        assert_eq!(e.item, 10);
+        w.push(e.time, e.seq, e.item);
+        let again = w.pop().unwrap();
+        assert_eq!((again.time, again.seq, again.item), (3.0, 1, 10));
+        assert_eq!(w.pop().unwrap().item, 20);
+    }
+
+    #[test]
+    fn push_during_drain_lands_in_sorted_position() {
+        let mut w: TimingWheel<u64> = TimingWheel::new(1.0);
+        // All in one slot (tick 1.0, times in [2, 3)).
+        w.push(2.1, 1, 1);
+        w.push(2.9, 2, 2);
+        w.push(2.5, 3, 3);
+        assert_eq!(w.pop().unwrap().item, 1); // slot now sorted, partially drained
+        w.push(2.3, 4, 4); // binary insert mid-drain
+        w.push(2.7, 5, 5);
+        let order: Vec<u64> = std::iter::from_fn(|| w.pop().map(|e| e.item)).collect();
+        assert_eq!(order, vec![4, 3, 5, 2]);
+    }
+
+    #[test]
+    fn for_each_visits_every_pending_entry_once() {
+        let mut w: TimingWheel<u64> = TimingWheel::new(0.01);
+        let times = [0.001, 0.5, 3.0, 700.0, 1.0e6];
+        for (i, &t) in times.iter().enumerate() {
+            w.push(t, i as u64, i as u64);
+        }
+        let mut seen = vec![false; times.len()];
+        w.for_each(|e| {
+            assert!(!seen[e.item as usize], "entry visited twice");
+            seen[e.item as usize] = true;
+        });
+        assert!(seen.iter().all(|&s| s), "entry missed: {seen:?}");
+        assert!(w.approx_bytes() > 0);
+    }
+}

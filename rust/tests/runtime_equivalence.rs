@@ -410,6 +410,152 @@ fn finite_fabric_des_actually_diverges_from_ideal() {
 }
 
 #[test]
+fn wheel_scheduler_des_is_bit_identical_to_the_heap_scheduler_des() {
+    // The timing-wheel refactor's contract, stated the same way as the
+    // fabric's: the wheel is not "approximately the heap" — it pops the
+    // exact (time, seq) order the heap pops and consumes no randomness,
+    // so the full report hash and every parameter bit must match across
+    // schedulers, over the whole scenario grid (codecs, structured
+    // topologies, churn, finite fabrics).
+    use gosgd::sim::{
+        DesEngine, DesStrategy, FabricSpec, ScenarioModel, SchedulerKind, TimeModel,
+    };
+    use gosgd::strategies::grad::QuadraticSource;
+
+    struct Case {
+        name: &'static str,
+        strategy: DesStrategy,
+        codec: CodecSpec,
+        topo: TopologySpec,
+        fabric: FabricSpec,
+        churn: bool,
+        seed: u64,
+    }
+    let cases = [
+        Case {
+            name: "plain gossip",
+            strategy: DesStrategy::GoSgd { p: 0.3 },
+            codec: CodecSpec::Dense,
+            topo: TopologySpec::UniformRandom,
+            fabric: FabricSpec::Ideal,
+            churn: false,
+            seed: 201,
+        },
+        Case {
+            name: "sharded q8 ring",
+            strategy: DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            codec: CodecSpec::QuantizeU8,
+            topo: TopologySpec::Ring,
+            fabric: FabricSpec::Ideal,
+            churn: false,
+            seed: 203,
+        },
+        Case {
+            name: "churned rotation",
+            strategy: DesStrategy::ShardedGoSgd { p: 0.3, shards: 4 },
+            codec: CodecSpec::Dense,
+            topo: TopologySpec::PartnerRotation,
+            fabric: FabricSpec::Ideal,
+            churn: true,
+            seed: 205,
+        },
+        Case {
+            name: "rack fabric hypercube",
+            strategy: DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            codec: CodecSpec::TopK { k: 8 },
+            topo: TopologySpec::Hypercube,
+            fabric: FabricSpec::Rack,
+            churn: false,
+            seed: 207,
+        },
+        Case {
+            name: "symmetric rendezvous",
+            strategy: DesStrategy::SymmetricGossip { p: 0.2 },
+            codec: CodecSpec::Dense,
+            topo: TopologySpec::UniformRandom,
+            fabric: FabricSpec::Ideal,
+            churn: false,
+            seed: 209,
+        },
+    ];
+    for case in &cases {
+        let mut runs = Vec::new();
+        for kind in [SchedulerKind::Heap, SchedulerKind::Wheel] {
+            let dim = 48;
+            let mut grad = QuadraticSource::new(dim, 0.1, case.seed);
+            let mut eng = DesEngine::new(
+                case.strategy.clone(),
+                TimeModel::paper_like(),
+                4,
+                &FlatVec::zeros(dim),
+                1.0,
+                0.0,
+                case.seed ^ 0xD5,
+            )
+            .unwrap()
+            .with_scheduler(kind)
+            .with_codec(case.codec)
+            .with_topology(case.topo)
+            .with_fabric(case.fabric);
+            if case.churn {
+                eng = eng.with_scenario(ScenarioModel {
+                    compute_scale: Vec::new(),
+                    crash_mtbf: 8.0,
+                    rejoin_mttr: 2.0,
+                });
+            }
+            eng.run(&mut grad, 30.0).unwrap();
+            runs.push((
+                eng.report().trace_hash(),
+                eng.consensus_model().unwrap().as_slice().to_vec(),
+            ));
+        }
+        assert_eq!(runs[0].0, runs[1].0, "{}: report diverged", case.name);
+        assert_eq!(runs[0].1, runs[1].1, "{}: parameters diverged", case.name);
+    }
+}
+
+#[test]
+fn wheel_scheduler_survives_horizon_resume_like_the_heap() {
+    // A paused run parks the horizon-crossing event back in the queue;
+    // resuming must continue from the identical state under either
+    // scheduler, and both must equal one uninterrupted run.
+    use gosgd::sim::{DesEngine, DesStrategy, SchedulerKind, TimeModel};
+    use gosgd::strategies::grad::QuadraticSource;
+    let run = |kind: SchedulerKind, split: bool| {
+        let dim = 48;
+        let mut grad = QuadraticSource::new(dim, 0.1, 211);
+        let mut eng = DesEngine::new(
+            DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            TimeModel::paper_like(),
+            4,
+            &FlatVec::zeros(dim),
+            1.0,
+            0.0,
+            211 ^ 0xD5,
+        )
+        .unwrap()
+        .with_scheduler(kind);
+        if split {
+            eng.run(&mut grad, 10.0).unwrap();
+        }
+        eng.run(&mut grad, 30.0).unwrap();
+        (
+            eng.report().trace_hash(),
+            eng.consensus_model().unwrap().as_slice().to_vec(),
+        )
+    };
+    let reference = run(SchedulerKind::Heap, false);
+    for kind in [SchedulerKind::Heap, SchedulerKind::Wheel] {
+        for split in [false, true] {
+            let got = run(kind, split);
+            assert_eq!(got.0, reference.0, "{kind:?} split={split}: report diverged");
+            assert_eq!(got.1, reference.1, "{kind:?} split={split}: parameters diverged");
+        }
+    }
+}
+
+#[test]
 fn engine_equals_hand_driven_core_bit_for_bit_with_topologies() {
     // The topology schedule lives inside the core (cursor and all), so a
     // structured schedule must be exactly as bit-reproducible across
