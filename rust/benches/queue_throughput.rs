@@ -10,8 +10,9 @@
 
 use gosgd::bench::Bencher;
 use gosgd::gossip::{EncodedPayload, Message, MessageQueue, SumWeight};
+use gosgd::sync::atomic::{AtomicBool, Ordering};
+use gosgd::sync::{thread, Arc};
 use gosgd::tensor::{BufferPool, FlatVec};
-use std::sync::Arc;
 
 /// A pooled paper-scale dense message: the body's storage is recycled
 /// when the drained message drops, so repeated calls recycle one buffer.
@@ -72,23 +73,23 @@ fn main() {
     // recycling through the same pool (the threaded runtime's shape).
     {
         let q = Arc::new(MessageQueue::unbounded());
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
         let mut handles = Vec::new();
         for _ in 0..4 {
             let q = q.clone();
             let stop = stop.clone();
             let pool = pool.clone();
-            handles.push(std::thread::spawn(move || {
-                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+            handles.push(thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
                     q.push(msg(&pool, 10_000));
-                    std::thread::yield_now();
+                    thread::yield_now();
                 }
             }));
         }
         b.bench_elems("drain_under_contention", 1, || {
             std::hint::black_box(q.drain());
         });
-        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        stop.store(true, Ordering::Relaxed);
         for h in handles {
             h.join().unwrap();
         }

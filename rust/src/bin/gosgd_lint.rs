@@ -1,0 +1,36 @@
+//! Repo-invariant lint driver: `cargo run --bin gosgd-lint [ROOT]`.
+//!
+//! Scans `rust/{src,tests,benches}` under ROOT (default: the current
+//! directory) against the domain rules in [`gosgd::lint`] and exits
+//! non-zero on any finding — the CI `gosgd-lint` job is exactly this
+//! command.  See the module docs for the rules and the per-line
+//! `// lint:allow(<rule>)` escape hatch.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    match gosgd::lint::lint_tree(Path::new(&root)) {
+        Err(e) => {
+            eprintln!("gosgd-lint: cannot scan {root}: {e}");
+            ExitCode::from(2)
+        }
+        Ok(report) => {
+            for f in &report.findings {
+                eprintln!("{f}");
+            }
+            if report.findings.is_empty() {
+                println!("gosgd-lint: clean ({} files)", report.files);
+                ExitCode::SUCCESS
+            } else {
+                eprintln!(
+                    "gosgd-lint: {} finding(s) across {} files",
+                    report.findings.len(),
+                    report.files
+                );
+                ExitCode::FAILURE
+            }
+        }
+    }
+}

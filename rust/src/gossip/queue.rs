@@ -37,8 +37,8 @@
 //! are compatible the queue is allowed to exceed its bound (tracked in the
 //! `over_capacity` stat) rather than lose mass.
 
+use crate::sync::{Arc, Mutex};
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
 
 use crate::gossip::codec::EncodedPayload;
 use crate::gossip::message::Message;
@@ -227,7 +227,6 @@ mod tests {
     use super::*;
     use crate::gossip::codec::{Codec, QuantizeU8, TopK};
     use crate::util::proptest::check;
-    use std::sync::Arc;
 
     fn msg(val: f32, w: f64, sender: usize) -> Message {
         Message::dense(
@@ -400,7 +399,11 @@ mod tests {
         // (coalescing) queue conserves the total sum weight exactly — per
         // shard and globally — no matter how often overflow folds.
         use crate::gossip::shard::ShardPlan;
-        use std::collections::HashMap;
+        // BTreeMap, not HashMap: these per-shard masses are f64
+        // accumulators, and hash iteration order would make the `sum()`
+        // below nondeterministic across runs (the exact hazard
+        // gosgd-lint's hash-order rule flags).
+        use std::collections::BTreeMap;
         check("queue coalescing conserves weight", 50, |rng| {
             let dim = 16 + rng.below(200) as usize;
             let num_shards = 1 + rng.below(6) as usize;
@@ -408,7 +411,7 @@ mod tests {
             let cap = 2 + rng.below(4) as usize;
             let q = MessageQueue::bounded(cap);
             let n_pushes = 1 + rng.below(60) as usize;
-            let mut pushed: HashMap<(usize, usize), f64> = HashMap::new();
+            let mut pushed: BTreeMap<(usize, usize), f64> = BTreeMap::new();
             for i in 0..n_pushes {
                 let k = rng.below(num_shards as u64) as usize;
                 let shard = plan.shard(k);
@@ -422,7 +425,7 @@ mod tests {
                     shard,
                 ));
             }
-            let mut drained: HashMap<(usize, usize), f64> = HashMap::new();
+            let mut drained: BTreeMap<(usize, usize), f64> = BTreeMap::new();
             let mut total_out = 0.0;
             for m in q.drain() {
                 *drained.entry(m.shard.key()).or_insert(0.0) += m.weight.value();
@@ -561,11 +564,12 @@ mod tests {
     #[test]
     fn concurrent_pushers_lose_nothing() {
         let q = Arc::new(MessageQueue::unbounded());
+        let rounds: usize = if cfg!(miri) { 25 } else { 250 };
         let mut handles = Vec::new();
         for t in 0..4 {
             let q = q.clone();
-            handles.push(std::thread::spawn(move || {
-                for i in 0..250 {
+            handles.push(crate::sync::thread::spawn(move || {
+                for i in 0..rounds {
                     q.push(msg(i as f32, 0.001, t));
                 }
             }));
@@ -573,7 +577,51 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(q.drain().len(), 1000);
-        assert_eq!(q.stats().pushed, 1000);
+        assert_eq!(q.drain().len(), 4 * rounds);
+        assert_eq!(q.stats().pushed, 4 * rounds as u64);
+    }
+
+    #[test]
+    fn same_seed_drains_produce_identical_blend_order() {
+        // Determinism regression for the coalescing path: the same seeded
+        // push sequence into two bounded queues must drain as bitwise
+        // identical messages in identical order — any map-iteration or
+        // fold-order nondeterminism inside push/coalesce would break the
+        // DES trace hashes that gate PRs.
+        use crate::gossip::shard::ShardPlan;
+        use crate::util::rng::Rng;
+        let run = |seed: u64| -> Vec<(usize, usize, u64, Vec<u32>)> {
+            let plan = ShardPlan::new(24, 3);
+            let q = MessageQueue::bounded(2);
+            let mut rng = Rng::new(seed);
+            for i in 0..40 {
+                let k = rng.below(3) as usize;
+                let shard = plan.shard(k);
+                let w = rng.f64() + 1e-3;
+                let vals: Vec<f32> = (0..shard.len).map(|_| rng.f64() as f32 - 0.5).collect();
+                q.push(Message::for_shard(
+                    EncodedPayload::Dense(FlatVec::from_vec(vals)),
+                    SumWeight::from_value(w),
+                    i % 5,
+                    i as u64,
+                    shard,
+                ));
+            }
+            q.drain()
+                .iter()
+                .map(|m| {
+                    (
+                        m.shard.key().0,
+                        m.shard.key().1,
+                        m.weight.value().to_bits(),
+                        m.payload.decode().as_slice().iter().map(|v| v.to_bits()).collect(),
+                    )
+                })
+                .collect()
+        };
+        let a = run(0xD5_0123);
+        let b = run(0xD5_0123);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same seed must replay bit-identically through coalescing");
     }
 }

@@ -40,6 +40,17 @@
 //!   (paper Fig. 2), the consensus experiment (Fig. 4), and the
 //!   straggler/churn scenario grid (`sim::ScenarioModel`).
 //! * [`harness`] — one module per paper figure/table; regenerates the series.
+//! * [`sync`] — the concurrency shim every atomic/thread primitive routes
+//!   through; under `--cfg loom` it swaps in a bounded model checker that
+//!   exhaustively interleaves the pool and queue protocols.
+//! * [`lint`] — the `gosgd-lint` domain rules (shim discipline, hash-order
+//!   determinism, ambient time/RNG, `// SAFETY:` coverage).
+
+// Every `unsafe fn` body must spell out its own `unsafe {}` blocks, and
+// every block carries a `// SAFETY:` comment (the clippy lint audits what
+// gosgd-lint also enforces repo-wide).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod bench;
 pub mod config;
@@ -49,12 +60,14 @@ pub mod error;
 pub mod framework;
 pub mod gossip;
 pub mod harness;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod runtime;
 pub mod sim;
 pub mod strategies;
+pub mod sync;
 pub mod tensor;
 pub mod util;
 pub mod worker;

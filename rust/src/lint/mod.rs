@@ -1,0 +1,562 @@
+//! `gosgd-lint`: domain invariants the compiler cannot enforce.
+//!
+//! The crate's correctness story leans on three repo-wide disciplines
+//! that are invisible to rustc:
+//!
+//! 1. **Shim discipline** (`sync-shim`): no `std::sync::atomic` or
+//!    `std::thread` outside `rust/src/sync/`.  Every primitive must route
+//!    through [`crate::sync`] or the loom lane cannot model it.
+//! 2. **Iteration-order determinism** (`hash-order`): no `HashMap` /
+//!    `HashSet` in `sim/`, `gossip/` or `strategies/`.  Hash iteration
+//!    order changes run to run; feeding it into f64 accumulation (or any
+//!    ordered output) breaks the same-seed trace hashes that gate PRs.
+//!    Use `BTreeMap`/`BTreeSet` or a keyed `Vec`.
+//! 3. **No ambient time or randomness** (`sim-time`): no `Instant`,
+//!    `SystemTime`, `std::time::`, `rand::` or `thread_rng` in those same
+//!    determinism-critical paths.  Clocks come from the DES, randomness
+//!    from [`crate::util::rng`].
+//!
+//! Plus one safety discipline everywhere (`safety-comment`): every
+//! `unsafe` block and `unsafe impl` carries a `// SAFETY:` comment within
+//! the four lines above it (the compiler checks `unsafe` is *declared*,
+//! this checks it is *justified*).
+//!
+//! A violation can be waived on its own line with
+//! `// lint:allow(<rule>)` — the escape hatch is per-line and named, so
+//! waivers are greppable.
+//!
+//! The scanner is a small hand-rolled Rust lexer, not a parser: it masks
+//! string literals, char literals and (nested) comments to spaces —
+//! preserving newlines, so byte offsets map to line numbers — and then
+//! pattern-matches the surviving code text with identifier-boundary
+//! checks.  That is exactly enough precision for these rules (the
+//! patterns are fully-qualified path fragments and type names), with no
+//! dependency on a real parser in the offline build environment.
+//!
+//! Run it as `cargo run --bin gosgd-lint` from the repo root; the binary
+//! exits non-zero on any finding, and the `current_tree_is_clean` test
+//! below makes a lint regression fail plain `cargo test` too.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a specific file/line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule id (also the `lint:allow(...)` tag).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Result of scanning a tree.
+#[derive(Debug)]
+pub struct Report {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    pub findings: Vec<Finding>,
+}
+
+const SYNC_RULE: &str = "sync-shim";
+const HASH_RULE: &str = "hash-order";
+const TIME_RULE: &str = "sim-time";
+const SAFETY_RULE: &str = "safety-comment";
+
+const SYNC_PATTERNS: [&str; 3] = ["std::sync::atomic", "core::sync::atomic", "std::thread"];
+const HASH_PATTERNS: [&str; 2] = ["HashMap", "HashSet"];
+const TIME_PATTERNS: [&str; 5] =
+    ["Instant", "SystemTime", "std::time::", "rand::", "thread_rng"];
+
+/// Directories whose code feeds the deterministic replay path.
+const DETERMINISM_DIRS: [&str; 3] = ["/sim/", "/gossip/", "/strategies/"];
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Replace every string literal, char literal and comment with spaces,
+/// preserving newlines (so byte offsets keep their line numbers) and
+/// leaving all other code bytes untouched.
+pub fn mask(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = b.to_vec();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                while i < b.len() && b[i] != b'\n' {
+                    out[i] = b' ';
+                    i += 1;
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // Rust block comments nest.
+                let mut depth = 1usize;
+                out[i] = b' ';
+                out[i + 1] = b' ';
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        out[i] = b' ';
+                        out[i + 1] = b' ';
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        out[i] = b' ';
+                        out[i + 1] = b' ';
+                        i += 2;
+                    } else {
+                        if b[i] != b'\n' {
+                            out[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => i = mask_plain_string(b, &mut out, i),
+            // Raw (and raw-byte) strings: escapes are inert and `"` can
+            // appear inside, so they need their own scan.  A leading
+            // ident byte means this `r`/`b` is part of an identifier.
+            b'r' | b'b' if i == 0 || !is_ident_byte(b[i - 1]) => {
+                match raw_string_open(b, i) {
+                    Some((quote, hashes)) => i = mask_raw_string(b, &mut out, quote, hashes),
+                    // Not a raw string: plain code byte (a `b"..."` byte
+                    // string falls through to the `"` arm next round).
+                    None => i += 1,
+                }
+            }
+            b'\'' => {
+                let n1 = b.get(i + 1).copied();
+                let n2 = b.get(i + 2).copied();
+                let lifetime = matches!(n1, Some(c) if c.is_ascii_alphabetic() || c == b'_')
+                    && n2 != Some(b'\'');
+                if lifetime {
+                    i += 1; // just the quote; the label is ordinary code
+                } else {
+                    i = mask_char_literal(b, &mut out, i);
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    String::from_utf8(out).expect("masking only writes ASCII spaces over ASCII bytes")
+}
+
+/// Mask `"..."` contents handling `\` escapes; returns the index just
+/// past the closing quote (or EOF on an unterminated literal).
+fn mask_plain_string(b: &[u8], out: &mut [u8], start: usize) -> usize {
+    let mut i = start + 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => {
+                out[i] = b' ';
+                if let Some(&n) = b.get(i + 1) {
+                    if n != b'\n' {
+                        out[i + 1] = b' ';
+                    }
+                }
+                i += 2;
+            }
+            b'"' => return i + 1,
+            b'\n' => i += 1,
+            _ => {
+                out[i] = b' ';
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Detect `r"`, `r#..#"`, `br"`, `br#..#"` starting at `i`; returns the
+/// opening-quote index and the hash count.
+fn raw_string_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((j, hashes))
+    } else {
+        None // e.g. a raw identifier `r#match`
+    }
+}
+
+/// Mask a raw string's contents; `quote` is the opening `"`.  Returns the
+/// index just past the closing delimiter.
+fn mask_raw_string(b: &[u8], out: &mut [u8], quote: usize, hashes: usize) -> usize {
+    let mut i = quote + 1;
+    while i < b.len() {
+        let closes = b[i] == b'"'
+            && b[i + 1..].iter().take(hashes).filter(|&&c| c == b'#').count() == hashes;
+        if closes {
+            return i + 1 + hashes;
+        }
+        if b[i] != b'\n' {
+            out[i] = b' ';
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Mask a char (or byte-char) literal's contents; returns the index just
+/// past the closing quote.
+fn mask_char_literal(b: &[u8], out: &mut [u8], start: usize) -> usize {
+    let mut i = start + 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => {
+                out[i] = b' ';
+                if i + 1 < b.len() {
+                    out[i + 1] = b' ';
+                }
+                i += 2;
+            }
+            b'\'' => return i + 1,
+            b'\n' => return i, // not a char literal after all; bail out
+            _ => {
+                out[i] = b' ';
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Byte offsets of identifier-boundary matches of `pat` in `masked`.
+/// Boundary checks apply only on sides where the pattern edge is itself
+/// an identifier byte (so `std::time::` matches even when followed by a
+/// type name, but `Instant` does not match inside `Instantiate`).
+fn find_pattern(masked: &str, pat: &str) -> Vec<usize> {
+    let mb = masked.as_bytes();
+    let pb = pat.as_bytes();
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = masked[from..].find(pat) {
+        let at = from + pos;
+        let end = at + pb.len();
+        let pre_ok = !is_ident_byte(pb[0]) || at == 0 || !is_ident_byte(mb[at - 1]);
+        let post_ok =
+            !is_ident_byte(pb[pb.len() - 1]) || end >= mb.len() || !is_ident_byte(mb[end]);
+        if pre_ok && post_ok {
+            hits.push(at);
+        }
+        from = end;
+    }
+    hits
+}
+
+/// 1-based line number of byte offset `at`.
+fn line_of(text: &str, at: usize) -> usize {
+    text.as_bytes()[..at].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+/// Byte offsets of `unsafe` tokens that open a block, an `impl`, or a
+/// `trait` — the places a `// SAFETY:` justification is required.
+/// (`unsafe fn` is skipped: under `deny(unsafe_op_in_unsafe_fn)` its body
+/// operations sit in their own `unsafe {}` blocks, which are flagged.)
+fn unsafe_sites(masked: &str) -> Vec<usize> {
+    let mb = masked.as_bytes();
+    find_pattern(masked, "unsafe")
+        .into_iter()
+        .filter(|&at| {
+            let mut j = at + "unsafe".len();
+            while j < mb.len() && mb[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j >= mb.len() {
+                return false;
+            }
+            mb[j] == b'{' || masked[j..].starts_with("impl") || masked[j..].starts_with("trait")
+        })
+        .collect()
+}
+
+/// Does the original source waive `rule` on `line` (1-based)?
+fn waived(lines: &[&str], line: usize, rule: &str) -> bool {
+    lines
+        .get(line - 1)
+        .is_some_and(|l| l.contains("lint:allow(") && l.contains(rule))
+}
+
+/// Is `// SAFETY:` present on the site's line or the four above it?
+fn has_safety_comment(lines: &[&str], line: usize) -> bool {
+    let lo = line.saturating_sub(5);
+    lines[lo..line.min(lines.len())].iter().any(|l| l.contains("SAFETY:"))
+}
+
+/// Lint a single file's source.  `file` is the repo-relative path (it
+/// drives the directory-scoped rules), `src` the file contents.
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let rel = file.replace('\\', "/");
+    let masked = mask(src);
+    let lines: Vec<&str> = src.lines().collect();
+    let mut findings = Vec::new();
+    let mut seen: Vec<(usize, &'static str)> = Vec::new();
+    let mut push = |findings: &mut Vec<Finding>,
+                    seen: &mut Vec<(usize, &'static str)>,
+                    line: usize,
+                    rule: &'static str,
+                    message: String| {
+        if waived(&lines, line, rule) || seen.contains(&(line, rule)) {
+            return;
+        }
+        seen.push((line, rule));
+        findings.push(Finding { file: rel.clone(), line, rule, message });
+    };
+
+    let in_shim = rel.contains("src/sync/") || rel.ends_with("src/sync.rs");
+    if !in_shim {
+        for pat in SYNC_PATTERNS {
+            for at in find_pattern(&masked, pat) {
+                push(
+                    &mut findings,
+                    &mut seen,
+                    line_of(&masked, at),
+                    SYNC_RULE,
+                    format!(
+                        "`{pat}` outside the sync shim: route every atomic/thread \
+                         primitive through `crate::sync` so the loom lane can model it"
+                    ),
+                );
+            }
+        }
+    }
+
+    if DETERMINISM_DIRS.iter().any(|d| rel.contains(d)) {
+        for pat in HASH_PATTERNS {
+            for at in find_pattern(&masked, pat) {
+                push(
+                    &mut findings,
+                    &mut seen,
+                    line_of(&masked, at),
+                    HASH_RULE,
+                    format!(
+                        "`{pat}` in a determinism-critical path: hash iteration order is \
+                         nondeterministic and poisons f64 accumulation / trace hashes — \
+                         use BTreeMap/BTreeSet or a keyed Vec"
+                    ),
+                );
+            }
+        }
+        for pat in TIME_PATTERNS {
+            for at in find_pattern(&masked, pat) {
+                push(
+                    &mut findings,
+                    &mut seen,
+                    line_of(&masked, at),
+                    TIME_RULE,
+                    format!(
+                        "`{pat}` in a simulation path: ambient time/randomness breaks \
+                         same-seed replay — take clocks from the DES and randomness \
+                         from util::rng"
+                    ),
+                );
+            }
+        }
+    }
+
+    for at in unsafe_sites(&masked) {
+        let line = line_of(&masked, at);
+        if !has_safety_comment(&lines, line) {
+            push(
+                &mut findings,
+                &mut seen,
+                line,
+                SAFETY_RULE,
+                "`unsafe` without a `// SAFETY:` comment within the 4 lines above it".to_string(),
+            );
+        }
+    }
+
+    findings
+}
+
+/// Recursively collect `.rs` files, sorted for a deterministic report.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `<root>/rust/{src,tests,benches}`.
+pub fn lint_tree(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "rust/tests", "rust/benches"] {
+        collect_rs(&root.join(sub), &mut files)?;
+    }
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(Report { files: files.len(), findings })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(file: &str, src: &str) -> Vec<&'static str> {
+        lint_source(file, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn flags_std_atomics_and_threads_outside_the_shim() {
+        let bad = "use std::sync::atomic::AtomicUsize;\nfn f() { std::thread::spawn(|| {}); }\n";
+        let found = lint_source("rust/src/tensor/foo.rs", bad);
+        assert_eq!(found.len(), 2, "{found:?}");
+        assert_eq!(found[0].rule, "sync-shim");
+        assert_eq!(found[0].line, 1);
+        assert_eq!(found[1].line, 2);
+        // The shim itself is the one allowed home.
+        assert!(lint_source("rust/src/sync/mod.rs", bad).is_empty());
+        assert!(lint_source("rust/src/sync/model.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_trigger_rules() {
+        let ok = concat!(
+            "// std::thread is forbidden here, says this comment\n",
+            "/* and std::sync::atomic inside /* nested */ blocks too */\n",
+            "const DOC: &str = \"std::sync::atomic::AtomicU64\";\n",
+            "const RAW: &str = r#\"std::thread::spawn\"#;\n",
+        );
+        assert!(rules("rust/src/gossip/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn flags_hash_collections_only_in_determinism_dirs() {
+        let bad = "use std::collections::HashMap;\nlet s: HashSet<u32> = HashSet::new();\n";
+        assert_eq!(rules("rust/src/sim/foo.rs", bad), ["hash-order", "hash-order"]);
+        assert_eq!(rules("rust/src/gossip/foo.rs", bad).len(), 2);
+        assert_eq!(rules("rust/src/strategies/foo.rs", bad).len(), 2);
+        // Outside the deterministic paths, hash collections are fine.
+        assert!(rules("rust/src/harness/foo.rs", bad).is_empty());
+        assert!(rules("rust/src/util/foo.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn flags_ambient_time_and_rng_in_sim_paths() {
+        let bad = "let t0 = std::time::Instant::now();\n";
+        let found = lint_source("rust/src/sim/clock.rs", bad);
+        // `Instant` and `std::time::` both hit line 1; the report dedupes
+        // to one finding per (line, rule).
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, "sim-time");
+        assert_eq!(rules("rust/src/strategies/r.rs", "let r = thread_rng();\n"), ["sim-time"]);
+        assert_eq!(rules("rust/src/gossip/t.rs", "use std::time::SystemTime;\n"), ["sim-time"]);
+        // Word boundaries: `Instantiate` is not `Instant`.
+        assert!(rules("rust/src/sim/doc.rs", "fn instantiate_Instantiate() {}\n").is_empty());
+    }
+
+    #[test]
+    fn flags_unsafe_without_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let found = lint_source("rust/src/util/foo.rs", bad);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, "safety-comment");
+        assert_eq!(found[0].line, 2);
+        let ok = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n";
+        assert!(lint_source("rust/src/util/foo.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn flags_unsafe_impl_and_skips_unsafe_fn_declarations() {
+        let bad = "unsafe impl Send for X {}\n";
+        assert_eq!(rules("rust/src/tensor/x.rs", bad), ["safety-comment"]);
+        let ok = "// SAFETY: X owns no thread-affine state.\nunsafe impl Send for X {}\n";
+        assert!(rules("rust/src/tensor/x.rs", ok).is_empty());
+        // An `unsafe fn` declaration needs no comment of its own: its
+        // body's unsafe blocks carry the justifications.
+        let decl = "unsafe fn g() {}\n";
+        assert!(rules("rust/src/tensor/x.rs", decl).is_empty());
+    }
+
+    #[test]
+    fn lint_allow_waives_a_rule_on_its_line_only() {
+        let waived = "use std::collections::HashMap; // lint:allow(hash-order) keyed by id\n";
+        assert!(rules("rust/src/sim/w.rs", waived).is_empty());
+        // The waiver names a rule; a different rule on the same line still fires.
+        let wrong_tag = "use std::collections::HashMap; // lint:allow(sim-time)\n";
+        assert_eq!(rules("rust/src/sim/w.rs", wrong_tag), ["hash-order"]);
+        // And it does not leak to other lines.
+        let next_line = "// lint:allow(hash-order)\nuse std::collections::HashMap;\n";
+        assert_eq!(rules("rust/src/sim/w.rs", next_line), ["hash-order"]);
+    }
+
+    #[test]
+    fn char_literals_do_not_open_strings() {
+        // The `'"'` char literal must not be read as a string delimiter —
+        // if it were, the real violation after it would be masked away.
+        let bad = "fn f() { let q = '\"'; let t = std::thread::current(); }\n";
+        assert_eq!(rules("rust/src/gossip/c.rs", bad), ["sync-shim"]);
+        // Lifetimes are not char literals.
+        let ok = "fn g<'a>(x: &'a str) -> &'a str { x }\n";
+        assert!(rules("rust/src/gossip/c.rs", ok).is_empty());
+        // Escaped quote inside a char literal.
+        let esc = "fn h() -> char { '\\'' }\n";
+        assert!(rules("rust/src/gossip/c.rs", esc).is_empty());
+    }
+
+    #[test]
+    fn masking_preserves_line_numbers() {
+        let src = "line1\n/* comment\nspanning\nlines */\nstd::thread::yield_now();\n";
+        let found = lint_source("rust/src/sim/m.rs", src);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].line, 5, "{found:?}");
+    }
+
+    #[test]
+    fn current_tree_is_clean() {
+        // The repo itself must satisfy its own invariants — this is the
+        // tier-1 guard that keeps gosgd-lint green without the CI lane.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = lint_tree(root).expect("scan repo tree");
+        assert!(
+            report.files >= 60,
+            "expected to scan the full tree, saw only {} files",
+            report.files
+        );
+        let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+        assert!(rendered.is_empty(), "lint violations:\n{}", rendered.join("\n"));
+    }
+}

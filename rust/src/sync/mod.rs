@@ -1,0 +1,268 @@
+//! Synchronization shim: every concurrency primitive the crate uses, in
+//! one place.
+//!
+//! The gossip protocol's correctness claims ultimately rest on a handful
+//! of concurrent primitives — the lock-free freelist in
+//! [`crate::tensor::pool`], the mailbox mutex in
+//! [`crate::gossip::queue`], and the threaded runtime's counters in
+//! [`crate::worker`].  Passing tests only show those primitives behaved
+//! under the interleavings the OS happened to produce; to *check* them we
+//! need to control scheduling.  This module is the seam that makes that
+//! possible:
+//!
+//! * **Default build** (`cargo build` / `cargo test`): every name here is
+//!   a zero-cost re-export of the `std` primitive.  Nothing changes.
+//! * **Model build** (`RUSTFLAGS="--cfg loom"`): atomics, `Mutex` and
+//!   `thread::spawn` swap for instrumented types from this module whose
+//!   every operation is a *scheduling point*.  Inside [`model`], a
+//!   depth-first explorer then drives the closure through **every
+//!   interleaving up to a preemption bound** (default 2–3 forced context
+//!   switches, the CHESS bound that finds the vast majority of
+//!   concurrency bugs), failing with a replayable schedule when an
+//!   assertion breaks or a deadlock appears.
+//!
+//! The crate-wide invariant — enforced by `cargo run --bin gosgd-lint` —
+//! is that **no code outside this module touches `std::sync::atomic` or
+//! `std::thread` directly**: anything the shim does not route cannot be
+//! model-checked, so routing is mandatory.
+//!
+//! ## What the model checker does and does not prove
+//!
+//! The hand-rolled checker (the offline environment has no external
+//! crates, in keeping with the crate's from-scratch `util` substrate)
+//! explores interleavings under **sequential consistency**: model threads
+//! run one at a time and memory is fully synchronized at every scheduling
+//! point.  That exhaustively covers *logic* races — lost updates, broken
+//! claim protocols, deadlocks, invariant violations — but not reorderings
+//! permitted by weaker memory orderings.  The Miri and ThreadSanitizer CI
+//! lanes cover the memory-model side: Miri validates the `unsafe`
+//! pointer/provenance story and TSan watches the real-thread suites for
+//! data races.  See `docs/ARCHITECTURE.md` ch. 7d for the full matrix.
+//!
+//! ## Writing a model
+//!
+//! ```
+//! use gosgd::sync::{self, atomic::AtomicUsize, atomic::Ordering, Arc};
+//!
+//! sync::model(|| {
+//!     let c = Arc::new(AtomicUsize::new(0));
+//!     let c2 = c.clone();
+//!     let t = sync::thread::spawn(move || {
+//!         c2.fetch_add(1, Ordering::SeqCst);
+//!     });
+//!     c.fetch_add(1, Ordering::SeqCst);
+//!     t.join().unwrap();
+//!     assert_eq!(c.load(Ordering::SeqCst), 2); // holds in EVERY interleaving
+//! });
+//! ```
+//!
+//! Under the default build, [`model`] runs the closure a bounded number
+//! of times on real threads (a smoke/stress pass), so the models in
+//! `rust/tests/loom_models.rs` execute on every `cargo test` and cannot
+//! silently rot between runs of the dedicated loom CI lane.
+
+#[cfg(loom)]
+mod model;
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Barrier, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use std::sync::{Arc, Barrier, Condvar};
+
+#[cfg(loom)]
+pub use model::{Mutex, MutexGuard};
+
+/// Atomic types, instrumented under `--cfg loom`.
+///
+/// `Ordering` is always the `std` enum: the model checker runs under
+/// sequential consistency, so orderings are accepted (call sites stay
+/// identical) and the *stronger* semantics are explored.
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize};
+
+    #[cfg(loom)]
+    pub use super::model::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize};
+}
+
+/// Thread spawning, instrumented under `--cfg loom`.
+///
+/// `scope` is always the `std` scoped-thread API: scoped threads are used
+/// only by the threaded runtime, which the model checker does not drive
+/// (models use [`thread::spawn`]); under a loom build the runtime still
+/// compiles and runs on real threads with the instrumented types falling
+/// back to their plain behavior outside a model.
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{scope, spawn, yield_now, JoinHandle, Scope, ScopedJoinHandle};
+
+    #[cfg(loom)]
+    pub use std::thread::{scope, Scope, ScopedJoinHandle};
+
+    #[cfg(loom)]
+    pub use super::model::{spawn, yield_now, JoinHandle};
+}
+
+/// Tuning knobs for [`model_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct Builder {
+    /// Loom mode: maximum *preemptive* context switches per explored
+    /// schedule (switching away from a thread that could have continued).
+    /// Cooperative switches — the running thread blocking or finishing —
+    /// are always free, so every schedule runs to completion.  2 is the
+    /// classic CHESS bound; small models can afford 3.
+    pub preemption_bound: usize,
+    /// Loom mode: hard cap on explored schedules before the model is
+    /// declared too large (a failure, not a silent truncation).
+    pub max_schedules: usize,
+    /// Default build: how many times the closure is re-run on real
+    /// threads as a smoke/stress pass.
+    pub smoke_iterations: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        Builder { preemption_bound: 2, max_schedules: 500_000, smoke_iterations: 64 }
+    }
+}
+
+/// True when compiled with `RUSTFLAGS="--cfg loom"` (exhaustive model
+/// checking); false in the default build (bounded smoke runs).
+pub fn is_loom() -> bool {
+    cfg!(loom)
+}
+
+/// Check a concurrent closure under every interleaving up to the default
+/// [`Builder`] bounds (loom build), or re-run it as a bounded real-thread
+/// smoke test (default build).
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    model_with(Builder::default(), f);
+}
+
+/// [`model`] with explicit bounds.
+#[cfg(not(loom))]
+pub fn model_with<F>(builder: Builder, f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    for _ in 0..builder.smoke_iterations {
+        f();
+    }
+}
+
+/// [`model`] with explicit bounds.
+#[cfg(loom)]
+pub fn model_with<F>(builder: Builder, f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    model::explore(builder, f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use super::{thread, Arc, Builder, Mutex};
+    // The outer (cross-execution) counters must not be model state: the
+    // shim dir is the one place allowed to name std::sync::atomic.
+    use std::sync::atomic::AtomicUsize as StdAtomicUsize;
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn model_runs_the_closure_and_explores_schedules() {
+        let runs = StdArc::new(StdAtomicUsize::new(0));
+        let r2 = runs.clone();
+        super::model(move || {
+            r2.fetch_add(1, Ordering::SeqCst);
+            let flag = Arc::new(AtomicBool::new(false));
+            let f2 = flag.clone();
+            let t = thread::spawn(move || {
+                f2.store(true, Ordering::SeqCst);
+            });
+            // Both outcomes of this load are legal; the model must visit
+            // them without tripping anything.
+            let _ = flag.load(Ordering::SeqCst);
+            t.join().unwrap();
+            assert!(flag.load(Ordering::SeqCst), "after join the store is visible");
+        });
+        let n = runs.load(Ordering::SeqCst);
+        if super::is_loom() {
+            assert!(n > 1, "expected multiple schedules, got {n}");
+        } else {
+            assert_eq!(n, Builder::default().smoke_iterations);
+        }
+    }
+
+    #[test]
+    fn spawn_returns_the_closure_value_through_join() {
+        super::model(|| {
+            let t = thread::spawn(|| 41_usize + 1);
+            assert_eq!(t.join().unwrap(), 42);
+        });
+    }
+
+    #[test]
+    fn atomic_increments_from_two_threads_always_sum() {
+        super::model(|| {
+            let c = Arc::new(AtomicUsize::new(0));
+            let c2 = c.clone();
+            let t = thread::spawn(move || {
+                for _ in 0..3 {
+                    c2.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            for _ in 0..3 {
+                c.fetch_add(1, Ordering::SeqCst);
+            }
+            t.join().unwrap();
+            assert_eq!(c.load(Ordering::SeqCst), 6);
+        });
+    }
+
+    #[test]
+    fn mutex_preserves_every_critical_section() {
+        super::model(|| {
+            let v = Arc::new(Mutex::new(Vec::new()));
+            let v2 = v.clone();
+            let t = thread::spawn(move || {
+                v2.lock().expect("model mutex").push(1);
+                v2.lock().expect("model mutex").push(2);
+            });
+            v.lock().expect("model mutex").push(10);
+            t.join().unwrap();
+            let g = v.lock().expect("model mutex");
+            assert_eq!(g.len(), 3, "no push may be lost: {g:?}");
+            // Per-thread order survives any interleaving.
+            let pos = |x: i32| g.iter().position(|&y| y == x).unwrap();
+            assert!(pos(1) < pos(2));
+        });
+    }
+
+    // The checker must FIND bugs, not just bless correct code: a classic
+    // load-then-store lost update is reachable with one preemption, so
+    // exhaustive exploration is required to panic here.  (Only under the
+    // loom cfg: 64 real-thread smoke runs are not guaranteed to hit it.)
+    #[cfg(loom)]
+    #[test]
+    #[should_panic]
+    fn model_finds_a_lost_update() {
+        super::model(|| {
+            let c = Arc::new(AtomicUsize::new(0));
+            let c2 = c.clone();
+            let t = thread::spawn(move || {
+                let v = c2.load(Ordering::SeqCst);
+                c2.store(v + 1, Ordering::SeqCst);
+            });
+            let v = c.load(Ordering::SeqCst);
+            c.store(v + 1, Ordering::SeqCst);
+            t.join().unwrap();
+            assert_eq!(c.load(Ordering::SeqCst), 2, "lost update");
+        });
+    }
+}

@@ -1,0 +1,726 @@
+//! The bounded model checker behind the `--cfg loom` build of the shim.
+//!
+//! ## How it works
+//!
+//! A model execution runs the user closure plus every thread it spawns on
+//! real OS threads, but a cooperative **turnstile** (one mutex + condvar)
+//! guarantees exactly one of them is ever running; everyone else parks.
+//! Every instrumented operation — an atomic load/store, a mutex lock, a
+//! spawn — first calls [`Scheduler::switch`], a *scheduling point* where
+//! the explorer decides which thread runs next.
+//!
+//! The first execution records each decision as a [`Choice`]: the thread
+//! chosen plus the runnable alternatives not yet tried.  After the
+//! closure (and all its threads) finish, the explorer advances the
+//! deepest choice with untried alternatives and replays: the recorded
+//! prefix is forced verbatim, then fresh decisions are recorded past it.
+//! This is a plain depth-first search over the schedule tree, so every
+//! interleaving reachable within the bounds is visited exactly once.
+//!
+//! **Preemption bounding** keeps the tree tractable (CHESS-style): a
+//! switch away from a thread that could have continued costs one unit of
+//! a small budget ([`super::Builder::preemption_bound`]); cooperative
+//! switches (the running thread blocks or finishes) are free.  Schedules
+//! over budget are simply not generated — every generated schedule still
+//! runs to completion.
+//!
+//! **Failure handling:** a panic in any model thread (assertion failure,
+//! detected deadlock, replay divergence) aborts the whole execution —
+//! every parked thread is released and unwinds via a private [`Abort`]
+//! payload — and the original panic is re-raised from [`explore`] after
+//! printing the failing schedule.  A state with no runnable thread while
+//! some are still blocked is reported as a deadlock.
+//!
+//! **Model:** sequential consistency.  Threads interleave but never
+//! overlap, and memory is flushed at every scheduling point, so weaker
+//! orderings are explored at `SeqCst` strength; Miri/TSan complement this
+//! (see the shim's module docs).  Model closures must be deterministic —
+//! replay divergence is detected and reported as a failure.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{
+    Arc as StdArc, Condvar as StdCondvar, LockResult, Mutex as StdMutex, PoisonError,
+    TryLockError,
+};
+
+use super::Builder;
+
+/// Panic payload used to unwind model threads when a run aborts; never
+/// reported as a failure itself (the first real panic is).
+struct Abort;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Runnable,
+    /// Waiting for thread `.0` to finish.
+    BlockedJoin(usize),
+    /// Waiting for the model mutex whose address is `.0` to unlock.
+    BlockedMutex(usize),
+    Finished,
+}
+
+/// One recorded scheduling decision: the thread that ran plus the
+/// runnable alternatives the DFS has not tried yet from this state.
+#[derive(Debug)]
+struct Choice {
+    chosen: usize,
+    alternatives: Vec<usize>,
+}
+
+type PanicPayload = Box<dyn Any + Send + 'static>;
+
+struct State {
+    status: Vec<Status>,
+    /// Thread id currently allowed to run.
+    active: usize,
+    /// Replay prefix (up to `cursor`) then the recorded suffix.
+    schedule: Vec<Choice>,
+    cursor: usize,
+    /// Preemptive switches spent so far in this execution.
+    preemptions: usize,
+    abort: bool,
+    deadlock: Option<String>,
+    panic: Option<PanicPayload>,
+    os_handles: Vec<std::thread::JoinHandle<()>>,
+    finished: usize,
+}
+
+struct Scheduler {
+    state: StdMutex<State>,
+    cv: StdCondvar,
+    preemption_bound: usize,
+}
+
+thread_local! {
+    /// (scheduler, my thread id) while executing inside a model.
+    static CTX: RefCell<Option<(StdArc<Scheduler>, usize)>> = const { RefCell::new(None) };
+}
+
+fn current() -> Option<(StdArc<Scheduler>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// A scheduling point for the calling thread, if it is a model thread;
+/// no-op on ordinary threads (the instrumented types then behave exactly
+/// like their `std` counterparts).
+fn sync_point() {
+    if let Some((sched, me)) = current() {
+        sched.switch(me);
+    }
+}
+
+/// Clears the thread-local model context on scope exit, panic included.
+struct CtxGuard;
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| *c.borrow_mut() = None);
+    }
+}
+
+fn set_ctx(sched: &StdArc<Scheduler>, id: usize) -> CtxGuard {
+    CTX.with(|c| {
+        let mut slot = c.borrow_mut();
+        assert!(slot.is_none(), "nested sync::model calls are not supported");
+        *slot = Some((sched.clone(), id));
+    });
+    CtxGuard
+}
+
+impl Scheduler {
+    fn new(prefix: Vec<Choice>, preemption_bound: usize) -> Scheduler {
+        Scheduler {
+            state: StdMutex::new(State {
+                status: vec![Status::Runnable],
+                active: 0,
+                schedule: prefix,
+                cursor: 0,
+                preemptions: 0,
+                abort: false,
+                deadlock: None,
+                panic: None,
+                os_handles: Vec::new(),
+                finished: 0,
+            }),
+            cv: StdCondvar::new(),
+            preemption_bound,
+        }
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, State> {
+        // The scheduler's own lock is never held across user code, so it
+        // can only be poisoned by a bug in this module.
+        self.state.lock().expect("model scheduler poisoned")
+    }
+
+    /// On abort, make every parked thread runnable so it can observe the
+    /// flag and unwind.
+    fn release_all(st: &mut State) {
+        for s in st.status.iter_mut() {
+            if matches!(s, Status::BlockedJoin(_) | Status::BlockedMutex(_)) {
+                *s = Status::Runnable;
+            }
+        }
+    }
+
+    /// Decide which thread runs next.  `me` is the deciding thread;
+    /// `me_runnable` is whether it could itself continue (false when it
+    /// just blocked or finished).  Replays the recorded prefix when one
+    /// exists, otherwise records a fresh [`Choice`].
+    fn pick_next(&self, st: &mut State, me: usize, me_runnable: bool) {
+        if st.abort {
+            Self::release_all(st);
+            self.cv.notify_all();
+            return;
+        }
+        let runnable: Vec<usize> =
+            (0..st.status.len()).filter(|&i| st.status[i] == Status::Runnable).collect();
+        if runnable.is_empty() {
+            if st.finished < st.status.len() {
+                st.deadlock = Some(format!(
+                    "model deadlock: every live thread is blocked ({:?})",
+                    st.status
+                ));
+                st.abort = true;
+                Self::release_all(st);
+            }
+            self.cv.notify_all();
+            return;
+        }
+        let chosen = if runnable.len() == 1 {
+            // Forced move: not a branch point.  Skipped consistently on
+            // replay too, because the runnable set is a deterministic
+            // function of the schedule prefix.
+            runnable[0]
+        } else if st.cursor < st.schedule.len() {
+            let c = st.schedule[st.cursor].chosen;
+            assert!(
+                runnable.contains(&c),
+                "model replay diverged (forced thread {c}, runnable {runnable:?}): \
+                 model closures must be deterministic"
+            );
+            st.cursor += 1;
+            c
+        } else {
+            // Fresh branch point: default to staying on the current
+            // thread (free); alternatives cost one preemption each and
+            // are admitted only within budget.
+            let keep_me = me_runnable && st.status[me] == Status::Runnable;
+            let default = if keep_me { me } else { runnable[0] };
+            let mut alternatives = Vec::new();
+            for &r in &runnable {
+                if r == default {
+                    continue;
+                }
+                let cost = usize::from(keep_me);
+                if st.preemptions + cost <= self.preemption_bound {
+                    alternatives.push(r);
+                }
+            }
+            st.schedule.push(Choice { chosen: default, alternatives });
+            st.cursor += 1;
+            default
+        };
+        if me_runnable && st.status[me] == Status::Runnable && chosen != me {
+            st.preemptions += 1;
+        }
+        st.active = chosen;
+        self.cv.notify_all();
+    }
+
+    /// Park until this thread is the scheduled one; unwind on abort.
+    fn wait_until_scheduled(&self, mut st: std::sync::MutexGuard<'_, State>, me: usize) {
+        loop {
+            if st.abort {
+                drop(st);
+                std::panic::panic_any(Abort);
+            }
+            if st.active == me && st.status[me] == Status::Runnable {
+                return;
+            }
+            st = self.cv.wait(st).expect("model scheduler poisoned");
+        }
+    }
+
+    /// A scheduling point: offer the explorer the chance to preempt.
+    fn switch(&self, me: usize) {
+        let mut st = self.locked();
+        self.pick_next(&mut st, me, true);
+        self.wait_until_scheduled(st, me);
+    }
+
+    fn register_thread(&self) -> usize {
+        let mut st = self.locked();
+        st.status.push(Status::Runnable);
+        st.status.len() - 1
+    }
+
+    fn store_handle(&self, h: std::thread::JoinHandle<()>) {
+        self.locked().os_handles.push(h);
+    }
+
+    /// First wait of a freshly spawned model thread (no decision to make
+    /// — the spawner is still the active thread).
+    fn first_schedule(&self, me: usize) {
+        let st = self.locked();
+        self.wait_until_scheduled(st, me);
+    }
+
+    fn thread_finished(&self, me: usize) {
+        let mut st = self.locked();
+        st.status[me] = Status::Finished;
+        st.finished += 1;
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedJoin(me) {
+                *s = Status::Runnable;
+            }
+        }
+        if st.finished == st.status.len() {
+            self.cv.notify_all();
+        } else {
+            self.pick_next(&mut st, me, false);
+        }
+    }
+
+    /// Block until thread `target` finishes.
+    fn join_wait(&self, me: usize, target: usize) {
+        loop {
+            let mut st = self.locked();
+            if st.abort {
+                drop(st);
+                std::panic::panic_any(Abort);
+            }
+            if st.status[target] == Status::Finished {
+                return;
+            }
+            st.status[me] = Status::BlockedJoin(target);
+            self.pick_next(&mut st, me, false);
+            self.wait_until_scheduled(st, me);
+        }
+    }
+
+    /// Block until the model mutex at `addr` is released.
+    fn mutex_wait(&self, me: usize, addr: usize) {
+        let mut st = self.locked();
+        if st.abort {
+            drop(st);
+            std::panic::panic_any(Abort);
+        }
+        st.status[me] = Status::BlockedMutex(addr);
+        self.pick_next(&mut st, me, false);
+        self.wait_until_scheduled(st, me);
+    }
+
+    /// Wake every thread blocked on the model mutex at `addr`.  Called
+    /// from guard drop; the waiters re-contend via `try_lock`, and there
+    /// is no lost wakeup because only one model thread can run between a
+    /// failed `try_lock` and the corresponding block.
+    fn mutex_released(&self, addr: usize) {
+        let mut st = self.locked();
+        let mut woke = false;
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedMutex(addr) {
+                *s = Status::Runnable;
+                woke = true;
+            }
+        }
+        if woke {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Record the first real panic and abort the execution.
+    fn record_panic(&self, p: PanicPayload) {
+        let mut st = self.locked();
+        if st.panic.is_none() {
+            st.panic = Some(p);
+        }
+        st.abort = true;
+        Self::release_all(&mut st);
+        self.cv.notify_all();
+    }
+
+    /// Explorer-side: park until every model thread has finished.
+    fn wait_all_finished(&self) {
+        let mut st = self.locked();
+        while st.finished < st.status.len() {
+            st = self.cv.wait(st).expect("model scheduler poisoned");
+        }
+    }
+}
+
+/// Exhaustively run `f` under every schedule within `builder`'s bounds.
+pub(super) fn explore<F>(builder: Builder, f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let mut prefix: Vec<Choice> = Vec::new();
+    let mut schedules: usize = 0;
+    loop {
+        schedules += 1;
+        assert!(
+            schedules <= builder.max_schedules,
+            "model exceeded {} schedules; shrink the model or raise Builder::max_schedules",
+            builder.max_schedules
+        );
+        let sched =
+            StdArc::new(Scheduler::new(std::mem::take(&mut prefix), builder.preemption_bound));
+        {
+            let _ctx = set_ctx(&sched, 0);
+            if let Err(p) = catch_unwind(AssertUnwindSafe(&f)) {
+                if p.downcast_ref::<Abort>().is_none() {
+                    sched.record_panic(p);
+                }
+                // An Abort payload means some other thread already
+                // recorded the real failure; just fall through.
+            }
+            sched.thread_finished(0);
+            sched.wait_all_finished();
+        }
+        let (mut schedule, handles, panic, deadlock) = {
+            let mut st = sched.locked();
+            (
+                std::mem::take(&mut st.schedule),
+                std::mem::take(&mut st.os_handles),
+                st.panic.take(),
+                st.deadlock.take(),
+            )
+        };
+        // Reap the OS threads before judging the execution so no model
+        // thread outlives its scheduler.
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(p) = panic {
+            let trace: Vec<usize> = schedule.iter().map(|c| c.chosen).collect();
+            eprintln!(
+                "sync::model: failure on schedule {trace:?} \
+                 (execution #{schedules}; ids are spawn order, 0 = main)"
+            );
+            resume_unwind(p);
+        }
+        if let Some(msg) = deadlock {
+            let trace: Vec<usize> = schedule.iter().map(|c| c.chosen).collect();
+            panic!("{msg}; schedule {trace:?} (execution #{schedules})");
+        }
+        // DFS step: drop exhausted tail choices, then advance the
+        // deepest one with an untried alternative.
+        loop {
+            match schedule.last_mut() {
+                None => return, // exploration complete
+                Some(c) if c.alternatives.is_empty() => {
+                    schedule.pop();
+                }
+                Some(c) => {
+                    c.chosen = c.alternatives.remove(0);
+                    break;
+                }
+            }
+        }
+        prefix = schedule;
+    }
+}
+
+/// Model-aware replacement for `std::thread::yield_now`: a pure
+/// scheduling point inside a model, a real yield outside one.
+pub fn yield_now() {
+    if current().is_some() {
+        sync_point();
+    } else {
+        std::thread::yield_now();
+    }
+}
+
+type ResultSlot<T> = StdArc<StdMutex<Option<T>>>;
+
+enum Handle<T> {
+    /// Spawned outside any model: a plain OS thread.
+    Os(std::thread::JoinHandle<T>),
+    /// Spawned inside a model: scheduled by `sched`, result in `slot`.
+    Model {
+        sched: StdArc<Scheduler>,
+        id: usize,
+        slot: ResultSlot<T>,
+    },
+}
+
+/// Drop-in replacement for `std::thread::JoinHandle` under `--cfg loom`.
+pub struct JoinHandle<T>(Handle<T>);
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.0 {
+            Handle::Os(h) => h.join(),
+            Handle::Model { sched, id, slot } => {
+                let me = current()
+                    .map(|(_, me)| me)
+                    .expect("a model JoinHandle must be joined inside its model");
+                sched.join_wait(me, id);
+                match slot.lock().expect("model result slot poisoned").take() {
+                    Some(v) => Ok(v),
+                    // The target panicked; its payload already aborted
+                    // the execution, so unwind this thread too.
+                    None => std::panic::panic_any(Abort),
+                }
+            }
+        }
+    }
+}
+
+impl<T> fmt::Debug for JoinHandle<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("JoinHandle(..)")
+    }
+}
+
+/// Drop-in replacement for `std::thread::spawn` under `--cfg loom`.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match current() {
+        None => JoinHandle(Handle::Os(std::thread::spawn(f))),
+        Some((sched, me)) => {
+            let id = sched.register_thread();
+            let slot: ResultSlot<T> = StdArc::new(StdMutex::new(None));
+            let slot2 = slot.clone();
+            let sched2 = sched.clone();
+            let os = std::thread::Builder::new()
+                .name(format!("model-{id}"))
+                .spawn(move || {
+                    let _ctx = set_ctx(&sched2, id);
+                    // first_schedule sits inside the catch: on an aborted
+                    // run it unwinds with Abort, and thread_finished must
+                    // still be reached or the explorer would wait forever.
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        sched2.first_schedule(id);
+                        f()
+                    })) {
+                        Ok(v) => *slot2.lock().expect("model result slot poisoned") = Some(v),
+                        Err(p) => {
+                            if p.downcast_ref::<Abort>().is_none() {
+                                sched2.record_panic(p);
+                            }
+                        }
+                    }
+                    sched2.thread_finished(id);
+                })
+                .expect("spawn model OS thread");
+            sched.store_handle(os);
+            // Spawning is itself a branch point: the child may run first.
+            sched.switch(me);
+            JoinHandle(Handle::Model { sched, id, slot })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instrumented atomics.  Each wraps the real std atomic (so the fallback
+// path outside a model is exactly std behavior) and adds a scheduling
+// point before the operation; the turnstile's own lock makes every
+// operation sequentially consistent inside a model, which is the
+// strongest reading of whatever `Ordering` the call site passed.
+// ---------------------------------------------------------------------------
+
+macro_rules! model_atomic_base {
+    ($name:ident, $t:ty) => {
+        pub struct $name {
+            inner: std::sync::atomic::$name,
+        }
+
+        impl $name {
+            pub const fn new(v: $t) -> Self {
+                Self { inner: std::sync::atomic::$name::new(v) }
+            }
+
+            pub fn load(&self, order: Ordering) -> $t {
+                sync_point();
+                self.inner.load(order)
+            }
+
+            pub fn store(&self, v: $t, order: Ordering) {
+                sync_point();
+                self.inner.store(v, order);
+            }
+
+            pub fn swap(&self, v: $t, order: Ordering) -> $t {
+                sync_point();
+                self.inner.swap(v, order)
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $t,
+                new: $t,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$t, $t> {
+                sync_point();
+                self.inner.compare_exchange(current, new, success, failure)
+            }
+        }
+
+        impl fmt::Debug for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                self.inner.fmt(f)
+            }
+        }
+    };
+}
+
+macro_rules! model_atomic_int {
+    ($name:ident, $t:ty) => {
+        model_atomic_base!($name, $t);
+
+        impl $name {
+            pub fn fetch_add(&self, v: $t, order: Ordering) -> $t {
+                sync_point();
+                self.inner.fetch_add(v, order)
+            }
+
+            pub fn fetch_sub(&self, v: $t, order: Ordering) -> $t {
+                sync_point();
+                self.inner.fetch_sub(v, order)
+            }
+        }
+    };
+}
+
+model_atomic_base!(AtomicBool, bool);
+model_atomic_int!(AtomicUsize, usize);
+model_atomic_int!(AtomicU64, u64);
+
+/// Instrumented `AtomicPtr` (generic, so not covered by the macros).
+pub struct AtomicPtr<T> {
+    inner: std::sync::atomic::AtomicPtr<T>,
+}
+
+impl<T> AtomicPtr<T> {
+    pub const fn new(p: *mut T) -> Self {
+        Self { inner: std::sync::atomic::AtomicPtr::new(p) }
+    }
+
+    pub fn load(&self, order: Ordering) -> *mut T {
+        sync_point();
+        self.inner.load(order)
+    }
+
+    pub fn store(&self, p: *mut T, order: Ordering) {
+        sync_point();
+        self.inner.store(p, order);
+    }
+
+    pub fn swap(&self, p: *mut T, order: Ordering) -> *mut T {
+        sync_point();
+        self.inner.swap(p, order)
+    }
+}
+
+impl<T> fmt::Debug for AtomicPtr<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instrumented Mutex.  Wraps a std mutex; inside a model, `lock` is a
+// scheduling point followed by a try-lock, blocking in the scheduler
+// (not the OS) on contention so the explorer sees the wait.
+// ---------------------------------------------------------------------------
+
+/// Drop-in replacement for `std::sync::Mutex` under `--cfg loom`.
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+}
+
+/// Guard for [`Mutex`]; releases the model waiters on drop.
+pub struct MutexGuard<'a, T> {
+    /// `Some((scheduler, mutex address))` when taken inside a model.
+    model: Option<(StdArc<Scheduler>, usize)>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(value: T) -> Self {
+        Mutex { inner: StdMutex::new(value) }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Mutex<T> as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match current() {
+            None => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { model: None, inner: Some(g) }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    model: None,
+                    inner: Some(p.into_inner()),
+                })),
+            },
+            Some((sched, me)) => loop {
+                sched.switch(me);
+                match self.inner.try_lock() {
+                    Ok(g) => {
+                        return Ok(MutexGuard {
+                            model: Some((sched.clone(), self.addr())),
+                            inner: Some(g),
+                        })
+                    }
+                    Err(TryLockError::WouldBlock) => sched.mutex_wait(me, self.addr()),
+                    Err(TryLockError::Poisoned(p)) => {
+                        return Err(PoisonError::new(MutexGuard {
+                            model: Some((sched.clone(), self.addr())),
+                            inner: Some(p.into_inner()),
+                        }))
+                    }
+                }
+            },
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.inner.try_lock() {
+            Ok(g) => f.debug_struct("Mutex").field("data", &&*g).finish(),
+            Err(_) => f.write_str("Mutex { <locked> }"),
+        }
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("model mutex guard already released")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("model mutex guard already released")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the std lock first so a woken waiter's try_lock can
+        // succeed, then surface the release to the scheduler.
+        drop(self.inner.take());
+        if let Some((sched, addr)) = self.model.take() {
+            sched.mutex_released(addr);
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for MutexGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        (**self).fmt(f)
+    }
+}

@@ -64,24 +64,100 @@ impl CountingAllocator {
     }
 }
 
+// SAFETY: every method forwards verbatim to `System`, which satisfies the
+// `GlobalAlloc` contract; the only extra work is bumping a const-initialized
+// thread-local `Cell`, which cannot allocate, unwind, or re-enter the
+// allocator.
 unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.with(|c| c.set(c.get() + 1));
-        System.alloc(layout)
+        // SAFETY: same contract as ours — the caller guarantees `layout`
+        // has non-zero size.
+        unsafe { System.alloc(layout) }
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.with(|c| c.set(c.get() + 1));
-        System.alloc_zeroed(layout)
+        // SAFETY: same contract as ours — the caller guarantees `layout`
+        // has non-zero size.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.with(|c| c.set(c.get() + 1));
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: same contract as ours — `ptr` came from this allocator
+        // (we forward all allocation paths to `System`) with `layout`, and
+        // `new_size` is non-zero.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         FREES.with(|c| c.set(c.get() + 1));
-        System.dealloc(ptr, layout)
+        // SAFETY: same contract as ours — `ptr` came from this allocator
+        // with `layout`.
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests drive the `GlobalAlloc` surface directly (the library
+    // never installs the allocator globally), so Miri checks the raw
+    // pointer handling in every method: provenance, layout round-trips,
+    // and the zeroing contract.
+    #[test]
+    fn raw_alloc_realloc_dealloc_round_trip() {
+        let a = CountingAllocator::new();
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        // SAFETY: `layout` is non-zero-sized; every pointer is written
+        // only within its allocated size and freed exactly once with the
+        // layout it was (re)allocated under.
+        unsafe {
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            std::ptr::write_bytes(p, 0xAB, 64);
+            let q = a.realloc(p, layout, 128);
+            assert!(!q.is_null());
+            assert_eq!(*q, 0xAB, "realloc preserves contents");
+            assert_eq!(*q.add(63), 0xAB);
+            a.dealloc(q, Layout::from_size_align(128, 8).unwrap());
+        }
+    }
+
+    #[test]
+    fn alloc_zeroed_really_zeroes() {
+        let a = CountingAllocator::new();
+        let n = if cfg!(miri) { 32 } else { 4096 };
+        let layout = Layout::from_size_align(n, 16).unwrap();
+        // SAFETY: non-zero-sized layout; the buffer is only read within
+        // its size and freed once with the same layout.
+        unsafe {
+            let p = a.alloc_zeroed(layout);
+            assert!(!p.is_null());
+            for i in 0..n {
+                assert_eq!(*p.add(i), 0, "byte {i} not zeroed");
+            }
+            a.dealloc(p, layout);
+        }
+    }
+
+    #[test]
+    fn counters_track_this_thread_and_reset() {
+        let a = CountingAllocator::new();
+        CountingAllocator::reset();
+        let layout = Layout::from_size_align(8, 8).unwrap();
+        // SAFETY: non-zero-sized layout, freed exactly once.
+        unsafe {
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            a.dealloc(p, layout);
+        }
+        assert_eq!(CountingAllocator::allocations(), 1);
+        assert_eq!(CountingAllocator::frees(), 1);
+        CountingAllocator::reset();
+        assert_eq!(CountingAllocator::allocations(), 0);
+        assert_eq!(CountingAllocator::frees(), 0);
     }
 }

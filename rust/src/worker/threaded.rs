@@ -24,8 +24,8 @@
 //! (`rust/tests/runtime_equivalence.rs`) pins the engine/core agreement
 //! bit-for-bit and the tests below pin the conservation invariants here.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Barrier};
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, Barrier};
 
 use crate::error::{Error, Result};
 use crate::gossip::{CodecSpec, Message, MessageQueue, ProtocolCore, TopologySpec};
@@ -161,7 +161,7 @@ impl ThreadedGossip {
         type WorkerOut = (FlatVec, ProtocolCore, Vec<(u64, f64)>);
 
         let t0 = std::time::Instant::now();
-        let outs: Vec<WorkerOut> = std::thread::scope(|scope| -> Result<Vec<WorkerOut>> {
+        let outs: Vec<WorkerOut> = crate::sync::thread::scope(|scope| -> Result<Vec<WorkerOut>> {
             let mut handles = Vec::new();
             for w in 0..m {
                 let queues = queues.clone();
