@@ -1,0 +1,134 @@
+//! Bench: wire-stack throughput for the networked runtime.
+//!
+//! Three layers, bottom up, so a regression pinpoints itself:
+//!
+//! 1. `frame_roundtrip_*` — message body encode → frame (CRC) → chunked
+//!    reassembly → body decode, per codec.  This is the pure
+//!    serialization tax every networked gossip message pays.
+//! 2. `transport_*` — one message through the full connection layer
+//!    (outbox → flush → pipe → reader → decode → ack) against the same
+//!    message through the in-process `MessageQueue` the threaded runtime
+//!    uses.  The delta is the cost of crash-safe delivery accounting.
+//! 3. `lockstep_loopback_*` — end-to-end `NetGossip::run_lockstep`
+//!    steps/sec, the number the loopback-equivalence suite executes.
+//!
+//! Run with `cargo bench --bench net_throughput`; set `BENCH_CSV` or
+//! `BENCH_JSON` for machine-readable output (CI uploads the JSON as
+//! `BENCH_net.json` to accumulate the perf trajectory).
+
+use gosgd::bench::Bencher;
+use gosgd::gossip::{CodecSpec, Message, MessageQueue, ProtocolCore, TopologySpec};
+use gosgd::net::{ConnManager, FrameKind, FrameReader, LoopbackPipe};
+use gosgd::strategies::grad::{GradSource, QuadraticSource};
+use gosgd::tensor::FlatVec;
+use gosgd::util::rng::Rng;
+use gosgd::worker::NetGossip;
+
+const DIM: usize = 4096;
+
+/// One real emitted message at the bench dimension.
+fn sample_message(codec: CodecSpec) -> Message {
+    let mut core = ProtocolCore::new(0, 4, DIM, 1.0, TopologySpec::UniformRandom, 1)
+        .unwrap()
+        .with_codec(codec);
+    let mut x = FlatVec::zeros(DIM);
+    Rng::new(0xBE7).fill_normal(x.as_mut_slice(), 1.0);
+    core.emit_to(&x, 1).unwrap().into_message(0, 7)
+}
+
+fn main() {
+    let mut b = Bencher::new("net_throughput");
+
+    // Layer 1: the serialization tax, bytes/sec per codec.
+    let codecs = [
+        ("dense", CodecSpec::Dense),
+        ("top256", CodecSpec::TopK { k: 256 }),
+        ("q8", CodecSpec::QuantizeU8),
+    ];
+    for (label, codec) in codecs {
+        let msg = sample_message(codec);
+        let wire = gosgd::net::frame::frame_bytes(FrameKind::Gossip, 0, &msg.to_wire_body());
+        let mut frame_buf = Vec::with_capacity(wire.len());
+        let mut reader = FrameReader::new();
+        b.bench_bytes(&format!("frame_roundtrip_{label}"), wire.len() as u64, || {
+            frame_buf.clear();
+            gosgd::net::frame::encode_frame(
+                &mut frame_buf,
+                FrameKind::Gossip,
+                0,
+                &msg.to_wire_body(),
+            );
+            reader.feed(&frame_buf);
+            let frame = reader.try_next().unwrap().expect("one frame per feed");
+            let back = Message::decode_body(&frame.body).unwrap();
+            std::hint::black_box(back.payload.coord_count());
+        });
+    }
+
+    // Layer 2: one message through each transport, ns/message.
+    let msg = sample_message(CodecSpec::Dense);
+
+    let queue = MessageQueue::unbounded();
+    let mut scratch = Vec::new();
+    let queue_ns = b
+        .bench_elems("transport_queue", 1, || {
+            queue.push(msg.clone());
+            scratch.clear();
+            queue.drain_into(&mut scratch);
+            std::hint::black_box(scratch.len());
+        })
+        .mean_ns;
+
+    let mut cm = ConnManager::new(2, 64);
+    let pipe = LoopbackPipe::new();
+    let mut reader = FrameReader::new();
+    let mut chunk = Vec::new();
+    let framed_ns = b
+        .bench_elems("transport_framed", 1, || {
+            cm.enqueue(1, msg.clone());
+            cm.flush(1, 0, &pipe);
+            loop {
+                chunk.clear();
+                if pipe.read_into(&mut chunk, 64 * 1024) == 0 {
+                    break;
+                }
+                reader.feed(&chunk);
+            }
+            let frame = reader.try_next().unwrap().expect("one frame per flush");
+            pipe.ack((gosgd::net::FRAME_HEADER_BYTES + frame.body.len()) as u64);
+            cm.prune_acked(1, &pipe);
+            let back = Message::decode_body(&frame.body).unwrap();
+            std::hint::black_box(back.weight.value());
+        })
+        .mean_ns;
+    println!("\ncrash-safe transport vs raw queue: {:.2}x ns/message", framed_ns / queue_ns);
+
+    // Layer 3: end-to-end lockstep loopback fleets, worker-steps/sec.
+    for (label, codec) in [("dense", CodecSpec::Dense), ("q8", CodecSpec::QuantizeU8)] {
+        let node = NetGossip {
+            workers: 4,
+            p: 0.5,
+            steps_per_worker: 50,
+            eta: 0.2,
+            weight_decay: 0.0,
+            seed: 0x909,
+            topology: TopologySpec::UniformRandom,
+            shards: 4,
+            codec,
+            ..NetGossip::default()
+        };
+        let init = FlatVec::zeros(256);
+        let elems = node.workers as u64 * node.steps_per_worker;
+        b.bench_elems(&format!("lockstep_loopback_{label}"), elems, || {
+            let report = node
+                .run_lockstep(&init, |_| {
+                    Ok(Box::new(QuadraticSource::new(256, 0.1, 0x33)) as Box<dyn GradSource>)
+                })
+                .unwrap();
+            assert!(report.messages > 0, "lockstep run gossiped nothing");
+            std::hint::black_box(report.trace_hash);
+        });
+    }
+
+    b.finish();
+}

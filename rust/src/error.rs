@@ -29,6 +29,13 @@ pub enum Error {
     Worker(String),
     /// CLI usage error.
     Cli(String),
+    /// Networked-runtime error: malformed wire bytes, a failed join
+    /// handshake, or socket-level I/O wrapped with peer context.  The
+    /// finer-grained typed forms live with their layers
+    /// ([`crate::gossip::message::WireError`] for message bodies,
+    /// [`crate::net::FrameError`] for the frame codec) and convert into
+    /// this variant at the runtime boundary.
+    Net(String),
 }
 
 impl fmt::Display for Error {
@@ -43,6 +50,7 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Worker(m) => write!(f, "worker error: {m}"),
             Error::Cli(m) => write!(f, "cli error: {m}"),
+            Error::Net(m) => write!(f, "net error: {m}"),
         }
     }
 }
@@ -90,6 +98,9 @@ impl Error {
     }
     pub fn cli(msg: impl Into<String>) -> Self {
         Error::Cli(msg.into())
+    }
+    pub fn net(msg: impl Into<String>) -> Self {
+        Error::Net(msg.into())
     }
 }
 

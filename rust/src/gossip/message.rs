@@ -28,6 +28,7 @@ use crate::gossip::codec::EncodedPayload;
 use crate::gossip::shard::Shard;
 use crate::gossip::weights::SumWeight;
 use crate::tensor::FlatVec;
+use std::fmt;
 
 /// One gossip message from `sender` (paper Algorithm 4, `PushMessage`).
 #[derive(Clone, Debug)]
@@ -119,6 +120,384 @@ pub fn wire_bytes_for(payload_len: usize, sharded: bool) -> usize {
 pub fn encoded_wire_bytes(payload: &EncodedPayload, sharded: bool) -> usize {
     let shard_header = if sharded { 8 } else { 0 };
     payload.payload_wire_bytes() + 8 + 16 + shard_header
+}
+
+// ---------------------------------------------------------------------------
+// The wire form: a message as actual bytes.
+//
+// Until the networked runtime, messages only ever moved by Rust move —
+// the "wire" was an accounting model.  The socket runtime
+// (`crate::net`) needs real bytes, and bytes that arrive from a socket
+// are *untrusted*: every constructor panic in this module
+// (`Message::for_shard`'s length assert, `SumWeight::from_value`'s
+// positivity assert, `ShardPlan`'s geometry asserts) would become a
+// remote crash.  The decode path below therefore validates everything
+// and returns a typed [`WireError`] — it never panics, for any input
+// byte string (pinned by the fuzz loop in `rust/tests/wire_framing.rs`).
+//
+// Layout of a message *body* (the frame codec in `crate::net::frame`
+// wraps this in a versioned header with magic, epoch and CRC), all
+// little-endian:
+//
+// ```text
+// sender      u32    worker id of the sender
+// step        u64    sender's local step at send time
+// weight      f64    shipped (halved) shard sum weight
+// shard       u32 ×4 index, num_shards, offset, len
+// codec tag   u8     0 = dense, 1 = top-k, 2 = q8
+// payload     ...    tag-dependent body (see EncodedPayload::encode_wire)
+// ```
+// ---------------------------------------------------------------------------
+
+/// Codec tags on the wire (one byte after the shard descriptor).
+const TAG_DENSE: u8 = 0;
+const TAG_TOPK: u8 = 1;
+const TAG_QUANT_U8: u8 = 2;
+
+/// Largest admissible coordinate count in one payload.  Real shards are
+/// far smaller; the bound exists so a hostile length field cannot ask
+/// the decoder for an absurd allocation (allocation is additionally
+/// capped by the actual bytes present — counts are checked against the
+/// remaining buffer before anything is reserved).
+pub const MAX_WIRE_COORDS: usize = 1 << 28;
+
+/// Typed decode/encode failure for untrusted message bytes.
+///
+/// Every variant names what the decoder rejected; none of them panic.
+/// Frame-level failures (bad magic, version, CRC) live one layer down in
+/// [`crate::net::FrameError`] and wrap this type for body errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before the field could be read.
+    Truncated { field: &'static str, needed: usize, have: usize },
+    /// Unknown codec tag byte.
+    BadCodecTag(u8),
+    /// The shipped weight is not a positive finite number ≤ 1 (the fleet
+    /// total is 1, so no single message can carry more).
+    BadWeight(u64),
+    /// Inconsistent shard descriptor (zero shard count, index out of
+    /// range, offset overflow, payload length mismatch, ...).
+    BadShard(String),
+    /// Malformed top-k body: `k > len`, an index out of range, or
+    /// indices not strictly ascending.
+    BadTopK(String),
+    /// Malformed q8 body: non-finite or negative quantization range.
+    BadQuant(String),
+    /// A length field exceeds [`MAX_WIRE_COORDS`].
+    Oversize { field: &'static str, got: u64 },
+    /// Bytes left over after a complete message body.
+    TrailingBytes(usize),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { field, needed, have } => {
+                write!(f, "truncated wire body: {field} needs {needed} bytes, have {have}")
+            }
+            WireError::BadCodecTag(tag) => write!(f, "unknown codec tag {tag:#04x}"),
+            WireError::BadWeight(bits) => {
+                let w = f64::from_bits(*bits);
+                write!(f, "bad gossip weight on the wire: {w} (bits {bits:#018x})")
+            }
+            WireError::BadShard(m) => write!(f, "bad shard descriptor: {m}"),
+            WireError::BadTopK(m) => write!(f, "bad top-k payload: {m}"),
+            WireError::BadQuant(m) => write!(f, "bad q8 payload: {m}"),
+            WireError::Oversize { field, got } => {
+                write!(f, "wire length field {field} = {got} exceeds the admissible maximum")
+            }
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message body"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<WireError> for crate::error::Error {
+    fn from(e: WireError) -> Self {
+        crate::error::Error::net(e.to_string())
+    }
+}
+
+/// Little-endian byte writers (hand-rolled; the crate carries no serde).
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over an untrusted byte slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cursor { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, field: &'static str) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { field, needed: n, have: self.remaining() });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, field: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, field)?[0])
+    }
+
+    fn u32(&mut self, field: &'static str) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4, field)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self, field: &'static str) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8, field)?.try_into().expect("8-byte slice")))
+    }
+
+    fn f32(&mut self, field: &'static str) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4, field)?.try_into().expect("4-byte slice")))
+    }
+
+    fn f64(&mut self, field: &'static str) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8, field)?.try_into().expect("8-byte slice")))
+    }
+
+    /// A count field that sizes a following array: bounded by
+    /// [`MAX_WIRE_COORDS`] *and* by the bytes actually present
+    /// (`elem_bytes` per element), so no length field can force an
+    /// allocation larger than the buffer that arrived.
+    fn count(&mut self, field: &'static str, elem_bytes: usize) -> Result<usize, WireError> {
+        let n = self.u32(field)? as u64;
+        if n > MAX_WIRE_COORDS as u64 {
+            return Err(WireError::Oversize { field, got: n });
+        }
+        let n = n as usize;
+        let needed = n.saturating_mul(elem_bytes);
+        if self.remaining() < needed {
+            return Err(WireError::Truncated { field, needed, have: self.remaining() });
+        }
+        Ok(n)
+    }
+}
+
+impl EncodedPayload {
+    /// Serialize the payload body (codec tag + tag-dependent bytes).
+    /// Bit-exact: every `f32`/`u8` travels as its exact bit pattern, so
+    /// encode → decode is the identity on all three variants — including
+    /// non-finite dense bodies (the q8 codec legitimately degrades to
+    /// dense on non-finite input).
+    pub fn encode_wire(&self, out: &mut Vec<u8>) {
+        match self {
+            EncodedPayload::Dense(v) => {
+                out.push(TAG_DENSE);
+                put_u32(out, v.len() as u32);
+                for &x in v.as_slice() {
+                    put_f32(out, x);
+                }
+            }
+            EncodedPayload::TopK { len, indices, values } => {
+                out.push(TAG_TOPK);
+                put_u32(out, *len as u32);
+                put_u32(out, indices.len() as u32);
+                for &i in indices.as_slice() {
+                    put_u32(out, i);
+                }
+                for &x in values.as_slice() {
+                    put_f32(out, x);
+                }
+            }
+            EncodedPayload::QuantU8 { min, step, codes } => {
+                out.push(TAG_QUANT_U8);
+                put_u32(out, codes.len() as u32);
+                put_f32(out, *min);
+                put_f32(out, *step);
+                out.extend_from_slice(codes.as_slice());
+            }
+        }
+    }
+
+    /// Decode one payload from untrusted bytes, returning the payload and
+    /// the number of bytes consumed.  Validates everything the in-memory
+    /// constructors assert: top-k indices strictly ascending and in
+    /// range, `k ≤ len`, q8 range fields finite and non-negative.
+    pub fn decode_wire(bytes: &[u8]) -> Result<(EncodedPayload, usize), WireError> {
+        let mut cur = Cursor::new(bytes);
+        let payload = decode_payload(&mut cur)?;
+        Ok((payload, cur.pos))
+    }
+}
+
+fn decode_payload(cur: &mut Cursor<'_>) -> Result<EncodedPayload, WireError> {
+    use crate::tensor::PoolVec;
+    match cur.u8("codec tag")? {
+        TAG_DENSE => {
+            let n = cur.count("dense count", 4)?;
+            let raw = cur.take(4 * n, "dense values")?;
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(f32::from_le_bytes(raw[4 * i..4 * i + 4].try_into().expect("4 bytes")));
+            }
+            Ok(EncodedPayload::Dense(FlatVec::from_vec(v)))
+        }
+        TAG_TOPK => {
+            let len = cur.count("top-k len", 0)?;
+            // The semantic `k ≤ len` check comes before the
+            // bytes-available check so a hostile k yields `BadTopK`, not
+            // a misleading truncation report.
+            let k_raw = cur.u32("top-k k")? as u64;
+            if k_raw > len as u64 {
+                return Err(WireError::BadTopK(format!("k {k_raw} > shard len {len}")));
+            }
+            let k = k_raw as usize;
+            let raw_idx = cur.take(4 * k, "top-k indices")?;
+            let mut indices = Vec::with_capacity(k);
+            let mut prev: Option<u32> = None;
+            for i in 0..k {
+                let idx =
+                    u32::from_le_bytes(raw_idx[4 * i..4 * i + 4].try_into().expect("4 bytes"));
+                if idx as usize >= len {
+                    return Err(WireError::BadTopK(format!("index {idx} >= shard len {len}")));
+                }
+                if let Some(p) = prev {
+                    if idx <= p {
+                        return Err(WireError::BadTopK(format!(
+                            "indices not strictly ascending ({p} then {idx})"
+                        )));
+                    }
+                }
+                prev = Some(idx);
+                indices.push(idx);
+            }
+            let raw_val = cur.take(4 * k, "top-k values")?;
+            let mut values = Vec::with_capacity(k);
+            for i in 0..k {
+                let raw: [u8; 4] = raw_val[4 * i..4 * i + 4].try_into().expect("4 bytes");
+                values.push(f32::from_le_bytes(raw));
+            }
+            Ok(EncodedPayload::TopK {
+                len,
+                indices: PoolVec::from_vec(indices),
+                values: PoolVec::from_vec(values),
+            })
+        }
+        TAG_QUANT_U8 => {
+            let n = cur.count("q8 count", 1)?;
+            let min = cur.f32("q8 min")?;
+            let step = cur.f32("q8 step")?;
+            if !min.is_finite() || !step.is_finite() {
+                return Err(WireError::BadQuant(format!(
+                    "non-finite range (min {min}, step {step})"
+                )));
+            }
+            if step < 0.0 {
+                return Err(WireError::BadQuant(format!("negative step {step}")));
+            }
+            let codes = cur.take(n, "q8 codes")?.to_vec();
+            Ok(EncodedPayload::QuantU8 { min, step, codes: PoolVec::from_vec(codes) })
+        }
+        tag => Err(WireError::BadCodecTag(tag)),
+    }
+}
+
+impl Message {
+    /// Serialize the full message body (everything except the frame
+    /// header — see the module-level layout comment).
+    pub fn encode_body(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.sender as u32);
+        put_u64(out, self.sent_at_step);
+        put_f64(out, self.weight.value());
+        put_u32(out, self.shard.index as u32);
+        put_u32(out, self.shard.num_shards as u32);
+        put_u32(out, self.shard.offset as u32);
+        put_u32(out, self.shard.len as u32);
+        self.payload.encode_wire(out);
+    }
+
+    /// The serialized body as a fresh buffer.
+    pub fn to_wire_body(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(33 + self.payload.payload_wire_bytes());
+        self.encode_body(&mut out);
+        out
+    }
+
+    /// Decode one message body from untrusted bytes.
+    ///
+    /// This is the panic-free mirror of the trusting in-memory
+    /// constructors: the weight is range-checked before
+    /// [`SumWeight::from_value`] (whose assert would otherwise be
+    /// remotely reachable), the shard descriptor is checked for internal
+    /// consistency before [`Message::for_shard`]'s length assert could
+    /// fire, and the payload is validated by
+    /// [`EncodedPayload::decode_wire`].  The receiving core still
+    /// re-validates geometry against its *local* shard plan in
+    /// [`ProtocolCore::absorb`](crate::gossip::ProtocolCore::absorb) —
+    /// this layer only guarantees the bytes describe *a* well-formed
+    /// message.
+    pub fn decode_body(bytes: &[u8]) -> Result<Message, WireError> {
+        let mut cur = Cursor::new(bytes);
+        let sender = cur.u32("sender")? as usize;
+        let sent_at_step = cur.u64("step")?;
+        let weight = cur.f64("weight")?;
+        if !weight.is_finite() || weight <= 0.0 || weight > 1.0 + 1e-6 {
+            // The fleet's total mass is exactly 1, so no single message
+            // can legitimately carry more (small slack for f64 dust).
+            return Err(WireError::BadWeight(weight.to_bits()));
+        }
+        let index = cur.u32("shard index")? as usize;
+        let num_shards = cur.u32("shard count")? as usize;
+        let offset = cur.u32("shard offset")? as usize;
+        let len = cur.u32("shard len")? as usize;
+        if num_shards == 0 {
+            return Err(WireError::BadShard("zero shard count".into()));
+        }
+        if index >= num_shards {
+            return Err(WireError::BadShard(format!("index {index} >= count {num_shards}")));
+        }
+        if num_shards == 1 && (index != 0 || offset != 0) {
+            return Err(WireError::BadShard(format!(
+                "full-vector message with index {index} / offset {offset}"
+            )));
+        }
+        match offset.checked_add(len) {
+            Some(end) if len <= MAX_WIRE_COORDS && end <= MAX_WIRE_COORDS => {}
+            _ => {
+                return Err(WireError::BadShard(format!("range {offset}+{len} out of bounds")));
+            }
+        }
+        let payload = decode_payload(&mut cur)?;
+        if payload.coord_count() != len {
+            return Err(WireError::BadShard(format!(
+                "payload covers {} coordinates vs descriptor len {len}",
+                payload.coord_count()
+            )));
+        }
+        if cur.remaining() != 0 {
+            return Err(WireError::TrailingBytes(cur.remaining()));
+        }
+        let shard = Shard { index, num_shards, offset, len };
+        Ok(Message {
+            payload,
+            weight: SumWeight::from_value(weight),
+            sender,
+            sent_at_step,
+            shard,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -220,5 +599,215 @@ mod tests {
         assert_eq!(pool.stats().recycled, 1);
         let next = FlatVec::pooled(&pool, 4096);
         assert_eq!(next.as_slice().as_ptr(), ptr, "payload storage reused");
+    }
+
+    // -- wire form ---------------------------------------------------------
+
+    fn wire_msg() -> Message {
+        let plan = ShardPlan::new(32, 4);
+        let shard = plan.shard(2);
+        Message::for_shard(
+            EncodedPayload::Dense(FlatVec::from_vec((0..8).map(|i| i as f32 * 0.25).collect())),
+            SumWeight::from_value(0.125),
+            5,
+            77,
+            shard,
+        )
+    }
+
+    fn f32_bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.iter().map(|v| v.to_bits()).eq(b.iter().map(|v| v.to_bits()))
+    }
+
+    fn payload_eq(a: &EncodedPayload, b: &EncodedPayload) -> bool {
+        match (a, b) {
+            (EncodedPayload::Dense(x), EncodedPayload::Dense(y)) => {
+                f32_bits_eq(x.as_slice(), y.as_slice())
+            }
+            (
+                EncodedPayload::TopK { len: la, indices: ia, values: va },
+                EncodedPayload::TopK { len: lb, indices: ib, values: vb },
+            ) => {
+                la == lb
+                    && ia.as_slice() == ib.as_slice()
+                    && f32_bits_eq(va.as_slice(), vb.as_slice())
+            }
+            (
+                EncodedPayload::QuantU8 { min: ma, step: sa, codes: ca },
+                EncodedPayload::QuantU8 { min: mb, step: sb, codes: cb },
+            ) => {
+                ma.to_bits() == mb.to_bits()
+                    && sa.to_bits() == sb.to_bits()
+                    && ca.as_slice() == cb.as_slice()
+            }
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn body_round_trips_bit_exactly() {
+        let m = wire_msg();
+        let bytes = m.to_wire_body();
+        let back = Message::decode_body(&bytes).expect("round trip");
+        assert_eq!(back.sender, m.sender);
+        assert_eq!(back.sent_at_step, m.sent_at_step);
+        assert_eq!(back.weight.value().to_bits(), m.weight.value().to_bits());
+        assert_eq!(back.shard, m.shard);
+        assert!(payload_eq(&back.payload, &m.payload));
+    }
+
+    #[test]
+    fn decode_rejects_truncation_at_every_length() {
+        let bytes = wire_msg().to_wire_body();
+        for cut in 0..bytes.len() {
+            let err = Message::decode_body(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, WireError::Truncated { .. }),
+                "cut at {cut}: got {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_trailing_bytes() {
+        let mut bytes = wire_msg().to_wire_body();
+        bytes.push(0);
+        assert!(matches!(
+            Message::decode_body(&bytes),
+            Err(WireError::TrailingBytes(1))
+        ));
+    }
+
+    #[test]
+    fn decode_rejects_bad_weights() {
+        // Weight lives at byte offset 12 (after sender u32 + step u64).
+        let template = wire_msg().to_wire_body();
+        for bad in [0.0f64, -0.5, 2.0, f64::NAN, f64::INFINITY] {
+            let mut bytes = template.clone();
+            bytes[12..20].copy_from_slice(&bad.to_le_bytes());
+            assert!(
+                matches!(Message::decode_body(&bytes), Err(WireError::BadWeight(_))),
+                "weight {bad} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_shard_descriptors() {
+        // Shard descriptor: index@20, num_shards@24, offset@28, len@32.
+        let template = wire_msg().to_wire_body();
+        let cases: [(usize, u32, &str); 4] = [
+            (24, 0, "zero shard count"),
+            (24, 2, "index >= count"),
+            (32, 9, "len != payload coords"),
+            (28, u32::MAX, "offset overflow range"),
+        ];
+        for (off, val, why) in cases {
+            let mut bytes = template.clone();
+            bytes[off..off + 4].copy_from_slice(&val.to_le_bytes());
+            assert!(
+                matches!(Message::decode_body(&bytes), Err(WireError::BadShard(_))),
+                "{why} accepted"
+            );
+        }
+        // num_shards == 1 with a nonzero index/offset is also malformed.
+        let mut bytes = template.clone();
+        bytes[24..28].copy_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(Message::decode_body(&bytes), Err(WireError::BadShard(_))));
+    }
+
+    #[test]
+    fn decode_rejects_unknown_codec_tag() {
+        let mut bytes = wire_msg().to_wire_body();
+        bytes[36] = 0xfe; // codec tag sits after the 36-byte fixed header
+        assert!(matches!(
+            Message::decode_body(&bytes),
+            Err(WireError::BadCodecTag(0xfe))
+        ));
+    }
+
+    #[test]
+    fn decode_rejects_malformed_topk() {
+        let plan = ShardPlan::new(32, 4);
+        let shard = plan.shard(0);
+        let mut residual = vec![0.0f32; shard.len];
+        let coords = FlatVec::from_vec((0..8).map(|i| i as f32 - 3.0).collect());
+        let m = Message::for_shard(
+            TopK { k: 3 }.encode(coords, &mut residual),
+            SumWeight::from_value(0.25),
+            0,
+            0,
+            shard,
+        );
+        let template = m.to_wire_body();
+        let tag_at = 36;
+        assert_eq!(template[tag_at], 1, "top-k tag");
+        // k > len.
+        let mut bytes = template.clone();
+        bytes[tag_at + 5..tag_at + 9].copy_from_slice(&100u32.to_le_bytes());
+        assert!(matches!(Message::decode_body(&bytes), Err(WireError::BadTopK(_))));
+        // First index out of range.
+        let mut bytes = template.clone();
+        bytes[tag_at + 9..tag_at + 13].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(matches!(Message::decode_body(&bytes), Err(WireError::BadTopK(_))));
+        // Duplicate (non-ascending) indices.
+        let mut bytes = template.clone();
+        let first = bytes[tag_at + 9..tag_at + 13].to_vec();
+        bytes[tag_at + 13..tag_at + 17].copy_from_slice(&first);
+        assert!(matches!(Message::decode_body(&bytes), Err(WireError::BadTopK(_))));
+    }
+
+    #[test]
+    fn decode_rejects_malformed_quant_ranges() {
+        let plan = ShardPlan::new(32, 4);
+        let shard = plan.shard(0);
+        let m = Message::for_shard(
+            QuantizeU8.encode(FlatVec::from_vec((0..8).map(|i| i as f32).collect()), &mut []),
+            SumWeight::from_value(0.25),
+            0,
+            0,
+            shard,
+        );
+        let template = m.to_wire_body();
+        let tag_at = 36;
+        assert_eq!(template[tag_at], 2, "q8 tag");
+        // min @ tag+5, step @ tag+9 (after tag byte + count u32).
+        let cases = [(tag_at + 5, f32::NAN), (tag_at + 9, f32::INFINITY), (tag_at + 9, -1.0f32)];
+        for (off, bad) in cases {
+            let mut bytes = template.clone();
+            bytes[off..off + 4].copy_from_slice(&bad.to_le_bytes());
+            assert!(
+                matches!(Message::decode_body(&bytes), Err(WireError::BadQuant(_))),
+                "q8 range {bad} at {off} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_oversize_length_fields() {
+        // A dense count beyond MAX_WIRE_COORDS must be refused even if
+        // the buffer could never actually hold that many values.
+        let mut bytes = wire_msg().to_wire_body();
+        let tag_at = 36;
+        bytes[tag_at + 1..tag_at + 5]
+            .copy_from_slice(&(MAX_WIRE_COORDS as u32 + 1).to_le_bytes());
+        assert!(matches!(
+            Message::decode_body(&bytes),
+            Err(WireError::Oversize { .. })
+        ));
+    }
+
+    #[test]
+    fn dense_nan_payloads_travel_bit_exactly() {
+        // The q8 codec legitimately falls back to dense on non-finite
+        // input, so the dense wire path must carry NaN/Inf unmangled.
+        let m = Message::dense(
+            FlatVec::from_vec(vec![f32::NAN, f32::INFINITY, -0.0]),
+            SumWeight::from_value(0.5),
+            1,
+            2,
+        );
+        let back = Message::decode_body(&m.to_wire_body()).expect("round trip");
+        assert!(payload_eq(&back.payload, &m.payload));
     }
 }

@@ -46,7 +46,7 @@ pub mod topology;
 pub mod weights;
 
 pub use codec::{Codec, CodecRef, CodecSpec, EncodedPayload};
-pub use message::{encoded_wire_bytes, wire_bytes_for, Message};
+pub use message::{encoded_wire_bytes, wire_bytes_for, Message, WireError};
 pub use peer::PeerSelector;
 pub use protocol::{AliveSet, CowModel, Outbound, ProtocolCore};
 pub use queue::MessageQueue;

@@ -63,6 +63,7 @@ pub mod harness;
 pub mod lint;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod optim;
 pub mod runtime;
 pub mod sim;

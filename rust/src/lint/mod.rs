@@ -16,6 +16,13 @@
 //!    determinism-critical paths.  Clocks come from the DES, randomness
 //!    from [`crate::util::rng`].
 //!
+//! 4. **Socket isolation** (`net-isolation`): no `std::net` outside
+//!    `rust/src/net/`.  The loopback and TCP transports are bit-identical
+//!    only because they share every byte of protocol code; a stray socket
+//!    in another layer would fork the code path the equivalence suite
+//!    pins.  Sockets live in `net::runtime`, everything else talks
+//!    frames and pipes.
+//!
 //! Plus one safety discipline everywhere (`safety-comment`): every
 //! `unsafe` block and `unsafe impl` carries a `// SAFETY:` comment within
 //! the four lines above it (the compiler checks `unsafe` is *declared*,
@@ -72,8 +79,10 @@ const SYNC_RULE: &str = "sync-shim";
 const HASH_RULE: &str = "hash-order";
 const TIME_RULE: &str = "sim-time";
 const SAFETY_RULE: &str = "safety-comment";
+const NET_RULE: &str = "net-isolation";
 
 const SYNC_PATTERNS: [&str; 3] = ["std::sync::atomic", "core::sync::atomic", "std::thread"];
+const NET_PATTERNS: [&str; 1] = ["std::net"];
 const HASH_PATTERNS: [&str; 2] = ["HashMap", "HashSet"];
 const TIME_PATTERNS: [&str; 5] =
     ["Instant", "SystemTime", "std::time::", "rand::", "thread_rng"];
@@ -345,6 +354,25 @@ pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
         }
     }
 
+    let in_net = rel.contains("src/net/");
+    if !in_net {
+        for pat in NET_PATTERNS {
+            for at in find_pattern(&masked, pat) {
+                push(
+                    &mut findings,
+                    &mut seen,
+                    line_of(&masked, at),
+                    NET_RULE,
+                    format!(
+                        "`{pat}` outside rust/src/net/: sockets live behind the frame \
+                         codec in net::runtime so the loopback and TCP transports share \
+                         every byte of protocol code"
+                    ),
+                );
+            }
+        }
+    }
+
     if DETERMINISM_DIRS.iter().any(|d| rel.contains(d)) {
         for pat in HASH_PATTERNS {
             for at in find_pattern(&masked, pat) {
@@ -486,6 +514,21 @@ mod tests {
         assert_eq!(rules("rust/src/gossip/t.rs", "use std::time::SystemTime;\n"), ["sim-time"]);
         // Word boundaries: `Instantiate` is not `Instant`.
         assert!(rules("rust/src/sim/doc.rs", "fn instantiate_Instantiate() {}\n").is_empty());
+    }
+
+    #[test]
+    fn flags_raw_sockets_outside_the_net_module() {
+        let bad = "use std::net::TcpStream;\nfn f() { let _ = std::net::TcpListener::bind(\"x\"); }\n";
+        let found = lint_source("rust/src/worker/foo.rs", bad);
+        assert_eq!(found.len(), 2, "{found:?}");
+        assert_eq!(found[0].rule, "net-isolation");
+        assert_eq!(found[0].line, 1);
+        assert_eq!(found[1].line, 2);
+        // The net module is the one allowed home.
+        assert!(lint_source("rust/src/net/runtime.rs", bad).is_empty());
+        // Mentions in comments and strings are fine anywhere.
+        let ok = "// std::net stays in net::runtime\nconst S: &str = \"std::net::TcpStream\";\n";
+        assert!(rules("rust/src/worker/foo.rs", ok).is_empty());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! * `figure`    — regenerate Fig. 1 / 2 / 3 series.
 //! * `variance`  — Appendix A variance-scaling measurement.
 //! * `inspect`   — print an artifact manifest.
+//! * `net`       — one multi-process gossip worker (seed or joiner).
 //!
 //! Examples:
 //!
@@ -15,6 +16,8 @@
 //! gosgd consensus --out results/fig4.csv
 //! gosgd figure --figure fig1 --model tiny --iterations 150
 //! gosgd inspect --model cnn
+//! gosgd net --listen 127.0.0.1:7000 --workers 2 --steps 200   # seed
+//! gosgd net --join 127.0.0.1:7000                             # joiner
 //! ```
 
 use gosgd::config::{RunConfig, StrategyKind};
@@ -48,10 +51,11 @@ fn run() -> Result<()> {
         "figure" => cmd_figure(rest),
         "variance" => cmd_variance(rest),
         "inspect" => cmd_inspect(rest),
+        "net" => cmd_net(rest),
         _ => {
             println!(
                 "gosgd — GoSGD distributed training (paper reproduction)\n\n\
-                 subcommands: train | consensus | figure | variance | inspect\n\
+                 subcommands: train | consensus | figure | variance | inspect | net\n\
                  use `gosgd <subcommand> --help` for options"
             );
             Ok(())
@@ -425,6 +429,71 @@ fn cmd_inspect(argv: Vec<String>) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `gosgd net` — run ONE process of a multi-process socket fleet.
+///
+/// The seed (`--listen`, no `--join`) owns worker 0, admits the joiners,
+/// and replays the run configuration to each through the join handshake,
+/// so only the seed's knobs matter; joiners need nothing but `--join`
+/// (plus `--listen` for their mesh port in fleets of three or more).
+/// After the run, the seed prints the fleet-wide mass audit line
+/// (`fleet mass 1.000000`) that the CI net lane greps for.
+///
+/// All socket work lives in `gosgd::net::runtime`; this function only
+/// shuttles strings — `gosgd-lint`'s net-isolation rule keeps `std::net`
+/// out of every other module, including this one.
+fn cmd_net(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("gosgd net", "one worker process of a socket gossip fleet")
+        .opt("listen", "", "address to listen on (seed port, or a joiner's mesh port)")
+        .opt("join", "", "seed address to dial (absent = this node seeds the fleet)")
+        .opt("workers", "2", "fleet size M (seed only; replayed to joiners)")
+        .opt("dim", "64", "parameter dimension")
+        .opt("p", "0.05", "per-step gossip probability")
+        .opt("steps", "200", "local SGD steps per worker")
+        .opt("lr", "0.1", "learning rate")
+        .opt("weight-decay", "0.0001", "weight decay")
+        .opt("seed", "0", "RNG seed")
+        .opt("topology", "uniform", "uniform | ring | hypercube | rotation | smallworld:Q")
+        .opt("shards", "1", "shard count for partial-vector gossip")
+        .opt("codec", "dense", "dense | q8 | top<K>")
+        .opt("sigma", "0.1", "gradient noise scale of the quadratic source")
+        .parse_from(argv)?;
+    let config = gosgd::net::FleetConfig {
+        workers: a.get_usize("workers")?,
+        dim: a.get_usize("dim")?,
+        p: a.get_f64("p")?,
+        steps_per_worker: a.get_u64("steps")?,
+        eta: a.get_f64("lr")? as f32,
+        weight_decay: a.get_f64("weight-decay")? as f32,
+        seed: a.get_u64("seed")?,
+        topology: TopologySpec::parse(a.get("topology")?)?,
+        shards: a.get_usize("shards")?,
+        codec: CodecSpec::parse(a.get("codec")?)?,
+    };
+    let node = gosgd::net::NetNodeConfig {
+        listen: a.get("listen")?.to_string(),
+        join: non_empty_string(a.get("join")?),
+        config,
+        sigma: a.get_f64("sigma")? as f32,
+    };
+    if node.join.is_none() && node.listen.is_empty() {
+        return Err(gosgd::Error::cli("a seed needs --listen; a joiner needs --join"));
+    }
+    let report = node.run()?;
+    println!(
+        "worker {} finished: {} messages, {} payload bytes",
+        report.id, report.messages, report.bytes
+    );
+    Ok(())
+}
+
+fn non_empty_string(s: &str) -> Option<String> {
+    if s.is_empty() {
+        None
+    } else {
+        Some(s.to_string())
+    }
 }
 
 fn parse_list(text: &str) -> Result<Vec<f64>> {

@@ -1,0 +1,435 @@
+//! Transport plumbing: loopback byte pipes and the per-peer outbox layer.
+//!
+//! Two jobs live here, both below the protocol and above raw sockets:
+//!
+//! * [`LoopbackPipe`] — an in-process unidirectional byte stream with the
+//!   failure modes of a real socket built in: arbitrary read chunking,
+//!   and a *sever* operation that cuts the stream at an exact byte
+//!   position (mid-frame, if the test wants) the way a crashed peer cuts
+//!   a TCP connection.  The loopback runtime and both test suites speak
+//!   frames over these pipes; the socket runtime speaks the same frames
+//!   over `TcpStream`s.
+//! * [`ConnManager`] — a sender's view of its connections: one bounded
+//!   outbox per peer (a [`MessageQueue`], so overflow *coalesces* — the
+//!   same backpressure-without-mass-loss policy every other runtime
+//!   uses), plus exactly-once delivery accounting.  A message is
+//!   **delivered** only when the receiver has acknowledged the stream
+//!   position past its frame's last byte; anything short of that on a
+//!   dead connection is **reclaimed** and reabsorbed by the sender, so a
+//!   crash can move mass back but never destroy it.  The receiver's half
+//!   of the contract is symmetric: a torn frame prefix in a
+//!   [`FrameReader`](crate::net::FrameReader) is discarded, never
+//!   partially absorbed.
+//!
+//! `Σ (worker mass) + Σ (acked-but-unprocessed) == 1` holds across every
+//! sever/reclaim interleaving — audited by `rust/tests/net_faults.rs`.
+
+use crate::gossip::{Message, MessageQueue};
+use crate::net::frame::{encode_frame, FrameKind};
+use crate::sync::Mutex;
+use std::collections::VecDeque;
+
+/// A unidirectional in-process byte stream with socket-shaped faults.
+///
+/// Positions are absolute stream offsets (bytes since the pipe opened),
+/// so sender-side bookkeeping survives buffer compaction.
+#[derive(Debug, Default)]
+pub struct LoopbackPipe {
+    inner: Mutex<PipeInner>,
+}
+
+#[derive(Debug, Default)]
+struct PipeInner {
+    /// Bytes written but not yet read, starting at stream offset `read`.
+    buf: VecDeque<u8>,
+    /// Total bytes ever written.
+    written: u64,
+    /// Total bytes the receiver has pulled out.
+    read: u64,
+    /// Stream position the receiver has *processed* through (frame
+    /// granularity — the receiver acks after absorbing each frame).
+    acked: u64,
+    /// If set, the stream is cut: reads stop at this position and writes
+    /// after it are discarded (the peer is gone).
+    cut: Option<u64>,
+}
+
+impl LoopbackPipe {
+    pub fn new() -> Self {
+        LoopbackPipe::default()
+    }
+
+    /// Append bytes; returns the absolute stream position after them.
+    /// Writes to a severed pipe are silently discarded past the cut,
+    /// like writes to a half-closed socket.
+    pub fn write(&self, bytes: &[u8]) -> u64 {
+        let mut g = self.inner.lock().expect("pipe poisoned");
+        let end = g.written + bytes.len() as u64;
+        match g.cut {
+            Some(cut) if g.written >= cut => {}
+            Some(cut) => {
+                let keep = (cut - g.written) as usize;
+                g.buf.extend(bytes[..keep.min(bytes.len())].iter().copied());
+            }
+            None => g.buf.extend(bytes.iter().copied()),
+        }
+        g.written = end;
+        end
+    }
+
+    /// Pull up to `max` bytes into `out`; returns how many arrived.
+    /// Never crosses a sever point.
+    pub fn read_into(&self, out: &mut Vec<u8>, max: usize) -> usize {
+        let mut g = self.inner.lock().expect("pipe poisoned");
+        let readable = match g.cut {
+            Some(cut) => (cut.saturating_sub(g.read) as usize).min(g.buf.len()),
+            None => g.buf.len(),
+        };
+        let n = readable.min(max);
+        for _ in 0..n {
+            out.push(g.buf.pop_front().expect("readable bytes"));
+        }
+        g.read += n as u64;
+        n
+    }
+
+    /// Receiver-side: mark `n` more stream bytes as fully processed
+    /// (called once per absorbed frame with that frame's total size).
+    pub fn ack(&self, n: u64) {
+        let mut g = self.inner.lock().expect("pipe poisoned");
+        g.acked += n;
+        debug_assert!(g.acked <= g.read, "acked past read position");
+    }
+
+    /// Stream position processed through (sender prunes against this).
+    pub fn acked(&self) -> u64 {
+        self.inner.lock().expect("pipe poisoned").acked
+    }
+
+    /// Total bytes ever written (next write starts here).
+    pub fn written(&self) -> u64 {
+        self.inner.lock().expect("pipe poisoned").written
+    }
+
+    /// Bytes currently readable without crossing a sever point.
+    pub fn readable(&self) -> usize {
+        let g = self.inner.lock().expect("pipe poisoned");
+        match g.cut {
+            Some(cut) => (cut.saturating_sub(g.read) as usize).min(g.buf.len()),
+            None => g.buf.len(),
+        }
+    }
+
+    /// Cut the stream at absolute position `pos`: bytes at or past `pos`
+    /// never reach the receiver.  Cutting mid-frame is the "peer died
+    /// while a frame was in flight" fault.  The earliest cut wins.
+    pub fn sever_at(&self, pos: u64) {
+        let mut g = self.inner.lock().expect("pipe poisoned");
+        let pos = match g.cut {
+            Some(old) => old.min(pos),
+            None => pos,
+        };
+        g.cut = Some(pos);
+        // Drop already-buffered bytes past the cut.
+        let keep = (pos.saturating_sub(g.read) as usize).min(g.buf.len());
+        g.buf.truncate(keep);
+    }
+
+    /// Cut at the current write position (everything already written may
+    /// still arrive; nothing new will).
+    pub fn sever_now(&self) -> u64 {
+        let pos = self.written();
+        self.sever_at(pos);
+        pos
+    }
+
+    pub fn is_severed(&self) -> bool {
+        self.inner.lock().expect("pipe poisoned").cut.is_some()
+    }
+
+    /// Reopen for a rejoined peer: clears the cut and discards any
+    /// unread bytes from the previous incarnation (they belong to a
+    /// connection that no longer exists; their mass was reclaimed
+    /// sender-side).  Positions keep counting — stream offsets stay
+    /// unique across incarnations, and the ack position jumps to the
+    /// current write position so old unacked entries read as dead.
+    pub fn reopen(&self) {
+        let mut g = self.inner.lock().expect("pipe poisoned");
+        g.cut = None;
+        g.buf.clear();
+        g.read = g.written;
+        g.acked = g.written;
+    }
+}
+
+/// One sender's bounded per-peer outboxes plus delivery accounting.
+///
+/// Not itself thread-safe — each worker owns one (the queues inside are
+/// concurrent, but the unacked log is single-owner by design: only the
+/// sending worker flushes its own connections).
+#[derive(Debug)]
+pub struct ConnManager {
+    outboxes: Vec<MessageQueue>,
+    /// Per peer: (stream position after the frame's last byte, message)
+    /// for every flushed-but-unacked message, in stream order.
+    unacked: Vec<VecDeque<(u64, Message)>>,
+    /// Scratch buffers reused across flushes.
+    drain_buf: Vec<Message>,
+    body_buf: Vec<u8>,
+    frame_buf: Vec<u8>,
+}
+
+impl ConnManager {
+    /// `workers` peers, each outbox bounded at `outbox_cap` messages
+    /// (overflow coalesces per the [`MessageQueue`] policy — backpressure
+    /// without mass loss).
+    pub fn new(workers: usize, outbox_cap: usize) -> Self {
+        ConnManager {
+            outboxes: (0..workers).map(|_| MessageQueue::bounded(outbox_cap)).collect(),
+            unacked: (0..workers).map(|_| VecDeque::new()).collect(),
+            drain_buf: Vec::new(),
+            body_buf: Vec::new(),
+            frame_buf: Vec::new(),
+        }
+    }
+
+    pub fn peers(&self) -> usize {
+        self.outboxes.len()
+    }
+
+    /// Queue a gossip message for `to`.  Never blocks; a full outbox
+    /// coalesces.
+    pub fn enqueue(&self, to: usize, msg: Message) {
+        self.outboxes[to].push(msg);
+    }
+
+    /// Messages queued but not yet flushed to `to`'s pipe.
+    pub fn queued(&self, to: usize) -> usize {
+        self.outboxes[to].len()
+    }
+
+    /// Encode and write every queued message for `to` as gossip frames
+    /// stamped with `epoch`.  Returns the number of frames written.
+    /// Each message moves to the unacked log keyed by its frame's end
+    /// position; [`prune_acked`](ConnManager::prune_acked) retires it
+    /// once the receiver acks past that position.
+    pub fn flush(&mut self, to: usize, epoch: u64, pipe: &LoopbackPipe) -> usize {
+        self.drain_buf.clear();
+        self.outboxes[to].drain_into(&mut self.drain_buf);
+        let mut frames = 0;
+        for msg in self.drain_buf.drain(..) {
+            self.body_buf.clear();
+            msg.encode_body(&mut self.body_buf);
+            self.frame_buf.clear();
+            encode_frame(&mut self.frame_buf, FrameKind::Gossip, epoch, &self.body_buf);
+            let end = pipe.write(&self.frame_buf);
+            self.unacked[to].push_back((end, msg));
+            frames += 1;
+        }
+        frames
+    }
+
+    /// Write one control frame (join/ack/start/done/leave) directly —
+    /// control traffic carries no sum-weight mass, so it skips the
+    /// outbox and the unacked log.
+    pub fn send_control(&mut self, kind: FrameKind, epoch: u64, body: &[u8], pipe: &LoopbackPipe) {
+        self.frame_buf.clear();
+        encode_frame(&mut self.frame_buf, kind, epoch, body);
+        pipe.write(&self.frame_buf);
+    }
+
+    /// Retire unacked messages the receiver has processed (ack position
+    /// at or past their frame end).
+    pub fn prune_acked(&mut self, to: usize, pipe: &LoopbackPipe) {
+        let acked = pipe.acked();
+        while matches!(self.unacked[to].front(), Some((end, _)) if *end <= acked) {
+            self.unacked[to].pop_front();
+        }
+    }
+
+    /// Messages flushed to `to` but never processed by it.
+    pub fn unacked_len(&self, to: usize) -> usize {
+        self.unacked[to].len()
+    }
+
+    /// The connection to `to` is dead: reclaim every message whose mass
+    /// never reached it — both the unflushed outbox and the
+    /// flushed-but-unacked log.  The caller reabsorbs these into its own
+    /// core (mass moves home, never vanishes).  The receiver's mirror
+    /// obligation: discard any torn frame prefix without absorbing it.
+    pub fn reclaim_dead(&mut self, to: usize, pipe: &LoopbackPipe) -> Vec<Message> {
+        self.prune_acked(to, pipe);
+        let mut back: Vec<Message> = self.unacked[to].drain(..).map(|(_, m)| m).collect();
+        self.drain_buf.clear();
+        self.outboxes[to].drain_into(&mut self.drain_buf);
+        back.append(&mut self.drain_buf);
+        back
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gossip::{EncodedPayload, SumWeight};
+    use crate::net::frame::{FrameReader, FRAME_HEADER_BYTES};
+    use crate::tensor::FlatVec;
+
+    fn msg(weight: f64, vals: &[f32]) -> Message {
+        Message::dense(
+            FlatVec::from_vec(vals.to_vec()),
+            SumWeight::from_value(weight),
+            0,
+            0,
+        )
+    }
+
+    fn mass(msgs: &[Message]) -> f64 {
+        msgs.iter().map(|m| m.weight.value()).sum()
+    }
+
+    #[test]
+    fn pipe_delivers_bytes_in_order_across_chunked_reads() {
+        let pipe = LoopbackPipe::new();
+        pipe.write(b"hello ");
+        pipe.write(b"world");
+        let mut out = Vec::new();
+        while pipe.read_into(&mut out, 3) > 0 {}
+        assert_eq!(out, b"hello world");
+        assert_eq!(pipe.written(), 11);
+    }
+
+    #[test]
+    fn sever_mid_stream_stops_reads_at_the_cut() {
+        let pipe = LoopbackPipe::new();
+        pipe.write(b"0123456789");
+        pipe.sever_at(4);
+        let mut out = Vec::new();
+        pipe.read_into(&mut out, 100);
+        assert_eq!(out, b"0123");
+        // Later writes are swallowed entirely.
+        pipe.write(b"abc");
+        assert_eq!(pipe.readable(), 0);
+        assert!(pipe.is_severed());
+        // The earliest cut wins.
+        pipe.sever_at(100);
+        assert_eq!(pipe.readable(), 0);
+    }
+
+    #[test]
+    fn reopen_resets_the_stream_for_a_new_incarnation() {
+        let pipe = LoopbackPipe::new();
+        pipe.write(b"stale bytes");
+        pipe.sever_now();
+        pipe.reopen();
+        assert!(!pipe.is_severed());
+        assert_eq!(pipe.readable(), 0, "previous incarnation's bytes are gone");
+        let pos = pipe.write(b"new");
+        assert_eq!(pos, 11 + 3, "stream offsets keep counting across incarnations");
+        assert_eq!(pipe.acked(), 11, "ack position jumped past the dead bytes");
+    }
+
+    #[test]
+    fn flush_frames_messages_and_acks_retire_them() {
+        let mut cm = ConnManager::new(2, 16);
+        let pipe = LoopbackPipe::new();
+        cm.enqueue(1, msg(0.25, &[1.0, 2.0]));
+        cm.enqueue(1, msg(0.125, &[3.0, 4.0]));
+        assert_eq!(cm.flush(1, 0, &pipe), 2);
+        assert_eq!(cm.unacked_len(1), 2);
+
+        // Receiver: read, decode both frames, ack each.
+        let mut r = FrameReader::new();
+        let mut chunk = Vec::new();
+        pipe.read_into(&mut chunk, usize::MAX);
+        r.feed(&chunk);
+        let mut got = 0;
+        while let Some(f) = r.try_next().expect("clean frames") {
+            pipe.ack((FRAME_HEADER_BYTES + f.body.len()) as u64);
+            let m = Message::decode_body(&f.body).expect("valid body");
+            assert!(matches!(m.payload, EncodedPayload::Dense(_)));
+            got += 1;
+        }
+        assert_eq!(got, 2);
+        cm.prune_acked(1, &pipe);
+        assert_eq!(cm.unacked_len(1), 0);
+    }
+
+    #[test]
+    fn kill_mid_frame_reclaims_exactly_the_undelivered_mass() {
+        let mut cm = ConnManager::new(2, 16);
+        let pipe = LoopbackPipe::new();
+        cm.enqueue(1, msg(0.25, &[1.0]));
+        cm.flush(1, 0, &pipe);
+        let first_end = pipe.written();
+        cm.enqueue(1, msg(0.125, &[2.0]));
+        cm.flush(1, 0, &pipe);
+
+        // The peer dies with the second frame half-delivered.
+        pipe.sever_at(first_end + 7);
+
+        // Receiver drains what it can: exactly one complete frame, plus a
+        // torn prefix it must discard.
+        let mut r = FrameReader::new();
+        let mut chunk = Vec::new();
+        pipe.read_into(&mut chunk, usize::MAX);
+        r.feed(&chunk);
+        let f = r.try_next().expect("intact first frame").expect("one frame");
+        pipe.ack((FRAME_HEADER_BYTES + f.body.len()) as u64);
+        let absorbed = Message::decode_body(&f.body).expect("valid");
+        assert_eq!(absorbed.weight.value(), 0.25);
+        assert!(r.try_next().expect("prefix only").is_none());
+        assert!(r.has_partial(), "torn second frame left a prefix");
+
+        // Sender reclaims: exactly the second message's mass comes home.
+        let back = cm.reclaim_dead(1, &pipe);
+        assert_eq!(back.len(), 1);
+        assert_eq!(mass(&back), 0.125);
+        assert_eq!(cm.unacked_len(1), 0);
+        // Delivered + reclaimed == everything sent: exactly once.
+        assert_eq!(absorbed.weight.value() + mass(&back), 0.375);
+    }
+
+    #[test]
+    fn reclaim_includes_the_unflushed_outbox() {
+        let mut cm = ConnManager::new(2, 16);
+        let pipe = LoopbackPipe::new();
+        cm.enqueue(1, msg(0.25, &[1.0]));
+        cm.flush(1, 0, &pipe);
+        cm.enqueue(1, msg(0.0625, &[2.0])); // never flushed
+        pipe.sever_at(0); // peer died before reading anything
+        let back = cm.reclaim_dead(1, &pipe);
+        assert_eq!(back.len(), 2);
+        assert!((mass(&back) - 0.3125).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bounded_outbox_coalesces_instead_of_dropping() {
+        let cm = ConnManager::new(2, 2);
+        for _ in 0..10 {
+            cm.enqueue(1, msg(0.01, &[1.0]));
+        }
+        assert!(cm.queued(1) <= 2, "outbox stayed bounded");
+        // All ten messages' mass is still in the queue (folded).
+        let drained = {
+            let mut v = Vec::new();
+            cm.outboxes[1].drain_into(&mut v);
+            v
+        };
+        assert!((mass(&drained) - 0.1).abs() < 1e-12, "coalescing conserved mass");
+    }
+
+    #[test]
+    fn control_frames_bypass_delivery_accounting() {
+        let mut cm = ConnManager::new(2, 4);
+        let pipe = LoopbackPipe::new();
+        cm.send_control(FrameKind::Done, 3, &[], &pipe);
+        assert_eq!(cm.unacked_len(1), 0);
+        let mut r = FrameReader::new();
+        let mut chunk = Vec::new();
+        pipe.read_into(&mut chunk, usize::MAX);
+        r.feed(&chunk);
+        let f = r.try_next().expect("ok").expect("frame");
+        assert_eq!(f.kind, FrameKind::Done);
+        assert_eq!(f.epoch, 3);
+    }
+}

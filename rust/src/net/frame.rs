@@ -1,0 +1,483 @@
+//! The versioned length-prefixed frame codec.
+//!
+//! Everything that crosses a socket travels inside one frame:
+//!
+//! ```text
+//! offset  size  field      notes
+//! ------  ----  ---------  ------------------------------------------
+//!      0     4  magic      b"GSGD"
+//!      4     2  version    u16 LE, currently 1; future versions refused
+//!      6     1  kind       FrameKind discriminant (gossip/join/...)
+//!      7     1  reserved   must be 0 on the wire today
+//!      8     8  epoch      u64 LE membership epoch of the sender
+//!     16     4  body_len   u32 LE, bytes of body after the header
+//!     20     4  crc        CRC-32 over header-with-crc-zeroed + body
+//!     24     …  body       kind-dependent (gossip frames: message body)
+//! ```
+//!
+//! The CRC deliberately covers the *header as well as* the body (with the
+//! CRC field itself zeroed): a bit-flip in the epoch or kind field is
+//! exactly as corrupting as one in the payload, and the fuzz suite flips
+//! bits everywhere.  Decoding is strictly panic-free on arbitrary bytes —
+//! every malformed input maps to a typed [`FrameError`].
+//!
+//! The reader is incremental ([`FrameReader`]): feed it whatever chunk the
+//! socket produced, pop complete frames.  A connection that dies mid-frame
+//! simply leaves a partial prefix in the reader; the receiver drops it and
+//! the *sender-side* delivery accounting ([`crate::net::ConnManager`])
+//! reclaims the undelivered message, so no sum-weight mass rides on a torn
+//! frame.
+
+use crate::gossip::message::WireError;
+use std::fmt;
+
+/// Wire magic: the first four bytes of every frame.
+pub const FRAME_MAGIC: [u8; 4] = *b"GSGD";
+
+/// Current wire protocol version.  Decoders refuse frames from the
+/// future; bumping this is a deliberate compatibility break.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Fixed header size in bytes (see the module-level layout table).
+pub const FRAME_HEADER_BYTES: usize = 24;
+
+/// Largest admissible frame body.  Far above any real gossip shard; the
+/// bound exists so a corrupt `body_len` cannot ask the reader to buffer
+/// gigabytes before the CRC would have caught the corruption anyway.
+pub const MAX_FRAME_BODY: usize = 64 << 20;
+
+/// What a frame carries.  Discriminants are the on-wire `kind` byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// A gossip message body ([`Message::decode_body`]-shaped bytes).
+    ///
+    /// [`Message::decode_body`]: crate::gossip::Message::decode_body
+    Gossip = 0,
+    /// Join request from a newcomer (body: requested worker id hint, may
+    /// be empty).
+    Join = 1,
+    /// Join acknowledgement from the seed (body: assigned id + the
+    /// serialized [`FleetConfig`](crate::net::FleetConfig) + peer roster).
+    JoinAck = 2,
+    /// Graceful leave announcement (empty body).
+    Leave = 3,
+    /// End-of-run marker: the sender has taken its last local step and
+    /// will emit no more gossip (empty body).  Receivers drain until they
+    /// hold a `Done` from every live peer, which makes the cutoff exact:
+    /// every emitted message is absorbed and mass sums to 1 at the end.
+    Done = 4,
+    /// Fleet start signal from the seed once the roster is complete
+    /// (empty body).
+    Start = 5,
+}
+
+impl FrameKind {
+    fn from_wire(b: u8) -> Option<FrameKind> {
+        match b {
+            0 => Some(FrameKind::Gossip),
+            1 => Some(FrameKind::Join),
+            2 => Some(FrameKind::JoinAck),
+            3 => Some(FrameKind::Leave),
+            4 => Some(FrameKind::Done),
+            5 => Some(FrameKind::Start),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded frame: the validated header fields plus the raw body.
+/// Body *interpretation* (message decode, config decode) happens one
+/// layer up so transport integrity and semantic validity fail separately.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub epoch: u64,
+    pub body: Vec<u8>,
+}
+
+/// Typed transport-level decode failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The first four bytes are not `b"GSGD"` — not our protocol, or a
+    /// stream that lost framing.  Unrecoverable for the connection.
+    BadMagic([u8; 4]),
+    /// The frame announces a protocol version newer than this build.
+    FutureVersion(u16),
+    /// Unknown `kind` discriminant.
+    BadKind(u8),
+    /// Nonzero reserved byte.
+    BadReserved(u8),
+    /// `body_len` exceeds [`MAX_FRAME_BODY`].
+    Oversize(u32),
+    /// Header+body checksum mismatch: bytes were corrupted in flight.
+    CrcMismatch { expected: u32, got: u32 },
+    /// The frame was intact but its body failed message-level decoding.
+    Body(WireError),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::FutureVersion(v) => {
+                write!(f, "frame version {v} is newer than supported {WIRE_VERSION}")
+            }
+            FrameError::BadKind(k) => write!(f, "unknown frame kind {k:#04x}"),
+            FrameError::BadReserved(b) => write!(f, "nonzero reserved byte {b:#04x}"),
+            FrameError::Oversize(n) => write!(f, "frame body of {n} bytes exceeds the maximum"),
+            FrameError::CrcMismatch { expected, got } => {
+                write!(
+                    f,
+                    "frame crc mismatch: header says {expected:#010x}, bytes hash to {got:#010x}"
+                )
+            }
+            FrameError::Body(e) => write!(f, "frame body rejected: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<WireError> for FrameError {
+    fn from(e: WireError) -> Self {
+        FrameError::Body(e)
+    }
+}
+
+impl From<FrameError> for crate::error::Error {
+    fn from(e: FrameError) -> Self {
+        crate::error::Error::net(e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), hand-rolled like
+// everything else in the crate.  Table built at compile time.
+// ---------------------------------------------------------------------------
+
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// Streaming CRC-32: `crc32_update(crc32_update(INIT, a), b)` equals
+/// `crc32(a ++ b)`, which lets the check run over header and body without
+/// concatenating them.
+const CRC_INIT: u32 = 0xFFFF_FFFF;
+
+fn crc32_update(mut crc: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        crc = CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc
+}
+
+/// CRC-32 of one contiguous buffer.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    !crc32_update(CRC_INIT, bytes)
+}
+
+fn frame_crc(header_sans_crc: &[u8; FRAME_HEADER_BYTES], body: &[u8]) -> u32 {
+    !crc32_update(crc32_update(CRC_INIT, header_sans_crc), body)
+}
+
+// ---------------------------------------------------------------------------
+// Encode
+// ---------------------------------------------------------------------------
+
+/// Serialize one frame (header + body) into `out`.
+///
+/// Panics only on a body larger than [`MAX_FRAME_BODY`] — a programmer
+/// error on the *send* side (local, trusted data); the decode side never
+/// panics.
+pub fn encode_frame(out: &mut Vec<u8>, kind: FrameKind, epoch: u64, body: &[u8]) {
+    assert!(
+        body.len() <= MAX_FRAME_BODY,
+        "frame body of {} bytes exceeds the wire maximum",
+        body.len()
+    );
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    header[0..4].copy_from_slice(&FRAME_MAGIC);
+    header[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    header[6] = kind as u8;
+    header[7] = 0; // reserved
+    header[8..16].copy_from_slice(&epoch.to_le_bytes());
+    header[16..20].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    // CRC over the header with the crc field still zeroed, then the body.
+    let crc = frame_crc(&header, body);
+    header[20..24].copy_from_slice(&crc.to_le_bytes());
+    out.reserve(FRAME_HEADER_BYTES + body.len());
+    out.extend_from_slice(&header);
+    out.extend_from_slice(body);
+}
+
+/// Convenience: one frame as a fresh buffer.
+pub fn frame_bytes(kind: FrameKind, epoch: u64, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + body.len());
+    encode_frame(&mut out, kind, epoch, body);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Decode
+// ---------------------------------------------------------------------------
+
+/// Incremental frame reassembler.
+///
+/// Feed it byte chunks as the transport produces them (a socket read, a
+/// loopback pipe take — chunk boundaries are arbitrary) and pop complete
+/// frames with [`try_next`](FrameReader::try_next).  A decode error is
+/// **sticky**: framing on a byte stream cannot be resynchronized after
+/// corruption, so the caller must drop the connection (which is exactly
+/// what the runtime does).
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already consumed by returned frames.  Compacted
+    /// lazily so feeding is O(chunk).
+    consumed: usize,
+    poisoned: Option<FrameError>,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        FrameReader::default()
+    }
+
+    /// Append transport bytes.
+    pub fn feed(&mut self, chunk: &[u8]) {
+        // Compact before growing: keeps the buffer bounded by one frame
+        // plus one chunk in steady state.
+        if self.consumed > 0 {
+            self.buf.drain(..self.consumed);
+            self.consumed = 0;
+        }
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Bytes buffered but not yet returned as a frame.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.consumed
+    }
+
+    /// True if a partial frame (or any unconsumed bytes) sit in the
+    /// buffer — after a peer death this is the torn-frame prefix the
+    /// receiver discards.
+    pub fn has_partial(&self) -> bool {
+        self.pending_bytes() > 0
+    }
+
+    /// Pop the next complete frame, if the buffered bytes contain one.
+    ///
+    /// `Ok(None)` means "need more bytes".  `Err` poisons the reader:
+    /// every later call returns the same error.
+    pub fn try_next(&mut self) -> Result<Option<Frame>, FrameError> {
+        if let Some(e) = &self.poisoned {
+            return Err(e.clone());
+        }
+        match self.parse_one() {
+            Ok(f) => Ok(f),
+            Err(e) => {
+                self.poisoned = Some(e.clone());
+                Err(e)
+            }
+        }
+    }
+
+    fn parse_one(&mut self) -> Result<Option<Frame>, FrameError> {
+        let avail = &self.buf[self.consumed..];
+        if avail.len() < FRAME_HEADER_BYTES {
+            return Ok(None);
+        }
+        let header: &[u8; FRAME_HEADER_BYTES] =
+            avail[..FRAME_HEADER_BYTES].try_into().expect("header slice");
+        if header[0..4] != FRAME_MAGIC {
+            return Err(FrameError::BadMagic(header[0..4].try_into().expect("4 bytes")));
+        }
+        let version = u16::from_le_bytes(header[4..6].try_into().expect("2 bytes"));
+        if version > WIRE_VERSION {
+            return Err(FrameError::FutureVersion(version));
+        }
+        let body_len = u32::from_le_bytes(header[16..20].try_into().expect("4 bytes"));
+        if body_len as usize > MAX_FRAME_BODY {
+            return Err(FrameError::Oversize(body_len));
+        }
+        let total = FRAME_HEADER_BYTES + body_len as usize;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        // Whole frame present: check integrity before interpreting kind,
+        // so a corrupt kind byte reports as corruption, not "bad kind".
+        let body = &avail[FRAME_HEADER_BYTES..total];
+        let expected = u32::from_le_bytes(header[20..24].try_into().expect("4 bytes"));
+        let mut zeroed = *header;
+        zeroed[20..24].copy_from_slice(&[0; 4]);
+        let got = frame_crc(&zeroed, body);
+        if got != expected {
+            return Err(FrameError::CrcMismatch { expected, got });
+        }
+        if header[7] != 0 {
+            return Err(FrameError::BadReserved(header[7]));
+        }
+        let kind = FrameKind::from_wire(header[6]).ok_or(FrameError::BadKind(header[6]))?;
+        let epoch = u64::from_le_bytes(header[8..16].try_into().expect("8 bytes"));
+        let frame = Frame { kind, epoch, body: body.to_vec() };
+        self.consumed += total;
+        Ok(Some(frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard IEEE CRC-32 check values.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Streaming split equals one-shot.
+        let split = !crc32_update(crc32_update(CRC_INIT, b"1234"), b"56789");
+        assert_eq!(split, 0xCBF4_3926);
+    }
+
+    #[test]
+    fn frame_round_trips() {
+        let body = b"hello gossip".to_vec();
+        let bytes = frame_bytes(FrameKind::Gossip, 7, &body);
+        assert_eq!(bytes.len(), FRAME_HEADER_BYTES + body.len());
+        let mut r = FrameReader::new();
+        r.feed(&bytes);
+        let f = r.try_next().expect("decode").expect("complete");
+        assert_eq!(f.kind, FrameKind::Gossip);
+        assert_eq!(f.epoch, 7);
+        assert_eq!(f.body, body);
+        assert!(!r.has_partial());
+        assert!(r.try_next().expect("no error").is_none());
+    }
+
+    #[test]
+    fn reader_reassembles_across_arbitrary_chunks() {
+        let a = frame_bytes(FrameKind::Join, 1, b"one");
+        let b = frame_bytes(FrameKind::Done, 2, b"");
+        let stream: Vec<u8> = a.iter().chain(b.iter()).copied().collect();
+        // Feed a byte at a time: two frames must still pop out intact.
+        let mut r = FrameReader::new();
+        let mut frames = Vec::new();
+        for &byte in &stream {
+            r.feed(&[byte]);
+            while let Some(f) = r.try_next().expect("clean stream") {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].kind, FrameKind::Join);
+        assert_eq!(frames[0].body, b"one");
+        assert_eq!(frames[1].kind, FrameKind::Done);
+        assert_eq!(frames[1].epoch, 2);
+        assert!(!r.has_partial());
+    }
+
+    #[test]
+    fn truncated_frame_is_just_pending() {
+        let bytes = frame_bytes(FrameKind::Gossip, 0, &[9; 100]);
+        let mut r = FrameReader::new();
+        r.feed(&bytes[..bytes.len() - 1]);
+        assert!(r.try_next().expect("no error yet").is_none());
+        assert!(r.has_partial());
+        assert_eq!(r.pending_bytes(), bytes.len() - 1);
+    }
+
+    #[test]
+    fn bad_magic_is_fatal_and_sticky() {
+        let mut bytes = frame_bytes(FrameKind::Gossip, 0, b"x");
+        bytes[0] = b'X';
+        let mut r = FrameReader::new();
+        r.feed(&bytes);
+        let e = r.try_next().unwrap_err();
+        assert!(matches!(e, FrameError::BadMagic(_)));
+        assert_eq!(r.try_next().unwrap_err(), e, "poisoned reader repeats");
+    }
+
+    #[test]
+    fn future_version_refused() {
+        let mut bytes = frame_bytes(FrameKind::Gossip, 0, b"x");
+        bytes[4..6].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+        let mut r = FrameReader::new();
+        r.feed(&bytes);
+        assert!(matches!(r.try_next().unwrap_err(), FrameError::FutureVersion(_)));
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_caught() {
+        // CRC-32 detects all 1-bit errors; flipping any bit in the frame
+        // (header or body, except within pre-CRC-checked fields where a
+        // different typed error fires first) must fail decoding.
+        let bytes = frame_bytes(FrameKind::Gossip, 3, b"payload bytes!");
+        for bit in 0..bytes.len() * 8 {
+            let mut flipped = bytes.clone();
+            flipped[bit / 8] ^= 1 << (bit % 8);
+            let mut r = FrameReader::new();
+            r.feed(&flipped);
+            match r.try_next() {
+                Err(_) => {}
+                Ok(Some(_)) => panic!("bit flip {bit} decoded as a valid frame"),
+                // A flip in body_len can make the frame look longer than
+                // the bytes we have — that parks as "pending", which is
+                // fine: the CRC still guards it when more bytes arrive.
+                Ok(None) => assert!(bit / 8 >= 16 && bit / 8 < 20, "bit {bit} silently pending"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_body_len_refused_without_buffering() {
+        let mut bytes = frame_bytes(FrameKind::Gossip, 0, b"x");
+        bytes[16..20].copy_from_slice(&(MAX_FRAME_BODY as u32 + 1).to_le_bytes());
+        let mut r = FrameReader::new();
+        r.feed(&bytes[..FRAME_HEADER_BYTES]);
+        assert!(matches!(r.try_next().unwrap_err(), FrameError::Oversize(_)));
+    }
+
+    #[test]
+    fn corrupt_kind_reports_as_corruption_not_bad_kind() {
+        // The kind byte is CRC-covered; flipping it must surface as
+        // CrcMismatch (transport corruption), BadKind is reserved for
+        // well-checksummed frames from a incompatible peer.
+        let mut bytes = frame_bytes(FrameKind::Gossip, 0, b"x");
+        bytes[6] = 0x7f;
+        let mut r = FrameReader::new();
+        r.feed(&bytes);
+        assert!(matches!(r.try_next().unwrap_err(), FrameError::CrcMismatch { .. }));
+    }
+
+    #[test]
+    fn genuinely_unknown_kind_with_valid_crc_reports_bad_kind() {
+        // Re-checksum a frame after forging the kind byte: now the CRC
+        // passes and the kind check fires.
+        let body = b"x";
+        let mut header = [0u8; FRAME_HEADER_BYTES];
+        header[0..4].copy_from_slice(&FRAME_MAGIC);
+        header[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+        header[6] = 0x7f;
+        header[16..20].copy_from_slice(&(body.len() as u32).to_le_bytes());
+        let crc = frame_crc(&header, body);
+        header[20..24].copy_from_slice(&crc.to_le_bytes());
+        let mut stream = header.to_vec();
+        stream.extend_from_slice(body);
+        let mut r = FrameReader::new();
+        r.feed(&stream);
+        assert_eq!(r.try_next().unwrap_err(), FrameError::BadKind(0x7f));
+    }
+}

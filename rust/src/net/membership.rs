@@ -1,0 +1,608 @@
+//! Epoch-based elastic membership.
+//!
+//! The DES already models churn: a crash flips a worker's alive bit and
+//! the emit path repairs peer picks against the alive mask
+//! ([`ProtocolCore::emit_alive`](crate::gossip::ProtocolCore::emit_alive)).
+//! The networked runtime makes the same semantics real, with one new
+//! ingredient: the **membership epoch**, a `u64` that bumps on every
+//! join, leave or detected crash.  Every frame carries the sender's
+//! epoch, and the [`Membership::admit`] rule decides what to do with a
+//! frame from the past:
+//!
+//! * **Current** — sender is alive and the frame's epoch is at or after
+//!   the epoch the sender last joined: absorb normally.  Note admission
+//!   is *not* "epoch == ours": gossip is asynchronous, a frame sent just
+//!   before an unrelated membership change is still perfectly good mass.
+//! * **Stale** — one of two cases, both discarded without blending:
+//!   a **zombie** frame (the sender is currently marked dead — its bytes
+//!   were in flight when it died; its mass is reconciled sender-side,
+//!   never receiver-side), or a **ghost** frame (the sender is alive but
+//!   the frame predates the sender's own `joined_epoch`, i.e. it was
+//!   emitted by the sender's *previous incarnation*).
+//! * **Future** — epoch beyond ours: we are behind on membership; the
+//!   caller refreshes its view before absorbing (the loopback runtime
+//!   treats it as admit-after-catch-up; the socket runtime re-syncs its
+//!   roster).
+//!
+//! Discarding a stale frame looks like it destroys sum-weight mass — it
+//! would, if the sender had forgotten it.  It has not: the connection
+//! layer ([`crate::net::ConnManager`]) counts a message as delivered only
+//! when its frame's bytes fully left the pipe, and a dead peer's
+//! undelivered messages are reclaimed and **reabsorbed by the sender**
+//! (or its rejoining incarnation).  The fault suite
+//! (`rust/tests/net_faults.rs`) audits `Σ mass == 1` through every such
+//! transition.
+
+use crate::error::{Error, Result};
+use crate::gossip::{CodecSpec, TopologySpec};
+use std::fmt;
+
+/// Verdict for an incoming frame, from [`Membership::admit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Absorb normally.
+    Current,
+    /// Discard: zombie (dead sender) or ghost (pre-rejoin) traffic.
+    Stale,
+    /// Our membership view is behind the sender's; refresh, then retry.
+    Future,
+}
+
+/// Who is in the fleet, and since when.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    epoch: u64,
+    alive: Vec<bool>,
+    /// Epoch at which each worker (most recently) joined.  A frame from
+    /// worker `w` with `epoch < joined_epoch[w]` was emitted by a
+    /// previous incarnation of `w` and must not blend into the fleet.
+    joined_epoch: Vec<u64>,
+}
+
+impl Membership {
+    /// A fresh fleet of `workers` members, all alive at epoch 0.
+    pub fn new(workers: usize) -> Self {
+        Membership { epoch: 0, alive: vec![true; workers], joined_epoch: vec![0; workers] }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn workers(&self) -> usize {
+        self.alive.len()
+    }
+
+    pub fn is_alive(&self, w: usize) -> bool {
+        self.alive.get(w).copied().unwrap_or(false)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// The alive mask in the exact shape
+    /// [`ProtocolCore::emit_alive`](crate::gossip::ProtocolCore::emit_alive)
+    /// takes.
+    pub fn alive_mask(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// Classify a frame from `sender` stamped with `frame_epoch`.
+    pub fn admit(&self, sender: usize, frame_epoch: u64) -> Admit {
+        if frame_epoch > self.epoch {
+            return Admit::Future;
+        }
+        if sender >= self.alive.len() || !self.alive[sender] {
+            return Admit::Stale; // zombie
+        }
+        if frame_epoch < self.joined_epoch[sender] {
+            return Admit::Stale; // ghost from a previous incarnation
+        }
+        Admit::Current
+    }
+
+    /// Record a death (crash or graceful leave).  Bumps the epoch; a
+    /// no-op (no bump) if the worker is already dead or out of range.
+    pub fn mark_dead(&mut self, w: usize) -> bool {
+        if w < self.alive.len() && self.alive[w] {
+            self.alive[w] = false;
+            self.epoch += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Revive a previously-dead worker slot.  Bumps the epoch and stamps
+    /// the slot's `joined_epoch`, which is what turns that worker's
+    /// pre-crash in-flight frames into ghosts.
+    pub fn rejoin(&mut self, w: usize) -> bool {
+        if w < self.alive.len() && !self.alive[w] {
+            self.alive[w] = true;
+            self.epoch += 1;
+            self.joined_epoch[w] = self.epoch;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Admit a brand-new member; returns its assigned worker id.
+    pub fn join_new(&mut self) -> usize {
+        let id = self.alive.len();
+        self.epoch += 1;
+        self.alive.push(true);
+        self.joined_epoch.push(self.epoch);
+        id
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FleetConfig: the shared run configuration the join handshake replays.
+// ---------------------------------------------------------------------------
+
+/// Everything a newcomer needs to run the same protocol as the fleet.
+///
+/// This is the serialized payload of a
+/// [`FrameKind::JoinAck`](crate::net::FrameKind::JoinAck): the seed node
+/// replays the exact configuration (topology, codec, sharding, learning
+/// schedule, seed) so every process derives bit-identical protocol cores.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    pub workers: usize,
+    /// Model dimension (a joiner allocates its vector from this; its
+    /// *values* arrive through gossip — see the sponsor-seeding note in
+    /// the module docs of [`crate::net`]).
+    pub dim: usize,
+    pub p: f64,
+    pub steps_per_worker: u64,
+    pub eta: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    pub topology: TopologySpec,
+    pub shards: usize,
+    pub codec: CodecSpec,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            workers: 2,
+            dim: 16,
+            p: 0.05,
+            steps_per_worker: 100,
+            eta: 0.1,
+            weight_decay: 1e-4,
+            seed: 0,
+            topology: TopologySpec::UniformRandom,
+            shards: 1,
+            codec: CodecSpec::Dense,
+        }
+    }
+}
+
+const TOPO_UNIFORM: u8 = 0;
+const TOPO_RING: u8 = 1;
+const TOPO_HYPERCUBE: u8 = 2;
+const TOPO_ROTATION: u8 = 3;
+const TOPO_SMALL_WORLD: u8 = 4;
+
+const CODEC_DENSE: u8 = 0;
+const CODEC_TOPK: u8 = 1;
+const CODEC_Q8: u8 = 2;
+
+impl FleetConfig {
+    /// Serialize for the wire (little-endian, fixed order — this is a
+    /// frame body, so the frame CRC covers it).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.workers as u64).to_le_bytes());
+        out.extend_from_slice(&(self.dim as u64).to_le_bytes());
+        out.extend_from_slice(&self.p.to_le_bytes());
+        out.extend_from_slice(&self.steps_per_worker.to_le_bytes());
+        out.extend_from_slice(&self.eta.to_le_bytes());
+        out.extend_from_slice(&self.weight_decay.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        match self.topology {
+            TopologySpec::UniformRandom => {
+                out.push(TOPO_UNIFORM);
+                out.extend_from_slice(&0f64.to_le_bytes());
+            }
+            TopologySpec::Ring => {
+                out.push(TOPO_RING);
+                out.extend_from_slice(&0f64.to_le_bytes());
+            }
+            TopologySpec::Hypercube => {
+                out.push(TOPO_HYPERCUBE);
+                out.extend_from_slice(&0f64.to_le_bytes());
+            }
+            TopologySpec::PartnerRotation => {
+                out.push(TOPO_ROTATION);
+                out.extend_from_slice(&0f64.to_le_bytes());
+            }
+            TopologySpec::SmallWorld { q } => {
+                out.push(TOPO_SMALL_WORLD);
+                out.extend_from_slice(&q.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&(self.shards as u64).to_le_bytes());
+        match self.codec {
+            CodecSpec::Dense => {
+                out.push(CODEC_DENSE);
+                out.extend_from_slice(&0u64.to_le_bytes());
+            }
+            CodecSpec::TopK { k } => {
+                out.push(CODEC_TOPK);
+                out.extend_from_slice(&(k as u64).to_le_bytes());
+            }
+            CodecSpec::QuantizeU8 => {
+                out.push(CODEC_Q8);
+                out.extend_from_slice(&0u64.to_le_bytes());
+            }
+        }
+    }
+
+    /// Decode from untrusted bytes.  Every malformed input maps to
+    /// [`Error::Net`](crate::error::Error::Net); semantic nonsense (zero
+    /// workers, NaN p, zero shards) is refused here so a hostile JoinAck
+    /// cannot steer a node into the panicking constructors downstream.
+    pub fn decode(bytes: &[u8]) -> Result<FleetConfig> {
+        fn take<'a>(b: &mut &'a [u8], n: usize, what: &str) -> Result<&'a [u8]> {
+            if b.len() < n {
+                return Err(Error::net(format!("fleet config truncated at {what}")));
+            }
+            let (head, tail) = b.split_at(n);
+            *b = tail;
+            Ok(head)
+        }
+        fn u64f(b: &mut &[u8], what: &str) -> Result<u64> {
+            Ok(u64::from_le_bytes(take(b, 8, what)?.try_into().expect("8 bytes")))
+        }
+        fn f64f(b: &mut &[u8], what: &str) -> Result<f64> {
+            Ok(f64::from_le_bytes(take(b, 8, what)?.try_into().expect("8 bytes")))
+        }
+        fn f32f(b: &mut &[u8], what: &str) -> Result<f32> {
+            Ok(f32::from_le_bytes(take(b, 4, what)?.try_into().expect("4 bytes")))
+        }
+        fn u8f(b: &mut &[u8], what: &str) -> Result<u8> {
+            Ok(take(b, 1, what)?[0])
+        }
+
+        let mut b = bytes;
+        let workers = u64f(&mut b, "workers")? as usize;
+        let dim = u64f(&mut b, "dim")? as usize;
+        let p = f64f(&mut b, "p")?;
+        let steps_per_worker = u64f(&mut b, "steps")?;
+        let eta = f32f(&mut b, "eta")?;
+        let weight_decay = f32f(&mut b, "weight_decay")?;
+        let seed = u64f(&mut b, "seed")?;
+        let topo_tag = u8f(&mut b, "topology tag")?;
+        let topo_q = f64f(&mut b, "topology param")?;
+        let topology = match topo_tag {
+            TOPO_UNIFORM => TopologySpec::UniformRandom,
+            TOPO_RING => TopologySpec::Ring,
+            TOPO_HYPERCUBE => TopologySpec::Hypercube,
+            TOPO_ROTATION => TopologySpec::PartnerRotation,
+            TOPO_SMALL_WORLD => {
+                if !topo_q.is_finite() || !(0.0..=1.0).contains(&topo_q) {
+                    return Err(Error::net(format!("bad small-world q {topo_q}")));
+                }
+                TopologySpec::SmallWorld { q: topo_q }
+            }
+            t => return Err(Error::net(format!("unknown topology tag {t}"))),
+        };
+        let shards = u64f(&mut b, "shards")? as usize;
+        let codec_tag = u8f(&mut b, "codec tag")?;
+        let codec_k = u64f(&mut b, "codec param")? as usize;
+        let codec = match codec_tag {
+            CODEC_DENSE => CodecSpec::Dense,
+            CODEC_TOPK => {
+                if codec_k == 0 {
+                    return Err(Error::net("top-k codec with k = 0"));
+                }
+                CodecSpec::TopK { k: codec_k }
+            }
+            CODEC_Q8 => CodecSpec::QuantizeU8,
+            t => return Err(Error::net(format!("unknown codec tag {t}"))),
+        };
+        if !b.is_empty() {
+            return Err(Error::net(format!("{} trailing bytes after fleet config", b.len())));
+        }
+        let cfg = FleetConfig {
+            workers,
+            dim,
+            p,
+            steps_per_worker,
+            eta,
+            weight_decay,
+            seed,
+            topology,
+            shards,
+            codec,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Semantic validation shared by decode and the CLI.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::net("fleet config: zero workers"));
+        }
+        if self.dim == 0 {
+            return Err(Error::net("fleet config: zero dimension"));
+        }
+        if !self.p.is_finite() || !(0.0..=1.0).contains(&self.p) {
+            return Err(Error::net(format!("fleet config: bad exchange probability {}", self.p)));
+        }
+        if !self.eta.is_finite() || !self.weight_decay.is_finite() {
+            return Err(Error::net("fleet config: non-finite learning parameters"));
+        }
+        if self.shards == 0 || (self.shards > 1 && self.dim < self.shards) {
+            return Err(Error::net(format!(
+                "fleet config: {} shards does not divide dim {}",
+                self.shards, self.dim
+            )));
+        }
+        Ok(())
+    }
+
+    /// The serialized form as a fresh buffer (a JoinAck body prefix).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(80);
+        self.encode(&mut out);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JoinHandshake: the client-side state machine.
+// ---------------------------------------------------------------------------
+
+/// Client states for joining a live fleet.
+///
+/// A joiner sends `Join`, then polls for the seed's `JoinAck`.  The ack
+/// replays the [`FleetConfig`] plus the joiner's assigned id and the
+/// fleet epoch; a dropped handshake (seed never answers) times out after
+/// a bounded number of polls and the joiner reports failure without ever
+/// having touched fleet state — the fault suite asserts fleet mass is
+/// untouched by an abandoned join.
+#[derive(Clone, Debug)]
+pub enum JoinHandshake {
+    /// Join sent, waiting for the ack; `polls_left` bounds the wait.
+    AwaitingAck { polls_left: u32 },
+    /// Ack received and validated.
+    Admitted { id: usize, epoch: u64, config: FleetConfig },
+    /// Handshake abandoned (timeout or malformed ack).
+    Failed(String),
+}
+
+impl JoinHandshake {
+    /// Start a handshake that tolerates `polls` empty polls.
+    pub fn start(polls: u32) -> Self {
+        JoinHandshake::AwaitingAck { polls_left: polls }
+    }
+
+    /// One empty poll elapsed (no ack bytes yet).
+    pub fn poll_empty(&mut self) {
+        if let JoinHandshake::AwaitingAck { polls_left } = self {
+            if *polls_left == 0 {
+                *self = JoinHandshake::Failed("join handshake timed out".into());
+            } else {
+                *polls_left -= 1;
+            }
+        }
+    }
+
+    /// A JoinAck body arrived: `[id u64][epoch u64][FleetConfig ...]`.
+    pub fn on_ack(&mut self, body: &[u8]) {
+        if !matches!(self, JoinHandshake::AwaitingAck { .. }) {
+            return; // duplicate ack; first one wins
+        }
+        if body.len() < 16 {
+            *self = JoinHandshake::Failed("short join ack".into());
+            return;
+        }
+        let id = u64::from_le_bytes(body[0..8].try_into().expect("8 bytes")) as usize;
+        let epoch = u64::from_le_bytes(body[8..16].try_into().expect("8 bytes"));
+        match FleetConfig::decode(&body[16..]) {
+            Ok(config) => {
+                if id >= config.workers {
+                    *self = JoinHandshake::Failed(format!(
+                        "assigned id {id} outside fleet of {}",
+                        config.workers
+                    ));
+                } else {
+                    *self = JoinHandshake::Admitted { id, epoch, config };
+                }
+            }
+            Err(e) => *self = JoinHandshake::Failed(format!("bad join ack: {e}")),
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JoinHandshake::AwaitingAck { .. })
+    }
+}
+
+/// Serialize a JoinAck body for [`JoinHandshake::on_ack`].
+pub fn encode_join_ack(id: usize, epoch: u64, config: &FleetConfig) -> Vec<u8> {
+    let mut out = Vec::with_capacity(96);
+    out.extend_from_slice(&(id as u64).to_le_bytes());
+    out.extend_from_slice(&epoch.to_le_bytes());
+    config.encode(&mut out);
+    out
+}
+
+impl fmt::Display for Admit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Admit::Current => write!(f, "current"),
+            Admit::Stale => write!(f, "stale"),
+            Admit::Future => write!(f, "future"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_fleet_admits_epoch_zero_traffic() {
+        let m = Membership::new(4);
+        assert_eq!(m.epoch(), 0);
+        assert_eq!(m.live_count(), 4);
+        for w in 0..4 {
+            assert_eq!(m.admit(w, 0), Admit::Current);
+        }
+    }
+
+    #[test]
+    fn death_bumps_epoch_and_zombifies_sender() {
+        let mut m = Membership::new(3);
+        assert!(m.mark_dead(1));
+        assert_eq!(m.epoch(), 1);
+        assert!(!m.is_alive(1));
+        // The dead worker's in-flight traffic is now stale...
+        assert_eq!(m.admit(1, 0), Admit::Stale);
+        // ...but survivors' pre-bump traffic is still perfectly good.
+        assert_eq!(m.admit(0, 0), Admit::Current);
+        assert_eq!(m.admit(2, 1), Admit::Current);
+        // Double-death is a no-op.
+        assert!(!m.mark_dead(1));
+        assert_eq!(m.epoch(), 1);
+    }
+
+    #[test]
+    fn rejoin_ghosts_the_previous_incarnation() {
+        let mut m = Membership::new(3);
+        m.mark_dead(2);
+        assert!(m.rejoin(2));
+        assert_eq!(m.epoch(), 2);
+        assert!(m.is_alive(2));
+        // Frames from before the rejoin are ghosts; new ones are current.
+        assert_eq!(m.admit(2, 0), Admit::Stale);
+        assert_eq!(m.admit(2, 1), Admit::Stale);
+        assert_eq!(m.admit(2, 2), Admit::Current);
+        // Rejoining an alive worker is refused.
+        assert!(!m.rejoin(2));
+    }
+
+    #[test]
+    fn future_epochs_are_flagged_not_absorbed() {
+        let m = Membership::new(2);
+        assert_eq!(m.admit(0, 5), Admit::Future);
+    }
+
+    #[test]
+    fn out_of_range_senders_are_stale() {
+        let m = Membership::new(2);
+        assert_eq!(m.admit(7, 0), Admit::Stale);
+    }
+
+    #[test]
+    fn join_new_grows_the_fleet_at_a_fresh_epoch() {
+        let mut m = Membership::new(2);
+        let id = m.join_new();
+        assert_eq!(id, 2);
+        assert_eq!(m.epoch(), 1);
+        assert_eq!(m.workers(), 3);
+        assert!(m.is_alive(2));
+        // The newcomer's traffic is current only from its join epoch.
+        assert_eq!(m.admit(2, 0), Admit::Stale);
+        assert_eq!(m.admit(2, 1), Admit::Current);
+    }
+
+    #[test]
+    fn alive_mask_tracks_membership() {
+        let mut m = Membership::new(3);
+        m.mark_dead(0);
+        assert_eq!(m.alive_mask(), &[false, true, true]);
+        assert_eq!(m.live_count(), 2);
+    }
+
+    #[test]
+    fn fleet_config_round_trips() {
+        let cfg = FleetConfig {
+            workers: 4,
+            dim: 64,
+            p: 0.05,
+            steps_per_worker: 200,
+            eta: 0.25,
+            weight_decay: 1e-4,
+            seed: 42,
+            topology: TopologySpec::SmallWorld { q: 0.3 },
+            shards: 4,
+            codec: CodecSpec::TopK { k: 8 },
+        };
+        let back = FleetConfig::decode(&cfg.to_bytes()).expect("round trip");
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn fleet_config_rejects_malformed_bytes() {
+        let good = FleetConfig::default().to_bytes();
+        // Truncation at every prefix length.
+        for cut in 0..good.len() {
+            assert!(FleetConfig::decode(&good[..cut]).is_err(), "cut {cut} accepted");
+        }
+        // Trailing garbage.
+        let mut long = good.clone();
+        long.push(1);
+        assert!(FleetConfig::decode(&long).is_err());
+        // Unknown topology tag (offset: 7 u64/f64 fields + eta/wd f32s = 48, tag at 48).
+        let mut bad = good.clone();
+        bad[48] = 99;
+        assert!(FleetConfig::decode(&bad).is_err());
+        // Zero workers.
+        let mut bad = good.clone();
+        bad[0..8].copy_from_slice(&0u64.to_le_bytes());
+        assert!(FleetConfig::decode(&bad).is_err());
+        // NaN exchange probability.
+        let mut bad = good;
+        bad[16..24].copy_from_slice(&f64::NAN.to_le_bytes());
+        assert!(FleetConfig::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn handshake_times_out_after_bounded_polls() {
+        let mut h = JoinHandshake::start(2);
+        assert!(!h.is_terminal());
+        h.poll_empty();
+        h.poll_empty();
+        assert!(!h.is_terminal());
+        h.poll_empty();
+        assert!(matches!(h, JoinHandshake::Failed(_)));
+    }
+
+    #[test]
+    fn handshake_admits_on_valid_ack() {
+        let cfg = FleetConfig { workers: 3, ..FleetConfig::default() };
+        let mut h = JoinHandshake::start(5);
+        h.on_ack(&encode_join_ack(2, 9, &cfg));
+        match &h {
+            JoinHandshake::Admitted { id, epoch, config } => {
+                assert_eq!(*id, 2);
+                assert_eq!(*epoch, 9);
+                assert_eq!(config, &cfg);
+            }
+            other => panic!("expected admitted, got {other:?}"),
+        }
+        // A duplicate ack is ignored.
+        h.on_ack(&encode_join_ack(0, 1, &cfg));
+        assert!(matches!(h, JoinHandshake::Admitted { id: 2, .. }));
+    }
+
+    #[test]
+    fn handshake_fails_on_malformed_ack() {
+        let mut h = JoinHandshake::start(5);
+        h.on_ack(&[1, 2, 3]);
+        assert!(matches!(h, JoinHandshake::Failed(_)));
+        // Out-of-range assigned id.
+        let cfg = FleetConfig { workers: 2, ..FleetConfig::default() };
+        let mut h = JoinHandshake::start(5);
+        h.on_ack(&encode_join_ack(7, 0, &cfg));
+        assert!(matches!(h, JoinHandshake::Failed(_)));
+    }
+}

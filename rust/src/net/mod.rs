@@ -1,0 +1,56 @@
+//! The networked gossip runtime: `ProtocolCore`'s fourth driver.
+//!
+//! Three drivers already exercise the protocol core in one process — the
+//! sequential engine, the OS-thread runtime and the discrete-event
+//! simulator.  This module makes the paper's "fully asynchronous and
+//! decentralized" claim literal: each worker is a *process*, messages are
+//! *bytes* on a TCP socket, and membership is *elastic* — workers join a
+//! live fleet via a config-replaying handshake and leave (or crash) under
+//! an epoch bump that triggers the same alive-mask peer repair the DES
+//! uses for churn.
+//!
+//! The layering, bottom up:
+//!
+//! * [`frame`] — the versioned length-prefixed frame codec: magic,
+//!   version, frame kind, membership epoch, body length, CRC-32.  An
+//!   incremental [`FrameReader`](frame::FrameReader) reassembles frames
+//!   from arbitrary byte chunks and rejects corruption with typed
+//!   [`FrameError`]s — never a panic, for any input bytes (pinned by the
+//!   fuzz loop in `rust/tests/wire_framing.rs`).
+//! * [`membership`] — the epoch-based membership state machine
+//!   ([`Membership`](membership::Membership)): who is alive, at which
+//!   epoch each worker joined, and the zombie/ghost admission rule that
+//!   discards stale-epoch traffic without destroying sum-weight mass.
+//!   Plus [`FleetConfig`](membership::FleetConfig), the shared run
+//!   configuration a join handshake replays to newcomers, and the
+//!   [`JoinHandshake`](membership::JoinHandshake) client state machine.
+//! * [`conn`] — transport plumbing: [`LoopbackPipe`](conn::LoopbackPipe),
+//!   an in-process byte stream with fault injection (sever mid-frame,
+//!   reopen under a new epoch) used by the test suites, and
+//!   [`ConnManager`](conn::ConnManager), the per-peer outbox layer with
+//!   bounded backpressure and exactly-once delivery accounting
+//!   (undelivered messages are reclaimed for sender-side reabsorption —
+//!   mass is conserved through any crash).
+//! * [`runtime`] — the real-socket node: `gosgd net --listen` seeds a
+//!   fleet, `gosgd net --join` dials in, and the join handshake replays
+//!   [`FleetConfig`](membership::FleetConfig) so every process runs the
+//!   same protocol core.  This file is the **only** place in the crate
+//!   allowed to touch `std::net` — `gosgd-lint`'s `net-isolation` rule
+//!   enforces the boundary.
+//!
+//! The driver itself ([`NetGossip`](crate::worker::NetGossip), in
+//! `worker/` beside its threaded sibling) mirrors `ThreadedGossip`'s
+//! API, and its loopback mode is **bit-identical** to the threaded
+//! runtime under the same seed — the frame codec is a transparent
+//! transport, asserted across the codec/topology grid in
+//! `rust/tests/runtime_equivalence.rs`.
+
+pub mod conn;
+pub mod frame;
+pub mod membership;
+pub mod runtime;
+
+pub use conn::{ConnManager, LoopbackPipe};
+pub use frame::{Frame, FrameError, FrameKind, FrameReader, FRAME_HEADER_BYTES, WIRE_VERSION};
+pub use membership::{encode_join_ack, Admit, FleetConfig, JoinHandshake, Membership};
+pub use runtime::{NetNodeConfig, NetNodeReport};

@@ -1,0 +1,485 @@
+//! The real-socket gossip node: `gosgd net --listen/--join`.
+//!
+//! Each worker is a **process**.  One node seeds the fleet
+//! (`gosgd net --listen ADDR`): it owns worker id 0, accepts
+//! `workers − 1` joiners, assigns their ids, and replays the shared
+//! [`FleetConfig`] to each through the join handshake — so every process
+//! derives a bit-identical protocol core from the same nine knobs.
+//! Joiners (`gosgd net --join ADDR --listen OWN_ADDR`) dial the seed,
+//! complete the handshake, mesh with the other joiners from the roster
+//! the seed broadcasts at start, and run the same worker loop.
+//!
+//! The run protocol over each TCP stream is exactly the loopback
+//! driver's ([`crate::worker::NetGossip`]): length-prefixed CRC'd frames,
+//! a Bernoulli-gated gossip loop, and the **Done finale** — announce the
+//! local cutoff, drain until every peer has announced theirs (FIFO
+//! streams make the cutoff exact).  After Done, each joiner ships its
+//! final per-shard sum weights to the seed in a `Leave` frame; the seed
+//! folds them with its own and prints the fleet-wide audit line
+//!
+//! ```text
+//! fleet mass 1.000000
+//! ```
+//!
+//! which the CI `net` lane greps for after spawning a two-process fleet.
+//!
+//! This file is the **only** module in the crate allowed to name
+//! `std::net` — `gosgd-lint`'s `net-isolation` rule keeps every other
+//! layer socket-free, which is what keeps the loopback and TCP paths
+//! honest about sharing all their protocol code.
+
+use crate::error::{Error, Result};
+use crate::gossip::{Message, ProtocolCore};
+use crate::net::frame::{encode_frame, FrameKind, FrameReader, FRAME_HEADER_BYTES};
+use crate::net::membership::{encode_join_ack, FleetConfig, JoinHandshake};
+use crate::strategies::grad::{GradSource, QuadraticSource};
+use crate::tensor::FlatVec;
+use crate::util::rng::Rng;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// How a `gosgd net` process participates in a fleet.
+#[derive(Clone, Debug)]
+pub struct NetNodeConfig {
+    /// Address to listen on (the seed's fleet port, or a joiner's
+    /// peer-mesh port; empty for a joiner in a two-worker fleet, which
+    /// needs no mesh links).
+    pub listen: String,
+    /// Seed address to dial; `None` makes this node the seed.
+    pub join: Option<String>,
+    /// The shared run configuration.  Authoritative on the seed; on a
+    /// joiner only used as a placeholder until the handshake replays the
+    /// seed's copy.
+    pub config: FleetConfig,
+    /// Gradient noise scale for the built-in quadratic source.
+    pub sigma: f32,
+}
+
+/// Outcome of one node's run, for the caller to print or assert on.
+#[derive(Clone, Debug)]
+pub struct NetNodeReport {
+    pub id: usize,
+    /// This node's final per-shard sum weights.
+    pub shard_weights: Vec<f64>,
+    /// Seed only: the fleet-wide per-shard mass totals (own + every
+    /// joiner's, from their Leave frames).  `None` on joiners.
+    pub fleet_shard_mass: Option<Vec<f64>>,
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+impl NetNodeConfig {
+    /// Run this node to completion.
+    pub fn run(&self) -> Result<NetNodeReport> {
+        self.config.validate()?;
+        match &self.join {
+            None => run_seed(self),
+            Some(addr) => run_joiner(self, addr),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocking-ish I/O helpers over nonblocking streams.
+// ---------------------------------------------------------------------------
+
+/// Write all bytes, riding out `WouldBlock` on a nonblocking socket.
+fn write_all(stream: &mut TcpStream, mut bytes: &[u8]) -> Result<()> {
+    while !bytes.is_empty() {
+        match stream.write(bytes) {
+            Ok(0) => return Err(Error::net("peer closed the stream mid-write")),
+            Ok(n) => bytes = &bytes[n..],
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::Interrupted => {
+                crate::sync::thread::yield_now();
+            }
+            Err(e) => return Err(Error::net(format!("socket write failed: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+/// Pull whatever the socket has into the frame reader.  Returns `false`
+/// once the peer has closed the stream.
+fn pump(stream: &mut TcpStream, reader: &mut FrameReader, buf: &mut [u8]) -> Result<bool> {
+    loop {
+        match stream.read(buf) {
+            Ok(0) => return Ok(false),
+            Ok(n) => reader.feed(&buf[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(true),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::net(format!("socket read failed: {e}"))),
+        }
+    }
+}
+
+/// Block until one frame arrives on a (blocking-mode) stream.
+fn read_frame_blocking(
+    stream: &mut TcpStream,
+    reader: &mut FrameReader,
+    buf: &mut [u8],
+) -> Result<crate::net::frame::Frame> {
+    loop {
+        if let Some(f) = reader.try_next()? {
+            return Ok(f);
+        }
+        match stream.read(buf) {
+            Ok(0) => return Err(Error::net("peer closed the stream mid-handshake")),
+            Ok(n) => reader.feed(&buf[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::net(format!("socket read failed: {e}"))),
+        }
+    }
+}
+
+fn send_frame(stream: &mut TcpStream, kind: FrameKind, epoch: u64, body: &[u8]) -> Result<()> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + body.len());
+    encode_frame(&mut out, kind, epoch, body);
+    write_all(stream, &out)
+}
+
+// ---------------------------------------------------------------------------
+// Roster encoding (Start frame body): [count u32] then per joiner
+// [id u64][addr_len u32][addr bytes].
+// ---------------------------------------------------------------------------
+
+fn encode_roster(roster: &[(usize, String)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(roster.len() as u32).to_le_bytes());
+    for (id, addr) in roster {
+        out.extend_from_slice(&(*id as u64).to_le_bytes());
+        out.extend_from_slice(&(addr.len() as u32).to_le_bytes());
+        out.extend_from_slice(addr.as_bytes());
+    }
+    out
+}
+
+fn decode_roster(body: &[u8]) -> Result<Vec<(usize, String)>> {
+    let mut b = body;
+    let take = |b: &mut &[u8], n: usize| -> Result<Vec<u8>> {
+        if b.len() < n {
+            return Err(Error::net("truncated roster"));
+        }
+        let (head, tail) = b.split_at(n);
+        *b = tail;
+        Ok(head.to_vec())
+    };
+    let count = u32::from_le_bytes(take(&mut b, 4)?.try_into().expect("4 bytes")) as usize;
+    if count > 4096 {
+        return Err(Error::net(format!("implausible roster of {count} entries")));
+    }
+    let mut roster = Vec::with_capacity(count);
+    for _ in 0..count {
+        let id = u64::from_le_bytes(take(&mut b, 8)?.try_into().expect("8 bytes")) as usize;
+        let len = u32::from_le_bytes(take(&mut b, 4)?.try_into().expect("4 bytes")) as usize;
+        if len > 256 {
+            return Err(Error::net("implausible roster address"));
+        }
+        let addr = String::from_utf8(take(&mut b, len)?)
+            .map_err(|_| Error::net("non-utf8 roster address"))?;
+        roster.push((id, addr));
+    }
+    if !b.is_empty() {
+        return Err(Error::net("trailing bytes after roster"));
+    }
+    Ok(roster)
+}
+
+// ---------------------------------------------------------------------------
+// Seed
+// ---------------------------------------------------------------------------
+
+fn run_seed(node: &NetNodeConfig) -> Result<NetNodeReport> {
+    let cfg = &node.config;
+    let m = cfg.workers;
+    let listener = TcpListener::bind(&node.listen)
+        .map_err(|e| Error::net(format!("cannot listen on {}: {e}", node.listen)))?;
+
+    // Accept and admit m-1 joiners.  streams[id] is the link to that
+    // worker; the seed is id 0.
+    let mut streams: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
+    let mut roster: Vec<(usize, String)> = Vec::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    for next_id in 1..m {
+        let (mut stream, _) = listener
+            .accept()
+            .map_err(|e| Error::net(format!("accept failed: {e}")))?;
+        stream.set_nodelay(true).ok();
+        let mut reader = FrameReader::new();
+        let frame = read_frame_blocking(&mut stream, &mut reader, &mut buf)?;
+        if frame.kind != FrameKind::Join {
+            return Err(Error::net(format!("expected a join, got {:?}", frame.kind)));
+        }
+        let peer_addr = String::from_utf8(frame.body.clone())
+            .map_err(|_| Error::net("non-utf8 listen address in join"))?;
+        send_frame(&mut stream, FrameKind::JoinAck, 0, &encode_join_ack(next_id, 0, cfg))?;
+        if !peer_addr.is_empty() {
+            roster.push((next_id, peer_addr));
+        }
+        if reader.has_partial() {
+            return Err(Error::net("unexpected bytes after join"));
+        }
+        streams[next_id] = Some(stream);
+    }
+    if m > 2 && roster.len() != m - 1 {
+        return Err(Error::net(
+            "fleets larger than two processes need every joiner to pass --listen",
+        ));
+    }
+
+    // Roster complete: broadcast Start and run.
+    let roster_body = encode_roster(&roster);
+    for s in streams.iter_mut().flatten() {
+        send_frame(s, FrameKind::Start, 0, &roster_body)?;
+    }
+    let (core, mut readers, messages, bytes) = run_worker_loop(0, node, &mut streams)?;
+    let shard_weights = core.weight_values();
+
+    // Collect Leave frames: each joiner ships its final shard weights.
+    // The worker loop's readers carry over — a fast joiner's Leave may
+    // already be buffered behind its Done frame.
+    let mut fleet: Vec<f64> = shard_weights.clone();
+    for id in 1..m {
+        let stream = streams[id].as_mut().expect("joiner stream");
+        stream.set_nonblocking(false).map_err(|e| Error::net(format!("socket mode: {e}")))?;
+        loop {
+            let frame = read_frame_blocking(stream, &mut readers[id], &mut buf)?;
+            match frame.kind {
+                FrameKind::Leave => {
+                    if frame.body.len() != fleet.len() * 8 {
+                        return Err(Error::net("leave frame with wrong weight count"));
+                    }
+                    for (k, chunk) in frame.body.chunks_exact(8).enumerate() {
+                        fleet[k] += f64::from_le_bytes(chunk.try_into().expect("8 bytes"));
+                    }
+                    break;
+                }
+                // Stragglers from the gossip phase already counted via
+                // the Done protocol; anything else here is a bug.
+                other => {
+                    return Err(Error::net(format!("expected leave, got {other:?}")));
+                }
+            }
+        }
+    }
+    let total: f64 = fleet.iter().sum::<f64>() / fleet.len() as f64;
+    println!("fleet mass {total:.6}");
+    println!("fleet messages {messages} bytes {bytes}");
+    Ok(NetNodeReport {
+        id: 0,
+        shard_weights,
+        fleet_shard_mass: Some(fleet),
+        messages,
+        bytes,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Joiner
+// ---------------------------------------------------------------------------
+
+fn run_joiner(node: &NetNodeConfig, seed_addr: &str) -> Result<NetNodeReport> {
+    // Dial the seed with retries — the seed process may still be binding.
+    let mut seed_stream = None;
+    for _ in 0..100 {
+        match TcpStream::connect(seed_addr) {
+            Ok(s) => {
+                seed_stream = Some(s);
+                break;
+            }
+            Err(_) => crate::sync::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let mut seed_stream = seed_stream
+        .ok_or_else(|| Error::net(format!("could not reach seed at {seed_addr}")))?;
+    seed_stream.set_nodelay(true).ok();
+
+    // Optional mesh listener (required for fleets of more than two).
+    let listener = if node.listen.is_empty() {
+        None
+    } else {
+        Some(
+            TcpListener::bind(&node.listen)
+                .map_err(|e| Error::net(format!("cannot listen on {}: {e}", node.listen)))?,
+        )
+    };
+
+    // Join handshake: send our mesh address, await the config replay.
+    send_frame(&mut seed_stream, FrameKind::Join, 0, node.listen.as_bytes())?;
+    let mut reader = FrameReader::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut shake = JoinHandshake::start(1);
+    let frame = read_frame_blocking(&mut seed_stream, &mut reader, &mut buf)?;
+    if frame.kind != FrameKind::JoinAck {
+        return Err(Error::net(format!("expected a join ack, got {:?}", frame.kind)));
+    }
+    shake.on_ack(&frame.body);
+    let (id, cfg) = match shake {
+        JoinHandshake::Admitted { id, config, .. } => (id, config),
+        JoinHandshake::Failed(why) => return Err(Error::net(why)),
+        JoinHandshake::AwaitingAck { .. } => unreachable!("ack was delivered"),
+    };
+    let m = cfg.workers;
+
+    // Await Start + roster, then mesh: we dial every joiner with a
+    // smaller id; joiners with larger ids dial us.
+    let frame = read_frame_blocking(&mut seed_stream, &mut reader, &mut buf)?;
+    if frame.kind != FrameKind::Start {
+        return Err(Error::net(format!("expected start, got {:?}", frame.kind)));
+    }
+    let roster = decode_roster(&frame.body)?;
+    let mut streams: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
+    for (peer_id, addr) in &roster {
+        if *peer_id >= id || *peer_id == 0 {
+            continue;
+        }
+        let mut s = TcpStream::connect(addr.as_str())
+            .map_err(|e| Error::net(format!("cannot mesh with worker {peer_id} at {addr}: {e}")))?;
+        s.set_nodelay(true).ok();
+        send_frame(&mut s, FrameKind::Join, 0, &(id as u64).to_le_bytes())?;
+        streams[*peer_id] = Some(s);
+    }
+    let expected_inbound = (id + 1..m).len();
+    if let Some(listener) = &listener {
+        for _ in 0..expected_inbound {
+            let (mut s, _) = listener
+                .accept()
+                .map_err(|e| Error::net(format!("mesh accept failed: {e}")))?;
+            s.set_nodelay(true).ok();
+            let mut r = FrameReader::new();
+            let hello = read_frame_blocking(&mut s, &mut r, &mut buf)?;
+            if hello.kind != FrameKind::Join || hello.body.len() != 8 {
+                return Err(Error::net("malformed mesh hello"));
+            }
+            let peer_id =
+                u64::from_le_bytes(hello.body[..8].try_into().expect("8 bytes")) as usize;
+            if peer_id <= id || peer_id >= m {
+                return Err(Error::net(format!("mesh hello from implausible worker {peer_id}")));
+            }
+            streams[peer_id] = Some(s);
+        }
+    } else if expected_inbound > 0 {
+        return Err(Error::net("this joiner needs --listen to accept mesh links"));
+    }
+    streams[0] = Some(seed_stream);
+
+    let mut node_cfg = node.clone();
+    node_cfg.config = cfg;
+    let (core, _readers, messages, bytes) = run_worker_loop(id, &node_cfg, &mut streams)?;
+    let shard_weights = core.weight_values();
+
+    // Ship our final weights home and leave.
+    let mut body = Vec::with_capacity(shard_weights.len() * 8);
+    for w in &shard_weights {
+        body.extend_from_slice(&w.to_le_bytes());
+    }
+    let seed = streams[0].as_mut().expect("seed stream");
+    seed.set_nonblocking(false).map_err(|e| Error::net(format!("socket mode: {e}")))?;
+    send_frame(seed, FrameKind::Leave, 0, &body)?;
+    Ok(NetNodeReport { id, shard_weights, fleet_shard_mass: None, messages, bytes })
+}
+
+// ---------------------------------------------------------------------------
+// The shared worker loop: the loopback driver's protocol over TCP.
+// ---------------------------------------------------------------------------
+
+fn run_worker_loop(
+    id: usize,
+    node: &NetNodeConfig,
+    streams: &mut [Option<TcpStream>],
+) -> Result<(ProtocolCore, Vec<FrameReader>, u64, u64)> {
+    let cfg = &node.config;
+    let m = cfg.workers;
+    for s in streams.iter_mut().flatten() {
+        s.set_nonblocking(true).map_err(|e| Error::net(format!("socket mode: {e}")))?;
+    }
+    let mut core = ProtocolCore::new(id, m, cfg.dim, cfg.p, cfg.topology, cfg.shards)?
+        .with_codec(cfg.codec);
+    let mut source: Box<dyn GradSource> =
+        Box::new(QuadraticSource::new(cfg.dim, node.sigma, cfg.seed));
+    let mut rng = Rng::new(cfg.seed).split(id as u64 + 1);
+    let mut x = FlatVec::zeros(cfg.dim);
+    let mut grad = FlatVec::zeros(cfg.dim);
+    let mut readers: Vec<FrameReader> = (0..m).map(|_| FrameReader::new()).collect();
+    let mut done_from = vec![false; m];
+    done_from[id] = true;
+    let mut open: Vec<bool> = streams.iter().map(|s| s.is_some()).collect();
+    let mut buf = vec![0u8; 64 * 1024];
+    let (mut messages, mut bytes) = (0u64, 0u64);
+    let mut frame_out = Vec::new();
+    let mut body_out = Vec::new();
+
+    let mut drain = |streams: &mut [Option<TcpStream>],
+                     readers: &mut [FrameReader],
+                     done_from: &mut [bool],
+                     open: &mut [bool],
+                     core: &mut ProtocolCore,
+                     x: &mut FlatVec|
+     -> Result<()> {
+        for v in 0..m {
+            if v == id || !open[v] || done_from[v] {
+                // A peer that announced Done sends nothing further for
+                // this phase (FIFO stream): stop reading so its Leave
+                // frame stays buffered for the collection phase.
+                continue;
+            }
+            let Some(stream) = streams[v].as_mut() else { continue };
+            let alive = pump(stream, &mut readers[v], &mut buf)?;
+            while !done_from[v] {
+                let Some(frame) = readers[v].try_next()? else { break };
+                match frame.kind {
+                    FrameKind::Gossip => {
+                        let msg = Message::decode_body(&frame.body)?;
+                        core.absorb_message(x, &msg)?;
+                    }
+                    FrameKind::Done => done_from[v] = true,
+                    other => {
+                        return Err(Error::net(format!("unexpected {other:?} during gossip")));
+                    }
+                }
+            }
+            if !alive {
+                // Peer closed: a torn frame prefix is discarded (its
+                // mass lives with the sender); a closed peer that never
+                // sent Done cannot hold up the finale.
+                open[v] = false;
+                done_from[v] = true;
+            }
+        }
+        Ok(())
+    };
+
+    for step in 0..cfg.steps_per_worker {
+        drain(streams, &mut readers, &mut done_from, &mut open, &mut core, &mut x)?;
+        let _loss = source.grad(id + 1, &x, step, &mut grad)?;
+        core.local_step(&mut x, &grad, cfg.eta, cfg.weight_decay)?;
+        if let Some(out) = core.emit(&x, m, &mut rng)? {
+            let to = out.to;
+            let msg = out.into_message(id, step);
+            bytes += msg.wire_bytes() as u64;
+            messages += 1;
+            body_out.clear();
+            msg.encode_body(&mut body_out);
+            frame_out.clear();
+            encode_frame(&mut frame_out, FrameKind::Gossip, 0, &body_out);
+            if let Some(stream) = streams[to].as_mut() {
+                write_all(stream, &frame_out)?;
+            }
+        }
+    }
+    // Done finale: announce, then drain until everyone announced.
+    frame_out.clear();
+    encode_frame(&mut frame_out, FrameKind::Done, 0, &[]);
+    for v in 0..m {
+        if v != id {
+            if let Some(stream) = streams[v].as_mut() {
+                write_all(stream, &frame_out)?;
+            }
+        }
+    }
+    while !done_from.iter().all(|&d| d) {
+        drain(streams, &mut readers, &mut done_from, &mut open, &mut core, &mut x)?;
+        crate::sync::thread::yield_now();
+    }
+    Ok((core, readers, messages, bytes))
+}

@@ -97,10 +97,10 @@ pub mod atomic {
 /// back to their plain behavior outside a model.
 pub mod thread {
     #[cfg(not(loom))]
-    pub use std::thread::{scope, spawn, yield_now, JoinHandle, Scope, ScopedJoinHandle};
+    pub use std::thread::{scope, sleep, spawn, yield_now, JoinHandle, Scope, ScopedJoinHandle};
 
     #[cfg(loom)]
-    pub use std::thread::{scope, Scope, ScopedJoinHandle};
+    pub use std::thread::{scope, sleep, Scope, ScopedJoinHandle};
 
     #[cfg(loom)]
     pub use super::model::{spawn, yield_now, JoinHandle};

@@ -1,10 +1,16 @@
-//! Threaded worker runtime (native-thread GoSGD, paper Algorithm 3).
+//! Worker runtimes (native-thread and networked GoSGD, paper Algorithm 3).
 //!
 //! The sequential [`Engine`](crate::strategies::Engine) realizes the
-//! paper's *analysis* clock; this module realizes the *deployment* shape:
-//! one OS thread per worker, real concurrent queues, no global
-//! coordination.  See [`threaded::ThreadedGossip`].
+//! paper's *analysis* clock; this module realizes the *deployment* shapes:
+//! one OS thread per worker with direct queue handoff
+//! ([`threaded::ThreadedGossip`]), and the same protocol with the full
+//! wire stack — frame codec, connection manager, loopback pipes — in the
+//! transport ([`net::NetGossip`]).  The two are bit-identical under the
+//! lockstep schedule (`rust/tests/runtime_equivalence.rs`); the real
+//! multi-process sockets live in [`crate::net::runtime`].
 
+pub mod net;
 pub mod threaded;
 
+pub use net::{GossipTrace, LockstepReport, NetGossip};
 pub use threaded::{ThreadedGossip, ThreadedReport};

@@ -1,0 +1,582 @@
+//! Networked GoSGD: `ProtocolCore`'s fourth driver.
+//!
+//! [`NetGossip`] mirrors [`ThreadedGossip`](super::ThreadedGossip)'s API
+//! — same configuration fields, same `run(init, make_source)` shape, same
+//! report — but the transport is the `crate::net` stack instead of direct
+//! queue handoff: every message is *serialized* through the versioned
+//! frame codec, travels a byte pipe, and is *decoded from untrusted
+//! bytes* on the far side.  Two modes:
+//!
+//! * [`NetGossip::run`] — one OS thread per worker over in-process
+//!   [`LoopbackPipe`]s: the threaded runtime's deployment shape with the
+//!   wire in the middle.  The finale is the **Done protocol**: a worker
+//!   that has taken its last step sends a `Done` frame to every peer and
+//!   then drains until it holds a `Done` from each of them — pipes are
+//!   FIFO, so `Done` from `v` proves no more gossip from `v` is coming,
+//!   and the cutoff is exact: every emitted message is absorbed and the
+//!   fleet's sum-weight mass is exactly 1 at the end.
+//! * [`NetGossip::run_lockstep`] — the same protocol under a
+//!   deterministic round-robin schedule (worker 0..M-1 each global
+//!   round, per-worker rngs split identically to the threaded runtime).
+//!   This is the **bit-identity surface**: `rust/tests/
+//!   runtime_equivalence.rs` drives the identical schedule over direct
+//!   queue handoff and asserts final params, shard weights, counters and
+//!   the [`GossipTrace`] hash all match bit-for-bit — proving the frame
+//!   codec is a transparent transport, not a numerics participant.
+//!
+//! The real-socket runtime (`gosgd net --listen/--join`) lives in
+//! [`crate::net::runtime`] and drives the same protocol over
+//! `TcpStream`s.
+
+use crate::error::{Error, Result};
+use crate::gossip::{CodecSpec, Message, ProtocolCore, TopologySpec};
+use crate::net::conn::{ConnManager, LoopbackPipe};
+use crate::net::frame::{encode_frame, FrameKind, FrameReader, FRAME_HEADER_BYTES};
+use crate::strategies::grad::GradSource;
+use crate::sync::Arc;
+use crate::tensor::{BufferPool, FlatVec};
+use crate::util::rng::Rng;
+use crate::worker::ThreadedReport;
+
+/// Order-sensitive FNV-1a digest of a run's gossip events.
+///
+/// Both sides of the bit-identity test hash their absorb/emit streams
+/// with this exact helper; equal hashes mean the two transports delivered
+/// the same messages, in the same order, with the same bits.
+#[derive(Clone, Copy, Debug)]
+pub struct GossipTrace(u64);
+
+impl Default for GossipTrace {
+    fn default() -> Self {
+        GossipTrace(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl GossipTrace {
+    pub fn new() -> Self {
+        GossipTrace::default()
+    }
+
+    fn mix(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    /// Record one absorbed message at `receiver`.
+    pub fn absorb(&mut self, receiver: usize, msg: &Message) {
+        self.mix(1);
+        self.mix(receiver as u64);
+        self.mix(msg.sender as u64);
+        self.mix(msg.sent_at_step);
+        self.mix(msg.shard.index as u64);
+        self.mix(msg.weight.value().to_bits());
+    }
+
+    /// Record one emitted message leaving `sender`.
+    pub fn emit(&mut self, sender: usize, to: usize, msg: &Message) {
+        self.mix(2);
+        self.mix(sender as u64);
+        self.mix(to as u64);
+        self.mix(msg.sent_at_step);
+        self.mix(msg.shard.index as u64);
+        self.mix(msg.weight.value().to_bits());
+        self.mix(msg.wire_bytes() as u64);
+    }
+
+    pub fn hash(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Configuration for a networked gossip run.  Field-for-field the same
+/// knobs as [`ThreadedGossip`](super::ThreadedGossip), plus the per-peer
+/// outbox bound the connection layer enforces.
+#[derive(Clone, Debug)]
+pub struct NetGossip {
+    pub workers: usize,
+    /// Exchange probability per local step.
+    pub p: f64,
+    /// Local steps per worker.
+    pub steps_per_worker: u64,
+    pub eta: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    /// Receiver-selection topology (see [`crate::gossip::topology`]).
+    pub topology: TopologySpec,
+    /// Shards per gossip event (see [`crate::gossip::shard`]).
+    pub shards: usize,
+    /// Payload codec for message bodies (see [`crate::gossip::codec`]).
+    pub codec: CodecSpec,
+    /// Per-peer outbox capacity before coalescing backpressure kicks in.
+    pub outbox_cap: usize,
+}
+
+impl Default for NetGossip {
+    fn default() -> Self {
+        NetGossip {
+            workers: 8,
+            p: 0.02,
+            steps_per_worker: 100,
+            eta: 0.1,
+            weight_decay: 1e-4,
+            seed: 0,
+            topology: TopologySpec::UniformRandom,
+            shards: 1,
+            codec: CodecSpec::Dense,
+            outbox_cap: 1024,
+        }
+    }
+}
+
+/// Outcome of a lockstep run: the [`ThreadedReport`] fields that are
+/// schedule-deterministic, plus the event-stream digest.
+pub struct LockstepReport {
+    pub params: Vec<FlatVec>,
+    pub weights: Vec<f64>,
+    pub shard_weights: Vec<Vec<f64>>,
+    pub losses: Vec<Vec<(u64, f64)>>,
+    pub messages: u64,
+    pub bytes: u64,
+    pub raw_bytes: u64,
+    pub trace_hash: u64,
+}
+
+impl NetGossip {
+    fn validate(&self, dim: usize) -> Result<()> {
+        if self.workers < 2 {
+            return Err(Error::config("net gossip needs >= 2 workers"));
+        }
+        if self.shards == 0 {
+            return Err(Error::config("shards must be >= 1"));
+        }
+        if self.shards > dim {
+            return Err(Error::config(format!(
+                "cannot cut {dim} parameters into {} shards",
+                self.shards
+            )));
+        }
+        if self.codec == (CodecSpec::TopK { k: 0 }) {
+            return Err(Error::config("top-k codec needs k >= 1"));
+        }
+        self.topology.validate_for(self.workers)
+    }
+
+    /// Run the protocol over loopback pipes, one OS thread per worker.
+    /// `make_source(worker_id)` is called on each worker thread (0-based
+    /// ids), exactly like the threaded runtime.
+    pub fn run<F>(&self, init: &FlatVec, make_source: F) -> Result<ThreadedReport>
+    where
+        F: Fn(usize) -> Result<Box<dyn GradSource>> + Send + Sync,
+    {
+        self.validate(init.len())?;
+        let m = self.workers;
+        // pipes[from][to]: the byte stream `from` writes and `to` reads.
+        let pipes: Arc<Vec<Vec<Arc<LoopbackPipe>>>> = Arc::new(
+            (0..m).map(|_| (0..m).map(|_| Arc::new(LoopbackPipe::new())).collect()).collect(),
+        );
+        let pool = BufferPool::shared();
+        let base_rng = Rng::new(self.seed);
+
+        type WorkerOut = (FlatVec, ProtocolCore, Vec<(u64, f64)>, u64, u64, u64);
+
+        let t0 = std::time::Instant::now();
+        let outs: Vec<WorkerOut> = crate::sync::thread::scope(|scope| -> Result<Vec<WorkerOut>> {
+            let mut handles = Vec::new();
+            for w in 0..m {
+                let pipes = pipes.clone();
+                let pool = pool.clone();
+                let mut rng = base_rng.split(w as u64 + 1);
+                let make_source = &make_source;
+                let cfg = self.clone();
+                let init = init.clone();
+                handles.push(scope.spawn(move || -> Result<WorkerOut> {
+                    let body = (|| -> Result<WorkerOut> {
+                        let mut source = make_source(w)?;
+                        if source.dim() != init.len() {
+                            return Err(Error::shape("grad source dim mismatch"));
+                        }
+                        let mut core = ProtocolCore::new(
+                            w,
+                            m,
+                            init.len(),
+                            cfg.p,
+                            cfg.topology,
+                            cfg.shards,
+                        )?
+                        .with_codec(cfg.codec)
+                        .with_pool(pool);
+                        let mut cm = ConnManager::new(m, cfg.outbox_cap);
+                        let mut readers: Vec<FrameReader> =
+                            (0..m).map(|_| FrameReader::new()).collect();
+                        let mut done_from = vec![false; m];
+                        done_from[w] = true;
+                        let mut chunk: Vec<u8> = Vec::new();
+
+                        let mut x = init;
+                        let mut grad = FlatVec::zeros(x.len());
+                        let mut losses = Vec::with_capacity(cfg.steps_per_worker as usize);
+                        let (mut messages, mut bytes, mut raw_bytes) = (0u64, 0u64, 0u64);
+
+                        // Drain every readable inbound frame once.
+                        let mut drain = |core: &mut ProtocolCore,
+                                         x: &mut FlatVec,
+                                         readers: &mut [FrameReader],
+                                         done_from: &mut [bool]|
+                         -> Result<usize> {
+                            let mut absorbed = 0;
+                            for v in 0..m {
+                                if v == w {
+                                    continue;
+                                }
+                                let pipe = &pipes[v][w];
+                                loop {
+                                    chunk.clear();
+                                    if pipe.read_into(&mut chunk, 64 * 1024) == 0 {
+                                        break;
+                                    }
+                                    readers[v].feed(&chunk);
+                                }
+                                while let Some(frame) = readers[v].try_next()? {
+                                    pipe.ack((FRAME_HEADER_BYTES + frame.body.len()) as u64);
+                                    match frame.kind {
+                                        FrameKind::Gossip => {
+                                            let msg = Message::decode_body(&frame.body)?;
+                                            core.absorb_message(x, &msg)?;
+                                            absorbed += 1;
+                                        }
+                                        FrameKind::Done => done_from[v] = true,
+                                        other => {
+                                            return Err(Error::net(format!(
+                                                "unexpected {other:?} frame in a static fleet"
+                                            )));
+                                        }
+                                    }
+                                }
+                            }
+                            Ok(absorbed)
+                        };
+
+                        for step in 0..cfg.steps_per_worker {
+                            // 1. ProcessMessages: fold in whatever the wire
+                            //    has delivered so far.
+                            drain(&mut core, &mut x, &mut readers, &mut done_from)?;
+                            // 2. local gradient step
+                            let loss = source.grad(w + 1, &x, step, &mut grad)?;
+                            core.local_step(&mut x, &grad, cfg.eta, cfg.weight_decay)?;
+                            losses.push((step, loss));
+                            // 3. Bernoulli(p) send, framed onto the wire
+                            if let Some(out) = core.emit(&x, m, &mut rng)? {
+                                let to = out.to;
+                                let msg = out.into_message(w, step);
+                                messages += 1;
+                                bytes += msg.wire_bytes() as u64;
+                                raw_bytes += msg.raw_wire_bytes() as u64;
+                                cm.enqueue(to, msg);
+                                cm.flush(to, 0, &pipes[w][to]);
+                            }
+                        }
+
+                        // Done protocol: announce our cutoff, then drain
+                        // until every peer has announced theirs.  FIFO
+                        // pipes make this exact — after Done from v, no
+                        // gossip from v can follow.
+                        for v in 0..m {
+                            if v != w {
+                                cm.send_control(FrameKind::Done, 0, &[], &pipes[w][v]);
+                            }
+                        }
+                        while !done_from.iter().all(|&d| d) {
+                            if drain(&mut core, &mut x, &mut readers, &mut done_from)? == 0 {
+                                crate::sync::thread::yield_now();
+                            }
+                        }
+                        // One last sweep: frames that landed between the
+                        // final absorb and the last Done are already in —
+                        // but a cheap extra drain keeps the invariant
+                        // obvious.
+                        drain(&mut core, &mut x, &mut readers, &mut done_from)?;
+
+                        Ok((x, core, losses, messages, bytes, raw_bytes))
+                    })();
+                    if body.is_err() {
+                        // A failed worker must still release its peers
+                        // from the Done wait before surfacing the error.
+                        let mut buf = Vec::new();
+                        for v in 0..m {
+                            if v != w {
+                                buf.clear();
+                                encode_frame(&mut buf, FrameKind::Done, 0, &[]);
+                                pipes[w][v].write(&buf);
+                            }
+                        }
+                    }
+                    body
+                }));
+            }
+            let mut outs = Vec::with_capacity(m);
+            for h in handles {
+                outs.push(h.join().map_err(|_| Error::worker("net worker thread panicked"))??);
+            }
+            Ok(outs)
+        })?;
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let mut params = Vec::with_capacity(m);
+        let mut cores = Vec::with_capacity(m);
+        let mut losses = Vec::with_capacity(m);
+        let (mut messages, mut bytes, mut raw_bytes) = (0u64, 0u64, 0u64);
+        for (x, core, l, msgs, b, rb) in outs {
+            params.push(x);
+            cores.push(core);
+            losses.push(l);
+            messages += msgs;
+            bytes += b;
+            raw_bytes += rb;
+        }
+        let shard_weights: Vec<Vec<f64>> = cores.iter().map(|c| c.weight_values()).collect();
+        let weights: Vec<f64> = cores.iter().map(|c| c.mean_weight()).collect();
+
+        let mean = FlatVec::mean_of(&params.iter().collect::<Vec<_>>())?;
+        let mut consensus_error = 0.0;
+        for p in &params {
+            consensus_error += p.dist_sq(&mean)?;
+        }
+
+        Ok(ThreadedReport {
+            params,
+            weights,
+            shard_weights,
+            losses,
+            messages,
+            bytes,
+            raw_bytes,
+            elapsed_secs: elapsed,
+            consensus_error,
+        })
+    }
+
+    /// Run the protocol single-threaded under the canonical round-robin
+    /// lockstep schedule, with the full frame codec in the transport.
+    ///
+    /// Schedule contract (shared with the reference driver in
+    /// `rust/tests/runtime_equivalence.rs`): each global round steps
+    /// workers `0..M-1` in order through {drain → grad → local step →
+    /// emit}; worker `w`'s rng is `Rng::new(seed).split(w + 1)`; inbound
+    /// messages are absorbed in arrival order, which under this schedule
+    /// is senders `w+1..M` (previous round) then `0..w` (this round).
+    pub fn run_lockstep<F>(&self, init: &FlatVec, make_source: F) -> Result<LockstepReport>
+    where
+        F: Fn(usize) -> Result<Box<dyn GradSource>>,
+    {
+        self.validate(init.len())?;
+        let m = self.workers;
+        let pool = BufferPool::shared();
+        let base_rng = Rng::new(self.seed);
+
+        let pipes: Vec<Vec<LoopbackPipe>> =
+            (0..m).map(|_| (0..m).map(|_| LoopbackPipe::new()).collect()).collect();
+        let mut readers: Vec<Vec<FrameReader>> =
+            (0..m).map(|_| (0..m).map(|_| FrameReader::new()).collect()).collect();
+        let mut cms: Vec<ConnManager> =
+            (0..m).map(|_| ConnManager::new(m, self.outbox_cap)).collect();
+
+        let mut sources = Vec::with_capacity(m);
+        let mut cores = Vec::with_capacity(m);
+        let mut rngs = Vec::with_capacity(m);
+        let mut params = Vec::with_capacity(m);
+        for w in 0..m {
+            let source = make_source(w)?;
+            if source.dim() != init.len() {
+                return Err(Error::shape("grad source dim mismatch"));
+            }
+            sources.push(source);
+            cores.push(
+                ProtocolCore::new(w, m, init.len(), self.p, self.topology, self.shards)?
+                    .with_codec(self.codec)
+                    .with_pool(pool.clone()),
+            );
+            rngs.push(base_rng.split(w as u64 + 1));
+            params.push(init.clone());
+        }
+
+        let mut losses: Vec<Vec<(u64, f64)>> = vec![Vec::new(); m];
+        let (mut messages, mut bytes, mut raw_bytes) = (0u64, 0u64, 0u64);
+        let mut trace = GossipTrace::new();
+        let mut grad = FlatVec::zeros(init.len());
+        let mut chunk: Vec<u8> = Vec::new();
+
+        // Absorb everything currently deliverable to `w`, in the
+        // schedule's canonical arrival order.
+        let drain = |w: usize,
+                     core: &mut ProtocolCore,
+                     x: &mut FlatVec,
+                     readers: &mut Vec<Vec<FrameReader>>,
+                     chunk: &mut Vec<u8>,
+                     trace: &mut GossipTrace|
+         -> Result<()> {
+            for off in 1..m {
+                let v = (w + off) % m;
+                let pipe = &pipes[v][w];
+                loop {
+                    chunk.clear();
+                    if pipe.read_into(chunk, 64 * 1024) == 0 {
+                        break;
+                    }
+                    readers[w][v].feed(chunk);
+                }
+                while let Some(frame) = readers[w][v].try_next()? {
+                    pipe.ack((FRAME_HEADER_BYTES + frame.body.len()) as u64);
+                    let msg = Message::decode_body(&frame.body)?;
+                    trace.absorb(w, &msg);
+                    core.absorb_message(x, &msg)?;
+                }
+            }
+            Ok(())
+        };
+
+        for step in 0..self.steps_per_worker {
+            for w in 0..m {
+                drain(w, &mut cores[w], &mut params[w], &mut readers, &mut chunk, &mut trace)?;
+                let loss = sources[w].grad(w + 1, &params[w], step, &mut grad)?;
+                cores[w].local_step(&mut params[w], &grad, self.eta, self.weight_decay)?;
+                losses[w].push((step, loss));
+                if let Some(out) = cores[w].emit(&params[w], m, &mut rngs[w])? {
+                    let to = out.to;
+                    let msg = out.into_message(w, step);
+                    trace.emit(w, to, &msg);
+                    messages += 1;
+                    bytes += msg.wire_bytes() as u64;
+                    raw_bytes += msg.raw_wire_bytes() as u64;
+                    cms[w].enqueue(to, msg);
+                    cms[w].flush(to, 0, &pipes[w][to]);
+                }
+            }
+        }
+        // Final drain: no emits happen past this point, so one pass per
+        // worker empties every pipe.
+        for w in 0..m {
+            drain(w, &mut cores[w], &mut params[w], &mut readers, &mut chunk, &mut trace)?;
+        }
+
+        let shard_weights: Vec<Vec<f64>> = cores.iter().map(|c| c.weight_values()).collect();
+        let weights: Vec<f64> = cores.iter().map(|c| c.mean_weight()).collect();
+        Ok(LockstepReport {
+            params,
+            weights,
+            shard_weights,
+            losses,
+            messages,
+            bytes,
+            raw_bytes,
+            trace_hash: trace.hash(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::grad::QuadraticSource;
+
+    fn quad_factory(
+        dim: usize,
+        sigma: f32,
+        seed: u64,
+    ) -> impl Fn(usize) -> Result<Box<dyn GradSource>> + Send + Sync {
+        move |_w| Ok(Box::new(QuadraticSource::new(dim, sigma, seed)) as Box<dyn GradSource>)
+    }
+
+    #[test]
+    fn loopback_run_conserves_weight_mass() {
+        let dim = 64;
+        let cfg = NetGossip {
+            workers: 4,
+            p: 0.3,
+            steps_per_worker: 200,
+            eta: 1.0,
+            weight_decay: 0.0,
+            seed: 1,
+            ..NetGossip::default()
+        };
+        let rep = cfg.run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 7)).unwrap();
+        assert_eq!(rep.params.len(), 4);
+        let total: f64 = rep.weights.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "fleet mass {total}");
+        assert!(rep.messages > 0, "gossip actually flowed");
+        assert_eq!(rep.bytes > 0, rep.messages > 0);
+    }
+
+    #[test]
+    fn loopback_run_conserves_sharded_q8_mass() {
+        let dim = 64;
+        let cfg = NetGossip {
+            workers: 4,
+            p: 0.5,
+            steps_per_worker: 150,
+            eta: 0.5,
+            weight_decay: 0.0,
+            seed: 3,
+            shards: 4,
+            codec: CodecSpec::QuantizeU8,
+            ..NetGossip::default()
+        };
+        let rep = cfg.run(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 9)).unwrap();
+        for k in 0..4 {
+            let mass: f64 = rep.shard_weights.iter().map(|sw| sw[k]).sum();
+            assert!((mass - 1.0).abs() < 1e-9, "shard {k} mass {mass}");
+        }
+        assert!(rep.raw_bytes > rep.bytes, "q8 actually compressed");
+    }
+
+    #[test]
+    fn lockstep_is_deterministic_across_runs() {
+        let dim = 32;
+        let cfg = NetGossip {
+            workers: 3,
+            p: 0.5,
+            steps_per_worker: 50,
+            eta: 0.5,
+            weight_decay: 0.0,
+            seed: 11,
+            ..NetGossip::default()
+        };
+        let a = cfg.run_lockstep(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 5)).unwrap();
+        let b = cfg.run_lockstep(&FlatVec::zeros(dim), quad_factory(dim, 0.1, 5)).unwrap();
+        assert_eq!(a.trace_hash, b.trace_hash);
+        assert_eq!(a.messages, b.messages);
+        for (pa, pb) in a.params.iter().zip(&b.params) {
+            assert_eq!(
+                pa.as_slice().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                pb.as_slice().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            );
+        }
+    }
+
+    #[test]
+    fn failed_source_factory_does_not_hang_the_fleet() {
+        let cfg = NetGossip { workers: 3, steps_per_worker: 10, ..NetGossip::default() };
+        let dim = 16;
+        let err = cfg
+            .run(&FlatVec::zeros(dim), move |w| {
+                if w == 1 {
+                    Err(Error::config("worker 1 refuses to start"))
+                } else {
+                    Ok(Box::new(QuadraticSource::new(dim, 0.1, 1)) as Box<dyn GradSource>)
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("refuses to start"));
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let cfg = NetGossip { workers: 1, ..NetGossip::default() };
+        assert!(cfg.run_lockstep(&FlatVec::zeros(8), quad_factory(8, 0.1, 1)).is_err());
+        let cfg = NetGossip { workers: 2, shards: 0, ..NetGossip::default() };
+        assert!(cfg.run_lockstep(&FlatVec::zeros(8), quad_factory(8, 0.1, 1)).is_err());
+        let cfg = NetGossip { workers: 2, codec: CodecSpec::TopK { k: 0 }, ..NetGossip::default() };
+        assert!(cfg.run_lockstep(&FlatVec::zeros(8), quad_factory(8, 0.1, 1)).is_err());
+    }
+}

@@ -1,0 +1,497 @@
+//! Fault-injection suite for the networked runtime.
+//!
+//! In the style of `fabric_invariants.rs`, every test here is a
+//! **mass audit**: whatever the fault — a peer killed mid-frame, a
+//! reconnect under a new epoch, a join handshake that never completes —
+//! the per-shard sum-weight mass across the live fleet must come back to
+//! exactly 1 once the repair path has run.  The repair path under test is
+//! the full wire-stack contract:
+//!
+//! * the receiver discards a torn frame prefix without absorbing it
+//!   ([`FrameReader`] never yields a partial frame);
+//! * the sender reclaims every flushed-but-unacked and never-flushed
+//!   message to a dead peer and reabsorbs it
+//!   ([`ConnManager::reclaim_dead`]);
+//! * zombie/ghost traffic is discarded *without acking*
+//!   ([`Membership::admit`]), so its mass stays in the sender's unacked
+//!   log and comes home through the same reclaim;
+//! * a dead worker's own (frozen) state is bequeathed to a sponsor, and a
+//!   rejoining or newly-joining worker is seeded by sponsor halving —
+//!   `set_weight` on the first message per shard — so elasticity moves
+//!   mass but never mints it.
+//!
+//! The fleet here is the loopback harness: real `ProtocolCore`s, real
+//! frames over [`LoopbackPipe`]s, deterministic lockstep rounds — every
+//! fault is injected at an exact byte position and every audit is exact.
+
+use gosgd::gossip::{
+    CodecSpec, EncodedPayload, Message, ProtocolCore, ShardPlan, SumWeight, TopologySpec,
+};
+use gosgd::net::frame::frame_bytes;
+use gosgd::net::{
+    Admit, ConnManager, FrameKind, FrameReader, JoinHandshake, LoopbackPipe, Membership,
+    FRAME_HEADER_BYTES,
+};
+use gosgd::strategies::grad::{GradSource, QuadraticSource};
+use gosgd::tensor::FlatVec;
+use gosgd::util::proptest::check;
+use gosgd::util::rng::Rng;
+
+const ETA: f32 = 0.5;
+
+/// A deterministic loopback fleet with the full wire stack and elastic
+/// membership — the unit under test, assembled from the real parts.
+struct Fleet {
+    dim: usize,
+    shards: usize,
+    p: f64,
+    topology: TopologySpec,
+    codec: CodecSpec,
+    cores: Vec<ProtocolCore>,
+    params: Vec<FlatVec>,
+    sources: Vec<QuadraticSource>,
+    rngs: Vec<Rng>,
+    /// `pipes[from][to]`, `readers[receiver][sender]`.
+    pipes: Vec<Vec<LoopbackPipe>>,
+    readers: Vec<Vec<FrameReader>>,
+    cms: Vec<ConnManager>,
+    membership: Membership,
+    grad: FlatVec,
+}
+
+impl Fleet {
+    fn new(
+        m: usize,
+        dim: usize,
+        shards: usize,
+        p: f64,
+        topology: TopologySpec,
+        codec: CodecSpec,
+        seed: u64,
+    ) -> Fleet {
+        let base = Rng::new(seed);
+        Fleet {
+            dim,
+            shards,
+            p,
+            topology,
+            codec,
+            cores: (0..m)
+                .map(|w| {
+                    ProtocolCore::new(w, m, dim, p, topology, shards).unwrap().with_codec(codec)
+                })
+                .collect(),
+            params: (0..m).map(|_| FlatVec::zeros(dim)).collect(),
+            sources: (0..m).map(|_| QuadraticSource::new(dim, 0.1, seed ^ 0x9A9)).collect(),
+            rngs: (0..m).map(|w| base.split(w as u64 + 1)).collect(),
+            pipes: (0..m).map(|_| (0..m).map(|_| LoopbackPipe::new()).collect()).collect(),
+            readers: (0..m).map(|_| (0..m).map(|_| FrameReader::new()).collect()).collect(),
+            cms: (0..m).map(|_| ConnManager::new(m, 64)).collect(),
+            membership: Membership::new(m),
+            grad: FlatVec::zeros(dim),
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Pull everything deliverable to `w`, applying the admission rule:
+    /// current frames are absorbed and acked; stale (zombie/ghost) frames
+    /// are discarded *without acking*, leaving their mass in the sender's
+    /// unacked log for reclaim.
+    fn drain(&mut self, w: usize) {
+        let m = self.workers();
+        let mut chunk = Vec::new();
+        for v in 0..m {
+            if v == w {
+                continue;
+            }
+            loop {
+                chunk.clear();
+                if self.pipes[v][w].read_into(&mut chunk, 64 * 1024) == 0 {
+                    break;
+                }
+                self.readers[w][v].feed(&chunk);
+            }
+            while let Some(frame) = self.readers[w][v].try_next().unwrap() {
+                match self.membership.admit(v, frame.epoch) {
+                    Admit::Current => {
+                        self.pipes[v][w].ack((FRAME_HEADER_BYTES + frame.body.len()) as u64);
+                        let msg = Message::decode_body(&frame.body).unwrap();
+                        self.cores[w].absorb_message(&mut self.params[w], &msg).unwrap();
+                    }
+                    Admit::Stale => {} // zombie/ghost: drop, do NOT ack
+                    Admit::Future => unreachable!("the harness view is authoritative"),
+                }
+            }
+        }
+    }
+
+    /// One lockstep round: every live worker drains, steps, and maybe
+    /// emits through the alive-mask-repaired gossip path.
+    fn round(&mut self, step: u64) {
+        let m = self.workers();
+        for w in 0..m {
+            if !self.membership.is_alive(w) {
+                continue;
+            }
+            self.drain(w);
+            self.sources[w].grad(w + 1, &self.params[w], step, &mut self.grad).unwrap();
+            self.cores[w].local_step(&mut self.params[w], &self.grad, ETA, 0.0).unwrap();
+            let mask = self.membership.alive_mask();
+            let out = self.cores[w]
+                .emit_alive(&self.params[w], m, &mut self.rngs[w], Some(mask))
+                .unwrap();
+            if let Some(out) = out {
+                let to = out.to;
+                assert!(self.membership.is_alive(to), "repair must never pick a dead peer");
+                let msg = out.into_message(w, step);
+                self.cms[w].enqueue(to, msg);
+                self.cms[w].flush(to, self.membership.epoch(), &self.pipes[w][to]);
+            }
+        }
+    }
+
+    /// Kill worker `d`.  With `tear`, its last frame is cut three bytes
+    /// short — the classic die-mid-write.  Runs the whole repair path:
+    /// zombie discard, bidirectional reclaim + reabsorption, and the
+    /// bequeathal of `d`'s frozen state to the lowest-id survivor.
+    fn kill(&mut self, d: usize, tear: bool, step: u64) {
+        let m = self.workers();
+        if tear {
+            if let Some(s) = (0..m).find(|&v| v != d && self.membership.is_alive(v)) {
+                let out = self.cores[d].emit_to(&self.params[d], s).unwrap();
+                let to = out.to;
+                let msg = out.into_message(d, step);
+                self.cms[d].enqueue(to, msg);
+                self.cms[d].flush(to, self.membership.epoch(), &self.pipes[d][to]);
+                let end = self.pipes[d][to].written();
+                self.pipes[d][to].sever_at(end - 3);
+            }
+        }
+        for v in 0..m {
+            if v != d {
+                self.pipes[d][v].sever_now();
+                self.pipes[v][d].sever_now();
+            }
+        }
+        self.membership.mark_dead(d);
+        // Survivors flush their view: anything still on the wire from `d`
+        // is zombie traffic now — drained, discarded, never acked.
+        for v in 0..m {
+            if self.membership.is_alive(v) {
+                self.drain(v);
+            }
+        }
+        // Reclaim, both directions: `d` takes back what never landed...
+        for v in 0..m {
+            if v == d {
+                continue;
+            }
+            let back = self.cms[d].reclaim_dead(v, &self.pipes[d][v]);
+            for msg in back {
+                self.cores[d].absorb_message(&mut self.params[d], &msg).unwrap();
+            }
+            // ...and every survivor takes back what `d` never processed.
+            let back = self.cms[v].reclaim_dead(d, &self.pipes[v][d]);
+            for msg in back {
+                self.cores[v].absorb_message(&mut self.params[v], &msg).unwrap();
+            }
+        }
+        // Bequeath the frozen state: `d`'s full per-shard weight and
+        // coordinates, as ordinary shard messages into the sponsor.
+        let sponsor = (0..m).find(|&v| self.membership.is_alive(v)).expect("a survivor");
+        let plan = ShardPlan::new(self.dim, self.shards);
+        for k in 0..self.shards {
+            let sh = plan.shard(k);
+            let w_k = self.cores[d].weight_values()[k];
+            let coords = self.params[d].as_slice()[sh.offset..sh.offset + sh.len].to_vec();
+            let msg = Message::for_shard(
+                EncodedPayload::Dense(FlatVec::from_vec(coords)),
+                SumWeight::from_value(w_k),
+                d,
+                step,
+                sh,
+            );
+            self.cores[sponsor].absorb_message(&mut self.params[sponsor], &msg).unwrap();
+        }
+    }
+
+    /// Bring `d` back under a new epoch: fresh streams (both directions),
+    /// fresh frame readers, fresh core — then sponsor-seed it, one
+    /// halving emit per shard, `set_weight` replacing the newcomer's
+    /// placeholder weight.
+    fn rejoin(&mut self, d: usize, step: u64) {
+        let m = self.workers();
+        assert!(self.membership.rejoin(d));
+        for v in 0..m {
+            if v != d {
+                self.pipes[d][v].reopen();
+                self.pipes[v][d].reopen();
+                self.readers[v][d] = FrameReader::new();
+                self.readers[d][v] = FrameReader::new();
+            }
+        }
+        self.cores[d] =
+            ProtocolCore::new(d, m, self.dim, self.p, self.topology, self.shards)
+                .unwrap()
+                .with_codec(self.codec);
+        self.cms[d] = ConnManager::new(m, 64);
+        let sponsor = (0..m).find(|&v| v != d && self.membership.is_alive(v)).expect("sponsor");
+        self.seed_from(sponsor, d, step);
+    }
+
+    /// Sponsor halving: one `emit_to` per shard from `from`; `to` REPLACES
+    /// its shard weight and coordinates with the message (join seeding,
+    /// not an absorb — the placeholder weight of a fresh core never
+    /// counted toward fleet mass).
+    fn seed_from(&mut self, from: usize, to: usize, step: u64) {
+        let mut buf = vec![0.0f32; self.dim];
+        for _ in 0..self.shards {
+            let out = self.cores[from].emit_to(&self.params[from], to).unwrap();
+            let sh = out.shard;
+            let msg = out.into_message(from, step);
+            msg.payload.decode_into(&mut buf[..sh.len]);
+            self.params[to].as_mut_slice()[sh.offset..sh.offset + sh.len]
+                .copy_from_slice(&buf[..sh.len]);
+            self.cores[to].set_weight(sh.index, msg.weight);
+        }
+    }
+
+    /// Per-shard mass summed over live workers.  Exactness is the whole
+    /// point: after repair there is nothing in flight and nothing frozen,
+    /// so this must be 1 to fp rounding.
+    fn live_shard_mass(&self) -> Vec<f64> {
+        let mut totals = vec![0.0f64; self.shards];
+        for w in 0..self.workers() {
+            if !self.membership.is_alive(w) {
+                continue;
+            }
+            for (k, v) in self.cores[w].weight_values().iter().enumerate() {
+                totals[k] += v;
+            }
+        }
+        totals
+    }
+
+    fn assert_mass_one(&self, context: &str) {
+        for (k, total) in self.live_shard_mass().iter().enumerate() {
+            assert!((total - 1.0).abs() < 1e-9, "{context}: shard {k} mass {total}");
+        }
+    }
+}
+
+#[test]
+fn kill_mid_frame_then_repair_restores_exact_mass() {
+    let grid = [(1, CodecSpec::Dense), (4, CodecSpec::Dense), (4, CodecSpec::QuantizeU8)];
+    for (shards, codec) in grid {
+        let mut fleet = Fleet::new(4, 32, shards, 0.8, TopologySpec::UniformRandom, codec, 21);
+        for step in 0..30 {
+            fleet.round(step);
+        }
+        // Worker 2 dies with a frame half-written on the wire.
+        fleet.kill(2, true, 30);
+        fleet.assert_mass_one(&format!("after mid-frame kill (shards {shards}, {codec:?})"));
+        // The survivors keep gossiping around the hole.
+        for step in 30..60 {
+            fleet.round(step);
+            fleet.drain(0);
+            fleet.drain(1);
+            fleet.drain(3);
+            fleet.assert_mass_one("while running degraded");
+        }
+    }
+}
+
+#[test]
+fn reconnect_under_new_epoch_rejoins_and_ghosts_are_discarded() {
+    let mut fleet = Fleet::new(3, 24, 3, 0.7, TopologySpec::UniformRandom, CodecSpec::Dense, 33);
+    for step in 0..20 {
+        fleet.round(step);
+    }
+    fleet.kill(1, true, 20);
+    fleet.assert_mass_one("after kill");
+    let dead_epoch = fleet.membership.epoch();
+    fleet.rejoin(1, 21);
+    assert!(fleet.membership.epoch() > dead_epoch, "rejoin bumps the epoch");
+    fleet.assert_mass_one("after rejoin + sponsor seeding");
+
+    // A ghost: a frame from worker 1's PREVIOUS incarnation (stamped
+    // before its joined_epoch) surfaces at worker 0.  It must be
+    // discarded with the receiver's state bit-unchanged.
+    assert_eq!(fleet.membership.admit(1, dead_epoch), Admit::Stale);
+    let ghost_body = {
+        let plan = ShardPlan::new(24, 3);
+        let sh = plan.shard(0);
+        let msg = Message::for_shard(
+            EncodedPayload::Dense(FlatVec::from_vec(vec![9.0; sh.len])),
+            SumWeight::from_value(0.25),
+            1,
+            5,
+            sh,
+        );
+        msg.to_wire_body()
+    };
+    fleet.pipes[1][0].write(&frame_bytes(FrameKind::Gossip, dead_epoch, &ghost_body));
+    let before_bits: Vec<u32> =
+        fleet.params[0].as_slice().iter().map(|v| v.to_bits()).collect();
+    let before_weights = fleet.cores[0].weight_values();
+    fleet.drain(0);
+    let after_bits: Vec<u32> =
+        fleet.params[0].as_slice().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(before_bits, after_bits, "ghost frame must not blend");
+    assert_eq!(before_weights, fleet.cores[0].weight_values());
+    fleet.assert_mass_one("after ghost discard");
+
+    // The rejoined incarnation's CURRENT traffic flows normally.
+    for step in 21..50 {
+        fleet.round(step);
+    }
+    for w in 0..3 {
+        fleet.drain(w);
+    }
+    fleet.assert_mass_one("after post-rejoin rounds");
+}
+
+#[test]
+fn dropped_join_handshake_times_out_without_touching_fleet_mass() {
+    let mut fleet = Fleet::new(3, 16, 2, 0.6, TopologySpec::UniformRandom, CodecSpec::Dense, 47);
+    for step in 0..15 {
+        fleet.round(step);
+    }
+    // A would-be joiner sends Join; the seed never answers.  The
+    // handshake times out after its poll budget and the joiner walks
+    // away having never touched fleet state.
+    let mut shake = JoinHandshake::start(3);
+    for _ in 0..5 {
+        shake.poll_empty();
+    }
+    assert!(shake.is_terminal());
+    assert!(matches!(shake, JoinHandshake::Failed(_)), "dropped handshake fails cleanly");
+    for w in 0..3 {
+        fleet.drain(w);
+    }
+    fleet.assert_mass_one("after abandoned join");
+}
+
+#[test]
+fn elastic_join_grows_the_fleet_and_conserves_mass() {
+    let m0 = 2;
+    let (dim, shards) = (24, 3);
+    let mut fleet =
+        Fleet::new(m0, dim, shards, 0.7, TopologySpec::UniformRandom, CodecSpec::Dense, 55);
+    for step in 0..20 {
+        fleet.round(step);
+    }
+    // Quiesce the wire so the transport matrix can be rebuilt.
+    for w in 0..m0 {
+        fleet.drain(w);
+    }
+    fleet.assert_mass_one("before join");
+
+    // Membership admits the newcomer under a bumped epoch...
+    let id = fleet.membership.join_new();
+    assert_eq!(id, m0);
+    let m = m0 + 1;
+    // ...and the transport/protocol state grows with it.
+    fleet.pipes = (0..m).map(|_| (0..m).map(|_| LoopbackPipe::new()).collect()).collect();
+    fleet.readers = (0..m).map(|_| (0..m).map(|_| FrameReader::new()).collect()).collect();
+    fleet.cms = (0..m).map(|_| ConnManager::new(m, 64)).collect();
+    fleet.cores.push(
+        ProtocolCore::new(id, m, dim, fleet.p, fleet.topology, shards)
+            .unwrap()
+            .with_codec(fleet.codec),
+    );
+    fleet.params.push(FlatVec::zeros(dim));
+    fleet.sources.push(QuadraticSource::new(dim, 0.1, 55 ^ 0x9A9));
+    fleet.rngs.push(Rng::new(55).split(id as u64 + 1));
+    // Sponsor seeding: worker 0 halves its way into the newcomer.
+    let sponsor_before = fleet.cores[0].weight_values();
+    fleet.seed_from(0, id, 20);
+    for k in 0..shards {
+        let (sp, nw) = (fleet.cores[0].weight_values()[k], fleet.cores[id].weight_values()[k]);
+        assert!((sp + nw - sponsor_before[k]).abs() < 1e-12, "halving moved mass, shard {k}");
+    }
+    fleet.assert_mass_one("right after join seeding");
+
+    // The grown fleet gossips as one.
+    for step in 20..60 {
+        fleet.round(step);
+    }
+    for w in 0..m {
+        fleet.drain(w);
+    }
+    fleet.assert_mass_one("after post-join rounds");
+    assert!(fleet.cores[id].weight_values().iter().all(|&w| w > 0.0));
+}
+
+#[test]
+fn deterministic_topologies_repair_around_dead_peers() {
+    for topo in [TopologySpec::Ring, TopologySpec::PartnerRotation] {
+        let mut fleet = Fleet::new(4, 16, 2, 1.0, topo, CodecSpec::Dense, 61);
+        for step in 0..10 {
+            fleet.round(step);
+        }
+        fleet.kill(2, false, 10);
+        fleet.assert_mass_one(&format!("{topo:?} after kill"));
+        // p = 1: every live worker emits every round; the round() assert
+        // checks no send ever targets the dead peer.
+        for step in 10..40 {
+            fleet.round(step);
+        }
+        for w in [0usize, 1, 3] {
+            fleet.drain(w);
+        }
+        fleet.assert_mass_one(&format!("{topo:?} degraded rounds"));
+    }
+}
+
+#[test]
+fn mass_audit_survives_randomized_kill_schedules() {
+    // fabric_invariants style: random fleet shapes, random kill times,
+    // random tear-vs-clean deaths, sequential kills down to two
+    // survivors — the audit must hold at every checkpoint.
+    check("randomized kill schedules", 12, |rng| {
+        let m = 3 + rng.below(3) as usize; // 3..=5
+        let shards = [1usize, 2, 4][rng.below(3) as usize];
+        let dim = 8 * shards.max(2);
+        let codec = if rng.bernoulli(0.5) { CodecSpec::Dense } else { CodecSpec::QuantizeU8 };
+        let mut fleet = Fleet::new(
+            m,
+            dim,
+            shards,
+            0.9,
+            TopologySpec::UniformRandom,
+            codec,
+            rng.next_u64(),
+        );
+        let mut step = 0u64;
+        let mut live = m;
+        while live > 2 {
+            for _ in 0..(5 + rng.below(10)) {
+                fleet.round(step);
+                step += 1;
+            }
+            let victim = loop {
+                let v = rng.below(m as u64) as usize;
+                if fleet.membership.is_alive(v) {
+                    break v;
+                }
+            };
+            fleet.kill(victim, rng.bernoulli(0.7), step);
+            live -= 1;
+            fleet.assert_mass_one("after randomized kill");
+            for _ in 0..3 {
+                fleet.round(step);
+                step += 1;
+            }
+            for w in 0..m {
+                if fleet.membership.is_alive(w) {
+                    fleet.drain(w);
+                }
+            }
+            fleet.assert_mass_one("between kills");
+        }
+    });
+}

@@ -711,3 +711,170 @@ fn all_three_runtimes_conserve_mass_shard_by_shard_with_topologies() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Networked runtime: the frame codec is a transparent transport.
+// ---------------------------------------------------------------------------
+
+/// Reference driver for [`NetGossip::run_lockstep`]'s schedule contract,
+/// with **direct queue handoff** instead of the wire: each global round
+/// steps workers `0..M-1` in order through {drain → grad → local step →
+/// emit}; worker `w`'s rng is `Rng::new(seed).split(w + 1)`; messages are
+/// absorbed in FIFO arrival order.
+///
+/// Because each worker emits at most one message per round and drains
+/// every round, FIFO queue order here *is* the loopback driver's per-pipe
+/// drain order (senders `w+1..M` from the previous round, then `0..w`
+/// from this round) — so if the frame codec is a transparent transport,
+/// every absorb happens on the same bits in the same order and the final
+/// state is identical down to the last ulp.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn lockstep_queue_reference(
+    dim: usize,
+    m: usize,
+    p: f64,
+    shards: usize,
+    codec: CodecSpec,
+    topo: TopologySpec,
+    steps: u64,
+    seed: u64,
+    eta: f32,
+    grad_seed: u64,
+) -> (Vec<FlatVec>, Vec<Vec<f64>>, u64, u64, u64, u64) {
+    use gosgd::strategies::grad::QuadraticSource;
+    use gosgd::worker::GossipTrace;
+    let base_rng = Rng::new(seed);
+    let mut sources: Vec<QuadraticSource> =
+        (0..m).map(|_| QuadraticSource::new(dim, 0.1, grad_seed)).collect();
+    let mut cores: Vec<ProtocolCore> = (0..m)
+        .map(|w| ProtocolCore::new(w, m, dim, p, topo, shards).unwrap().with_codec(codec))
+        .collect();
+    let mut rngs: Vec<Rng> = (0..m).map(|w| base_rng.split(w as u64 + 1)).collect();
+    let mut params: Vec<FlatVec> = (0..m).map(|_| FlatVec::zeros(dim)).collect();
+    let queues: Vec<MessageQueue> = (0..m).map(|_| MessageQueue::unbounded()).collect();
+    let mut grad = FlatVec::zeros(dim);
+    let mut trace = GossipTrace::new();
+    let (mut messages, mut bytes, mut raw_bytes) = (0u64, 0u64, 0u64);
+    for step in 0..steps {
+        for w in 0..m {
+            for msg in queues[w].drain() {
+                trace.absorb(w, &msg);
+                cores[w].absorb_message(&mut params[w], &msg).unwrap();
+            }
+            sources[w].grad(w + 1, &params[w], step, &mut grad).unwrap();
+            cores[w].local_step(&mut params[w], &grad, eta, 0.0).unwrap();
+            if let Some(out) = cores[w].emit(&params[w], m, &mut rngs[w]).unwrap() {
+                let to = out.to;
+                let msg = out.into_message(w, step);
+                trace.emit(w, to, &msg);
+                messages += 1;
+                bytes += msg.wire_bytes() as u64;
+                raw_bytes += msg.raw_wire_bytes() as u64;
+                queues[to].push(msg);
+            }
+        }
+    }
+    for w in 0..m {
+        for msg in queues[w].drain() {
+            trace.absorb(w, &msg);
+            cores[w].absorb_message(&mut params[w], &msg).unwrap();
+        }
+    }
+    let shard_weights = cores.iter().map(|c| c.weight_values()).collect();
+    (params, shard_weights, messages, bytes, raw_bytes, trace.hash())
+}
+
+#[test]
+fn loopback_network_is_bit_identical_to_queue_transport() {
+    use gosgd::strategies::grad::QuadraticSource;
+    use gosgd::worker::NetGossip;
+    // (shards, codec, topology) grid; 4 workers so the hypercube fits.
+    let grid: [(usize, CodecSpec, TopologySpec); 4] = [
+        (1, CodecSpec::Dense, TopologySpec::UniformRandom),
+        (3, CodecSpec::Dense, TopologySpec::Ring),
+        (4, CodecSpec::QuantizeU8, TopologySpec::Hypercube),
+        (4, CodecSpec::TopK { k: 3 }, TopologySpec::PartnerRotation),
+    ];
+    let (dim, m, p, steps, seed, eta) = (48, 4, 0.6, 120, 117, 0.5f32);
+    for (shards, codec, topo) in grid {
+        let cfg = NetGossip {
+            workers: m,
+            p,
+            steps_per_worker: steps,
+            eta,
+            weight_decay: 0.0,
+            seed,
+            topology: topo,
+            shards,
+            codec,
+            ..NetGossip::default()
+        };
+        let net = cfg
+            .run_lockstep(&FlatVec::zeros(dim), |_w| {
+                Ok(Box::new(QuadraticSource::new(dim, 0.1, 119)) as Box<dyn GradSource>)
+            })
+            .unwrap();
+        let (params, shard_weights, messages, bytes, raw_bytes, trace_hash) =
+            lockstep_queue_reference(dim, m, p, shards, codec, topo, steps, seed, eta, 119);
+
+        // Same messages: count, accounted bytes, and the order-sensitive
+        // digest of every absorb/emit event.
+        assert_eq!(net.messages, messages, "codec {codec:?} topo {topo:?}");
+        assert_eq!(net.bytes, bytes, "codec {codec:?} topo {topo:?}");
+        assert_eq!(net.raw_bytes, raw_bytes, "codec {codec:?} topo {topo:?}");
+        assert_eq!(net.trace_hash, trace_hash, "codec {codec:?} topo {topo:?}");
+        // Same final state, bit for bit: the wire never touched the math.
+        for w in 0..m {
+            assert_eq!(
+                net.params[w].as_slice().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                params[w].as_slice().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "worker {w} params diverged (codec {codec:?}, topo {topo:?})"
+            );
+            assert_eq!(
+                net.shard_weights[w]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect::<Vec<_>>(),
+                shard_weights[w].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "worker {w} shard weights diverged (codec {codec:?}, topo {topo:?})"
+            );
+        }
+        // And mass is still exactly one per shard across the fleet.
+        for k in 0..shards {
+            let mass: f64 = net.shard_weights.iter().map(|sw| sw[k]).sum();
+            assert!((mass - 1.0).abs() < 1e-9, "shard {k} mass {mass}");
+        }
+    }
+}
+
+#[test]
+fn loopback_network_threaded_mode_conserves_mass_with_codecs() {
+    use gosgd::strategies::grad::QuadraticSource;
+    use gosgd::worker::NetGossip;
+    // The free-running (one OS thread per worker) loopback mode cannot be
+    // bit-compared — thread interleaving is real — but the Done-protocol
+    // finale makes its cutoff exact, so mass must come out identical to 1.
+    for codec in [CodecSpec::Dense, CodecSpec::QuantizeU8, CodecSpec::TopK { k: 4 }] {
+        let shards = 4;
+        let cfg = NetGossip {
+            workers: 4,
+            p: 0.5,
+            steps_per_worker: 150,
+            eta: 0.5,
+            weight_decay: 0.0,
+            seed: 131,
+            shards,
+            codec,
+            ..NetGossip::default()
+        };
+        let rep = cfg
+            .run(&FlatVec::zeros(48), |_w| {
+                Ok(Box::new(QuadraticSource::new(48, 0.1, 133)) as Box<dyn GradSource>)
+            })
+            .unwrap();
+        for k in 0..shards {
+            let total: f64 = rep.shard_weights.iter().map(|ws| ws[k]).sum();
+            assert!((total - 1.0).abs() < 1e-9, "codec {codec:?}: shard {k} mass {total}");
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Wire-form property and fuzz suite.
+//!
+//! The networked runtime trusts nothing it reads: every inbound byte
+//! passes through the frame codec ([`gosgd::net::frame`]) and the message
+//! body decoder ([`Message::decode_body`]), and both must hold two
+//! promises for *arbitrary* input:
+//!
+//! 1. **Transparency** — a well-formed message round-trips bit-exactly
+//!    through encode → frame → chunked reassembly → decode, for every
+//!    codec (dense, top-k, q8) and shard geometry.  This is the
+//!    foundation under the loopback-vs-queue bit-identity suite in
+//!    `runtime_equivalence.rs`.
+//! 2. **Totality** — truncation, bit flips, bad magic, future versions
+//!    and random garbage produce *typed errors* (or "need more bytes"),
+//!    never a panic and never a silently-wrong frame.
+//!
+//! The random cases come from the crate's own seeded property harness
+//! ([`gosgd::util::proptest::check`]), so a CI failure prints a seed that
+//! replays the exact case.
+
+use gosgd::gossip::{CodecSpec, Message, ProtocolCore, TopologySpec, WireError};
+use gosgd::net::frame::{encode_frame, frame_bytes, FrameError, FrameKind, FrameReader};
+use gosgd::net::{FRAME_HEADER_BYTES, WIRE_VERSION};
+use gosgd::tensor::FlatVec;
+use gosgd::util::proptest::check;
+use gosgd::util::rng::Rng;
+
+/// Build a real emitted message: a `ProtocolCore` with the given codec
+/// and shard plan, random parameters, one `emit_to`.  Using the protocol's
+/// own send path (instead of hand-built payloads) means every invariant a
+/// decoder checks — ascending top-k indices, finite q8 ranges, shard
+/// geometry — holds by construction.
+fn random_message(rng: &mut Rng, codec: CodecSpec, shards: usize) -> Message {
+    let dim = shards * (1 + rng.below(16) as usize);
+    let mut core = ProtocolCore::new(0, 4, dim, 1.0, TopologySpec::UniformRandom, shards)
+        .unwrap()
+        .with_codec(codec);
+    let mut x = FlatVec::zeros(dim);
+    rng.fill_normal(x.as_mut_slice(), 1.0);
+    // Advance the shard cursor a random distance so all indices occur.
+    let hops = rng.below(shards as u64);
+    for _ in 0..hops {
+        let _ = core.emit_to(&x, 1).unwrap();
+    }
+    let out = core.emit_to(&x, 1).unwrap();
+    out.into_message(rng.below(4) as usize, rng.below(1 << 20))
+}
+
+fn payload_bits(msg: &Message) -> Vec<u32> {
+    let mut out = vec![0.0f32; msg.payload.coord_count()];
+    msg.payload.decode_into(&mut out);
+    out.iter().map(|v| v.to_bits()).collect()
+}
+
+const CODEC_GRID: [(CodecSpec, usize); 6] = [
+    (CodecSpec::Dense, 1),
+    (CodecSpec::Dense, 4),
+    (CodecSpec::TopK { k: 3 }, 1),
+    (CodecSpec::TopK { k: 3 }, 4),
+    (CodecSpec::QuantizeU8, 1),
+    (CodecSpec::QuantizeU8, 4),
+];
+
+#[test]
+fn body_round_trips_bit_exactly_across_the_codec_grid() {
+    check("wire body round-trip", 120, |rng| {
+        for (codec, shards) in CODEC_GRID {
+            let msg = random_message(rng, codec, shards);
+            let body = msg.to_wire_body();
+            let back = Message::decode_body(&body).unwrap();
+            assert_eq!(back.sender, msg.sender);
+            assert_eq!(back.sent_at_step, msg.sent_at_step);
+            assert_eq!(back.weight.value().to_bits(), msg.weight.value().to_bits());
+            assert_eq!(back.shard, msg.shard);
+            assert_eq!(payload_bits(&back), payload_bits(&msg), "{codec:?}/{shards}");
+            // Canonical form: re-encoding the decoded message yields the
+            // same bytes, so hashes of wire traffic are well-defined.
+            assert_eq!(back.to_wire_body(), body);
+        }
+    });
+}
+
+#[test]
+fn framed_round_trip_survives_arbitrary_chunking() {
+    check("framed chunked round-trip", 80, |rng| {
+        let (codec, shards) = CODEC_GRID[rng.below(CODEC_GRID.len() as u64) as usize];
+        let msg = random_message(rng, codec, shards);
+        let epoch = rng.below(1 << 30);
+        let wire = frame_bytes(FrameKind::Gossip, epoch, &msg.to_wire_body());
+        let mut reader = FrameReader::new();
+        let mut got = None;
+        let mut at = 0;
+        while at < wire.len() {
+            let n = 1 + rng.below(7) as usize;
+            let end = (at + n).min(wire.len());
+            reader.feed(&wire[at..end]);
+            at = end;
+            if let Some(frame) = reader.try_next().unwrap() {
+                assert!(got.is_none(), "one frame in, one frame out");
+                got = Some(frame);
+            }
+        }
+        let frame = got.expect("full bytes yield the frame");
+        assert_eq!(frame.kind, FrameKind::Gossip);
+        assert_eq!(frame.epoch, epoch);
+        let back = Message::decode_body(&frame.body).unwrap();
+        assert_eq!(payload_bits(&back), payload_bits(&msg));
+        assert!(!reader.has_partial(), "no leftover bytes");
+    });
+}
+
+#[test]
+fn frame_truncation_is_pending_and_body_truncation_is_typed() {
+    check("truncation", 40, |rng| {
+        let (codec, shards) = CODEC_GRID[rng.below(CODEC_GRID.len() as u64) as usize];
+        let msg = random_message(rng, codec, shards);
+        let body = msg.to_wire_body();
+        let wire = frame_bytes(FrameKind::Gossip, 0, &body);
+        // Any strict prefix of a frame is "need more bytes", never an
+        // error and never a frame.
+        for cut in [1, FRAME_HEADER_BYTES - 1, FRAME_HEADER_BYTES, wire.len() - 1] {
+            let mut reader = FrameReader::new();
+            reader.feed(&wire[..cut]);
+            assert!(matches!(reader.try_next(), Ok(None)), "prefix of {cut} bytes");
+            assert!(reader.has_partial());
+        }
+        // Any strict prefix of a body is a typed Truncated error.
+        for cut in 0..body.len() {
+            match Message::decode_body(&body[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn every_single_bit_flip_is_rejected() {
+    check("bit flips", 25, |rng| {
+        let (codec, shards) = CODEC_GRID[rng.below(CODEC_GRID.len() as u64) as usize];
+        let msg = random_message(rng, codec, shards);
+        let wire = frame_bytes(FrameKind::Gossip, 3, &msg.to_wire_body());
+        // A handful of random single-bit flips per case (the exhaustive
+        // every-position sweep lives in frame.rs's unit tests).
+        for _ in 0..24 {
+            let bit = rng.below((wire.len() * 8) as u64) as usize;
+            let mut corrupt = wire.clone();
+            corrupt[bit / 8] ^= 1 << (bit % 8);
+            let mut reader = FrameReader::new();
+            reader.feed(&corrupt);
+            match reader.try_next() {
+                Err(_) => {}
+                // A flip inside the body-length field can only make the
+                // reader wait for bytes that never come.
+                Ok(None) => {
+                    let in_len_field = (16..20).contains(&(bit / 8));
+                    assert!(in_len_field, "bit {bit} swallowed silently");
+                }
+                Ok(Some(_)) => panic!("bit {bit}: corrupted frame accepted"),
+            }
+        }
+    });
+}
+
+#[test]
+fn bad_magic_and_future_version_are_typed_errors() {
+    let wire = frame_bytes(FrameKind::Gossip, 0, &[]);
+    let mut bad_magic = wire.clone();
+    bad_magic[0] = b'X';
+    let mut reader = FrameReader::new();
+    reader.feed(&bad_magic);
+    assert!(matches!(reader.try_next(), Err(FrameError::BadMagic(_))));
+    // Poisoned for good: a byte stream that desynced once cannot be
+    // trusted to re-frame.
+    assert!(reader.try_next().is_err());
+
+    let mut future = wire;
+    future[4..6].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+    let mut reader = FrameReader::new();
+    reader.feed(&future);
+    match reader.try_next() {
+        Err(FrameError::FutureVersion(v)) => assert_eq!(v, WIRE_VERSION + 1),
+        other => panic!("expected FutureVersion, got {other:?}"),
+    }
+}
+
+#[test]
+fn decoders_never_panic_on_arbitrary_bytes() {
+    // The never-panic loop: random garbage, random lengths, sometimes
+    // seeded with valid magic/header fragments to get past the cheap
+    // checks, thrown at both decode layers.  Totality means this test
+    // can only fail by panicking.
+    check("fuzz decoders", 400, |rng| {
+        let len = rng.below(160) as usize;
+        let mut bytes = vec![0u8; len];
+        for b in bytes.iter_mut() {
+            *b = rng.below(256) as u8;
+        }
+        if rng.bernoulli(0.3) && len >= 6 {
+            bytes[..4].copy_from_slice(b"GSGD");
+            bytes[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+        }
+        let _ = Message::decode_body(&bytes);
+        let mut reader = FrameReader::new();
+        let mut at = 0;
+        while at < bytes.len() {
+            let end = (at + 1 + rng.below(32) as usize).min(bytes.len());
+            reader.feed(&bytes[at..end]);
+            at = end;
+            // Drain until pending or poisoned; must never panic.
+            loop {
+                match reader.try_next() {
+                    Ok(Some(frame)) => {
+                        let _ = Message::decode_body(&frame.body);
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn control_frames_round_trip_with_empty_and_full_bodies() {
+    for kind in
+        [FrameKind::Join, FrameKind::JoinAck, FrameKind::Leave, FrameKind::Done, FrameKind::Start]
+    {
+        for body in [vec![], vec![0xAB; 57]] {
+            let mut wire = Vec::new();
+            encode_frame(&mut wire, kind, 9, &body);
+            let mut reader = FrameReader::new();
+            reader.feed(&wire);
+            let frame = reader.try_next().unwrap().expect("one frame");
+            assert_eq!(frame.kind, kind);
+            assert_eq!(frame.epoch, 9);
+            assert_eq!(frame.body, body);
+        }
+    }
+}
