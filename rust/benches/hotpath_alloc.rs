@@ -17,11 +17,18 @@
 //!      freelist serves every size class);
 //!    * unpooled: strictly positive (sanity that the counter counts).
 //!
+//! A third gate covers the DES scheduler: the timing wheel's steady-state
+//! pop path (lazy per-slot sorts through the persistent drain buffer,
+//! level-1 chunk pours through the reused scratch) must perform **zero**
+//! heap allocations once every capacity is warm — the property the
+//! parallel executor's per-lane wheels lean on.
+//!
 //! The same contract runs as a plain test suite in
 //! `rust/tests/alloc_regression.rs`, over the identical harness.
 
 use gosgd::bench::{Bencher, ExchangePair};
 use gosgd::gossip::CodecSpec;
+use gosgd::sim::TimingWheel;
 use gosgd::util::alloc_count::CountingAllocator;
 
 #[global_allocator]
@@ -42,6 +49,48 @@ fn measure_allocs(codec: CodecSpec, pooled: bool, warmup: usize, iters: usize) -
     for _ in 0..iters {
         pair.exchange();
     }
+    CountingAllocator::allocations()
+}
+
+/// Heap allocations on the timing wheel's steady-state pop path.
+///
+/// Each round fills one 256-tick window with `PER_TICK` events per tick
+/// and drains it completely — after the warm-up rounds every capacity in
+/// play (level-0 slots, the persistent sorted drain buffer, the level-1
+/// pour scratch) has reached its fixed point, so the measured round's
+/// pops (lazy per-slot sorts, chunk pours, cursor advances included)
+/// must touch only recycled storage.
+fn wheel_pop_allocs(warm_rounds: usize) -> u64 {
+    const TICK: f64 = 1e-3;
+    const PER_TICK: usize = 16;
+    let mut wheel: TimingWheel<u64> = TimingWheel::new(TICK);
+    let mut seq = 0u64;
+    let mut push_round = |wheel: &mut TimingWheel<u64>, r: usize| {
+        for i in 0..256usize {
+            for j in 0..PER_TICK {
+                let off = (j as f64 + 0.5) / PER_TICK as f64 * TICK * 0.98;
+                seq += 1;
+                wheel.push((r * 256 + i) as f64 * TICK + off, seq, seq);
+            }
+        }
+    };
+    let drain_round = |wheel: &mut TimingWheel<u64>| {
+        let mut popped = 0usize;
+        let mut prev = f64::NEG_INFINITY;
+        while let Some(e) = wheel.pop() {
+            assert!(e.time >= prev, "wheel pop order regressed");
+            prev = e.time;
+            popped += 1;
+        }
+        assert_eq!(popped, 256 * PER_TICK, "wheel lost events");
+    };
+    for r in 0..warm_rounds {
+        push_round(&mut wheel, r);
+        drain_round(&mut wheel);
+    }
+    push_round(&mut wheel, warm_rounds);
+    CountingAllocator::reset();
+    drain_round(&mut wheel);
     CountingAllocator::allocations()
 }
 
@@ -103,6 +152,18 @@ fn main() {
         }
     }
     println!("\nzero-allocation acceptance passed (dense/q8 = 0, top-k bounded)");
+
+    // ---- the DES scheduler: steady-state wheel pops allocate nothing ----
+    // The parallel executor runs one wheel per lane, so a stray per-pop
+    // allocation would multiply by thread count × events; the persistent
+    // drain buffer keeps the lazy per-slot sorts on recycled storage.
+    let wheel_allocs = wheel_pop_allocs(3);
+    println!("timing-wheel steady-state drain: {wheel_allocs} allocations over 4096 pops");
+    assert_eq!(
+        wheel_allocs, 0,
+        "acceptance: the wheel's steady-state pop path (sorted drain swaps, \
+         chunk pours) must perform ZERO heap allocations"
+    );
 
     b.finish();
 }

@@ -39,6 +39,15 @@ fn sample_message(codec: CodecSpec) -> Message {
 fn main() {
     let mut b = Bencher::new("net_throughput");
 
+    // Layer 0: the CRC kernel in isolation, bytes/sec — the
+    // slicing-by-8 speedup (vs the old bytewise loop) lands here, and
+    // regressions in it pinpoint themselves below the frame layer.
+    let mut rng = Rng::new(0xCC32);
+    let payload: Vec<u8> = (0..1 << 20).map(|_| rng.next_u64() as u8).collect();
+    b.bench_bytes("crc32_1mib", payload.len() as u64, || {
+        std::hint::black_box(gosgd::net::frame::crc32(&payload));
+    });
+
     // Layer 1: the serialization tax, bytes/sec per codec.
     let codecs = [
         ("dense", CodecSpec::Dense),

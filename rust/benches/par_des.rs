@@ -1,0 +1,141 @@
+//! Bench: parallel DES executor — events/sec vs thread count.
+//!
+//! The sharded executor (`ParallelKind::Sharded(T)`, ARCHITECTURE ch.
+//! 7f) exists to buy wall-clock throughput without giving up the bit
+//! for bit determinism every equivalence suite leans on.  This bench
+//! pins both halves of that claim at scale:
+//!
+//! * **events/sec vs thread count** at a 65,536-worker and a
+//!   1,048,576-worker hypercube + q8 fleet (the `des_scale.rs`
+//!   configuration), one recorded row per `(fleet, threads)`;
+//! * **trace-hash identity**: every thread count must reproduce the
+//!   sequential run's trace hash and consensus bits — the
+//!   `runtime_equivalence.rs` grid pins this at small fleets, this
+//!   bench pins it at scale;
+//! * **speedup acceptance**: on a machine with ≥ 8 available cores the
+//!   8-thread run must clear **3×** the sequential events/sec on the
+//!   65,536-worker fleet.  On smaller machines (CI shells with 1–4
+//!   cores) the assertion is skipped — throughput there measures the
+//!   scheduler's overhead, not its parallelism — but the identity
+//!   assertions always run.
+//!
+//! Reporting convention follows `des_scale.rs`: one row per run
+//! (`iters = 1` via `Bencher::record`), `elems_per_iter` = events
+//! (steps + messages) so `Melem/s` reads as millions of events per
+//! second.  Run with `cargo bench --bench par_des`; CI sets
+//! `BENCH_JSON=BENCH_par_des.json` and uploads the artifact.
+
+use std::time::Instant;
+
+use gosgd::bench::Bencher;
+use gosgd::gossip::{CodecSpec, TopologySpec};
+use gosgd::sim::{DesEngine, DesStrategy, ParallelKind, TimeModel};
+use gosgd::strategies::grad::QuadraticSource;
+use gosgd::tensor::FlatVec;
+
+const DIM: usize = 64;
+const SHARDS: usize = 4;
+const P: f64 = 0.05;
+const SEED: u64 = 0x5CA1E;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn engine(workers: usize, threads: usize) -> DesEngine {
+    let parallel = if threads > 1 {
+        ParallelKind::Sharded(threads)
+    } else {
+        ParallelKind::Sequential
+    };
+    DesEngine::new(
+        DesStrategy::ShardedGoSgd { p: P, shards: SHARDS },
+        TimeModel::paper_like(),
+        workers,
+        &FlatVec::zeros(DIM),
+        0.5,
+        0.0,
+        SEED,
+    )
+    .unwrap()
+    .with_codec(CodecSpec::QuantizeU8)
+    .with_topology(TopologySpec::Hypercube)
+    .with_parallel(parallel)
+}
+
+/// One run: events/sec plus the identity tuple (trace hash, consensus).
+fn run_fleet(
+    b: &mut Bencher,
+    workers: usize,
+    threads: usize,
+    horizon: f64,
+) -> (f64, u64, Vec<f32>) {
+    let mut grad = QuadraticSource::new(DIM, 0.1, SEED ^ 0x11);
+    let mut eng = engine(workers, threads);
+    let t0 = Instant::now();
+    eng.run(&mut grad, horizon).unwrap();
+    let elapsed = t0.elapsed();
+    let rep = eng.report();
+    let events = rep.steps + rep.messages;
+    b.record(&format!("{}k_workers_{threads}t", workers >> 10), elapsed, None, Some(events));
+    let evps = events as f64 / elapsed.as_secs_f64();
+    let hash = rep.trace_hash();
+    let consensus = eng.consensus_model().unwrap().as_slice().to_vec();
+    (evps, hash, consensus)
+}
+
+fn main() {
+    // Capability probe only — no thread is spawned outside the engine's
+    // own (shim-routed) scoped lanes, so the model checker loses nothing.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1); // lint:allow(sync-shim)
+    let mut b = Bencher::new("par_des");
+    println!("machine reports {cores} available cores");
+
+    let mut seq_64k_evps = 0.0f64;
+    let mut par8_64k_evps = 0.0f64;
+    for (workers, horizon) in [(1usize << 16, 0.3), (1usize << 20, 0.15)] {
+        let mut reference: Option<(u64, Vec<f32>)> = None;
+        for threads in THREADS {
+            let (evps, hash, consensus) = run_fleet(&mut b, workers, threads, horizon);
+            println!("  {workers} workers @ {threads} thread(s): {evps:.0} events/sec");
+            match &reference {
+                None => reference = Some((hash, consensus)),
+                Some((h, x)) => {
+                    assert_eq!(
+                        hash, *h,
+                        "acceptance: Sharded({threads}) trace diverged from \
+                         sequential at {workers} workers"
+                    );
+                    assert_eq!(
+                        consensus, *x,
+                        "acceptance: Sharded({threads}) consensus diverged from \
+                         sequential at {workers} workers"
+                    );
+                }
+            }
+            if workers == 1 << 16 {
+                if threads == 1 {
+                    seq_64k_evps = evps;
+                } else if threads == 8 {
+                    par8_64k_evps = evps;
+                }
+            }
+        }
+        println!("  {workers} workers: all thread counts bit-identical");
+    }
+
+    if cores >= 8 {
+        let speedup = par8_64k_evps / seq_64k_evps;
+        println!("  64k fleet speedup at 8 threads: {speedup:.2}x");
+        assert!(
+            speedup >= 3.0,
+            "acceptance: 8 threads must clear 3x sequential events/sec on the \
+             65,536-worker hypercube+q8 fleet (got {speedup:.2}x)"
+        );
+    } else {
+        println!(
+            "  skipping the 3x speedup acceptance: {cores} core(s) < 8 \
+             (identity assertions ran)"
+        );
+    }
+
+    b.finish();
+}

@@ -288,6 +288,45 @@ impl Codec for TopK {
     }
 }
 
+/// The q8 range scan: `(min, max, all_finite)` over a shard in one pass.
+///
+/// Eight-wide chunks with eight partial min/max accumulators and a
+/// per-lane finite flag, matching the [`tensor`] kernels' width so LLVM
+/// keeps full-width vector `min`/`max` in flight instead of serializing
+/// on one register.  Both reductions are order-independent (`f32::min`/
+/// `max` are commutative-associative over any multiset up to the sign of
+/// zero, and `x − (−0.0)` ≡ `x − 0.0` bit-for-bit), and `&` is exact, so
+/// the chunked scan is bit-identical to the scalar loop it replaced.
+///
+/// Finiteness is tracked explicitly: `f32::min`/`max` *ignore* NaN
+/// operands, so a NaN coordinate would otherwise slip past a
+/// min/max-finiteness check and be silently quantized to `min`.
+fn min_max_finite(xs: &[f32]) -> (f32, f32, bool) {
+    let mut lo = [f32::INFINITY; 8];
+    let mut hi = [f32::NEG_INFINITY; 8];
+    let mut fin = [true; 8];
+    let mut chunks = xs.chunks_exact(8);
+    for c in &mut chunks {
+        for i in 0..8 {
+            fin[i] &= c[i].is_finite();
+            lo[i] = lo[i].min(c[i]);
+            hi[i] = hi[i].max(c[i]);
+        }
+    }
+    let (mut min, mut max, mut finite) = (f32::INFINITY, f32::NEG_INFINITY, true);
+    for i in 0..8 {
+        finite &= fin[i];
+        min = min.min(lo[i]);
+        max = max.max(hi[i]);
+    }
+    for &v in chunks.remainder() {
+        finite &= v.is_finite();
+        min = min.min(v);
+        max = max.max(v);
+    }
+    (min, max, finite)
+}
+
 /// Per-shard affine u8 quantizer: `code = round((x − min)/step)`,
 /// `step = (max − min)/255`.  A constant shard (or an empty one) encodes
 /// with `step = 0` and round-trips bit-exactly; a shard containing a
@@ -307,17 +346,7 @@ impl Codec for QuantizeU8 {
         _residual: &mut [f32],
         pool: Option<&Arc<BufferPool>>,
     ) -> EncodedPayload {
-        let mut min = f32::INFINITY;
-        let mut max = f32::NEG_INFINITY;
-        // Track finiteness explicitly: `f32::min`/`max` *ignore* NaN
-        // operands, so a NaN coordinate would otherwise slip past a
-        // min/max-finiteness check and be silently quantized to `min`.
-        let mut finite = true;
-        for &v in payload.as_slice() {
-            finite &= v.is_finite();
-            min = min.min(v);
-            max = max.max(v);
-        }
+        let (min, max, finite) = min_max_finite(payload.as_slice());
         if !(finite && min.is_finite() && max.is_finite()) {
             // Empty or non-finite payloads: lossless fallback.
             return EncodedPayload::Dense(payload);
@@ -415,7 +444,16 @@ impl EncodedPayload {
                 }
             }
             EncodedPayload::QuantU8 { min, step, codes } => {
-                for (o, &c) in out.iter_mut().zip(codes.iter()) {
+                // Eight-wide dequantize, tensor-kernel style: identical
+                // per-element arithmetic, so chunking is bit-invisible.
+                let mut oc = out.chunks_exact_mut(8);
+                let mut cc = codes.as_slice().chunks_exact(8);
+                for (os, cs) in (&mut oc).zip(&mut cc) {
+                    for i in 0..8 {
+                        os[i] = min + step * cs[i] as f32;
+                    }
+                }
+                for (o, &c) in oc.into_remainder().iter_mut().zip(cc.remainder()) {
                     *o = min + step * c as f32;
                 }
             }
@@ -445,7 +483,19 @@ impl EncodedPayload {
                 }
             }
             EncodedPayload::QuantU8 { min, step, codes } => {
-                for (xi, &c) in x.iter_mut().zip(codes.iter()) {
+                // Fused dequantize-blend, eight-wide: the absorb-side hot
+                // loop (every q8 message decodes through here exactly
+                // once).  Same scalar expression per element as before —
+                // bit-identical trajectories across all runtimes.
+                let mut xc = x.chunks_exact_mut(8);
+                let mut cc = codes.as_slice().chunks_exact(8);
+                for (xs, cs) in (&mut xc).zip(&mut cc) {
+                    for i in 0..8 {
+                        let v = min + step * cs[i] as f32;
+                        xs[i] += t * (v - xs[i]);
+                    }
+                }
+                for (xi, &c) in xc.into_remainder().iter_mut().zip(cc.remainder()) {
                     let v = min + step * c as f32;
                     *xi += t * (v - *xi);
                 }
@@ -765,6 +815,69 @@ mod tests {
         assert!(pool.stats().recycled >= 1, "snapshot storage not recycled");
         let next = FlatVec::pooled(&pool, n);
         assert_eq!(next.as_slice().as_ptr(), ptr, "next snapshot reuses storage");
+    }
+
+    #[test]
+    fn q8_chunked_kernels_match_naive_reference_property() {
+        // The eight-wide q8 kernels (range scan, dequantize, fused
+        // dequantize-blend) against scalar per-element reference loops.
+        // The chunked loops perform the identical scalar arithmetic and
+        // the min/max reduction is order-independent, so agreement is
+        // bit-exact — covering empty, pure-tail, exact-chunk and
+        // chunk+tail lengths, plus NaN/∞ lanes for the finite-flag AND.
+        check("q8 chunked == naive reference", 50, |rng| {
+            let n = rng.below(70) as usize;
+            let mut xs: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+            // One case in four poisons a random lane: the chunked scan
+            // must reach the same dense-fallback verdict as the scalar.
+            if n > 0 && rng.below(4) == 0 {
+                let bad = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+                xs[rng.below(n as u64) as usize] = bad[rng.below(3) as usize];
+            }
+
+            // Range scan vs the scalar fold it replaced.
+            let (mut min, mut max, mut finite) = (f32::INFINITY, f32::NEG_INFINITY, true);
+            for &v in &xs {
+                finite &= v.is_finite();
+                min = min.min(v);
+                max = max.max(v);
+            }
+            let got = min_max_finite(&xs);
+            assert_eq!(got.2, finite, "finite flag n={n}");
+            if finite && min.is_finite() {
+                assert_eq!(got.0, min, "min n={n}");
+                assert_eq!(got.1, max, "max n={n}");
+            }
+
+            let enc = QuantizeU8.encode(FlatVec::from_vec(xs.clone()), &mut []);
+            if !(finite && min.is_finite() && max.is_finite()) {
+                assert!(enc.as_dense().is_some(), "expected dense fallback n={n}");
+                return;
+            }
+            let (emin, estep, codes) = match &enc {
+                EncodedPayload::QuantU8 { min, step, codes } => (*min, *step, codes),
+                other => panic!("expected q8 payload, got {other:?}"),
+            };
+
+            // Chunked decode_into vs the scalar dequantize.
+            let mut out = vec![7.0f32; n];
+            enc.decode_into(&mut out);
+            for i in 0..n {
+                let want = emin + estep * codes.as_slice()[i] as f32;
+                assert_eq!(out[i], want, "decode n={n} i={i}");
+            }
+
+            // Chunked blend_into vs the scalar fused dequantize-blend.
+            let base: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+            let t = rng.f32();
+            let mut got = base.clone();
+            enc.blend_into(&mut got, t);
+            for i in 0..n {
+                let v = emin + estep * codes.as_slice()[i] as f32;
+                let want = base[i] + t * (v - base[i]);
+                assert_eq!(got[i], want, "blend n={n} i={i}");
+            }
+        });
     }
 
     #[test]

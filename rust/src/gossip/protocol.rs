@@ -73,7 +73,7 @@ use crate::gossip::shard::{Shard, ShardPlan};
 use crate::gossip::topology::{TopologyRef, TopologySpec};
 use crate::gossip::weights::SumWeight;
 use crate::tensor::{BufferPool, FlatVec};
-use crate::util::rng::Rng;
+use crate::util::rng::{Draws, Rng};
 
 /// A worker's parameter vector under lazy (copy-on-write) materialization.
 ///
@@ -646,7 +646,7 @@ impl ProtocolCore {
     /// the schedule cursor.  Exposed for drivers that separate the pick
     /// from the payload transition (the engine's immediate-delivery
     /// cross-check); queued runtimes use [`ProtocolCore::emit`].
-    pub fn pick_peer(&mut self, workers: usize, rng: &mut Rng) -> usize {
+    pub fn pick_peer(&mut self, workers: usize, rng: &mut dyn Draws) -> usize {
         let slot = self.topo_cursor;
         self.topo_cursor += 1;
         self.topology.next_peer(workers, self.id, slot, rng)
@@ -657,7 +657,12 @@ impl ProtocolCore {
     /// advance the shard cursor, halve the shard's weight and snapshot
     /// its coordinates.  Returns `None` when the coin says no (or the
     /// cluster has a single worker — nobody to gossip with).
-    pub fn emit(&mut self, x: &FlatVec, workers: usize, rng: &mut Rng) -> Result<Option<Outbound>> {
+    pub fn emit(
+        &mut self,
+        x: &FlatVec,
+        workers: usize,
+        rng: &mut dyn Draws,
+    ) -> Result<Option<Outbound>> {
         self.emit_alive(x, workers, rng, None)
     }
 
@@ -676,7 +681,7 @@ impl ProtocolCore {
         &mut self,
         x: &FlatVec,
         workers: usize,
-        rng: &mut Rng,
+        rng: &mut dyn Draws,
         alive: Option<&[bool]>,
     ) -> Result<Option<Outbound>> {
         if let Some(alive) = alive {
@@ -695,7 +700,7 @@ impl ProtocolCore {
         &mut self,
         x: &FlatVec,
         workers: usize,
-        rng: &mut Rng,
+        rng: &mut dyn Draws,
         alive: Option<&AliveSet>,
     ) -> Result<Option<Outbound>> {
         if workers < 2 || !rng.bernoulli(self.p) {

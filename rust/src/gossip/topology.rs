@@ -66,7 +66,7 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::gossip::peer::PeerSelector;
-use crate::util::rng::Rng;
+use crate::util::rng::{Draws, Rng};
 
 /// Plain-data topology description: parseable, comparable, copyable —
 /// the form carried by configs, CLIs and reports.
@@ -193,8 +193,10 @@ pub trait Topology: Send + Sync + std::fmt::Debug {
 
     /// Receiver for sender `s` among `m` workers at schedule position
     /// `slot`.  Never returns `s`.  Random topologies ignore `slot`;
-    /// deterministic ones ignore `rng`.
-    fn next_peer(&self, m: usize, s: usize, slot: u64, rng: &mut Rng) -> usize;
+    /// deterministic ones ignore `rng`.  The draw source is `dyn` so the
+    /// same schedule runs off the engine-wide [`Rng`] stream or a
+    /// per-worker [`CounterRng`](crate::util::rng::CounterRng) lane.
+    fn next_peer(&self, m: usize, s: usize, slot: u64, rng: &mut dyn Draws) -> usize;
 
     /// The mixing-graph view: the `m × m` row-major matrix `E[S]` with
     /// `S[s][r] = Pr(s picks r)`, averaged over the RNG and one full
@@ -238,7 +240,7 @@ impl Topology for UniformRandom {
         1
     }
 
-    fn next_peer(&self, m: usize, s: usize, _slot: u64, rng: &mut Rng) -> usize {
+    fn next_peer(&self, m: usize, s: usize, _slot: u64, rng: &mut dyn Draws) -> usize {
         rng.peer(m, s)
     }
 
@@ -265,7 +267,7 @@ impl Topology for Ring {
         1
     }
 
-    fn next_peer(&self, m: usize, s: usize, _slot: u64, _rng: &mut Rng) -> usize {
+    fn next_peer(&self, m: usize, s: usize, _slot: u64, _rng: &mut dyn Draws) -> usize {
         (s + 1) % m
     }
 
@@ -293,7 +295,7 @@ impl Topology for Hypercube {
         hypercube_dims(m) as u64
     }
 
-    fn next_peer(&self, m: usize, s: usize, slot: u64, _rng: &mut Rng) -> usize {
+    fn next_peer(&self, m: usize, s: usize, slot: u64, _rng: &mut dyn Draws) -> usize {
         let d = hypercube_dims(m);
         let start = (slot % d as u64) as usize;
         // For a power-of-two m the first candidate is always in range.
@@ -328,7 +330,7 @@ impl Topology for PartnerRotation {
         (m as u64 - 1).max(1)
     }
 
-    fn next_peer(&self, m: usize, s: usize, slot: u64, _rng: &mut Rng) -> usize {
+    fn next_peer(&self, m: usize, s: usize, slot: u64, _rng: &mut dyn Draws) -> usize {
         let offset = 1 + (slot % (m as u64 - 1)) as usize;
         (s + offset) % m
     }
@@ -353,7 +355,7 @@ impl Topology for SmallWorld {
         1
     }
 
-    fn next_peer(&self, m: usize, s: usize, _slot: u64, rng: &mut Rng) -> usize {
+    fn next_peer(&self, m: usize, s: usize, _slot: u64, rng: &mut dyn Draws) -> usize {
         if rng.bernoulli(self.q) {
             rng.peer(m, s)
         } else {

@@ -23,7 +23,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::gossip::{CodecSpec, ShardPlan};
 use crate::metrics::{ema_series, CsvWriter};
-use crate::sim::{DesEngine, DesStrategy, FabricSpec, TimeModel};
+use crate::sim::{DesEngine, DesStrategy, FabricSpec, ParallelKind, TimeModel};
 use crate::strategies::grad::QuadraticSource;
 use crate::tensor::FlatVec;
 
@@ -47,6 +47,9 @@ pub struct CodecFigConfig {
     /// Network model every series runs through (`Ideal` reproduces the
     /// pre-fabric figures; a finite preset adds NIC/switch contention).
     pub fabric: FabricSpec,
+    /// DES executor threads (1 = sequential; more runs the sharded
+    /// parallel executor — bit-identical results).
+    pub threads: usize,
     pub seed: u64,
     pub eta: f32,
     pub weight_decay: f32,
@@ -70,6 +73,7 @@ impl Default for CodecFigConfig {
             horizon_secs: 120.0,
             time_model: TimeModel::paper_like(),
             fabric: FabricSpec::Ideal,
+            threads: 1,
             seed: 0,
             eta: 1.0,
             weight_decay: 0.0,
@@ -128,7 +132,12 @@ fn run_one(cfg: &CodecFigConfig, spec: CodecSpec, effective_p: f64) -> Result<Co
         cfg.seed,
     )?
     .with_codec(spec)
-    .with_fabric(cfg.fabric);
+    .with_fabric(cfg.fabric)
+    .with_parallel(if cfg.threads > 1 {
+        ParallelKind::Sharded(cfg.threads)
+    } else {
+        ParallelKind::Sequential
+    });
     eng.run(&mut grad, cfg.horizon_secs)?;
     let consensus_error = eng.consensus_error()?;
     let rep = eng.report();

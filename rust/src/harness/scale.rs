@@ -26,7 +26,7 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::gossip::{CodecSpec, TopologySpec};
 use crate::metrics::{ema_series, CsvWriter};
-use crate::sim::{DesEngine, DesStrategy, TimeModel};
+use crate::sim::{DesEngine, DesStrategy, ParallelKind, TimeModel};
 use crate::strategies::grad::QuadraticSource;
 use crate::tensor::FlatVec;
 
@@ -54,6 +54,9 @@ pub struct ScaleFigConfig {
     pub samples: usize,
     /// Telemetry sample size per fleet (strided worker subset).
     pub telemetry: usize,
+    /// DES executor threads (1 = sequential; more runs the sharded
+    /// parallel executor — bit-identical results).
+    pub threads: usize,
     pub seed: u64,
     pub eta: f32,
     pub weight_decay: f32,
@@ -75,6 +78,7 @@ impl Default for ScaleFigConfig {
             time_model: TimeModel::paper_like(),
             samples: 8,
             telemetry: 1024,
+            threads: 1,
             seed: 0,
             eta: 0.5,
             weight_decay: 0.0,
@@ -114,7 +118,12 @@ fn run_one(cfg: &ScaleFigConfig, workers: usize) -> Result<ScaleSeries> {
     )?
     .with_codec(cfg.codec)
     .with_topology(cfg.topology)
-    .with_telemetry_sample(cfg.telemetry);
+    .with_telemetry_sample(cfg.telemetry)
+    .with_parallel(if cfg.threads > 1 {
+        ParallelKind::Sharded(cfg.threads)
+    } else {
+        ParallelKind::Sequential
+    });
     let wall = Instant::now();
     let mut consensus = Vec::with_capacity(cfg.samples);
     for i in 1..=cfg.samples.max(1) {

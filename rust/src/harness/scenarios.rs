@@ -26,7 +26,7 @@ use std::path::Path;
 
 use crate::error::Result;
 use crate::metrics::{ema_series, CsvWriter};
-use crate::sim::{DesEngine, DesStrategy, FabricSpec, ScenarioModel, TimeModel};
+use crate::sim::{DesEngine, DesStrategy, FabricSpec, ParallelKind, ScenarioModel, TimeModel};
 use crate::strategies::grad::QuadraticSource;
 use crate::tensor::FlatVec;
 
@@ -56,6 +56,10 @@ pub struct ScenarioConfig {
     /// Mean seconds between crashes / mean downtime for the churn series.
     pub crash_mtbf: f64,
     pub rejoin_mttr: f64,
+    /// DES executor threads for the gossip series (1 = sequential; more
+    /// runs the sharded parallel executor — bit-identical results).  The
+    /// barrier baselines always run sequentially.
+    pub threads: usize,
     pub seed: u64,
     pub eta: f32,
     pub weight_decay: f32,
@@ -78,6 +82,7 @@ impl Default for ScenarioConfig {
             compute_scale: Vec::new(),
             crash_mtbf: 20.0,
             rejoin_mttr: 5.0,
+            threads: 1,
             seed: 0,
             eta: 1.0,
             weight_decay: 0.0,
@@ -116,6 +121,11 @@ fn run_one(
     } else {
         FabricSpec::Ideal
     };
+    let parallel = if cfg.threads > 1 && strategy.fire_and_forget() {
+        ParallelKind::Sharded(cfg.threads)
+    } else {
+        ParallelKind::Sequential
+    };
     let mut eng = DesEngine::new(
         strategy,
         cfg.time_model.clone(),
@@ -126,7 +136,8 @@ fn run_one(
         cfg.seed,
     )?
     .with_scenario(scenario)
-    .with_fabric(fabric);
+    .with_fabric(fabric)
+    .with_parallel(parallel);
     eng.run(&mut grad, cfg.horizon_secs)?;
     let rep = eng.report();
     Ok(ScenarioSeries {

@@ -27,7 +27,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::gossip::{CodecSpec, TopologySpec};
 use crate::metrics::{ema_series, CsvWriter};
-use crate::sim::{DesEngine, DesStrategy, FabricSpec, TimeModel};
+use crate::sim::{DesEngine, DesStrategy, FabricSpec, ParallelKind, TimeModel};
 use crate::strategies::grad::QuadraticSource;
 use crate::tensor::FlatVec;
 
@@ -54,6 +54,9 @@ pub struct TopoFigConfig {
     pub fabric: FabricSpec,
     /// Consensus samples taken along the horizon.
     pub samples: usize,
+    /// DES executor threads (1 = sequential; more runs the sharded
+    /// parallel executor — bit-identical results).
+    pub threads: usize,
     pub seed: u64,
     pub eta: f32,
     pub weight_decay: f32,
@@ -80,6 +83,7 @@ impl Default for TopoFigConfig {
             time_model: TimeModel::paper_like(),
             fabric: FabricSpec::Ideal,
             samples: 40,
+            threads: 1,
             seed: 0,
             eta: 1.0,
             weight_decay: 0.0,
@@ -123,7 +127,12 @@ fn run_one(cfg: &TopoFigConfig, topology: TopologySpec) -> Result<TopoSeries> {
     )?
     .with_codec(cfg.codec)
     .with_topology(topology)
-    .with_fabric(cfg.fabric);
+    .with_fabric(cfg.fabric)
+    .with_parallel(if cfg.threads > 1 {
+        ParallelKind::Sharded(cfg.threads)
+    } else {
+        ParallelKind::Sequential
+    });
     // The DES resumes across run calls, so consensus can be sampled along
     // the horizon without disturbing the event stream.
     let mut consensus = Vec::with_capacity(cfg.samples);

@@ -213,6 +213,12 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
             "network fabrics to compare (fabrics)",
         )
         .opt("horizon", "120", "simulated seconds (fig2/scenarios/codecs/topologies/fabrics)")
+        .opt(
+            "threads",
+            "1",
+            "DES executor threads (scenarios/codecs/topologies/fabrics/scale); \
+             >1 runs the deterministic sharded executor — identical results",
+        )
         .opt("backend", "quadratic", "fig2 gradients: quadratic | pjrt")
         .opt(
             "hetero",
@@ -290,6 +296,7 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
                 codecs: codec_specs,
                 horizon_secs: a.get_f64("horizon")?,
                 fabric: FabricSpec::parse(a.get("fabric")?)?,
+                threads: a.get_usize("threads")?,
                 seed: a.get_u64("seed")?,
                 ..Default::default()
             };
@@ -310,6 +317,7 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
                 topologies: topo_specs,
                 horizon_secs: a.get_f64("horizon")?,
                 fabric: FabricSpec::parse(a.get("fabric")?)?,
+                threads: a.get_usize("threads")?,
                 seed: a.get_u64("seed")?,
                 ..Default::default()
             };
@@ -330,6 +338,7 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
                 topology: TopologySpec::parse(a.get("topology")?)?,
                 fabrics: fabric_specs,
                 horizon_secs: a.get_f64("horizon")?,
+                threads: a.get_usize("threads")?,
                 seed: a.get_u64("seed")?,
                 ..Default::default()
             };
@@ -354,6 +363,7 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
                 topology: TopologySpec::parse(a.get("topology")?)?,
                 horizon_secs: a.get_f64("horizon")?,
                 telemetry: a.get_usize("telemetry")?,
+                threads: a.get_usize("threads")?,
                 seed: a.get_u64("seed")?,
                 ..Default::default()
             };
@@ -373,6 +383,7 @@ fn cmd_figure(argv: Vec<String>) -> Result<()> {
                 crash_mtbf: a.get_f64("mtbf")?,
                 rejoin_mttr: a.get_f64("mttr")?,
                 fabric: FabricSpec::parse(a.get("fabric")?)?,
+                threads: a.get_usize("threads")?,
                 seed: a.get_u64("seed")?,
                 ..Default::default()
             };

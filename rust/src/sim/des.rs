@@ -29,11 +29,13 @@ use crate::gossip::{
     wire_bytes_for, AliveSet, CodecSpec, CowModel, EncodedPayload, ProtocolCore, Shard, SumWeight,
     TopologySpec,
 };
-use crate::sim::fabric::{Delivery, Fabric, FabricSpec, FabricStats};
+use crate::sim::fabric::{Delivery, Fabric, FabricParams, FabricSpec, FabricStats};
 use crate::sim::wheel::TimingWheel;
 use crate::strategies::grad::GradSource;
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
+use crate::sync::{thread as sync_thread, Mutex as SyncMutex};
 use crate::tensor::{BufferPool, FlatVec};
-use crate::util::rng::Rng;
+use crate::util::rng::{CounterRng, Draws};
 
 /// What a gossip message carries while inside the network fabric.
 type GossipMsg = (Shard, EncodedPayload, f64);
@@ -75,7 +77,7 @@ impl TimeModel {
         }
     }
 
-    fn draw_compute(&self, rng: &mut Rng) -> f64 {
+    fn draw_compute(&self, rng: &mut dyn Draws) -> f64 {
         let base = self.compute * (1.0 + self.compute_jitter * (2.0 * rng.f64() - 1.0));
         if rng.bernoulli(self.straggler_prob) {
             base + self.straggler_factor * self.compute
@@ -84,7 +86,7 @@ impl TimeModel {
         }
     }
 
-    fn draw_latency(&self, rng: &mut Rng) -> f64 {
+    fn draw_latency(&self, rng: &mut dyn Draws) -> f64 {
         self.latency * (1.0 + self.latency_jitter * (2.0 * rng.f64() - 1.0))
     }
 }
@@ -218,8 +220,33 @@ enum EventKind {
     FabricTick,
 }
 
+/// Bits of an event key reserved for the per-origin counter; the high
+/// bits above carry the scheduling origin (see [`pack_key`]).
+const KEY_ORIGIN_SHIFT: u32 = 40;
+
+/// Origin-packed event key: the high 24 bits carry the *origin* — the
+/// worker whose handler scheduled the event, or the fleet size `m` for
+/// fabric ticks — and the low 40 bits a per-origin counter.  Keys break
+/// time ties in the event queue, so they must be assigned identically by
+/// the sequential and the sharded executor: a global counter would
+/// depend on the (executor-specific) order handlers run in, while an
+/// origin-packed counter depends only on each origin's own event
+/// history, which both executors replay in the same relative order.
+/// Two consequences are load-bearing: worker events at equal time sort
+/// by origin id (deterministic, executor-independent), and fabric ticks
+/// (origin `m`) sort *after* every worker event at the same instant —
+/// the parallel merge thread advances the fabric at window barriers,
+/// i.e. after the in-window worker events, and the key order makes the
+/// sequential engine do the same.
+fn pack_key(origin: usize, ctr: u64) -> u64 {
+    debug_assert!(ctr < (1u64 << KEY_ORIGIN_SHIFT), "per-origin event counter overflow");
+    ((origin as u64) << KEY_ORIGIN_SHIFT) | ctr
+}
+
 struct Event {
     time: f64,
+    /// Origin-packed key ([`pack_key`]); the queue orders by
+    /// `(time, seq)`.
     seq: u64,
     kind: EventKind,
 }
@@ -259,6 +286,23 @@ pub enum SchedulerKind {
     Heap,
     /// Hierarchical timing wheel ([`crate::sim::wheel::TimingWheel`]).
     Wheel,
+}
+
+/// Which executor drives the event loop.  Both produce *bit-identical*
+/// runs — same trace, same hash, same per-worker state — because the
+/// sharded executor only reorders work that is provably independent
+/// (events inside one conservative lookahead window, on disjoint worker
+/// shards) and merges every observable effect back in `(time, key)`
+/// order at window barriers (pinned by `runtime_equivalence.rs`).
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum ParallelKind {
+    /// Single-threaded reference executor.
+    Sequential,
+    /// `T` worker shards, each with its own event queue, executed
+    /// window-by-window on a scoped thread pool.  Requires a
+    /// fire-and-forget strategy and a forkable gradient source
+    /// ([`GradSource::fork`]); rejected with a config error otherwise.
+    Sharded(usize),
 }
 
 /// The engine's pending-event store, behind the [`SchedulerKind`] choice.
@@ -417,6 +461,23 @@ struct WorkerState {
     mailbox: Vec<(Shard, EncodedPayload, f64)>,
     /// PerSyn/EASGD: parked at the barrier.
     at_barrier: bool,
+    /// The worker's private randomness stream, keyed `(seed, w)`: every
+    /// draw a worker's handlers make comes from here, so a draw sequence
+    /// depends only on that worker's own event history — the property
+    /// that lets the sharded executor replay the exact sequential draws.
+    rng: CounterRng,
+    /// Per-worker event-key counter (see [`pack_key`]).
+    key_ctr: u64,
+}
+
+impl WorkerState {
+    /// Next origin-packed event key for an event scheduled by worker
+    /// `w`'s handler (`w` must be this worker's own id).
+    fn next_key(&mut self, w: usize) -> u64 {
+        let k = pack_key(w, self.key_ctr);
+        self.key_ctr += 1;
+        k
+    }
 }
 
 /// Sparse churn state, allocated only when the scenario enables churn.
@@ -452,6 +513,298 @@ struct SymState {
     pending_delay: Vec<f64>,
 }
 
+/// Exponential deviate with the given mean (churn inter-arrivals).
+fn draw_exp(rng: &mut dyn Draws, mean: f64) -> f64 {
+    -mean * (1.0 - rng.f64()).ln()
+}
+
+/// A priced outbound gossip message produced by a fire-and-forget wake,
+/// with every random draw (peer pick, codec, latency or up-link jitter)
+/// already taken from the *sender's* stream.  The executor only
+/// accounts and routes it — sequentially in place, or replayed on the
+/// parallel merge thread in global `(time, key)` order.
+struct SendOut {
+    to: usize,
+    payload: EncodedPayload,
+    weight: f64,
+    shard: Shard,
+    /// Encoded wire bytes.
+    encoded: usize,
+    /// Dense-equivalent wire bytes of the same message.
+    raw: usize,
+    /// Ideal model: the drawn one-way latency.  Finite fabric: the
+    /// pre-drawn up-link jitter to hand to [`Fabric::inject_delayed`].
+    delay: f64,
+}
+
+/// The read-only context a fire-and-forget wake needs, shared by the
+/// sequential executor and every parallel lane.
+#[derive(Clone, Copy)]
+struct FireCtx<'a> {
+    time_model: &'a TimeModel,
+    scenario: &'a ScenarioModel,
+    cold: &'a Arc<FlatVec>,
+    /// `Some` when a finite fabric is active (latency is then priced by
+    /// the fabric; the wake pre-draws only the up-link jitter).
+    fab_params: Option<FabricParams>,
+    dim: usize,
+    workers: usize,
+    eta: f32,
+    weight_decay: f32,
+    /// `false` for `Local` (no emit, no send draws).
+    gossip: bool,
+}
+
+/// One fire-and-forget wake for worker `w`: mailbox absorb → gradient
+/// step → gated emit → latency/up-link draw → next-compute draw, every
+/// draw from `ws.rng`.  This is the *shared* transition both executors
+/// run verbatim, which is what makes a worker's draw sequence depend
+/// only on its own event history: the parallel executor replays each
+/// worker's events in the same relative order as the sequential one, so
+/// the streams — and the run — are bit-identical.
+fn fire_and_forget_wake(
+    ctx: FireCtx<'_>,
+    ws: &mut WorkerState,
+    w: usize,
+    grad: &mut dyn GradSource,
+    grad_buf: &mut FlatVec,
+    mail_scratch: &mut Vec<GossipMsg>,
+    down: Option<&BTreeSet<usize>>,
+) -> Result<(f64, Option<SendOut>, f64)> {
+    // 1. Process pending messages (GoSGD ProcessMessages): the core
+    //    blends each shard range against that shard's sum weight.  The
+    //    mailbox is swapped against a reusable scratch buffer — no fresh
+    //    Vec per wake — and each absorbed payload's pooled storage
+    //    retires for the next emit.
+    debug_assert!(mail_scratch.is_empty());
+    std::mem::swap(mail_scratch, &mut ws.mailbox);
+    let WorkerState { x, core, rng, .. } = ws;
+    for (shard, payload, weight) in mail_scratch.drain(..) {
+        core.absorb_cow(x, ctx.cold, shard, &payload, SumWeight::from_value(weight))?;
+    }
+    // 2. Local gradient step (through the core's step transition).
+    let step = core.steps();
+    let loss = grad.grad(w + 1, x.read(ctx.cold), step, grad_buf)?;
+    core.local_step_cow(x, ctx.cold, grad_buf, ctx.eta, ctx.weight_decay)?;
+    // 3. Gated emit + message pricing.  Under churn the down-set gate
+    //    repairs deterministic schedules around dead peers; the sparse
+    //    gate draws the same RNG stream the old dense mask did.
+    let send = if ctx.gossip {
+        let gate = down.map(AliveSet::Down);
+        match core.emit_gated(x.read(ctx.cold), ctx.workers, rng, gate.as_ref())? {
+            Some(out) => {
+                let encoded = out.wire_bytes();
+                let raw = out.raw_wire_bytes();
+                let delay = match &ctx.fab_params {
+                    // Finite fabric: pre-draw the up-link jitter from the
+                    // sender's stream so the merge thread can replay the
+                    // injection without consuming any randomness.
+                    Some(p) => p.sample_delay(rng),
+                    // Ideal model — bandwidth-dominated latency at
+                    // paper-scale messages: shipping a fraction of the
+                    // full dense message's bytes takes the same fraction
+                    // of the one-way latency.
+                    None => {
+                        let frac = encoded as f64 / wire_bytes_for(ctx.dim, false) as f64;
+                        ctx.time_model.draw_latency(rng) * frac
+                    }
+                };
+                Some(SendOut {
+                    to: out.to,
+                    payload: out.payload,
+                    weight: out.weight.value(),
+                    shard: out.shard,
+                    encoded,
+                    raw,
+                    delay,
+                })
+            }
+            None => None,
+        }
+    } else {
+        None
+    };
+    // 4. Fire-and-forget: compute continues immediately.
+    let dt = ctx.time_model.draw_compute(rng) * ctx.scenario.scale(w);
+    Ok((loss, send, dt))
+}
+
+/// Contiguous worker spans for `t` lanes: the first `workers % t` lanes
+/// take one extra worker.
+fn lane_spans(workers: usize, t: usize) -> Vec<(usize, usize)> {
+    let base = workers / t;
+    let rem = workers % t;
+    let mut spans = Vec::with_capacity(t);
+    let mut lo = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < rem);
+        spans.push((lo, lo + len));
+        lo += len;
+    }
+    spans
+}
+
+/// Index of the lane owning worker `w` (spans are contiguous ascending).
+fn lane_of(spans: &[(usize, usize)], w: usize) -> usize {
+    spans.partition_point(|&(_, hi)| hi <= w)
+}
+
+/// `(time, key)` of the queue's earliest event without consuming it — a
+/// pop/push-back peek.  The wheel re-accepts a just-popped entry at its
+/// exact position (pinned by its push-back tests); `(∞, MAX)` = empty.
+fn peek_next(q: &mut EventQueue) -> (f64, u64) {
+    match q.pop() {
+        Some(ev) => {
+            let n = (ev.time, ev.seq);
+            q.push(ev);
+            n
+        }
+        None => (f64::INFINITY, u64::MAX),
+    }
+}
+
+/// Merge-thread → lane-thread window handoff: the merge thread publishes
+/// the bound under the mutex, then bumps the generation counter to
+/// release the lanes; each lane increments the done counter when its
+/// window completes.  A spin-yield gate instead of a condvar on purpose:
+/// the sync shim swaps `Mutex` for the model-checked type under
+/// `--cfg loom`, and pairing a std condvar with a model mutex would be
+/// unsound.
+struct WindowCtrl {
+    bound_time: f64,
+    bound_key: u64,
+    exit: bool,
+}
+
+/// One worker shard of the parallel executor: a contiguous id range
+/// `lo..lo+workers.len()` with its own event queue, gradient-source
+/// fork, scratch buffers, and window-output staging — all behind one
+/// `Mutex` the lane thread holds while a window runs and the merge
+/// thread holds at the barrier.
+struct Lane {
+    lo: usize,
+    workers: Vec<WorkerState>,
+    events: EventQueue,
+    grad: Box<dyn GradSource + Send>,
+    grad_buf: FlatVec,
+    mail_scratch: Vec<GossipMsg>,
+    trace_stride: usize,
+    /// Churn snapshots, refreshed by the merge thread whenever a churn
+    /// event fires.  Accurate for a whole window because crash/rejoin
+    /// events only ever execute at window barriers.
+    down: Option<BTreeSet<usize>>,
+    epochs: BTreeMap<usize, u32>,
+    // --- window output, drained by the merge thread at the barrier ---
+    steps: u64,
+    msgs: u64,
+    bytes: u64,
+    raw: u64,
+    /// `(time, key, loss)` trace points, in processing order.
+    trace: Vec<(f64, u64, f64)>,
+    /// Finite fabric: priced sends to replay as injections, tagged with
+    /// the emitting wake's `(time, key)` and the sender id.
+    injects: Vec<(f64, u64, usize, SendOut)>,
+    /// Ideal model: deliveries addressed to other lanes.
+    egress: Vec<Event>,
+    /// Latest event time processed (end-time accounting).
+    hi_t: f64,
+    error: Option<Error>,
+}
+
+impl Lane {
+    fn hi(&self) -> usize {
+        self.lo + self.workers.len()
+    }
+
+    /// Process every pending event strictly below `(bound_time,
+    /// bound_key)` — the conservative window the merge thread proved
+    /// free of incoming cross-lane effects.
+    fn run_window(&mut self, ctx: FireCtx<'_>, bound_time: f64, bound_key: u64) {
+        if self.error.is_some() {
+            return;
+        }
+        while let Some(ev) = self.events.pop() {
+            if (ev.time, ev.seq) >= (bound_time, bound_key) {
+                self.events.push(ev);
+                break;
+            }
+            self.hi_t = ev.time;
+            match ev.kind {
+                EventKind::Deliver { to, payload, weight, shard } => {
+                    // Delivered even while `to` is down: the mailbox
+                    // accumulates and the backlog blends at rejoin.
+                    self.workers[to - self.lo].mailbox.push((shard, payload, weight));
+                }
+                EventKind::Wake { w, epoch } => {
+                    let alive = self.down.as_ref().map_or(true, |d| !d.contains(&w));
+                    if alive && epoch == self.epochs.get(&w).copied().unwrap_or(0) {
+                        if let Err(e) = self.wake(ctx, w, ev.time, ev.seq) {
+                            self.error = Some(e);
+                            return;
+                        }
+                    }
+                }
+                // Crash/rejoin candidates and fabric ticks live on the
+                // merge thread, never in a lane queue.
+                EventKind::Crash(_) | EventKind::Rejoin(_) | EventKind::FabricTick => {
+                    unreachable!("merge-thread event routed into a lane queue")
+                }
+            }
+        }
+    }
+
+    /// One in-window wake: the shared transition plus lane-local
+    /// accounting and routing (the merge thread finishes both at the
+    /// barrier, in global `(time, key)` order).
+    fn wake(&mut self, ctx: FireCtx<'_>, w: usize, now: f64, key: u64) -> Result<()> {
+        let i = w - self.lo;
+        let (loss, send, dt) = fire_and_forget_wake(
+            ctx,
+            &mut self.workers[i],
+            w,
+            &mut *self.grad,
+            &mut self.grad_buf,
+            &mut self.mail_scratch,
+            self.down.as_ref(),
+        )?;
+        self.steps += 1;
+        if w % self.trace_stride == 0 {
+            self.trace.push((now, key, loss));
+        }
+        if let Some(s) = send {
+            self.msgs += 1;
+            self.bytes += s.encoded as u64;
+            self.raw += s.raw as u64;
+            if ctx.fab_params.is_some() {
+                self.injects.push((now, key, w, s));
+            } else {
+                // Mint the delivery key *before* the wake key — the
+                // order the sequential executor assigns them.
+                let dkey = self.workers[i].next_key(w);
+                let ev = Event {
+                    time: now + s.delay,
+                    seq: dkey,
+                    kind: EventKind::Deliver {
+                        to: s.to,
+                        payload: s.payload,
+                        weight: s.weight,
+                        shard: s.shard,
+                    },
+                };
+                if (self.lo..self.hi()).contains(&s.to) {
+                    self.events.push(ev);
+                } else {
+                    self.egress.push(ev);
+                }
+            }
+        }
+        let epoch = self.epochs.get(&w).copied().unwrap_or(0);
+        let wkey = self.workers[i].next_key(w);
+        self.events.push(Event { time: now + dt, seq: wkey, kind: EventKind::Wake { w, epoch } });
+        Ok(())
+    }
+}
+
 /// The discrete-event engine.
 pub struct DesEngine {
     strategy: DesStrategy,
@@ -484,17 +837,29 @@ pub struct DesEngine {
     churn: Option<Box<ChurnState>>,
     events: EventQueue,
     scheduler: SchedulerKind,
+    /// Executor selection (see [`ParallelKind`]); sequential by default.
+    parallel: ParallelKind,
+    /// The active codec's spec, kept alongside the built codec object so
+    /// the parallel executor can compute its lookahead from the smallest
+    /// possible wire payload.
+    codec_spec: CodecSpec,
     /// Telemetry stride: worker `w` contributes to the loss trace and
     /// the consensus computations iff `w % trace_stride == 0`.  1 (full
     /// telemetry) up to 4096 workers; a ~1024-worker sample beyond.
     trace_stride: usize,
-    seq: u64,
+    /// Per-origin event-key counter for fabric ticks (origin = fleet
+    /// size, sorting after all worker events at equal time).
+    fabric_key_ctr: u64,
     /// Initial wakes (and crash schedules) are laid down lazily on the
     /// first `run` call so `with_scenario` can still adjust the model.
     started: bool,
     eta: f32,
     weight_decay: f32,
-    rng: Rng,
+    /// Randomness consumed by the fabric's *receive side* (down-link
+    /// jitter drawn inside `advance_into`): a dedicated stream keyed
+    /// `(seed, m)` so fabric draws never interleave with worker streams —
+    /// the merge thread owns it in a parallel run.
+    fabric_rng: CounterRng,
     grad_buf: FlatVec,
     /// Reusable drain buffer for mailbox processing: swapped with the
     /// awake worker's mailbox each wake so neither side allocates once
@@ -519,6 +884,10 @@ impl DesEngine {
         seed: u64,
     ) -> Result<Self> {
         assert!(workers >= 2);
+        // Event keys pack the origin into the high 24 bits (see
+        // `pack_key`); the fleet-size sentinel origin for fabric ticks
+        // must fit too.
+        assert!(workers < (1 << 24) - 1, "fleet size exceeds the event-key origin space");
         let (p, shards) = strategy.core_config();
         // One shared pool: a payload acquired at any worker's emit is
         // recycled when the receiving worker absorbs it.
@@ -535,6 +904,8 @@ impl DesEngine {
                 core: template.fork(w),
                 mailbox: Vec::new(),
                 at_barrier: false,
+                rng: CounterRng::new(seed, w as u64),
+                key_ctr: 0,
             })
             .collect::<Vec<WorkerState>>();
         let sym = matches!(strategy, DesStrategy::SymmetricGossip { .. }).then(|| {
@@ -560,12 +931,14 @@ impl DesEngine {
             churn: None,
             events: EventQueue::new(SchedulerKind::Wheel, wheel_tick(&time_model)),
             scheduler: SchedulerKind::Wheel,
+            parallel: ParallelKind::Sequential,
+            codec_spec: CodecSpec::default(),
             trace_stride,
-            seq: 0,
+            fabric_key_ctr: 0,
             started: false,
             eta,
             weight_decay,
-            rng: Rng::new(seed),
+            fabric_rng: CounterRng::new(seed, workers as u64),
             grad_buf: FlatVec::zeros(init.len()),
             mail_scratch: Vec::new(),
             report: DesReport::default(),
@@ -617,6 +990,18 @@ impl DesEngine {
         for ws in &mut self.workers {
             ws.core.set_codec_shared(&shared);
         }
+        self.codec_spec = codec;
+        self
+    }
+
+    /// Select the executor (see [`ParallelKind`]); sequential by default.
+    /// `Sharded(T)` runs the fire-and-forget strategies on `T` threads
+    /// with bit-identical results; validated against the strategy and the
+    /// gradient source at the first [`DesEngine::run`].  Must be called
+    /// before that run.
+    pub fn with_parallel(mut self, kind: ParallelKind) -> Self {
+        assert!(!self.started, "with_parallel must precede run");
+        self.parallel = kind;
         self
     }
 
@@ -648,15 +1033,27 @@ impl DesEngine {
         self
     }
 
-    fn schedule(&mut self, at: f64, kind: EventKind) {
-        self.seq += 1;
-        self.events.push(Event { time: at, seq: self.seq, kind });
+    /// Schedule an event keyed to worker `origin`'s key stream — the
+    /// worker whose handler is doing the scheduling (see [`pack_key`]).
+    fn schedule_from(&mut self, origin: usize, at: f64, kind: EventKind) {
+        let key = self.workers[origin].next_key(origin);
+        self.events.push(Event { time: at, seq: key, kind });
     }
 
     /// Schedule a wake stamped with `w`'s current epoch.
     fn schedule_wake(&mut self, at: f64, w: usize) {
         let epoch = self.epoch_of(w);
-        self.schedule(at, EventKind::Wake { w, epoch });
+        self.schedule_from(w, at, EventKind::Wake { w, epoch });
+    }
+
+    /// Schedule a fabric tick.  Its key origin is the fleet size, so at
+    /// equal times it sorts *after* every worker event — the order the
+    /// parallel merge thread reproduces by advancing the fabric at
+    /// window barriers.
+    fn schedule_fabric_tick(&mut self, at: f64) {
+        let key = pack_key(self.workers.len(), self.fabric_key_ctr);
+        self.fabric_key_ctr += 1;
+        self.events.push(Event { time: at, seq: key, kind: EventKind::FabricTick });
     }
 
     /// Whether worker `w` is currently up (always true without churn).
@@ -670,14 +1067,9 @@ impl DesEngine {
     }
 
     /// Per-worker compute draw: base jittered time × the scenario's
-    /// persistent multiplier.
+    /// persistent multiplier, from the worker's own stream.
     fn draw_compute_for(&mut self, w: usize) -> f64 {
-        self.time_model.draw_compute(&mut self.rng) * self.scenario.scale(w)
-    }
-
-    /// Exponential deviate with the given mean (churn inter-arrivals).
-    fn draw_exp(&mut self, mean: f64) -> f64 {
-        -mean * (1.0 - self.rng.f64()).ln()
+        self.time_model.draw_compute(&mut self.workers[w].rng) * self.scenario.scale(w)
     }
 
     /// Lay down the initial wake (and crash) schedule; validates the
@@ -742,8 +1134,8 @@ impl DesEngine {
         }
         if self.scenario.churn_enabled() {
             for w in 0..self.workers.len() {
-                let at = self.draw_exp(self.scenario.crash_mtbf);
-                self.schedule(at, EventKind::Crash(w));
+                let at = draw_exp(&mut self.workers[w].rng, self.scenario.crash_mtbf);
+                self.schedule_from(w, at, EventKind::Crash(w));
             }
         }
         Ok(())
@@ -752,6 +1144,10 @@ impl DesEngine {
     /// Run until simulated `horizon` seconds (or the event queue drains).
     pub fn run(&mut self, grad: &mut dyn GradSource, horizon: f64) -> Result<&DesReport> {
         self.start()?;
+        if let ParallelKind::Sharded(t) = self.parallel {
+            self.run_parallel(grad, horizon, t)?;
+            return Ok(&self.report);
+        }
         while let Some(ev) = self.events.pop() {
             if ev.time > horizon {
                 // Leave the event for a later run with a longer horizon —
@@ -781,7 +1177,7 @@ impl DesEngine {
                     self.fabric_tick_at = f64::INFINITY;
                     let mut out = std::mem::take(&mut self.fabric_out);
                     if let Some(fab) = self.fabric.as_mut() {
-                        fab.advance_into(ev.time, &mut self.rng, &mut out);
+                        fab.advance_into(ev.time, &mut self.fabric_rng, &mut out);
                     }
                     for d in out.drain(..) {
                         // Delivered even while `dst` is down — mailbox
@@ -794,10 +1190,16 @@ impl DesEngine {
                 }
             }
         }
-        // Account the in-progress outages up to the point the run stopped
-        // (resetting `down_since` keeps a longer-horizon resume exact).
-        // The BTreeMap sweeps in ascending worker id — the summation
-        // order the dense representation used.
+        self.finish_run();
+        Ok(&self.report)
+    }
+
+    /// Post-loop accounting shared by both executors: sweep the
+    /// in-progress outages up to the point the run stopped (resetting
+    /// `down_since` keeps a longer-horizon resume exact; the BTreeMap
+    /// sweeps in ascending worker id — the summation order the dense
+    /// representation used) and snapshot the fabric stats.
+    fn finish_run(&mut self) {
         let end = self.report.end_time;
         if let Some(churn) = self.churn.as_mut() {
             for since in churn.down_since.values_mut() {
@@ -810,7 +1212,6 @@ impl DesEngine {
         if let Some(fab) = &self.fabric {
             self.report.fabric = Some(fab.stats().clone());
         }
-        Ok(&self.report)
     }
 
     /// Keep a `FabricTick` pending at the fabric's earliest internal
@@ -824,7 +1225,7 @@ impl DesEngine {
         if let Some(t) = next {
             if t < self.fabric_tick_at {
                 self.fabric_tick_at = t;
-                self.schedule(t, EventKind::FabricTick);
+                self.schedule_fabric_tick(t);
             }
         }
     }
@@ -844,8 +1245,8 @@ impl DesEngine {
             *epoch = epoch.wrapping_add(1);
         }
         self.report.crashes += 1;
-        let down = self.draw_exp(self.scenario.rejoin_mttr);
-        self.schedule(now + down, EventKind::Rejoin(w));
+        let down = draw_exp(&mut self.workers[w].rng, self.scenario.rejoin_mttr);
+        self.schedule_from(w, now + down, EventKind::Rejoin(w));
     }
 
     fn rejoin(&mut self, w: usize, now: f64) {
@@ -858,11 +1259,14 @@ impl DesEngine {
         let dt = self.draw_compute_for(w);
         self.schedule_wake(now + dt, w);
         // Next failure of this worker.
-        let next = self.draw_exp(self.scenario.crash_mtbf);
-        self.schedule(now + next, EventKind::Crash(w));
+        let next = draw_exp(&mut self.workers[w].rng, self.scenario.crash_mtbf);
+        self.schedule_from(w, now + next, EventKind::Crash(w));
     }
 
     fn wake(&mut self, w: usize, now: f64, grad: &mut dyn GradSource) -> Result<()> {
+        if self.strategy.fire_and_forget() {
+            return self.wake_fire_and_forget(w, now, grad);
+        }
         let cold = Arc::clone(&self.cold);
         // 0. Pay any handshake delay owed from a symmetric rendezvous the
         //    worker was dragged into while computing.
@@ -905,77 +1309,22 @@ impl DesEngine {
 
         // 3. Strategy-specific communication + next wake.
         match self.strategy.clone() {
-            DesStrategy::Local => {
-                let dt = self.draw_compute_for(w);
-                self.schedule_wake(now + dt, w);
-            }
-            DesStrategy::GoSgd { .. } | DesStrategy::ShardedGoSgd { .. } => {
-                // The core runs the whole send-side transition; the
-                // engine only prices and delivers the message.  Under
-                // churn the scenario makes the pick topology-aware: a
-                // dead receiver is repaired around (the deterministic
-                // schedules walk to the next alive peer) instead of
-                // parking mass in a mailbox nobody is draining.  The
-                // sparse down-set gate draws the same RNG stream the old
-                // dense mask did (pinned in `gossip::protocol` tests).
-                let m = self.workers.len();
-                let dim = cold.len();
-                let out = {
-                    let gate = self.churn.as_deref().map(|c| AliveSet::Down(&c.down));
-                    let WorkerState { x, core, .. } = &mut self.workers[w];
-                    core.emit_gated(x.read(&cold), m, &mut self.rng, gate.as_ref())?
-                };
-                if let Some(out) = out {
-                    let encoded = out.wire_bytes();
-                    self.report.messages += 1;
-                    self.report.bytes += encoded as u64;
-                    self.report.raw_bytes += out.raw_wire_bytes() as u64;
-                    if self.fabric.is_some() {
-                        // Finite fabric: the message's cost is its actual
-                        // byte count through NIC queues, jittered links,
-                        // and the switch arbiter — contention emerges
-                        // instead of being priced by a scalar.
-                        let msg = (out.shard, out.payload, out.weight.value());
-                        let fab = self.fabric.as_mut().expect("checked");
-                        fab.inject(w, out.to, encoded, now, &mut self.rng, msg);
-                        self.arm_fabric_tick();
-                    } else {
-                        // Ideal model — bandwidth-dominated latency at
-                        // paper-scale messages: shipping a fraction of the
-                        // full dense message's bytes takes the same
-                        // fraction of the one-way latency (exactly 1.0 for
-                        // an unsharded dense send), so both sharding and
-                        // payload codecs directly cut per-message latency.
-                        let frac = encoded as f64 / wire_bytes_for(dim, false) as f64;
-                        let latency = self.time_model.draw_latency(&mut self.rng) * frac;
-                        self.schedule(
-                            now + latency,
-                            EventKind::Deliver {
-                                to: out.to,
-                                payload: out.payload,
-                                weight: out.weight.value(),
-                                shard: out.shard,
-                            },
-                        );
-                    }
-                }
-                // Fire-and-forget: compute continues immediately.
-                let dt = self.draw_compute_for(w);
-                self.schedule_wake(now + dt, w);
+            DesStrategy::Local | DesStrategy::GoSgd { .. } | DesStrategy::ShardedGoSgd { .. } => {
+                unreachable!("fire-and-forget strategies wake through wake_fire_and_forget")
             }
             DesStrategy::SymmetricGossip { p } => {
                 let mut resume = now;
-                if self.rng.bernoulli(p) {
+                if self.workers[w].rng.bernoulli(p) {
                     let m = self.workers.len();
-                    let r = self.rng.peer(m, w);
+                    let r = self.workers[w].rng.peer(m, w);
                     // Rendezvous: wait for r to finish its current step,
                     // then a two-way swap (2 messages, 2 latencies).
                     let wait = {
                         let sym = self.sym.as_ref().expect("symmetric state");
                         (sym.busy_until[r] - now).max(0.0)
                     };
-                    let lat = self.time_model.draw_latency(&mut self.rng)
-                        + self.time_model.draw_latency(&mut self.rng);
+                    let lat = self.time_model.draw_latency(&mut self.workers[w].rng)
+                        + self.time_model.draw_latency(&mut self.workers[w].rng);
                     // Pairwise average both models (symmetric exchange).
                     let xr = self.workers[r].x.read(&cold).clone();
                     {
@@ -1017,9 +1366,9 @@ impl DesEngine {
                             .iter()
                             .cloned()
                             .fold(0.0f64, f64::max);
-                        let up = self.time_model.draw_latency(&mut self.rng);
+                        let up = self.time_model.draw_latency(&mut self.workers[w].rng);
                         let service = self.time_model.master_service * m as f64;
-                        let down = self.time_model.draw_latency(&mut self.rng);
+                        let down = self.time_model.draw_latency(&mut self.workers[w].rng);
                         let resume = last + up + service + down;
                         // Elastic move (x̃ uses pre-sync worker states).
                         let a = alpha as f32;
@@ -1074,9 +1423,9 @@ impl DesEngine {
                             .iter()
                             .cloned()
                             .fold(0.0f64, f64::max);
-                        let gather = self.time_model.draw_latency(&mut self.rng);
+                        let gather = self.time_model.draw_latency(&mut self.workers[w].rng);
                         let service = self.time_model.master_service * m as f64;
-                        let bcast = self.time_model.draw_latency(&mut self.rng);
+                        let bcast = self.time_model.draw_latency(&mut self.workers[w].rng);
                         let resume = last + gather + service + bcast;
                         self.report.messages += 2 * m as u64;
                         let b = 2 * m as u64 * wire_bytes_for(mean.len(), false) as u64;
@@ -1099,6 +1448,521 @@ impl DesEngine {
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Sequential fire-and-forget wake: run the shared transition, then
+    /// account and route its outputs — the same bookkeeping the parallel
+    /// merge thread performs at window barriers.
+    fn wake_fire_and_forget(
+        &mut self,
+        w: usize,
+        now: f64,
+        grad: &mut dyn GradSource,
+    ) -> Result<()> {
+        let DesEngine {
+            time_model,
+            scenario,
+            cold,
+            workers,
+            churn,
+            grad_buf,
+            mail_scratch,
+            eta,
+            weight_decay,
+            fabric_spec,
+            strategy,
+            ..
+        } = self;
+        let ctx = FireCtx {
+            time_model,
+            scenario,
+            cold,
+            fab_params: fabric_spec.params(),
+            dim: cold.len(),
+            workers: workers.len(),
+            eta: *eta,
+            weight_decay: *weight_decay,
+            gossip: !matches!(strategy, DesStrategy::Local),
+        };
+        let down = churn.as_deref().map(|c| &c.down);
+        let (loss, send, dt) =
+            fire_and_forget_wake(ctx, &mut workers[w], w, grad, grad_buf, mail_scratch, down)?;
+        self.report.steps += 1;
+        if w % self.trace_stride == 0 {
+            self.report.trace.push((now, loss));
+        }
+        if let Some(s) = send {
+            self.report.messages += 1;
+            self.report.bytes += s.encoded as u64;
+            self.report.raw_bytes += s.raw as u64;
+            if self.fabric.is_some() {
+                // Finite fabric: the message's cost is its actual byte
+                // count through NIC queues, jittered links, and the
+                // switch arbiter — contention emerges instead of being
+                // priced by a scalar.
+                let fab = self.fabric.as_mut().expect("checked");
+                fab.inject_delayed(w, s.to, s.encoded, now, s.delay, (s.shard, s.payload, s.weight));
+                self.arm_fabric_tick();
+            } else {
+                self.schedule_from(
+                    w,
+                    now + s.delay,
+                    EventKind::Deliver {
+                        to: s.to,
+                        payload: s.payload,
+                        weight: s.weight,
+                        shard: s.shard,
+                    },
+                );
+            }
+        }
+        self.schedule_wake(now + dt, w);
+        Ok(())
+    }
+
+    /// The parallel executor's lookahead `δ`: a message emitted at time
+    /// `s` cannot become visible to another worker before `s + δ`.  `δ`
+    /// prices the smallest wire message the configuration can produce —
+    /// the smallest shard under the tightest codec encoding, *including*
+    /// the dense fallback degenerate inputs can force — over the fastest
+    /// possible link.
+    ///
+    /// Ideal model: the latency-jitter lower bound scaled by the minimal
+    /// payload fraction.  Finite fabric: an injection at `s` creates its
+    /// first internal transition (the up-link arrival) no earlier than
+    /// `s + bytes/bandwidth + min_delay`; windows are additionally
+    /// capped at the fabric's current next transition, so in-flight
+    /// messages need no lookahead of their own.
+    fn lookahead(&self) -> Result<f64> {
+        if matches!(self.strategy, DesStrategy::Local) {
+            // No worker ever sends: lanes are fully independent.
+            return Ok(f64::INFINITY);
+        }
+        let dim = self.cold.len();
+        let (_, shards) = self.strategy.core_config();
+        let sharded = shards > 1;
+        // Smallest shard the plan can produce (`ShardPlan` floors).
+        let lmin = if sharded { dim / shards } else { dim };
+        let payload = self.codec_spec.payload_wire_bytes(lmin).min(4 * lmin);
+        let b_min = (payload + 8 + 16 + if sharded { 8 } else { 0 }) as f64;
+        if let Some(p) = self.fabric_spec.params() {
+            return Ok(b_min / p.bandwidth + p.min_delay());
+        }
+        let full = wire_bytes_for(dim, false) as f64;
+        let d = self.time_model.latency * (1.0 - self.time_model.latency_jitter) * (b_min / full);
+        if !(d > 0.0 && d.is_finite()) {
+            return Err(Error::config(format!(
+                "the parallel executor needs a positive latency lower bound; latency {} \
+                 with jitter {} leaves none — lower the jitter below 1 or use the \
+                 sequential executor",
+                self.time_model.latency, self.time_model.latency_jitter
+            )));
+        }
+        Ok(d)
+    }
+
+    /// The deterministic sharded executor: workers partition into `t`
+    /// contiguous lanes, each with its own event queue; events execute
+    /// window-by-window under the conservative [`DesEngine::lookahead`]
+    /// bound, lanes running concurrently on scoped threads, and every
+    /// cross-lane effect (fabric injections, trace points, deliveries,
+    /// churn) merges at the window barrier in global `(time, key)`
+    /// order.  Bit-identical to the sequential executor — pinned by
+    /// `runtime_equivalence.rs`, argued in ARCHITECTURE.md ch. 7f.
+    fn run_parallel(&mut self, grad: &mut dyn GradSource, horizon: f64, t: usize) -> Result<()> {
+        let m = self.workers.len();
+        let t = t.clamp(1, m);
+        if !self.strategy.fire_and_forget() {
+            return Err(Error::config(format!(
+                "the parallel executor runs the fire-and-forget strategies; {} synchronizes \
+                 through rendezvous/master paths that need the sequential engine",
+                self.strategy.name()
+            )));
+        }
+        let delta = self.lookahead()?;
+        let spans = lane_spans(m, t);
+        let mut forks = Vec::with_capacity(t);
+        for _ in 0..t {
+            match grad.fork() {
+                Some(f) => forks.push(f),
+                None => {
+                    return Err(Error::config(
+                        "this gradient source does not support parallel execution \
+                         (GradSource::fork returned None); use the sequential executor",
+                    ))
+                }
+            }
+        }
+        let sched = self.scheduler;
+        let wheel_dt = wheel_tick(&self.time_model);
+        let stride = self.trace_stride;
+        let dim = self.cold.len();
+
+        // ---- disassemble engine state ----
+        // Crash/rejoin candidates move to a merge-side heap; stale
+        // fabric ticks are dropped (the merge thread polls the fabric
+        // directly and a fresh tick is re-armed on reassembly).
+        let mut churn_heap: BinaryHeap<Event> = BinaryHeap::new();
+        let mut routed: Vec<Vec<Event>> = (0..t).map(|_| Vec::new()).collect();
+        while let Some(ev) = self.events.pop() {
+            match &ev.kind {
+                EventKind::Wake { w, .. } => routed[lane_of(&spans, *w)].push(ev),
+                EventKind::Deliver { to, .. } => routed[lane_of(&spans, *to)].push(ev),
+                EventKind::Crash(_) | EventKind::Rejoin(_) => churn_heap.push(ev),
+                EventKind::FabricTick => {}
+            }
+        }
+        let mut churn = self.churn.take();
+        let mut rest = std::mem::take(&mut self.workers);
+        let mut forks = forks.into_iter();
+        let lanes: Vec<SyncMutex<Lane>> = spans
+            .iter()
+            .zip(routed.iter_mut())
+            .map(|(&(lo, hi), pending)| {
+                let tail = rest.split_off(hi - lo);
+                let lane_workers = std::mem::replace(&mut rest, tail);
+                let mut events = EventQueue::new(sched, wheel_dt);
+                for ev in pending.drain(..) {
+                    events.push(ev);
+                }
+                SyncMutex::new(Lane {
+                    lo,
+                    workers: lane_workers,
+                    events,
+                    grad: forks.next().expect("one fork per lane"),
+                    grad_buf: FlatVec::zeros(dim),
+                    mail_scratch: Vec::new(),
+                    trace_stride: stride,
+                    down: churn.as_deref().map(|c| c.down.clone()),
+                    epochs: churn.as_deref().map(|c| c.epochs.clone()).unwrap_or_default(),
+                    steps: 0,
+                    msgs: 0,
+                    bytes: 0,
+                    raw: 0,
+                    trace: Vec::new(),
+                    injects: Vec::new(),
+                    egress: Vec::new(),
+                    hi_t: 0.0,
+                    error: None,
+                })
+            })
+            .collect();
+
+        let DesEngine {
+            time_model,
+            scenario,
+            cold,
+            fabric,
+            fabric_rng,
+            fabric_out,
+            report,
+            fabric_spec,
+            strategy,
+            eta,
+            weight_decay,
+            ..
+        } = self;
+        // Rebind the field borrows as shared so both the lane context
+        // and the merge loop can read them.
+        let time_model: &TimeModel = time_model;
+        let scenario: &ScenarioModel = scenario;
+        let cold: &Arc<FlatVec> = cold;
+        let ctx = FireCtx {
+            time_model,
+            scenario,
+            cold,
+            fab_params: fabric_spec.params(),
+            dim,
+            workers: m,
+            eta: *eta,
+            weight_decay: *weight_decay,
+            gossip: !matches!(strategy, DesStrategy::Local),
+        };
+
+        let gen = AtomicU64::new(0);
+        let done = AtomicUsize::new(0);
+        let ctrl = SyncMutex::new(WindowCtrl { bound_time: 0.0, bound_key: 0, exit: false });
+        let mut run_err: Option<Error> = None;
+        let mut max_t = report.end_time;
+        let mut pending_beyond = false;
+        // Reused merge buffers.
+        let mut injects: Vec<(f64, u64, usize, SendOut)> = Vec::new();
+        let mut trace_buf: Vec<(f64, u64, f64)> = Vec::new();
+        let mut egress_buf: Vec<Event> = Vec::new();
+
+        sync_thread::scope(|scope| {
+            for i in 0..t {
+                let (lanes, ctrl, gen, done) = (&lanes, &ctrl, &gen, &done);
+                scope.spawn(move || {
+                    let mut seen = 0u64;
+                    loop {
+                        while gen.load(AtomicOrdering::Acquire) == seen {
+                            sync_thread::yield_now();
+                        }
+                        seen = gen.load(AtomicOrdering::Acquire);
+                        let (bt, bk, exit) = {
+                            let c = ctrl.lock().unwrap();
+                            (c.bound_time, c.bound_key, c.exit)
+                        };
+                        if exit {
+                            break;
+                        }
+                        lanes[i].lock().unwrap().run_window(ctx, bt, bk);
+                        done.fetch_add(1, AtomicOrdering::Release);
+                    }
+                });
+            }
+
+            // ---- merge thread: the window loop ----
+            let inf = (f64::INFINITY, u64::MAX);
+            let key_order = |a: &(f64, u64), b: &(f64, u64)| {
+                a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal).then(a.1.cmp(&b.1))
+            };
+            let mut nexts: Vec<(f64, u64)> = lanes
+                .iter()
+                .map(|lane| peek_next(&mut lane.lock().unwrap().events))
+                .collect();
+            loop {
+                // Candidates: earliest lane event, earliest churn event,
+                // earliest fabric transition (fabric keys sort after all
+                // worker keys at equal time, matching the sequential
+                // tick order).
+                let mut t0 = inf;
+                for &n in &nexts {
+                    if n < t0 {
+                        t0 = n;
+                    }
+                }
+                let churn_next =
+                    churn_heap.peek().map_or(inf, |e| (e.time, e.seq));
+                if churn_next < t0 {
+                    t0 = churn_next;
+                }
+                let fab_next = fabric
+                    .as_ref()
+                    .and_then(|f| f.next_transition())
+                    .map_or(inf, |ft| (ft, (m as u64) << KEY_ORIGIN_SHIFT));
+                if fab_next < t0 {
+                    t0 = fab_next;
+                }
+                if t0.0 > horizon {
+                    pending_beyond = t0.0.is_finite();
+                    break;
+                }
+
+                // The window bound: conservative lookahead from the
+                // earliest runnable event, capped by the boundary
+                // candidates the merge thread itself must execute.
+                let mut bound = (t0.0 + delta, 0u64);
+                if churn_next < bound {
+                    bound = churn_next;
+                }
+                if fab_next < bound {
+                    bound = fab_next;
+                }
+                if (horizon, u64::MAX) < bound {
+                    bound = (horizon, u64::MAX);
+                }
+
+                // Release the lanes on this window and wait them out.
+                {
+                    let mut c = ctrl.lock().unwrap();
+                    c.bound_time = bound.0;
+                    c.bound_key = bound.1;
+                }
+                done.store(0, AtomicOrdering::Release);
+                gen.fetch_add(1, AtomicOrdering::Release);
+                while done.load(AtomicOrdering::Acquire) < t {
+                    sync_thread::yield_now();
+                }
+
+                // ---- barrier: merge the window's outputs ----
+                for lane in &lanes {
+                    let mut l = lane.lock().unwrap();
+                    if let Some(e) = l.error.take() {
+                        run_err = Some(e);
+                    }
+                    report.steps += l.steps;
+                    report.messages += l.msgs;
+                    report.bytes += l.bytes;
+                    report.raw_bytes += l.raw;
+                    (l.steps, l.msgs, l.bytes, l.raw) = (0, 0, 0, 0);
+                    if l.hi_t > max_t {
+                        max_t = l.hi_t;
+                    }
+                    injects.append(&mut l.injects);
+                    trace_buf.append(&mut l.trace);
+                    egress_buf.append(&mut l.egress);
+                }
+                if run_err.is_some() {
+                    break;
+                }
+                // (1) Replay this window's fabric injections in global
+                // (time, key) order — the order the sequential engine
+                // injected them, reproducing the fabric's internal
+                // sequence numbers and f64 accounting exactly.
+                injects.sort_by(|a, b| key_order(&(a.0, a.1), &(b.0, b.1)));
+                if let Some(fab) = fabric.as_mut() {
+                    for (at, _key, src, s) in injects.drain(..) {
+                        fab.inject_delayed(
+                            src,
+                            s.to,
+                            s.encoded,
+                            at,
+                            s.delay,
+                            (s.shard, s.payload, s.weight),
+                        );
+                    }
+                } else {
+                    debug_assert!(injects.is_empty());
+                }
+                // (2) Trace points in global order.  Windows are
+                // time-disjoint, so per-window sorted appends produce
+                // the exact sequential trace.
+                trace_buf.sort_by(|a, b| key_order(&(a.0, a.1), &(b.0, b.1)));
+                for (at, _key, loss) in trace_buf.drain(..) {
+                    report.trace.push((at, loss));
+                }
+                // (3) Cross-lane deliveries into their destination
+                // queues (push order is irrelevant: queues order by
+                // (time, key), and every delivery lands at or beyond the
+                // bound — the lookahead guarantee).
+                for ev in egress_buf.drain(..) {
+                    let to = match &ev.kind {
+                        EventKind::Deliver { to, .. } => *to,
+                        _ => unreachable!("egress carries deliveries only"),
+                    };
+                    lanes[lane_of(&spans, to)].lock().unwrap().events.push(ev);
+                }
+                // (4) At most one churn event sits exactly at the bound;
+                // execute it here, where every lane event below it has
+                // already run — its position in the sequential order.
+                let mut churn_fired = false;
+                if churn_next == bound {
+                    let ev = churn_heap.pop().expect("bound candidate");
+                    if ev.time > max_t {
+                        max_t = ev.time;
+                    }
+                    let c = churn.as_deref_mut().expect("churn events exist only under churn");
+                    match ev.kind {
+                        EventKind::Crash(w) => {
+                            let mut l = lanes[lane_of(&spans, w)].lock().unwrap();
+                            let li = w - l.lo;
+                            if !c.down.contains(&w) && !l.workers[li].at_barrier {
+                                c.down.insert(w);
+                                c.down_since.insert(w, ev.time);
+                                let e = c.epochs.entry(w).or_insert(0);
+                                *e = e.wrapping_add(1);
+                                report.crashes += 1;
+                                let dn = draw_exp(&mut l.workers[li].rng, scenario.rejoin_mttr);
+                                let key = l.workers[li].next_key(w);
+                                churn_heap.push(Event {
+                                    time: ev.time + dn,
+                                    seq: key,
+                                    kind: EventKind::Rejoin(w),
+                                });
+                            }
+                        }
+                        EventKind::Rejoin(w) => {
+                            let since =
+                                c.down_since.remove(&w).expect("rejoining worker was down");
+                            c.down.remove(&w);
+                            report.downtime_secs += ev.time - since;
+                            let mut l = lanes[lane_of(&spans, w)].lock().unwrap();
+                            let li = w - l.lo;
+                            let dt = time_model.draw_compute(&mut l.workers[li].rng)
+                                * scenario.scale(w);
+                            let epoch = c.epochs.get(&w).copied().unwrap_or(0);
+                            let wkey = l.workers[li].next_key(w);
+                            l.events.push(Event {
+                                time: ev.time + dt,
+                                seq: wkey,
+                                kind: EventKind::Wake { w, epoch },
+                            });
+                            let nxt = draw_exp(&mut l.workers[li].rng, scenario.crash_mtbf);
+                            let ckey = l.workers[li].next_key(w);
+                            churn_heap.push(Event {
+                                time: ev.time + nxt,
+                                seq: ckey,
+                                kind: EventKind::Crash(w),
+                            });
+                        }
+                        _ => unreachable!("churn heap holds crash/rejoin only"),
+                    }
+                    churn_fired = true;
+                }
+                // (5) Advance the fabric when its next transition is the
+                // bound, delivering into mailboxes in the fabric's own
+                // deterministic order.
+                if fab_next == bound {
+                    if let Some(fab) = fabric.as_mut() {
+                        let mut out = std::mem::take(fabric_out);
+                        fab.advance_into(bound.0, fabric_rng, &mut out);
+                        for d in out.drain(..) {
+                            let mut l = lanes[lane_of(&spans, d.dst)].lock().unwrap();
+                            let li = d.dst - l.lo;
+                            let (shard, payload, weight) = d.item;
+                            l.workers[li].mailbox.push((shard, payload, weight));
+                        }
+                        *fabric_out = out;
+                        if bound.0 > max_t {
+                            max_t = bound.0;
+                        }
+                    }
+                }
+                // (6) Refresh churn snapshots if they changed and
+                // recompute every lane's earliest pending event (egress
+                // and churn pushes above may have changed them).
+                for (i, lane) in lanes.iter().enumerate() {
+                    let mut l = lane.lock().unwrap();
+                    if churn_fired {
+                        if let Some(c) = churn.as_deref() {
+                            l.down = Some(c.down.clone());
+                            l.epochs = c.epochs.clone();
+                        }
+                    }
+                    nexts[i] = peek_next(&mut l.events);
+                }
+            }
+
+            // Release the lanes from the gate for good.
+            {
+                let mut c = ctrl.lock().unwrap();
+                c.exit = true;
+            }
+            gen.fetch_add(1, AtomicOrdering::Release);
+        });
+
+        // ---- reassemble engine state ----
+        let mut workers_back: Vec<WorkerState> = Vec::with_capacity(m);
+        let mut leftover: Vec<Event> = Vec::new();
+        for lane in &lanes {
+            let mut l = lane.lock().unwrap();
+            workers_back.append(&mut l.workers);
+            while let Some(ev) = l.events.pop() {
+                leftover.push(ev);
+            }
+        }
+        drop(lanes);
+        self.workers = workers_back;
+        // A fresh queue: the old one's wheel cursor sits past the events
+        // we are putting back.
+        self.events = EventQueue::new(self.scheduler, wheel_tick(&self.time_model));
+        for ev in leftover {
+            self.events.push(ev);
+        }
+        for ev in churn_heap {
+            self.events.push(ev);
+        }
+        self.churn = churn;
+        self.fabric_tick_at = f64::INFINITY;
+        self.arm_fabric_tick();
+        if let Some(e) = run_err {
+            return Err(e);
+        }
+        self.report.end_time = if pending_beyond { horizon } else { max_t };
+        self.finish_run();
         Ok(())
     }
 

@@ -39,7 +39,7 @@
 //! [`Fabric::next_transition`] exposes the earliest pending internal hop,
 //! and [`Fabric::advance_into`] processes every hop due by `now`,
 //! yielding completed [`Delivery`]s.  Every random draw flows through the
-//! caller's [`Rng`], so a seeded run is exactly reproducible.
+//! caller's [`Draws`] source, so a seeded run is exactly reproducible.
 //!
 //! [`FabricSpec`] is the plain-data configuration surface (`--fabric` on
 //! the CLI): the `ideal` scalar-latency model (byte-identical to the
@@ -53,7 +53,7 @@ use std::collections::{BTreeSet, BinaryHeap, VecDeque};
 use std::ops::Bound;
 
 use crate::error::{Error, Result};
-use crate::util::rng::Rng;
+use crate::util::rng::Draws;
 
 /// Per-link latency jitter distribution.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -85,8 +85,11 @@ pub struct FabricParams {
 }
 
 impl FabricParams {
-    /// One jittered link-delay sample.
-    fn sample_delay(&self, rng: &mut Rng) -> f64 {
+    /// One jittered link-delay sample.  Public so the parallel DES can
+    /// pre-draw a message's up-link jitter from the *sender's* stream at
+    /// emit time ([`Fabric::inject_delayed`]) while the sequential path
+    /// keeps sampling inside [`Fabric::inject`].
+    pub fn sample_delay(&self, rng: &mut dyn Draws) -> f64 {
         match self.jitter {
             Jitter::None => self.delay,
             Jitter::Uniform { frac } => self.delay * (1.0 + frac * (2.0 * rng.f64() - 1.0)),
@@ -431,7 +434,26 @@ impl<T> Fabric<T> {
         dst: usize,
         bytes: usize,
         now: f64,
-        rng: &mut Rng,
+        rng: &mut dyn Draws,
+        item: T,
+    ) {
+        let up_delay = self.params.sample_delay(rng);
+        self.inject_delayed(src, dst, bytes, now, up_delay, item);
+    }
+
+    /// [`Fabric::inject`] with the up-link jitter already drawn.  The
+    /// parallel DES samples `up_delay` from the sending worker's counter
+    /// stream while its shard runs concurrently, then replays injections
+    /// on the merge thread in global `(time, key)` order — this split
+    /// keeps that replay bit-identical to the sequential engine, which
+    /// draws the sample at the same point of the same stream.
+    pub fn inject_delayed(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: usize,
+        now: f64,
+        up_delay: f64,
         item: T,
     ) {
         assert!(src < self.flows.len() && dst < self.flows.len());
@@ -447,7 +469,7 @@ impl<T> Fabric<T> {
         let depart = start_tx + tx;
         self.nic_free[src] = depart;
         // Up link: propagation + jitter, clamped to in-order per flow.
-        let arrive = (depart + self.params.sample_delay(rng)).max(self.up_inorder[src]);
+        let arrive = (depart + up_delay).max(self.up_inorder[src]);
         self.up_inorder[src] = arrive;
         self.stats.injected += 1;
         self.push(
@@ -544,7 +566,7 @@ impl<T> Fabric<T> {
     /// completed deliveries to `out` (cleared first).  Transitions only
     /// ever spawn strictly-later transitions, so one pass drains
     /// everything due.
-    pub fn advance_into(&mut self, now: f64, rng: &mut Rng, out: &mut Vec<Delivery<T>>) {
+    pub fn advance_into(&mut self, now: f64, rng: &mut dyn Draws, out: &mut Vec<Delivery<T>>) {
         out.clear();
         while self.heap.peek().is_some_and(|e| e.time <= now) {
             let ev = self.heap.pop().expect("peeked");
@@ -591,6 +613,7 @@ impl<T> Fabric<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     /// Deterministic params: bandwidth 1000 B/s, no delay, no jitter.
     fn flat(oversub: f64) -> FabricParams {

@@ -44,10 +44,20 @@
 //! fleet fits laptop memory — `benches/des_scale.rs` asserts the
 //! bytes-per-worker ceiling.
 
+//! Parallel execution: [`des::ParallelKind::Sharded`] partitions the
+//! fleet into contiguous lanes executed window-by-window on scoped
+//! threads under a conservative lookahead bound, with cross-lane effects
+//! merged at window barriers in global `(time, key)` order — the same
+//! event schedule, RNG streams, and trace hashes as the sequential
+//! executor, bit for bit (`runtime_equivalence.rs` pins it;
+//! `benches/par_des.rs` measures the speedup).
+
 pub mod des;
 pub mod fabric;
 pub mod wheel;
 
-pub use des::{DesEngine, DesReport, DesStrategy, ScenarioModel, SchedulerKind, TimeModel};
+pub use des::{
+    DesEngine, DesReport, DesStrategy, ParallelKind, ScenarioModel, SchedulerKind, TimeModel,
+};
 pub use fabric::{Delivery, Fabric, FabricParams, FabricSpec, FabricStats, Jitter};
 pub use wheel::TimingWheel;

@@ -26,9 +26,14 @@
 //! NaN-free times compared by `partial_cmp` and ties broken by the
 //! monotone sequence number.  Two facts make this exact rather than
 //! approximate: equal times always map to the same slot (the tick is a
-//! pure function of the time), and the slot under the cursor is kept
-//! sorted — lazily on first pop, then maintained by binary insertion for
-//! events pushed into it mid-drain.  `TimingWheel` draws no randomness,
+//! pure function of the time), and the slot under the cursor drains
+//! through a sorted buffer — filled lazily on the first pop of each tick,
+//! maintained by binary insertion for events pushed mid-drain.  The drain
+//! buffer is **one persistent `Vec` reused across every per-slot sort**
+//! (slot storage swaps in, recycled capacity swaps out), so a
+//! steady-state pop performs zero heap allocations — asserted by the
+//! counting allocator in `benches/hotpath_alloc.rs`.  `TimingWheel` draws
+//! no randomness,
 //! so a DES run pops the identical event sequence (and therefore produces
 //! the identical trace hash) whichever scheduler backs it.
 
@@ -71,8 +76,13 @@ pub struct TimingWheel<T> {
     overflow: Vec<Entry<T>>,
     /// Reusable buffer for pouring a level-1 chunk into level 0.
     scratch: Vec<Entry<T>>,
-    /// Whether the slot under the cursor is sorted (descending, so the
-    /// minimum pops from the back in O(1)).
+    /// The cursor slot's sorted drain (descending, so the minimum pops
+    /// from the back in O(1)).  One buffer reused across every lazy
+    /// per-slot sort: entering a tick swaps the slot's contents in, and
+    /// the slot inherits the drain's previous capacity — so steady-state
+    /// pops touch only recycled storage and allocate nothing.
+    drain: Vec<Entry<T>>,
+    /// Whether `drain` is active for the tick under the cursor.
     cur_sorted: bool,
     lvl0_len: usize,
     lvl1_len: usize,
@@ -92,6 +102,7 @@ impl<T> TimingWheel<T> {
             lvl1: (0..W).map(|_| Vec::new()).collect(),
             overflow: Vec::new(),
             scratch: Vec::new(),
+            drain: Vec::new(),
             cur_sorted: false,
             lvl0_len: 0,
             lvl1_len: 0,
@@ -139,11 +150,11 @@ impl<T> TimingWheel<T> {
         if c == self.cursor / W {
             let slot = (t % W) as usize;
             if t == self.cursor && self.cur_sorted {
-                // Mid-drain push into the slot being popped: binary-insert
-                // into the descending order so the next pop still returns
-                // the global minimum.
-                let pos = self.lvl0[slot].partition_point(|x| key_cmp(x, &e) == Ordering::Greater);
-                self.lvl0[slot].insert(pos, e);
+                // Mid-drain push into the tick being popped: binary-insert
+                // into the drain's descending order so the next pop still
+                // returns the global minimum.
+                let pos = self.drain.partition_point(|x| key_cmp(x, &e) == Ordering::Greater);
+                self.drain.insert(pos, e);
             } else {
                 self.lvl0[slot].push(e);
             }
@@ -162,16 +173,25 @@ impl<T> TimingWheel<T> {
             return None;
         }
         loop {
+            if self.cur_sorted {
+                if let Some(e) = self.drain.pop() {
+                    self.lvl0_len -= 1;
+                    self.len -= 1;
+                    return Some(e);
+                }
+                // Tick fully drained; the empty drain buffer keeps its
+                // capacity for the next slot's sort.
+                self.cur_sorted = false;
+            }
             let slot = (self.cursor % W) as usize;
             if !self.lvl0[slot].is_empty() {
-                if !self.cur_sorted {
-                    self.lvl0[slot].sort_unstable_by(|a, b| key_cmp(b, a));
-                    self.cur_sorted = true;
-                }
-                let e = self.lvl0[slot].pop().expect("slot checked non-empty");
-                self.lvl0_len -= 1;
-                self.len -= 1;
-                return Some(e);
+                // Lazy per-slot sort into the one persistent drain buffer:
+                // the slot's storage moves in, the drain's recycled
+                // capacity moves out to the slot — no allocation per pop.
+                std::mem::swap(&mut self.drain, &mut self.lvl0[slot]);
+                self.drain.sort_unstable_by(|a, b| key_cmp(b, a));
+                self.cur_sorted = true;
+                continue;
             }
             self.advance();
         }
@@ -257,7 +277,7 @@ impl<T> TimingWheel<T> {
                 f(e);
             }
         }
-        for e in &self.overflow {
+        for e in self.drain.iter().chain(&self.overflow) {
             f(e);
         }
     }
@@ -267,7 +287,7 @@ impl<T> TimingWheel<T> {
     pub fn approx_bytes(&self) -> usize {
         let entry = std::mem::size_of::<Entry<T>>();
         let hdr = std::mem::size_of::<Vec<Entry<T>>>();
-        let mut cap = self.overflow.capacity() + self.scratch.capacity();
+        let mut cap = self.overflow.capacity() + self.scratch.capacity() + self.drain.capacity();
         for slot in self.lvl0.iter().chain(self.lvl1.iter()) {
             cap += slot.capacity();
         }

@@ -32,6 +32,18 @@ pub trait GradSource {
     fn true_loss(&self, _params: &FlatVec) -> Option<f64> {
         None
     }
+
+    /// A clone of this source for a parallel DES shard thread, if the
+    /// implementation supports one.  A fork must produce bit-identical
+    /// gradients to the original for every `(m, step)` pair — the
+    /// parallel executor's determinism contract leans on per-call purity
+    /// (both shipped sources key an RNG stream by `(m, step)` and never
+    /// advance shared state), not on sharing.  The default `None` makes
+    /// the engine reject `Sharded(T)` runs with a config error instead
+    /// of silently diverging; PJRT-backed sources stay sequential-only.
+    fn fork(&self) -> Option<Box<dyn GradSource + Send>> {
+        None
+    }
 }
 
 /// Noisy quadratic: `L(x) = 0.5‖x − x*‖²/d`, gradient `(x − x*)/d + σ z`,
@@ -84,6 +96,15 @@ impl GradSource for QuadraticSource {
         let d = self.target.len() as f64;
         Some(params.dist_sq(&self.target).ok()? * 0.5 / d)
     }
+
+    fn fork(&self) -> Option<Box<dyn GradSource + Send>> {
+        Some(Box::new(QuadraticSource {
+            target: self.target.clone(),
+            sigma: self.sigma,
+            rng: self.rng.clone(),
+            scratch: self.scratch.clone(),
+        }))
+    }
 }
 
 /// Worst-case consensus workload (paper section 5.2): the "gradient" is
@@ -110,6 +131,10 @@ impl GradSource for NoiseSource {
 
     fn dim(&self) -> usize {
         self.dim
+    }
+
+    fn fork(&self) -> Option<Box<dyn GradSource + Send>> {
+        Some(Box::new(NoiseSource { dim: self.dim, rng: self.rng.clone() }))
     }
 }
 

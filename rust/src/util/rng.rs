@@ -159,6 +159,109 @@ impl Rng {
     }
 }
 
+/// The draw surface shared by every randomness consumer that must work
+/// with both generator families: the splittable [`Rng`] the runtimes own
+/// and the counter-based per-worker [`CounterRng`] the parallel DES
+/// partitions across shard threads.
+///
+/// The provided methods are *verbatim* copies of [`Rng`]'s inherent
+/// bodies, defined once here in terms of `next_u64` — so a sequence of
+/// draws depends only on the `next_u64` stream, never on which concrete
+/// type (or dispatch path) produced it.  `rng::tests` pins
+/// dyn-trait-vs-inherent equality so the two can never drift.
+pub trait Draws {
+    /// Next raw 64-bit output.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f64` in `[0, 1)` (53-bit resolution).
+    #[inline]
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's rejection method (unbiased).
+    #[inline]
+    fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Uniform choice from `{0..m} \ {exclude}`.
+    #[inline]
+    fn peer(&mut self, m: usize, exclude: usize) -> usize {
+        assert!(m >= 2, "need at least 2 workers to pick a peer");
+        assert!(exclude < m);
+        let k = self.below(m as u64 - 1) as usize;
+        if k >= exclude {
+            k + 1
+        } else {
+            k
+        }
+    }
+}
+
+impl Draws for Rng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        Rng::next_u64(self)
+    }
+}
+
+/// Counter-based generator: the `n`-th output is a pure hash of
+/// `(key, n)`, where the key derives from `(seed, stream)`.
+///
+/// This is the parallel DES's per-worker stream: unlike [`Rng`]'s
+/// mutable-state walk, a `CounterRng` has no sequential dependence beyond
+/// the counter itself, so a worker's draw sequence is a function of
+/// `(seed, worker, draw index)` alone — any executor that gives each
+/// worker the same *relative* draw order reproduces the exact stream, no
+/// matter how events interleave across shard threads.
+///
+/// Output path: the same SplitMix64 finalizer [`Rng`] seeds through,
+/// applied to `key ⊕ (ctr · φ64)` — full 64-bit avalanche per draw.
+#[derive(Clone, Debug)]
+pub struct CounterRng {
+    key: u64,
+    ctr: u64,
+}
+
+impl CounterRng {
+    /// Stream `stream` of base seed `seed` (the DES uses the worker id,
+    /// plus reserved streams past the fleet size for fabric internals).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        // Re-key through SplitMix64 twice so structured (seed, stream)
+        // pairs — consecutive worker ids under one seed — land far apart.
+        let mut sm = seed ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        let a = splitmix64(&mut sm);
+        let b = splitmix64(&mut sm);
+        CounterRng { key: a ^ b.rotate_left(32), ctr: 0 }
+    }
+}
+
+impl Draws for CounterRng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let mut z = self.key ^ self.ctr.wrapping_mul(0x9E3779B97F4A7C15);
+        self.ctr = self.ctr.wrapping_add(1);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +350,71 @@ mod tests {
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.01, "mean {mean}");
         assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    // ---- the Draws trait and the counter-based stream ------------------
+
+    /// The provided `Draws` bodies must be exact copies of `Rng`'s
+    /// inherent methods: on a concrete `&mut Rng` the inherent methods
+    /// shadow the trait's, so any drift between the two would silently
+    /// split the RNG stream between generic and concrete call sites.
+    #[test]
+    fn dyn_draws_matches_inherent_rng_methods_bit_for_bit() {
+        let mut a = Rng::new(0xDEC0DE);
+        let mut b = Rng::new(0xDEC0DE);
+        let dynb: &mut dyn Draws = &mut b;
+        for i in 0..200 {
+            match i % 4 {
+                0 => assert_eq!(a.f64().to_bits(), dynb.f64().to_bits()),
+                1 => assert_eq!(a.below(1 + i as u64), dynb.below(1 + i as u64)),
+                2 => assert_eq!(a.bernoulli(0.3), dynb.bernoulli(0.3)),
+                _ => assert_eq!(a.peer(9, 4), dynb.peer(9, 4)),
+            }
+        }
+    }
+
+    #[test]
+    fn counter_rng_is_a_pure_function_of_seed_stream_and_index() {
+        let mut a = CounterRng::new(42, 7);
+        let draws: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
+        // A fresh stream replays identically; interleaving other streams
+        // cannot perturb it (no shared state).
+        let mut b = CounterRng::new(42, 7);
+        let mut noise = CounterRng::new(42, 8);
+        for &want in &draws {
+            let _ = noise.next_u64();
+            assert_eq!(b.next_u64(), want);
+        }
+    }
+
+    #[test]
+    fn counter_rng_streams_and_seeds_are_distinct() {
+        let mut a = CounterRng::new(1, 0);
+        let mut b = CounterRng::new(1, 1);
+        let mut c = CounterRng::new(2, 0);
+        let same_stream = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same_stream, 0);
+        let mut a = CounterRng::new(1, 0);
+        let same_seed = (0..64).filter(|_| a.next_u64() == c.next_u64()).count();
+        assert_eq!(same_seed, 0);
+    }
+
+    #[test]
+    fn counter_rng_uniformity_through_the_draws_surface() {
+        let mut r = CounterRng::new(11, 3);
+        let n = 7u64;
+        let mut counts = [0u32; 7];
+        let trials = 70_000;
+        for _ in 0..trials {
+            counts[r.below(n) as usize] += 1;
+        }
+        let expect = trials as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt(), "{counts:?}");
+        }
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.25)).count();
+        let p_hat = hits as f64 / 100_000.0;
+        assert!((p_hat - 0.25).abs() < 0.01, "{p_hat}");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 
 use gosgd::bench::ExchangePair;
 use gosgd::gossip::CodecSpec;
+use gosgd::sim::TimingWheel;
 use gosgd::util::alloc_count::CountingAllocator;
 
 #[global_allocator]
@@ -61,6 +62,47 @@ fn unpooled_exchange_does_allocate() {
     // heap every exchange — proving the counter actually counts.
     let n = steady_state_allocs(CodecSpec::Dense, false);
     assert!(n >= 256, "unpooled loop allocated only {n} times; counter broken?");
+}
+
+#[test]
+fn wheel_steady_state_pop_allocates_nothing() {
+    // The DES scheduler's counterpart of the pooling contract: once the
+    // wheel's capacities are warm (level-0 slots, the persistent sorted
+    // drain buffer, the chunk-pour scratch), a full window of pops —
+    // including the lazy per-slot sorts and level-1 pours — touches only
+    // recycled storage.  The mirror of `benches/hotpath_alloc.rs`'s gate.
+    const TICK: f64 = 1e-3;
+    const PER_TICK: usize = 16;
+    let mut wheel: TimingWheel<u64> = TimingWheel::new(TICK);
+    let mut seq = 0u64;
+    let mut push_round = |wheel: &mut TimingWheel<u64>, r: usize| {
+        for i in 0..256usize {
+            for j in 0..PER_TICK {
+                let off = (j as f64 + 0.5) / PER_TICK as f64 * TICK * 0.98;
+                seq += 1;
+                wheel.push((r * 256 + i) as f64 * TICK + off, seq, seq);
+            }
+        }
+    };
+    let drain_round = |wheel: &mut TimingWheel<u64>| {
+        let mut popped = 0usize;
+        while wheel.pop().is_some() {
+            popped += 1;
+        }
+        assert_eq!(popped, 256 * PER_TICK, "wheel lost events");
+    };
+    for r in 0..3 {
+        push_round(&mut wheel, r);
+        drain_round(&mut wheel);
+    }
+    push_round(&mut wheel, 3);
+    CountingAllocator::reset();
+    drain_round(&mut wheel);
+    assert_eq!(
+        CountingAllocator::allocations(),
+        0,
+        "wheel steady-state pop path allocated"
+    );
 }
 
 #[test]

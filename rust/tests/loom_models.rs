@@ -1,6 +1,8 @@
-//! Model-checked concurrency suites for the two lock-free/contended
+//! Model-checked concurrency suites for the lock-free/contended
 //! primitives the gossip runtime rests on: the [`BufferPool`] freelist's
-//! claim/retire protocol and the [`MessageQueue`] mailbox.
+//! claim/retire protocol, the [`MessageQueue`] mailbox, and the parallel
+//! DES executor's window-barrier gate (ctrl mutex + generation/done
+//! counters + ingress-buffer handoff).
 //!
 //! Under `RUSTFLAGS="--cfg loom"` (the CI `loom` lane) every test here
 //! explores **all interleavings up to the preemption bound** via the
@@ -157,6 +159,132 @@ fn queue_concurrent_push_and_drain_loses_nothing() {
         let s = q.stats();
         assert_eq!(s.pushed, 3);
         assert_eq!(s.drained, 3);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Parallel DES: the window-barrier gate and ingress-buffer handoff.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn window_barrier_gen_done_handoff_publishes_every_lane_effect() {
+    // Miniature of `sim::des`'s parallel-executor gate: the merge thread
+    // publishes a window bound under the ctrl mutex, resets `done`, and
+    // bumps `gen` (Release) to open the window; each lane observes the
+    // bump (Acquire), reads the bound under the lock, records its window
+    // effect in its ingress buffer, and bumps `done` (Release).
+    //
+    // One shape difference from the executor: lanes here are spawned
+    // *after* the gate opens and joined instead of spin-waited, because
+    // the model checker expresses waiting only through its blocking
+    // primitives (an unbounded gen/done spin never terminates a
+    // schedule).  The executor's real lanes are persistent `thread::scope`
+    // threads the checker does not drive; what this model does pin, on
+    // every schedule, is the protocol's accounting and publication:
+    // `done` counts each lane exactly once per window, no lane sees a
+    // stale bound or re-runs a window, and every effect written before
+    // the lane's `done` bump is visible at the merge barrier.
+    use gosgd::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+    sync::model_with(bounds(), || {
+        const LANES: usize = 2;
+        let ctrl = Arc::new(Mutex::new((0u64, false))); // (bound, exit)
+        let gen = Arc::new(AtomicU64::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+        let ingress: Arc<Vec<Mutex<Vec<(u64, usize)>>>> =
+            Arc::new((0..LANES).map(|_| Mutex::new(Vec::new())).collect());
+        let mut seen = [0u64; LANES];
+        for window in 1..=2u64 {
+            *ctrl.lock().expect("ctrl") = (window, false);
+            done.store(0, Ordering::Release);
+            gen.fetch_add(1, Ordering::Release);
+            let handles: Vec<_> = (0..LANES)
+                .map(|lane| {
+                    let ctrl = ctrl.clone();
+                    let gen = gen.clone();
+                    let done = done.clone();
+                    let ingress = ingress.clone();
+                    let mut lane_seen = seen[lane];
+                    thread::spawn(move || {
+                        // The executor's wait loop, resolved on the first
+                        // load in every schedule (gate opened pre-spawn).
+                        let mut g = gen.load(Ordering::Acquire);
+                        while g == lane_seen {
+                            thread::yield_now();
+                            g = gen.load(Ordering::Acquire);
+                        }
+                        lane_seen = g;
+                        let (bound, exit) = *ctrl.lock().expect("ctrl");
+                        assert!(!exit, "lane ran a window after exit");
+                        ingress[lane].lock().expect("lane").push((bound, lane));
+                        done.fetch_add(1, Ordering::Release);
+                        lane_seen
+                    })
+                })
+                .collect();
+            for (lane, h) in handles.into_iter().enumerate() {
+                seen[lane] = h.join().unwrap();
+            }
+            // The merge barrier: done counted every lane exactly once and
+            // each lane's effect for THIS bound is published.
+            assert_eq!(done.load(Ordering::Acquire), LANES, "done miscounted");
+            for (lane, buf) in ingress.iter().enumerate() {
+                let buf = buf.lock().expect("lane");
+                assert_eq!(buf.len() as u64, window, "window run count off");
+                assert_eq!(*buf.last().unwrap(), (window, lane), "stale bound");
+            }
+        }
+        // Exit handshake: a lane observing the exit flag must not touch
+        // its ingress buffer or the done counter.
+        *ctrl.lock().expect("ctrl") = (0, true);
+        done.store(0, Ordering::Release);
+        gen.fetch_add(1, Ordering::Release);
+        let (ctrl2, gen2, ingress2) = (ctrl.clone(), gen.clone(), ingress.clone());
+        let last = seen[0];
+        thread::spawn(move || {
+            let mut g = gen2.load(Ordering::Acquire);
+            while g == last {
+                thread::yield_now();
+                g = gen2.load(Ordering::Acquire);
+            }
+            let (_, exit) = *ctrl2.lock().expect("ctrl");
+            assert!(exit, "exit flag lost");
+            assert_eq!(ingress2[0].lock().expect("lane").len(), 2);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(done.load(Ordering::Acquire), 0, "exit bumped done");
+    });
+}
+
+#[test]
+fn ingress_merge_restores_canonical_order_despite_racy_arrival() {
+    // The cross-lane effect handoff: two lanes racing events into a
+    // shared ingress buffer in schedule-dependent arrival order.  The
+    // merge step's `(time, key)` sort must erase the interleaving — on
+    // EVERY schedule the merged sequence is the one canonical order, which
+    // is exactly why the sharded executor's trace hash is bit-identical
+    // to sequential no matter how the OS schedules the lanes.
+    sync::model_with(bounds(), || {
+        let ingress = Arc::new(Mutex::new(Vec::<(f64, u64, usize)>::new()));
+        let i2 = ingress.clone();
+        let t = thread::spawn(move || {
+            i2.lock().expect("ingress").push((0.50, 7, 1));
+            i2.lock().expect("ingress").push((0.25, 9, 1));
+        });
+        ingress.lock().expect("ingress").push((0.25, 3, 0));
+        ingress.lock().expect("ingress").push((0.75, 1, 0));
+        t.join().unwrap();
+        let mut merged = ingress.lock().expect("ingress").clone();
+        merged.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        assert_eq!(
+            merged,
+            vec![(0.25, 3, 0), (0.25, 9, 1), (0.50, 7, 1), (0.75, 1, 0)],
+            "merge order must be schedule-independent"
+        );
     });
 }
 

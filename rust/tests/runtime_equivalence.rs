@@ -555,6 +555,267 @@ fn wheel_scheduler_survives_horizon_resume_like_the_heap() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Parallel DES executor: Sharded(T) ≡ Sequential, bit for bit.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_des_is_bit_identical_to_sequential_across_the_grid() {
+    // The parallel-executor contract, stated like the wheel's and the
+    // fabric's: `Sharded(T)` is not "approximately sequential" — lanes
+    // only reorder events that are provably independent (inside one
+    // conservative lookahead window, on disjoint worker spans) and every
+    // cross-lane effect merges at the window barrier in global
+    // `(time, key)` order.  So the full report hash (trace, counters,
+    // fabric accounting), every parameter bit, and every per-shard sum
+    // weight must match the sequential executor across the whole scenario
+    // grid — churn, finite fabrics with uniform and heavy-tailed jitter,
+    // compressed codecs, structured topologies, telemetry sampling — at
+    // every thread count, including ones that do not divide the fleet.
+    use gosgd::sim::{
+        DesEngine, DesStrategy, FabricSpec, ParallelKind, ScenarioModel, TimeModel,
+    };
+    use gosgd::strategies::grad::QuadraticSource;
+
+    struct Case {
+        name: &'static str,
+        strategy: DesStrategy,
+        codec: CodecSpec,
+        topo: TopologySpec,
+        fabric: FabricSpec,
+        churn: bool,
+        telemetry: usize,
+        seed: u64,
+    }
+    let cases = [
+        Case {
+            name: "plain gossip",
+            strategy: DesStrategy::GoSgd { p: 0.3 },
+            codec: CodecSpec::Dense,
+            topo: TopologySpec::UniformRandom,
+            fabric: FabricSpec::Ideal,
+            churn: false,
+            telemetry: 0,
+            seed: 301,
+        },
+        Case {
+            name: "sharded q8 hypercube",
+            strategy: DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            codec: CodecSpec::QuantizeU8,
+            topo: TopologySpec::Hypercube,
+            fabric: FabricSpec::Ideal,
+            churn: false,
+            telemetry: 0,
+            seed: 303,
+        },
+        Case {
+            name: "top-k rotation on the rack fabric",
+            strategy: DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            codec: CodecSpec::TopK { k: 8 },
+            topo: TopologySpec::PartnerRotation,
+            fabric: FabricSpec::Rack, // finite bandwidth + uniform jitter
+            churn: false,
+            telemetry: 0,
+            seed: 305,
+        },
+        Case {
+            name: "churned rotation",
+            strategy: DesStrategy::ShardedGoSgd { p: 0.3, shards: 4 },
+            codec: CodecSpec::Dense,
+            topo: TopologySpec::PartnerRotation,
+            fabric: FabricSpec::Ideal,
+            churn: true,
+            telemetry: 0,
+            seed: 307,
+        },
+        Case {
+            name: "churned q8 ring on the wan fabric",
+            strategy: DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            codec: CodecSpec::QuantizeU8,
+            topo: TopologySpec::Ring,
+            fabric: FabricSpec::Wan, // finite bandwidth + heavy-tail jitter
+            churn: true,
+            telemetry: 0,
+            seed: 309,
+        },
+        Case {
+            name: "sampled telemetry hypercube",
+            strategy: DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            codec: CodecSpec::QuantizeU8,
+            topo: TopologySpec::Hypercube,
+            fabric: FabricSpec::Ideal,
+            churn: false,
+            telemetry: 4,
+            seed: 311,
+        },
+    ];
+    let run = |case: &Case, parallel: ParallelKind| {
+        let dim = 48;
+        let m = 8;
+        let mut grad = QuadraticSource::new(dim, 0.1, case.seed);
+        let mut eng = DesEngine::new(
+            case.strategy.clone(),
+            TimeModel::paper_like(),
+            m,
+            &FlatVec::zeros(dim),
+            1.0,
+            0.0,
+            case.seed ^ 0xA7,
+        )
+        .unwrap()
+        .with_codec(case.codec)
+        .with_topology(case.topo)
+        .with_fabric(case.fabric)
+        .with_parallel(parallel);
+        if case.telemetry > 0 {
+            eng = eng.with_telemetry_sample(case.telemetry);
+        }
+        if case.churn {
+            eng = eng.with_scenario(ScenarioModel {
+                compute_scale: Vec::new(),
+                crash_mtbf: 8.0,
+                rejoin_mttr: 2.0,
+            });
+        }
+        eng.run(&mut grad, 25.0).unwrap();
+        (
+            eng.report().trace_hash(),
+            eng.consensus_model().unwrap().as_slice().to_vec(),
+            eng.worker_weights(),
+        )
+    };
+    for case in &cases {
+        let reference = run(case, ParallelKind::Sequential);
+        let shards = match case.strategy {
+            DesStrategy::ShardedGoSgd { shards, .. } => shards,
+            _ => 1,
+        };
+        // 3 does not divide 8 workers: uneven lane spans must merge
+        // exactly like even ones.
+        for threads in [2usize, 3, 4, 8] {
+            let got = run(case, ParallelKind::Sharded(threads));
+            assert_eq!(got.0, reference.0, "{} @ {threads} threads: report diverged", case.name);
+            assert_eq!(
+                got.1, reference.1,
+                "{} @ {threads} threads: parameters diverged",
+                case.name
+            );
+            assert_eq!(
+                got.2, reference.2,
+                "{} @ {threads} threads: sum weights diverged",
+                case.name
+            );
+            // Worker-held mass per shard stays a valid partition of the
+            // unit invariant (the rest is in flight, pinned exactly in
+            // sim::des's own conservation suite).
+            for k in 0..shards {
+                let total: f64 = got.2.iter().map(|ws| ws[k]).sum();
+                assert!(
+                    total > 0.0 && total <= 1.0 + 1e-9,
+                    "{} @ {threads} threads: shard {k} mass {total}",
+                    case.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_des_survives_horizon_resume_like_sequential() {
+    // The `scale` harness runs the same engine through consecutive
+    // horizon segments to sample consensus along the way; a resumed
+    // sharded run (leftover events re-queued, churn re-armed, fabric
+    // tick re-armed) must continue bit-identically to one uninterrupted
+    // sequential run.
+    use gosgd::sim::{DesEngine, DesStrategy, ParallelKind, TimeModel};
+    use gosgd::strategies::grad::QuadraticSource;
+    let run = |parallel: ParallelKind, split: bool| {
+        let dim = 48;
+        let mut grad = QuadraticSource::new(dim, 0.1, 313);
+        let mut eng = DesEngine::new(
+            DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            TimeModel::paper_like(),
+            8,
+            &FlatVec::zeros(dim),
+            1.0,
+            0.0,
+            313 ^ 0xA7,
+        )
+        .unwrap()
+        .with_parallel(parallel);
+        if split {
+            eng.run(&mut grad, 10.0).unwrap();
+        }
+        eng.run(&mut grad, 30.0).unwrap();
+        (
+            eng.report().trace_hash(),
+            eng.consensus_model().unwrap().as_slice().to_vec(),
+        )
+    };
+    let reference = run(ParallelKind::Sequential, false);
+    for parallel in [ParallelKind::Sequential, ParallelKind::Sharded(4)] {
+        for split in [false, true] {
+            let got = run(parallel, split);
+            assert_eq!(got.0, reference.0, "{parallel:?} split={split}: report diverged");
+            assert_eq!(got.1, reference.1, "{parallel:?} split={split}: parameters diverged");
+        }
+    }
+}
+
+#[test]
+fn sequential_trace_hash_is_reproducible_and_seed_sensitive() {
+    // The determinism anchor under the per-worker counter-RNG streams:
+    // the same seed must reproduce the identical report hash on every
+    // run (the property every equivalence test above leans on), and a
+    // different seed must actually move it (teeth: a constant hash would
+    // pass every equivalence check vacuously).
+    use gosgd::sim::{DesEngine, DesStrategy, TimeModel};
+    use gosgd::strategies::grad::QuadraticSource;
+    let run = |seed: u64| {
+        let dim = 48;
+        let mut grad = QuadraticSource::new(dim, 0.1, seed);
+        let mut eng = DesEngine::new(
+            DesStrategy::ShardedGoSgd { p: 0.4, shards: 4 },
+            TimeModel::paper_like(),
+            8,
+            &FlatVec::zeros(dim),
+            1.0,
+            0.0,
+            seed ^ 0xA7,
+        )
+        .unwrap();
+        eng.run(&mut grad, 20.0).unwrap();
+        eng.report().trace_hash()
+    };
+    assert_eq!(run(401), run(401), "same seed must reproduce the hash");
+    assert_ne!(run(401), run(403), "different seeds must move the hash");
+}
+
+#[test]
+fn parallel_des_rejects_barrier_strategies_with_a_config_error() {
+    // The sharded executor's lookahead argument only holds for
+    // fire-and-forget strategies (asynchronous sends, no rendezvous); a
+    // barrier strategy must fail loudly at run time, not fall back
+    // silently to a different schedule.
+    use gosgd::sim::{DesEngine, DesStrategy, ParallelKind, TimeModel};
+    use gosgd::strategies::grad::QuadraticSource;
+    let dim = 16;
+    let mut grad = QuadraticSource::new(dim, 0.1, 501);
+    let mut eng = DesEngine::new(
+        DesStrategy::Easgd { alpha: 0.5, tau: 4 },
+        TimeModel::paper_like(),
+        4,
+        &FlatVec::zeros(dim),
+        1.0,
+        0.0,
+        503,
+    )
+    .unwrap()
+    .with_parallel(ParallelKind::Sharded(2));
+    let err = eng.run(&mut grad, 10.0).unwrap_err();
+    assert!(err.to_string().contains("easgd"), "error should name the offending strategy: {err}");
+}
+
 #[test]
 fn engine_equals_hand_driven_core_bit_for_bit_with_topologies() {
     // The topology schedule lives inside the core (cursor and all), so a
